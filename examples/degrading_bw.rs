@@ -1,0 +1,26 @@
+//! Scenario 2 driver (paper Fig. 7): training throughput while the
+//! bottleneck bandwidth degrades 2000 → 200 Mbps in −200 Mbps steps.
+//!
+//! Run: `cargo run --release --example degrading_bw [-- fast]`
+
+use netsenseml::experiments::degrading::fig7;
+use netsenseml::experiments::scenario::RunOpts;
+use std::path::PathBuf;
+
+fn main() {
+    let fast = std::env::args().any(|a| a == "fast");
+    let opts = RunOpts {
+        fast,
+        out_dir: Some(PathBuf::from("results")),
+        ..Default::default()
+    };
+    let (table, result) = fig7(&opts);
+    table.print();
+    println!("curves written to results/fig7.csv");
+    // Show adaptation: NetSenseML's ratio trajectory across the run.
+    let ns = &result.logs[0];
+    println!("\nNetSenseML compression-ratio trajectory (vtime → ratio):");
+    for r in ns.records.iter().step_by((ns.records.len() / 12).max(1)) {
+        println!("  t={:7.1}s  ratio={:.4}  payload={:>9} B", r.vtime_s, r.ratio, r.payload_bytes);
+    }
+}

@@ -1,0 +1,34 @@
+//! Scenario 3 driver (paper Fig. 8): training throughput with competing
+//! iperf-like traffic preempting the links.
+//!
+//! Run: `cargo run --release --example fluctuating_bw [-- fast]`
+
+use netsenseml::experiments::fluctuating::fig8;
+use netsenseml::experiments::scenario::RunOpts;
+use std::path::PathBuf;
+
+fn main() {
+    let fast = std::env::args().any(|a| a == "fast");
+    let opts = RunOpts {
+        fast,
+        out_dir: Some(PathBuf::from("results")),
+        ..Default::default()
+    };
+    let (table, result) = fig8(&opts);
+    table.print();
+    println!("curves written to results/fig8.csv\n");
+    println!("windowed throughput (samples/s):");
+    println!("{:>10} {:>12} {:>12} {:>12}", "t (s)", "NetSenseML", "AllReduce", "TopK-0.1");
+    let n = result.series[0].1.len();
+    for i in 0..n {
+        let t = result.series[0].1[i].0;
+        let get = |j: usize| {
+            result.series[j]
+                .1
+                .get(i)
+                .map(|&(_, y)| format!("{y:.0}"))
+                .unwrap_or_else(|| "-".into())
+        };
+        println!("{t:>10.0} {:>12} {:>12} {:>12}", get(0), get(1), get(2));
+    }
+}

@@ -1,0 +1,53 @@
+//! Quickstart: the NetSenseML public API in ~60 lines.
+//!
+//! Simulates an 8-worker DDP job training ResNet18 behind a 200 Mbps
+//! bottleneck, once with NetSenseML's adaptive compression and once with
+//! plain AllReduce, and prints the comparison.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use netsenseml::coordinator::{run_sim_training, SimTrainConfig, SyncStrategy};
+use netsenseml::experiments::report::Table;
+use netsenseml::experiments::Scenario;
+use netsenseml::netsim::schedule::mbps;
+use netsenseml::trainer::models::PaperModel;
+
+fn main() {
+    let model = PaperModel::by_name("resnet18").unwrap();
+    let bandwidth = mbps(200.0);
+    let horizon_s = 300.0;
+
+    let mut table = Table::new(
+        "ResNet18 @ 200 Mbps, 8 workers, 300 virtual seconds",
+        &["Method", "Steps", "Throughput (samples/s)", "Acc (%)", "Mean ratio"],
+    );
+
+    for strategy in [
+        SyncStrategy::NetSense,
+        SyncStrategy::AllReduce,
+        SyncStrategy::TopK(0.1),
+    ] {
+        // 1. Build the network: the paper's star topology (Fig. 4).
+        let mut net = Scenario::static_bottleneck(8, bandwidth);
+
+        // 2. Configure the training job.
+        let mut config = SimTrainConfig::new(model, strategy.clone());
+        config.max_vtime_s = horizon_s;
+        config.fidelity_every = 100; // full Algorithm-2 compression every 100 steps
+
+        // 3. Run and read the metrics.
+        let log = run_sim_training(&config, &mut net);
+        let mean_ratio =
+            log.records.iter().map(|r| r.ratio).sum::<f64>() / log.records.len() as f64;
+        table.row(vec![
+            strategy.label(),
+            log.records.len().to_string(),
+            format!("{:.1}", log.mean_throughput()),
+            format!("{:.2}", log.best_acc()),
+            format!("{mean_ratio:.4}"),
+        ]);
+    }
+    table.print();
+    println!("NetSenseML sustains throughput by sizing payloads to the sensed BDP;");
+    println!("AllReduce pushes 46 MB dense gradients into a 200 Mbps pipe and stalls.");
+}

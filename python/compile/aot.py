@@ -1,0 +1,112 @@
+"""AOT lowering: JAX/Pallas (L1+L2) → HLO *text* artifacts for the rust
+runtime, plus ``manifest.json`` describing every executable's I/O layout and
+``{model}_init.bin`` (the seeded initial parameters, flat little-endian f32).
+
+HLO **text** — not ``HloModuleProto.serialize()`` — is the interchange
+format: jax ≥ 0.5 emits protos with 64-bit instruction ids that the image's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly. Lowering goes stablehlo →
+XlaComputation (``return_tuple=True``; the rust side unwraps the tuple).
+
+Run once via ``make artifacts``; never on the request path.
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from .model import MODELS, MOMENTUM, make_apply_update, make_grad_step
+
+BATCH = 32  # the paper's per-GPU batch size
+INIT_SEED = 0
+MANIFEST_VERSION = 1
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_model(spec, out_dir):
+    """Lower grad_step + apply_update for one model; returns manifest entry."""
+    params = spec.init(INIT_SEED)
+    x_spec = jax.ShapeDtypeStruct((BATCH,) + spec.input_shape, jnp.float32)
+    y_spec = jax.ShapeDtypeStruct((BATCH,), jnp.float32)
+    flat_spec = jax.ShapeDtypeStruct((spec.total_params(),), jnp.float32)
+    lr_spec = jax.ShapeDtypeStruct((), jnp.float32)
+    p_specs = [jax.ShapeDtypeStruct(p.shape, jnp.float32) for p in params]
+
+    grad_step = make_grad_step(spec)
+    apply_update = make_apply_update(spec)
+
+    gs_path = f"{spec.name}_grad_step.hlo.txt"
+    au_path = f"{spec.name}_apply_update.hlo.txt"
+    init_path = f"{spec.name}_init.bin"
+
+    lowered = jax.jit(grad_step).lower(p_specs, x_spec, y_spec)
+    with open(os.path.join(out_dir, gs_path), "w") as f:
+        f.write(to_hlo_text(lowered))
+
+    lowered = jax.jit(apply_update).lower(p_specs, p_specs, flat_spec, lr_spec)
+    with open(os.path.join(out_dir, au_path), "w") as f:
+        f.write(to_hlo_text(lowered))
+
+    flat_init = np.concatenate([np.asarray(p, np.float32).reshape(-1) for p in params])
+    flat_init.astype("<f4").tofile(os.path.join(out_dir, init_path))
+
+    return {
+        "batch": BATCH,
+        "input_shape": list(spec.input_shape),
+        "n_classes": spec.n_classes,
+        "momentum": MOMENTUM,
+        "init_seed": INIT_SEED,
+        "total_params": spec.total_params(),
+        "params": [
+            {"name": name, "shape": list(shape)}
+            for name, shape, _ in spec.param_specs
+        ],
+        "grad_step": {
+            "file": gs_path,
+            "inputs": "[params..., x(f32[B,H,W,C]), y(f32[B])]",
+            "outputs": "(flat_grad f32[P], loss f32[], n_correct f32[])",
+        },
+        "apply_update": {
+            "file": au_path,
+            "inputs": "[params..., moms..., flat_grad f32[P], lr f32[]]",
+            "outputs": "(new_params..., new_moms...)",
+        },
+        "init_params": init_path,
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument(
+        "--models", default="cifar_cnn,mlp", help="comma-separated model names"
+    )
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+    manifest = {"version": MANIFEST_VERSION, "models": {}}
+    for name in args.models.split(","):
+        name = name.strip()
+        if name not in MODELS:
+            raise SystemExit(f"unknown model {name!r}; have {sorted(MODELS)}")
+        print(f"lowering {name} ...", flush=True)
+        manifest["models"][name] = lower_model(MODELS[name], args.out_dir)
+    path = os.path.join(args.out_dir, "manifest.json")
+    with open(path, "w") as f:
+        json.dump(manifest, f, indent=2, sort_keys=True)
+    print(f"wrote {path}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,20 @@
+"""Layer-1 Pallas kernels (build-time only; lowered into the L2 HLO).
+
+All kernels run with ``interpret=True`` — the CPU PJRT plugin cannot execute
+Mosaic custom-calls, so interpret mode is the correctness path and real-TPU
+performance is estimated from the BlockSpec VMEM/MXU geometry (see
+DESIGN.md §Hardware-Adaptation and §Perf).
+"""
+
+from .matmul import matmul, dense
+from .compress_stats import grad_stats, l2_norm_from_stats, threshold_for_topk
+from .sgd import sgd_momentum_flat
+
+__all__ = [
+    "matmul",
+    "dense",
+    "grad_stats",
+    "l2_norm_from_stats",
+    "threshold_for_topk",
+    "sgd_momentum_flat",
+]

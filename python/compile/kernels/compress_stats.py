@@ -1,0 +1,104 @@
+"""Fused gradient-statistics Pallas kernel — the compression hot-spot.
+
+NetSenseML's Algorithm 2 needs three per-tensor statistics before it can
+compress a gradient: the L2 norm (the ``tr_d`` density test), the magnitude
+maximum (quantization scaling), and a magnitude *distribution* (to pick an
+approximate Top-K threshold without a full sort). A naive jnp implementation
+makes three separate HBM passes; this kernel fuses them into **one** pass.
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): the flat gradient is viewed as
+``(n_blocks, BLOCK)`` and the grid walks blocks; each grid step stages one
+``BLOCK``-element row into VMEM (BLOCK=8192 → 32 KiB f32, trivially
+resident) and reduces it to (absmax, sumsq, 32-bin log2-magnitude
+histogram). Partial results are combined on the host-side jnp epilogue —
+the same split a CUDA kernel would express with per-threadblock reductions
+followed by a second tiny kernel.
+
+Histogram bins: bin ``b`` counts elements with ``floor(log2 |g|) == b - 24``
+for b in [0, 32), i.e. magnitudes in [2^-24, 2^8); |g| below 2^-24 (and
+exact zeros) land in bin 0's underflow sibling — they are counted in
+``n_zeroish`` implicitly as ``n - hist.sum()``.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NBINS = 32
+_EXP_LO = -24  # bin 0 lower edge = 2^-24
+
+
+def _stats_kernel(g_ref, absmax_ref, sumsq_ref, hist_ref):
+    g = g_ref[...]
+    a = jnp.abs(g)
+    absmax_ref[...] = jnp.max(a, axis=1, keepdims=True)
+    sumsq_ref[...] = jnp.sum(g * g, axis=1, keepdims=True)
+    e = jnp.floor(jnp.log2(jnp.maximum(a, 1e-38)))
+    e = e - _EXP_LO  # bin index space
+    valid = a >= 2.0**_EXP_LO
+    for b in range(NBINS):
+        hist_ref[0, b] = jnp.sum(
+            jnp.where(valid & (e >= b) & (e < b + 1), 1.0, 0.0)
+        )
+
+
+def _ceil_to(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def grad_stats(g, *, block: int = 8192):
+    """One-pass per-block stats of a flat gradient.
+
+    Returns ``(absmax[nb], sumsq[nb], hist[nb, 32])``; zero-padding added to
+    reach a block multiple contributes nothing to any statistic.
+    """
+    if g.ndim != 1:
+        raise ValueError(f"grad_stats expects a flat tensor, got {g.shape}")
+    n = g.shape[0]
+    npad = _ceil_to(max(n, 1), block)
+    gp = jnp.pad(g.astype(jnp.float32), (0, npad - n))
+    nb = npad // block
+    g2 = gp.reshape(nb, block)
+    absmax, sumsq, hist = pl.pallas_call(
+        _stats_kernel,
+        out_shape=(
+            jax.ShapeDtypeStruct((nb, 1), jnp.float32),
+            jax.ShapeDtypeStruct((nb, 1), jnp.float32),
+            jax.ShapeDtypeStruct((nb, NBINS), jnp.float32),
+        ),
+        grid=(nb,),
+        in_specs=[pl.BlockSpec((1, block), lambda i: (i, 0))],
+        out_specs=(
+            pl.BlockSpec((1, 1), lambda i: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i: (i, 0)),
+            pl.BlockSpec((1, NBINS), lambda i: (i, 0)),
+        ),
+        interpret=True,
+    )(g2)
+    return absmax[:, 0], sumsq[:, 0], hist
+
+
+def l2_norm_from_stats(sumsq):
+    """Tensor L2 norm from the per-block sum-of-squares."""
+    return jnp.sqrt(jnp.sum(sumsq))
+
+
+def threshold_for_topk(hist, k):
+    """Approximate Top-K magnitude threshold from the pooled histogram.
+
+    Picks the smallest bin edge ``2^(b-24)`` such that the count of elements
+    with magnitude ≥ that edge is still ≥ ``k`` (so thresholding keeps at
+    least ~k and at most ~k plus one bin's worth of elements). Returns 0.0
+    when even the full histogram holds fewer than ``k`` elements.
+    """
+    pooled = jnp.sum(hist, axis=0)  # [NBINS]
+    # tail[b] = count of elements with bin index >= b
+    tail = jnp.cumsum(pooled[::-1])[::-1]
+    edges = 2.0 ** (jnp.arange(NBINS) + _EXP_LO)
+    feasible = tail >= k
+    # Largest b that is still feasible.
+    idx = jnp.where(feasible, jnp.arange(NBINS), -1).max()
+    return jnp.where(idx >= 0, edges[jnp.maximum(idx, 0)], 0.0)

@@ -1,0 +1,50 @@
+"""Pure-jnp oracles for every Pallas kernel (the pytest ground truth)."""
+
+import jax.numpy as jnp
+
+NBINS = 32
+_EXP_LO = -24
+
+
+def matmul_ref(x, y):
+    return jnp.dot(x.astype(jnp.float32), y.astype(jnp.float32))
+
+
+def dense_ref(x, w, b):
+    return matmul_ref(x, w) + b
+
+
+def grad_stats_ref(g, block=8192):
+    """Same contract as kernels.grad_stats, computed with plain jnp."""
+    n = g.shape[0]
+    npad = ((max(n, 1) + block - 1) // block) * block
+    gp = jnp.pad(g.astype(jnp.float32), (0, npad - n))
+    g2 = gp.reshape(-1, block)
+    a = jnp.abs(g2)
+    absmax = jnp.max(a, axis=1)
+    sumsq = jnp.sum(g2 * g2, axis=1)
+    e = jnp.floor(jnp.log2(jnp.maximum(a, 1e-38))) - _EXP_LO
+    valid = a >= 2.0**_EXP_LO
+    hist = jnp.stack(
+        [
+            jnp.sum(jnp.where(valid & (e >= b) & (e < b + 1), 1.0, 0.0), axis=1)
+            for b in range(NBINS)
+        ],
+        axis=1,
+    )
+    return absmax, sumsq, hist
+
+
+def l2_norm_ref(g):
+    return jnp.sqrt(jnp.sum(g.astype(jnp.float32) ** 2))
+
+
+def topk_threshold_ref(g, k):
+    """Exact k-th largest |g| (the quantity the histogram approximates)."""
+    a = jnp.abs(g)
+    return jnp.sort(a)[-k]
+
+
+def sgd_momentum_ref(p, m, g, lr, mu):
+    nm = mu * m + g
+    return p - lr * nm, nm

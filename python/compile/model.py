@@ -1,0 +1,198 @@
+"""Layer-2 JAX models: forward/backward (``grad_step``) and optimizer
+(``apply_update``), built on the Layer-1 Pallas kernels and AOT-lowered to
+HLO text by ``aot.py``.
+
+Interface contract with the rust runtime (see ``runtime/manifest.rs``):
+
+- Parameters are an *ordered list* of named tensors; HLO parameter order is
+  [params..., x, y] for grad_step and [params..., moms..., flat_grad, lr]
+  for apply_update (jax flattens pytrees in list order).
+- ``grad_step(params, x, y) -> (flat_grad, loss, n_correct)`` where
+  ``flat_grad`` is the concatenation of per-tensor gradients in parameter
+  order — the single buffer the coordinator compresses and all-reduces.
+- ``apply_update(params, moms, flat_grad, lr) -> (new_params…, new_moms…)``
+  applies SGD-with-momentum via the fused flat Pallas kernel.
+
+Models are CIFAR-100-shaped (the paper's workload): a small CNN and an MLP.
+The paper-scale ResNet18/VGG16 runs use the rust-side surrogate dynamics
+(DESIGN.md §2); these HLO models are the end-to-end real-training path.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import dense, sgd_momentum_flat
+
+MOMENTUM = 0.9
+
+
+# --------------------------------------------------------------------------
+# Parameter helpers
+# --------------------------------------------------------------------------
+
+
+def param_sizes(params):
+    return [int(p.size) for p in params]
+
+
+def flatten_grads(grads):
+    return jnp.concatenate([g.reshape(-1) for g in grads])
+
+
+def split_flat(flat, shapes):
+    out, off = [], 0
+    for s in shapes:
+        n = 1
+        for d in s:
+            n *= d
+        out.append(flat[off : off + n].reshape(s))
+        off += n
+    return out
+
+
+# --------------------------------------------------------------------------
+# Model zoo
+# --------------------------------------------------------------------------
+
+
+def _conv(x, w, b, stride):
+    y = jax.lax.conv_general_dilated(
+        x,
+        w,
+        window_strides=(stride, stride),
+        padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+    return y + b
+
+
+def _he(key, shape, fan_in):
+    return jax.random.normal(key, shape, jnp.float32) * jnp.sqrt(2.0 / fan_in)
+
+
+class ModelSpec:
+    """A named model: ordered parameter spec + forward function."""
+
+    def __init__(self, name, input_shape, n_classes, param_specs, forward):
+        self.name = name
+        self.input_shape = input_shape  # without batch
+        self.n_classes = n_classes
+        self.param_specs = param_specs  # list of (name, shape, fan_in)
+        self.forward = forward
+
+    def init(self, seed=0):
+        key = jax.random.PRNGKey(seed)
+        keys = jax.random.split(key, len(self.param_specs))
+        params = []
+        for k, (pname, shape, fan_in) in zip(keys, self.param_specs):
+            if pname.endswith("_b"):
+                params.append(jnp.zeros(shape, jnp.float32))
+            else:
+                params.append(_he(k, shape, fan_in))
+        return params
+
+    def total_params(self):
+        total = 0
+        for _, shape, _ in self.param_specs:
+            n = 1
+            for d in shape:
+                n *= d
+            total += n
+        return total
+
+
+def _cifar_cnn_forward(params, x):
+    c1w, c1b, c2w, c2b, c3w, c3b, d1w, d1b, d2w, d2b = params
+    h = jax.nn.relu(_conv(x, c1w, c1b, 1))          # 32×32×32
+    h = jax.nn.relu(_conv(h, c2w, c2b, 2))          # 16×16×64
+    h = jax.nn.relu(_conv(h, c3w, c3b, 2))          # 8×8×64
+    h = h.reshape(h.shape[0], -1)                   # 4096
+    h = jax.nn.relu(dense(h, d1w, d1b))             # Pallas matmul
+    return dense(h, d2w, d2b)                       # Pallas matmul
+
+
+CIFAR_CNN = ModelSpec(
+    "cifar_cnn",
+    (32, 32, 3),
+    100,
+    [
+        ("conv1_w", (3, 3, 3, 32), 27),
+        ("conv1_b", (32,), 0),
+        ("conv2_w", (3, 3, 32, 64), 288),
+        ("conv2_b", (64,), 0),
+        ("conv3_w", (3, 3, 64, 64), 576),
+        ("conv3_b", (64,), 0),
+        ("dense1_w", (4096, 256), 4096),
+        ("dense1_b", (256,), 0),
+        ("dense2_w", (256, 100), 256),
+        ("dense2_b", (100,), 0),
+    ],
+    _cifar_cnn_forward,
+)
+
+
+def _mlp_forward(params, x):
+    w1, b1, w2, b2, w3, b3 = params
+    h = x.reshape(x.shape[0], -1)
+    h = jax.nn.relu(dense(h, w1, b1))
+    h = jax.nn.relu(dense(h, w2, b2))
+    return dense(h, w3, b3)
+
+
+MLP = ModelSpec(
+    "mlp",
+    (32, 32, 3),
+    100,
+    [
+        ("fc1_w", (3072, 512), 3072),
+        ("fc1_b", (512,), 0),
+        ("fc2_w", (512, 256), 512),
+        ("fc2_b", (256,), 0),
+        ("fc3_w", (256, 100), 256),
+        ("fc3_b", (100,), 0),
+    ],
+    _mlp_forward,
+)
+
+MODELS = {m.name: m for m in (CIFAR_CNN, MLP)}
+
+
+# --------------------------------------------------------------------------
+# Training-step functions (the AOT entry points)
+# --------------------------------------------------------------------------
+
+
+def make_grad_step(spec):
+    """(params, x, y_f32) -> (flat_grad, loss, n_correct) for `spec`."""
+
+    def loss_fn(params, x, y):
+        logits = spec.forward(params, x)
+        logp = jax.nn.log_softmax(logits)
+        onehot = jax.nn.one_hot(y, spec.n_classes, dtype=jnp.float32)
+        loss = -jnp.mean(jnp.sum(onehot * logp, axis=-1))
+        n_correct = jnp.sum(
+            (jnp.argmax(logits, axis=-1) == y).astype(jnp.float32)
+        )
+        return loss, n_correct
+
+    def grad_step(params, x, y_f32):
+        y = y_f32.astype(jnp.int32)
+        (loss, n_correct), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+            params, x, y
+        )
+        return (flatten_grads(grads), loss, n_correct)
+
+    return grad_step
+
+
+def make_apply_update(spec):
+    """(params, moms, flat_grad, lr) -> (new_params…, new_moms…)."""
+    shapes = [shape for _, shape, _ in spec.param_specs]
+
+    def apply_update(params, moms, flat_grad, lr):
+        flat_p = flatten_grads(params)
+        flat_m = flatten_grads(moms)
+        new_p, new_m = sgd_momentum_flat(flat_p, flat_m, flat_grad, lr, MOMENTUM)
+        return tuple(split_flat(new_p, shapes)) + tuple(split_flat(new_m, shapes))
+
+    return apply_update

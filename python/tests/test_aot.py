@@ -1,0 +1,56 @@
+"""AOT pipeline: artifacts exist, manifest is sane, HLO text parses (has an
+ENTRY computation), and init params are the right size."""
+
+import json
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+PYDIR = os.path.join(REPO, "python")
+
+
+@pytest.fixture(scope="module")
+def artifacts(tmp_path_factory):
+    out = tmp_path_factory.mktemp("artifacts")
+    # Lower only the small MLP for test speed.
+    subprocess.run(
+        [sys.executable, "-m", "compile.aot", "--out-dir", str(out), "--models", "mlp"],
+        cwd=PYDIR,
+        check=True,
+    )
+    return out
+
+
+def test_manifest_contents(artifacts):
+    with open(artifacts / "manifest.json") as f:
+        manifest = json.load(f)
+    assert manifest["version"] == 1
+    entry = manifest["models"]["mlp"]
+    assert entry["batch"] == 32
+    assert entry["total_params"] == sum(
+        int(np.prod(p["shape"])) if p["shape"] else 1 for p in entry["params"]
+    )
+    for key in ("grad_step", "apply_update"):
+        assert (artifacts / entry[key]["file"]).exists()
+
+
+def test_hlo_text_has_entry(artifacts):
+    with open(artifacts / "manifest.json") as f:
+        entry = json.load(f)["models"]["mlp"]
+    for key in ("grad_step", "apply_update"):
+        text = (artifacts / entry[key]["file"]).read_text()
+        assert "ENTRY" in text, f"{key}: no ENTRY computation"
+        assert "f32" in text
+
+
+def test_init_bin_size(artifacts):
+    with open(artifacts / "manifest.json") as f:
+        entry = json.load(f)["models"]["mlp"]
+    raw = np.fromfile(artifacts / entry["init_params"], dtype="<f4")
+    assert raw.size == entry["total_params"]
+    assert np.isfinite(raw).all()
+    assert np.abs(raw).max() > 0

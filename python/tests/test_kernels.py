@@ -1,0 +1,172 @@
+"""L1 correctness: every Pallas kernel vs its pure-jnp oracle, with
+hypothesis sweeping shapes and value regimes."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import (
+    dense,
+    grad_stats,
+    l2_norm_from_stats,
+    matmul,
+    sgd_momentum_flat,
+    threshold_for_topk,
+)
+from compile.kernels import ref
+
+SETTINGS = dict(max_examples=20, deadline=None)
+
+
+# ---------------------------------------------------------------- matmul ---
+
+
+@settings(**SETTINGS)
+@given(
+    m=st.integers(1, 70),
+    k=st.integers(1, 130),
+    n=st.integers(1, 150),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_matmul_matches_ref(m, k, n, seed):
+    rng = np.random.default_rng(seed)
+    x = rng.standard_normal((m, k), np.float32)
+    y = rng.standard_normal((k, n), np.float32)
+    got = matmul(jnp.array(x), jnp.array(y))
+    want = ref.matmul_ref(jnp.array(x), jnp.array(y))
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-4)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_matmul_dtypes(dtype):
+    rng = np.random.default_rng(0)
+    x = jnp.array(rng.standard_normal((32, 64)), dtype)
+    y = jnp.array(rng.standard_normal((64, 128)), dtype)
+    got = matmul(x, y)
+    assert got.dtype == jnp.float32  # fp32 accumulation
+    want = np.asarray(x, np.float32) @ np.asarray(y, np.float32)
+    tol = 1e-4 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(got, want, rtol=tol, atol=tol)
+
+
+def test_matmul_rejects_bad_shapes():
+    with pytest.raises(ValueError):
+        matmul(jnp.zeros((2, 3)), jnp.zeros((4, 5)))
+    with pytest.raises(ValueError):
+        matmul(jnp.zeros((2, 3, 4)), jnp.zeros((4, 5)))
+
+
+def test_dense_adds_bias():
+    rng = np.random.default_rng(1)
+    x = jnp.array(rng.standard_normal((8, 16)), jnp.float32)
+    w = jnp.array(rng.standard_normal((16, 24)), jnp.float32)
+    b = jnp.array(rng.standard_normal(24), jnp.float32)
+    np.testing.assert_allclose(
+        dense(x, w, b), ref.dense_ref(x, w, b), rtol=1e-5, atol=1e-4
+    )
+
+
+def test_matmul_exact_tile_boundaries():
+    # M, N exactly at tile multiples (no padding path).
+    rng = np.random.default_rng(2)
+    x = jnp.array(rng.standard_normal((64, 256)), jnp.float32)
+    y = jnp.array(rng.standard_normal((256, 256)), jnp.float32)
+    np.testing.assert_allclose(
+        matmul(x, y), ref.matmul_ref(x, y), rtol=1e-5, atol=1e-4
+    )
+
+
+# ------------------------------------------------------------ grad_stats ---
+
+
+@settings(**SETTINGS)
+@given(
+    n=st.integers(1, 40_000),
+    scale=st.sampled_from([1e-6, 1e-3, 1.0, 1e3]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_grad_stats_matches_ref(n, scale, seed):
+    rng = np.random.default_rng(seed)
+    g = jnp.array(rng.standard_normal(n) * scale, jnp.float32)
+    am, ss, h = grad_stats(g)
+    am_r, ss_r, h_r = ref.grad_stats_ref(g)
+    np.testing.assert_allclose(am, am_r, rtol=1e-6)
+    np.testing.assert_allclose(ss, ss_r, rtol=1e-4)
+    np.testing.assert_array_equal(np.asarray(h), np.asarray(h_r))
+
+
+def test_grad_stats_l2_norm():
+    rng = np.random.default_rng(3)
+    g = jnp.array(rng.standard_normal(30_000), jnp.float32)
+    _, ss, _ = grad_stats(g)
+    np.testing.assert_allclose(
+        l2_norm_from_stats(ss), ref.l2_norm_ref(g), rtol=1e-5
+    )
+
+
+def test_grad_stats_zeros_and_padding():
+    g = jnp.zeros(100, jnp.float32)
+    am, ss, h = grad_stats(g)
+    assert float(am.max()) == 0.0
+    assert float(ss.sum()) == 0.0
+    assert float(h.sum()) == 0.0  # zeros fall below every bin
+
+
+@settings(**SETTINGS)
+@given(
+    n=st.integers(64, 20_000),
+    frac=st.floats(0.01, 0.5),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_threshold_for_topk_brackets_exact(n, frac, seed):
+    rng = np.random.default_rng(seed)
+    g = jnp.array(rng.standard_normal(n), jnp.float32)
+    k = max(1, int(n * frac))
+    _, _, h = grad_stats(g)
+    th = float(threshold_for_topk(h, k))
+    kept = int((np.abs(np.asarray(g)) >= th).sum())
+    # Histogram threshold keeps at least k and at most k + one bin's
+    # population (bins are factor-of-2 wide).
+    assert kept >= k
+    exact = float(ref.topk_threshold_ref(g, k))
+    assert th <= exact + 1e-9
+    # and not absurdly below (within one power of two of the exact)
+    if exact > 0:
+        assert th >= exact / 2.0 - 1e-9
+
+
+# ------------------------------------------------------------------- sgd ---
+
+
+@settings(**SETTINGS)
+@given(
+    n=st.integers(1, 50_000),
+    lr=st.floats(1e-4, 1.0),
+    mu=st.floats(0.0, 0.99),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_sgd_matches_ref(n, lr, mu, seed):
+    rng = np.random.default_rng(seed)
+    p = jnp.array(rng.standard_normal(n), jnp.float32)
+    m = jnp.array(rng.standard_normal(n), jnp.float32)
+    g = jnp.array(rng.standard_normal(n), jnp.float32)
+    got_p, got_m = sgd_momentum_flat(p, m, g, lr, mu)
+    want_p, want_m = ref.sgd_momentum_ref(p, m, g, lr, mu)
+    np.testing.assert_allclose(got_p, want_p, rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(got_m, want_m, rtol=1e-5, atol=1e-6)
+
+
+def test_sgd_shape_mismatch_rejected():
+    with pytest.raises(ValueError):
+        sgd_momentum_flat(jnp.zeros(4), jnp.zeros(4), jnp.zeros(5), 0.1, 0.9)
+
+
+def test_sgd_zero_lr_keeps_params():
+    p = jnp.arange(10, dtype=jnp.float32)
+    m = jnp.zeros(10)
+    g = jnp.ones(10)
+    p2, m2 = sgd_momentum_flat(p, m, g, 0.0, 0.9)
+    np.testing.assert_allclose(p2, p)
+    np.testing.assert_allclose(m2, g)

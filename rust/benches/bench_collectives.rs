@@ -1,0 +1,35 @@
+//! Collective scheduling + numeric reduction rates.
+
+use netsenseml::collectives::{ring_allgather, ring_allreduce, sum_dense};
+use netsenseml::netsim::schedule::mbps;
+use netsenseml::netsim::topology::StarTopology;
+use netsenseml::netsim::{NetSim, SimTime};
+use netsenseml::util::bench::{bb, Bench};
+use netsenseml::util::rng::Pcg64;
+
+fn main() {
+    let mut b = Bench::new();
+
+    b.group("timing models (8 workers)");
+    let mut sim = NetSim::quiet(StarTopology::constant(8, mbps(10_000.0), SimTime::from_millis(1)));
+    b.run("ring_allreduce schedule (46 MB)", || {
+        bb(ring_allreduce(&mut sim, 46_200_000));
+    });
+    let payloads = vec![1_000_000u64; 8];
+    let mut sim2 = NetSim::quiet(StarTopology::constant(8, mbps(10_000.0), SimTime::from_millis(1)));
+    b.run("ring_allgather schedule (8×1 MB)", || {
+        bb(ring_allgather(&mut sim2, bb(&payloads)));
+    });
+
+    b.group("numeric reduction (11.55M f32)");
+    let n = 11_550_000;
+    let mut r = Pcg64::seeded(1);
+    let mut acc = vec![0f32; n];
+    r.fill_normal_f32(&mut acc, 0.0, 1.0);
+    let other = acc.clone();
+    b.run_throughput("sum_dense one peer", n as u64, || {
+        sum_dense(bb(&mut acc), &[bb(&other)]);
+    });
+
+    b.finish();
+}

@@ -1,0 +1,72 @@
+//! Compression hot-path benchmarks (the L3 §Perf targets): top-k selection
+//! on paper-scale tensors, quantization, sparse codec, and the full
+//! Algorithm-2 pipeline. Run: `cargo bench --bench bench_compress`.
+
+use netsenseml::compress::quantize::{f32_to_f16_bits, Precision};
+use netsenseml::compress::topk::{top_k_indices, top_k_with_threshold_hint};
+use netsenseml::compress::{CompressionConfig, NetSenseCompressor, SparseGradient};
+use netsenseml::util::bench::{bb, Bench};
+use netsenseml::util::rng::Pcg64;
+
+fn randn(n: usize, seed: u64) -> Vec<f32> {
+    let mut r = Pcg64::seeded(seed);
+    let mut v = vec![0f32; n];
+    r.fill_normal_f32(&mut v, 0.0, 1.0);
+    v
+}
+
+fn main() {
+    let mut b = Bench::new();
+    let n = 11_550_000; // ResNet18
+    let g = randn(n, 1);
+    let w = randn(n, 2);
+
+    b.group("topk (11.55M elems, ResNet18-size)");
+    b.run_throughput("exact quickselect k=1%", n as u64, || {
+        bb(top_k_indices(bb(&g), n / 100));
+    });
+    // Steady-state: reuse last step's threshold.
+    let (_, kth) = top_k_with_threshold_hint(&g, n / 100, None, 0.25);
+    b.run_throughput("threshold-reuse k=1%", n as u64, || {
+        bb(top_k_with_threshold_hint(bb(&g), n / 100, Some(kth), 0.25));
+    });
+    b.run_throughput("exact quickselect k=10%", n as u64, || {
+        bb(top_k_indices(bb(&g), n / 10));
+    });
+
+    b.group("quantize");
+    b.run_throughput("f32→f16 11.55M", n as u64, || {
+        let mut acc = 0u16;
+        for &x in g.iter().step_by(1) {
+            acc ^= f32_to_f16_bits(x);
+        }
+        bb(acc);
+    });
+
+    b.group("sparse codec (k = 115k)");
+    let idx = top_k_indices(&g, n / 100);
+    let sg = SparseGradient::gather(&g, idx, Precision::F32);
+    b.run_throughput("encode", sg.nnz() as u64, || {
+        bb(sg.encode());
+    });
+    let wire = sg.encode();
+    b.run_throughput("decode", sg.nnz() as u64, || {
+        bb(SparseGradient::decode(bb(&wire)).unwrap());
+    });
+    let mut acc_buf = vec![0f32; n];
+    b.run_throughput("add_into (aggregate)", sg.nnz() as u64, || {
+        sg.add_into(bb(&mut acc_buf));
+    });
+
+    b.group("Algorithm 2 pipeline (ResNet18-size)");
+    let mut c = NetSenseCompressor::new(n, CompressionConfig::default());
+    b.run_throughput("compress ratio=0.01 (steady)", n as u64, || {
+        bb(c.compress(bb(&g), bb(&w), 0.01));
+    });
+    let mut c2 = NetSenseCompressor::new(n, CompressionConfig::default());
+    b.run_throughput("compress ratio=0.1 (steady)", n as u64, || {
+        bb(c2.compress(bb(&g), bb(&w), 0.1));
+    });
+
+    b.finish();
+}

@@ -1,0 +1,24 @@
+//! End-to-end experiment bench: regenerates Fig 5 (TTA curves, ResNet18)
+//! in fast mode (10× shorter horizons) and reports the wall time.
+//! The full-scale table is produced by `netsenseml repro fig5`.
+
+use netsenseml::experiments::tta::fig5;
+use netsenseml::experiments::scenario::RunOpts;
+use netsenseml::util::bench::{bb, Bench};
+
+fn main() {
+    let mut b = Bench::new();
+    let opts = RunOpts {
+        fast: true,
+        out_dir: None,
+        seed: 42,
+        n_workers: 8,
+        fidelity_every: 0, // timing-only: keeps the bench wall-time bounded
+    };
+    b.group("Fig 5 (TTA curves, ResNet18)");
+    b.run_once("fig5 (fast mode)", || {
+        let (table, _) = fig5(&opts);
+        bb(table).print();
+    });
+    b.finish();
+}

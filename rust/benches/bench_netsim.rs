@@ -1,0 +1,48 @@
+//! Network-simulator throughput: transfers/second and phase scheduling
+//! rate (§Perf target: > 1M transfer events/s so virtual-time sweeps are
+//! never netsim-bound).
+
+use netsenseml::netsim::schedule::mbps;
+use netsenseml::netsim::topology::StarTopology;
+use netsenseml::netsim::traffic::{CompetingTraffic, LinkRef, TrafficPattern};
+use netsenseml::netsim::{NetSim, NetSimConfig, SimTime};
+use netsenseml::util::bench::{bb, Bench};
+
+fn main() {
+    let mut b = Bench::new();
+
+    b.group("point-to-point transfers");
+    let mut sim = NetSim::quiet(StarTopology::constant(8, mbps(1000.0), SimTime::from_millis(1)));
+    b.run_throughput("transfer (8-worker star)", 1, || {
+        bb(sim.transfer(0, 1, 10_000));
+    });
+
+    b.group("phases (one ring step = 8 parallel transfers)");
+    let mut sim2 = NetSim::quiet(StarTopology::constant(8, mbps(1000.0), SimTime::from_millis(1)));
+    let transfers: Vec<(usize, usize, u64)> = (0..8).map(|i| (i, (i + 1) % 8, 100_000)).collect();
+    b.run_throughput("phase of 8", 8, || {
+        bb(sim2.phase(bb(&transfers)));
+    });
+
+    b.group("competing traffic");
+    let topo = StarTopology::constant(8, mbps(1000.0), SimTime::from_millis(1));
+    let traffic = CompetingTraffic::new(
+        TrafficPattern::Poisson {
+            msgs_per_sec: 10_000.0,
+            mean_msg_bytes: 50_000.0,
+        },
+        vec![LinkRef::Up(0)],
+        1,
+    );
+    let mut sim3 = NetSim::new(NetSimConfig {
+        topology: topo,
+        traffic: vec![traffic],
+    });
+    let mut t = 1u64;
+    b.run_throughput("advance 100ms of poisson traffic (≈1k events)", 1000, || {
+        sim3.advance_to(SimTime::from_millis(t * 100));
+        t += 1;
+    });
+
+    b.finish();
+}

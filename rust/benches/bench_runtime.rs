@@ -1,0 +1,39 @@
+//! PJRT runtime latency: grad_step / apply_update on the AOT artifacts —
+//! the real-compute path of the e2e example. Skips cleanly when artifacts
+//! are absent.
+
+use netsenseml::runtime::ModelRuntime;
+use netsenseml::util::bench::{bb, Bench};
+use std::path::PathBuf;
+
+fn main() {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("bench_runtime: artifacts not built (run `make artifacts`); skipping");
+        return;
+    }
+    let mut b = Bench::new();
+    for model in ["mlp", "cifar_cnn"] {
+        let rt = match ModelRuntime::load(&dir, model) {
+            Ok(rt) => rt,
+            Err(e) => {
+                eprintln!("skipping {model}: {e}");
+                continue;
+            }
+        };
+        let state = rt.init_state().unwrap();
+        let mm = &rt.manifest;
+        let x = vec![0.05f32; mm.x_len()];
+        let y: Vec<f32> = (0..mm.batch).map(|i| (i % mm.n_classes) as f32).collect();
+        b.group(&format!("{model} ({} params, batch {})", mm.total_params, mm.batch));
+        b.run_throughput("grad_step", mm.batch as u64, || {
+            bb(rt.grad_step(bb(&state), bb(&x), bb(&y)).unwrap());
+        });
+        let grad = rt.grad_step(&state, &x, &y).unwrap().flat_grad;
+        let mut st = state.clone();
+        b.run("apply_update", || {
+            rt.apply_update(bb(&mut st), bb(&grad), 0.01).unwrap();
+        });
+    }
+    b.finish();
+}

@@ -1,0 +1,41 @@
+//! Sensing-layer cost: estimator updates and controller intervals must be
+//! O(ns–µs) so they never gate the coordinator (§Perf), plus the Fig 2
+//! sweep as an end-to-end timing reference.
+
+use netsenseml::experiments::fig2::fig2;
+use netsenseml::experiments::scenario::RunOpts;
+use netsenseml::netsim::SimTime;
+use netsenseml::sensing::{BandwidthEstimator, ControllerConfig, EstimatorConfig, RatioController};
+use netsenseml::util::bench::{bb, Bench};
+
+fn main() {
+    let mut b = Bench::new();
+
+    b.group("estimator");
+    let mut est = BandwidthEstimator::new(EstimatorConfig::default());
+    let mut i = 0u64;
+    b.run("observe + estimate", || {
+        i += 1;
+        est.observe(1_000_000 + (i % 997) * 1000, SimTime::from_micros(40_000 + (i % 31) * 100));
+        bb(est.estimate());
+    });
+
+    b.group("controller (Algorithm 1)");
+    let mut ctl = RatioController::new(ControllerConfig::default());
+    let mut j = 0u64;
+    b.run("on_interval", || {
+        j += 1;
+        bb(ctl.on_interval(
+            500_000 + (j % 1013) * 500,
+            SimTime::from_micros(42_000 + (j % 17) * 500),
+            false,
+        ));
+    });
+
+    b.group("fig2 sweep (end-to-end)");
+    b.run_once("full sensing sweep", || {
+        bb(fig2(&RunOpts::default()));
+    });
+
+    b.finish();
+}

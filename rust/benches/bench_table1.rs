@@ -1,0 +1,24 @@
+//! End-to-end experiment bench: regenerates Table 1 (ResNet18, 200/500/800 Mbps)
+//! in fast mode (10× shorter horizons) and reports the wall time.
+//! The full-scale table is produced by `netsenseml repro table1`.
+
+use netsenseml::experiments::tables::table1;
+use netsenseml::experiments::scenario::RunOpts;
+use netsenseml::util::bench::{bb, Bench};
+
+fn main() {
+    let mut b = Bench::new();
+    let opts = RunOpts {
+        fast: true,
+        out_dir: None,
+        seed: 42,
+        n_workers: 8,
+        fidelity_every: 0, // timing-only: keeps the bench wall-time bounded
+    };
+    b.group("Table 1 (ResNet18, 200/500/800 Mbps)");
+    b.run_once("table1 (fast mode)", || {
+        let (table, _) = table1(&opts);
+        bb(table).print();
+    });
+    b.finish();
+}

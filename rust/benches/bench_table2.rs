@@ -1,0 +1,24 @@
+//! End-to-end experiment bench: regenerates Table 2 (VGG16, 2.5/5/10 Gbps)
+//! in fast mode (10× shorter horizons) and reports the wall time.
+//! The full-scale table is produced by `netsenseml repro table2`.
+
+use netsenseml::experiments::tables::table2;
+use netsenseml::experiments::scenario::RunOpts;
+use netsenseml::util::bench::{bb, Bench};
+
+fn main() {
+    let mut b = Bench::new();
+    let opts = RunOpts {
+        fast: true,
+        out_dir: None,
+        seed: 42,
+        n_workers: 8,
+        fidelity_every: 0, // timing-only: keeps the bench wall-time bounded
+    };
+    b.group("Table 2 (VGG16, 2.5/5/10 Gbps)");
+    b.run_once("table2 (fast mode)", || {
+        let (table, _) = table2(&opts);
+        bb(table).print();
+    });
+    b.finish();
+}

@@ -1,0 +1,19 @@
+//! Collective communication over the simulated star network — the NCCL
+//! stand-in (DESIGN.md S2). Each collective has two halves:
+//!
+//! - a **timing** half that schedules the constituent point-to-point
+//!   transfers on [`crate::netsim::NetSim`] and reports the makespan, and
+//! - a **numeric** half ([`numeric`]) that actually reduces the gradient
+//!   buffers, so training results are real, not modeled.
+//!
+//! Patterns (paper §5.3): dense gradients ride a **ring all-reduce**
+//! (NCCL's default; 2(N−1)/N × bytes per worker on the wire); sparse
+//! (Top-K / NetSenseML) payloads ride a **ring all-gather** (the paper
+//! notes "the use of the AllGather communication pattern by TopK"), and a
+//! **parameter-server** push/pull is provided for ablations.
+
+pub mod numeric;
+pub mod patterns;
+
+pub use numeric::{mean_dense, sum_dense, sum_sparse};
+pub use patterns::{ps_pushpull, ring_allgather, ring_allreduce, CollectiveTiming};

@@ -1,0 +1,91 @@
+//! Numeric halves of the collectives: the actual reductions, computed
+//! exactly (chunked accumulation keeps the hot loop auto-vectorizable).
+
+use crate::compress::SparseGradient;
+
+/// Sum `others` into `acc` elementwise.
+pub fn sum_dense(acc: &mut [f32], others: &[&[f32]]) {
+    for o in others {
+        assert_eq!(o.len(), acc.len(), "dense length mismatch");
+        for (a, &b) in acc.iter_mut().zip(o.iter()) {
+            *a += b;
+        }
+    }
+}
+
+/// Mean of `n` dense buffers: sums into the first and scales.
+pub fn mean_dense(acc: &mut [f32], others: &[&[f32]]) {
+    sum_dense(acc, others);
+    let scale = 1.0 / (others.len() + 1) as f32;
+    for a in acc.iter_mut() {
+        *a *= scale;
+    }
+}
+
+/// Sum sparse gradients into a dense accumulator (the all-gather receive
+/// path: every worker materializes the sum of everyone's payloads).
+pub fn sum_sparse(n_total: usize, payloads: &[SparseGradient]) -> Vec<f32> {
+    let mut acc = vec![0f32; n_total];
+    for p in payloads {
+        assert_eq!(p.n_total, n_total, "sparse length mismatch");
+        p.add_into(&mut acc);
+    }
+    acc
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::quantize::Precision;
+    use crate::compress::topk::top_k_indices;
+    use crate::testing::prop::*;
+
+    #[test]
+    fn sum_dense_basic() {
+        let mut a = vec![1.0f32, 2.0, 3.0];
+        let b = vec![10.0f32, 20.0, 30.0];
+        let c = vec![100.0f32, 200.0, 300.0];
+        sum_dense(&mut a, &[&b, &c]);
+        assert_eq!(a, vec![111.0, 222.0, 333.0]);
+    }
+
+    #[test]
+    fn mean_dense_basic() {
+        let mut a = vec![3.0f32, 3.0];
+        let b = vec![6.0f32, 0.0];
+        mean_dense(&mut a, &[&b]);
+        assert_eq!(a, vec![4.5, 1.5]);
+    }
+
+    #[test]
+    fn sum_sparse_equals_dense_sum() {
+        forall(
+            "sparse-sum == dense-sum",
+            50,
+            vec_f32(8..128, -10.0..10.0),
+            |v| {
+                let k = (v.len() / 3).max(1);
+                let s1 = SparseGradient::gather(v, top_k_indices(v, k), Precision::F32);
+                let flipped: Vec<f32> = v.iter().map(|x| -x * 0.5).collect();
+                let s2 = SparseGradient::gather(
+                    &flipped,
+                    top_k_indices(&flipped, k),
+                    Precision::F32,
+                );
+                let got = sum_sparse(v.len(), &[s1.clone(), s2.clone()]);
+                let mut want = s1.to_dense();
+                let d2 = s2.to_dense();
+                sum_dense(&mut want, &[&d2]);
+                got == want
+            },
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "length mismatch")]
+    fn mismatched_lengths_panic() {
+        let mut a = vec![0f32; 3];
+        let b = vec![0f32; 4];
+        sum_dense(&mut a, &[&b]);
+    }
+}

@@ -1,0 +1,229 @@
+//! Timing models: schedule each collective's transfers on the simulator.
+
+use crate::netsim::{NetSim, SimTime};
+
+/// Timing outcome of one collective operation.
+#[derive(Clone, Debug, PartialEq)]
+pub struct CollectiveTiming {
+    pub start: SimTime,
+    pub end: SimTime,
+    /// Bytes each worker pushed into its uplink.
+    pub sent_per_worker: Vec<u64>,
+}
+
+impl CollectiveTiming {
+    /// The collective's wall time — the paper's per-interval "RTT"
+    /// observable for gradient synchronization.
+    pub fn elapsed(&self) -> SimTime {
+        self.end - self.start
+    }
+
+    pub fn total_sent(&self) -> u64 {
+        self.sent_per_worker.iter().sum()
+    }
+}
+
+/// Ring all-reduce of a `total_bytes` dense buffer across all workers:
+/// 2(N−1) phases, each moving a `total_bytes / N` chunk from every worker
+/// to its ring successor (reduce-scatter then all-gather). Advances the
+/// simulator to the completion time.
+pub fn ring_allreduce(sim: &mut NetSim, total_bytes: u64) -> CollectiveTiming {
+    let n = sim.topology.n_workers();
+    let start = sim.now();
+    if n == 1 {
+        return CollectiveTiming {
+            start,
+            end: start,
+            sent_per_worker: vec![0],
+        };
+    }
+    let chunk = total_bytes.div_ceil(n as u64).max(1);
+    let mut sent = vec![0u64; n];
+    for _phase in 0..(2 * (n - 1)) {
+        let transfers: Vec<(usize, usize, u64)> =
+            (0..n).map(|i| (i, (i + 1) % n, chunk)).collect();
+        sim.phase(&transfers);
+        for s in sent.iter_mut() {
+            *s += chunk;
+        }
+    }
+    CollectiveTiming {
+        start,
+        end: sim.now(),
+        sent_per_worker: sent,
+    }
+}
+
+/// Ring all-gather of per-worker payloads (sizes may differ, e.g. sparse
+/// gradients with different nnz): N−1 phases; in phase `p`, worker `i`
+/// forwards the block that originated at worker `(i + n - p) % n` to its
+/// successor. Every worker ends holding every payload.
+pub fn ring_allgather(sim: &mut NetSim, payload_bytes: &[u64]) -> CollectiveTiming {
+    let n = sim.topology.n_workers();
+    assert_eq!(payload_bytes.len(), n, "payload per worker required");
+    let start = sim.now();
+    let mut sent = vec![0u64; n];
+    if n == 1 {
+        return CollectiveTiming {
+            start,
+            end: start,
+            sent_per_worker: sent,
+        };
+    }
+    for p in 0..(n - 1) {
+        let transfers: Vec<(usize, usize, u64)> = (0..n)
+            .map(|i| {
+                let origin = (i + n - p) % n;
+                (i, (i + 1) % n, payload_bytes[origin].max(1))
+            })
+            .collect();
+        sim.phase(&transfers);
+        for (i, t) in transfers.iter().enumerate() {
+            sent[i] += t.2;
+        }
+    }
+    CollectiveTiming {
+        start,
+        end: sim.now(),
+        sent_per_worker: sent,
+    }
+}
+
+/// Parameter-server push/pull: all workers push their payload to the
+/// leader (worker 0), which reduces and broadcasts `result_bytes` back.
+pub fn ps_pushpull(
+    sim: &mut NetSim,
+    payload_bytes: &[u64],
+    result_bytes: u64,
+) -> CollectiveTiming {
+    let n = sim.topology.n_workers();
+    assert_eq!(payload_bytes.len(), n);
+    let start = sim.now();
+    let mut sent = vec![0u64; n];
+    if n == 1 {
+        return CollectiveTiming {
+            start,
+            end: start,
+            sent_per_worker: sent,
+        };
+    }
+    // Push phase: workers 1..n → worker 0 (shares worker-0's downlink).
+    let pushes: Vec<(usize, usize, u64)> = (1..n)
+        .map(|i| (i, 0usize, payload_bytes[i].max(1)))
+        .collect();
+    sim.phase(&pushes);
+    for (i, s) in sent.iter_mut().enumerate().skip(1) {
+        *s += payload_bytes[i].max(1);
+    }
+    // Pull phase: worker 0 → everyone (serialized on worker-0's uplink).
+    let pulls: Vec<(usize, usize, u64)> =
+        (1..n).map(|i| (0usize, i, result_bytes.max(1))).collect();
+    sim.phase(&pulls);
+    sent[0] += (n as u64 - 1) * result_bytes.max(1);
+    CollectiveTiming {
+        start,
+        end: sim.now(),
+        sent_per_worker: sent,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::netsim::schedule::mbps;
+    use crate::netsim::topology::StarTopology;
+
+    fn sim(n: usize, bw_mbps: f64, prop_ms: u64) -> NetSim {
+        NetSim::quiet(StarTopology::constant(
+            n,
+            mbps(bw_mbps),
+            SimTime::from_millis(prop_ms),
+        ))
+    }
+
+    #[test]
+    fn allreduce_volume_is_2_n_minus_1_chunks() {
+        let mut s = sim(4, 1000.0, 1);
+        let t = ring_allreduce(&mut s, 4_000_000);
+        // chunk = 1 MB; 2·3 phases → 6 MB per worker
+        assert_eq!(t.sent_per_worker, vec![6_000_000; 4]);
+    }
+
+    #[test]
+    fn allreduce_time_scales_with_bottleneck() {
+        // Halving bandwidth should ~double the makespan.
+        let t_fast = ring_allreduce(&mut sim(4, 1000.0, 1), 8_000_000).elapsed();
+        let t_slow = ring_allreduce(&mut sim(4, 500.0, 1), 8_000_000).elapsed();
+        let ratio = t_slow.as_secs_f64() / t_fast.as_secs_f64();
+        assert!((1.8..2.2).contains(&ratio), "ratio {ratio}");
+    }
+
+    #[test]
+    fn allreduce_single_worker_is_free() {
+        let mut s = sim(1, 100.0, 1);
+        let t = ring_allreduce(&mut s, 1_000_000);
+        assert_eq!(t.elapsed(), SimTime::ZERO);
+    }
+
+    #[test]
+    fn allgather_moves_every_payload_to_every_worker() {
+        let mut s = sim(3, 1000.0, 1);
+        let payloads = vec![300_000u64, 600_000, 900_000];
+        let t = ring_allgather(&mut s, &payloads);
+        // Each worker forwards each origin's block exactly once (n−1
+        // sends), so total wire volume = (n−1) × Σ payloads.
+        assert_eq!(t.total_sent(), 2 * (300_000 + 600_000 + 900_000));
+    }
+
+    #[test]
+    fn allgather_makespan_bounded_by_sum_over_bottleneck() {
+        let mut s = sim(4, 100.0, 1);
+        let payloads = vec![1_000_000u64; 4];
+        let t = ring_allgather(&mut s, &payloads);
+        // Lower bound: each worker must move 3 MB through a 100 Mbps
+        // uplink+downlink pipeline → ≥ 0.24 s. Upper bound: generous 4×.
+        let el = t.elapsed().as_secs_f64();
+        assert!(el >= 0.24, "{el}");
+        assert!(el <= 1.0, "{el}");
+    }
+
+    #[test]
+    fn slow_worker_gates_the_ring() {
+        use crate::netsim::link::LinkConfig;
+        use crate::netsim::schedule::BandwidthSchedule;
+        let fast = LinkConfig::new(BandwidthSchedule::constant(mbps(10_000.0)), SimTime::ZERO);
+        let slow = LinkConfig::new(BandwidthSchedule::constant(mbps(200.0)), SimTime::ZERO);
+        let topo = StarTopology::shaped(8, fast.clone(), &[3], slow);
+        let mut s = NetSim::quiet(topo);
+        let t = ring_allreduce(&mut s, 46_200_000); // ResNet18 gradients
+        // Slow-worker bound: 2·7 phases × 5.775 MB chunk... chunk goes
+        // through worker 3's 200 Mbps uplink once per phase: 14 × 5.775 MB
+        // × 8 / 200 Mbps ≈ 3.2 s (downlink pipelines with uplink).
+        let el = t.elapsed().as_secs_f64();
+        assert!(el > 2.5, "too fast: {el}");
+        // All-fast ring would take ~0.13 s.
+        let mut s_fast = NetSim::quiet(StarTopology::uniform(8, fast));
+        let el_fast = ring_allreduce(&mut s_fast, 46_200_000).elapsed().as_secs_f64();
+        assert!(el > 10.0 * el_fast, "shaping had no effect: {el} vs {el_fast}");
+    }
+
+    #[test]
+    fn ps_pushpull_serializes_on_leader_links() {
+        let mut s = sim(4, 100.0, 1);
+        let t = ps_pushpull(&mut s, &[0, 1_000_000, 1_000_000, 1_000_000], 1_000_000);
+        // Push: 3 MB into worker-0 downlink (240 ms) then pull: 3 MB out of
+        // worker-0 uplink (240 ms).
+        let el = t.elapsed().as_secs_f64();
+        assert!(el >= 0.45, "{el}");
+        assert_eq!(t.sent_per_worker[0], 3_000_000);
+    }
+
+    #[test]
+    fn degenerate_zero_payloads() {
+        let mut s = sim(3, 100.0, 1);
+        let t = ring_allgather(&mut s, &[0, 0, 0]);
+        assert!(t.elapsed() > SimTime::ZERO); // 1-byte floors still move
+        let t = ps_pushpull(&mut s, &[0, 0, 0], 0);
+        assert!(t.elapsed() > SimTime::ZERO);
+    }
+}

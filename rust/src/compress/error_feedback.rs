@@ -1,0 +1,199 @@
+//! Error feedback (memory-compensated compression): everything Algorithm 2
+//! drops — pruned gradients, untransmitted (non-top-k) values, and
+//! quantization error — is accumulated locally and re-injected into the
+//! next step's gradient ("accumulate the local filtered gradients for
+//! further aggregation and transmission", paper §4.2 step 3).
+//!
+//! Invariant (tested): `transmitted + residual == gradient + old_residual`
+//! — compression never loses gradient mass, only delays it.
+
+use super::sparse::SparseGradient;
+
+/// Per-worker error-feedback state for one flat gradient tensor.
+#[derive(Clone, Debug)]
+pub struct ErrorFeedback {
+    residual: Vec<f32>,
+}
+
+impl ErrorFeedback {
+    pub fn new(n: usize) -> Self {
+        ErrorFeedback {
+            residual: vec![0.0; n],
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.residual.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.residual.is_empty()
+    }
+
+    /// Add the carried residual into `grad` (start of a step).
+    pub fn compensate(&self, grad: &mut [f32]) {
+        assert_eq!(grad.len(), self.residual.len());
+        for (g, &r) in grad.iter_mut().zip(self.residual.iter()) {
+            *g += r;
+        }
+    }
+
+    /// Record what was actually transmitted: the new residual is
+    /// `compensated_grad - decoded(transmitted)`.
+    pub fn absorb(&mut self, compensated_grad: &[f32], transmitted: &SparseGradient) {
+        assert_eq!(compensated_grad.len(), self.residual.len());
+        assert_eq!(transmitted.n_total, self.residual.len());
+        // Start from the full compensated gradient...
+        self.residual.copy_from_slice(compensated_grad);
+        // ...and subtract what made it onto the wire (at wire precision).
+        for (&i, &v) in transmitted.indices.iter().zip(transmitted.values.iter()) {
+            self.residual[i as usize] -= v;
+        }
+    }
+
+    /// L2 norm of the residual (reported as a compression-health metric).
+    pub fn residual_norm(&self) -> f64 {
+        self.residual
+            .iter()
+            .map(|&x| (x as f64) * (x as f64))
+            .sum::<f64>()
+            .sqrt()
+    }
+
+    pub fn residual(&self) -> &[f32] {
+        &self.residual
+    }
+
+    pub fn reset(&mut self) {
+        self.residual.iter_mut().for_each(|x| *x = 0.0);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::quantize::Precision;
+    use crate::compress::topk::top_k_indices;
+    use crate::testing::prop::*;
+    use crate::util::rng::Pcg64;
+
+    /// One compress step with error feedback; returns (transmitted, new grad
+    /// view) for invariant checking.
+    fn step(ef: &mut ErrorFeedback, grad: &[f32], k: usize) -> SparseGradient {
+        let mut g = grad.to_vec();
+        ef.compensate(&mut g);
+        let idx = top_k_indices(&g, k);
+        let mut s = SparseGradient::gather(&g, idx, Precision::F32);
+        s.quantize_values();
+        ef.absorb(&g, &s);
+        s
+    }
+
+    #[test]
+    fn conservation_invariant() {
+        let mut r = Pcg64::seeded(40);
+        let n = 256;
+        let mut ef = ErrorFeedback::new(n);
+        let mut total_injected = vec![0f64; n];
+        let mut total_transmitted = vec![0f64; n];
+        for _ in 0..20 {
+            let mut grad = vec![0f32; n];
+            r.fill_normal_f32(&mut grad, 0.0, 1.0);
+            for (t, &g) in total_injected.iter_mut().zip(grad.iter()) {
+                *t += g as f64;
+            }
+            let s = step(&mut ef, &grad, 16);
+            for (&i, &v) in s.indices.iter().zip(s.values.iter()) {
+                total_transmitted[i as usize] += v as f64;
+            }
+        }
+        // injected == transmitted + residual, elementwise.
+        for i in 0..n {
+            let lhs = total_injected[i];
+            let rhs = total_transmitted[i] + ef.residual()[i] as f64;
+            assert!(
+                (lhs - rhs).abs() < 1e-4,
+                "elem {i}: injected {lhs} vs transmitted+residual {rhs}"
+            );
+        }
+    }
+
+    #[test]
+    fn untransmitted_mass_eventually_flows() {
+        // A small-but-persistent gradient component must eventually be
+        // transmitted thanks to residual accumulation.
+        let n = 10;
+        let mut ef = ErrorFeedback::new(n);
+        let mut seen_small = false;
+        for iter in 0..50 {
+            // Element 9 has a small *persistent* gradient; 0..9 are large
+            // but sign-alternating over time (their residuals cancel), so
+            // element 9's accumulated residual must eventually dominate.
+            let sign = if iter % 2 == 0 { 1.0f32 } else { -1.0 };
+            let mut grad = vec![10.0 * sign; n];
+            grad[9] = 0.5;
+            let s = step(&mut ef, &grad, 3);
+            if s.indices.contains(&9) {
+                seen_small = true;
+                break;
+            }
+        }
+        assert!(seen_small, "small gradient never transmitted");
+    }
+
+    #[test]
+    fn compensate_adds_residual() {
+        let mut ef = ErrorFeedback::new(3);
+        let grad = vec![1.0f32, 1.0, 1.0];
+        // transmit only element 0
+        let mut g = grad.clone();
+        ef.compensate(&mut g);
+        let s = SparseGradient::gather(&g, vec![0], Precision::F32);
+        ef.absorb(&g, &s);
+        assert_eq!(ef.residual(), &[0.0, 1.0, 1.0]);
+        // next step: residual doubles the untransmitted elements
+        let mut g2 = grad.clone();
+        ef.compensate(&mut g2);
+        assert_eq!(g2, vec![1.0, 2.0, 2.0]);
+    }
+
+    #[test]
+    fn quantization_error_is_captured() {
+        let mut ef = ErrorFeedback::new(1);
+        let g = vec![0.1234567f32]; // not representable in f16
+        let mut gc = g.clone();
+        ef.compensate(&mut gc);
+        let mut s = SparseGradient::gather(&gc, vec![0], Precision::F16);
+        s.quantize_values();
+        ef.absorb(&gc, &s);
+        // residual = original - quantized ≠ 0
+        assert!(ef.residual()[0] != 0.0);
+        assert!((ef.residual()[0] + s.values[0] - 0.1234567).abs() < 1e-7);
+    }
+
+    #[test]
+    fn property_residual_norm_decreases_with_larger_k() {
+        forall(
+            "larger k ⇒ smaller residual",
+            50,
+            vec_f32(32..128, -5.0..5.0),
+            |v| {
+                let run = |k: usize| {
+                    let mut ef = ErrorFeedback::new(v.len());
+                    step(&mut ef, v, k);
+                    ef.residual_norm()
+                };
+                run(v.len() / 2) <= run(v.len() / 8) + 1e-9
+            },
+        );
+    }
+
+    #[test]
+    fn reset_clears() {
+        let mut ef = ErrorFeedback::new(4);
+        step(&mut ef, &[1.0, 2.0, 3.0, 4.0], 1);
+        assert!(ef.residual_norm() > 0.0);
+        ef.reset();
+        assert_eq!(ef.residual_norm(), 0.0);
+    }
+}

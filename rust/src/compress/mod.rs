@@ -1,0 +1,28 @@
+//! Gradient compression stack (the paper's §4.2, Algorithm 2).
+//!
+//! Components:
+//! - [`quantize`] — fp32 → fp16/bf16 value quantization (halves the wire
+//!   format; the paper's "Adaptive Quantization" step).
+//! - [`prune`] — magnitude-based model pruning: gradients of the smallest
+//!   |weight| parameters are zeroed (recoverable; excluded from transport).
+//! - [`topk`] — exact Top-K selection by |gradient| (quickselect) plus a
+//!   threshold-reuse fast path for the steady state.
+//! - [`sparse`] — the wire codec: COO (index, value) encoding with f32 or
+//!   f16 values, and wire-size accounting.
+//! - [`error_feedback`] — local residual accumulation of everything that
+//!   was *not* transmitted, re-injected into the next step's gradient
+//!   (memory-compensated compression).
+//! - [`pipeline`] — Algorithm 2 end-to-end: adaptive quantization decision →
+//!   pruning → Top-K sparsification → encoded payload.
+
+pub mod error_feedback;
+pub mod pipeline;
+pub mod prune;
+pub mod quantize;
+pub mod sparse;
+pub mod topk;
+
+pub use error_feedback::ErrorFeedback;
+pub use pipeline::{CompressionConfig, CompressionOutcome, NetSenseCompressor};
+pub use quantize::{f32_to_f16_bits, f16_bits_to_f32, Precision};
+pub use sparse::SparseGradient;

@@ -1,0 +1,188 @@
+//! Model pruning (Algorithm 2, step 2): select the parameters with the
+//! smallest |weight| at rate `0.5 × (1 − ratio)` and zero *their gradients*
+//! for this step. Pruned parameters are not removed — they are merely
+//! excluded from gradient transport and can reactivate later (the paper's
+//! "gradually reactivated in subsequent training iterations").
+
+use super::topk::{k_for_ratio, kth_magnitude};
+
+/// The paper's pruning-rate rule: `ratio_p = 0.5 × (1 − ratio)`.
+pub fn pruning_rate_for(ratio: f64) -> f64 {
+    (0.5 * (1.0 - ratio)).clamp(0.0, 0.5)
+}
+
+/// A pruning mask over a flat parameter vector. `true` = pruned.
+#[derive(Clone, Debug)]
+pub struct PruneMask {
+    pub pruned: Vec<bool>,
+    pub n_pruned: usize,
+}
+
+impl PruneMask {
+    /// Build a mask that prunes the `rate` fraction of parameters with the
+    /// smallest absolute weight.
+    pub fn smallest_weights(weights: &[f32], rate: f64) -> PruneMask {
+        let n = weights.len();
+        let n_prune = k_for_ratio(n, rate).min(n);
+        let mut pruned = vec![false; n];
+        if n_prune == 0 {
+            return PruneMask { pruned, n_pruned: 0 };
+        }
+        if n_prune == n {
+            return PruneMask {
+                pruned: vec![true; n],
+                n_pruned: n,
+            };
+        }
+        // Threshold = the (n - n_prune)-th largest magnitude; anything
+        // strictly below it is pruned. Ties at the threshold survive, so
+        // the realized count can undershoot slightly — fill from the
+        // smallest ties to hit the exact count.
+        let keep_k = n - n_prune;
+        let threshold = kth_magnitude(weights, keep_k);
+        let mut n_pruned = 0usize;
+        for (i, &w) in weights.iter().enumerate() {
+            if w.abs() < threshold {
+                pruned[i] = true;
+                n_pruned += 1;
+            }
+        }
+        if n_pruned < n_prune {
+            // prune ties (== threshold) until the count is exact
+            for (i, &w) in weights.iter().enumerate() {
+                if n_pruned == n_prune {
+                    break;
+                }
+                if !pruned[i] && w.abs() == threshold {
+                    pruned[i] = true;
+                    n_pruned += 1;
+                }
+            }
+        }
+        PruneMask { pruned, n_pruned }
+    }
+
+    /// Zero the gradients of pruned parameters in place; returns how many
+    /// were actually non-zero before.
+    pub fn apply(&self, grads: &mut [f32]) -> usize {
+        assert_eq!(grads.len(), self.pruned.len());
+        let mut zeroed = 0;
+        for (g, &p) in grads.iter_mut().zip(self.pruned.iter()) {
+            if p {
+                if *g != 0.0 {
+                    zeroed += 1;
+                }
+                *g = 0.0;
+            }
+        }
+        zeroed
+    }
+
+    pub fn rate(&self) -> f64 {
+        if self.pruned.is_empty() {
+            0.0
+        } else {
+            self.n_pruned as f64 / self.pruned.len() as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::prop::*;
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn rate_rule_matches_paper() {
+        assert_eq!(pruning_rate_for(1.0), 0.0); // no compression → no pruning
+        assert_eq!(pruning_rate_for(0.0), 0.5);
+        assert_eq!(pruning_rate_for(0.5), 0.25);
+        // Out-of-range ratios are clamped.
+        assert_eq!(pruning_rate_for(2.0), 0.0);
+        assert_eq!(pruning_rate_for(-1.0), 0.5);
+    }
+
+    #[test]
+    fn prunes_smallest_magnitudes() {
+        let w = [0.1f32, -5.0, 0.2, 4.0, -0.05, 3.0];
+        let m = PruneMask::smallest_weights(&w, 0.5);
+        assert_eq!(m.n_pruned, 3);
+        assert!(m.pruned[0] && m.pruned[2] && m.pruned[4]);
+        assert!(!m.pruned[1] && !m.pruned[3] && !m.pruned[5]);
+    }
+
+    #[test]
+    fn apply_zeroes_only_pruned() {
+        let w = [0.1f32, -5.0, 0.2, 4.0];
+        let m = PruneMask::smallest_weights(&w, 0.5);
+        let mut g = [1.0f32, 2.0, 3.0, 4.0];
+        let zeroed = m.apply(&mut g);
+        assert_eq!(zeroed, 2);
+        assert_eq!(g, [0.0, 2.0, 0.0, 4.0]);
+    }
+
+    #[test]
+    fn zero_rate_prunes_nothing_full_rate_everything() {
+        let w = [1.0f32, 2.0, 3.0];
+        assert_eq!(PruneMask::smallest_weights(&w, 0.0).n_pruned, 0);
+        assert_eq!(PruneMask::smallest_weights(&w, 1.0).n_pruned, 3);
+    }
+
+    #[test]
+    fn exact_count_with_ties() {
+        let w = vec![1.0f32; 100];
+        let m = PruneMask::smallest_weights(&w, 0.3);
+        assert_eq!(m.n_pruned, 30);
+        assert!((m.rate() - 0.3).abs() < 1e-9);
+    }
+
+    #[test]
+    fn property_count_matches_rate() {
+        forall(
+            "pruned count == round(rate·n) (±1 floor)",
+            100,
+            vec_f32(1..300, -10.0..10.0),
+            |v| {
+                let rate = 0.25;
+                let m = PruneMask::smallest_weights(v, rate);
+                let expect = crate::compress::topk::k_for_ratio(v.len(), rate);
+                m.n_pruned == expect
+            },
+        );
+    }
+
+    #[test]
+    fn property_pruned_have_no_larger_magnitude_than_kept() {
+        let mut r = Pcg64::seeded(30);
+        for _ in 0..30 {
+            let n = 10 + r.index(200);
+            let mut w = vec![0f32; n];
+            r.fill_normal_f32(&mut w, 0.0, 2.0);
+            let m = PruneMask::smallest_weights(&w, 0.4);
+            let max_pruned = w
+                .iter()
+                .zip(&m.pruned)
+                .filter(|&(_, &p)| p)
+                .map(|(&x, _)| x.abs())
+                .fold(0.0f32, f32::max);
+            let min_kept = w
+                .iter()
+                .zip(&m.pruned)
+                .filter(|&(_, &p)| !p)
+                .map(|(&x, _)| x.abs())
+                .fold(f32::MAX, f32::min);
+            assert!(
+                max_pruned <= min_kept,
+                "pruned {max_pruned} > kept {min_kept}"
+            );
+        }
+    }
+
+    #[test]
+    fn empty_weights() {
+        let m = PruneMask::smallest_weights(&[], 0.5);
+        assert_eq!(m.n_pruned, 0);
+        assert_eq!(m.rate(), 0.0);
+    }
+}

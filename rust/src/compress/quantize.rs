@@ -1,0 +1,276 @@
+//! Scalar quantization: IEEE 754 binary16 (f16) and bfloat16 conversion,
+//! implemented from scratch (no `half` crate offline).
+//!
+//! The paper's Algorithm 2 step 1 halves the gradient payload by moving
+//! from 32-bit to 16-bit floats when the compression ratio is critical and
+//! the gradient still carries substantial information (L2 norm test).
+
+/// Wire precision of sparse gradient values.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Precision {
+    F32,
+    F16,
+    Bf16,
+}
+
+impl Precision {
+    /// Bytes per value on the wire.
+    pub fn bytes(self) -> usize {
+        match self {
+            Precision::F32 => 4,
+            Precision::F16 | Precision::Bf16 => 2,
+        }
+    }
+}
+
+/// Convert f32 → IEEE binary16 bits with round-to-nearest-even, handling
+/// subnormals, overflow→inf, and NaN.
+pub fn f32_to_f16_bits(x: f32) -> u16 {
+    let bits = x.to_bits();
+    let sign = ((bits >> 16) & 0x8000) as u16;
+    let exp = ((bits >> 23) & 0xff) as i32;
+    let mant = bits & 0x007f_ffff;
+
+    if exp == 0xff {
+        // Inf / NaN
+        let nan_payload = if mant != 0 { 0x0200 } else { 0 };
+        return sign | 0x7c00 | nan_payload;
+    }
+    // Unbiased exponent.
+    let e = exp - 127;
+    if e > 15 {
+        return sign | 0x7c00; // overflow → inf
+    }
+    if e >= -14 {
+        // Normal f16: 10-bit mantissa, round to nearest even on bit 13.
+        let mant16 = mant >> 13;
+        let rest = mant & 0x1fff;
+        let half = 0x1000;
+        let mut out = sign | (((e + 15) as u16) << 10) | mant16 as u16;
+        if rest > half || (rest == half && (mant16 & 1) == 1) {
+            out = out.wrapping_add(1); // may carry into exponent — correct
+        }
+        return out;
+    }
+    if e >= -24 {
+        // Subnormal f16.
+        let shift = (-14 - e) as u32; // 1..=10
+        let mant_full = mant | 0x0080_0000; // implicit bit
+        let total_shift = 13 + shift;
+        let mant16 = mant_full >> total_shift;
+        let rest = mant_full & ((1 << total_shift) - 1);
+        let half = 1u32 << (total_shift - 1);
+        let mut out = sign | mant16 as u16;
+        if rest > half || (rest == half && (mant16 & 1) == 1) {
+            out = out.wrapping_add(1);
+        }
+        return out;
+    }
+    sign // underflow → signed zero
+}
+
+/// Convert IEEE binary16 bits → f32 (exact).
+pub fn f16_bits_to_f32(h: u16) -> f32 {
+    let sign = ((h & 0x8000) as u32) << 16;
+    let exp = ((h >> 10) & 0x1f) as u32;
+    let mant = (h & 0x03ff) as u32;
+    let bits = if exp == 0x1f {
+        // inf / nan
+        sign | 0x7f80_0000 | (mant << 13)
+    } else if exp == 0 {
+        if mant == 0 {
+            sign // zero
+        } else {
+            // subnormal: normalize. value = (mant/2^10)·2^-14; after s left
+            // shifts m ∈ [2^10, 2^11) and the unbiased exponent is
+            // E = -14 - s. With e starting at -1 and decrementing per
+            // shift, s = -1 - e, so E = e - 13 and the f32 biased
+            // exponent is e + 114.
+            let mut e = -1i32;
+            let mut m = mant;
+            while m & 0x0400 == 0 {
+                m <<= 1;
+                e -= 1;
+            }
+            m &= 0x03ff;
+            let exp32 = (e + 114) as u32;
+            sign | (exp32 << 23) | (m << 13)
+        }
+    } else {
+        sign | ((exp + 127 - 15) << 23) | (mant << 13)
+    };
+    f32::from_bits(bits)
+}
+
+/// f32 → bfloat16 bits (round-to-nearest-even). bf16 is the top 16 bits of
+/// f32, so range is preserved and conversion is cheap — this is the TPU-
+/// native 16-bit format (see DESIGN.md §Hardware-Adaptation).
+pub fn f32_to_bf16_bits(x: f32) -> u16 {
+    let bits = x.to_bits();
+    if x.is_nan() {
+        return ((bits >> 16) as u16) | 0x0040; // quiet the NaN
+    }
+    // Round to nearest even on bit 15.
+    let hi = bits >> 16;
+    let low = bits & 0xffff;
+    let half = 0x8000;
+    let rounded = if low > half || (low == half && (hi & 1) == 1) {
+        hi.wrapping_add(1)
+    } else {
+        hi
+    };
+    rounded as u16
+}
+
+/// bfloat16 bits → f32 (exact).
+pub fn bf16_bits_to_f32(h: u16) -> f32 {
+    f32::from_bits((h as u32) << 16)
+}
+
+/// Quantize a slice to `precision`, returning the dequantized values (what
+/// the receiver reconstructs). For `F32` this is the identity.
+pub fn quantize_roundtrip(xs: &[f32], precision: Precision) -> Vec<f32> {
+    match precision {
+        Precision::F32 => xs.to_vec(),
+        Precision::F16 => xs
+            .iter()
+            .map(|&x| f16_bits_to_f32(f32_to_f16_bits(x)))
+            .collect(),
+        Precision::Bf16 => xs
+            .iter()
+            .map(|&x| bf16_bits_to_f32(f32_to_bf16_bits(x)))
+            .collect(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::prop::*;
+
+    #[test]
+    fn f16_exact_values() {
+        // Exactly representable values round-trip bit-perfectly.
+        for &x in &[0.0f32, -0.0, 1.0, -1.0, 0.5, 2.0, 65504.0, -65504.0, 0.25] {
+            assert_eq!(f16_bits_to_f32(f32_to_f16_bits(x)), x, "{x}");
+        }
+    }
+
+    #[test]
+    fn f16_known_bit_patterns() {
+        assert_eq!(f32_to_f16_bits(1.0), 0x3c00);
+        assert_eq!(f32_to_f16_bits(-2.0), 0xc000);
+        assert_eq!(f32_to_f16_bits(65504.0), 0x7bff); // max finite f16
+        assert_eq!(f32_to_f16_bits(f32::INFINITY), 0x7c00);
+        assert_eq!(f32_to_f16_bits(f32::NEG_INFINITY), 0xfc00);
+        assert_eq!(f32_to_f16_bits(0.0), 0x0000);
+        assert_eq!(f32_to_f16_bits(-0.0), 0x8000);
+        // smallest positive subnormal f16 = 2^-24
+        assert_eq!(f32_to_f16_bits(5.960_464_5e-8), 0x0001);
+    }
+
+    #[test]
+    fn f16_overflow_to_inf_and_underflow_to_zero() {
+        assert_eq!(f32_to_f16_bits(1e10), 0x7c00);
+        assert_eq!(f32_to_f16_bits(-1e10), 0xfc00);
+        assert_eq!(f32_to_f16_bits(1e-10), 0x0000);
+        assert_eq!(f32_to_f16_bits(-1e-10), 0x8000);
+    }
+
+    #[test]
+    fn f16_nan_stays_nan() {
+        let h = f32_to_f16_bits(f32::NAN);
+        assert!(f16_bits_to_f32(h).is_nan());
+    }
+
+    #[test]
+    fn f16_subnormals_roundtrip() {
+        // All subnormal f16 bit patterns decode and re-encode exactly.
+        for bits in 1u16..0x0400 {
+            let x = f16_bits_to_f32(bits);
+            assert_eq!(f32_to_f16_bits(x), bits, "bits {bits:#06x} ({x})");
+        }
+    }
+
+    #[test]
+    fn f16_all_finite_patterns_roundtrip() {
+        // Every finite f16 decodes to an f32 that re-encodes identically.
+        for bits in 0u16..=0xffff {
+            let exp = (bits >> 10) & 0x1f;
+            if exp == 0x1f {
+                continue; // inf/nan handled elsewhere
+            }
+            let x = f16_bits_to_f32(bits);
+            assert_eq!(f32_to_f16_bits(x), bits, "bits {bits:#06x}");
+        }
+    }
+
+    #[test]
+    fn f16_relative_error_bounded() {
+        forall(
+            "f16 rel error < 2^-10 for normal range",
+            500,
+            vec_f32(1..50, -1000.0..1000.0),
+            |v| {
+                v.iter().all(|&x| {
+                    if x.abs() < 6.2e-5 {
+                        return true; // subnormal territory: absolute error regime
+                    }
+                    let y = f16_bits_to_f32(f32_to_f16_bits(x));
+                    (y - x).abs() <= x.abs() * (1.0 / 1024.0)
+                })
+            },
+        );
+    }
+
+    #[test]
+    fn f16_rounds_to_nearest_even() {
+        // 1 + 2^-11 is exactly between 1.0 and 1+2^-10 → ties to even (1.0).
+        let x = 1.0 + 2f32.powi(-11);
+        assert_eq!(f32_to_f16_bits(x), 0x3c00);
+        // 1 + 3*2^-11 is between 1+2^-10 and 1+2^-9 → ties to even (1+2^-9).
+        let x = 1.0 + 3.0 * 2f32.powi(-11);
+        assert_eq!(f32_to_f16_bits(x), 0x3c02);
+    }
+
+    #[test]
+    fn bf16_known_values() {
+        assert_eq!(bf16_bits_to_f32(f32_to_bf16_bits(1.0)), 1.0);
+        assert_eq!(bf16_bits_to_f32(f32_to_bf16_bits(-2.5)), -2.5);
+        // bf16 keeps f32 range: 1e38 stays finite.
+        assert!(bf16_bits_to_f32(f32_to_bf16_bits(1e38)).is_finite());
+        assert!(bf16_bits_to_f32(f32_to_bf16_bits(f32::NAN)).is_nan());
+        assert_eq!(
+            bf16_bits_to_f32(f32_to_bf16_bits(f32::INFINITY)),
+            f32::INFINITY
+        );
+    }
+
+    #[test]
+    fn bf16_relative_error_bounded() {
+        forall(
+            "bf16 rel error <= 2^-7",
+            500,
+            vec_f32(1..50, -1e30..1e30),
+            |v| {
+                v.iter().all(|&x| {
+                    let y = bf16_bits_to_f32(f32_to_bf16_bits(x));
+                    x == 0.0 || (y - x).abs() <= x.abs() * (1.0 / 128.0)
+                })
+            },
+        );
+    }
+
+    #[test]
+    fn roundtrip_helper_identity_for_f32() {
+        let v = vec![1.5f32, -2.25, 0.0, 1e-20];
+        assert_eq!(quantize_roundtrip(&v, Precision::F32), v);
+    }
+
+    #[test]
+    fn precision_wire_bytes() {
+        assert_eq!(Precision::F32.bytes(), 4);
+        assert_eq!(Precision::F16.bytes(), 2);
+        assert_eq!(Precision::Bf16.bytes(), 2);
+    }
+}

@@ -1,0 +1,358 @@
+//! Sparse gradient wire codec: COO (index, value) pairs with f32 or f16
+//! values, byte-exact wire-size accounting, and the aggregation operations
+//! the collectives need (sum of sparse gradients, densify).
+//!
+//! Wire layout (little-endian):
+//! `[u32 n_total][u32 nnz][u8 precision][pad 3][nnz × u32 idx][nnz × value]`
+
+use super::quantize::{f16_bits_to_f32, f32_to_f16_bits, Precision};
+
+/// A sparse gradient: sorted unique indices + values, tagged with the dense
+/// length it came from.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SparseGradient {
+    pub n_total: usize,
+    pub indices: Vec<u32>,
+    pub values: Vec<f32>,
+    pub precision: Precision,
+}
+
+impl SparseGradient {
+    /// Gather `indices` out of a dense tensor.
+    pub fn gather(dense: &[f32], indices: Vec<u32>, precision: Precision) -> Self {
+        debug_assert!(indices.windows(2).all(|w| w[0] < w[1]), "indices unsorted");
+        let values = indices.iter().map(|&i| dense[i as usize]).collect();
+        SparseGradient {
+            n_total: dense.len(),
+            indices,
+            values,
+            precision,
+        }
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.indices.len()
+    }
+
+    /// Exact wire size in bytes (header + indices + values).
+    pub fn wire_bytes(&self) -> u64 {
+        12 + (self.nnz() as u64) * (4 + self.precision.bytes() as u64)
+    }
+
+    /// Densify into a fresh dense vector (receiver side).
+    pub fn to_dense(&self) -> Vec<f32> {
+        let mut out = vec![0f32; self.n_total];
+        self.add_into(&mut out);
+        out
+    }
+
+    /// Accumulate into an existing dense buffer (aggregation hot path).
+    pub fn add_into(&self, out: &mut [f32]) {
+        assert_eq!(out.len(), self.n_total, "dense length mismatch");
+        for (&i, &v) in self.indices.iter().zip(self.values.iter()) {
+            out[i as usize] += v;
+        }
+    }
+
+    /// Apply this gradient's value precision (what the receiver would see
+    /// after decode). f32 is identity; f16 quantizes values.
+    pub fn quantize_values(&mut self) {
+        if self.precision == Precision::F16 {
+            for v in self.values.iter_mut() {
+                *v = f16_bits_to_f32(f32_to_f16_bits(*v));
+            }
+        }
+    }
+
+    /// Serialize to the wire format.
+    pub fn encode(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(self.wire_bytes() as usize);
+        out.extend_from_slice(&(self.n_total as u32).to_le_bytes());
+        out.extend_from_slice(&(self.nnz() as u32).to_le_bytes());
+        out.push(match self.precision {
+            Precision::F32 => 0,
+            Precision::F16 => 1,
+            Precision::Bf16 => 2,
+        });
+        out.extend_from_slice(&[0u8; 3]);
+        for &i in &self.indices {
+            out.extend_from_slice(&i.to_le_bytes());
+        }
+        match self.precision {
+            Precision::F32 => {
+                for &v in &self.values {
+                    out.extend_from_slice(&v.to_le_bytes());
+                }
+            }
+            Precision::F16 => {
+                for &v in &self.values {
+                    out.extend_from_slice(&f32_to_f16_bits(v).to_le_bytes());
+                }
+            }
+            Precision::Bf16 => {
+                for &v in &self.values {
+                    out.extend_from_slice(
+                        &super::quantize::f32_to_bf16_bits(v).to_le_bytes(),
+                    );
+                }
+            }
+        }
+        debug_assert_eq!(out.len() as u64, self.wire_bytes());
+        out
+    }
+
+    /// Deserialize from the wire format.
+    pub fn decode(buf: &[u8]) -> Result<SparseGradient, String> {
+        if buf.len() < 12 {
+            return Err("short header".into());
+        }
+        let n_total = u32::from_le_bytes(buf[0..4].try_into().unwrap()) as usize;
+        let nnz = u32::from_le_bytes(buf[4..8].try_into().unwrap()) as usize;
+        let precision = match buf[8] {
+            0 => Precision::F32,
+            1 => Precision::F16,
+            2 => Precision::Bf16,
+            p => return Err(format!("bad precision tag {p}")),
+        };
+        let idx_end = 12 + nnz * 4;
+        let val_end = idx_end + nnz * precision.bytes();
+        if buf.len() != val_end {
+            return Err(format!("bad length {} (expected {val_end})", buf.len()));
+        }
+        let mut indices = Vec::with_capacity(nnz);
+        for c in buf[12..idx_end].chunks_exact(4) {
+            let i = u32::from_le_bytes(c.try_into().unwrap());
+            if i as usize >= n_total {
+                return Err(format!("index {i} out of range {n_total}"));
+            }
+            indices.push(i);
+        }
+        if indices.windows(2).any(|w| w[0] >= w[1]) {
+            return Err("indices not strictly ascending".into());
+        }
+        let values = match precision {
+            Precision::F32 => buf[idx_end..val_end]
+                .chunks_exact(4)
+                .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+                .collect(),
+            Precision::F16 => buf[idx_end..val_end]
+                .chunks_exact(2)
+                .map(|c| f16_bits_to_f32(u16::from_le_bytes(c.try_into().unwrap())))
+                .collect(),
+            Precision::Bf16 => buf[idx_end..val_end]
+                .chunks_exact(2)
+                .map(|c| {
+                    super::quantize::bf16_bits_to_f32(u16::from_le_bytes(c.try_into().unwrap()))
+                })
+                .collect(),
+        };
+        Ok(SparseGradient {
+            n_total,
+            indices,
+            values,
+            precision,
+        })
+    }
+
+    /// Merge-sum two sparse gradients (union of indices, summed values).
+    /// Both must describe the same dense length.
+    pub fn merge_sum(&self, other: &SparseGradient) -> SparseGradient {
+        assert_eq!(self.n_total, other.n_total);
+        let mut indices = Vec::with_capacity(self.nnz() + other.nnz());
+        let mut values = Vec::with_capacity(self.nnz() + other.nnz());
+        let (mut a, mut b) = (0usize, 0usize);
+        while a < self.nnz() || b < other.nnz() {
+            let ia = self.indices.get(a).copied().unwrap_or(u32::MAX);
+            let ib = other.indices.get(b).copied().unwrap_or(u32::MAX);
+            match ia.cmp(&ib) {
+                std::cmp::Ordering::Less => {
+                    indices.push(ia);
+                    values.push(self.values[a]);
+                    a += 1;
+                }
+                std::cmp::Ordering::Greater => {
+                    indices.push(ib);
+                    values.push(other.values[b]);
+                    b += 1;
+                }
+                std::cmp::Ordering::Equal => {
+                    indices.push(ia);
+                    values.push(self.values[a] + other.values[b]);
+                    a += 1;
+                    b += 1;
+                }
+            }
+        }
+        SparseGradient {
+            n_total: self.n_total,
+            indices,
+            values,
+            precision: if self.precision == Precision::F32 || other.precision == Precision::F32 {
+                Precision::F32
+            } else {
+                self.precision
+            },
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::topk::top_k_indices;
+    use crate::testing::prop::*;
+
+    fn sample() -> SparseGradient {
+        SparseGradient {
+            n_total: 10,
+            indices: vec![1, 4, 7],
+            values: vec![0.5, -2.0, 3.25],
+            precision: Precision::F32,
+        }
+    }
+
+    #[test]
+    fn gather_and_densify_roundtrip() {
+        let dense = vec![0.0f32, 0.5, 0.0, 0.0, -2.0, 0.0, 0.0, 3.25, 0.0, 0.0];
+        let idx = top_k_indices(&dense, 3);
+        let s = SparseGradient::gather(&dense, idx, Precision::F32);
+        assert_eq!(s.to_dense(), dense);
+    }
+
+    #[test]
+    fn wire_bytes_exact() {
+        let s = sample();
+        assert_eq!(s.wire_bytes(), 12 + 3 * 8);
+        assert_eq!(s.encode().len() as u64, s.wire_bytes());
+        let mut h = s.clone();
+        h.precision = Precision::F16;
+        assert_eq!(h.wire_bytes(), 12 + 3 * 6);
+        assert_eq!(h.encode().len() as u64, h.wire_bytes());
+    }
+
+    #[test]
+    fn encode_decode_roundtrip_f32() {
+        let s = sample();
+        let d = SparseGradient::decode(&s.encode()).unwrap();
+        assert_eq!(d, s);
+    }
+
+    #[test]
+    fn encode_decode_roundtrip_f16_quantizes() {
+        let mut s = sample();
+        s.precision = Precision::F16;
+        let d = SparseGradient::decode(&s.encode()).unwrap();
+        assert_eq!(d.indices, s.indices);
+        // values are exactly representable in f16 here
+        assert_eq!(d.values, s.values);
+        // a non-representable value gets rounded
+        let mut s2 = sample();
+        s2.precision = Precision::F16;
+        s2.values[0] = 0.1234567;
+        let d2 = SparseGradient::decode(&s2.encode()).unwrap();
+        assert!((d2.values[0] - 0.1234567).abs() < 1e-3);
+        assert_ne!(d2.values[0], 0.1234567f32);
+    }
+
+    #[test]
+    fn decode_rejects_corruption() {
+        let s = sample();
+        let mut buf = s.encode();
+        assert!(SparseGradient::decode(&buf[..5]).is_err()); // truncated
+        buf[8] = 9; // bad precision tag
+        assert!(SparseGradient::decode(&buf).is_err());
+        let mut buf2 = s.encode();
+        buf2.push(0); // trailing garbage
+        assert!(SparseGradient::decode(&buf2).is_err());
+        // out-of-range index
+        let mut bad = sample();
+        bad.indices[2] = 99;
+        assert!(SparseGradient::decode(&bad.encode()).is_err());
+        // unsorted indices
+        let mut bad = sample();
+        bad.indices = vec![4, 1, 7];
+        assert!(SparseGradient::decode(&bad.encode()).is_err());
+    }
+
+    #[test]
+    fn merge_sum_matches_dense_sum() {
+        let a = SparseGradient {
+            n_total: 8,
+            indices: vec![0, 3, 5],
+            values: vec![1.0, 2.0, 3.0],
+            precision: Precision::F32,
+        };
+        let b = SparseGradient {
+            n_total: 8,
+            indices: vec![3, 4, 7],
+            values: vec![10.0, 20.0, 30.0],
+            precision: Precision::F32,
+        };
+        let m = a.merge_sum(&b);
+        let mut dense = a.to_dense();
+        for (x, y) in dense.iter_mut().zip(b.to_dense()) {
+            *x += y;
+        }
+        assert_eq!(m.to_dense(), dense);
+        assert_eq!(m.indices, vec![0, 3, 4, 5, 7]);
+    }
+
+    #[test]
+    fn property_roundtrip_random_sparse() {
+        forall(
+            "encode/decode roundtrip",
+            100,
+            vec_f32(1..200, -50.0..50.0),
+            |v| {
+                let k = (v.len() / 4).max(1);
+                let idx = top_k_indices(v, k);
+                let s = SparseGradient::gather(v, idx, Precision::F32);
+                match SparseGradient::decode(&s.encode()) {
+                    Ok(d) => d == s,
+                    Err(_) => false,
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn property_merge_sum_commutative() {
+        forall(
+            "merge_sum commutes",
+            50,
+            pair(vec_f32(8..64, -5.0..5.0), vec_f32(8..64, -5.0..5.0)),
+            |(x, y)| {
+                let n = x.len().min(y.len());
+                let x = &x[..n];
+                let y = &y[..n];
+                let a = SparseGradient::gather(x, top_k_indices(x, n / 2 + 1), Precision::F32);
+                let b = SparseGradient::gather(y, top_k_indices(y, n / 3 + 1), Precision::F32);
+                a.merge_sum(&b).to_dense() == b.merge_sum(&a).to_dense()
+            },
+        );
+    }
+
+    #[test]
+    fn add_into_accumulates() {
+        let s = sample();
+        let mut acc = vec![1.0f32; 10];
+        s.add_into(&mut acc);
+        assert_eq!(acc[1], 1.5);
+        assert_eq!(acc[4], -1.0);
+        assert_eq!(acc[7], 4.25);
+        assert_eq!(acc[0], 1.0);
+    }
+
+    #[test]
+    fn empty_sparse_gradient() {
+        let s = SparseGradient {
+            n_total: 5,
+            indices: vec![],
+            values: vec![],
+            precision: Precision::F32,
+        };
+        assert_eq!(s.wire_bytes(), 12);
+        let d = SparseGradient::decode(&s.encode()).unwrap();
+        assert_eq!(d.to_dense(), vec![0.0; 5]);
+    }
+}

@@ -1,0 +1,363 @@
+//! Top-K selection by absolute value — the sparsification core of
+//! Algorithm 2 step 3 ("TopK sparsification to eliminate gradients with
+//! minimal absolute values").
+//!
+//! Two paths:
+//! - [`top_k_indices`] — exact selection via iterative quickselect on a
+//!   scratch buffer (average O(n)), no allocation churn in steady state.
+//! - [`threshold_select`] — select by a magnitude threshold, used with
+//!   [`kth_magnitude`] for threshold reuse across steps (the hot-path
+//!   optimization: gradient magnitude distributions drift slowly, so last
+//!   step's k-th magnitude is a good pre-filter for this step).
+
+/// Number of elements to keep for a ratio over `n` elements, respecting the
+/// paper's floor of at least one element when `n > 0` and ratio > 0.
+pub fn k_for_ratio(n: usize, ratio: f64) -> usize {
+    if n == 0 || ratio <= 0.0 {
+        return 0;
+    }
+    (((n as f64) * ratio).round() as usize).clamp(1, n)
+}
+
+/// Exact top-k selection: returns the indices of the `k` largest |values|
+/// (ties broken arbitrarily), in ascending index order.
+pub fn top_k_indices(values: &[f32], k: usize) -> Vec<u32> {
+    let mut scratch = Vec::new();
+    top_k_indices_with(values, k, &mut scratch)
+}
+
+/// [`top_k_indices`] with a caller-owned scratch buffer — the hot-path
+/// variant (§Perf: avoids a fresh ~12·n-byte allocation per call).
+pub fn top_k_indices_with(
+    values: &[f32],
+    k: usize,
+    scratch: &mut Vec<(f32, u32)>,
+) -> Vec<u32> {
+    let n = values.len();
+    assert!(k <= n, "k={k} > n={n}");
+    assert!(n <= u32::MAX as usize, "tensor too large for u32 indices");
+    if k == 0 {
+        return Vec::new();
+    }
+    if k == n {
+        return (0..n as u32).collect();
+    }
+    fill_scratch(values, scratch);
+    quickselect_desc(scratch, k);
+    // scratch[..k] now holds the top-k (unordered); collect + sort indices.
+    let mut idx: Vec<u32> = scratch[..k].iter().map(|&(_, i)| i).collect();
+    idx.sort_unstable();
+    debug_assert_eq!(idx.len(), k);
+    idx
+}
+
+fn fill_scratch(values: &[f32], scratch: &mut Vec<(f32, u32)>) {
+    scratch.clear();
+    scratch.reserve(values.len());
+    scratch.extend(values.iter().enumerate().map(|(i, &v)| (v.abs(), i as u32)));
+}
+
+/// The k-th largest |value| (the selection threshold). `k >= 1`.
+pub fn kth_magnitude(values: &[f32], k: usize) -> f32 {
+    let mut scratch = Vec::new();
+    kth_magnitude_with(values, k, &mut scratch)
+}
+
+/// [`kth_magnitude`] with caller-owned scratch (hot-path variant).
+pub fn kth_magnitude_with(values: &[f32], k: usize, scratch: &mut Vec<(f32, u32)>) -> f32 {
+    assert!(k >= 1 && k <= values.len());
+    fill_scratch(values, scratch);
+    quickselect_desc(scratch, k).0
+}
+
+/// Partition `scratch` so the `k` largest (by .0, descending) are in
+/// `scratch[..k]`; returns the k-th element.
+fn quickselect_desc(scratch: &mut [(f32, u32)], k: usize) -> (f32, u32) {
+    debug_assert!(k >= 1 && k <= scratch.len());
+    let mut lo = 0usize;
+    let mut hi = scratch.len();
+    let target = k - 1;
+    // Simple deterministic xorshift for pivot choice (avoids adversarial
+    // O(n²) on sorted inputs without pulling in an RNG).
+    let mut state = 0x9e37_79b9_7f4a_7c15u64 ^ (scratch.len() as u64);
+    loop {
+        if hi - lo <= 16 {
+            scratch[lo..hi].sort_unstable_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
+            return scratch[target];
+        }
+        state ^= state << 13;
+        state ^= state >> 7;
+        state ^= state << 17;
+        let pivot_idx = lo + (state as usize % (hi - lo));
+        let pivot = scratch[pivot_idx].0;
+        // 3-way partition (descending): [> pivot | == pivot | < pivot]
+        let mut i = lo;
+        let mut j = lo;
+        let mut g = hi;
+        while j < g {
+            let v = scratch[j].0;
+            if v > pivot {
+                scratch.swap(i, j);
+                i += 1;
+                j += 1;
+            } else if v < pivot {
+                g -= 1;
+                scratch.swap(j, g);
+            } else {
+                j += 1;
+            }
+        }
+        // Now [lo, i) > pivot, [i, g) == pivot, [g, hi) < pivot.
+        if target < i {
+            hi = i;
+        } else if target < g {
+            return scratch[target];
+        } else {
+            lo = g;
+        }
+    }
+}
+
+/// Indices (ascending) of all values with |v| >= threshold.
+pub fn threshold_select(values: &[f32], threshold: f32) -> Vec<u32> {
+    values
+        .iter()
+        .enumerate()
+        .filter(|&(_, &v)| v.abs() >= threshold)
+        .map(|(i, _)| i as u32)
+        .collect()
+}
+
+/// Threshold-reuse top-k: try `est_threshold` (e.g. last step's k-th
+/// magnitude); if the candidate set is within `slack` of k, trim/accept it;
+/// otherwise fall back to exact quickselect. Returns (indices, kth_mag).
+pub fn top_k_with_threshold_hint(
+    values: &[f32],
+    k: usize,
+    est_threshold: Option<f32>,
+    slack: f64,
+) -> (Vec<u32>, f32) {
+    let mut scratch = Vec::new();
+    top_k_with_threshold_hint_and_scratch(values, k, est_threshold, slack, &mut scratch)
+}
+
+/// [`top_k_with_threshold_hint`] with caller-owned scratch (hot path).
+pub fn top_k_with_threshold_hint_and_scratch(
+    values: &[f32],
+    k: usize,
+    est_threshold: Option<f32>,
+    slack: f64,
+    scratch: &mut Vec<(f32, u32)>,
+) -> (Vec<u32>, f32) {
+    if k == 0 {
+        return (Vec::new(), f32::INFINITY);
+    }
+    if k >= values.len() {
+        return ((0..values.len() as u32).collect(), 0.0);
+    }
+    if let Some(th) = est_threshold {
+        if th.is_finite() && th > 0.0 {
+            let cand = threshold_select(values, th);
+            let hi = ((k as f64) * (1.0 + slack)) as usize;
+            if cand.len() >= k && cand.len() <= hi.max(k + 1) {
+                // Trim the candidate set down to exactly k by selecting
+                // within it (much smaller than n). Always returning exactly
+                // k keeps wire sizes deterministic — the contract
+                // `predict_wire_bytes` relies on.
+                let sub: Vec<f32> = cand.iter().map(|&i| values[i as usize]).collect();
+                let keep = top_k_indices_with(&sub, k, scratch);
+                let mut out: Vec<u32> = keep.iter().map(|&j| cand[j as usize]).collect();
+                out.sort_unstable();
+                let kth = kth_magnitude_with(&sub, k, scratch);
+                return (out, kth);
+            }
+        }
+    }
+    // Single quickselect pass yields both the indices and the threshold.
+    let idx = top_k_indices_with(values, k, scratch);
+    let kth = idx
+        .iter()
+        .map(|&i| values[i as usize].abs())
+        .fold(f32::MAX, f32::min);
+    (idx, kth)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::prop::*;
+    use crate::util::rng::Pcg64;
+
+    /// Reference implementation: full sort.
+    fn naive_top_k(values: &[f32], k: usize) -> Vec<u32> {
+        let mut idx: Vec<u32> = (0..values.len() as u32).collect();
+        idx.sort_by(|&a, &b| {
+            values[b as usize]
+                .abs()
+                .partial_cmp(&values[a as usize].abs())
+                .unwrap()
+        });
+        let mut out = idx[..k].to_vec();
+        out.sort_unstable();
+        out
+    }
+
+    #[test]
+    fn matches_naive_on_random_inputs() {
+        let mut r = Pcg64::seeded(20);
+        for trial in 0..50 {
+            let n = 1 + r.index(300);
+            let k = 1 + r.index(n);
+            let mut v = vec![0f32; n];
+            r.fill_normal_f32(&mut v, 0.0, 1.0);
+            let fast = top_k_indices(&v, k);
+            let slow = naive_top_k(&v, k);
+            // With distinct magnitudes (almost surely), selections agree.
+            let fast_mags: f32 = fast.iter().map(|&i| v[i as usize].abs()).sum();
+            let slow_mags: f32 = slow.iter().map(|&i| v[i as usize].abs()).sum();
+            assert!(
+                (fast_mags - slow_mags).abs() < 1e-4 * slow_mags.max(1.0),
+                "trial {trial}: mass mismatch"
+            );
+            assert_eq!(fast.len(), k);
+        }
+    }
+
+    #[test]
+    fn handles_duplicates() {
+        let v = vec![1.0f32; 100];
+        let idx = top_k_indices(&v, 10);
+        assert_eq!(idx.len(), 10);
+        // all magnitudes equal → any 10 indices are valid; check dedup+sorted
+        let mut sorted = idx.clone();
+        sorted.sort_unstable();
+        sorted.dedup();
+        assert_eq!(sorted.len(), 10);
+    }
+
+    #[test]
+    fn edge_cases() {
+        assert!(top_k_indices(&[], 0).is_empty());
+        assert_eq!(top_k_indices(&[3.0], 1), vec![0]);
+        let v = [1.0f32, -5.0, 2.0];
+        assert_eq!(top_k_indices(&v, 3), vec![0, 1, 2]);
+        assert_eq!(top_k_indices(&v, 1), vec![1]); // |-5| largest
+        assert!(top_k_indices(&v, 0).is_empty());
+    }
+
+    #[test]
+    #[should_panic(expected = "k=5 > n=3")]
+    fn k_larger_than_n_panics() {
+        top_k_indices(&[1.0, 2.0, 3.0], 5);
+    }
+
+    #[test]
+    fn k_for_ratio_floors_and_clamps() {
+        assert_eq!(k_for_ratio(1000, 0.1), 100);
+        assert_eq!(k_for_ratio(1000, 0.0), 0);
+        assert_eq!(k_for_ratio(1000, 1e-9), 1); // floor at 1
+        assert_eq!(k_for_ratio(1000, 2.0), 1000); // clamp at n
+        assert_eq!(k_for_ratio(0, 0.5), 0);
+    }
+
+    #[test]
+    fn kth_magnitude_is_selection_threshold() {
+        let v = [0.1f32, -0.9, 0.5, 0.3, -0.7];
+        assert_eq!(kth_magnitude(&v, 1), 0.9);
+        assert_eq!(kth_magnitude(&v, 2), 0.7);
+        assert_eq!(kth_magnitude(&v, 5), 0.1);
+    }
+
+    #[test]
+    fn threshold_select_is_inclusive() {
+        let v = [0.5f32, -0.5, 0.4, 0.6];
+        assert_eq!(threshold_select(&v, 0.5), vec![0, 1, 3]);
+        assert_eq!(threshold_select(&v, 0.61), Vec::<u32>::new());
+        assert_eq!(threshold_select(&v, 0.0).len(), 4);
+    }
+
+    #[test]
+    fn property_topk_selects_maximal_mass() {
+        forall(
+            "top-k mass >= any other k-subset (checked vs sorted)",
+            100,
+            vec_f32(1..200, -100.0..100.0),
+            |v| {
+                let k = (v.len() / 3).max(1);
+                let idx = top_k_indices(v, k);
+                if idx.len() != k {
+                    return false;
+                }
+                let selected: f32 = idx.iter().map(|&i| v[i as usize].abs()).sum();
+                let naive: f32 = naive_top_k(v, k)
+                    .iter()
+                    .map(|&i| v[i as usize].abs())
+                    .sum();
+                (selected - naive).abs() <= naive.max(1.0) * 1e-5
+            },
+        );
+    }
+
+    #[test]
+    fn property_indices_sorted_unique_in_range() {
+        forall(
+            "indices sorted / unique / in range",
+            100,
+            vec_f32(1..300, -10.0..10.0),
+            |v| {
+                let k = (v.len() / 2).max(1);
+                let idx = top_k_indices(v, k);
+                idx.windows(2).all(|w| w[0] < w[1]) && idx.iter().all(|&i| (i as usize) < v.len())
+            },
+        );
+    }
+
+    #[test]
+    fn threshold_hint_exact_when_distribution_stable() {
+        let mut r = Pcg64::seeded(21);
+        let mut v = vec![0f32; 10_000];
+        r.fill_normal_f32(&mut v, 0.0, 1.0);
+        let k = 500;
+        let (_, kth) = top_k_with_threshold_hint(&v, k, None, 0.2);
+        // Slightly perturb the tensor (next "step") and reuse the threshold.
+        let mut v2 = v.clone();
+        for x in v2.iter_mut() {
+            *x += 0.01 * r.normal() as f32;
+        }
+        let (idx2, _) = top_k_with_threshold_hint(&v2, k, Some(kth), 0.2);
+        // Exactly k, always (the wire-size determinism contract).
+        assert_eq!(idx2.len(), k);
+        let exact = naive_top_k(&v2, idx2.len());
+        let got_mass: f32 = idx2.iter().map(|&i| v2[i as usize].abs()).sum();
+        let best_mass: f32 = exact.iter().map(|&i| v2[i as usize].abs()).sum();
+        assert!(got_mass >= best_mass * 0.999, "{got_mass} vs {best_mass}");
+    }
+
+    #[test]
+    fn threshold_hint_falls_back_when_stale() {
+        let v = vec![1.0f32; 100];
+        // Hint way too high → candidate set empty → exact fallback.
+        let (idx, _) = top_k_with_threshold_hint(&v, 10, Some(100.0), 0.2);
+        assert_eq!(idx.len(), 10);
+        // Hint way too low → candidate set = everything → exact fallback
+        // still returns exactly k.
+        let (idx, _) = top_k_with_threshold_hint(&v, 10, Some(1e-10), 0.2);
+        assert_eq!(idx.len(), 10);
+    }
+
+    #[test]
+    fn adversarial_sorted_input_is_fast_enough() {
+        // Guard against quadratic pivot behaviour: 1M sorted elements
+        // should select in well under a second.
+        let v: Vec<f32> = (0..1_000_000).map(|i| i as f32).collect();
+        let t = std::time::Instant::now();
+        let idx = top_k_indices(&v, 1000);
+        assert_eq!(idx.len(), 1000);
+        assert!(idx.contains(&999_999));
+        assert!(
+            t.elapsed() < std::time::Duration::from_secs(2),
+            "quickselect too slow: {:?}",
+            t.elapsed()
+        );
+    }
+}

@@ -1,0 +1,149 @@
+//! Typed experiment configuration, loadable from TOML files (see
+//! `configs/*.toml`) with CLI overrides layered on top.
+
+use crate::experiments::scenario::RunOpts;
+use crate::util::toml::TomlDoc;
+use anyhow::{anyhow, Result};
+use std::path::Path;
+
+/// Everything a `netsenseml train` run needs.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TrainConfig {
+    pub model: String,
+    pub strategy: String,
+    pub n_workers: usize,
+    pub batch_per_worker: usize,
+    pub bandwidth_mbps: f64,
+    pub prop_delay_ms: u64,
+    pub max_vtime_s: f64,
+    pub fidelity_every: usize,
+    pub seed: u64,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        TrainConfig {
+            model: "resnet18".to_string(),
+            strategy: "netsense".to_string(),
+            n_workers: 8,
+            batch_per_worker: 32,
+            bandwidth_mbps: 200.0,
+            prop_delay_ms: 10,
+            max_vtime_s: 600.0,
+            fidelity_every: 250,
+            seed: 42,
+        }
+    }
+}
+
+impl TrainConfig {
+    /// Load from a TOML file; missing keys keep their defaults.
+    pub fn from_toml_file(path: &Path) -> Result<TrainConfig> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow!("reading {}: {e}", path.display()))?;
+        Self::from_toml(&text)
+    }
+
+    pub fn from_toml(text: &str) -> Result<TrainConfig> {
+        let doc = TomlDoc::parse(text).map_err(|e| anyhow!("{e}"))?;
+        let mut c = TrainConfig::default();
+        if let Some(v) = doc.get_str("train.model") {
+            c.model = v.to_string();
+        }
+        if let Some(v) = doc.get_str("train.strategy") {
+            c.strategy = v.to_string();
+        }
+        if let Some(v) = doc.get_i64("train.n_workers") {
+            c.n_workers = v as usize;
+        }
+        if let Some(v) = doc.get_i64("train.batch_per_worker") {
+            c.batch_per_worker = v as usize;
+        }
+        if let Some(v) = doc.get_f64("net.bandwidth_mbps") {
+            c.bandwidth_mbps = v;
+        }
+        if let Some(v) = doc.get_i64("net.prop_delay_ms") {
+            c.prop_delay_ms = v as u64;
+        }
+        if let Some(v) = doc.get_f64("train.max_vtime_s") {
+            c.max_vtime_s = v;
+        }
+        if let Some(v) = doc.get_i64("train.fidelity_every") {
+            c.fidelity_every = v as usize;
+        }
+        if let Some(v) = doc.get_i64("train.seed") {
+            c.seed = v as u64;
+        }
+        c.validate()?;
+        Ok(c)
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.n_workers == 0 {
+            return Err(anyhow!("n_workers must be ≥ 1"));
+        }
+        if self.bandwidth_mbps <= 0.0 {
+            return Err(anyhow!("bandwidth_mbps must be positive"));
+        }
+        if crate::coordinator::SyncStrategy::parse(&self.strategy).is_none() {
+            return Err(anyhow!(
+                "unknown strategy `{}` (netsense|allreduce|topk[:r])",
+                self.strategy
+            ));
+        }
+        Ok(())
+    }
+
+    pub fn run_opts(&self) -> RunOpts {
+        RunOpts {
+            fast: false,
+            out_dir: None,
+            seed: self.seed,
+            n_workers: self.n_workers,
+            fidelity_every: self.fidelity_every,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_are_valid() {
+        TrainConfig::default().validate().unwrap();
+    }
+
+    #[test]
+    fn toml_overrides() {
+        let c = TrainConfig::from_toml(
+            r#"
+[train]
+model = "vgg16"
+strategy = "topk:0.05"
+n_workers = 4
+max_vtime_s = 120.5
+[net]
+bandwidth_mbps = 500
+prop_delay_ms = 25
+"#,
+        )
+        .unwrap();
+        assert_eq!(c.model, "vgg16");
+        assert_eq!(c.strategy, "topk:0.05");
+        assert_eq!(c.n_workers, 4);
+        assert_eq!(c.bandwidth_mbps, 500.0);
+        assert_eq!(c.prop_delay_ms, 25);
+        assert_eq!(c.max_vtime_s, 120.5);
+        // untouched default
+        assert_eq!(c.batch_per_worker, 32);
+    }
+
+    #[test]
+    fn rejects_bad_values() {
+        assert!(TrainConfig::from_toml("[train]\nstrategy = \"bogus\"").is_err());
+        assert!(TrainConfig::from_toml("[train]\nn_workers = 0").is_err());
+        assert!(TrainConfig::from_toml("[net]\nbandwidth_mbps = -5").is_err());
+        assert!(TrainConfig::from_toml("not toml at all").is_err());
+    }
+}

@@ -1,0 +1,24 @@
+//! The DDP coordinator — the paper's system layer. Owns the training loop,
+//! the gradient-synchronization strategies, and the interposition point
+//! where NetSenseML's sensing + adaptive compression replace the default
+//! all-reduce (the role of the paper's PyTorch DDP communication hook).
+//!
+//! - [`strategy`] — the three methods of the evaluation: `NetSense`,
+//!   `AllReduce` (dense ring), `TopK(r)` (static sparsification).
+//! - [`sync`] — one gradient-synchronization round: compress (per
+//!   strategy), move bytes on the simulated network, aggregate, and feed
+//!   the sensing controller.
+//! - [`sim_train`] — the virtual-time training driver for paper-scale
+//!   models (surrogate dynamics; used by every table/figure experiment).
+//! - [`real_train`] — the real-numerics driver: JAX/Pallas models through
+//!   the PJRT runtime with the network still simulated (the e2e example).
+
+pub mod real_train;
+pub mod sim_train;
+pub mod strategy;
+pub mod sync;
+
+pub use real_train::{RealTrainConfig, RealTrainer};
+pub use sim_train::{run_sim_training, SimTrainConfig};
+pub use strategy::SyncStrategy;
+pub use sync::{SyncEngine, SyncOutcome};

@@ -1,0 +1,148 @@
+//! Real-numerics training driver: the JAX/Pallas model (via the PJRT
+//! runtime) trained by N simulated DDP workers over the simulated network.
+//!
+//! DDP invariant exploited: replicas start identical and apply identical
+//! aggregated gradients, so a single parameter state stands for all
+//! replicas — per-worker state reduces to the data shard and the
+//! error-feedback residual (which [`SyncEngine`] already keeps per worker).
+//! Compute time is *measured* wall-clock (per-worker grad_step calls run
+//! sequentially and are averaged); network time is virtual.
+
+use super::strategy::SyncStrategy;
+use super::sync::SyncEngine;
+use crate::netsim::{NetSim, SimTime};
+use crate::runtime::{ModelRuntime, TrainState};
+use crate::trainer::data::SyntheticCifar;
+use crate::trainer::metrics::{StepRecord, TrainLog};
+use anyhow::Result;
+
+/// Configuration for a real-training run.
+#[derive(Clone, Debug)]
+pub struct RealTrainConfig {
+    pub n_workers: usize,
+    pub strategy: SyncStrategy,
+    pub steps: usize,
+    pub lr: f32,
+    /// Evaluate on the held-out batch every N steps.
+    pub eval_every: usize,
+    pub seed: u64,
+}
+
+impl Default for RealTrainConfig {
+    fn default() -> Self {
+        RealTrainConfig {
+            n_workers: 8,
+            strategy: SyncStrategy::NetSense,
+            steps: 200,
+            lr: 0.02,
+            eval_every: 10,
+            seed: 7,
+        }
+    }
+}
+
+/// The real-training coordinator.
+pub struct RealTrainer<'rt> {
+    runtime: &'rt ModelRuntime,
+    config: RealTrainConfig,
+    state: TrainState,
+    engine: SyncEngine,
+    workers_data: Vec<SyntheticCifar>,
+    eval_x: Vec<f32>,
+    eval_y: Vec<f32>,
+}
+
+impl<'rt> RealTrainer<'rt> {
+    pub fn new(runtime: &'rt ModelRuntime, config: RealTrainConfig) -> Result<Self> {
+        let mm = &runtime.manifest;
+        let state = runtime.init_state()?;
+        let engine = SyncEngine::new(config.strategy.clone(), config.n_workers, mm.total_params);
+        let dim: usize = mm.input_shape.iter().product();
+        let workers_data: Vec<SyntheticCifar> = (0..config.n_workers)
+            .map(|w| SyntheticCifar::new(mm.n_classes, dim, 1.0, config.seed + w as u64))
+            .collect();
+        // Held-out eval data from the shared prototype space.
+        let (eval_x, eval_y) = workers_data[0].eval_batch(mm.batch, 0xe7a1);
+        Ok(RealTrainer {
+            runtime,
+            config,
+            state,
+            engine,
+            workers_data,
+            eval_x,
+            eval_y,
+        })
+    }
+
+    pub fn state(&self) -> &TrainState {
+        &self.state
+    }
+
+    /// Evaluate accuracy (%) and loss on the held-out batch.
+    pub fn evaluate(&self) -> Result<(f64, f64)> {
+        let out = self
+            .runtime
+            .grad_step(&self.state, &self.eval_x, &self.eval_y)?;
+        let acc = 100.0 * out.n_correct as f64 / self.runtime.manifest.batch as f64;
+        Ok((acc, out.loss as f64))
+    }
+
+    /// Train for the configured number of steps over `sim`. Returns the
+    /// trace (virtual-time comm, measured compute, real loss/acc).
+    pub fn train(&mut self, sim: &mut NetSim) -> Result<TrainLog> {
+        let mm = &self.runtime.manifest;
+        let samples_per_step = self.config.n_workers * mm.batch;
+        let mut log = TrainLog::new(
+            &self.config.strategy.label(),
+            &mm.name,
+            samples_per_step,
+        );
+        let mut acc = 0.0;
+        let mut eval_loss;
+        for step in 0..self.config.steps {
+            // --- local compute: one grad_step per worker (real) ----------
+            let t0 = std::time::Instant::now();
+            let mut grads: Vec<Vec<f32>> = Vec::with_capacity(self.config.n_workers);
+            let mut train_loss = 0f64;
+            for w in 0..self.config.n_workers {
+                let (x, y) = self.workers_data[w].batch(mm.batch);
+                let out = self.runtime.grad_step(&self.state, &x, &y)?;
+                train_loss += out.loss as f64;
+                grads.push(out.flat_grad);
+            }
+            train_loss /= self.config.n_workers as f64;
+            // In a real deployment the workers run in parallel; the
+            // per-step compute time is the mean per-worker wall time.
+            let compute_s = t0.elapsed().as_secs_f64() / self.config.n_workers as f64;
+            sim.advance_by(SimTime::from_secs_f64(compute_s));
+
+            // --- gradient synchronization (real numerics + sim network) --
+            let weights = self.state.flat_params();
+            let outcome = self.engine.sync_full(sim, &grads, &weights);
+            let mean_grad = outcome.mean_grad.as_ref().expect("full sync has numerics");
+
+            // --- optimizer step (real, via PJRT) --------------------------
+            self.runtime
+                .apply_update(&mut self.state, mean_grad, self.config.lr)?;
+
+            // --- metrics ---------------------------------------------------
+            if step % self.config.eval_every == 0 || step + 1 == self.config.steps {
+                let (a, l) = self.evaluate()?;
+                acc = a;
+                eval_loss = l;
+                let _ = eval_loss;
+            }
+            log.push(StepRecord {
+                step,
+                vtime_s: sim.now().as_secs_f64(),
+                compute_s,
+                comm_s: outcome.comm.elapsed().as_secs_f64(),
+                ratio: outcome.ratio,
+                payload_bytes: outcome.max_payload(),
+                acc,
+                loss: train_loss,
+            });
+        }
+        Ok(log)
+    }
+}

@@ -1,0 +1,220 @@
+//! Virtual-time training driver for paper-scale models.
+//!
+//! Each step: advance the simulator by the model's compute time, run one
+//! synchronization round (full-fidelity on spot-check steps, predicted
+//! otherwise — see [`super::sync`]), advance the surrogate dynamics by the
+//! step's information quality, and record metrics. Wall-clock cost is
+//! dominated by the spot checks; a 4 000-step run at the default cadence
+//! finishes in seconds.
+
+use super::strategy::SyncStrategy;
+use super::sync::SyncEngine;
+use crate::netsim::{NetSim, SimTime};
+use crate::trainer::metrics::{StepRecord, TrainLog};
+use crate::trainer::models::PaperModel;
+use crate::trainer::surrogate::SurrogateTrainer;
+
+/// Configuration of one simulated training run.
+#[derive(Clone, Debug)]
+pub struct SimTrainConfig {
+    pub model: &'static PaperModel,
+    pub n_workers: usize,
+    pub batch_per_worker: usize,
+    pub strategy: SyncStrategy,
+    /// Stop when virtual time exceeds this (seconds).
+    pub max_vtime_s: f64,
+    /// Hard step cap (safety).
+    pub max_steps: usize,
+    /// Run full-fidelity compression every N steps (0 = never; first step
+    /// is always full when > 0).
+    pub fidelity_every: usize,
+    pub seed: u64,
+}
+
+impl SimTrainConfig {
+    pub fn new(model: &'static PaperModel, strategy: SyncStrategy) -> Self {
+        SimTrainConfig {
+            model,
+            n_workers: 8,
+            batch_per_worker: 32,
+            strategy,
+            max_vtime_s: 2000.0,
+            max_steps: 100_000,
+            fidelity_every: 250,
+            seed: 42,
+        }
+    }
+
+    pub fn samples_per_step(&self) -> usize {
+        self.n_workers * self.batch_per_worker
+    }
+}
+
+/// Run one simulated training job on the given network. Returns the trace.
+pub fn run_sim_training(config: &SimTrainConfig, sim: &mut NetSim) -> TrainLog {
+    assert_eq!(
+        sim.topology.n_workers(),
+        config.n_workers,
+        "topology/config worker mismatch"
+    );
+    let mut engine = SyncEngine::new(
+        config.strategy.clone(),
+        config.n_workers,
+        config.model.n_params,
+    );
+    // Surrogate state is only materialized when spot checks will run
+    // (it allocates n_workers full-size gradient tensors).
+    let mut surrogate = SurrogateTrainer::new(config.model, config.n_workers, config.seed);
+    let is_static = config.strategy.is_static_compression();
+    let compute = SimTime::from_secs_f64(config.model.compute_time_s);
+
+    let mut log = TrainLog::new(
+        &config.strategy.label(),
+        config.model.name,
+        config.samples_per_step(),
+    );
+
+    for step in 0..config.max_steps {
+        let t_before = sim.now();
+        // Local fwd+bwd.
+        sim.advance_by(compute);
+        // Gradient synchronization.
+        let full_fidelity =
+            config.fidelity_every > 0 && step % config.fidelity_every == 0;
+        let outcome = if full_fidelity {
+            let (grads, weights) = surrogate.grads_and_weights();
+            engine.sync_full(sim, grads, weights)
+        } else {
+            engine.sync_predicted(sim)
+        };
+        // Learning progress.
+        surrogate.advance(outcome.ratio, is_static);
+        let acc = surrogate.accuracy();
+        let vtime = sim.now();
+        log.push(StepRecord {
+            step,
+            vtime_s: vtime.as_secs_f64(),
+            compute_s: config.model.compute_time_s,
+            comm_s: outcome.comm.elapsed().as_secs_f64(),
+            ratio: outcome.ratio,
+            payload_bytes: outcome.max_payload(),
+            acc,
+            loss: surrogate.loss_proxy(),
+        });
+        let _ = t_before;
+        if vtime.as_secs_f64() >= config.max_vtime_s {
+            break;
+        }
+    }
+    log
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::netsim::schedule::mbps;
+    use crate::netsim::topology::StarTopology;
+    use crate::trainer::models::PAPER_MODELS;
+
+    fn resnet() -> &'static PaperModel {
+        &PAPER_MODELS[0]
+    }
+
+    fn star(n: usize, bw_mbps: f64) -> NetSim {
+        NetSim::quiet(StarTopology::constant(
+            n,
+            mbps(bw_mbps),
+            SimTime::from_millis(10),
+        ))
+    }
+
+    fn quick_config(strategy: SyncStrategy, vtime: f64) -> SimTrainConfig {
+        let mut c = SimTrainConfig::new(resnet(), strategy);
+        c.max_vtime_s = vtime;
+        c.fidelity_every = 0; // timing-only for test speed
+        c
+    }
+
+    #[test]
+    fn netsense_beats_baselines_at_200mbps() {
+        let horizon = 300.0;
+        let tp = |s: SyncStrategy| {
+            let c = quick_config(s, horizon);
+            let mut sim = star(8, 200.0);
+            run_sim_training(&c, &mut sim).mean_throughput()
+        };
+        let ns = tp(SyncStrategy::NetSense);
+        let ar = tp(SyncStrategy::AllReduce);
+        let tk = tp(SyncStrategy::TopK(0.1));
+        // The paper's headline: 1.55–9.84× over compression-enabled
+        // baselines under constrained bandwidth; check ordering + margin.
+        assert!(ns > 1.5 * ar, "NetSense {ns:.1} vs AllReduce {ar:.1}");
+        assert!(ns > 1.5 * tk, "NetSense {ns:.1} vs TopK {tk:.1}");
+        // TopK moves less data than dense AllReduce at 200 Mbps → faster.
+        assert!(tk > ar, "TopK {tk:.1} vs AllReduce {ar:.1}");
+    }
+
+    #[test]
+    fn netsense_throughput_roughly_flat_across_bandwidth() {
+        let tp = |bw: f64| {
+            let c = quick_config(SyncStrategy::NetSense, 300.0);
+            let mut sim = star(8, bw);
+            run_sim_training(&c, &mut sim).mean_throughput()
+        };
+        let at_200 = tp(200.0);
+        let at_800 = tp(800.0);
+        assert!(
+            at_200 > 0.4 * at_800,
+            "NetSense collapsed at low bandwidth: {at_200:.1} vs {at_800:.1}"
+        );
+    }
+
+    #[test]
+    fn allreduce_throughput_scales_with_bandwidth() {
+        let tp = |bw: f64| {
+            let c = quick_config(SyncStrategy::AllReduce, 300.0);
+            let mut sim = star(8, bw);
+            run_sim_training(&c, &mut sim).mean_throughput()
+        };
+        assert!(tp(800.0) > 2.0 * tp(200.0));
+    }
+
+    #[test]
+    fn accuracy_increases_over_run() {
+        let c = quick_config(SyncStrategy::NetSense, 400.0);
+        let mut sim = star(8, 500.0);
+        let log = run_sim_training(&c, &mut sim);
+        assert!(log.records.len() > 100);
+        let early = log.records[10].acc;
+        let late = log.records.last().unwrap().acc;
+        assert!(late > early + 5.0, "{early} → {late}");
+    }
+
+    #[test]
+    fn spot_checks_do_not_change_timing_statistics() {
+        // fidelity_every only affects numerics, not the controller or the
+        // virtual clock: the final vtime and step count must agree.
+        let mk = |fid: usize| {
+            let mut c = quick_config(SyncStrategy::NetSense, 60.0);
+            c.model = resnet();
+            c.fidelity_every = fid;
+            let mut sim = star(8, 200.0);
+            let log = run_sim_training(&c, &mut sim);
+            (log.records.len(), log.total_vtime())
+        };
+        let (steps_pred, t_pred) = mk(0);
+        let (steps_spot, t_spot) = mk(40);
+        assert_eq!(steps_pred, steps_spot);
+        let rel = (t_pred - t_spot).abs() / t_pred;
+        assert!(rel < 0.02, "vtime diverged: {t_pred} vs {t_spot}");
+    }
+
+    #[test]
+    fn respects_step_cap() {
+        let mut c = quick_config(SyncStrategy::AllReduce, 1e9);
+        c.max_steps = 7;
+        let mut sim = star(8, 1000.0);
+        let log = run_sim_training(&c, &mut sim);
+        assert_eq!(log.records.len(), 7);
+    }
+}

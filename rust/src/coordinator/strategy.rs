@@ -1,0 +1,108 @@
+//! Gradient-synchronization strategies (the paper's three methods).
+
+use crate::compress::CompressionConfig;
+use crate::sensing::ControllerConfig;
+
+/// Which synchronization method a run uses.
+#[derive(Clone, Debug, PartialEq)]
+pub enum SyncStrategy {
+    /// The paper's system: Algorithm 1 ratio control + Algorithm 2
+    /// compression, sparse all-gather transport.
+    NetSense,
+    /// Dense NCCL-style ring all-reduce (no compression).
+    AllReduce,
+    /// Static Top-K at the given ratio (the paper's TopK-0.1 baseline),
+    /// sparse all-gather transport, error feedback, no quantization or
+    /// pruning.
+    TopK(f64),
+}
+
+impl SyncStrategy {
+    /// Parse a CLI name: `netsense`, `allreduce`, `topk` or `topk:<r>`.
+    pub fn parse(s: &str) -> Option<SyncStrategy> {
+        match s {
+            "netsense" => Some(SyncStrategy::NetSense),
+            "allreduce" => Some(SyncStrategy::AllReduce),
+            "topk" => Some(SyncStrategy::TopK(0.1)),
+            _ => s
+                .strip_prefix("topk:")
+                .and_then(|r| r.parse::<f64>().ok())
+                .filter(|r| (0.0..=1.0).contains(r) && *r > 0.0)
+                .map(SyncStrategy::TopK),
+        }
+    }
+
+    /// Display name used in tables/figures.
+    pub fn label(&self) -> String {
+        match self {
+            SyncStrategy::NetSense => "NetSenseML".to_string(),
+            SyncStrategy::AllReduce => "AllReduce".to_string(),
+            SyncStrategy::TopK(r) => format!("TopK-{r}"),
+        }
+    }
+
+    /// Is this a *static* compression scheme (for the surrogate's
+    /// instability penalty)?
+    pub fn is_static_compression(&self) -> bool {
+        matches!(self, SyncStrategy::TopK(_))
+    }
+
+    /// The Algorithm-2 configuration this strategy uses (None for dense).
+    pub fn compression_config(&self) -> Option<CompressionConfig> {
+        match self {
+            SyncStrategy::NetSense => Some(CompressionConfig::default()),
+            SyncStrategy::AllReduce => None,
+            SyncStrategy::TopK(_) => Some(CompressionConfig {
+                quant_ratio_threshold: 0.0, // never quantize
+                enable_pruning: false,
+                error_feedback: true,
+                ..Default::default()
+            }),
+        }
+    }
+
+    /// The Algorithm-1 controller config (NetSense only).
+    pub fn controller_config(&self) -> Option<ControllerConfig> {
+        match self {
+            SyncStrategy::NetSense => Some(ControllerConfig::default()),
+            _ => None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_names() {
+        assert_eq!(SyncStrategy::parse("netsense"), Some(SyncStrategy::NetSense));
+        assert_eq!(SyncStrategy::parse("allreduce"), Some(SyncStrategy::AllReduce));
+        assert_eq!(SyncStrategy::parse("topk"), Some(SyncStrategy::TopK(0.1)));
+        assert_eq!(SyncStrategy::parse("topk:0.05"), Some(SyncStrategy::TopK(0.05)));
+        assert_eq!(SyncStrategy::parse("topk:0"), None);
+        assert_eq!(SyncStrategy::parse("topk:2.0"), None);
+        assert_eq!(SyncStrategy::parse("bogus"), None);
+    }
+
+    #[test]
+    fn labels() {
+        assert_eq!(SyncStrategy::NetSense.label(), "NetSenseML");
+        assert_eq!(SyncStrategy::TopK(0.1).label(), "TopK-0.1");
+    }
+
+    #[test]
+    fn configs_match_paper_baselines() {
+        assert!(SyncStrategy::AllReduce.compression_config().is_none());
+        let topk = SyncStrategy::TopK(0.1).compression_config().unwrap();
+        assert!(!topk.enable_pruning);
+        assert_eq!(topk.quant_ratio_threshold, 0.0);
+        assert!(topk.error_feedback);
+        let ns = SyncStrategy::NetSense.compression_config().unwrap();
+        assert!(ns.enable_pruning);
+        assert!(SyncStrategy::NetSense.controller_config().is_some());
+        assert!(SyncStrategy::TopK(0.1).controller_config().is_none());
+        assert!(SyncStrategy::TopK(0.1).is_static_compression());
+        assert!(!SyncStrategy::NetSense.is_static_compression());
+    }
+}

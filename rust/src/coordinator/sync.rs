@@ -1,0 +1,383 @@
+//! One gradient-synchronization round, per strategy: compress → transport
+//! on the simulated network → aggregate → feed the sensing controller.
+//!
+//! Two fidelities (DESIGN.md §6):
+//! - [`SyncEngine::sync_full`] — real numerics: per-worker Algorithm-2
+//!   compression of the actual gradient tensors, sparse aggregation, dense
+//!   reduction. Used every step on the real-training track and on
+//!   spot-check steps of surrogate runs.
+//! - [`SyncEngine::sync_predicted`] — timing-only: wire sizes come from
+//!   [`crate::compress::NetSenseCompressor::predict_wire_bytes`] (proven
+//!   byte-exact against `sync_full` in tests), so million-step sweeps cost
+//!   microseconds per step. The controller sees the identical observable
+//!   stream either way.
+
+use super::strategy::SyncStrategy;
+use crate::collectives::{ring_allgather, ring_allreduce, sum_sparse, CollectiveTiming};
+use crate::compress::{NetSenseCompressor, SparseGradient};
+use crate::netsim::NetSim;
+use crate::sensing::RatioController;
+
+/// Result of one synchronization round.
+#[derive(Clone, Debug)]
+pub struct SyncOutcome {
+    /// Mean gradient across workers (only from `sync_full`).
+    pub mean_grad: Option<Vec<f32>>,
+    /// Wire payload each worker contributed (bytes).
+    pub payload_bytes: Vec<u64>,
+    pub comm: CollectiveTiming,
+    /// Ratio used this round (1.0 for dense).
+    pub ratio: f64,
+    /// Did Algorithm 2 quantize this round?
+    pub quantized: bool,
+}
+
+impl SyncOutcome {
+    pub fn max_payload(&self) -> u64 {
+        self.payload_bytes.iter().copied().max().unwrap_or(0)
+    }
+}
+
+/// Per-run synchronization state (compressors, controller).
+pub struct SyncEngine {
+    pub strategy: SyncStrategy,
+    n_workers: usize,
+    n_params: usize,
+    controller: Option<RatioController>,
+    compression_cfg: Option<crate::compress::CompressionConfig>,
+    /// Lazily allocated — per-worker residual buffers are n_params f32
+    /// each, which timing-only runs never need.
+    compressors: Vec<NetSenseCompressor>,
+}
+
+impl SyncEngine {
+    pub fn new(strategy: SyncStrategy, n_workers: usize, n_params: usize) -> Self {
+        let controller = strategy.controller_config().map(RatioController::new);
+        let compression_cfg = strategy.compression_config();
+        SyncEngine {
+            strategy,
+            n_workers,
+            n_params,
+            controller,
+            compression_cfg,
+            compressors: Vec::new(),
+        }
+    }
+
+    fn ensure_compressors(&mut self) {
+        if self.compressors.is_empty() {
+            let cfg = self
+                .compression_cfg
+                .clone()
+                .expect("sparse strategy has a compression config");
+            self.compressors = (0..self.n_workers)
+                .map(|_| NetSenseCompressor::new(self.n_params, cfg.clone()))
+                .collect();
+        }
+    }
+
+    /// Wire bytes Algorithm 2 would produce at `ratio` (no allocation).
+    fn predict_wire(&self, ratio: f64) -> u64 {
+        let cfg = self
+            .compression_cfg
+            .as_ref()
+            .expect("sparse strategy has a compression config");
+        let ratio = ratio.clamp(0.0, 1.0);
+        let (eff, val_bytes) = if ratio < cfg.quant_ratio_threshold {
+            ((2.0 * ratio).min(1.0), 2u64)
+        } else {
+            (ratio, 4u64)
+        };
+        let k = crate::compress::topk::k_for_ratio(self.n_params, eff) as u64;
+        12 + k * (4 + val_bytes)
+    }
+
+    /// The ratio the next round will use.
+    pub fn current_ratio(&self) -> f64 {
+        match &self.strategy {
+            SyncStrategy::NetSense => self.controller.as_ref().unwrap().ratio(),
+            SyncStrategy::AllReduce => 1.0,
+            SyncStrategy::TopK(r) => *r,
+        }
+    }
+
+    pub fn controller(&self) -> Option<&RatioController> {
+        self.controller.as_ref()
+    }
+
+    /// Mean residual norm across workers (compression-health metric).
+    pub fn mean_residual_norm(&self) -> f64 {
+        if self.compressors.is_empty() {
+            return 0.0;
+        }
+        self.compressors
+            .iter()
+            .map(NetSenseCompressor::residual_norm)
+            .sum::<f64>()
+            / self.compressors.len() as f64
+    }
+
+    /// Full-fidelity synchronization of per-worker gradients.
+    ///
+    /// `weights` is the flat parameter vector (identical across replicas),
+    /// used by Algorithm 2's pruning step.
+    pub fn sync_full(
+        &mut self,
+        sim: &mut NetSim,
+        grads: &[Vec<f32>],
+        weights: &[f32],
+    ) -> SyncOutcome {
+        assert_eq!(grads.len(), self.n_workers, "one gradient per worker");
+        match self.strategy.clone() {
+            SyncStrategy::AllReduce => {
+                let dense_bytes = 4 * self.n_params as u64;
+                let comm = ring_allreduce(sim, dense_bytes);
+                // Numeric: mean of the dense gradients.
+                let mut acc = grads[0].clone();
+                let others: Vec<&[f32]> = grads[1..].iter().map(|g| g.as_slice()).collect();
+                crate::collectives::mean_dense(&mut acc, &others);
+                SyncOutcome {
+                    mean_grad: Some(acc),
+                    payload_bytes: vec![dense_bytes; self.n_workers],
+                    comm,
+                    ratio: 1.0,
+                    quantized: false,
+                }
+            }
+            SyncStrategy::NetSense | SyncStrategy::TopK(_) => {
+                self.ensure_compressors();
+                let ratio = self.current_ratio();
+                let mut payloads: Vec<SparseGradient> = Vec::with_capacity(self.n_workers);
+                let mut quantized = false;
+                for (w, grad) in grads.iter().enumerate() {
+                    let out = self.compressors[w].compress(grad, weights, ratio);
+                    quantized |= out.quantized;
+                    payloads.push(out.payload);
+                }
+                let bytes: Vec<u64> = payloads.iter().map(SparseGradient::wire_bytes).collect();
+                let comm = ring_allgather(sim, &bytes);
+                // Numeric: every worker materializes the mean of all
+                // payloads (all-gather → local sum).
+                let mut acc = sum_sparse(self.n_params, &payloads);
+                let scale = 1.0 / self.n_workers as f32;
+                for a in acc.iter_mut() {
+                    *a *= scale;
+                }
+                self.observe(&bytes, &comm);
+                SyncOutcome {
+                    mean_grad: Some(acc),
+                    payload_bytes: bytes,
+                    comm,
+                    ratio,
+                    quantized,
+                }
+            }
+        }
+    }
+
+    /// Timing-only synchronization (surrogate fast path): identical wire
+    /// sizes and controller observations, no tensor math.
+    pub fn sync_predicted(&mut self, sim: &mut NetSim) -> SyncOutcome {
+        match self.strategy.clone() {
+            SyncStrategy::AllReduce => {
+                let dense_bytes = 4 * self.n_params as u64;
+                let comm = ring_allreduce(sim, dense_bytes);
+                SyncOutcome {
+                    mean_grad: None,
+                    payload_bytes: vec![dense_bytes; self.n_workers],
+                    comm,
+                    ratio: 1.0,
+                    quantized: false,
+                }
+            }
+            SyncStrategy::NetSense | SyncStrategy::TopK(_) => {
+                let ratio = self.current_ratio();
+                let wire = self.predict_wire(ratio);
+                let bytes = vec![wire; self.n_workers];
+                let comm = ring_allgather(sim, &bytes);
+                self.observe(&bytes, &comm);
+                let quantized = ratio
+                    < self
+                        .compression_cfg
+                        .as_ref()
+                        .map(|c| c.quant_ratio_threshold)
+                        .unwrap_or(0.0);
+                SyncOutcome {
+                    mean_grad: None,
+                    payload_bytes: bytes,
+                    comm,
+                    ratio,
+                    quantized,
+                }
+            }
+        }
+    }
+
+    /// Feed the Algorithm-1 controller with this round's observables.
+    fn observe(&mut self, payload_bytes: &[u64], comm: &CollectiveTiming) {
+        if let Some(ctl) = self.controller.as_mut() {
+            let data_size = payload_bytes.iter().copied().max().unwrap_or(0).max(1);
+            ctl.on_interval(data_size, comm.elapsed(), false);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::netsim::schedule::mbps;
+    use crate::netsim::topology::StarTopology;
+    use crate::netsim::SimTime;
+    use crate::util::rng::Pcg64;
+
+    const N: usize = 4;
+    const P: usize = 10_000;
+
+    fn sim(bw: f64) -> NetSim {
+        NetSim::quiet(StarTopology::constant(N, mbps(bw), SimTime::from_millis(5)))
+    }
+
+    fn grads(seed: u64) -> Vec<Vec<f32>> {
+        (0..N)
+            .map(|w| {
+                let mut r = Pcg64::new(seed, w as u64);
+                let mut g = vec![0f32; P];
+                r.fill_normal_f32(&mut g, 0.0, 1.0);
+                g
+            })
+            .collect()
+    }
+
+    fn weights() -> Vec<f32> {
+        let mut r = Pcg64::seeded(99);
+        let mut w = vec![0f32; P];
+        r.fill_normal_f32(&mut w, 0.0, 0.1);
+        w
+    }
+
+    #[test]
+    fn allreduce_mean_is_exact() {
+        let mut eng = SyncEngine::new(SyncStrategy::AllReduce, N, P);
+        let gs = grads(1);
+        let out = eng.sync_full(&mut sim(1000.0), &gs, &weights());
+        let mean = out.mean_grad.unwrap();
+        for i in (0..P).step_by(997) {
+            let want: f32 = gs.iter().map(|g| g[i]).sum::<f32>() / N as f32;
+            assert!((mean[i] - want).abs() < 1e-5);
+        }
+        assert_eq!(out.ratio, 1.0);
+        assert_eq!(out.payload_bytes, vec![4 * P as u64; N]);
+    }
+
+    #[test]
+    fn topk_payload_matches_static_ratio() {
+        let mut eng = SyncEngine::new(SyncStrategy::TopK(0.1), N, P);
+        let out = eng.sync_full(&mut sim(1000.0), &grads(2), &weights());
+        let k = (P as f64 * 0.1) as u64;
+        for &b in &out.payload_bytes {
+            assert_eq!(b, 12 + k * 8);
+        }
+        assert!(!out.quantized);
+        // mean_grad is sparse-ish: at most N·k nonzeros
+        let nnz = out
+            .mean_grad
+            .unwrap()
+            .iter()
+            .filter(|&&x| x != 0.0)
+            .count();
+        assert!(nnz <= N * k as usize);
+        assert!(nnz >= k as usize);
+    }
+
+    #[test]
+    fn netsense_controller_advances() {
+        let mut eng = SyncEngine::new(SyncStrategy::NetSense, N, P);
+        let w = weights();
+        let r0 = eng.current_ratio();
+        for seed in 0..5 {
+            eng.sync_full(&mut sim(100.0), &grads(seed), &w);
+        }
+        assert_eq!(eng.controller().unwrap().intervals(), 5);
+        // Startup ramp should have moved the ratio off its initial value.
+        assert_ne!(eng.current_ratio(), r0);
+    }
+
+    #[test]
+    fn predicted_wire_bytes_match_full_fidelity() {
+        // The fast path must be byte-exact vs the full path for both
+        // sparse strategies, across the quantization boundary.
+        for strat in [SyncStrategy::TopK(0.1), SyncStrategy::NetSense] {
+            let mut full = SyncEngine::new(strat.clone(), N, P);
+            let mut pred = SyncEngine::new(strat.clone(), N, P);
+            let w = weights();
+            for seed in 0..8 {
+                let a = full.sync_full(&mut sim(50.0), &grads(seed), &w);
+                let b = pred.sync_predicted(&mut sim(50.0));
+                assert_eq!(
+                    a.payload_bytes, b.payload_bytes,
+                    "{strat:?} seed {seed}: {} vs {}",
+                    a.payload_bytes[0], b.payload_bytes[0]
+                );
+                assert_eq!(a.ratio, b.ratio, "{strat:?} ratio diverged");
+            }
+        }
+    }
+
+    #[test]
+    fn lower_bandwidth_means_longer_comm() {
+        // Use a serialization-dominated payload (10 M params ≈ 40 MB dense)
+        // so the bandwidth difference is visible past the propagation floor.
+        let big = 10_000_000usize;
+        let mut a = SyncEngine::new(SyncStrategy::AllReduce, N, big);
+        let mut b = SyncEngine::new(SyncStrategy::AllReduce, N, big);
+        let t_fast = a.sync_predicted(&mut sim(1000.0)).comm.elapsed();
+        let t_slow = b.sync_predicted(&mut sim(100.0)).comm.elapsed();
+        assert!(t_slow.as_secs_f64() > 5.0 * t_fast.as_secs_f64());
+    }
+
+    #[test]
+    fn netsense_payload_shrinks_under_congestion() {
+        // On a slow link the controller must cut payloads far below dense.
+        let mut eng = SyncEngine::new(SyncStrategy::NetSense, N, P);
+        let mut s = sim(10.0);
+        let mut last = 0u64;
+        for _ in 0..40 {
+            let out = eng.sync_predicted(&mut s);
+            s.advance_by(SimTime::from_millis(300)); // compute gap
+            last = out.max_payload();
+        }
+        assert!(
+            last < 4 * P as u64 / 2,
+            "payload {last} not reduced vs dense {}",
+            4 * P
+        );
+    }
+
+    #[test]
+    fn error_feedback_keeps_sparse_mean_unbiased_over_time() {
+        // Summed over many rounds, the sparse-aggregated means must track
+        // the dense means (error feedback drains everything eventually).
+        let mut eng = SyncEngine::new(SyncStrategy::TopK(0.25), N, P);
+        let w = weights();
+        let gs = grads(7); // constant gradients each round
+        let mut sparse_sum = vec![0f64; P];
+        let rounds = 30;
+        for _ in 0..rounds {
+            let out = eng.sync_full(&mut sim(1000.0), &gs, &w);
+            for (s, &v) in sparse_sum.iter_mut().zip(out.mean_grad.as_ref().unwrap()) {
+                *s += v as f64;
+            }
+        }
+        let mut err = 0f64;
+        let mut mag = 0f64;
+        for i in 0..P {
+            let dense_mean: f64 =
+                gs.iter().map(|g| g[i] as f64).sum::<f64>() / N as f64;
+            let want = dense_mean * rounds as f64;
+            err += (sparse_sum[i] - want).abs();
+            mag += want.abs();
+        }
+        // Within a couple of rounds' worth of residual.
+        assert!(err / mag < 0.15, "relative drift {}", err / mag);
+    }
+}

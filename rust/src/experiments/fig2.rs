@@ -1,0 +1,148 @@
+//! Fig. 2 — Network status sensing: RTT and delivery rate vs in-flight
+//! payload size on a known link, with the app-limited / bandwidth-limited
+//! knee at the BDP.
+//!
+//! The runner sweeps payload sizes across a link with known ground truth
+//! (BtlBw, RTprop) and reports the measured RTT and delivery rate at each
+//! size, plus what the [`crate::sensing::BandwidthEstimator`] recovered —
+//! the estimator-vs-truth check the paper's testbed cannot do.
+
+use super::report::Table;
+use super::scenario::RunOpts;
+use crate::netsim::schedule::mbps;
+use crate::netsim::topology::StarTopology;
+use crate::netsim::{NetSim, SimTime};
+use crate::sensing::{BandwidthEstimator, EstimatorConfig};
+
+pub struct Fig2Result {
+    /// (payload_bytes, rtt_ms, delivery_rate_mbps)
+    pub points: Vec<(u64, f64, f64)>,
+    pub true_btlbw_mbps: f64,
+    pub true_rtprop_ms: f64,
+    pub est_btlbw_mbps: f64,
+    pub est_rtprop_ms: f64,
+    pub est_bdp_bytes: f64,
+}
+
+pub fn fig2(opts: &RunOpts) -> (Table, Fig2Result) {
+    let bw = mbps(200.0);
+    let prop = SimTime::from_millis(20);
+    let mut est = BandwidthEstimator::new(EstimatorConfig {
+        btlbw_window: 1000,
+        rtprop_window: 1000,
+    });
+    let mut points = Vec::new();
+    let mut size = 16_384u64; // 16 kB → ~64 MB sweep
+    let mut table = Table::new(
+        "Fig 2: sensing sweep on a 200 Mbps / 40 ms-RTprop path",
+        &["Payload", "RTT (ms)", "Delivery rate (Mbps)", "Regime"],
+    );
+    // Path: two hops of 200 Mbps with 20 ms each → effective payload
+    // bandwidth 100 Mbps, RTprop 40 ms, BDP = 100 Mbps × 40 ms = 500 kB.
+    let true_btlbw = bw / 2.0;
+    let true_rtprop_ms = 40.0;
+    let bdp_bytes = true_btlbw / 8.0 * (true_rtprop_ms / 1e3);
+    while size <= 64 << 20 {
+        // Fresh quiet network per probe: independent measurements.
+        let mut sim = NetSim::quiet(StarTopology::uniform(
+            2,
+            crate::netsim::link::LinkConfig::new(
+                crate::netsim::schedule::BandwidthSchedule::constant(bw),
+                prop,
+            ),
+        ));
+        let r = sim.transfer(0, 1, size);
+        let rtt_ms = r.rtt().as_millis_f64();
+        let rate_mbps = size as f64 * 8.0 / (r.rtt().as_secs_f64() * 1e6);
+        est.observe(size, r.rtt());
+        let regime = if (size as f64) < bdp_bytes {
+            "app-limited"
+        } else {
+            "bandwidth-limited"
+        };
+        table.row(vec![
+            human_bytes(size),
+            format!("{rtt_ms:.1}"),
+            format!("{rate_mbps:.1}"),
+            regime.to_string(),
+        ]);
+        points.push((size, rtt_ms, rate_mbps));
+        size *= 2;
+    }
+    let e = est.estimate().unwrap();
+    let result = Fig2Result {
+        points,
+        true_btlbw_mbps: true_btlbw / 1e6,
+        true_rtprop_ms,
+        est_btlbw_mbps: e.btlbw_bytes_per_sec * 8.0 / 1e6,
+        est_rtprop_ms: e.rtprop.as_millis_f64(),
+        est_bdp_bytes: e.bdp_bytes,
+    };
+    if let Some(dir) = &opts.out_dir {
+        std::fs::create_dir_all(dir).ok();
+        let series = vec![
+            (
+                "rtt_ms".to_string(),
+                result
+                    .points
+                    .iter()
+                    .map(|&(s, r, _)| (s as f64, r))
+                    .collect::<Vec<_>>(),
+            ),
+            (
+                "rate_mbps".to_string(),
+                result
+                    .points
+                    .iter()
+                    .map(|&(s, _, d)| (s as f64, d))
+                    .collect::<Vec<_>>(),
+            ),
+        ];
+        super::report::write_series_csv(&dir.join("fig2.csv"), "payload_bytes", "value", &series)
+            .ok();
+    }
+    (table, result)
+}
+
+fn human_bytes(b: u64) -> String {
+    if b >= 1 << 20 {
+        format!("{:.0} MB", b as f64 / (1 << 20) as f64)
+    } else {
+        format!("{:.0} kB", b as f64 / 1024.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sweep_shows_bbr_knee_and_estimator_recovers_truth() {
+        let (_, r) = fig2(&RunOpts::default());
+        // App-limited regime: RTT flat at RTprop, rate grows with size.
+        let small = &r.points[0];
+        let smallish = &r.points[2];
+        assert!((small.1 - r.true_rtprop_ms).abs() < 3.0, "rtt {}", small.1);
+        assert!(smallish.2 > small.2 * 2.0, "rate should grow app-limited");
+        // Bandwidth-limited regime: rate saturates at BtlBw, RTT grows.
+        let big = r.points.last().unwrap();
+        assert!(
+            (big.2 - r.true_btlbw_mbps).abs() / r.true_btlbw_mbps < 0.1,
+            "rate {} vs true {}",
+            big.2,
+            r.true_btlbw_mbps
+        );
+        assert!(big.1 > 10.0 * r.true_rtprop_ms);
+        // Estimator vs ground truth.
+        assert!(
+            (r.est_btlbw_mbps - r.true_btlbw_mbps).abs() / r.true_btlbw_mbps < 0.1,
+            "est btlbw {} vs {}",
+            r.est_btlbw_mbps,
+            r.true_btlbw_mbps
+        );
+        assert!((r.est_rtprop_ms - r.true_rtprop_ms).abs() < 3.0);
+        // BDP estimate within 2× of truth (windowed max/min interplay).
+        let true_bdp = r.true_btlbw_mbps * 1e6 / 8.0 * (r.true_rtprop_ms / 1e3);
+        assert!(r.est_bdp_bytes > 0.4 * true_bdp && r.est_bdp_bytes < 2.5 * true_bdp);
+    }
+}

@@ -1,0 +1,98 @@
+//! Fig. 3 — Adaptive quantization based on L2 norm: the Algorithm-2
+//! decision surface. For a grid of (ratio, gradient-energy) operating
+//! points, show whether quantization fires, the effective ratio, the
+//! pruning rate, and the resulting wire size — the figure's flowchart as a
+//! table.
+
+use super::report::Table;
+use super::scenario::RunOpts;
+use crate::compress::{CompressionConfig, NetSenseCompressor};
+use crate::util::rng::Pcg64;
+
+pub struct Fig3Row {
+    pub ratio: f64,
+    pub grad_scale: f32,
+    pub quantized: bool,
+    pub effective_ratio: f64,
+    pub pruning_rate: f64,
+    pub wire_bytes: u64,
+}
+
+pub fn fig3(_opts: &RunOpts) -> (Table, Vec<Fig3Row>) {
+    let n = 100_000usize;
+    let mut rng = Pcg64::seeded(3);
+    let mut base = vec![0f32; n];
+    rng.fill_normal_f32(&mut base, 0.0, 1.0);
+    let mut weights = vec![0f32; n];
+    rng.fill_normal_f32(&mut weights, 0.0, 0.1);
+
+    let mut table = Table::new(
+        "Fig 3: adaptive quantization decisions (tr_q = 0.05, tr_d = 1e-3)",
+        &[
+            "Ratio",
+            "||g||2",
+            "Quantized?",
+            "Effective ratio",
+            "Pruning rate",
+            "Wire bytes",
+            "Dense bytes",
+        ],
+    );
+    let mut rows = Vec::new();
+    for &ratio in &[0.2, 0.1, 0.05, 0.04, 0.02, 0.01, 0.005] {
+        for &scale in &[1.0f32, 1e-6] {
+            // fresh compressor: no residual carry-over between cells
+            let mut c = NetSenseCompressor::new(n, CompressionConfig::default());
+            let g: Vec<f32> = base.iter().map(|&x| x * scale).collect();
+            let out = c.compress(&g, &weights, ratio);
+            table.row(vec![
+                format!("{ratio}"),
+                format!("{:.2e}", out.grad_l2),
+                if out.quantized { "yes (f32→f16)" } else { "no" }.to_string(),
+                format!("{:.3}", out.effective_ratio),
+                format!("{:.3}", out.pruning_rate),
+                out.wire_bytes.to_string(),
+                out.dense_bytes.to_string(),
+            ]);
+            rows.push(Fig3Row {
+                ratio,
+                grad_scale: scale,
+                quantized: out.quantized,
+                effective_ratio: out.effective_ratio,
+                pruning_rate: out.pruning_rate,
+                wire_bytes: out.wire_bytes,
+            });
+        }
+    }
+    (table, rows)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn decision_surface_matches_algorithm2() {
+        let (_, rows) = fig3(&RunOpts::default());
+        for r in &rows {
+            let should_quantize = r.ratio < 0.05 && r.grad_scale > 1e-5;
+            assert_eq!(
+                r.quantized, should_quantize,
+                "ratio {} scale {}",
+                r.ratio, r.grad_scale
+            );
+            if r.quantized {
+                assert!((r.effective_ratio - (2.0 * r.ratio).min(1.0)).abs() < 1e-12);
+            } else {
+                assert!((r.effective_ratio - r.ratio).abs() < 1e-12);
+            }
+            // Pruning rate rule on the effective ratio.
+            assert!((r.pruning_rate - 0.5 * (1.0 - r.effective_ratio)).abs() < 1e-9);
+        }
+        // Quantization halves the per-element wire cost: compare the two
+        // 0.04-ratio rows (quantized) against 0.1-ratio (not).
+        let q = rows.iter().find(|r| r.ratio == 0.04 && r.quantized).unwrap();
+        // effective 0.08 → nnz = 8000, 6 B each + 12 header
+        assert_eq!(q.wire_bytes, 12 + 8000 * 6);
+    }
+}

@@ -1,0 +1,110 @@
+//! Fig. 8 — Training throughput under fluctuating bandwidth with competing
+//! (iperf-like) traffic. Reports per-window mean throughput over time and a
+//! stability summary (the paper's claim is NetSenseML's visibly steadier
+//! series).
+
+use super::report::{f1, write_series_csv, Table};
+use super::scenario::{RunOpts, Scenario};
+use crate::coordinator::{run_sim_training, SimTrainConfig, SyncStrategy};
+use crate::trainer::metrics::TrainLog;
+use crate::trainer::models::PaperModel;
+use crate::util::stats::Summary;
+
+pub struct FluctuatingResult {
+    pub logs: Vec<TrainLog>,
+    /// Per-method (window_end_s, throughput) series.
+    pub series: Vec<(String, Vec<(f64, f64)>)>,
+    /// Per-method coefficient of variation of the windowed throughput.
+    pub cv: Vec<(String, f64)>,
+}
+
+pub fn fig8(opts: &RunOpts) -> (Table, FluctuatingResult) {
+    let model = PaperModel::by_name("resnet18").unwrap();
+    let horizon = opts.horizon(1200.0);
+    let window = horizon / 24.0;
+    let mut logs = Vec::new();
+    for strategy in [
+        SyncStrategy::NetSense,
+        SyncStrategy::AllReduce,
+        SyncStrategy::TopK(0.1),
+    ] {
+        let mut config = SimTrainConfig::new(model, strategy);
+        config.n_workers = opts.n_workers;
+        config.max_vtime_s = horizon;
+        config.fidelity_every = opts.fidelity_every;
+        config.seed = opts.seed;
+        let mut sim = Scenario::fluctuating(opts.n_workers, opts.seed);
+        logs.push(run_sim_training(&config, &mut sim));
+    }
+
+    let mut series: Vec<(String, Vec<(f64, f64)>)> =
+        logs.iter().map(|l| (l.method.clone(), Vec::new())).collect();
+    let n_windows = 24usize;
+    for w in 0..n_windows {
+        let t0 = window * w as f64;
+        let t1 = window * (w + 1) as f64;
+        for (log, serie) in logs.iter().zip(series.iter_mut()) {
+            if let Some(tp) = log.throughput_in_window(t0, t1) {
+                serie.1.push((t1, tp));
+            }
+        }
+    }
+    // Stability: coefficient of variation of windowed throughput,
+    // excluding each method's first two windows (warm-up).
+    let mut cv = Vec::new();
+    let mut table = Table::new(
+        "Fig 8: Throughput under fluctuating bandwidth + competing traffic, ResNet18",
+        &["Method", "Mean Throughput", "Std", "CV (stability; lower=steadier)"],
+    );
+    for (name, points) in &series {
+        let ys: Vec<f64> = points.iter().skip(2).map(|&(_, y)| y).collect();
+        let s = Summary::of(&ys).unwrap_or(Summary {
+            n: 0,
+            mean: 0.0,
+            std: 0.0,
+            min: 0.0,
+            max: 0.0,
+            p50: 0.0,
+            p90: 0.0,
+            p99: 0.0,
+        });
+        let c = if s.mean > 0.0 { s.std / s.mean } else { f64::INFINITY };
+        cv.push((name.clone(), c));
+        table.row(vec![name.clone(), f1(s.mean), f1(s.std), format!("{c:.3}")]);
+    }
+    if let Some(dir) = &opts.out_dir {
+        std::fs::create_dir_all(dir).ok();
+        write_series_csv(&dir.join("fig8.csv"), "time_s", "throughput", &series).ok();
+    }
+    (table, FluctuatingResult { logs, series, cv })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn netsense_is_steadier_and_faster_than_baselines() {
+        let opts = RunOpts {
+            fast: true,
+            fidelity_every: 0,
+            ..Default::default()
+        };
+        let (_, result) = fig8(&opts);
+        let cv_of = |m: &str| result.cv.iter().find(|(n, _)| n == m).unwrap().1;
+        let mean_of = |m: &str| {
+            let pts = &result.series.iter().find(|(n, _)| n == m).unwrap().1;
+            pts.iter().skip(2).map(|&(_, y)| y).sum::<f64>() / (pts.len() - 2) as f64
+        };
+        // Throughput: NetSenseML leads under interference.
+        assert!(mean_of("NetSenseML") > mean_of("AllReduce"));
+        assert!(mean_of("NetSenseML") > mean_of("TopK-0.1"));
+        // Stability: NetSenseML's CV is not worse than AllReduce's.
+        assert!(
+            cv_of("NetSenseML") <= cv_of("AllReduce") * 1.2,
+            "NS cv {} vs AR cv {}",
+            cv_of("NetSenseML"),
+            cv_of("AllReduce")
+        );
+    }
+}

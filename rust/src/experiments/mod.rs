@@ -1,0 +1,26 @@
+//! Experiment harness: one runner per paper table/figure (DESIGN.md §5).
+//!
+//! | Runner        | Paper artifact                                   |
+//! |---------------|--------------------------------------------------|
+//! | [`fig2`]      | Fig. 2 — sensing: RTT & delivery rate vs payload |
+//! | [`fig3`]      | Fig. 3 — adaptive-quantization decision table    |
+//! | [`tta`] (fig5/fig6) | Figs. 5–6 — TTA curves per bandwidth       |
+//! | [`tables`] (table1/table2) | Tables 1–2 — acc/throughput/conv  |
+//! | [`degrading`] | Fig. 7 — throughput under degrading bandwidth    |
+//! | [`fluctuating`] | Fig. 8 — throughput under competing traffic    |
+//!
+//! Every runner prints a markdown table (and optionally CSV curves) built
+//! with [`report`]; scenarios come from [`scenario`].
+
+pub mod ablation;
+pub mod degrading;
+pub mod fig2;
+pub mod fig3;
+pub mod fluctuating;
+pub mod report;
+pub mod scenario;
+pub mod tables;
+pub mod tta;
+
+pub use report::Table;
+pub use scenario::{RunOpts, Scenario};

@@ -1,0 +1,160 @@
+//! Result tables: markdown rendering (what the CLI prints) and CSV export
+//! (what figures are plotted from).
+
+use std::io::Write;
+use std::path::Path;
+
+/// A simple result table.
+#[derive(Clone, Debug, Default)]
+pub struct Table {
+    pub title: String,
+    pub headers: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, headers: &[&str]) -> Table {
+        Table {
+            title: title.to_string(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.headers.len(), "row width mismatch");
+        self.rows.push(cells);
+    }
+
+    /// Render as GitHub-flavored markdown with aligned columns.
+    pub fn to_markdown(&self) -> String {
+        let mut widths: Vec<usize> = self.headers.iter().map(String::len).collect();
+        for row in &self.rows {
+            for (w, cell) in widths.iter_mut().zip(row) {
+                *w = (*w).max(cell.len());
+            }
+        }
+        let mut out = format!("\n### {}\n\n", self.title);
+        let fmt_row = |cells: &[String], widths: &[usize]| -> String {
+            let mut line = String::from("|");
+            for (cell, w) in cells.iter().zip(widths) {
+                line.push_str(&format!(" {cell:<w$} |"));
+            }
+            line.push('\n');
+            line
+        };
+        out.push_str(&fmt_row(&self.headers, &widths));
+        out.push('|');
+        for w in &widths {
+            out.push_str(&format!("{}|", "-".repeat(w + 2)));
+        }
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row, &widths));
+        }
+        out
+    }
+
+    /// Write as CSV.
+    pub fn write_csv(&self, path: &Path) -> std::io::Result<()> {
+        let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+        writeln!(f, "{}", self.headers.join(","))?;
+        for row in &self.rows {
+            writeln!(f, "{}", row.join(","))?;
+        }
+        Ok(())
+    }
+
+    pub fn print(&self) {
+        println!("{}", self.to_markdown());
+    }
+}
+
+/// Format helpers shared by the runners.
+pub fn f1(x: f64) -> String {
+    format!("{x:.1}")
+}
+
+pub fn f2(x: f64) -> String {
+    format!("{x:.2}")
+}
+
+pub fn opt_time(x: Option<f64>) -> String {
+    match x {
+        Some(t) => format!("{t:.0}"),
+        None => "N/A".to_string(),
+    }
+}
+
+/// Write a set of (x, y) series as a long-format CSV: `series,x,y`.
+pub fn write_series_csv(
+    path: &Path,
+    xlabel: &str,
+    ylabel: &str,
+    series: &[(String, Vec<(f64, f64)>)],
+) -> std::io::Result<()> {
+    let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+    writeln!(f, "series,{xlabel},{ylabel}")?;
+    for (name, points) in series {
+        for (x, y) in points {
+            writeln!(f, "{name},{x},{y}")?;
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn markdown_renders_aligned() {
+        let mut t = Table::new("Demo", &["Method", "Throughput"]);
+        t.row(vec!["NetSenseML".into(), "642.90".into()]);
+        t.row(vec!["AllReduce".into(), "42.20".into()]);
+        let md = t.to_markdown();
+        assert!(md.contains("### Demo"));
+        assert!(md.contains("| NetSenseML |"));
+        assert!(md.lines().filter(|l| l.starts_with('|')).count() == 4);
+    }
+
+    #[test]
+    #[should_panic(expected = "row width mismatch")]
+    fn row_width_checked() {
+        let mut t = Table::new("x", &["a", "b"]);
+        t.row(vec!["only-one".into()]);
+    }
+
+    #[test]
+    fn csv_export() {
+        let mut t = Table::new("x", &["a", "b"]);
+        t.row(vec!["1".into(), "2".into()]);
+        let p = std::env::temp_dir().join("netsense_table_test.csv");
+        t.write_csv(&p).unwrap();
+        assert_eq!(std::fs::read_to_string(&p).unwrap(), "a,b\n1,2\n");
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn series_csv() {
+        let p = std::env::temp_dir().join("netsense_series_test.csv");
+        write_series_csv(
+            &p,
+            "t",
+            "acc",
+            &[("ns".to_string(), vec![(1.0, 2.0), (3.0, 4.0)])],
+        )
+        .unwrap();
+        let text = std::fs::read_to_string(&p).unwrap();
+        assert!(text.contains("ns,1,2"));
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn fmt_helpers() {
+        assert_eq!(f1(1.25), "1.2");
+        assert_eq!(f2(1.256), "1.26");
+        assert_eq!(opt_time(None), "N/A");
+        assert_eq!(opt_time(Some(1575.4)), "1575");
+    }
+}

@@ -1,0 +1,161 @@
+//! The paper's three evaluation scenarios as network builders (Fig. 4
+//! topology: 8 workers behind a switch; bottlenecks created by shaping
+//! links, competing traffic by iperf-like generators).
+
+use crate::netsim::link::LinkConfig;
+use crate::netsim::schedule::{mbps, BandwidthSchedule};
+use crate::netsim::topology::StarTopology;
+use crate::netsim::traffic::{CompetingTraffic, LinkRef, TrafficPattern};
+use crate::netsim::{NetSim, NetSimConfig, SimTime};
+
+/// Per-link propagation delay used across experiments (WAN-ish; gives the
+/// BDP scale the paper's Algorithm 1 operates against).
+pub const PROP_DELAY_MS: u64 = 10;
+
+/// Shared runner options.
+#[derive(Clone, Debug)]
+pub struct RunOpts {
+    /// Scale experiment horizons down 10× (benches / CI).
+    pub fast: bool,
+    /// Where to drop CSV curves (None = tables only).
+    pub out_dir: Option<std::path::PathBuf>,
+    pub seed: u64,
+    pub n_workers: usize,
+    /// Full-fidelity compression cadence (steps).
+    pub fidelity_every: usize,
+}
+
+impl Default for RunOpts {
+    fn default() -> Self {
+        RunOpts {
+            fast: false,
+            out_dir: None,
+            seed: 42,
+            n_workers: 8,
+            fidelity_every: 250,
+        }
+    }
+}
+
+impl RunOpts {
+    pub fn horizon(&self, secs: f64) -> f64 {
+        if self.fast {
+            secs / 10.0
+        } else {
+            secs
+        }
+    }
+}
+
+/// Scenario builders.
+pub struct Scenario;
+
+impl Scenario {
+    /// Scenario 1: all links shaped to a static bottleneck bandwidth.
+    pub fn static_bottleneck(n_workers: usize, bw_bps: f64) -> NetSim {
+        NetSim::quiet(StarTopology::constant(
+            n_workers,
+            bw_bps,
+            SimTime::from_millis(PROP_DELAY_MS),
+        ))
+    }
+
+    /// Scenario 2 (Fig. 7): bandwidth degrades from 2000 to 200 Mbps in
+    /// −200 Mbps steps, one step every `step_secs`.
+    pub fn degrading(n_workers: usize, step_secs: f64) -> NetSim {
+        let sched = BandwidthSchedule::stepped(
+            mbps(2000.0),
+            mbps(200.0),
+            -mbps(200.0),
+            SimTime::from_secs_f64(step_secs),
+        );
+        let cfg = LinkConfig::new(sched, SimTime::from_millis(PROP_DELAY_MS));
+        NetSim::quiet(StarTopology::uniform(n_workers, cfg))
+    }
+
+    /// Scenario 3 (Fig. 8): static 2000 Mbps links with iperf-like on/off
+    /// competing flows preempting two workers' links (the paper runs
+    /// multiple iperf3 processes between nodes).
+    pub fn fluctuating(n_workers: usize, seed: u64) -> NetSim {
+        let cfg = LinkConfig::new(
+            BandwidthSchedule::constant(mbps(2000.0)),
+            SimTime::from_millis(PROP_DELAY_MS),
+        );
+        let topology = StarTopology::uniform(n_workers, cfg);
+        // Two bursty flows with different periods → beating interference,
+        // plus a Poisson mice mix.
+        let traffic = vec![
+            CompetingTraffic::new(
+                TrafficPattern::OnOff {
+                    on: SimTime::from_secs_f64(45.0),
+                    off: SimTime::from_secs_f64(35.0),
+                    rate_bps: mbps(1500.0),
+                    tick: SimTime::from_millis(20),
+                },
+                vec![LinkRef::Up(0), LinkRef::Down(0)],
+                seed ^ 0x1111,
+            ),
+            CompetingTraffic::new(
+                TrafficPattern::OnOff {
+                    on: SimTime::from_secs_f64(30.0),
+                    off: SimTime::from_secs_f64(50.0),
+                    rate_bps: mbps(1200.0),
+                    tick: SimTime::from_millis(20),
+                },
+                vec![LinkRef::Up(1), LinkRef::Down(1)],
+                seed ^ 0x2222,
+            )
+            .starting_at(SimTime::from_secs_f64(20.0)),
+            CompetingTraffic::new(
+                TrafficPattern::Poisson {
+                    msgs_per_sec: 50.0,
+                    mean_msg_bytes: 200_000.0,
+                },
+                vec![LinkRef::Up(2)],
+                seed ^ 0x3333,
+            ),
+        ];
+        NetSim::new(NetSimConfig { topology, traffic })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn static_scenario_shapes_all_links() {
+        let sim = Scenario::static_bottleneck(8, mbps(200.0));
+        assert_eq!(sim.topology.n_workers(), 8);
+        for l in &sim.topology.uplinks {
+            assert_eq!(l.true_rate_at(SimTime::ZERO), mbps(200.0));
+        }
+    }
+
+    #[test]
+    fn degrading_scenario_descends() {
+        let sim = Scenario::degrading(8, 60.0);
+        let l = &sim.topology.uplinks[0];
+        assert_eq!(l.true_rate_at(SimTime::ZERO), mbps(2000.0));
+        assert_eq!(
+            l.true_rate_at(SimTime::from_secs_f64(60.0 * 9.0 + 1.0)),
+            mbps(200.0)
+        );
+    }
+
+    #[test]
+    fn fluctuating_scenario_has_traffic() {
+        let mut sim = Scenario::fluctuating(8, 1);
+        sim.advance_to(SimTime::from_secs_f64(120.0));
+        let delivered = sim.topology.total_delivered_bytes();
+        assert!(delivered > 1_000_000, "no competing traffic flowed: {delivered}");
+    }
+
+    #[test]
+    fn fast_opt_scales_horizon() {
+        let mut o = RunOpts::default();
+        assert_eq!(o.horizon(1000.0), 1000.0);
+        o.fast = true;
+        assert_eq!(o.horizon(1000.0), 100.0);
+    }
+}

@@ -1,0 +1,158 @@
+//! Figures 5 & 6 — Time-to-accuracy curves per bottleneck bandwidth.
+//!
+//! Each figure panel is one bandwidth; each series is one method's
+//! accuracy-vs-time trajectory. The runner prints a TTA summary table
+//! (time for each method to reach the panel's target accuracy) and writes
+//! the full curves as CSV for plotting.
+
+use super::report::{opt_time, write_series_csv, Table};
+use super::scenario::{RunOpts, Scenario};
+use crate::coordinator::{run_sim_training, SimTrainConfig, SyncStrategy};
+use crate::netsim::schedule::{gbps, mbps};
+use crate::trainer::metrics::TrainLog;
+use crate::trainer::models::PaperModel;
+
+/// One panel's data: the three methods' logs.
+pub struct TtaPanel {
+    pub bw_label: String,
+    pub target_acc: f64,
+    pub logs: Vec<TrainLog>,
+}
+
+fn run_panel(
+    model: &'static PaperModel,
+    bw_bps: f64,
+    bw_label: &str,
+    horizon: f64,
+    opts: &RunOpts,
+) -> TtaPanel {
+    let mut logs = Vec::new();
+    for strategy in [
+        SyncStrategy::NetSense,
+        SyncStrategy::AllReduce,
+        SyncStrategy::TopK(0.1),
+    ] {
+        let mut config = SimTrainConfig::new(model, strategy);
+        config.n_workers = opts.n_workers;
+        config.max_vtime_s = horizon;
+        config.fidelity_every = opts.fidelity_every;
+        config.seed = opts.seed;
+        let mut sim = Scenario::static_bottleneck(opts.n_workers, bw_bps);
+        logs.push(run_sim_training(&config, &mut sim));
+    }
+    // Target accuracy: 95% of NetSenseML's best (a reachable common bar).
+    let target_acc = logs[0].best_acc() * 0.95;
+    TtaPanel {
+        bw_label: bw_label.to_string(),
+        target_acc,
+        logs,
+    }
+}
+
+fn build_fig(
+    name: &str,
+    title: &str,
+    model: &'static PaperModel,
+    points: &[(f64, &str)],
+    horizon: f64,
+    opts: &RunOpts,
+) -> (Table, Vec<TtaPanel>) {
+    let mut table = Table::new(
+        title,
+        &["Bandwidth", "Target Acc (%)", "Method", "TTA (s)", "Best Acc (%)"],
+    );
+    let mut panels = Vec::new();
+    for &(bw, label) in points {
+        let panel = run_panel(model, bw, label, horizon, opts);
+        for log in &panel.logs {
+            table.row(vec![
+                label.to_string(),
+                format!("{:.1}", panel.target_acc),
+                log.method.clone(),
+                opt_time(log.time_to_accuracy(panel.target_acc)),
+                format!("{:.2}", log.best_acc()),
+            ]);
+        }
+        if let Some(dir) = &opts.out_dir {
+            std::fs::create_dir_all(dir).ok();
+            let series: Vec<(String, Vec<(f64, f64)>)> = panel
+                .logs
+                .iter()
+                .map(|l| (l.method.clone(), l.acc_curve(400)))
+                .collect();
+            write_series_csv(
+                &dir.join(format!("{name}_{label}.csv")),
+                "vtime_s",
+                "accuracy",
+                &series,
+            )
+            .ok();
+        }
+        panels.push(panel);
+    }
+    (table, panels)
+}
+
+/// Fig. 5: ResNet18 TTA at 200/500/800 Mbps.
+pub fn fig5(opts: &RunOpts) -> (Table, Vec<TtaPanel>) {
+    build_fig(
+        "fig5",
+        "Fig 5: Time-to-accuracy, ResNet18 (200/500/800 Mbps)",
+        PaperModel::by_name("resnet18").unwrap(),
+        &[
+            (mbps(200.0), "200Mbps"),
+            (mbps(500.0), "500Mbps"),
+            (mbps(800.0), "800Mbps"),
+        ],
+        opts.horizon(2500.0),
+        opts,
+    )
+}
+
+/// Fig. 6: VGG16 TTA at 2.5/5/10 Gbps.
+pub fn fig6(opts: &RunOpts) -> (Table, Vec<TtaPanel>) {
+    build_fig(
+        "fig6",
+        "Fig 6: Time-to-accuracy, VGG16 (2.5/5/10 Gbps)",
+        PaperModel::by_name("vgg16").unwrap(),
+        &[
+            (gbps(2.5), "2.5Gbps"),
+            (gbps(5.0), "5Gbps"),
+            (gbps(10.0), "10Gbps"),
+        ],
+        opts.horizon(2800.0),
+        opts,
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig5_netsense_reaches_target_first() {
+        let opts = RunOpts {
+            fast: true,
+            fidelity_every: 0,
+            ..Default::default()
+        };
+        let (_, panels) = fig5(&opts);
+        assert_eq!(panels.len(), 3);
+        for panel in &panels {
+            let ns = &panel.logs[0];
+            let ns_tta = ns.time_to_accuracy(panel.target_acc);
+            assert!(ns_tta.is_some(), "{}: NetSense never hit target", panel.bw_label);
+            for other in &panel.logs[1..] {
+                match other.time_to_accuracy(panel.target_acc) {
+                    None => {} // baseline never reached target — fine
+                    Some(t) => assert!(
+                        ns_tta.unwrap() <= t,
+                        "{}: {} reached target faster",
+                        panel.bw_label,
+                        other.method
+                    ),
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,30 @@
+//! # NetSenseML
+//!
+//! Reproduction of *NetSenseML: Network-Adaptive Compression for Efficient
+//! Distributed Machine Learning* (Wang et al., CS.DC 2025) as a three-layer
+//! rust + JAX + Pallas system:
+//!
+//! - **L3 (this crate)** — the distributed-training coordinator: network
+//!   sensing ([`sensing`]), adaptive compression ([`compress`]), collectives
+//!   ([`collectives`]) over an event-driven network simulator ([`netsim`]),
+//!   and the DDP training loop ([`coordinator`]).
+//! - **L2** — JAX model (`python/compile/model.py`) AOT-lowered to HLO text.
+//! - **L1** — Pallas kernels (`python/compile/kernels/`) inside the L2 graph.
+//!
+//! The rust binary loads `artifacts/*.hlo.txt` via the PJRT C API
+//! ([`runtime`]) and never calls Python at run time.
+//!
+//! See `DESIGN.md` for the system inventory and the experiment index, and
+//! `EXPERIMENTS.md` for the paper-vs-measured results.
+
+pub mod collectives;
+pub mod compress;
+pub mod config;
+pub mod coordinator;
+pub mod experiments;
+pub mod netsim;
+pub mod runtime;
+pub mod sensing;
+pub mod testing;
+pub mod trainer;
+pub mod util;

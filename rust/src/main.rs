@@ -1,0 +1,312 @@
+//! `netsenseml` — the L3 coordinator CLI.
+//!
+//! Subcommands:
+//! - `repro <exp|all>` — regenerate the paper's tables/figures
+//! - `train`           — one simulated training run (paper-scale models)
+//! - `e2e`             — real three-layer training (PJRT + JAX/Pallas)
+//! - `sense`           — Fig.2-style sensing sweep
+//! - `info`            — artifact/manifest inspection
+
+use anyhow::{anyhow, bail, Result};
+use netsenseml::config::TrainConfig;
+use netsenseml::coordinator::{
+    run_sim_training, RealTrainConfig, RealTrainer, SimTrainConfig, SyncStrategy,
+};
+use netsenseml::experiments::scenario::{RunOpts, Scenario};
+use netsenseml::experiments::{ablation, degrading, fig2, fig3, fluctuating, tables, tta};
+use netsenseml::netsim::schedule::mbps;
+use netsenseml::netsim::topology::StarTopology;
+use netsenseml::netsim::{NetSim, SimTime};
+use netsenseml::runtime::{Manifest, ModelRuntime};
+use netsenseml::trainer::models::PaperModel;
+use netsenseml::util::cli::{flag, opt, Cli, CmdSpec};
+use std::path::{Path, PathBuf};
+
+fn cli() -> Cli {
+    Cli {
+        bin: "netsenseml",
+        about: "Network-adaptive gradient compression for distributed ML (paper reproduction)",
+        commands: vec![
+            CmdSpec {
+                name: "repro",
+                help: "regenerate paper tables/figures (table1 table2 fig2 fig3 fig5 fig6 fig7 fig8 | all)",
+                opts: vec![
+                    opt("out", "directory for CSV outputs", None),
+                    flag("fast", "10x shorter horizons (CI smoke)"),
+                    opt("seed", "experiment seed", Some("42")),
+                    opt("workers", "number of workers", Some("8")),
+                    opt("fidelity-every", "full-compression cadence in steps (0=never)", Some("250")),
+                ],
+                positionals: vec!["experiment"],
+            },
+            CmdSpec {
+                name: "train",
+                help: "one simulated training run on a paper-scale model",
+                opts: vec![
+                    opt("config", "TOML config file (overrides defaults)", None),
+                    opt("model", "resnet18 | vgg16", Some("resnet18")),
+                    opt("strategy", "netsense | allreduce | topk[:r]", Some("netsense")),
+                    opt("bw-mbps", "bottleneck bandwidth (Mbps)", Some("200")),
+                    opt("vtime", "virtual-time horizon (s)", Some("600")),
+                    opt("workers", "number of workers", Some("8")),
+                    opt("seed", "seed", Some("42")),
+                    opt("csv", "write the step trace to this CSV", None),
+                ],
+                positionals: vec![],
+            },
+            CmdSpec {
+                name: "e2e",
+                help: "real training through PJRT (requires `make artifacts`)",
+                opts: vec![
+                    opt("model", "mlp | cifar_cnn", Some("mlp")),
+                    opt("strategy", "netsense | allreduce | topk[:r]", Some("netsense")),
+                    opt("steps", "training steps", Some("100")),
+                    opt("workers", "simulated DDP workers", Some("4")),
+                    opt("bw-mbps", "bottleneck bandwidth (Mbps)", Some("200")),
+                    opt("lr", "learning rate", Some("0.02")),
+                    opt("artifacts", "artifact directory", Some("artifacts")),
+                    opt("csv", "write the step trace to this CSV", None),
+                ],
+                positionals: vec![],
+            },
+            CmdSpec {
+                name: "sense",
+                help: "network sensing sweep (Fig 2)",
+                opts: vec![opt("out", "CSV output directory", None)],
+                positionals: vec![],
+            },
+            CmdSpec {
+                name: "info",
+                help: "inspect the AOT artifact manifest",
+                opts: vec![opt("artifacts", "artifact directory", Some("artifacts"))],
+                positionals: vec![],
+            },
+        ],
+    }
+}
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let app = cli();
+    let args = match app.parse(&argv) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("{e}");
+            std::process::exit(2);
+        }
+    };
+    let result = match args.command.as_str() {
+        "repro" => cmd_repro(&args),
+        "train" => cmd_train(&args),
+        "e2e" => cmd_e2e(&args),
+        "sense" => cmd_sense(&args),
+        "info" => cmd_info(&args),
+        _ => unreachable!(),
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn run_opts_from(args: &netsenseml::util::cli::Args) -> Result<RunOpts> {
+    Ok(RunOpts {
+        fast: args.flag("fast"),
+        out_dir: args.get("out").map(PathBuf::from),
+        seed: args.get_u64("seed")?.unwrap_or(42),
+        n_workers: args.get_usize("workers")?.unwrap_or(8),
+        fidelity_every: args.get_usize("fidelity-every")?.unwrap_or(250),
+    })
+}
+
+fn cmd_repro(args: &netsenseml::util::cli::Args) -> Result<()> {
+    let opts = run_opts_from(args)?;
+    let which = args
+        .positionals
+        .first()
+        .map(|s| s.as_str())
+        .unwrap_or("all");
+    let known = [
+        "table1", "table2", "fig2", "fig3", "fig5", "fig6", "fig7", "fig8", "ablation",
+    ];
+    let selected: Vec<&str> = if which == "all" {
+        known.to_vec()
+    } else if known.contains(&which) {
+        vec![which]
+    } else {
+        bail!("unknown experiment `{which}` (have {known:?} or `all`)");
+    };
+    for exp in selected {
+        eprintln!("== running {exp} ==");
+        let t0 = std::time::Instant::now();
+        match exp {
+            "table1" => tables::table1(&opts).0.print(),
+            "table2" => tables::table2(&opts).0.print(),
+            "fig2" => {
+                let (t, r) = fig2::fig2(&opts);
+                t.print();
+                println!(
+                    "estimator: BtlBw {:.1} Mbps (true {:.1}), RTprop {:.1} ms (true {:.1}), BDP {:.0} kB",
+                    r.est_btlbw_mbps,
+                    r.true_btlbw_mbps,
+                    r.est_rtprop_ms,
+                    r.true_rtprop_ms,
+                    r.est_bdp_bytes / 1e3
+                );
+            }
+            "fig3" => fig3::fig3(&opts).0.print(),
+            "ablation" => ablation::ablation(&opts).0.print(),
+            "fig5" => tta::fig5(&opts).0.print(),
+            "fig6" => tta::fig6(&opts).0.print(),
+            "fig7" => degrading::fig7(&opts).0.print(),
+            "fig8" => fluctuating::fig8(&opts).0.print(),
+            _ => unreachable!(),
+        }
+        eprintln!("   ({exp} took {:.1}s)", t0.elapsed().as_secs_f64());
+    }
+    Ok(())
+}
+
+fn cmd_train(args: &netsenseml::util::cli::Args) -> Result<()> {
+    // Layer: defaults ← TOML ← CLI flags.
+    let mut cfg = match args.get("config") {
+        Some(path) => TrainConfig::from_toml_file(Path::new(path))?,
+        None => TrainConfig::default(),
+    };
+    if let Some(m) = args.get("model") {
+        cfg.model = m.to_string();
+    }
+    if let Some(s) = args.get("strategy") {
+        cfg.strategy = s.to_string();
+    }
+    if let Some(b) = args.get_f64("bw-mbps")? {
+        cfg.bandwidth_mbps = b;
+    }
+    if let Some(v) = args.get_f64("vtime")? {
+        cfg.max_vtime_s = v;
+    }
+    if let Some(w) = args.get_usize("workers")? {
+        cfg.n_workers = w;
+    }
+    if let Some(s) = args.get_u64("seed")? {
+        cfg.seed = s;
+    }
+    cfg.validate()?;
+
+    let model = PaperModel::by_name(&cfg.model)
+        .ok_or_else(|| anyhow!("unknown paper model `{}` (resnet18|vgg16)", cfg.model))?;
+    let strategy = SyncStrategy::parse(&cfg.strategy).unwrap();
+    let mut sim_cfg = SimTrainConfig::new(model, strategy);
+    sim_cfg.n_workers = cfg.n_workers;
+    sim_cfg.batch_per_worker = cfg.batch_per_worker;
+    sim_cfg.max_vtime_s = cfg.max_vtime_s;
+    sim_cfg.fidelity_every = cfg.fidelity_every;
+    sim_cfg.seed = cfg.seed;
+    let mut sim = Scenario::static_bottleneck(cfg.n_workers, mbps(cfg.bandwidth_mbps));
+    let log = run_sim_training(&sim_cfg, &mut sim);
+
+    println!(
+        "model={} strategy={} bw={} Mbps workers={}",
+        cfg.model, cfg.strategy, cfg.bandwidth_mbps, cfg.n_workers
+    );
+    println!(
+        "steps={} vtime={:.1}s throughput={:.1} samples/s best_acc={:.2}% convergence={}",
+        log.records.len(),
+        log.total_vtime(),
+        log.mean_throughput(),
+        log.best_acc(),
+        netsenseml::experiments::report::opt_time(log.convergence_time()),
+    );
+    if let Some(csv) = args.get("csv") {
+        log.write_csv(Path::new(csv))?;
+        println!("trace written to {csv}");
+    }
+    Ok(())
+}
+
+fn cmd_e2e(args: &netsenseml::util::cli::Args) -> Result<()> {
+    let artifacts = PathBuf::from(args.get_or("artifacts", "artifacts"));
+    let model = args.get_or("model", "mlp");
+    let strategy = SyncStrategy::parse(&args.get_or("strategy", "netsense"))
+        .ok_or_else(|| anyhow!("bad strategy"))?;
+    let steps = args.get_usize("steps")?.unwrap_or(100);
+    let workers = args.get_usize("workers")?.unwrap_or(4);
+    let bw = args.get_f64("bw-mbps")?.unwrap_or(200.0);
+    let lr = args.get_f64("lr")?.unwrap_or(0.02) as f32;
+
+    let rt = ModelRuntime::load(&artifacts, &model)?;
+    println!(
+        "loaded {} on {} ({} params)",
+        model,
+        rt.platform(),
+        rt.manifest.total_params
+    );
+    let config = RealTrainConfig {
+        n_workers: workers,
+        strategy,
+        steps,
+        lr,
+        eval_every: 10,
+        seed: 7,
+    };
+    let mut trainer = RealTrainer::new(&rt, config)?;
+    let mut sim = NetSim::quiet(StarTopology::constant(
+        workers,
+        mbps(bw),
+        SimTime::from_millis(10),
+    ));
+    let t0 = std::time::Instant::now();
+    let log = trainer.train(&mut sim)?;
+    let wall = t0.elapsed().as_secs_f64();
+    let first = log.records.first().unwrap();
+    let last = log.records.last().unwrap();
+    println!(
+        "steps={} wall={:.1}s vtime={:.1}s loss {:.3}→{:.3} acc={:.1}% ratio(last)={:.4}",
+        log.records.len(),
+        wall,
+        log.total_vtime(),
+        first.loss,
+        last.loss,
+        last.acc,
+        last.ratio
+    );
+    if let Some(csv) = args.get("csv") {
+        log.write_csv(Path::new(csv))?;
+        println!("trace written to {csv}");
+    }
+    Ok(())
+}
+
+fn cmd_sense(args: &netsenseml::util::cli::Args) -> Result<()> {
+    let opts = RunOpts {
+        out_dir: args.get("out").map(PathBuf::from),
+        ..Default::default()
+    };
+    let (t, r) = fig2::fig2(&opts);
+    t.print();
+    println!(
+        "estimator: BtlBw {:.1} Mbps (true {:.1}) RTprop {:.1} ms (true {:.1}) BDP {:.0} kB",
+        r.est_btlbw_mbps, r.true_btlbw_mbps, r.est_rtprop_ms, r.true_rtprop_ms,
+        r.est_bdp_bytes / 1e3
+    );
+    Ok(())
+}
+
+fn cmd_info(args: &netsenseml::util::cli::Args) -> Result<()> {
+    let dir = PathBuf::from(args.get_or("artifacts", "artifacts"));
+    let manifest = Manifest::load(&dir)?;
+    for m in &manifest.models {
+        println!(
+            "model {} — batch {}, input {:?}, {} classes, {} params in {} tensors",
+            m.name,
+            m.batch,
+            m.input_shape,
+            m.n_classes,
+            m.total_params,
+            m.params.len()
+        );
+        println!("  grad_step:    {}", m.grad_step_file.display());
+        println!("  apply_update: {}", m.apply_update_file.display());
+    }
+    Ok(())
+}

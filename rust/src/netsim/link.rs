@@ -1,0 +1,258 @@
+//! A simplex link: FIFO store-and-forward server with a (possibly
+//! time-varying) bandwidth, fixed propagation delay, and a byte-bounded
+//! drop-tail buffer for best-effort traffic.
+//!
+//! Reliable transfers (gradient traffic rides TCP in the paper) are never
+//! dropped — they wait behind the backlog (backpressure), which is exactly
+//! what inflates the sensed RTT under congestion. Best-effort injections
+//! (competing iperf-like traffic) are dropped when the backlog exceeds the
+//! buffer, bounding how far a overloaded link's queue can grow.
+
+use super::schedule::BandwidthSchedule;
+use super::time::SimTime;
+
+/// Static configuration of a link.
+#[derive(Clone, Debug)]
+pub struct LinkConfig {
+    pub schedule: BandwidthSchedule,
+    /// One-way propagation delay.
+    pub propagation: SimTime,
+    /// Drop-tail buffer for best-effort traffic, in bytes of backlog.
+    pub buffer_bytes: u64,
+}
+
+impl LinkConfig {
+    pub fn new(schedule: BandwidthSchedule, propagation: SimTime) -> Self {
+        LinkConfig {
+            schedule,
+            propagation,
+            // Default: ~1 BDP-ish generous switch buffer (4 MB).
+            buffer_bytes: 4 << 20,
+        }
+    }
+
+    pub fn with_buffer(mut self, bytes: u64) -> Self {
+        self.buffer_bytes = bytes;
+        self
+    }
+}
+
+/// Counters exposed for experiments and tests.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct LinkStats {
+    pub delivered_msgs: u64,
+    pub delivered_bytes: u64,
+    pub dropped_msgs: u64,
+    pub dropped_bytes: u64,
+    /// Maximum backlog (bytes queued ahead of an arriving message) observed.
+    pub max_backlog_bytes: u64,
+    /// Total time the link spent serving (busy), for utilization.
+    pub busy_time: SimTime,
+}
+
+/// Simplex link state.
+#[derive(Clone, Debug)]
+pub struct Link {
+    pub config: LinkConfig,
+    /// Time until which previously accepted traffic occupies the server.
+    busy_until: SimTime,
+    pub stats: LinkStats,
+}
+
+/// Outcome of offering a message to a link.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Offer {
+    /// Message accepted; carries (start_serialize, arrival_at_far_end).
+    Accepted { start: SimTime, arrival: SimTime },
+    /// Best-effort message dropped (buffer full).
+    Dropped,
+}
+
+impl Link {
+    pub fn new(config: LinkConfig) -> Self {
+        Link {
+            config,
+            busy_until: SimTime::ZERO,
+            stats: LinkStats::default(),
+        }
+    }
+
+    /// Current backlog, in *time* (how far busy_until runs ahead of `now`).
+    pub fn backlog_time(&self, now: SimTime) -> SimTime {
+        self.busy_until.saturating_sub(now)
+    }
+
+    /// Approximate backlog in bytes at the current rate.
+    pub fn backlog_bytes(&self, now: SimTime) -> u64 {
+        let rate = self.config.schedule.rate_at(now);
+        (self.backlog_time(now).as_secs_f64() * rate / 8.0) as u64
+    }
+
+    /// Offer a **reliable** message: always accepted, waits behind backlog.
+    /// Returns the arrival time at the far end of the link.
+    pub fn send_reliable(&mut self, now: SimTime, bytes: u64) -> Offer {
+        let backlog = self.backlog_bytes(now);
+        self.stats.max_backlog_bytes = self.stats.max_backlog_bytes.max(backlog);
+        let start = self.busy_until.max(now);
+        let done = self.config.schedule.finish_time(start, bytes);
+        self.busy_until = done;
+        self.stats.delivered_msgs += 1;
+        self.stats.delivered_bytes += bytes;
+        self.stats.busy_time += done - start;
+        Offer::Accepted {
+            start,
+            arrival: done + self.config.propagation,
+        }
+    }
+
+    /// Offer a **best-effort** message: dropped if backlog exceeds buffer.
+    pub fn send_best_effort(&mut self, now: SimTime, bytes: u64) -> Offer {
+        let backlog = self.backlog_bytes(now);
+        if backlog.saturating_add(bytes) > self.config.buffer_bytes {
+            self.stats.dropped_msgs += 1;
+            self.stats.dropped_bytes += bytes;
+            return Offer::Dropped;
+        }
+        self.send_reliable(now, bytes)
+    }
+
+    /// Ground-truth rate right now (tests / reporting only — the
+    /// coordinator must not call this).
+    pub fn true_rate_at(&self, now: SimTime) -> f64 {
+        self.config.schedule.rate_at(now)
+    }
+
+    /// Reset dynamic state but keep configuration (new experiment run).
+    pub fn reset(&mut self) {
+        self.busy_until = SimTime::ZERO;
+        self.stats = LinkStats::default();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::netsim::schedule::mbps;
+
+    fn link_100mbps_1ms() -> Link {
+        Link::new(LinkConfig::new(
+            BandwidthSchedule::constant(mbps(100.0)),
+            SimTime::from_millis(1),
+        ))
+    }
+
+    #[test]
+    fn idle_link_latency_is_serialization_plus_propagation() {
+        let mut l = link_100mbps_1ms();
+        // 1.25 MB at 100 Mbps = 100 ms serialize + 1 ms prop
+        match l.send_reliable(SimTime::ZERO, 1_250_000) {
+            Offer::Accepted { start, arrival } => {
+                assert_eq!(start, SimTime::ZERO);
+                assert_eq!(arrival, SimTime::from_millis(101));
+            }
+            _ => panic!("dropped"),
+        }
+    }
+
+    #[test]
+    fn fifo_queueing_delays_second_message() {
+        let mut l = link_100mbps_1ms();
+        l.send_reliable(SimTime::ZERO, 1_250_000); // occupies [0, 100ms]
+        match l.send_reliable(SimTime::from_millis(10), 125_000) {
+            Offer::Accepted { start, arrival } => {
+                assert_eq!(start, SimTime::from_millis(100));
+                assert_eq!(arrival, SimTime::from_millis(111));
+            }
+            _ => panic!("dropped"),
+        }
+    }
+
+    #[test]
+    fn backlog_drains_over_time() {
+        let mut l = link_100mbps_1ms();
+        l.send_reliable(SimTime::ZERO, 1_250_000);
+        assert!(l.backlog_time(SimTime::from_millis(50)) == SimTime::from_millis(50));
+        assert_eq!(l.backlog_time(SimTime::from_millis(200)), SimTime::ZERO);
+        // backlog_bytes ≈ 50ms * 100Mbps / 8 = 625_000 B
+        let bb = l.backlog_bytes(SimTime::from_millis(50));
+        assert!((bb as i64 - 625_000).unsigned_abs() < 1_000, "{bb}");
+    }
+
+    #[test]
+    fn best_effort_drops_when_buffer_full() {
+        let mut l = Link::new(
+            LinkConfig::new(
+                BandwidthSchedule::constant(mbps(100.0)),
+                SimTime::from_millis(1),
+            )
+            .with_buffer(1_000_000),
+        );
+        // Fill ~1.25 MB of backlog with a reliable message.
+        l.send_reliable(SimTime::ZERO, 1_250_000);
+        match l.send_best_effort(SimTime::ZERO, 500_000) {
+            Offer::Dropped => {}
+            other => panic!("expected drop, got {other:?}"),
+        }
+        assert_eq!(l.stats.dropped_msgs, 1);
+        assert_eq!(l.stats.dropped_bytes, 500_000);
+        // After drain, best-effort is accepted again.
+        match l.send_best_effort(SimTime::from_millis(200), 500_000) {
+            Offer::Accepted { .. } => {}
+            other => panic!("expected accept, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn reliable_never_drops() {
+        let mut l = Link::new(
+            LinkConfig::new(
+                BandwidthSchedule::constant(mbps(1.0)),
+                SimTime::from_millis(1),
+            )
+            .with_buffer(10),
+        );
+        for _ in 0..100 {
+            match l.send_reliable(SimTime::ZERO, 1_000_000) {
+                Offer::Accepted { .. } => {}
+                Offer::Dropped => panic!("reliable dropped"),
+            }
+        }
+        assert_eq!(l.stats.dropped_msgs, 0);
+        assert_eq!(l.stats.delivered_msgs, 100);
+    }
+
+    #[test]
+    fn stats_track_delivery_and_busy_time() {
+        let mut l = link_100mbps_1ms();
+        l.send_reliable(SimTime::ZERO, 1_250_000);
+        l.send_reliable(SimTime::ZERO, 1_250_000);
+        assert_eq!(l.stats.delivered_bytes, 2_500_000);
+        assert_eq!(l.stats.busy_time, SimTime::from_millis(200));
+        assert!(l.stats.max_backlog_bytes > 0);
+    }
+
+    #[test]
+    fn reset_clears_dynamic_state() {
+        let mut l = link_100mbps_1ms();
+        l.send_reliable(SimTime::ZERO, 1_250_000);
+        l.reset();
+        assert_eq!(l.stats, LinkStats::default());
+        assert_eq!(l.backlog_time(SimTime::ZERO), SimTime::ZERO);
+    }
+
+    #[test]
+    fn degrading_schedule_slows_transfers() {
+        let sched = BandwidthSchedule::piecewise(vec![
+            (SimTime::ZERO, mbps(100.0)),
+            (SimTime::from_secs_f64(1.0), mbps(10.0)),
+        ]);
+        let mut l = Link::new(LinkConfig::new(sched, SimTime::ZERO));
+        // At t=2s (in the 10 Mbps regime) 1.25 MB takes 1 s.
+        match l.send_reliable(SimTime::from_secs_f64(2.0), 1_250_000) {
+            Offer::Accepted { arrival, .. } => {
+                assert!((arrival.as_secs_f64() - 3.0).abs() < 1e-6);
+            }
+            _ => panic!(),
+        }
+    }
+}

@@ -1,0 +1,35 @@
+//! Event-driven network simulator.
+//!
+//! This is the substrate that replaces the paper's ESXi testbed (8 workers
+//! behind a bandwidth-shaped switch, Fig. 4): links with finite bandwidth,
+//! propagation delay and drop-tail byte-bounded queues; a star topology;
+//! message flows whose completion times emerge from serialization +
+//! queueing + propagation; competing traffic generators (the paper's iperf3
+//! processes); and time-varying bandwidth schedules (the paper's scenarios
+//! 2 and 3 link shaping).
+//!
+//! Design notes:
+//! - **Virtual time** in nanoseconds ([`time::SimTime`]); the simulator is
+//!   single-threaded and deterministic for a given seed.
+//! - The unit simulated is a *message* (a gradient bucket / control frame)
+//!   fragmented into MTU-sized packets; per-packet queueing produces the
+//!   RTT-inflation-under-load behaviour that NetSenseML's sensing relies on
+//!   (Fig. 2 of the paper).
+//! - Ground truth (configured BtlBw / RTprop) is available to tests only;
+//!   the coordinator sees nothing but observed (bytes, RTT) pairs.
+
+pub mod event;
+pub mod link;
+pub mod schedule;
+pub mod sim;
+pub mod time;
+pub mod topology;
+pub mod traffic;
+
+pub use event::EventQueue;
+pub use link::{Link, LinkConfig, LinkStats};
+pub use schedule::BandwidthSchedule;
+pub use sim::{NetSim, NetSimConfig, TransferResult};
+pub use time::SimTime;
+pub use topology::{NodeId, StarTopology, SWITCH};
+pub use traffic::{CompetingTraffic, TrafficPattern};

@@ -1,0 +1,223 @@
+//! Time-varying link bandwidth: piecewise-constant schedules.
+//!
+//! Scenario 1 uses [`BandwidthSchedule::constant`]; scenario 2 (Fig. 7) uses
+//! [`BandwidthSchedule::stepped`] (2000 → 200 Mbps in −200 Mbps steps);
+//! scenario 3 composes a constant schedule with competing traffic
+//! ([`super::traffic`]) and optional [`BandwidthSchedule::piecewise`] shaping.
+
+use super::time::SimTime;
+
+/// Megabits per second → bits per second.
+pub fn mbps(x: f64) -> f64 {
+    x * 1e6
+}
+
+/// Gigabits per second → bits per second.
+pub fn gbps(x: f64) -> f64 {
+    x * 1e9
+}
+
+/// A piecewise-constant bandwidth schedule. Segment `i` is active on
+/// `[starts[i], starts[i+1])`; the last segment extends to infinity.
+#[derive(Clone, Debug)]
+pub struct BandwidthSchedule {
+    /// Segment start times, strictly increasing, `starts[0] == 0`.
+    starts: Vec<SimTime>,
+    /// Bits per second for each segment; all positive.
+    rates: Vec<f64>,
+}
+
+impl BandwidthSchedule {
+    /// Constant bandwidth forever.
+    pub fn constant(bits_per_sec: f64) -> Self {
+        assert!(bits_per_sec > 0.0);
+        BandwidthSchedule {
+            starts: vec![SimTime::ZERO],
+            rates: vec![bits_per_sec],
+        }
+    }
+
+    /// Explicit piecewise schedule from `(start, bits_per_sec)` pairs.
+    pub fn piecewise(segments: Vec<(SimTime, f64)>) -> Self {
+        assert!(!segments.is_empty(), "empty schedule");
+        assert_eq!(segments[0].0, SimTime::ZERO, "first segment must start at 0");
+        let mut starts = Vec::with_capacity(segments.len());
+        let mut rates = Vec::with_capacity(segments.len());
+        for (i, &(t, r)) in segments.iter().enumerate() {
+            assert!(r > 0.0, "non-positive rate in segment {i}");
+            if i > 0 {
+                assert!(t > starts[i - 1], "segment starts must increase");
+            }
+            starts.push(t);
+            rates.push(r);
+        }
+        BandwidthSchedule { starts, rates }
+    }
+
+    /// The paper's scenario-2 shape: start at `from_bps`, step by
+    /// `step_bps` every `interval` until reaching `to_bps` (inclusive),
+    /// then hold. `step_bps` may be negative (degradation) or positive.
+    pub fn stepped(from_bps: f64, to_bps: f64, step_bps: f64, interval: SimTime) -> Self {
+        assert!(step_bps != 0.0 && interval > SimTime::ZERO);
+        assert!(
+            (to_bps - from_bps) * step_bps >= 0.0,
+            "step direction must move from → to"
+        );
+        let mut segments = vec![(SimTime::ZERO, from_bps)];
+        let mut bw = from_bps;
+        let mut t = SimTime::ZERO;
+        loop {
+            let next = bw + step_bps;
+            let done = if step_bps < 0.0 { next < to_bps } else { next > to_bps };
+            if done {
+                break;
+            }
+            bw = next;
+            t += interval;
+            segments.push((t, bw));
+        }
+        BandwidthSchedule::piecewise(segments)
+    }
+
+    /// Bandwidth (bits/s) in effect at time `t`.
+    pub fn rate_at(&self, t: SimTime) -> f64 {
+        // Binary search for the last start <= t.
+        let idx = match self.starts.binary_search(&t) {
+            Ok(i) => i,
+            Err(0) => 0,
+            Err(i) => i - 1,
+        };
+        self.rates[idx]
+    }
+
+    /// Time at which a transmission of `bytes` finishes if it starts at
+    /// `start` and consumes the link's full (time-varying) rate.
+    pub fn finish_time(&self, start: SimTime, bytes: u64) -> SimTime {
+        let mut remaining_bits = bytes as f64 * 8.0;
+        let mut t = start;
+        if remaining_bits <= 0.0 {
+            return start;
+        }
+        loop {
+            let seg = match self.starts.binary_search(&t) {
+                Ok(i) => i,
+                Err(0) => 0,
+                Err(i) => i - 1,
+            };
+            let rate = self.rates[seg];
+            let seg_end = self.starts.get(seg + 1).copied();
+            let dt_to_end = match seg_end {
+                Some(e) if e > t => (e - t).as_secs_f64(),
+                Some(_) => 0.0,
+                None => f64::INFINITY,
+            };
+            let bits_in_seg = rate * dt_to_end;
+            if bits_in_seg >= remaining_bits || seg_end.is_none() {
+                let dt = remaining_bits / rate;
+                return t + SimTime::from_secs_f64(dt);
+            }
+            remaining_bits -= bits_in_seg;
+            t = seg_end.unwrap();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn constant_rate() {
+        let s = BandwidthSchedule::constant(mbps(100.0));
+        assert_eq!(s.rate_at(SimTime::ZERO), 100e6);
+        assert_eq!(s.rate_at(SimTime::from_secs_f64(1e6)), 100e6);
+        // 12.5 MB at 100 Mbps = 1 s
+        let fin = s.finish_time(SimTime::from_secs_f64(2.0), 12_500_000);
+        assert!((fin.as_secs_f64() - 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn zero_bytes_finish_immediately() {
+        let s = BandwidthSchedule::constant(mbps(1.0));
+        assert_eq!(s.finish_time(SimTime::from_millis(5), 0), SimTime::from_millis(5));
+    }
+
+    #[test]
+    fn piecewise_rate_lookup() {
+        let s = BandwidthSchedule::piecewise(vec![
+            (SimTime::ZERO, mbps(100.0)),
+            (SimTime::from_secs_f64(10.0), mbps(50.0)),
+        ]);
+        assert_eq!(s.rate_at(SimTime::from_secs_f64(5.0)), 100e6);
+        assert_eq!(s.rate_at(SimTime::from_secs_f64(10.0)), 50e6);
+        assert_eq!(s.rate_at(SimTime::from_secs_f64(20.0)), 50e6);
+    }
+
+    #[test]
+    fn finish_time_spans_segments() {
+        // 100 Mbps for 1 s, then 50 Mbps. Transfer 25 MB starting at t=0:
+        // first second carries 12.5 MB, remaining 12.5 MB at 50 Mbps takes 2 s.
+        let s = BandwidthSchedule::piecewise(vec![
+            (SimTime::ZERO, mbps(100.0)),
+            (SimTime::from_secs_f64(1.0), mbps(50.0)),
+        ]);
+        let fin = s.finish_time(SimTime::ZERO, 25_000_000);
+        assert!((fin.as_secs_f64() - 3.0).abs() < 1e-6, "{fin}");
+    }
+
+    #[test]
+    fn stepped_descends() {
+        let s = BandwidthSchedule::stepped(
+            mbps(2000.0),
+            mbps(200.0),
+            -mbps(200.0),
+            SimTime::from_secs_f64(60.0),
+        );
+        assert_eq!(s.rate_at(SimTime::ZERO), mbps(2000.0));
+        assert_eq!(s.rate_at(SimTime::from_secs_f64(61.0)), mbps(1800.0));
+        // after 9 steps → 200 Mbps, holds forever
+        assert_eq!(s.rate_at(SimTime::from_secs_f64(60.0 * 9.0)), mbps(200.0));
+        assert_eq!(s.rate_at(SimTime::from_secs_f64(1e5)), mbps(200.0));
+    }
+
+    #[test]
+    fn stepped_ascending_works_too() {
+        let s = BandwidthSchedule::stepped(
+            mbps(100.0),
+            mbps(300.0),
+            mbps(100.0),
+            SimTime::from_secs_f64(1.0),
+        );
+        assert_eq!(s.rate_at(SimTime::from_secs_f64(0.5)), mbps(100.0));
+        assert_eq!(s.rate_at(SimTime::from_secs_f64(2.5)), mbps(300.0));
+    }
+
+    #[test]
+    fn finish_time_consistent_with_rate_integral() {
+        let s = BandwidthSchedule::stepped(
+            mbps(1000.0),
+            mbps(200.0),
+            -mbps(200.0),
+            SimTime::from_secs_f64(2.0),
+        );
+        // Verify finish_time by numerically integrating the rate.
+        let start = SimTime::from_secs_f64(1.0);
+        let bytes = 2_000_000_000u64; // 2 GB, spans all steps
+        let fin = s.finish_time(start, bytes);
+        let mut bits = 0.0;
+        let mut t = start.as_secs_f64();
+        let dt: f64 = 1e-3;
+        while t < fin.as_secs_f64() {
+            bits += s.rate_at(SimTime::from_secs_f64(t)) * dt.min(fin.as_secs_f64() - t);
+            t += dt;
+        }
+        let rel = (bits - bytes as f64 * 8.0).abs() / (bytes as f64 * 8.0);
+        assert!(rel < 1e-2, "rel err {rel}");
+    }
+
+    #[test]
+    #[should_panic]
+    fn piecewise_rejects_nonzero_first_start() {
+        BandwidthSchedule::piecewise(vec![(SimTime::from_millis(1), 1e6)]);
+    }
+}

@@ -1,0 +1,137 @@
+//! The paper's evaluation topology (Fig. 4): N worker nodes in a star
+//! around a switch, each worker attached by an uplink (worker→switch) and a
+//! downlink (switch→worker). Bottlenecks are created by shaping individual
+//! links, exactly as the paper shapes "the link bandwidth of two
+//! connections to the switch".
+
+use super::link::{Link, LinkConfig};
+use super::schedule::BandwidthSchedule;
+use super::time::SimTime;
+
+/// Worker identifier (0-based). The switch is [`SWITCH`].
+pub type NodeId = usize;
+
+/// Sentinel node id for the switch.
+pub const SWITCH: NodeId = usize::MAX;
+
+/// Star topology: `n` workers, each with an uplink and downlink to the
+/// switch.
+#[derive(Clone, Debug)]
+pub struct StarTopology {
+    pub uplinks: Vec<Link>,
+    pub downlinks: Vec<Link>,
+}
+
+impl StarTopology {
+    /// Uniform topology: all links share the same config.
+    pub fn uniform(n: usize, config: LinkConfig) -> Self {
+        assert!(n >= 1);
+        StarTopology {
+            uplinks: (0..n).map(|_| Link::new(config.clone())).collect(),
+            downlinks: (0..n).map(|_| Link::new(config.clone())).collect(),
+        }
+    }
+
+    /// The paper's shaping setup: all links fast except the listed
+    /// `shaped` workers, whose up+down links get `shaped_config`.
+    pub fn shaped(
+        n: usize,
+        fast_config: LinkConfig,
+        shaped: &[NodeId],
+        shaped_config: LinkConfig,
+    ) -> Self {
+        let mut t = StarTopology::uniform(n, fast_config);
+        for &w in shaped {
+            assert!(w < n, "shaped worker {w} out of range");
+            t.uplinks[w] = Link::new(shaped_config.clone());
+            t.downlinks[w] = Link::new(shaped_config.clone());
+        }
+        t
+    }
+
+    /// Convenience: uniform star with constant bandwidth and delay.
+    pub fn constant(n: usize, bits_per_sec: f64, propagation: SimTime) -> Self {
+        StarTopology::uniform(
+            n,
+            LinkConfig::new(BandwidthSchedule::constant(bits_per_sec), propagation),
+        )
+    }
+
+    pub fn n_workers(&self) -> usize {
+        self.uplinks.len()
+    }
+
+    pub fn reset(&mut self) {
+        for l in self.uplinks.iter_mut().chain(self.downlinks.iter_mut()) {
+            l.reset();
+        }
+    }
+
+    /// Total dropped bytes across all links (best-effort traffic).
+    pub fn total_dropped_bytes(&self) -> u64 {
+        self.uplinks
+            .iter()
+            .chain(self.downlinks.iter())
+            .map(|l| l.stats.dropped_bytes)
+            .sum()
+    }
+
+    /// Total delivered bytes across all links.
+    pub fn total_delivered_bytes(&self) -> u64 {
+        self.uplinks
+            .iter()
+            .chain(self.downlinks.iter())
+            .map(|l| l.stats.delivered_bytes)
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::netsim::link::Offer;
+    use crate::netsim::schedule::mbps;
+
+    #[test]
+    fn uniform_has_2n_links() {
+        let t = StarTopology::constant(8, mbps(1000.0), SimTime::from_millis(1));
+        assert_eq!(t.n_workers(), 8);
+        assert_eq!(t.uplinks.len(), 8);
+        assert_eq!(t.downlinks.len(), 8);
+    }
+
+    #[test]
+    fn shaped_links_are_slower() {
+        let fast = LinkConfig::new(BandwidthSchedule::constant(mbps(10_000.0)), SimTime::ZERO);
+        let slow = LinkConfig::new(BandwidthSchedule::constant(mbps(200.0)), SimTime::ZERO);
+        let mut t = StarTopology::shaped(4, fast, &[1, 2], slow);
+        let bytes = 2_500_000; // 2.5 MB
+        let fast_arrival = match t.uplinks[0].send_reliable(SimTime::ZERO, bytes) {
+            Offer::Accepted { arrival, .. } => arrival,
+            _ => panic!(),
+        };
+        let slow_arrival = match t.uplinks[1].send_reliable(SimTime::ZERO, bytes) {
+            Offer::Accepted { arrival, .. } => arrival,
+            _ => panic!(),
+        };
+        assert!(slow_arrival.as_secs_f64() > fast_arrival.as_secs_f64() * 10.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "out of range")]
+    fn shaped_rejects_bad_worker() {
+        let cfg = LinkConfig::new(BandwidthSchedule::constant(1e6), SimTime::ZERO);
+        StarTopology::shaped(2, cfg.clone(), &[5], cfg);
+    }
+
+    #[test]
+    fn byte_accounting() {
+        let mut t = StarTopology::constant(2, mbps(100.0), SimTime::ZERO);
+        t.uplinks[0].send_reliable(SimTime::ZERO, 1000);
+        t.downlinks[1].send_reliable(SimTime::ZERO, 500);
+        assert_eq!(t.total_delivered_bytes(), 1500);
+        assert_eq!(t.total_dropped_bytes(), 0);
+        t.reset();
+        assert_eq!(t.total_delivered_bytes(), 0);
+    }
+}

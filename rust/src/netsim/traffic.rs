@@ -1,0 +1,269 @@
+//! Competing-traffic generators — the simulator's stand-in for the paper's
+//! parallel `iperf3` processes (scenario 3): best-effort flows that occupy
+//! link capacity and force the training traffic to share the bottleneck.
+
+use super::link::Link;
+use super::time::SimTime;
+use crate::util::rng::Pcg64;
+
+/// Which simplex link a generator targets.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum LinkRef {
+    /// Worker `w`'s uplink (worker → switch).
+    Up(usize),
+    /// Worker `w`'s downlink (switch → worker).
+    Down(usize),
+}
+
+/// Traffic shape.
+#[derive(Clone, Debug)]
+pub enum TrafficPattern {
+    /// iperf-like: alternate ON (sending at `rate_bps` in `tick`-sized
+    /// chunks) and OFF periods.
+    OnOff {
+        on: SimTime,
+        off: SimTime,
+        rate_bps: f64,
+        tick: SimTime,
+    },
+    /// Poisson message arrivals: exponential inter-arrival at
+    /// `msgs_per_sec`, each message `mean_msg_bytes` (exponential sizes).
+    Poisson {
+        msgs_per_sec: f64,
+        mean_msg_bytes: f64,
+    },
+    /// Constant-rate background load.
+    Constant { rate_bps: f64, tick: SimTime },
+}
+
+/// A competing traffic source bound to a set of links.
+#[derive(Clone, Debug)]
+pub struct CompetingTraffic {
+    pub pattern: TrafficPattern,
+    pub targets: Vec<LinkRef>,
+    rng: Pcg64,
+    next_fire: SimTime,
+    /// Start offset; the generator is silent before this.
+    start: SimTime,
+    /// For OnOff: where we are in the on/off cycle.
+    cycle_started: SimTime,
+    on_phase: bool,
+    pub injected_bytes: u64,
+}
+
+impl CompetingTraffic {
+    pub fn new(pattern: TrafficPattern, targets: Vec<LinkRef>, seed: u64) -> Self {
+        assert!(!targets.is_empty());
+        let mut t = CompetingTraffic {
+            pattern,
+            targets,
+            rng: Pcg64::new(seed, TRAFFIC_STREAM),
+            next_fire: SimTime::ZERO,
+            start: SimTime::ZERO,
+            cycle_started: SimTime::ZERO,
+            on_phase: true,
+            injected_bytes: 0,
+        };
+        t.next_fire = t.start;
+        t
+    }
+
+    pub fn starting_at(mut self, start: SimTime) -> Self {
+        self.start = start;
+        self.next_fire = start;
+        self.cycle_started = start;
+        self
+    }
+
+    /// Time of the next injection this source wants to make.
+    pub fn next_time(&self) -> SimTime {
+        self.next_fire
+    }
+
+    /// Fire the injection due at `next_time()`, mutating the targeted
+    /// links, and schedule the next one.
+    pub fn fire(&mut self, now: SimTime, uplinks: &mut [Link], downlinks: &mut [Link]) {
+        debug_assert!(now >= self.next_fire);
+        match self.pattern.clone() {
+            TrafficPattern::OnOff {
+                on,
+                off,
+                rate_bps,
+                tick,
+            } => {
+                // Advance the on/off cycle to `now`.
+                let cycle = on + off;
+                let since = now.saturating_sub(self.cycle_started);
+                let pos = SimTime(since.as_nanos() % cycle.as_nanos().max(1));
+                self.on_phase = pos < on;
+                if self.on_phase {
+                    let bytes = (rate_bps * tick.as_secs_f64() / 8.0) as u64;
+                    self.inject(now, bytes, uplinks, downlinks);
+                    self.next_fire = now + tick;
+                } else {
+                    // Sleep until the next ON edge.
+                    let to_edge = cycle - pos;
+                    self.next_fire = now + to_edge;
+                }
+            }
+            TrafficPattern::Poisson {
+                msgs_per_sec,
+                mean_msg_bytes,
+            } => {
+                let bytes = (self.rng.exponential(1.0 / mean_msg_bytes)).max(64.0) as u64;
+                self.inject(now, bytes, uplinks, downlinks);
+                let dt = self.rng.exponential(msgs_per_sec);
+                self.next_fire = now + SimTime::from_secs_f64(dt);
+            }
+            TrafficPattern::Constant { rate_bps, tick } => {
+                let bytes = (rate_bps * tick.as_secs_f64() / 8.0) as u64;
+                self.inject(now, bytes, uplinks, downlinks);
+                self.next_fire = now + tick;
+            }
+        }
+    }
+
+    fn inject(&mut self, now: SimTime, bytes: u64, uplinks: &mut [Link], downlinks: &mut [Link]) {
+        for &t in &self.targets {
+            let link = match t {
+                LinkRef::Up(w) => &mut uplinks[w],
+                LinkRef::Down(w) => &mut downlinks[w],
+            };
+            link.send_best_effort(now, bytes);
+            self.injected_bytes += bytes;
+        }
+    }
+}
+
+/// PCG stream id reserved for traffic generators.
+const TRAFFIC_STREAM: u64 = 0x00c0_ffee_7a41_11c0;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::netsim::link::LinkConfig;
+    use crate::netsim::schedule::{mbps, BandwidthSchedule};
+
+    fn links(n: usize) -> (Vec<Link>, Vec<Link>) {
+        let cfg = LinkConfig::new(
+            BandwidthSchedule::constant(mbps(100.0)),
+            SimTime::from_millis(1),
+        );
+        (
+            (0..n).map(|_| Link::new(cfg.clone())).collect(),
+            (0..n).map(|_| Link::new(cfg.clone())).collect(),
+        )
+    }
+
+    #[test]
+    fn constant_pattern_injects_at_rate() {
+        let (mut up, mut down) = links(2);
+        let mut t = CompetingTraffic::new(
+            TrafficPattern::Constant {
+                rate_bps: mbps(50.0),
+                tick: SimTime::from_millis(10),
+            },
+            vec![LinkRef::Up(0)],
+            1,
+        );
+        for _ in 0..100 {
+            let now = t.next_time();
+            t.fire(now, &mut up, &mut down);
+        }
+        // 100 ticks × 10 ms × 50 Mbps = 6.25 MB
+        let expect = (mbps(50.0) * 0.01 / 8.0) as u64 * 100;
+        assert_eq!(t.injected_bytes, expect);
+        assert_eq!(up[0].stats.delivered_bytes + up[0].stats.dropped_bytes, expect);
+        assert_eq!(down[0].stats.delivered_bytes, 0);
+    }
+
+    #[test]
+    fn onoff_is_silent_during_off() {
+        let (mut up, mut down) = links(1);
+        let mut t = CompetingTraffic::new(
+            TrafficPattern::OnOff {
+                on: SimTime::from_millis(100),
+                off: SimTime::from_millis(100),
+                rate_bps: mbps(10.0),
+                tick: SimTime::from_millis(10),
+            },
+            vec![LinkRef::Up(0)],
+            2,
+        );
+        // Drive for one full second; injections should only land in ON halves.
+        let mut fired_at = Vec::new();
+        while t.next_time() < SimTime::from_secs_f64(1.0) {
+            let now = t.next_time();
+            let before = t.injected_bytes;
+            t.fire(now, &mut up, &mut down);
+            if t.injected_bytes > before {
+                fired_at.push(now);
+            }
+        }
+        assert!(!fired_at.is_empty());
+        for at in fired_at {
+            let pos_ms = (at.as_nanos() % 200_000_000) / 1_000_000;
+            assert!(pos_ms < 100, "injection during OFF at {at}");
+        }
+    }
+
+    #[test]
+    fn poisson_mean_rate_approximately_right() {
+        let (mut up, mut down) = links(1);
+        let mut t = CompetingTraffic::new(
+            TrafficPattern::Poisson {
+                msgs_per_sec: 1000.0,
+                mean_msg_bytes: 10_000.0,
+            },
+            vec![LinkRef::Down(0)],
+            3,
+        );
+        let horizon = SimTime::from_secs_f64(10.0);
+        let mut count = 0u64;
+        while t.next_time() < horizon {
+            let now = t.next_time();
+            t.fire(now, &mut up, &mut down);
+            count += 1;
+        }
+        // ~10k messages expected; allow ±10%
+        assert!((9_000..11_000).contains(&count), "count {count}");
+        let mean_bytes = t.injected_bytes as f64 / count as f64;
+        assert!((8_000.0..12_000.0).contains(&mean_bytes), "mean {mean_bytes}");
+    }
+
+    #[test]
+    fn starting_at_delays_first_fire() {
+        let t = CompetingTraffic::new(
+            TrafficPattern::Constant {
+                rate_bps: 1e6,
+                tick: SimTime::from_millis(1),
+            },
+            vec![LinkRef::Up(0)],
+            4,
+        )
+        .starting_at(SimTime::from_secs_f64(5.0));
+        assert_eq!(t.next_time(), SimTime::from_secs_f64(5.0));
+    }
+
+    #[test]
+    fn deterministic_for_seed() {
+        let run = |seed| {
+            let (mut up, mut down) = links(1);
+            let mut t = CompetingTraffic::new(
+                TrafficPattern::Poisson {
+                    msgs_per_sec: 100.0,
+                    mean_msg_bytes: 1000.0,
+                },
+                vec![LinkRef::Up(0)],
+                seed,
+            );
+            for _ in 0..100 {
+                let now = t.next_time();
+                t.fire(now, &mut up, &mut down);
+            }
+            (t.injected_bytes, t.next_time())
+        };
+        assert_eq!(run(7), run(7));
+        assert_ne!(run(7), run(8));
+    }
+}

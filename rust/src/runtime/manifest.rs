@@ -1,0 +1,225 @@
+//! Artifact manifest: the contract between `python/compile/aot.py` and the
+//! rust runtime. Parsed with the in-repo JSON substrate.
+
+use crate::util::json::Json;
+use anyhow::{anyhow, bail, Context, Result};
+use std::path::{Path, PathBuf};
+
+/// One named parameter tensor.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ParamSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+}
+
+impl ParamSpec {
+    pub fn size(&self) -> usize {
+        self.shape.iter().product::<usize>().max(1)
+    }
+}
+
+/// Everything the runtime needs to know about one AOT-compiled model.
+#[derive(Clone, Debug)]
+pub struct ModelManifest {
+    pub name: String,
+    pub batch: usize,
+    pub input_shape: Vec<usize>,
+    pub n_classes: usize,
+    pub momentum: f64,
+    pub total_params: usize,
+    pub params: Vec<ParamSpec>,
+    pub grad_step_file: PathBuf,
+    pub apply_update_file: PathBuf,
+    pub init_params_file: PathBuf,
+}
+
+impl ModelManifest {
+    /// Input tensor element count (batch × H × W × C).
+    pub fn x_len(&self) -> usize {
+        self.batch * self.input_shape.iter().product::<usize>()
+    }
+}
+
+/// The whole manifest (all models).
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub models: Vec<ModelManifest>,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {} (run `make artifacts` first)", path.display()))?;
+        Self::parse(&text, dir)
+    }
+
+    /// Parse manifest JSON; artifact paths are resolved against `dir`.
+    pub fn parse(text: &str, dir: &Path) -> Result<Manifest> {
+        let j = Json::parse(text).map_err(|e| anyhow!("manifest: {e}"))?;
+        let version = j
+            .get("version")
+            .and_then(Json::as_usize)
+            .ok_or_else(|| anyhow!("manifest: missing version"))?;
+        if version != 1 {
+            bail!("manifest version {version} unsupported (want 1)");
+        }
+        let models_obj = j
+            .get("models")
+            .and_then(Json::as_obj)
+            .ok_or_else(|| anyhow!("manifest: missing models"))?;
+        let mut models = Vec::new();
+        for (name, m) in models_obj {
+            let get_usize = |k: &str| {
+                m.get(k)
+                    .and_then(Json::as_usize)
+                    .ok_or_else(|| anyhow!("manifest[{name}]: missing {k}"))
+            };
+            let params_json = m
+                .get("params")
+                .and_then(Json::as_arr)
+                .ok_or_else(|| anyhow!("manifest[{name}]: missing params"))?;
+            let mut params = Vec::new();
+            for p in params_json {
+                let pname = p
+                    .get("name")
+                    .and_then(Json::as_str)
+                    .ok_or_else(|| anyhow!("manifest[{name}]: param missing name"))?;
+                let shape = p
+                    .get("shape")
+                    .and_then(Json::as_arr)
+                    .ok_or_else(|| anyhow!("manifest[{name}]: param missing shape"))?
+                    .iter()
+                    .map(|d| d.as_usize().ok_or_else(|| anyhow!("bad shape dim")))
+                    .collect::<Result<Vec<_>>>()?;
+                params.push(ParamSpec {
+                    name: pname.to_string(),
+                    shape,
+                });
+            }
+            let file_of = |k: &str| -> Result<PathBuf> {
+                let f = m
+                    .get(k)
+                    .and_then(|v| v.get("file"))
+                    .and_then(Json::as_str)
+                    .ok_or_else(|| anyhow!("manifest[{name}]: missing {k}.file"))?;
+                Ok(dir.join(f))
+            };
+            let total_params = get_usize("total_params")?;
+            let declared: usize = params.iter().map(ParamSpec::size).sum();
+            if declared != total_params {
+                bail!(
+                    "manifest[{name}]: total_params {total_params} != Σ shapes {declared}"
+                );
+            }
+            models.push(ModelManifest {
+                name: name.clone(),
+                batch: get_usize("batch")?,
+                input_shape: m
+                    .get("input_shape")
+                    .and_then(Json::as_arr)
+                    .ok_or_else(|| anyhow!("manifest[{name}]: missing input_shape"))?
+                    .iter()
+                    .map(|d| d.as_usize().ok_or_else(|| anyhow!("bad input dim")))
+                    .collect::<Result<Vec<_>>>()?,
+                n_classes: get_usize("n_classes")?,
+                momentum: m
+                    .get("momentum")
+                    .and_then(Json::as_f64)
+                    .ok_or_else(|| anyhow!("manifest[{name}]: missing momentum"))?,
+                total_params,
+                params,
+                grad_step_file: file_of("grad_step")?,
+                apply_update_file: file_of("apply_update")?,
+                init_params_file: dir.join(
+                    m.get("init_params")
+                        .and_then(Json::as_str)
+                        .ok_or_else(|| anyhow!("manifest[{name}]: missing init_params"))?,
+                ),
+            });
+        }
+        Ok(Manifest { models })
+    }
+
+    pub fn model(&self, name: &str) -> Result<&ModelManifest> {
+        self.models
+            .iter()
+            .find(|m| m.name == name)
+            .ok_or_else(|| {
+                anyhow!(
+                    "model `{name}` not in manifest (have: {})",
+                    self.models
+                        .iter()
+                        .map(|m| m.name.as_str())
+                        .collect::<Vec<_>>()
+                        .join(", ")
+                )
+            })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "version": 1,
+      "models": {
+        "mlp": {
+          "batch": 32, "input_shape": [32, 32, 3], "n_classes": 100,
+          "momentum": 0.9, "init_seed": 0, "total_params": 14,
+          "params": [
+            {"name": "w", "shape": [3, 4]},
+            {"name": "b", "shape": [2]}
+          ],
+          "grad_step": {"file": "mlp_grad_step.hlo.txt"},
+          "apply_update": {"file": "mlp_apply_update.hlo.txt"},
+          "init_params": "mlp_init.bin"
+        }
+      }
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE, Path::new("/art")).unwrap();
+        let mm = m.model("mlp").unwrap();
+        assert_eq!(mm.batch, 32);
+        assert_eq!(mm.total_params, 14);
+        assert_eq!(mm.params[0].size(), 12);
+        assert_eq!(mm.params[1].size(), 2);
+        assert_eq!(mm.x_len(), 32 * 3072);
+        assert!(mm.grad_step_file.ends_with("mlp_grad_step.hlo.txt"));
+        assert!(m.model("nope").is_err());
+    }
+
+    #[test]
+    fn rejects_param_sum_mismatch() {
+        let bad = SAMPLE.replace("\"total_params\": 14", "\"total_params\": 99");
+        assert!(Manifest::parse(&bad, Path::new("/a")).is_err());
+    }
+
+    #[test]
+    fn rejects_bad_version() {
+        let bad = SAMPLE.replace("\"version\": 1", "\"version\": 2");
+        assert!(Manifest::parse(&bad, Path::new("/a")).is_err());
+    }
+
+    #[test]
+    fn parses_real_artifacts_if_present() {
+        // Integration guard: when `make artifacts` has run, the real
+        // manifest must parse and be internally consistent.
+        let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if !dir.join("manifest.json").exists() {
+            return; // artifacts not built in this environment
+        }
+        let m = Manifest::load(&dir).unwrap();
+        assert!(!m.models.is_empty());
+        for mm in &m.models {
+            assert!(mm.grad_step_file.exists(), "{:?}", mm.grad_step_file);
+            assert!(mm.apply_update_file.exists());
+            let init_len = std::fs::metadata(&mm.init_params_file).unwrap().len();
+            assert_eq!(init_len as usize, mm.total_params * 4);
+        }
+    }
+}

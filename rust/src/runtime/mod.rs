@@ -1,0 +1,210 @@
+//! PJRT runtime: loads the AOT artifacts (`artifacts/*.hlo.txt`) and
+//! executes them on the CPU PJRT client — the only bridge between the rust
+//! coordinator and the JAX/Pallas-authored compute. Python never runs here.
+//!
+//! Pattern (from /opt/xla-example/load_hlo): HLO **text** →
+//! `HloModuleProto::from_text_file` → `XlaComputation::from_proto` →
+//! `PjRtClient::compile` → `execute`. Outputs arrive as a 1-tuple literal
+//! (jax lowers with `return_tuple=True`).
+
+pub mod manifest;
+
+pub use manifest::{Manifest, ModelManifest, ParamSpec};
+
+use anyhow::{bail, Context, Result};
+use std::path::Path;
+
+/// Process-wide PJRT client plus the compiled executables for one model.
+pub struct ModelRuntime {
+    pub manifest: ModelManifest,
+    client: xla::PjRtClient,
+    grad_step: xla::PjRtLoadedExecutable,
+    apply_update: xla::PjRtLoadedExecutable,
+}
+
+/// Host-side training state: flat-f32 views of every parameter tensor (in
+/// manifest order) and the matching momentum buffers.
+#[derive(Clone, Debug)]
+pub struct TrainState {
+    pub params: Vec<Vec<f32>>,
+    pub moms: Vec<Vec<f32>>,
+}
+
+impl TrainState {
+    /// Concatenate all parameters (manifest order) — the flat view the
+    /// compression pipeline consumes for magnitude pruning.
+    pub fn flat_params(&self) -> Vec<f32> {
+        let total: usize = self.params.iter().map(Vec::len).sum();
+        let mut out = Vec::with_capacity(total);
+        for p in &self.params {
+            out.extend_from_slice(p);
+        }
+        out
+    }
+
+    pub fn total_params(&self) -> usize {
+        self.params.iter().map(Vec::len).sum()
+    }
+}
+
+/// Outputs of one `grad_step` call.
+#[derive(Clone, Debug)]
+pub struct GradStepOut {
+    /// Flat gradient over all parameters (manifest order).
+    pub flat_grad: Vec<f32>,
+    pub loss: f32,
+    pub n_correct: f32,
+}
+
+impl ModelRuntime {
+    /// Load and compile one model's executables from an artifact dir.
+    pub fn load(artifact_dir: &Path, model: &str) -> Result<ModelRuntime> {
+        let manifest = Manifest::load(artifact_dir)?;
+        let mm = manifest.model(model)?.clone();
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        let grad_step = Self::compile(&client, &mm.grad_step_file)?;
+        let apply_update = Self::compile(&client, &mm.apply_update_file)?;
+        Ok(ModelRuntime {
+            manifest: mm,
+            client,
+            grad_step,
+            apply_update,
+        })
+    }
+
+    fn compile(client: &xla::PjRtClient, path: &Path) -> Result<xla::PjRtLoadedExecutable> {
+        let path_str = path
+            .to_str()
+            .with_context(|| format!("non-utf8 path {path:?}"))?;
+        let proto = xla::HloModuleProto::from_text_file(path_str)
+            .with_context(|| format!("parsing HLO text {path:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        client
+            .compile(&comp)
+            .with_context(|| format!("compiling {path:?}"))
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Build the initial [`TrainState`] from `artifacts/<model>_init.bin`.
+    pub fn init_state(&self) -> Result<TrainState> {
+        let raw = std::fs::read(&self.manifest.init_params_file)
+            .with_context(|| format!("reading {:?}", self.manifest.init_params_file))?;
+        if raw.len() != self.manifest.total_params * 4 {
+            bail!(
+                "init params: {} bytes, expected {}",
+                raw.len(),
+                self.manifest.total_params * 4
+            );
+        }
+        let flat: Vec<f32> = raw
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+            .collect();
+        Ok(self.state_from_flat(&flat))
+    }
+
+    /// Split a flat parameter vector into per-tensor buffers (zero moms).
+    pub fn state_from_flat(&self, flat: &[f32]) -> TrainState {
+        assert_eq!(flat.len(), self.manifest.total_params);
+        let mut params = Vec::with_capacity(self.manifest.params.len());
+        let mut off = 0usize;
+        for spec in &self.manifest.params {
+            let n = spec.size();
+            params.push(flat[off..off + n].to_vec());
+            off += n;
+        }
+        let moms = params.iter().map(|p| vec![0f32; p.len()]).collect();
+        TrainState { params, moms }
+    }
+
+    fn literal_f32(&self, data: &[f32], shape: &[usize]) -> Result<xla::Literal> {
+        let n: usize = shape.iter().product::<usize>().max(1);
+        assert_eq!(data.len(), n, "literal shape/data mismatch");
+        let bytes =
+            unsafe { std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4) };
+        xla::Literal::create_from_shape_and_untyped_data(xla::ElementType::F32, shape, bytes)
+            .context("creating literal")
+    }
+
+    /// Run `grad_step(params, x, y)`. `x` is `batch×H×W×C` flat, `y` is
+    /// `batch` labels as f32.
+    pub fn grad_step(&self, state: &TrainState, x: &[f32], y: &[f32]) -> Result<GradStepOut> {
+        let mm = &self.manifest;
+        if x.len() != mm.x_len() {
+            bail!("x length {} != {}", x.len(), mm.x_len());
+        }
+        if y.len() != mm.batch {
+            bail!("y length {} != batch {}", y.len(), mm.batch);
+        }
+        let mut args: Vec<xla::Literal> = Vec::with_capacity(mm.params.len() + 2);
+        for (p, spec) in state.params.iter().zip(&mm.params) {
+            args.push(self.literal_f32(p, &spec.shape)?);
+        }
+        let mut x_shape = vec![mm.batch];
+        x_shape.extend_from_slice(&mm.input_shape);
+        args.push(self.literal_f32(x, &x_shape)?);
+        args.push(self.literal_f32(y, &[mm.batch])?);
+
+        let result = self.grad_step.execute::<xla::Literal>(&args)?[0][0].to_literal_sync()?;
+        let parts = result.to_tuple()?;
+        if parts.len() != 3 {
+            bail!("grad_step returned {} outputs, expected 3", parts.len());
+        }
+        let flat_grad = parts[0].to_vec::<f32>()?;
+        let loss = parts[1].to_vec::<f32>()?[0];
+        let n_correct = parts[2].to_vec::<f32>()?[0];
+        if flat_grad.len() != mm.total_params {
+            bail!(
+                "flat_grad length {} != total_params {}",
+                flat_grad.len(),
+                mm.total_params
+            );
+        }
+        Ok(GradStepOut {
+            flat_grad,
+            loss,
+            n_correct,
+        })
+    }
+
+    /// Run `apply_update(params, moms, flat_grad, lr)` and write the new
+    /// parameters/momenta back into `state`.
+    pub fn apply_update(&self, state: &mut TrainState, flat_grad: &[f32], lr: f32) -> Result<()> {
+        let mm = &self.manifest;
+        if flat_grad.len() != mm.total_params {
+            bail!("flat_grad length {} != {}", flat_grad.len(), mm.total_params);
+        }
+        let n = mm.params.len();
+        let mut args: Vec<xla::Literal> = Vec::with_capacity(2 * n + 2);
+        for (p, spec) in state.params.iter().zip(&mm.params) {
+            args.push(self.literal_f32(p, &spec.shape)?);
+        }
+        for (m, spec) in state.moms.iter().zip(&mm.params) {
+            args.push(self.literal_f32(m, &spec.shape)?);
+        }
+        args.push(self.literal_f32(flat_grad, &[mm.total_params])?);
+        args.push(xla::Literal::scalar(lr));
+
+        let result = self.apply_update.execute::<xla::Literal>(&args)?[0][0].to_literal_sync()?;
+        let parts = result.to_tuple()?;
+        if parts.len() != 2 * n {
+            bail!(
+                "apply_update returned {} outputs, expected {}",
+                parts.len(),
+                2 * n
+            );
+        }
+        for (i, part) in parts.into_iter().enumerate() {
+            let v = part.to_vec::<f32>()?;
+            if i < n {
+                state.params[i] = v;
+            } else {
+                state.moms[i - n] = v;
+            }
+        }
+        Ok(())
+    }
+}

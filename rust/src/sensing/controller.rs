@@ -1,0 +1,377 @@
+//! Algorithm 1 — Network Status Sensing and Adaptive Compression Ratio
+//! Adjustment.
+//!
+//! Two phases:
+//!
+//! **Startup** (lines 1–5): `ratio ← 0.01`, then every step
+//! `ratio ← min(1, ratio + β₁)` — a fast ramp, mirroring BBR's startup —
+//! until packet loss or excessive RTT is detected, at which point the
+//! controller enters the steady phase.
+//!
+//! **NetSense** (lines 6–19): after each gradient transmission interval the
+//! estimator updates BtlBw/RTprop/BDP, and:
+//! `data_size > 0.9 × BDP  ⇒  ratio ← max(0.005, ratio × α)`  (α = 0.5)
+//! `otherwise              ⇒  ratio ← min(1, ratio + β₂)`      (β₂ = 0.01)
+
+use super::estimator::{BandwidthEstimator, EstimatorConfig, NetworkEstimate};
+use crate::netsim::time::SimTime;
+
+/// Controller tunables (paper defaults in `Default`).
+#[derive(Clone, Debug)]
+pub struct ControllerConfig {
+    /// Initial compression ratio (Algorithm 1 line 2).
+    pub initial_ratio: f64,
+    /// Startup additive ramp β₁ per step.
+    pub beta1: f64,
+    /// Steady additive increase β₂ per interval.
+    pub beta2: f64,
+    /// Multiplicative decrease α on congestion.
+    pub alpha: f64,
+    /// Ratio floor (paper: 0.005).
+    pub min_ratio: f64,
+    /// BDP guard factor (paper: 0.9).
+    pub bdp_guard: f64,
+    /// RTT considered "excessive" at `rtt > factor × RTprop` (startup exit).
+    pub excess_rtt_factor: f64,
+    /// Cap on startup length, in intervals (safety net).
+    pub max_startup_intervals: u64,
+    pub estimator: EstimatorConfig,
+}
+
+impl Default for ControllerConfig {
+    fn default() -> Self {
+        ControllerConfig {
+            initial_ratio: 0.01,
+            beta1: 0.05,
+            beta2: 0.01,
+            alpha: 0.5,
+            min_ratio: 0.005,
+            bdp_guard: 0.9,
+            excess_rtt_factor: 1.5,
+            max_startup_intervals: 50,
+            estimator: EstimatorConfig::default(),
+        }
+    }
+}
+
+/// Which phase the controller is in.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Phase {
+    Startup,
+    NetSense,
+}
+
+/// The Algorithm 1 state machine.
+#[derive(Clone, Debug)]
+pub struct RatioController {
+    config: ControllerConfig,
+    estimator: BandwidthEstimator,
+    ratio: f64,
+    phase: Phase,
+    intervals: u64,
+    /// Diagnostics: how often each branch fired.
+    pub n_decreases: u64,
+    pub n_increases: u64,
+}
+
+impl RatioController {
+    pub fn new(config: ControllerConfig) -> Self {
+        assert!(config.initial_ratio > 0.0 && config.initial_ratio <= 1.0);
+        assert!(config.alpha > 0.0 && config.alpha < 1.0);
+        assert!(config.min_ratio > 0.0);
+        RatioController {
+            estimator: BandwidthEstimator::new(config.estimator.clone()),
+            ratio: config.initial_ratio,
+            phase: Phase::Startup,
+            intervals: 0,
+            n_decreases: 0,
+            n_increases: 0,
+            config,
+        }
+    }
+
+    /// The compression ratio to use for the *next* transmission.
+    pub fn ratio(&self) -> f64 {
+        self.ratio
+    }
+
+    pub fn phase(&self) -> Phase {
+        self.phase
+    }
+
+    pub fn estimate(&self) -> Option<NetworkEstimate> {
+        self.estimator.estimate()
+    }
+
+    pub fn intervals(&self) -> u64 {
+        self.intervals
+    }
+
+    /// Feed interval `i`'s observation (the just-completed transmission:
+    /// payload bytes and measured transfer time) and advance the state
+    /// machine. Returns the ratio for the next interval.
+    ///
+    /// `lost` reports packet loss in the interval (the paper's alternative
+    /// startup-exit trigger; the simulator's reliable path never loses, but
+    /// best-effort overload can surface here).
+    pub fn on_interval(&mut self, data_size_bytes: u64, rtt: SimTime, lost: bool) -> f64 {
+        self.intervals += 1;
+        self.estimator.observe(data_size_bytes, rtt);
+
+        match self.phase {
+            Phase::Startup => {
+                let excessive = self
+                    .estimator
+                    .rtt_excessive(rtt, self.config.excess_rtt_factor);
+                if lost || excessive || self.intervals >= self.config.max_startup_intervals {
+                    self.phase = Phase::NetSense;
+                    // Fall through to a NetSense-style adjustment this
+                    // interval so congestion found at startup-exit is acted
+                    // on immediately.
+                    self.netsense_adjust(data_size_bytes);
+                } else {
+                    // Algorithm 1 line 5: quick ramp.
+                    self.ratio = (self.ratio + self.config.beta1).min(1.0);
+                    self.n_increases += 1;
+                }
+            }
+            Phase::NetSense => self.netsense_adjust(data_size_bytes),
+        }
+        self.ratio
+    }
+
+    fn netsense_adjust(&mut self, data_size_bytes: u64) {
+        let Some(est) = self.estimator.estimate() else {
+            return;
+        };
+        // Algorithm 1 lines 15–19 / Eq. (3).
+        if (data_size_bytes as f64) > self.config.bdp_guard * est.bdp_bytes {
+            self.ratio = (self.ratio * self.config.alpha).max(self.config.min_ratio);
+            self.n_decreases += 1;
+        } else {
+            self.ratio = (self.ratio + self.config.beta2).min(1.0);
+            self.n_increases += 1;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::netsim::schedule::mbps;
+    use crate::netsim::topology::StarTopology;
+    use crate::netsim::NetSim;
+    use crate::testing::prop::*;
+
+    fn ctl() -> RatioController {
+        RatioController::new(ControllerConfig::default())
+    }
+
+    #[test]
+    fn starts_in_startup_at_initial_ratio() {
+        let c = ctl();
+        assert_eq!(c.phase(), Phase::Startup);
+        assert_eq!(c.ratio(), 0.01);
+    }
+
+    #[test]
+    fn startup_ramps_additively() {
+        let mut c = ctl();
+        // Constant small RTT → no congestion signal → keep ramping.
+        let r1 = c.on_interval(1000, SimTime::from_millis(10), false);
+        assert!((r1 - 0.06).abs() < 1e-12);
+        let r2 = c.on_interval(1000, SimTime::from_millis(10), false);
+        assert!((r2 - 0.11).abs() < 1e-12);
+        assert_eq!(c.phase(), Phase::Startup);
+    }
+
+    #[test]
+    fn excessive_rtt_exits_startup() {
+        let mut c = ctl();
+        c.on_interval(1000, SimTime::from_millis(10), false);
+        c.on_interval(1000, SimTime::from_millis(10), false);
+        // RTT jumps 5× → excessive → NetSense.
+        c.on_interval(100_000, SimTime::from_millis(50), false);
+        assert_eq!(c.phase(), Phase::NetSense);
+    }
+
+    #[test]
+    fn loss_exits_startup() {
+        let mut c = ctl();
+        c.on_interval(1000, SimTime::from_millis(10), true);
+        assert_eq!(c.phase(), Phase::NetSense);
+    }
+
+    #[test]
+    fn startup_capped() {
+        let cfg = ControllerConfig {
+            max_startup_intervals: 5,
+            ..Default::default()
+        };
+        let mut c = RatioController::new(cfg);
+        for _ in 0..5 {
+            c.on_interval(1000, SimTime::from_millis(10), false);
+        }
+        assert_eq!(c.phase(), Phase::NetSense);
+    }
+
+    #[test]
+    fn netsense_multiplicative_decrease_on_congestion() {
+        let mut c = ctl();
+        // Two clean startup intervals establish RTprop = 10 ms and ramp the
+        // ratio to 0.11 (well above the 0.005 floor).
+        c.on_interval(1000, SimTime::from_millis(10), false);
+        c.on_interval(1000, SimTime::from_millis(10), false);
+        let before = c.ratio();
+        assert!((before - 0.11).abs() < 1e-12);
+        // 3× RTT is excessive → exits startup; BDP ≈ 1.67 kB and the 5 kB
+        // payload exceeds the 0.9 guard → multiplicative decrease.
+        let after = c.on_interval(5000, SimTime::from_millis(30), false);
+        assert_eq!(c.phase(), Phase::NetSense);
+        assert!((after - before * 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn netsense_additive_increase_when_underutilized() {
+        let mut c = ctl();
+        c.on_interval(1_000_000, SimTime::from_millis(100), true); // BDP = 1 MB
+        let before = c.ratio();
+        // 100 kB ≤ 0.9 MB → ratio += β₂.
+        let after = c.on_interval(100_000, SimTime::from_millis(100), false);
+        assert!((after - (before + 0.01)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn ratio_floor_is_0005() {
+        let mut c = ctl();
+        c.on_interval(1_000_000, SimTime::from_millis(100), true);
+        for _ in 0..20 {
+            // persist congestion
+            c.on_interval(10_000_000, SimTime::from_millis(1000), false);
+        }
+        assert!((c.ratio() - 0.005).abs() < 1e-12);
+    }
+
+    #[test]
+    fn ratio_cap_is_one() {
+        // Keep BtlBw anchored high (long window + one bandwidth-probing
+        // sample) so small payloads sit under the BDP guard and the ratio
+        // climbs additively all the way to the cap.
+        let cfg = ControllerConfig {
+            estimator: EstimatorConfig {
+                btlbw_window: 10_000,
+                rtprop_window: 10_000,
+            },
+            ..Default::default()
+        };
+        let mut c = RatioController::new(cfg);
+        // 100 MB / 100 ms → BtlBw 1 GB/s, RTprop 0.1 s → BDP 100 MB.
+        c.on_interval(100_000_000, SimTime::from_millis(100), true);
+        for _ in 0..200 {
+            c.on_interval(1_000, SimTime::from_millis(100), false);
+        }
+        assert_eq!(c.ratio(), 1.0);
+    }
+
+    #[test]
+    fn property_ratio_always_in_bounds() {
+        forall(
+            "ratio ∈ [0.005, 1] under arbitrary observations",
+            100,
+            vec_f32(1..100, 0.0..1.0),
+            |obs| {
+                let mut c = ctl();
+                for (i, &x) in obs.iter().enumerate() {
+                    let bytes = (x as f64 * 10_000_000.0) as u64 + 1;
+                    let rtt = SimTime::from_micros((x * 500_000.0) as u64 + 100);
+                    c.on_interval(bytes, rtt, i % 17 == 3);
+                    let r = c.ratio();
+                    if !(0.005..=1.0).contains(&r) {
+                        return false;
+                    }
+                }
+                true
+            },
+        );
+    }
+
+    /// End-to-end closed loop on the simulator: the controller must settle
+    /// near the ratio whose payload ≈ BDP, and its payloads must not
+    /// persistently exceed the guard.
+    #[test]
+    fn closed_loop_converges_on_simulated_link() {
+        let model_bytes = 46_200_000u64; // ResNet18's 46.2 MB gradients
+        let mut sim = NetSim::quiet(StarTopology::constant(
+            2,
+            mbps(200.0),
+            SimTime::from_millis(20),
+        ));
+        let mut c = ctl();
+        let mut last_ratios = Vec::new();
+        for step in 0..300 {
+            let ratio = c.ratio();
+            // payload model: sparse COO, 8 bytes per surviving element
+            let payload = ((model_bytes / 4) as f64 * ratio * 8.0) as u64;
+            let r = sim.transfer(0, 1, payload);
+            sim.advance_to(r.arrival);
+            // inter-step compute gap
+            sim.advance_by(SimTime::from_millis(50));
+            c.on_interval(payload, r.rtt(), false);
+            if step >= 250 {
+                last_ratios.push(c.ratio());
+            }
+        }
+        assert_eq!(c.phase(), Phase::NetSense);
+        let est = c.estimate().unwrap();
+        // Steady-state payload should hover near (not wildly above) BDP.
+        let mean_ratio = last_ratios.iter().sum::<f64>() / last_ratios.len() as f64;
+        let payload = (model_bytes / 4) as f64 * mean_ratio * 8.0;
+        assert!(
+            payload < 3.0 * est.bdp_bytes,
+            "payload {payload:.0} should be near BDP {:.0}",
+            est.bdp_bytes
+        );
+        assert!(
+            payload > 0.2 * est.bdp_bytes,
+            "payload {payload:.0} collapsed vs BDP {:.0}",
+            est.bdp_bytes
+        );
+        // And the controller must have exercised both branches.
+        assert!(c.n_decreases > 0 && c.n_increases > 0);
+    }
+
+    #[test]
+    fn adapts_downward_when_bandwidth_degrades() {
+        use crate::netsim::link::LinkConfig;
+        use crate::netsim::schedule::BandwidthSchedule;
+        let sched = BandwidthSchedule::piecewise(vec![
+            (SimTime::ZERO, mbps(1000.0)),
+            (SimTime::from_secs_f64(30.0), mbps(100.0)),
+        ]);
+        let cfg = LinkConfig::new(sched, SimTime::from_millis(20));
+        let mut sim = NetSim::quiet(StarTopology::uniform(2, cfg));
+        let mut c = ctl();
+        let model_elems = 11_500_000f64;
+        let ratio_at = |c: &RatioController| c.ratio();
+        let mut ratio_before_degrade = 0.0;
+        for _ in 0..600 {
+            let ratio = ratio_at(&c);
+            let payload = (model_elems * ratio * 8.0) as u64;
+            let r = sim.transfer(0, 1, payload);
+            sim.advance_to(r.arrival);
+            sim.advance_by(SimTime::from_millis(50));
+            c.on_interval(payload, r.rtt(), false);
+            if sim.now() < SimTime::from_secs_f64(30.0) {
+                ratio_before_degrade = c.ratio();
+            }
+            if sim.now() > SimTime::from_secs_f64(120.0) {
+                break;
+            }
+        }
+        let ratio_after = c.ratio();
+        assert!(
+            ratio_after < ratio_before_degrade,
+            "ratio should fall after degradation: {ratio_before_degrade} → {ratio_after}"
+        );
+    }
+}

@@ -1,0 +1,233 @@
+//! EBB / BtlBw / RTprop / BDP estimation (paper Eq. (1)–(2), Fig. 2).
+//!
+//! Per gradient-transmission interval `i` the coordinator observes the
+//! payload size and its transfer time ("RTT" in the paper's terminology):
+//!
+//! - `EBB_i = data_size_i / RTT_i`  (estimated bottleneck bandwidth)
+//! - `BtlBw = max(EBB)` over a sliding window (bandwidth filter)
+//! - `RTprop = min(RTT)` over a sliding window (propagation filter)
+//! - `BDP = BtlBw × RTprop`
+//!
+//! Windows are indexed by interval count (like BBR's "round trips"), so
+//! stale observations age out as conditions change — this is what lets the
+//! estimator track the degrading/fluctuating scenarios (Figs. 7–8).
+
+use crate::netsim::time::SimTime;
+use crate::util::stats::{WindowedMax, WindowedMin};
+
+/// Estimator tunables.
+#[derive(Clone, Debug)]
+pub struct EstimatorConfig {
+    /// BtlBw filter window, in observation intervals.
+    pub btlbw_window: u64,
+    /// RTprop filter window, in observation intervals.
+    pub rtprop_window: u64,
+}
+
+impl Default for EstimatorConfig {
+    fn default() -> Self {
+        EstimatorConfig {
+            // BBR uses ~10 RTT for bandwidth and ~10 s for RTprop; in
+            // interval units we keep bandwidth reactive and RTprop long.
+            btlbw_window: 10,
+            rtprop_window: 50,
+        }
+    }
+}
+
+/// A point-in-time estimate of the network state.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct NetworkEstimate {
+    /// Bottleneck bandwidth, bytes per second.
+    pub btlbw_bytes_per_sec: f64,
+    /// Propagation delay estimate.
+    pub rtprop: SimTime,
+    /// Bandwidth-delay product, bytes.
+    pub bdp_bytes: f64,
+}
+
+/// Streaming estimator over (data_size, RTT) observations.
+#[derive(Clone, Debug)]
+pub struct BandwidthEstimator {
+    config: EstimatorConfig,
+    btlbw: WindowedMax,
+    rtprop: WindowedMin,
+    interval: u64,
+    observations: u64,
+}
+
+impl BandwidthEstimator {
+    pub fn new(config: EstimatorConfig) -> Self {
+        BandwidthEstimator {
+            btlbw: WindowedMax::new(config.btlbw_window),
+            rtprop: WindowedMin::new(config.rtprop_window),
+            config,
+            interval: 0,
+            observations: 0,
+        }
+    }
+
+    /// Record interval `i`'s observation (Algorithm 1 lines 8–12).
+    pub fn observe(&mut self, data_size_bytes: u64, rtt: SimTime) {
+        assert!(rtt > SimTime::ZERO, "non-positive RTT");
+        self.interval += 1;
+        self.observations += 1;
+        let ebb = data_size_bytes as f64 / rtt.as_secs_f64(); // Eq. (1)
+        self.btlbw.update(self.interval, ebb);
+        self.rtprop.update(self.interval, rtt.as_secs_f64());
+    }
+
+    /// Number of observations so far.
+    pub fn observations(&self) -> u64 {
+        self.observations
+    }
+
+    /// Current estimate, if at least one observation is in the windows.
+    pub fn estimate(&self) -> Option<NetworkEstimate> {
+        let btlbw = self.btlbw.get()?;
+        let rtprop_s = self.rtprop.get()?;
+        Some(NetworkEstimate {
+            btlbw_bytes_per_sec: btlbw,
+            rtprop: SimTime::from_secs_f64(rtprop_s),
+            bdp_bytes: btlbw * rtprop_s, // Eq. (2)
+        })
+    }
+
+    /// True when the latest RTT is "excessive" relative to RTprop — the
+    /// startup-exit condition (paper §4.1: "until excessive RTT is
+    /// detected", mirroring BBR's pipe-full test). `last_rtt > factor ×
+    /// RTprop` with at least a couple of observations.
+    pub fn rtt_excessive(&self, last_rtt: SimTime, factor: f64) -> bool {
+        match self.estimate() {
+            Some(est) if self.observations >= 2 => {
+                last_rtt.as_secs_f64() > est.rtprop.as_secs_f64() * factor
+            }
+            _ => false,
+        }
+    }
+
+    pub fn config(&self) -> &EstimatorConfig {
+        &self.config
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn est() -> BandwidthEstimator {
+        BandwidthEstimator::new(EstimatorConfig::default())
+    }
+
+    #[test]
+    fn empty_estimator_has_no_estimate() {
+        assert!(est().estimate().is_none());
+    }
+
+    #[test]
+    fn single_observation_defines_all_three() {
+        let mut e = est();
+        // 1 MB in 100 ms → 10 MB/s
+        e.observe(1_000_000, SimTime::from_millis(100));
+        let s = e.estimate().unwrap();
+        assert!((s.btlbw_bytes_per_sec - 10e6).abs() < 1.0);
+        assert_eq!(s.rtprop, SimTime::from_millis(100));
+        assert!((s.bdp_bytes - 1e6).abs() < 1.0);
+    }
+
+    #[test]
+    fn btlbw_takes_max_rtprop_takes_min() {
+        let mut e = est();
+        e.observe(1_000_000, SimTime::from_millis(100)); // 10 MB/s
+        e.observe(500_000, SimTime::from_millis(20)); // 25 MB/s, lower RTT
+        e.observe(100_000, SimTime::from_millis(50)); // 2 MB/s
+        let s = e.estimate().unwrap();
+        assert!((s.btlbw_bytes_per_sec - 25e6).abs() < 1.0);
+        assert_eq!(s.rtprop, SimTime::from_millis(20));
+    }
+
+    #[test]
+    fn old_observations_age_out() {
+        let cfg = EstimatorConfig {
+            btlbw_window: 3,
+            rtprop_window: 3,
+        };
+        let mut e = BandwidthEstimator::new(cfg);
+        e.observe(1_000_000, SimTime::from_millis(10)); // 100 MB/s burst
+        for _ in 0..5 {
+            e.observe(100_000, SimTime::from_millis(50)); // 2 MB/s steady
+        }
+        let s = e.estimate().unwrap();
+        // The 100 MB/s sample (and its 10 ms RTT) must have aged out.
+        assert!((s.btlbw_bytes_per_sec - 2e6).abs() < 1.0, "{s:?}");
+        assert_eq!(s.rtprop, SimTime::from_millis(50));
+    }
+
+    #[test]
+    fn converges_to_ground_truth_on_simulated_link() {
+        // Drive the estimator with the netsim and check it recovers the
+        // configured ground truth (stronger than the paper's testbed can).
+        use crate::netsim::topology::StarTopology;
+        use crate::netsim::NetSim;
+        let bw_bps = 200e6; // 200 Mbps
+        let prop = SimTime::from_millis(20);
+        let mut sim = NetSim::quiet(StarTopology::constant(2, bw_bps, prop));
+        let mut e = est();
+        // Ramp payload sizes from 100 kB to 10 MB (like startup).
+        let mut size = 100_000u64;
+        for _ in 0..15 {
+            let r = sim.transfer(0, 1, size);
+            sim.advance_to(r.arrival);
+            e.observe(size, r.rtt());
+            size = (size as f64 * 1.5) as u64;
+        }
+        let s = e.estimate().unwrap();
+        // Ground truth: two hops of 200 Mbps in series = 12.5 MB/s
+        // effective on payload (store-and-forward halves throughput for
+        // large messages), RTprop = 2×20 ms + small serialization floor.
+        let truth_bw = bw_bps / 8.0 / 2.0;
+        let rel = (s.btlbw_bytes_per_sec - truth_bw).abs() / truth_bw;
+        assert!(rel < 0.15, "btlbw {} vs {truth_bw}", s.btlbw_bytes_per_sec);
+        assert!(
+            s.rtprop >= SimTime::from_millis(40) && s.rtprop <= SimTime::from_millis(60),
+            "rtprop {}",
+            s.rtprop
+        );
+    }
+
+    #[test]
+    fn rtt_excessive_logic() {
+        let mut e = est();
+        assert!(!e.rtt_excessive(SimTime::from_millis(500), 2.0));
+        e.observe(1000, SimTime::from_millis(10));
+        // needs ≥ 2 observations
+        assert!(!e.rtt_excessive(SimTime::from_millis(100), 2.0));
+        e.observe(1000, SimTime::from_millis(10));
+        assert!(e.rtt_excessive(SimTime::from_millis(21), 2.0));
+        assert!(!e.rtt_excessive(SimTime::from_millis(19), 2.0));
+    }
+
+    #[test]
+    #[should_panic(expected = "non-positive RTT")]
+    fn zero_rtt_rejected() {
+        est().observe(100, SimTime::ZERO);
+    }
+
+    #[test]
+    fn tracks_bandwidth_degradation() {
+        // Feed 2 MB/s then degrade to 0.5 MB/s; estimate must follow after
+        // the window slides.
+        let mut e = BandwidthEstimator::new(EstimatorConfig {
+            btlbw_window: 5,
+            rtprop_window: 100,
+        });
+        for _ in 0..10 {
+            e.observe(200_000, SimTime::from_millis(100)); // 2 MB/s
+        }
+        assert!((e.estimate().unwrap().btlbw_bytes_per_sec - 2e6).abs() < 1.0);
+        for _ in 0..10 {
+            e.observe(50_000, SimTime::from_millis(100)); // 0.5 MB/s
+        }
+        assert!((e.estimate().unwrap().btlbw_bytes_per_sec - 0.5e6).abs() < 1.0);
+    }
+}

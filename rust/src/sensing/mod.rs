@@ -1,0 +1,19 @@
+//! Network status sensing (the paper's §4.1): the BBR-inspired estimator
+//! and the Algorithm 1 compression-ratio controller.
+//!
+//! - [`estimator`] — per-interval (data_size, RTT) observations →
+//!   EBB = data_size / RTT, windowed BtlBw = max(EBB), RTprop = min(RTT),
+//!   BDP = BtlBw × RTprop.
+//! - [`controller`] — the two-phase ratio state machine: *startup* (ratio
+//!   0.01, fast additive ramp β₁ until excess RTT) and *NetSense*
+//!   (multiplicative decrease ×α when `data_size > 0.9·BDP`, additive
+//!   increase +β₂ otherwise, clamped to [0.005, 1]).
+//!
+//! The sensing layer consumes only observables a real deployment has —
+//! bytes sent and measured transfer times — never simulator ground truth.
+
+pub mod controller;
+pub mod estimator;
+
+pub use controller::{ControllerConfig, Phase, RatioController};
+pub use estimator::{BandwidthEstimator, EstimatorConfig, NetworkEstimate};

@@ -1,0 +1,4 @@
+//! Test-support substrates: a proptest-style property testing harness
+//! ([`prop`]) used by unit and integration tests across the crate.
+
+pub mod prop;

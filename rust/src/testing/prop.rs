@@ -1,0 +1,271 @@
+//! Property-based testing harness (proptest replacement for the offline
+//! build): seeded generators, a `forall` runner that reports the failing
+//! seed, and greedy input shrinking for `Vec`-shaped inputs.
+//!
+//! Usage (`no_run`: doctest binaries don't receive the xla rpath link
+//! flag in this offline image, so the example is compile-checked only —
+//! the same pattern executes in this module's unit tests):
+//! ```no_run
+//! use netsenseml::testing::prop::*;
+//! forall("reverse twice is identity", 100, vec_f32(0..500, -1e3..1e3), |v| {
+//!     let mut w = v.clone();
+//!     w.reverse();
+//!     w.reverse();
+//!     w == *v
+//! });
+//! ```
+
+use crate::util::rng::Pcg64;
+use std::ops::Range;
+
+/// A generator of values of type `T`.
+pub trait Gen<T> {
+    fn generate(&self, rng: &mut Pcg64) -> T;
+    /// Candidate smaller versions of a failing input (greedy shrink step).
+    fn shrink(&self, value: &T) -> Vec<T> {
+        let _ = value;
+        Vec::new()
+    }
+}
+
+/// Run `prop` on `cases` random inputs from `gen`. On failure, shrink the
+/// input greedily and panic with the seed, case index, and minimized input
+/// (via `Debug`).
+pub fn forall<T: std::fmt::Debug + Clone, G: Gen<T>, P: Fn(&T) -> bool>(
+    name: &str,
+    cases: usize,
+    gen: G,
+    prop: P,
+) {
+    // Env-overridable base seed so failures can be replayed exactly.
+    let base_seed = std::env::var("NETSENSE_PROP_SEED")
+        .ok()
+        .and_then(|s| s.parse::<u64>().ok())
+        .unwrap_or(0x5eed_0001);
+    for case in 0..cases {
+        let mut rng = Pcg64::new(base_seed, case as u64);
+        let input = gen.generate(&mut rng);
+        if !prop(&input) {
+            let minimized = shrink_loop(&gen, input.clone(), &prop);
+            panic!(
+                "property `{name}` failed (seed={base_seed}, case={case})\n  original: {input:?}\n  minimized: {minimized:?}"
+            );
+        }
+    }
+}
+
+fn shrink_loop<T: Clone, G: Gen<T>, P: Fn(&T) -> bool>(gen: &G, mut failing: T, prop: &P) -> T {
+    // Greedy descent: take the first shrink candidate that still fails.
+    'outer: for _ in 0..1000 {
+        for cand in gen.shrink(&failing) {
+            if !prop(&cand) {
+                failing = cand;
+                continue 'outer;
+            }
+        }
+        break;
+    }
+    failing
+}
+
+// ---------------------------------------------------------------- basic gens
+
+/// Uniform usize in a range.
+pub struct UsizeGen(pub Range<usize>);
+
+impl Gen<usize> for UsizeGen {
+    fn generate(&self, rng: &mut Pcg64) -> usize {
+        self.0.start + rng.index((self.0.end - self.0.start).max(1))
+    }
+    fn shrink(&self, v: &usize) -> Vec<usize> {
+        let mut out = Vec::new();
+        if *v > self.0.start {
+            out.push(self.0.start);
+            out.push(self.0.start + (v - self.0.start) / 2);
+        }
+        out.dedup();
+        out
+    }
+}
+
+pub fn usize_in(r: Range<usize>) -> UsizeGen {
+    UsizeGen(r)
+}
+
+/// Uniform f64 in a range.
+pub struct F64Gen(pub Range<f64>);
+
+impl Gen<f64> for F64Gen {
+    fn generate(&self, rng: &mut Pcg64) -> f64 {
+        rng.range_f64(self.0.start, self.0.end)
+    }
+    fn shrink(&self, v: &f64) -> Vec<f64> {
+        let mid = (self.0.start + self.0.end) / 2.0;
+        if (*v - mid).abs() > 1e-9 {
+            vec![mid, (*v + mid) / 2.0]
+        } else {
+            vec![]
+        }
+    }
+}
+
+pub fn f64_in(r: Range<f64>) -> F64Gen {
+    F64Gen(r)
+}
+
+/// Vec of f32 with length sampled from `len` and values from `vals`.
+/// Occasionally injects special values (0, ±max, duplicates) to probe edges.
+pub struct VecF32Gen {
+    pub len: Range<usize>,
+    pub vals: Range<f32>,
+}
+
+impl Gen<Vec<f32>> for VecF32Gen {
+    fn generate(&self, rng: &mut Pcg64) -> Vec<f32> {
+        let n = self.len.start + rng.index((self.len.end - self.len.start).max(1));
+        let mut v: Vec<f32> = (0..n)
+            .map(|_| self.vals.start + rng.f32() * (self.vals.end - self.vals.start))
+            .collect();
+        // edge-value injection
+        if n > 0 && rng.chance(0.3) {
+            let i = rng.index(n);
+            v[i] = 0.0;
+        }
+        if n > 1 && rng.chance(0.3) {
+            let i = rng.index(n);
+            let j = rng.index(n);
+            v[i] = v[j]; // force a duplicate magnitude
+        }
+        if n > 0 && rng.chance(0.2) {
+            let i = rng.index(n);
+            v[i] = self.vals.end;
+        }
+        v
+    }
+
+    fn shrink(&self, v: &Vec<f32>) -> Vec<Vec<f32>> {
+        let mut out = Vec::new();
+        let n = v.len();
+        if n > self.len.start {
+            // halve
+            out.push(v[..(self.len.start.max(n / 2))].to_vec());
+            // drop first/last element
+            if n >= 1 + self.len.start {
+                out.push(v[1..].to_vec());
+                out.push(v[..n - 1].to_vec());
+            }
+        }
+        // zero out values
+        if v.iter().any(|&x| x != 0.0) {
+            out.push(v.iter().map(|_| 0.0).collect());
+        }
+        out
+    }
+}
+
+pub fn vec_f32(len: Range<usize>, vals: Range<f32>) -> VecF32Gen {
+    VecF32Gen { len, vals }
+}
+
+/// Pair generator.
+pub struct PairGen<A, B>(pub A, pub B);
+
+impl<T1: Clone, T2: Clone, A: Gen<T1>, B: Gen<T2>> Gen<(T1, T2)> for PairGen<A, B> {
+    fn generate(&self, rng: &mut Pcg64) -> (T1, T2) {
+        (self.0.generate(rng), self.1.generate(rng))
+    }
+    fn shrink(&self, v: &(T1, T2)) -> Vec<(T1, T2)> {
+        let mut out: Vec<(T1, T2)> = Vec::new();
+        for a in self.0.shrink(&v.0) {
+            out.push((a, v.1.clone()));
+        }
+        for b in self.1.shrink(&v.1) {
+            out.push((v.0.clone(), b));
+        }
+        out
+    }
+}
+
+pub fn pair<T1, T2, A: Gen<T1>, B: Gen<T2>>(a: A, b: B) -> PairGen<A, B> {
+    PairGen(a, b)
+}
+
+/// Map a generator through a function (no shrinking through the map).
+pub struct MapGen<T, G, F> {
+    inner: G,
+    f: F,
+    _marker: std::marker::PhantomData<fn() -> T>,
+}
+
+impl<T, U, G: Gen<T>, F: Fn(T) -> U> Gen<U> for MapGen<T, G, F> {
+    fn generate(&self, rng: &mut Pcg64) -> U {
+        (self.f)(self.inner.generate(rng))
+    }
+}
+
+pub fn map<T, U, G: Gen<T>, F: Fn(T) -> U>(g: G, f: F) -> MapGen<T, G, F> {
+    MapGen {
+        inner: g,
+        f,
+        _marker: std::marker::PhantomData,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        forall("reverse twice is identity", 50, vec_f32(0..64, -10.0..10.0), |v| {
+            let mut w = v.clone();
+            w.reverse();
+            w.reverse();
+            w == *v
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property `always false` failed")]
+    fn failing_property_panics_with_seed() {
+        forall("always false", 5, usize_in(0..10), |_| false);
+    }
+
+    #[test]
+    fn shrinking_minimizes_vec() {
+        // Property: no element equals the max bound. The shrinker should
+        // find a small counterexample; we just verify the panic message
+        // contains "minimized".
+        let result = std::panic::catch_unwind(|| {
+            forall("no max", 100, vec_f32(0..50, 0.0..4.0), |v| {
+                !v.iter().any(|&x| x >= 4.0)
+            });
+        });
+        let err = result.unwrap_err();
+        let msg = err
+            .downcast_ref::<String>()
+            .cloned()
+            .unwrap_or_default();
+        assert!(msg.contains("minimized"), "got: {msg}");
+    }
+
+    #[test]
+    fn pair_gen_generates_both() {
+        forall(
+            "pair ranges",
+            50,
+            pair(usize_in(1..10), f64_in(0.5..2.0)),
+            |&(n, x)| (1..10).contains(&n) && (0.5..2.0).contains(&x),
+        );
+    }
+
+    #[test]
+    fn usize_gen_respects_range() {
+        forall("usize range", 200, usize_in(3..17), |&n| (3..17).contains(&n));
+    }
+
+    #[test]
+    fn map_gen_applies() {
+        forall("map doubles", 50, map(usize_in(0..10), |n| n * 2), |&n| n % 2 == 0);
+    }
+}

@@ -1,0 +1,296 @@
+//! Experiment metrics: per-step records, the paper's three headline
+//! measurements (time-to-accuracy, training throughput, convergence time),
+//! and CSV export for figure regeneration.
+
+use std::io::Write;
+use std::path::Path;
+
+/// One training step's telemetry.
+#[derive(Clone, Debug)]
+pub struct StepRecord {
+    pub step: usize,
+    /// Virtual time at the END of this step, seconds.
+    pub vtime_s: f64,
+    pub compute_s: f64,
+    pub comm_s: f64,
+    /// Compression ratio used this step (1.0 = dense).
+    pub ratio: f64,
+    /// Per-worker wire payload for this step's sync, bytes (max across
+    /// workers).
+    pub payload_bytes: u64,
+    /// Validation accuracy estimate (%) after this step.
+    pub acc: f64,
+    /// Training loss (real track only; surrogate logs a proxy).
+    pub loss: f64,
+}
+
+impl StepRecord {
+    /// Instantaneous throughput, samples/second.
+    pub fn throughput(&self, samples_per_step: usize) -> f64 {
+        samples_per_step as f64 / (self.compute_s + self.comm_s)
+    }
+}
+
+/// A full training trace plus the paper-metric reductions.
+#[derive(Clone, Debug)]
+pub struct TrainLog {
+    pub method: String,
+    pub model: String,
+    pub samples_per_step: usize,
+    pub records: Vec<StepRecord>,
+}
+
+impl TrainLog {
+    pub fn new(method: &str, model: &str, samples_per_step: usize) -> Self {
+        TrainLog {
+            method: method.to_string(),
+            model: model.to_string(),
+            samples_per_step,
+            records: Vec::new(),
+        }
+    }
+
+    pub fn push(&mut self, r: StepRecord) {
+        self.records.push(r);
+    }
+
+    pub fn total_vtime(&self) -> f64 {
+        self.records.last().map(|r| r.vtime_s).unwrap_or(0.0)
+    }
+
+    pub fn best_acc(&self) -> f64 {
+        self.records.iter().map(|r| r.acc).fold(0.0, f64::max)
+    }
+
+    /// Mean training throughput over the whole run (samples/s) — the
+    /// paper's "Training Throughput" column.
+    pub fn mean_throughput(&self) -> f64 {
+        if self.records.is_empty() {
+            return 0.0;
+        }
+        self.records.len() as f64 * self.samples_per_step as f64 / self.total_vtime()
+    }
+
+    /// Time to first reach `target` accuracy (the paper's TTA), seconds.
+    pub fn time_to_accuracy(&self, target: f64) -> Option<f64> {
+        self.records
+            .iter()
+            .find(|r| r.acc >= target)
+            .map(|r| r.vtime_s)
+    }
+
+    /// Convergence time: first time accuracy reaches 99.5% of the run's
+    /// best and never falls below 97% of best afterwards — `None` ("N/A"
+    /// in the tables) when the run never stabilizes.
+    pub fn convergence_time(&self) -> Option<f64> {
+        let best = self.best_acc();
+        if best <= 0.0 {
+            return None;
+        }
+        let reach = best * 0.995;
+        let hold = best * 0.97;
+        let first = self.records.iter().position(|r| r.acc >= reach)?;
+        if self.records[first..].iter().all(|r| r.acc >= hold) {
+            Some(self.records[first].vtime_s)
+        } else {
+            None
+        }
+    }
+
+    /// Accuracy trajectory downsampled to at most `n` points (for figures):
+    /// (vtime_s, acc).
+    pub fn acc_curve(&self, n: usize) -> Vec<(f64, f64)> {
+        if self.records.is_empty() || n == 0 {
+            return Vec::new();
+        }
+        let stride = (self.records.len() / n).max(1);
+        self.records
+            .iter()
+            .step_by(stride)
+            .map(|r| (r.vtime_s, r.acc))
+            .collect()
+    }
+
+    /// Mean throughput within a virtual-time window (for Figs. 7–8 series).
+    pub fn throughput_in_window(&self, t0: f64, t1: f64) -> Option<f64> {
+        let in_window: Vec<&StepRecord> = self
+            .records
+            .iter()
+            .filter(|r| r.vtime_s > t0 && r.vtime_s <= t1)
+            .collect();
+        if in_window.is_empty() {
+            return None;
+        }
+        Some(in_window.len() as f64 * self.samples_per_step as f64 / (t1 - t0))
+    }
+
+    /// Write the full trace as CSV.
+    pub fn write_csv(&self, path: &Path) -> std::io::Result<()> {
+        let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+        writeln!(
+            f,
+            "step,vtime_s,compute_s,comm_s,ratio,payload_bytes,acc,loss,throughput"
+        )?;
+        for r in &self.records {
+            writeln!(
+                f,
+                "{},{:.4},{:.4},{:.6},{:.5},{},{:.3},{:.5},{:.2}",
+                r.step,
+                r.vtime_s,
+                r.compute_s,
+                r.comm_s,
+                r.ratio,
+                r.payload_bytes,
+                r.acc,
+                r.loss,
+                r.throughput(self.samples_per_step)
+            )?;
+        }
+        Ok(())
+    }
+}
+
+/// Streaming convergence detector for long runs (avoids retaining every
+/// record when only the verdict is needed).
+#[derive(Clone, Debug, Default)]
+pub struct ConvergenceTracker {
+    best: f64,
+    candidate: Option<f64>,
+    violated: bool,
+}
+
+impl ConvergenceTracker {
+    pub fn observe(&mut self, vtime_s: f64, acc: f64) {
+        if acc > self.best {
+            self.best = acc;
+            // A new best can invalidate an old candidate threshold.
+            if let Some(_t) = self.candidate {
+                if acc * 0.995 > self.best {
+                    self.candidate = None;
+                }
+            }
+        }
+        if self.candidate.is_none() && self.best > 0.0 && acc >= self.best * 0.995 {
+            self.candidate = Some(vtime_s);
+            self.violated = false;
+        } else if let Some(_) = self.candidate {
+            if acc < self.best * 0.97 {
+                self.violated = true;
+                self.candidate = None;
+            }
+        }
+    }
+
+    pub fn convergence_time(&self) -> Option<f64> {
+        if self.violated {
+            None
+        } else {
+            self.candidate
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(step: usize, vtime: f64, acc: f64) -> StepRecord {
+        StepRecord {
+            step,
+            vtime_s: vtime,
+            compute_s: 0.3,
+            comm_s: 0.2,
+            ratio: 0.1,
+            payload_bytes: 1000,
+            acc,
+            loss: 1.0,
+        }
+    }
+
+    fn sample_log() -> TrainLog {
+        let mut log = TrainLog::new("netsense", "resnet18", 256);
+        for i in 0..100 {
+            let t = (i + 1) as f64 * 0.5;
+            let acc = 80.0 * (1.0 - (-(i as f64) / 20.0).exp());
+            log.push(rec(i, t, acc));
+        }
+        log
+    }
+
+    #[test]
+    fn throughput_math() {
+        let r = rec(0, 0.5, 10.0);
+        assert!((r.throughput(256) - 512.0).abs() < 1e-9);
+        let log = sample_log();
+        // 100 steps × 256 samples over 50 s of vtime
+        assert!((log.mean_throughput() - 512.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn tta_finds_first_crossing() {
+        let log = sample_log();
+        let t = log.time_to_accuracy(40.0).unwrap();
+        assert!(t > 0.0 && t < 10.0, "{t}");
+        assert!(log.time_to_accuracy(99.0).is_none());
+    }
+
+    #[test]
+    fn convergence_time_of_saturating_curve() {
+        let log = sample_log();
+        let ct = log.convergence_time().unwrap();
+        assert!(ct > 30.0 && ct <= 50.0, "{ct}");
+    }
+
+    #[test]
+    fn convergence_none_for_unstable_curve() {
+        let mut log = TrainLog::new("topk", "resnet18", 256);
+        for i in 0..100 {
+            // oscillates hard: best ~80, frequent dips to 40
+            let acc = if i % 10 < 5 { 80.0 } else { 40.0 };
+            log.push(rec(i, i as f64, acc));
+        }
+        assert_eq!(log.convergence_time(), None);
+    }
+
+    #[test]
+    fn window_throughput() {
+        let log = sample_log();
+        // (10, 20] contains 20 steps → 20×256/10
+        let tp = log.throughput_in_window(10.0, 20.0).unwrap();
+        assert!((tp - 512.0).abs() < 1e-6);
+        assert!(log.throughput_in_window(1000.0, 2000.0).is_none());
+    }
+
+    #[test]
+    fn acc_curve_downsamples() {
+        let log = sample_log();
+        let curve = log.acc_curve(10);
+        assert!(curve.len() >= 10 && curve.len() <= 11);
+        assert!(curve.windows(2).all(|w| w[0].0 < w[1].0));
+    }
+
+    #[test]
+    fn csv_roundtrip_lines() {
+        let log = sample_log();
+        let tmp = std::env::temp_dir().join("netsense_test_log.csv");
+        log.write_csv(&tmp).unwrap();
+        let text = std::fs::read_to_string(&tmp).unwrap();
+        assert_eq!(text.lines().count(), 101); // header + 100
+        assert!(text.starts_with("step,"));
+        std::fs::remove_file(&tmp).ok();
+    }
+
+    #[test]
+    fn tracker_matches_batch_computation() {
+        let log = sample_log();
+        let mut tr = ConvergenceTracker::default();
+        for r in &log.records {
+            tr.observe(r.vtime_s, r.acc);
+        }
+        // Same verdict as the batch version (within the same record set).
+        assert_eq!(
+            tr.convergence_time().is_some(),
+            log.convergence_time().is_some()
+        );
+    }
+}

@@ -1,0 +1,21 @@
+//! Training support: synthetic data, paper-scale model descriptors, the
+//! surrogate training-dynamics model, and metric/TTA accounting.
+//!
+//! Two training tracks (DESIGN.md §2):
+//! - **real**: the small JAX/Pallas models run through the PJRT runtime —
+//!   losses and accuracies are actually computed (`examples/e2e_train.rs`).
+//! - **surrogate**: the paper-scale ResNet18/VGG16 runs compress real
+//!   full-size gradient tensors and time communication on the simulator,
+//!   but validation accuracy follows a calibrated saturating curve of
+//!   *effective steps* (steps × per-step information quality), replacing
+//!   hours of GPU training the environment cannot perform.
+
+pub mod data;
+pub mod metrics;
+pub mod models;
+pub mod surrogate;
+
+pub use data::SyntheticCifar;
+pub use metrics::{ConvergenceTracker, StepRecord, TrainLog};
+pub use models::{PaperModel, PAPER_MODELS};
+pub use surrogate::SurrogateTrainer;

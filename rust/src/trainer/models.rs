@@ -1,0 +1,91 @@
+//! Paper-scale model descriptors — the workloads of the evaluation section
+//! (ResNet18 and VGG16 on CIFAR-100, batch 32 per worker) plus the
+//! calibrated surrogate-dynamics constants (DESIGN.md §2).
+//!
+//! Calibration sources: the paper states ResNet18's gradient payload is
+//! 46.2 MB (≈ 11.55 M f32 parameters); per-step compute time is set so the
+//! uncongested throughput ceiling matches Table 1/2's best NetSenseML
+//! throughput (ResNet18 ≈ 0.30 s/step → ≤ 853 samples/s with 8×32 batch;
+//! VGG16 ≈ 0.70 s/step → ≤ 366 samples/s).
+
+/// Static description of a paper-scale model.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct PaperModel {
+    pub name: &'static str,
+    /// Number of f32 parameters (gradient elements).
+    pub n_params: usize,
+    /// Local fwd+bwd compute time per step, seconds.
+    pub compute_time_s: f64,
+    /// Surrogate accuracy ceiling (%), CIFAR-100 validation.
+    pub acc_inf: f64,
+    /// Surrogate time constant (effective steps).
+    pub tau: f64,
+    /// Surrogate shape exponent.
+    pub beta: f64,
+    /// Base learning-progress quality of a *dense* step.
+    pub q_dense: f64,
+}
+
+impl PaperModel {
+    /// Dense gradient bytes (f32).
+    pub fn dense_bytes(&self) -> u64 {
+        4 * self.n_params as u64
+    }
+
+    pub fn by_name(name: &str) -> Option<&'static PaperModel> {
+        PAPER_MODELS.iter().find(|m| m.name == name)
+    }
+}
+
+/// ResNet18 (11.55 M params ⇒ the paper's 46.2 MB) and VGG16-CIFAR
+/// (15.25 M params ⇒ 61 MB).
+pub const PAPER_MODELS: &[PaperModel] = &[
+    PaperModel {
+        name: "resnet18",
+        n_params: 11_550_000,
+        compute_time_s: 0.30,
+        acc_inf: 81.0,
+        tau: 15.0,
+        beta: 0.203,
+        q_dense: 1.0,
+    },
+    PaperModel {
+        name: "vgg16",
+        n_params: 15_250_000,
+        compute_time_s: 0.70,
+        acc_inf: 76.5,
+        tau: 15.0,
+        beta: 0.203,
+        q_dense: 1.0,
+    },
+];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn resnet18_matches_paper_payload() {
+        let m = PaperModel::by_name("resnet18").unwrap();
+        // 46.2 MB within 1%
+        let mb = m.dense_bytes() as f64 / 1e6;
+        assert!((mb - 46.2).abs() < 0.5, "{mb} MB");
+    }
+
+    #[test]
+    fn lookup() {
+        assert!(PaperModel::by_name("vgg16").is_some());
+        assert!(PaperModel::by_name("alexnet").is_none());
+    }
+
+    #[test]
+    fn throughput_ceilings_match_tables() {
+        // 8 workers × batch 32 = 256 samples per step.
+        let r = PaperModel::by_name("resnet18").unwrap();
+        let ceiling = 256.0 / r.compute_time_s;
+        assert!(ceiling > 824.0, "ResNet18 ceiling {ceiling} below Table 1 best");
+        let v = PaperModel::by_name("vgg16").unwrap();
+        let ceiling = 256.0 / v.compute_time_s;
+        assert!(ceiling > 340.0, "VGG16 ceiling {ceiling} below Table 2 best");
+    }
+}

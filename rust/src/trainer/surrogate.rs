@@ -1,0 +1,226 @@
+//! Surrogate training dynamics for paper-scale models (DESIGN.md §2).
+//!
+//! What is real in a surrogate run: the gradient tensors (full-size,
+//! realistic layered magnitude distribution, drifting over steps), the
+//! compression pipeline, the wire volumes, and every network/timing
+//! quantity. What is modeled: the mapping from *effective steps* to
+//! validation accuracy,
+//!
+//! `acc(e) = acc_inf · (1 − exp(−(e/τ)^β)) + noise`,
+//!
+//! with per-step quality `q = q_dense · ratio^0.15` (error-feedback
+//! compression delays but does not destroy gradient information — the
+//! exponent is fitted to Table 1's accuracy/step-count pairs) and a ×0.8
+//! penalty for *static* compression (TopK-0.1's instability in Fig. 5:
+//! fixed ratios misallocate budget when gradient scales drift).
+
+use super::models::PaperModel;
+use crate::util::rng::Pcg64;
+
+/// Quality of one step at compression `ratio` (1.0 = dense).
+pub fn step_quality(model: &PaperModel, ratio: f64, static_compression: bool) -> f64 {
+    let r = ratio.clamp(1e-4, 1.0);
+    let q = model.q_dense * r.powf(0.15);
+    if static_compression {
+        q * 0.8
+    } else {
+        q
+    }
+}
+
+/// Surrogate state: per-worker gradient tensors + the accuracy model.
+pub struct SurrogateTrainer {
+    pub model: &'static PaperModel,
+    n_workers: usize,
+    seed: u64,
+    /// Per-worker gradient buffers (full model size). Materialized lazily:
+    /// timing-only runs (`fidelity_every = 0`) never pay the ~n_workers ×
+    /// n_params allocation + fill.
+    grads: Vec<Vec<f32>>,
+    /// Fake weights (for the pruning step of Algorithm 2); lazy too.
+    weights: Vec<f32>,
+    effective_steps: f64,
+    rng: Pcg64,
+    noise_rng: Pcg64,
+}
+
+impl SurrogateTrainer {
+    pub fn new(model: &'static PaperModel, n_workers: usize, seed: u64) -> Self {
+        SurrogateTrainer {
+            model,
+            n_workers,
+            seed,
+            grads: Vec::new(),
+            weights: Vec::new(),
+            effective_steps: 0.0,
+            rng: Pcg64::new(seed, 11),
+            noise_rng: Pcg64::new(seed, 12),
+        }
+    }
+
+    pub fn n_workers(&self) -> usize {
+        self.n_workers
+    }
+
+    fn materialize(&mut self) {
+        if !self.grads.is_empty() {
+            return;
+        }
+        let n = self.model.n_params;
+        // Layered magnitude structure: split the flat tensor into "layers"
+        // with log-spaced scales (mimics real convnet gradient profiles).
+        let n_layers = 20;
+        for w in 0..self.n_workers {
+            let mut g = vec![0f32; n];
+            let mut lrng = Pcg64::new(self.seed ^ 0xbeef, w as u64 + 100);
+            for (i, x) in g.iter_mut().enumerate() {
+                let layer = i * n_layers / n;
+                let scale = 10f32.powf(-1.0 - 0.1 * layer as f32);
+                *x = scale * lrng.normal() as f32;
+            }
+            self.grads.push(g);
+        }
+        let mut wrng = Pcg64::new(self.seed, 10);
+        self.weights = vec![0f32; n];
+        wrng.fill_normal_f32(&mut self.weights, 0.0, 0.05);
+    }
+
+    pub fn weights(&mut self) -> &[f32] {
+        self.materialize();
+        &self.weights
+    }
+
+    /// Per-worker gradients for a full-fidelity compression step. Applies a
+    /// small drift (re-randomizes ~0.5% of entries, decays scale slightly)
+    /// so threshold-reuse top-k sees realistic distribution movement.
+    pub fn worker_grads(&mut self) -> &[Vec<f32>] {
+        self.materialize();
+        let n = self.model.n_params;
+        let n_touch = (n / 200).max(1);
+        for w in 0..self.n_workers {
+            for _ in 0..n_touch {
+                let i = self.rng.index(n);
+                let layer = i * 20 / n;
+                let scale = 10f32.powf(-1.0 - 0.1 * layer as f32);
+                self.grads[w][i] = scale * self.rng.normal() as f32;
+            }
+        }
+        &self.grads
+    }
+
+    /// Both gradient and weight views in one borrow (spot-check path).
+    pub fn grads_and_weights(&mut self) -> (&[Vec<f32>], &[f32]) {
+        self.worker_grads();
+        (&self.grads, &self.weights)
+    }
+
+    /// Advance the accuracy model by one step at `ratio`.
+    pub fn advance(&mut self, ratio: f64, static_compression: bool) {
+        self.effective_steps += step_quality(self.model, ratio, static_compression);
+    }
+
+    /// Current validation-accuracy estimate (%), with small seeded noise.
+    pub fn accuracy(&mut self) -> f64 {
+        let e = self.effective_steps;
+        let m = self.model;
+        let base = m.acc_inf * (1.0 - (-(e / m.tau).powf(m.beta)).exp());
+        let noise = 0.25 * self.noise_rng.normal();
+        (base + noise).clamp(0.0, 100.0)
+    }
+
+    /// A loss proxy for logging (cross-entropy-looking decay).
+    pub fn loss_proxy(&self) -> f64 {
+        let e = self.effective_steps;
+        let m = self.model;
+        let frac = 1.0 - (-(e / m.tau).powf(m.beta)).exp();
+        (100f64).ln() * (1.0 - 0.9 * frac)
+    }
+
+    pub fn effective_steps(&self) -> f64 {
+        self.effective_steps
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trainer::models::PAPER_MODELS;
+
+    fn resnet() -> &'static PaperModel {
+        &PAPER_MODELS[0]
+    }
+
+    #[test]
+    fn quality_ordering() {
+        let m = resnet();
+        assert!(step_quality(m, 1.0, false) > step_quality(m, 0.1, false));
+        assert!(step_quality(m, 0.1, false) > step_quality(m, 0.01, false));
+        // static penalty
+        assert!(step_quality(m, 0.1, true) < step_quality(m, 0.1, false));
+        // dense step quality is exactly q_dense
+        assert!((step_quality(m, 1.0, false) - m.q_dense).abs() < 1e-12);
+    }
+
+    #[test]
+    fn accuracy_is_monotone_and_saturates() {
+        let mut t = SurrogateTrainer::new(resnet(), 2, 1);
+        let a0 = t.accuracy();
+        for _ in 0..500 {
+            t.advance(1.0, false);
+        }
+        let a1 = t.accuracy();
+        for _ in 0..5000 {
+            t.advance(1.0, false);
+        }
+        let a2 = t.accuracy();
+        assert!(a1 > a0 + 10.0, "{a0} → {a1}");
+        assert!(a2 > a1);
+        assert!(a2 <= resnet().acc_inf + 2.0);
+    }
+
+    #[test]
+    fn calibration_matches_table1_anchors() {
+        // DESIGN.md calibration: ~260 dense-quality steps ≈ 67%, ~2215
+        // effective steps ≈ 76% (Table 1's AllReduce@200 and
+        // NetSenseML@200 operating points).
+        let m = resnet();
+        let acc = |e: f64| m.acc_inf * (1.0 - (-(e / m.tau).powf(m.beta)).exp());
+        assert!((acc(260.0) - 67.3).abs() < 2.0, "{}", acc(260.0));
+        assert!((acc(2215.0) - 75.8).abs() < 2.0, "{}", acc(2215.0));
+    }
+
+    #[test]
+    fn grads_have_layered_scales_and_drift() {
+        let mut t = SurrogateTrainer::new(resnet(), 1, 2);
+        let g0: Vec<f32> = t.worker_grads()[0].clone();
+        let n = g0.len();
+        // early "layers" larger than late ones
+        let head: f32 = g0[..n / 20].iter().map(|x| x.abs()).sum::<f32>() / (n / 20) as f32;
+        let tail: f32 =
+            g0[n - n / 20..].iter().map(|x| x.abs()).sum::<f32>() / (n / 20) as f32;
+        assert!(head > 5.0 * tail, "head {head} tail {tail}");
+        // drift touches a small fraction
+        let g1: Vec<f32> = t.worker_grads()[0].clone();
+        let changed = g0.iter().zip(&g1).filter(|(a, b)| a != b).count();
+        assert!(changed > 0);
+        assert!(changed < n / 50, "{changed} of {n} changed");
+    }
+
+    #[test]
+    fn workers_have_distinct_gradients() {
+        let mut t = SurrogateTrainer::new(resnet(), 3, 3);
+        let gs = t.worker_grads();
+        assert_ne!(gs[0][..100], gs[1][..100]);
+        assert_ne!(gs[1][..100], gs[2][..100]);
+    }
+
+    #[test]
+    fn loss_proxy_decreases() {
+        let mut t = SurrogateTrainer::new(resnet(), 1, 4);
+        let l0 = t.loss_proxy();
+        for _ in 0..1000 {
+            t.advance(0.5, false);
+        }
+        assert!(t.loss_proxy() < l0);
+    }
+}

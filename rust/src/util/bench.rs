@@ -1,0 +1,288 @@
+//! Micro-benchmark harness (criterion replacement for the offline build).
+//!
+//! Benches are compiled with `harness = false` and call [`Bench::run`] /
+//! [`Bench::run_with_iters`]; the harness does warmup, adaptively picks an
+//! iteration count to hit a time target, and reports mean/median/p99 with
+//! optional throughput. `cargo bench` simply executes the binaries.
+
+use std::hint::black_box;
+use std::time::{Duration, Instant};
+
+pub use std::hint::black_box as bb;
+
+/// One benchmark's timing result.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: u64,
+    pub mean: Duration,
+    pub median: Duration,
+    pub p99: Duration,
+    pub min: Duration,
+    /// Optional elements-per-iteration for throughput reporting.
+    pub elements: Option<u64>,
+}
+
+impl BenchResult {
+    pub fn throughput_per_sec(&self) -> Option<f64> {
+        self.elements
+            .map(|e| e as f64 / self.mean.as_secs_f64())
+    }
+}
+
+/// Harness configuration.
+pub struct Bench {
+    /// Minimum measurement time per benchmark.
+    pub target: Duration,
+    pub warmup: Duration,
+    /// Max samples collected (each sample = one timed batch).
+    pub samples: usize,
+    results: Vec<BenchResult>,
+    group: String,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Bench::new()
+    }
+}
+
+impl Bench {
+    pub fn new() -> Self {
+        // Honor NETSENSE_BENCH_FAST=1 for CI-style quick runs.
+        let fast = std::env::var("NETSENSE_BENCH_FAST").ok().as_deref() == Some("1");
+        Bench {
+            target: if fast {
+                Duration::from_millis(200)
+            } else {
+                Duration::from_secs(1)
+            },
+            warmup: if fast {
+                Duration::from_millis(50)
+            } else {
+                Duration::from_millis(300)
+            },
+            samples: 32,
+            results: Vec::new(),
+            group: String::new(),
+        }
+    }
+
+    /// Start a named group (prefix for subsequent benchmark names).
+    pub fn group(&mut self, name: &str) -> &mut Self {
+        self.group = name.to_string();
+        eprintln!("\n== {name} ==");
+        self
+    }
+
+    fn full_name(&self, name: &str) -> String {
+        if self.group.is_empty() {
+            name.to_string()
+        } else {
+            format!("{}/{}", self.group, name)
+        }
+    }
+
+    /// Benchmark `f`, which performs one unit of work per call.
+    pub fn run<F: FnMut()>(&mut self, name: &str, f: F) -> &BenchResult {
+        self.run_inner(name, None, f)
+    }
+
+    /// Benchmark with a throughput annotation (`elements` per call of `f`).
+    pub fn run_throughput<F: FnMut()>(&mut self, name: &str, elements: u64, f: F) -> &BenchResult {
+        self.run_inner(name, Some(elements), f)
+    }
+
+    fn run_inner<F: FnMut()>(
+        &mut self,
+        name: &str,
+        elements: Option<u64>,
+        mut f: F,
+    ) -> &BenchResult {
+        // Warmup and per-call estimate.
+        let warm_start = Instant::now();
+        let mut warm_calls = 0u64;
+        while warm_start.elapsed() < self.warmup || warm_calls < 3 {
+            f();
+            warm_calls += 1;
+            if warm_calls > 1_000_000 {
+                break;
+            }
+        }
+        let per_call = warm_start.elapsed().as_secs_f64() / warm_calls as f64;
+
+        // Choose batch size so each sample takes ~target/samples.
+        let per_sample = self.target.as_secs_f64() / self.samples as f64;
+        let batch = ((per_sample / per_call.max(1e-9)).ceil() as u64).max(1);
+
+        let mut samples: Vec<f64> = Vec::with_capacity(self.samples);
+        let mut total_iters = 0u64;
+        let bench_start = Instant::now();
+        for _ in 0..self.samples {
+            let t = Instant::now();
+            for _ in 0..batch {
+                f();
+            }
+            samples.push(t.elapsed().as_secs_f64() / batch as f64);
+            total_iters += batch;
+            if bench_start.elapsed() > self.target * 4 {
+                break; // overly slow benchmark; stop early with what we have
+            }
+        }
+        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let mean = samples.iter().sum::<f64>() / samples.len() as f64;
+        let median = crate::util::stats::percentile_sorted(&samples, 0.5);
+        let p99 = crate::util::stats::percentile_sorted(&samples, 0.99);
+        let min = samples[0];
+        let res = BenchResult {
+            name: self.full_name(name),
+            iters: total_iters,
+            mean: Duration::from_secs_f64(mean),
+            median: Duration::from_secs_f64(median),
+            p99: Duration::from_secs_f64(p99),
+            min: Duration::from_secs_f64(min),
+            elements,
+        };
+        print_result(&res);
+        self.results.push(res);
+        self.results.last().unwrap()
+    }
+
+    /// Run `f` exactly once and report its wall time (for end-to-end
+    /// experiment benches where one run is already seconds long).
+    pub fn run_once<F: FnOnce()>(&mut self, name: &str, f: F) -> &BenchResult {
+        let t = Instant::now();
+        f();
+        let d = t.elapsed();
+        let res = BenchResult {
+            name: self.full_name(name),
+            iters: 1,
+            mean: d,
+            median: d,
+            p99: d,
+            min: d,
+            elements: None,
+        };
+        print_result(&res);
+        self.results.push(res);
+        self.results.last().unwrap()
+    }
+
+    /// All collected results.
+    pub fn results(&self) -> &[BenchResult] {
+        &self.results
+    }
+
+    /// Print a closing summary table.
+    pub fn finish(&self) {
+        eprintln!("\n-- summary ({} benchmarks) --", self.results.len());
+        for r in &self.results {
+            print_result(r);
+        }
+    }
+}
+
+fn print_result(r: &BenchResult) {
+    let tp = r
+        .throughput_per_sec()
+        .map(|t| format!("  {:>12}/s", human_count(t)))
+        .unwrap_or_default();
+    eprintln!(
+        "{:<52} mean {:>12}  median {:>12}  p99 {:>12}  (n={}){}",
+        r.name,
+        human_time(r.mean),
+        human_time(r.median),
+        human_time(r.p99),
+        r.iters,
+        tp
+    );
+}
+
+/// Format a duration with appropriate unit.
+pub fn human_time(d: Duration) -> String {
+    let s = d.as_secs_f64();
+    if s >= 1.0 {
+        format!("{s:.3} s")
+    } else if s >= 1e-3 {
+        format!("{:.3} ms", s * 1e3)
+    } else if s >= 1e-6 {
+        format!("{:.3} µs", s * 1e6)
+    } else {
+        format!("{:.1} ns", s * 1e9)
+    }
+}
+
+/// Format a count with k/M/G suffix.
+pub fn human_count(x: f64) -> String {
+    if x >= 1e9 {
+        format!("{:.2} G", x / 1e9)
+    } else if x >= 1e6 {
+        format!("{:.2} M", x / 1e6)
+    } else if x >= 1e3 {
+        format!("{:.2} k", x / 1e3)
+    } else {
+        format!("{x:.1}")
+    }
+}
+
+/// Guard against the optimizer deleting the benchmarked work.
+pub fn sink<T>(x: T) -> T {
+    black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_something() {
+        std::env::set_var("NETSENSE_BENCH_FAST", "1");
+        let mut b = Bench::new();
+        b.target = Duration::from_millis(20);
+        b.warmup = Duration::from_millis(5);
+        b.samples = 5;
+        let mut acc = 0u64;
+        let r = b
+            .run("noop-ish", || {
+                acc = sink(acc.wrapping_add(1));
+            })
+            .clone();
+        assert!(r.iters > 0);
+        assert!(r.mean.as_nanos() > 0);
+        assert!(r.median <= r.p99);
+        assert!(r.min <= r.median);
+    }
+
+    #[test]
+    fn throughput_reported() {
+        std::env::set_var("NETSENSE_BENCH_FAST", "1");
+        let mut b = Bench::new();
+        b.target = Duration::from_millis(10);
+        b.warmup = Duration::from_millis(2);
+        b.samples = 4;
+        let v = vec![1f32; 1024];
+        let r = b
+            .run_throughput("sum1k", 1024, || {
+                sink(v.iter().sum::<f32>());
+            })
+            .clone();
+        assert!(r.throughput_per_sec().unwrap() > 0.0);
+    }
+
+    #[test]
+    fn human_formats() {
+        assert_eq!(human_time(Duration::from_secs(2)), "2.000 s");
+        assert!(human_time(Duration::from_micros(1500)).contains("ms"));
+        assert!(human_time(Duration::from_nanos(100)).contains("ns"));
+        assert!(human_count(2_500_000.0).contains("M"));
+        assert!(human_count(12.0).contains("12"));
+    }
+
+    #[test]
+    fn run_once_records() {
+        let mut b = Bench::new();
+        let r = b.run_once("once", || std::thread::sleep(Duration::from_millis(1)));
+        assert!(r.mean >= Duration::from_millis(1));
+        assert_eq!(r.iters, 1);
+    }
+}

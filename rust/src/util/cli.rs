@@ -1,0 +1,290 @@
+//! Tiny command-line parser: subcommands, `--flag`, `--key value` /
+//! `--key=value` options, positionals, typed getters, and generated help.
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+/// Declarative spec for one option.
+#[derive(Clone, Debug)]
+pub struct OptSpec {
+    pub name: &'static str,
+    pub help: &'static str,
+    /// `true` for boolean flags (no value).
+    pub flag: bool,
+    pub default: Option<&'static str>,
+}
+
+/// Declarative spec for a subcommand.
+#[derive(Clone, Debug)]
+pub struct CmdSpec {
+    pub name: &'static str,
+    pub help: &'static str,
+    pub opts: Vec<OptSpec>,
+    /// Names of expected positional args (for help only; extras allowed).
+    pub positionals: Vec<&'static str>,
+}
+
+/// Parsed arguments for a matched subcommand.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub command: String,
+    values: BTreeMap<String, String>,
+    flags: BTreeMap<String, bool>,
+    pub positionals: Vec<String>,
+}
+
+#[derive(Debug, Clone)]
+pub struct CliError(pub String);
+
+impl fmt::Display for CliError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for CliError {}
+
+impl Args {
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.values.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or(&self, name: &str, default: &str) -> String {
+        self.get(name).unwrap_or(default).to_string()
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.get(name).copied().unwrap_or(false)
+    }
+
+    pub fn get_f64(&self, name: &str) -> Result<Option<f64>, CliError> {
+        match self.get(name) {
+            None => Ok(None),
+            Some(s) => s
+                .parse::<f64>()
+                .map(Some)
+                .map_err(|_| CliError(format!("--{name}: expected a number, got `{s}`"))),
+        }
+    }
+
+    pub fn get_usize(&self, name: &str) -> Result<Option<usize>, CliError> {
+        match self.get(name) {
+            None => Ok(None),
+            Some(s) => s
+                .parse::<usize>()
+                .map(Some)
+                .map_err(|_| CliError(format!("--{name}: expected an integer, got `{s}`"))),
+        }
+    }
+
+    pub fn get_u64(&self, name: &str) -> Result<Option<u64>, CliError> {
+        match self.get(name) {
+            None => Ok(None),
+            Some(s) => s
+                .parse::<u64>()
+                .map(Some)
+                .map_err(|_| CliError(format!("--{name}: expected an integer, got `{s}`"))),
+        }
+    }
+}
+
+/// A CLI application: a set of subcommands.
+pub struct Cli {
+    pub bin: &'static str,
+    pub about: &'static str,
+    pub commands: Vec<CmdSpec>,
+}
+
+impl Cli {
+    /// Parse `argv[1..]`. Returns `Ok(None)` if help was requested (already
+    /// printed to stdout by the caller via [`Cli::help`]).
+    pub fn parse(&self, argv: &[String]) -> Result<Args, CliError> {
+        let cmd_name = argv
+            .first()
+            .ok_or_else(|| CliError(format!("missing subcommand\n\n{}", self.help())))?;
+        if cmd_name == "--help" || cmd_name == "-h" || cmd_name == "help" {
+            return Err(CliError(self.help()));
+        }
+        let spec = self
+            .commands
+            .iter()
+            .find(|c| c.name == cmd_name)
+            .ok_or_else(|| {
+                CliError(format!("unknown subcommand `{cmd_name}`\n\n{}", self.help()))
+            })?;
+        let mut args = Args {
+            command: spec.name.to_string(),
+            ..Default::default()
+        };
+        // seed defaults
+        for opt in &spec.opts {
+            if let Some(d) = opt.default {
+                args.values.insert(opt.name.to_string(), d.to_string());
+            }
+        }
+        let mut i = 1;
+        while i < argv.len() {
+            let tok = &argv[i];
+            if tok == "--help" || tok == "-h" {
+                return Err(CliError(self.cmd_help(spec)));
+            }
+            if let Some(body) = tok.strip_prefix("--") {
+                let (name, inline_val) = match body.split_once('=') {
+                    Some((n, v)) => (n.to_string(), Some(v.to_string())),
+                    None => (body.to_string(), None),
+                };
+                let opt = spec.opts.iter().find(|o| o.name == name).ok_or_else(|| {
+                    CliError(format!(
+                        "unknown option `--{name}` for `{}`\n\n{}",
+                        spec.name,
+                        self.cmd_help(spec)
+                    ))
+                })?;
+                if opt.flag {
+                    if inline_val.is_some() {
+                        return Err(CliError(format!("flag `--{name}` takes no value")));
+                    }
+                    args.flags.insert(name, true);
+                } else {
+                    let val = match inline_val {
+                        Some(v) => v,
+                        None => {
+                            i += 1;
+                            argv.get(i)
+                                .cloned()
+                                .ok_or_else(|| CliError(format!("`--{name}` needs a value")))?
+                        }
+                    };
+                    args.values.insert(name, val);
+                }
+            } else {
+                args.positionals.push(tok.clone());
+            }
+            i += 1;
+        }
+        Ok(args)
+    }
+
+    /// Top-level help text.
+    pub fn help(&self) -> String {
+        let mut s = format!("{} — {}\n\nUSAGE:\n  {} <command> [options]\n\nCOMMANDS:\n", self.bin, self.about, self.bin);
+        for c in &self.commands {
+            s.push_str(&format!("  {:<14} {}\n", c.name, c.help));
+        }
+        s.push_str(&format!("\nRun `{} <command> --help` for command options.\n", self.bin));
+        s
+    }
+
+    /// Per-command help text.
+    pub fn cmd_help(&self, spec: &CmdSpec) -> String {
+        let mut s = format!("{} {} — {}\n\nUSAGE:\n  {} {}", self.bin, spec.name, spec.help, self.bin, spec.name);
+        for p in &spec.positionals {
+            s.push_str(&format!(" <{p}>"));
+        }
+        s.push_str(" [options]\n\nOPTIONS:\n");
+        for o in &spec.opts {
+            let mut left = format!("--{}", o.name);
+            if !o.flag {
+                left.push_str(" <v>");
+            }
+            let default = o
+                .default
+                .map(|d| format!(" [default: {d}]"))
+                .unwrap_or_default();
+            s.push_str(&format!("  {:<24} {}{}\n", left, o.help, default));
+        }
+        s
+    }
+}
+
+/// Shorthand for building an option spec.
+pub fn opt(name: &'static str, help: &'static str, default: Option<&'static str>) -> OptSpec {
+    OptSpec {
+        name,
+        help,
+        flag: false,
+        default,
+    }
+}
+
+/// Shorthand for building a boolean flag spec.
+pub fn flag(name: &'static str, help: &'static str) -> OptSpec {
+    OptSpec {
+        name,
+        help,
+        flag: true,
+        default: None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cli() -> Cli {
+        Cli {
+            bin: "netsenseml",
+            about: "test",
+            commands: vec![CmdSpec {
+                name: "train",
+                help: "run training",
+                opts: vec![
+                    opt("model", "model name", Some("resnet18")),
+                    opt("steps", "step count", None),
+                    flag("verbose", "log more"),
+                ],
+                positionals: vec!["config"],
+            }],
+        }
+    }
+
+    fn sv(xs: &[&str]) -> Vec<String> {
+        xs.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn defaults_and_overrides() {
+        let a = cli().parse(&sv(&["train"])).unwrap();
+        assert_eq!(a.get("model"), Some("resnet18"));
+        let a = cli().parse(&sv(&["train", "--model", "vgg16"])).unwrap();
+        assert_eq!(a.get("model"), Some("vgg16"));
+        let a = cli().parse(&sv(&["train", "--model=vgg16"])).unwrap();
+        assert_eq!(a.get("model"), Some("vgg16"));
+    }
+
+    #[test]
+    fn flags_and_positionals() {
+        let a = cli()
+            .parse(&sv(&["train", "cfg.toml", "--verbose"]))
+            .unwrap();
+        assert!(a.flag("verbose"));
+        assert_eq!(a.positionals, vec!["cfg.toml"]);
+        assert!(!cli().parse(&sv(&["train"])).unwrap().flag("verbose"));
+    }
+
+    #[test]
+    fn typed_getters() {
+        let a = cli().parse(&sv(&["train", "--steps", "100"])).unwrap();
+        assert_eq!(a.get_usize("steps").unwrap(), Some(100));
+        let a = cli().parse(&sv(&["train", "--steps", "abc"])).unwrap();
+        assert!(a.get_usize("steps").is_err());
+        let a = cli().parse(&sv(&["train"])).unwrap();
+        assert_eq!(a.get_usize("steps").unwrap(), None);
+    }
+
+    #[test]
+    fn errors() {
+        assert!(cli().parse(&sv(&[])).is_err());
+        assert!(cli().parse(&sv(&["nope"])).is_err());
+        assert!(cli().parse(&sv(&["train", "--bogus", "1"])).is_err());
+        assert!(cli().parse(&sv(&["train", "--model"])).is_err());
+        assert!(cli().parse(&sv(&["train", "--verbose=1"])).is_err());
+    }
+
+    #[test]
+    fn help_lists_commands() {
+        let h = cli().help();
+        assert!(h.contains("train"));
+        assert!(h.contains("run training"));
+    }
+}

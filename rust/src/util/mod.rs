@@ -1,0 +1,14 @@
+//! Offline-environment substrates: the small, dependency-free replacements
+//! for the crates that are unavailable in this build environment
+//! (`rand`, `serde_json`, `toml`, `clap`, `criterion`, logging).
+//!
+//! Each submodule is a self-contained, tested implementation of exactly the
+//! surface the rest of the crate needs — see `DESIGN.md` §2.
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod log;
+pub mod rng;
+pub mod stats;
+pub mod toml;

@@ -1,0 +1,298 @@
+//! Small statistics toolkit: summaries, percentiles, EWMA, and the
+//! windowed max/min filters that BBR-style sensing depends on.
+
+/// Summary statistics over a sample.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Summary {
+    pub n: usize,
+    pub mean: f64,
+    pub std: f64,
+    pub min: f64,
+    pub max: f64,
+    pub p50: f64,
+    pub p90: f64,
+    pub p99: f64,
+}
+
+impl Summary {
+    /// Compute a summary; returns `None` for an empty sample.
+    pub fn of(xs: &[f64]) -> Option<Summary> {
+        if xs.is_empty() {
+            return None;
+        }
+        let n = xs.len();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        let mut sorted = xs.to_vec();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        Some(Summary {
+            n,
+            mean,
+            std: var.sqrt(),
+            min: sorted[0],
+            max: sorted[n - 1],
+            p50: percentile_sorted(&sorted, 0.50),
+            p90: percentile_sorted(&sorted, 0.90),
+            p99: percentile_sorted(&sorted, 0.99),
+        })
+    }
+}
+
+/// Linear-interpolated percentile of a pre-sorted sample, `q` in `[0,1]`.
+pub fn percentile_sorted(sorted: &[f64], q: f64) -> f64 {
+    assert!(!sorted.is_empty());
+    let q = q.clamp(0.0, 1.0);
+    let pos = q * (sorted.len() - 1) as f64;
+    let lo = pos.floor() as usize;
+    let hi = pos.ceil() as usize;
+    if lo == hi {
+        sorted[lo]
+    } else {
+        let frac = pos - lo as f64;
+        sorted[lo] * (1.0 - frac) + sorted[hi] * frac
+    }
+}
+
+/// Exponentially weighted moving average.
+#[derive(Clone, Debug)]
+pub struct Ewma {
+    alpha: f64,
+    value: Option<f64>,
+}
+
+impl Ewma {
+    /// `alpha` is the weight of the newest observation, in `(0, 1]`.
+    pub fn new(alpha: f64) -> Self {
+        assert!(alpha > 0.0 && alpha <= 1.0);
+        Ewma { alpha, value: None }
+    }
+
+    pub fn update(&mut self, x: f64) -> f64 {
+        let v = match self.value {
+            None => x,
+            Some(prev) => self.alpha * x + (1.0 - self.alpha) * prev,
+        };
+        self.value = Some(v);
+        v
+    }
+
+    pub fn get(&self) -> Option<f64> {
+        self.value
+    }
+}
+
+/// A monotonic-deque windowed **maximum** over a sliding window keyed by an
+/// arbitrary monotonically non-decreasing "time" (u64). This is the filter
+/// BBR uses for BtlBw (and, mirrored, for RTprop).
+#[derive(Clone, Debug)]
+pub struct WindowedMax {
+    window: u64,
+    // (time, value); values strictly decreasing front→back.
+    deque: std::collections::VecDeque<(u64, f64)>,
+}
+
+impl WindowedMax {
+    pub fn new(window: u64) -> Self {
+        assert!(window > 0);
+        WindowedMax {
+            window,
+            deque: std::collections::VecDeque::new(),
+        }
+    }
+
+    /// Insert observation `v` at time `t` and evict entries older than
+    /// `t - window`. Times must be non-decreasing.
+    pub fn update(&mut self, t: u64, v: f64) {
+        while let Some(&(ft, _)) = self.deque.front() {
+            if t.saturating_sub(ft) > self.window {
+                self.deque.pop_front();
+            } else {
+                break;
+            }
+        }
+        while let Some(&(_, bv)) = self.deque.back() {
+            if bv <= v {
+                self.deque.pop_back();
+            } else {
+                break;
+            }
+        }
+        self.deque.push_back((t, v));
+    }
+
+    /// Current windowed max, if any observation is in the window.
+    pub fn get(&self) -> Option<f64> {
+        self.deque.front().map(|&(_, v)| v)
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.deque.is_empty()
+    }
+}
+
+/// Windowed **minimum** (dual of [`WindowedMax`]); BBR's RTprop filter.
+#[derive(Clone, Debug)]
+pub struct WindowedMin {
+    inner: WindowedMax,
+}
+
+impl WindowedMin {
+    pub fn new(window: u64) -> Self {
+        WindowedMin {
+            inner: WindowedMax::new(window),
+        }
+    }
+
+    pub fn update(&mut self, t: u64, v: f64) {
+        self.inner.update(t, -v);
+    }
+
+    pub fn get(&self) -> Option<f64> {
+        self.inner.get().map(|v| -v)
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.inner.is_empty()
+    }
+}
+
+/// Online mean/variance accumulator (Welford).
+#[derive(Clone, Debug, Default)]
+pub struct Online {
+    n: u64,
+    mean: f64,
+    m2: f64,
+}
+
+impl Online {
+    pub fn push(&mut self, x: f64) {
+        self.n += 1;
+        let d = x - self.mean;
+        self.mean += d / self.n as f64;
+        self.m2 += d * (x - self.mean);
+    }
+
+    pub fn n(&self) -> u64 {
+        self.n
+    }
+
+    pub fn mean(&self) -> f64 {
+        self.mean
+    }
+
+    pub fn variance(&self) -> f64 {
+        if self.n < 2 {
+            0.0
+        } else {
+            self.m2 / self.n as f64
+        }
+    }
+
+    pub fn std(&self) -> f64 {
+        self.variance().sqrt()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_basic() {
+        let s = Summary::of(&[1.0, 2.0, 3.0, 4.0, 5.0]).unwrap();
+        assert_eq!(s.n, 5);
+        assert!((s.mean - 3.0).abs() < 1e-12);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 5.0);
+        assert!((s.p50 - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn summary_empty_is_none() {
+        assert!(Summary::of(&[]).is_none());
+    }
+
+    #[test]
+    fn percentile_interpolates() {
+        let xs = [0.0, 10.0];
+        assert!((percentile_sorted(&xs, 0.5) - 5.0).abs() < 1e-12);
+        assert_eq!(percentile_sorted(&xs, 0.0), 0.0);
+        assert_eq!(percentile_sorted(&xs, 1.0), 10.0);
+    }
+
+    #[test]
+    fn ewma_converges() {
+        let mut e = Ewma::new(0.5);
+        assert_eq!(e.update(10.0), 10.0);
+        for _ in 0..50 {
+            e.update(2.0);
+        }
+        assert!((e.get().unwrap() - 2.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn windowed_max_evicts() {
+        let mut w = WindowedMax::new(10);
+        w.update(0, 5.0);
+        w.update(1, 3.0);
+        assert_eq!(w.get(), Some(5.0));
+        w.update(11, 1.0); // t=0 entry is 11 old > 10 → evicted
+        assert_eq!(w.get(), Some(3.0));
+        w.update(12, 4.0);
+        assert_eq!(w.get(), Some(4.0));
+    }
+
+    #[test]
+    fn windowed_max_matches_naive() {
+        let mut r = crate::util::rng::Pcg64::seeded(11);
+        let window = 25u64;
+        let mut w = WindowedMax::new(window);
+        let mut hist: Vec<(u64, f64)> = Vec::new();
+        let mut t = 0u64;
+        for _ in 0..2000 {
+            t += r.below(4);
+            let v = r.f64() * 100.0;
+            w.update(t, v);
+            hist.push((t, v));
+            let naive = hist
+                .iter()
+                .filter(|&&(ht, _)| t - ht <= window)
+                .map(|&(_, hv)| hv)
+                .fold(f64::MIN, f64::max);
+            assert_eq!(w.get().unwrap(), naive);
+        }
+    }
+
+    #[test]
+    fn windowed_min_matches_naive() {
+        let mut r = crate::util::rng::Pcg64::seeded(12);
+        let window = 17u64;
+        let mut w = WindowedMin::new(window);
+        let mut hist: Vec<(u64, f64)> = Vec::new();
+        let mut t = 0u64;
+        for _ in 0..2000 {
+            t += r.below(3);
+            let v = r.f64() * 100.0;
+            w.update(t, v);
+            hist.push((t, v));
+            let naive = hist
+                .iter()
+                .filter(|&&(ht, _)| t - ht <= window)
+                .map(|&(_, hv)| hv)
+                .fold(f64::MAX, f64::min);
+            assert_eq!(w.get().unwrap(), naive);
+        }
+    }
+
+    #[test]
+    fn online_matches_batch() {
+        let xs = [3.0, 1.0, 4.0, 1.0, 5.0, 9.0, 2.0, 6.0];
+        let mut o = Online::default();
+        for &x in &xs {
+            o.push(x);
+        }
+        let s = Summary::of(&xs).unwrap();
+        assert!((o.mean() - s.mean).abs() < 1e-12);
+        assert!((o.std() - s.std).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,386 @@
+//! TOML-subset parser for experiment configuration files.
+//!
+//! Supported: `[section]` and `[section.sub]` headers, `key = value` with
+//! string / integer / float / bool / homogeneous-array values, `#` comments,
+//! and bare or quoted keys. Flattened into `section.sub.key` paths — exactly
+//! the surface `config/` needs. Unsupported TOML (multi-line strings, tables
+//! in arrays, datetimes) is rejected with a line-numbered error.
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+/// A TOML scalar or array value.
+#[derive(Clone, Debug, PartialEq)]
+pub enum TomlValue {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Arr(Vec<TomlValue>),
+}
+
+impl TomlValue {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            TomlValue::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+    pub fn as_i64(&self) -> Option<i64> {
+        match self {
+            TomlValue::Int(x) => Some(*x),
+            _ => None,
+        }
+    }
+    /// Numeric coercion: ints read as floats too.
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            TomlValue::Float(x) => Some(*x),
+            TomlValue::Int(x) => Some(*x as f64),
+            _ => None,
+        }
+    }
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            TomlValue::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+    pub fn as_arr(&self) -> Option<&[TomlValue]> {
+        match self {
+            TomlValue::Arr(v) => Some(v),
+            _ => None,
+        }
+    }
+}
+
+/// Parse error with 1-based line number.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TomlError {
+    pub line: usize,
+    pub message: String,
+}
+
+impl fmt::Display for TomlError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "toml error at line {}: {}", self.line, self.message)
+    }
+}
+
+impl std::error::Error for TomlError {}
+
+/// A parsed document: dotted-path → value.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct TomlDoc {
+    pub entries: BTreeMap<String, TomlValue>,
+}
+
+impl TomlDoc {
+    pub fn parse(src: &str) -> Result<TomlDoc, TomlError> {
+        let mut entries = BTreeMap::new();
+        let mut prefix = String::new();
+        for (i, raw) in src.lines().enumerate() {
+            let lineno = i + 1;
+            let line = strip_comment(raw).trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(rest) = line.strip_prefix('[') {
+                let inner = rest.strip_suffix(']').ok_or_else(|| TomlError {
+                    line: lineno,
+                    message: "unterminated section header".into(),
+                })?;
+                let inner = inner.trim();
+                if inner.is_empty() || inner.starts_with('[') {
+                    return Err(TomlError {
+                        line: lineno,
+                        message: "unsupported or empty section header".into(),
+                    });
+                }
+                prefix = inner.to_string();
+                continue;
+            }
+            let eq = line.find('=').ok_or_else(|| TomlError {
+                line: lineno,
+                message: "expected `key = value`".into(),
+            })?;
+            let key = parse_key(line[..eq].trim()).map_err(|m| TomlError {
+                line: lineno,
+                message: m,
+            })?;
+            let val_src = line[eq + 1..].trim();
+            let value = parse_value(val_src).map_err(|m| TomlError {
+                line: lineno,
+                message: m,
+            })?;
+            let path = if prefix.is_empty() {
+                key
+            } else {
+                format!("{prefix}.{key}")
+            };
+            if entries.insert(path.clone(), value).is_some() {
+                return Err(TomlError {
+                    line: lineno,
+                    message: format!("duplicate key `{path}`"),
+                });
+            }
+        }
+        Ok(TomlDoc { entries })
+    }
+
+    pub fn get(&self, path: &str) -> Option<&TomlValue> {
+        self.entries.get(path)
+    }
+
+    pub fn get_str(&self, path: &str) -> Option<&str> {
+        self.get(path).and_then(TomlValue::as_str)
+    }
+
+    pub fn get_i64(&self, path: &str) -> Option<i64> {
+        self.get(path).and_then(TomlValue::as_i64)
+    }
+
+    pub fn get_f64(&self, path: &str) -> Option<f64> {
+        self.get(path).and_then(TomlValue::as_f64)
+    }
+
+    pub fn get_bool(&self, path: &str) -> Option<bool> {
+        self.get(path).and_then(TomlValue::as_bool)
+    }
+
+    /// Keys under a section prefix (e.g. `"net"` → `net.*`).
+    pub fn section_keys<'a>(&'a self, prefix: &'a str) -> impl Iterator<Item = &'a str> + 'a {
+        let want = format!("{prefix}.");
+        self.entries
+            .keys()
+            .filter(move |k| k.starts_with(&want))
+            .map(|k| k.as_str())
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // `#` starts a comment unless inside a quoted string.
+    let mut in_str = false;
+    let mut escaped = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '\\' if in_str => {
+                escaped = !escaped;
+                continue;
+            }
+            '"' if !escaped => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+        escaped = false;
+    }
+    line
+}
+
+fn parse_key(s: &str) -> Result<String, String> {
+    if s.is_empty() {
+        return Err("empty key".into());
+    }
+    if let Some(inner) = s.strip_prefix('"') {
+        let inner = inner
+            .strip_suffix('"')
+            .ok_or_else(|| "unterminated quoted key".to_string())?;
+        return Ok(inner.to_string());
+    }
+    if s.chars()
+        .all(|c| c.is_ascii_alphanumeric() || c == '_' || c == '-' || c == '.')
+    {
+        Ok(s.to_string())
+    } else {
+        Err(format!("invalid bare key `{s}`"))
+    }
+}
+
+fn parse_value(s: &str) -> Result<TomlValue, String> {
+    let s = s.trim();
+    if s.is_empty() {
+        return Err("missing value".into());
+    }
+    if let Some(rest) = s.strip_prefix('"') {
+        return parse_basic_string(rest).map(TomlValue::Str);
+    }
+    if let Some(rest) = s.strip_prefix('\'') {
+        let inner = rest
+            .strip_suffix('\'')
+            .ok_or_else(|| "unterminated literal string".to_string())?;
+        if inner.contains('\'') {
+            return Err("unexpected quote inside literal string".into());
+        }
+        return Ok(TomlValue::Str(inner.to_string()));
+    }
+    if s == "true" {
+        return Ok(TomlValue::Bool(true));
+    }
+    if s == "false" {
+        return Ok(TomlValue::Bool(false));
+    }
+    if s.starts_with('[') {
+        return parse_array(s);
+    }
+    let cleaned: String = s.chars().filter(|&c| c != '_').collect();
+    if cleaned.contains('.') || cleaned.contains('e') || cleaned.contains('E') {
+        if let Ok(f) = cleaned.parse::<f64>() {
+            return Ok(TomlValue::Float(f));
+        }
+    }
+    if let Ok(i) = cleaned.parse::<i64>() {
+        return Ok(TomlValue::Int(i));
+    }
+    if let Ok(f) = cleaned.parse::<f64>() {
+        return Ok(TomlValue::Float(f));
+    }
+    Err(format!("cannot parse value `{s}`"))
+}
+
+fn parse_basic_string(rest: &str) -> Result<String, String> {
+    // `rest` is everything after the opening quote; the closing quote must
+    // end the value (single-line only).
+    let mut out = String::new();
+    let mut chars = rest.chars();
+    while let Some(c) = chars.next() {
+        match c {
+            '"' => {
+                let tail: String = chars.collect();
+                if !tail.trim().is_empty() {
+                    return Err("trailing data after string".into());
+                }
+                return Ok(out);
+            }
+            '\\' => match chars.next() {
+                Some('n') => out.push('\n'),
+                Some('t') => out.push('\t'),
+                Some('r') => out.push('\r'),
+                Some('"') => out.push('"'),
+                Some('\\') => out.push('\\'),
+                other => return Err(format!("bad escape `\\{other:?}`")),
+            },
+            c => out.push(c),
+        }
+    }
+    Err("unterminated string".into())
+}
+
+fn parse_array(s: &str) -> Result<TomlValue, String> {
+    let inner = s
+        .strip_prefix('[')
+        .and_then(|x| x.strip_suffix(']'))
+        .ok_or_else(|| "unterminated array".to_string())?;
+    let mut items = Vec::new();
+    let mut depth = 0usize;
+    let mut in_str = false;
+    let mut start = 0usize;
+    let bytes = inner.as_bytes();
+    for (i, &b) in bytes.iter().enumerate() {
+        match b {
+            b'"' => in_str = !in_str,
+            b'[' if !in_str => depth += 1,
+            b']' if !in_str => depth = depth.saturating_sub(1),
+            b',' if !in_str && depth == 0 => {
+                let piece = inner[start..i].trim();
+                if !piece.is_empty() {
+                    items.push(parse_value(piece)?);
+                }
+                start = i + 1;
+            }
+            _ => {}
+        }
+    }
+    let piece = inner[start..].trim();
+    if !piece.is_empty() {
+        items.push(parse_value(piece)?);
+    }
+    Ok(TomlValue::Arr(items))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_flat_and_sections() {
+        let doc = TomlDoc::parse(
+            r#"
+# experiment
+seed = 42
+name = "resnet18"
+[net]
+bandwidth_mbps = 200.5
+workers = 8
+shaped = true
+[net.queue]
+bytes = 1_000_000
+"#,
+        )
+        .unwrap();
+        assert_eq!(doc.get_i64("seed"), Some(42));
+        assert_eq!(doc.get_str("name"), Some("resnet18"));
+        assert_eq!(doc.get_f64("net.bandwidth_mbps"), Some(200.5));
+        assert_eq!(doc.get_i64("net.workers"), Some(8));
+        assert_eq!(doc.get_bool("net.shaped"), Some(true));
+        assert_eq!(doc.get_i64("net.queue.bytes"), Some(1_000_000));
+    }
+
+    #[test]
+    fn int_coerces_to_f64() {
+        let doc = TomlDoc::parse("x = 3").unwrap();
+        assert_eq!(doc.get_f64("x"), Some(3.0));
+    }
+
+    #[test]
+    fn arrays() {
+        let doc = TomlDoc::parse(r#"bw = [200, 500, 800]"#).unwrap();
+        let arr = doc.get("bw").unwrap().as_arr().unwrap();
+        assert_eq!(
+            arr.iter().map(|v| v.as_i64().unwrap()).collect::<Vec<_>>(),
+            vec![200, 500, 800]
+        );
+        let doc = TomlDoc::parse(r#"s = ["a", "b,c"]"#).unwrap();
+        let arr = doc.get("s").unwrap().as_arr().unwrap();
+        assert_eq!(arr[1].as_str(), Some("b,c"));
+    }
+
+    #[test]
+    fn comments_and_strings() {
+        let doc = TomlDoc::parse("x = \"a # not comment\" # real comment").unwrap();
+        assert_eq!(doc.get_str("x"), Some("a # not comment"));
+    }
+
+    #[test]
+    fn string_escapes() {
+        let doc = TomlDoc::parse(r#"x = "a\nb\t\"c\"""#).unwrap();
+        assert_eq!(doc.get_str("x"), Some("a\nb\t\"c\""));
+    }
+
+    #[test]
+    fn errors_have_line_numbers() {
+        let e = TomlDoc::parse("ok = 1\nbad line\n").unwrap_err();
+        assert_eq!(e.line, 2);
+        let e = TomlDoc::parse("[unterminated\n").unwrap_err();
+        assert_eq!(e.line, 1);
+    }
+
+    #[test]
+    fn duplicate_keys_rejected() {
+        assert!(TomlDoc::parse("a = 1\na = 2").is_err());
+    }
+
+    #[test]
+    fn floats_and_exponents() {
+        let doc = TomlDoc::parse("a = 1.5\nb = 2e3\nc = -0.25").unwrap();
+        assert_eq!(doc.get_f64("a"), Some(1.5));
+        assert_eq!(doc.get_f64("b"), Some(2000.0));
+        assert_eq!(doc.get_f64("c"), Some(-0.25));
+    }
+
+    #[test]
+    fn section_keys_iterates() {
+        let doc = TomlDoc::parse("[a]\nx = 1\ny = 2\n[b]\nz = 3").unwrap();
+        let keys: Vec<_> = doc.section_keys("a").collect();
+        assert_eq!(keys, vec!["a.x", "a.y"]);
+    }
+}

@@ -1,0 +1,94 @@
+//! Integration: experiment harness end-to-end in fast mode — every paper
+//! table/figure runner produces well-formed output with the paper's
+//! qualitative orderings, and CSV outputs land where requested.
+
+use netsenseml::experiments::scenario::RunOpts;
+use netsenseml::experiments::{degrading, fig2, fig3, fluctuating, tables, tta};
+
+fn opts_with_out(dir: &std::path::Path) -> RunOpts {
+    RunOpts {
+        fast: true,
+        out_dir: Some(dir.to_path_buf()),
+        seed: 42,
+        n_workers: 8,
+        fidelity_every: 0,
+    }
+}
+
+#[test]
+fn all_runners_produce_tables_and_csvs() {
+    let dir = std::env::temp_dir().join("netsense_it_results");
+    std::fs::create_dir_all(&dir).unwrap();
+    let opts = opts_with_out(&dir);
+
+    let (t1, _) = tables::table1(&opts);
+    assert_eq!(t1.rows.len(), 9);
+    assert!(dir.join("table1.csv").exists());
+
+    let (f5, _) = tta::fig5(&opts);
+    assert_eq!(f5.rows.len(), 9);
+    assert!(dir.join("fig5_200Mbps.csv").exists());
+
+    let (f7, _) = degrading::fig7(&opts);
+    assert_eq!(f7.rows.len(), 10);
+    assert!(dir.join("fig7.csv").exists());
+
+    let (f8, _) = fluctuating::fig8(&opts);
+    assert_eq!(f8.rows.len(), 3);
+    assert!(dir.join("fig8.csv").exists());
+
+    let (f2t, _) = fig2::fig2(&opts);
+    assert!(f2t.rows.len() >= 10);
+    assert!(dir.join("fig2.csv").exists());
+
+    let (f3t, _) = fig3::fig3(&opts);
+    assert_eq!(f3t.rows.len(), 14);
+
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn headline_speedup_band_holds_at_200mbps() {
+    // The paper's claim: 1.55–9.84× throughput over the baselines in
+    // bandwidth-constrained conditions. Verify in fast mode at 200 Mbps.
+    let opts = RunOpts {
+        fast: true,
+        out_dir: None,
+        seed: 1,
+        n_workers: 8,
+        fidelity_every: 0,
+    };
+    let (_, cells) = tables::table1(&opts);
+    let at_200: Vec<_> = cells.iter().filter(|c| c.bw_label == "200Mbps").collect();
+    let ns = at_200.iter().find(|c| c.method == "NetSenseML").unwrap();
+    let ar = at_200.iter().find(|c| c.method == "AllReduce").unwrap();
+    let tk = at_200.iter().find(|c| c.method == "TopK-0.1").unwrap();
+    let speedup_ar = ns.throughput / ar.throughput;
+    let speedup_tk = ns.throughput / tk.throughput;
+    assert!(
+        speedup_ar >= 1.55 && speedup_ar <= 25.0,
+        "vs AllReduce: {speedup_ar:.2}x"
+    );
+    assert!(
+        speedup_tk >= 1.55 && speedup_tk <= 25.0,
+        "vs TopK: {speedup_tk:.2}x"
+    );
+}
+
+#[test]
+fn seeds_change_noise_not_orderings() {
+    for seed in [7, 99] {
+        let opts = RunOpts {
+            fast: true,
+            out_dir: None,
+            seed,
+            n_workers: 8,
+            fidelity_every: 0,
+        };
+        let (_, cells) = tables::table1(&opts);
+        for chunk in cells.chunks(3) {
+            assert!(chunk[0].throughput > chunk[1].throughput, "seed {seed}");
+            assert!(chunk[0].throughput > chunk[2].throughput, "seed {seed}");
+        }
+    }
+}
