@@ -1,0 +1,12 @@
+# Entry points referenced by the docs and code comments.
+.PHONY: artifacts verify
+
+# AOT-lower the JAX/Pallas models (L1+L2) to HLO text artifacts consumed by
+# the rust runtime (`--features pjrt`). Needs JAX; run once, never on the
+# request path.
+artifacts:
+	cd python && python3 -m compile.aot --out-dir ../artifacts
+
+# Tier-1 build + tests plus the docs gate (rustdoc warnings fatal, doctests).
+verify:
+	scripts/verify.sh

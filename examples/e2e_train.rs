@@ -1,4 +1,4 @@
-//! End-to-end validation (DESIGN.md E9): REAL training through all three
+//! End-to-end validation: REAL training through all three
 //! layers — Pallas kernels (L1) inside the JAX model (L2), AOT-compiled to
 //! HLO, executed from the rust coordinator (L3) via PJRT, with gradient
 //! synchronization compressed by Algorithm 1+2 over the simulated network.
@@ -19,7 +19,7 @@ use netsenseml::netsim::{NetSim, SimTime};
 use netsenseml::runtime::ModelRuntime;
 use std::path::PathBuf;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> netsenseml::util::error::Result<()> {
     // Minimal key=value arg parsing (this is an example, not the CLI).
     let mut steps = 300usize;
     let mut model = "cifar_cnn".to_string();

@@ -1,0 +1,35 @@
+//! Pipelined vs monolithic gradient exchange: regenerates the overlap
+//! study (fluctuating-bandwidth scenario, ResNet18 payloads) in fast mode
+//! and reports the wall time. The virtual-time table itself is the
+//! artifact: pipelined schedules must beat the monolithic
+//! compress-then-send baseline. Full-scale table: `netsenseml repro
+//! pipeline`.
+
+use netsenseml::experiments::pipelined::pipeline_overlap;
+use netsenseml::experiments::scenario::RunOpts;
+use netsenseml::util::bench::{bb, Bench};
+
+fn main() {
+    let mut b = Bench::new();
+    let opts = RunOpts {
+        fast: true,
+        out_dir: None,
+        seed: 42,
+        n_workers: 8,
+        fidelity_every: 0,
+    };
+    b.group("Pipelined vs monolithic exchange (fluctuating bandwidth)");
+    b.run_once("pipeline overlap study (fast mode)", || {
+        let (table, result) = pipeline_overlap(&opts);
+        bb(table).print();
+        let mono = &result.variants[0];
+        for v in &result.variants[1..] {
+            let verdict = if v.total_s < mono.total_s { "faster" } else { "SLOWER" };
+            eprintln!(
+                "  {}: {:.3}s vs monolithic {:.3}s ({:.3}x, {verdict})",
+                v.label, v.total_s, mono.total_s, v.speedup
+            );
+        }
+    });
+    b.finish();
+}

@@ -1,5 +1,5 @@
 //! Collective communication over the simulated star network — the NCCL
-//! stand-in (DESIGN.md S2). Each collective has two halves:
+//! stand-in (DESIGN.md §2). Each collective has two halves:
 //!
 //! - a **timing** half that schedules the constituent point-to-point
 //!   transfers on [`crate::netsim::NetSim`] and reports the makespan, and
@@ -10,10 +10,15 @@
 //! (NCCL's default; 2(N−1)/N × bytes per worker on the wire); sparse
 //! (Top-K / NetSenseML) payloads ride a **ring all-gather** (the paper
 //! notes "the use of the AllGather communication pattern by TopK"), and a
-//! **parameter-server** push/pull is provided for ablations.
+//! **parameter-server** push/pull is provided for ablations. Bucketed
+//! payloads ride [`StagedAllGather`], the barrier-free all-gather that lets
+//! the pipelined exchange interleave per-bucket transfers in the event
+//! loop.
 
 pub mod numeric;
 pub mod patterns;
 
 pub use numeric::{mean_dense, sum_dense, sum_sparse};
-pub use patterns::{ps_pushpull, ring_allgather, ring_allreduce, CollectiveTiming};
+pub use patterns::{
+    ps_pushpull, ring_allgather, ring_allreduce, CollectiveTiming, StagedAllGather,
+};

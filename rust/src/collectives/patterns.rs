@@ -127,6 +127,84 @@ pub fn ps_pushpull(
     }
 }
 
+/// Incremental, dependency-driven ring all-gather over multiple payload
+/// *buckets* — the transport half of the pipelined gradient exchange
+/// ([`crate::coordinator::pipeline_exchange`]).
+///
+/// Each bucket runs the standard N−1 forwarding phases, but with two
+/// relaxations over [`ring_allgather`]:
+///
+/// - **no phase barrier**: a worker forwards a block as soon as that block
+///   has arrived, instead of waiting for the phase's slowest transfer;
+/// - **bucket interleaving**: bucket *k+1* may enter the ring (at its
+///   `ready` time, i.e. when its compression finishes) while bucket *k* is
+///   still in flight — link FIFO queueing serializes them exactly where
+///   they truly contend.
+///
+/// Transfers are scheduled with [`NetSim::transfer_at`] and the public
+/// clock only advances at [`StagedAllGather::finish`].
+pub struct StagedAllGather {
+    start: SimTime,
+    sent: Vec<u64>,
+    last_arrival: SimTime,
+}
+
+impl StagedAllGather {
+    pub fn new(sim: &NetSim) -> StagedAllGather {
+        let n = sim.topology.n_workers();
+        StagedAllGather {
+            start: sim.now(),
+            sent: vec![0u64; n],
+            last_arrival: sim.now(),
+        }
+    }
+
+    /// Schedule one bucket's full all-gather: every worker's payload for
+    /// this bucket becomes available at `ready` (clamped to the collective
+    /// start). Returns the time the last block of this bucket arrives.
+    pub fn push(&mut self, sim: &mut NetSim, ready: SimTime, payload_bytes: &[u64]) -> SimTime {
+        let n = sim.topology.n_workers();
+        assert_eq!(payload_bytes.len(), n, "payload per worker required");
+        let ready = ready.max(self.start);
+        if n == 1 {
+            self.last_arrival = self.last_arrival.max(ready);
+            return ready;
+        }
+        // avail[i]: when worker i's next block-to-forward is in hand. In
+        // phase p worker i forwards the block that originated at
+        // (i + n − p) % n, which it received from its predecessor in phase
+        // p − 1 (its own payload for p = 0).
+        let mut avail = vec![ready; n];
+        let mut done = ready;
+        for p in 0..(n - 1) {
+            let mut next_avail = vec![SimTime::ZERO; n];
+            for i in 0..n {
+                let origin = (i + n - p) % n;
+                let bytes = payload_bytes[origin].max(1);
+                let r = sim.transfer_at(i, (i + 1) % n, bytes, avail[i]);
+                self.sent[i] += bytes;
+                next_avail[(i + 1) % n] = r.arrival;
+                done = done.max(r.arrival);
+            }
+            avail = next_avail;
+        }
+        self.last_arrival = self.last_arrival.max(done);
+        done
+    }
+
+    /// Advance the clock past the last arrival and report the timing.
+    pub fn finish(self, sim: &mut NetSim) -> CollectiveTiming {
+        if self.last_arrival > sim.now() {
+            sim.advance_to(self.last_arrival);
+        }
+        CollectiveTiming {
+            start: self.start,
+            end: self.last_arrival.max(self.start),
+            sent_per_worker: self.sent,
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -216,6 +294,75 @@ mod tests {
         let el = t.elapsed().as_secs_f64();
         assert!(el >= 0.45, "{el}");
         assert_eq!(t.sent_per_worker[0], 3_000_000);
+    }
+
+    #[test]
+    fn staged_single_bucket_matches_barriered_allgather_when_uniform() {
+        // Equal payloads on identical links: every phase's transfers finish
+        // together, so removing the barrier changes nothing.
+        let payloads = vec![1_000_000u64; 4];
+        let mut s1 = sim(4, 100.0, 1);
+        let barriered = ring_allgather(&mut s1, &payloads);
+        let mut s2 = sim(4, 100.0, 1);
+        let mut sag = StagedAllGather::new(&s2);
+        sag.push(&mut s2, SimTime::ZERO, &payloads);
+        let staged = sag.finish(&mut s2);
+        assert_eq!(staged.end, barriered.end);
+        assert_eq!(staged.sent_per_worker, barriered.sent_per_worker);
+        assert_eq!(s2.now(), staged.end);
+    }
+
+    #[test]
+    fn staged_is_no_slower_than_barriered_on_mixed_payloads() {
+        let payloads = vec![200_000u64, 1_000_000, 50_000, 600_000];
+        let mut s1 = sim(4, 100.0, 2);
+        let barriered = ring_allgather(&mut s1, &payloads);
+        let mut s2 = sim(4, 100.0, 2);
+        let mut sag = StagedAllGather::new(&s2);
+        sag.push(&mut s2, SimTime::ZERO, &payloads);
+        let staged = sag.finish(&mut s2);
+        assert!(staged.end <= barriered.end, "{} > {}", staged.end, barriered.end);
+        assert_eq!(staged.total_sent(), barriered.total_sent());
+    }
+
+    #[test]
+    fn staged_buckets_interleave_with_staggered_ready_times() {
+        // Two buckets whose ready times are staggered by a compression
+        // delay: the total must beat the fully serialized schedule
+        // (wait-for-compression → send → wait → send).
+        let n = 4;
+        let bucket = vec![1_000_000u64; n];
+        let compress = SimTime::from_millis(120);
+
+        let mut s_pipe = sim(n, 100.0, 1);
+        let mut sag = StagedAllGather::new(&s_pipe);
+        sag.push(&mut s_pipe, compress, &bucket);
+        sag.push(&mut s_pipe, compress + compress, &bucket);
+        let pipe = sag.finish(&mut s_pipe);
+
+        let mut s_serial = sim(n, 100.0, 1);
+        s_serial.advance_by(compress);
+        let t1 = ring_allgather(&mut s_serial, &bucket);
+        s_serial.advance_to(t1.end.max(s_serial.now()) + compress);
+        let serial = ring_allgather(&mut s_serial, &bucket);
+
+        assert!(
+            pipe.end < serial.end,
+            "pipelined {} not faster than serialized {}",
+            pipe.end,
+            serial.end
+        );
+        assert_eq!(pipe.total_sent(), t1.total_sent() + serial.total_sent());
+    }
+
+    #[test]
+    fn staged_single_worker_is_free() {
+        let mut s = sim(1, 100.0, 1);
+        let mut sag = StagedAllGather::new(&s);
+        let done = sag.push(&mut s, SimTime::from_millis(5), &[1_000_000]);
+        assert_eq!(done, SimTime::from_millis(5));
+        let t = sag.finish(&mut s);
+        assert_eq!(t.sent_per_worker, vec![0]);
     }
 
     #[test]

@@ -1,0 +1,423 @@
+//! Gradient bucketing for the pipelined exchange: split a flat gradient
+//! into fixed-size fused buckets, compress each bucket independently (with
+//! per-bucket error-feedback state), and fuse the reduced buckets back into
+//! a flat tensor.
+//!
+//! Why buckets: compressing the whole gradient as one monolithic payload
+//! serializes Algorithm 2 ahead of the network — no byte moves until the
+//! full quantize/prune/top-k pass finishes. With buckets, the coordinator
+//! compresses bucket *k+1* while bucket *k* is in flight
+//! ([`crate::coordinator::pipeline_exchange`]), hiding compression cost
+//! behind transmission the way DDP gradient bucketing hides backward
+//! compute behind all-reduce.
+//!
+//! Invariants (property-tested below):
+//! - `fuse(split(g)) == g` for every layout;
+//! - error feedback never leaks across bucket boundaries — each bucket's
+//!   residual evolves exactly as an independent [`NetSenseCompressor`] of
+//!   that bucket's length would.
+//!
+//! ```
+//! use netsenseml::compress::bucket::BucketLayout;
+//!
+//! let layout = BucketLayout::new(10, 4); // buckets of 4 elements
+//! assert_eq!(layout.n_buckets(), 3);
+//! assert_eq!(layout.range(2), 8..10); // last bucket is the remainder
+//!
+//! let g: Vec<f32> = (0..10).map(|i| i as f32).collect();
+//! let parts: Vec<Vec<f32>> = layout.split(&g).iter().map(|s| s.to_vec()).collect();
+//! assert_eq!(parts[2], vec![8.0, 9.0]);
+//! assert_eq!(layout.fuse(&parts), g);
+//! ```
+
+use super::pipeline::{CompressionConfig, CompressionOutcome, NetSenseCompressor};
+use std::ops::Range;
+
+/// How a flat tensor of `n_total` elements is cut into buckets: every
+/// bucket holds `bucket_elems` elements except a possibly-shorter last one.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct BucketLayout {
+    n_total: usize,
+    bucket_elems: usize,
+}
+
+impl BucketLayout {
+    pub fn new(n_total: usize, bucket_elems: usize) -> BucketLayout {
+        assert!(bucket_elems > 0, "bucket_elems must be positive");
+        BucketLayout {
+            n_total,
+            bucket_elems,
+        }
+    }
+
+    /// Layout from a dense byte budget per bucket (f32 elements).
+    pub fn from_bytes(n_total: usize, bucket_bytes: u64) -> BucketLayout {
+        BucketLayout::new(n_total, ((bucket_bytes / 4) as usize).max(1))
+    }
+
+    pub fn n_total(&self) -> usize {
+        self.n_total
+    }
+
+    pub fn bucket_elems(&self) -> usize {
+        self.bucket_elems
+    }
+
+    pub fn n_buckets(&self) -> usize {
+        self.n_total.div_ceil(self.bucket_elems)
+    }
+
+    /// Element range of bucket `i`.
+    pub fn range(&self, i: usize) -> Range<usize> {
+        assert!(i < self.n_buckets(), "bucket {i} out of range");
+        let start = i * self.bucket_elems;
+        start..(start + self.bucket_elems).min(self.n_total)
+    }
+
+    /// Element count of bucket `i`.
+    pub fn elems(&self, i: usize) -> usize {
+        self.range(i).len()
+    }
+
+    /// Dense f32 bytes of bucket `i`.
+    pub fn dense_bytes(&self, i: usize) -> u64 {
+        4 * self.elems(i) as u64
+    }
+
+    /// Split a dense tensor into per-bucket slices (no copies).
+    pub fn split<'a>(&self, dense: &'a [f32]) -> Vec<&'a [f32]> {
+        assert_eq!(dense.len(), self.n_total, "dense length mismatch");
+        (0..self.n_buckets()).map(|i| &dense[self.range(i)]).collect()
+    }
+
+    /// Fuse per-bucket dense tensors back into one flat tensor — the exact
+    /// inverse of [`BucketLayout::split`].
+    pub fn fuse(&self, parts: &[Vec<f32>]) -> Vec<f32> {
+        assert_eq!(parts.len(), self.n_buckets(), "bucket count mismatch");
+        let mut out = Vec::with_capacity(self.n_total);
+        for (i, p) in parts.iter().enumerate() {
+            assert_eq!(p.len(), self.elems(i), "bucket {i} length mismatch");
+            out.extend_from_slice(p);
+        }
+        out
+    }
+}
+
+/// Group consecutive items (by their byte sizes) into ranges whose summed
+/// size stays at or under `target_bytes` — except that every group holds at
+/// least one item, so oversized single items still form a group. Used to
+/// coalesce compression buckets into transport units sized to the sensed
+/// BDP ([`crate::sensing::RatioController::recommended_bucket_bytes`]).
+pub fn group_indices_by_bytes(sizes: &[u64], target_bytes: u64) -> Vec<Range<usize>> {
+    let mut groups = Vec::new();
+    let mut start = 0usize;
+    let mut acc = 0u64;
+    for (i, &s) in sizes.iter().enumerate() {
+        if i > start && acc + s > target_bytes {
+            groups.push(start..i);
+            start = i;
+            acc = 0;
+        }
+        acc += s;
+    }
+    if start < sizes.len() {
+        groups.push(start..sizes.len());
+    }
+    groups
+}
+
+/// Per-bucket Algorithm-2 compression of one flat gradient tensor: one
+/// [`NetSenseCompressor`] (and therefore one error-feedback residual) per
+/// bucket.
+pub struct BucketedCompressor {
+    layout: BucketLayout,
+    compressors: Vec<NetSenseCompressor>,
+}
+
+impl BucketedCompressor {
+    pub fn new(layout: BucketLayout, config: CompressionConfig) -> BucketedCompressor {
+        let compressors = (0..layout.n_buckets())
+            .map(|i| NetSenseCompressor::new(layout.elems(i), config.clone()))
+            .collect();
+        BucketedCompressor {
+            layout,
+            compressors,
+        }
+    }
+
+    pub fn layout(&self) -> &BucketLayout {
+        &self.layout
+    }
+
+    pub fn n(&self) -> usize {
+        self.layout.n_total()
+    }
+
+    /// Run Algorithm 2 on every bucket of `grads` at the controller's
+    /// `ratio`. Outcome `i` is bucket `i`'s payload, with indices local to
+    /// the bucket (offset by `layout.range(i).start` in the flat tensor).
+    pub fn compress(
+        &mut self,
+        grads: &[f32],
+        weights: &[f32],
+        ratio: f64,
+    ) -> Vec<CompressionOutcome> {
+        assert_eq!(grads.len(), self.n(), "gradient length mismatch");
+        assert_eq!(weights.len(), self.n(), "weight length mismatch");
+        self.compressors
+            .iter_mut()
+            .enumerate()
+            .map(|(i, c)| {
+                let r = self.layout.range(i);
+                c.compress(&grads[r.clone()], &weights[r], ratio)
+            })
+            .collect()
+    }
+
+    /// Per-bucket wire-size prediction (byte-exact vs [`Self::compress`],
+    /// same contract as [`NetSenseCompressor::predict_wire_bytes`]).
+    pub fn predict_wire_bytes(&self, ratio: f64) -> Vec<u64> {
+        self.compressors
+            .iter()
+            .map(|c| c.predict_wire_bytes(ratio))
+            .collect()
+    }
+
+    /// L2 norm of the concatenated residual across buckets.
+    pub fn residual_norm(&self) -> f64 {
+        self.compressors
+            .iter()
+            .map(|c| {
+                let r = c.residual_norm();
+                r * r
+            })
+            .sum::<f64>()
+            .sqrt()
+    }
+
+    /// Per-bucket residual norms (compression-health metric).
+    pub fn residual_norms(&self) -> Vec<f64> {
+        self.compressors.iter().map(|c| c.residual_norm()).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::prop::*;
+    use crate::util::rng::Pcg64;
+
+    fn randn(n: usize, seed: u64) -> Vec<f32> {
+        let mut r = Pcg64::seeded(seed);
+        let mut v = vec![0f32; n];
+        r.fill_normal_f32(&mut v, 0.0, 1.0);
+        v
+    }
+
+    #[test]
+    fn layout_basics() {
+        let l = BucketLayout::new(100, 32);
+        assert_eq!(l.n_buckets(), 4);
+        assert_eq!(l.range(0), 0..32);
+        assert_eq!(l.range(3), 96..100);
+        assert_eq!(l.elems(3), 4);
+        assert_eq!(l.dense_bytes(0), 128);
+        // exact division: no runt bucket
+        let l = BucketLayout::new(64, 32);
+        assert_eq!(l.n_buckets(), 2);
+        assert_eq!(l.elems(1), 32);
+        // bucket larger than tensor: one bucket
+        let l = BucketLayout::from_bytes(10, 1 << 20);
+        assert_eq!(l.n_buckets(), 1);
+        assert_eq!(l.range(0), 0..10);
+    }
+
+    #[test]
+    fn from_bytes_floors_at_one_element() {
+        let l = BucketLayout::from_bytes(8, 1);
+        assert_eq!(l.bucket_elems(), 1);
+        assert_eq!(l.n_buckets(), 8);
+    }
+
+    #[test]
+    fn property_fuse_split_roundtrip() {
+        forall(
+            "fuse(split(g)) == g",
+            100,
+            pair(vec_f32(1..300, -100.0..100.0), usize_in(1..64)),
+            |(g, bucket_elems)| {
+                let layout = BucketLayout::new(g.len(), *bucket_elems);
+                let parts: Vec<Vec<f32>> =
+                    layout.split(g).iter().map(|s| s.to_vec()).collect();
+                layout.fuse(&parts) == *g
+            },
+        );
+    }
+
+    #[test]
+    fn property_split_covers_every_element_once() {
+        forall(
+            "split is a partition",
+            100,
+            pair(vec_f32(1..200, -1.0..1.0), usize_in(1..50)),
+            |(g, bucket_elems)| {
+                let layout = BucketLayout::new(g.len(), *bucket_elems);
+                let total: usize = (0..layout.n_buckets()).map(|i| layout.elems(i)).sum();
+                let contiguous = (0..layout.n_buckets().saturating_sub(1))
+                    .all(|i| layout.range(i).end == layout.range(i + 1).start);
+                total == g.len() && contiguous
+            },
+        );
+    }
+
+    #[test]
+    fn grouping_respects_target() {
+        let sizes = vec![10u64, 10, 10, 10, 10];
+        assert_eq!(group_indices_by_bytes(&sizes, 25), vec![0..2, 2..4, 4..5]);
+        // target smaller than any item → singletons
+        assert_eq!(
+            group_indices_by_bytes(&sizes, 5),
+            vec![0..1, 1..2, 2..3, 3..4, 4..5]
+        );
+        // target covers everything → one group
+        assert_eq!(group_indices_by_bytes(&sizes, 1_000), vec![0..5]);
+        assert_eq!(group_indices_by_bytes(&[], 10), Vec::<std::ops::Range<usize>>::new());
+    }
+
+    #[test]
+    fn property_grouping_is_a_partition() {
+        forall(
+            "groups tile 0..n in order",
+            100,
+            pair(usize_in(0..40), usize_in(1..2000)),
+            |&(n, target)| {
+                let sizes: Vec<u64> = (0..n).map(|i| (i as u64 % 17) * 37 + 1).collect();
+                let groups = group_indices_by_bytes(&sizes, target as u64);
+                let mut next = 0usize;
+                for g in &groups {
+                    if g.start != next || g.is_empty() {
+                        return false;
+                    }
+                    next = g.end;
+                }
+                next == n
+            },
+        );
+    }
+
+    #[test]
+    fn bucketed_wire_prediction_matches_actual() {
+        let n = 10_000;
+        let layout = BucketLayout::new(n, 1536);
+        let g = randn(n, 1);
+        let w = randn(n, 2);
+        for &ratio in &[1.0, 0.3, 0.1, 0.04, 0.01] {
+            let mut bc = BucketedCompressor::new(layout.clone(), CompressionConfig::default());
+            let predicted = bc.predict_wire_bytes(ratio);
+            let actual: Vec<u64> = bc
+                .compress(&g, &w, ratio)
+                .iter()
+                .map(|o| o.wire_bytes)
+                .collect();
+            assert_eq!(predicted, actual, "ratio {ratio}");
+        }
+    }
+
+    #[test]
+    fn per_bucket_error_feedback_matches_independent_compressors() {
+        // The bucketed compressor must be bit-identical to running an
+        // independent NetSenseCompressor on each slice — residuals included.
+        let n = 4096;
+        let layout = BucketLayout::new(n, 1000);
+        let w = randn(n, 3);
+        let mut bc = BucketedCompressor::new(layout.clone(), CompressionConfig::default());
+        let mut refs: Vec<NetSenseCompressor> = (0..layout.n_buckets())
+            .map(|i| NetSenseCompressor::new(layout.elems(i), CompressionConfig::default()))
+            .collect();
+        for step in 0..5 {
+            let g = randn(n, 100 + step);
+            let outs = bc.compress(&g, &w, 0.05);
+            for (i, r) in refs.iter_mut().enumerate() {
+                let range = layout.range(i);
+                let want = r.compress(&g[range.clone()], &w[range], 0.05);
+                assert_eq!(outs[i].payload, want.payload, "step {step} bucket {i}");
+                assert_eq!(
+                    bc.residual_norms()[i],
+                    r.residual_norm(),
+                    "step {step} bucket {i} residual"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn error_feedback_does_not_leak_across_buckets() {
+        // Bucket 0 sees zero gradients forever; its residual must stay
+        // exactly zero no matter how much mass the other buckets carry.
+        let n = 3000;
+        let layout = BucketLayout::new(n, 1000);
+        let mut bc = BucketedCompressor::new(layout, CompressionConfig::default());
+        let w = randn(n, 4);
+        for step in 0..10 {
+            let mut g = randn(n, 200 + step);
+            for x in g[0..1000].iter_mut() {
+                *x = 0.0;
+            }
+            bc.compress(&g, &w, 0.02);
+        }
+        let norms = bc.residual_norms();
+        assert_eq!(norms[0], 0.0, "bucket 0 residual leaked: {norms:?}");
+        assert!(norms[1] > 0.0 && norms[2] > 0.0);
+    }
+
+    #[test]
+    fn residual_mass_drains_per_bucket() {
+        // Same conservation behaviour as the monolithic compressor: feed a
+        // gradient once, then zeros; every bucket's residual must drain.
+        let n = 2048;
+        let layout = BucketLayout::new(n, 512);
+        let mut bc = BucketedCompressor::new(layout, CompressionConfig::default());
+        let g = randn(n, 5);
+        let w = randn(n, 6);
+        bc.compress(&g, &w, 0.01);
+        let before = bc.residual_norms();
+        assert!(before.iter().all(|&r| r > 0.0));
+        let zeros = vec![0f32; n];
+        for _ in 0..200 {
+            bc.compress(&zeros, &w, 0.1);
+        }
+        let after = bc.residual_norms();
+        for (i, (b, a)) in before.iter().zip(&after).enumerate() {
+            assert!(a < &(b * 0.5), "bucket {i} residual did not drain: {b} → {a}");
+        }
+    }
+
+    #[test]
+    fn fused_payload_sum_tracks_dense_mean_over_time() {
+        // Error-feedback conservation across the split/fuse boundary: over
+        // many rounds the transmitted mass equals the injected mass.
+        let n = 1500;
+        let layout = BucketLayout::new(n, 400);
+        let mut bc = BucketedCompressor::new(layout.clone(), CompressionConfig::default());
+        let g = randn(n, 7);
+        let w = randn(n, 8);
+        let rounds = 30;
+        let mut sum = vec![0f64; n];
+        for _ in 0..rounds {
+            let outs = bc.compress(&g, &w, 0.25);
+            let parts: Vec<Vec<f32>> = outs.iter().map(|o| o.payload.to_dense()).collect();
+            let fused = layout.fuse(&parts);
+            for (s, &v) in sum.iter_mut().zip(&fused) {
+                *s += v as f64;
+            }
+        }
+        let mut err = 0f64;
+        let mut mag = 0f64;
+        for i in 0..n {
+            let want = g[i] as f64 * rounds as f64;
+            err += (sum[i] - want).abs();
+            mag += want.abs();
+        }
+        assert!(err / mag < 0.15, "relative drift {}", err / mag);
+    }
+}

@@ -14,7 +14,11 @@
 //!   (memory-compensated compression).
 //! - [`pipeline`] — Algorithm 2 end-to-end: adaptive quantization decision →
 //!   pruning → Top-K sparsification → encoded payload.
+//! - [`bucket`] — split/fuse of flat gradients into fixed-size buckets with
+//!   per-bucket error-feedback state, feeding the pipelined exchange
+//!   ([`crate::coordinator::pipeline_exchange`]).
 
+pub mod bucket;
 pub mod error_feedback;
 pub mod pipeline;
 pub mod prune;
@@ -22,6 +26,7 @@ pub mod quantize;
 pub mod sparse;
 pub mod topk;
 
+pub use bucket::{group_indices_by_bytes, BucketLayout, BucketedCompressor};
 pub use error_feedback::ErrorFeedback;
 pub use pipeline::{CompressionConfig, CompressionOutcome, NetSenseCompressor};
 pub use quantize::{f32_to_f16_bits, f16_bits_to_f32, Precision};

@@ -8,6 +8,22 @@
 //! Step 2 (model pruning): zero gradients of the smallest-|weight|
 //! parameters at rate `0.5 × (1 − ratio)`.
 //! Step 3 (sparsification): Top-K by |gradient| at `ratio`, COO-encoded.
+//!
+//! For the bucketed pipelined exchange, one compressor runs per bucket —
+//! see [`super::bucket`].
+//!
+//! ```
+//! use netsenseml::compress::{CompressionConfig, NetSenseCompressor};
+//!
+//! let n = 16;
+//! let mut c = NetSenseCompressor::new(n, CompressionConfig::default());
+//! let grads: Vec<f32> = (1..=n).map(|i| i as f32).collect();
+//! let weights = vec![1.0f32; n];
+//! let out = c.compress(&grads, &weights, 0.25);
+//! assert_eq!(out.payload.nnz(), 4);          // top-4 of 16 at ratio 0.25
+//! assert!(out.wire_bytes < out.dense_bytes); // smaller than dense f32
+//! assert_eq!(out.payload.to_dense()[n - 1], 16.0); // largest survives
+//! ```
 
 use super::error_feedback::ErrorFeedback;
 use super::prune::pruning_rate_for;
@@ -210,6 +226,9 @@ impl NetSenseCompressor {
 
     /// Predict the wire size Algorithm 2 would produce for a ratio without
     /// running it (used by the controller to pick ratios against the BDP).
+    /// Assumes the density condition `‖g‖₂ > tr_d` holds whenever
+    /// `ratio < tr_q` (the steady-state case) — a near-zero gradient would
+    /// skip quantization and produce a different size.
     pub fn predict_wire_bytes(&self, ratio: f64) -> u64 {
         let ratio = ratio.clamp(0.0, 1.0);
         let (eff, prec) = if ratio < self.config.quant_ratio_threshold {

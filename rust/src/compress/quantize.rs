@@ -104,7 +104,7 @@ pub fn f16_bits_to_f32(h: u16) -> f32 {
 
 /// f32 → bfloat16 bits (round-to-nearest-even). bf16 is the top 16 bits of
 /// f32, so range is preserved and conversion is cheap — this is the TPU-
-/// native 16-bit format (see DESIGN.md §Hardware-Adaptation).
+/// native 16-bit format.
 pub fn f32_to_bf16_bits(x: f32) -> u16 {
     let bits = x.to_bits();
     if x.is_nan() {

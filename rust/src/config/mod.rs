@@ -1,9 +1,10 @@
 //! Typed experiment configuration, loadable from TOML files (see
 //! `configs/*.toml`) with CLI overrides layered on top.
 
+use crate::coordinator::PipelineConfig;
 use crate::experiments::scenario::RunOpts;
+use crate::util::error::{anyhow, Result};
 use crate::util::toml::TomlDoc;
-use anyhow::{anyhow, Result};
 use std::path::Path;
 
 /// Everything a `netsenseml train` run needs.
@@ -18,6 +19,14 @@ pub struct TrainConfig {
     pub max_vtime_s: f64,
     pub fidelity_every: usize,
     pub seed: u64,
+    /// Compression-bucket size for the pipelined exchange, in KiB of dense
+    /// gradient (0 = monolithic compress-then-send, the pre-pipeline path).
+    pub bucket_kb: u64,
+    /// Lookahead stages of the pipelined exchange.
+    pub pipeline_depth: usize,
+    /// BDP-adaptive transport staging (shrink in-flight units under
+    /// congestion).
+    pub pipeline_adaptive: bool,
 }
 
 impl Default for TrainConfig {
@@ -32,6 +41,9 @@ impl Default for TrainConfig {
             max_vtime_s: 600.0,
             fidelity_every: 250,
             seed: 42,
+            bucket_kb: 0,
+            pipeline_depth: 2,
+            pipeline_adaptive: true,
         }
     }
 }
@@ -74,6 +86,21 @@ impl TrainConfig {
         if let Some(v) = doc.get_i64("train.seed") {
             c.seed = v as u64;
         }
+        if let Some(v) = doc.get_i64("pipeline.bucket_kb") {
+            if v < 0 {
+                return Err(anyhow!("pipeline.bucket_kb must be ≥ 0 (got {v})"));
+            }
+            c.bucket_kb = v as u64;
+        }
+        if let Some(v) = doc.get_i64("pipeline.depth") {
+            if v < 0 {
+                return Err(anyhow!("pipeline.depth must be ≥ 0 (got {v})"));
+            }
+            c.pipeline_depth = v as usize;
+        }
+        if let Some(v) = doc.get_bool("pipeline.adaptive") {
+            c.pipeline_adaptive = v;
+        }
         c.validate()?;
         Ok(c)
     }
@@ -92,6 +119,19 @@ impl TrainConfig {
             ));
         }
         Ok(())
+    }
+
+    /// The pipelined-exchange config this run asks for (None = monolithic).
+    pub fn pipeline(&self) -> Option<PipelineConfig> {
+        if self.bucket_kb == 0 {
+            return None;
+        }
+        Some(PipelineConfig {
+            bucket_size_bytes: self.bucket_kb.saturating_mul(1024),
+            pipeline_depth: self.pipeline_depth,
+            adaptive: self.pipeline_adaptive,
+            ..Default::default()
+        })
     }
 
     pub fn run_opts(&self) -> RunOpts {
@@ -140,10 +180,32 @@ prop_delay_ms = 25
     }
 
     #[test]
+    fn pipeline_section_parses() {
+        // Default: pipeline off.
+        assert_eq!(TrainConfig::default().pipeline(), None);
+        let c = TrainConfig::from_toml(
+            r#"
+[pipeline]
+bucket_kb = 2048
+depth = 4
+adaptive = false
+"#,
+        )
+        .unwrap();
+        assert_eq!(c.bucket_kb, 2048);
+        let p = c.pipeline().unwrap();
+        assert_eq!(p.bucket_size_bytes, 2048 * 1024);
+        assert_eq!(p.pipeline_depth, 4);
+        assert!(!p.adaptive);
+    }
+
+    #[test]
     fn rejects_bad_values() {
         assert!(TrainConfig::from_toml("[train]\nstrategy = \"bogus\"").is_err());
         assert!(TrainConfig::from_toml("[train]\nn_workers = 0").is_err());
         assert!(TrainConfig::from_toml("[net]\nbandwidth_mbps = -5").is_err());
+        assert!(TrainConfig::from_toml("[pipeline]\nbucket_kb = -1").is_err());
+        assert!(TrainConfig::from_toml("[pipeline]\ndepth = -2").is_err());
         assert!(TrainConfig::from_toml("not toml at all").is_err());
     }
 }

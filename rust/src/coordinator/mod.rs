@@ -8,16 +8,23 @@
 //! - [`sync`] — one gradient-synchronization round: compress (per
 //!   strategy), move bytes on the simulated network, aggregate, and feed
 //!   the sensing controller.
+//! - [`pipeline_exchange`] — the bucketed pipeline scheduler: compress
+//!   bucket *k+1* while bucket *k* is in flight (compress ∥ transmit
+//!   overlap), with BDP-adaptive transport staging.
 //! - [`sim_train`] — the virtual-time training driver for paper-scale
 //!   models (surrogate dynamics; used by every table/figure experiment).
 //! - [`real_train`] — the real-numerics driver: JAX/Pallas models through
 //!   the PJRT runtime with the network still simulated (the e2e example).
 
+pub mod pipeline_exchange;
 pub mod real_train;
 pub mod sim_train;
 pub mod strategy;
 pub mod sync;
 
+pub use pipeline_exchange::{
+    monolithic_exchange, pipelined_exchange, ExchangeTiming, PipelineConfig, PipelineStage,
+};
 pub use real_train::{RealTrainConfig, RealTrainer};
 pub use sim_train::{run_sim_training, SimTrainConfig};
 pub use strategy::SyncStrategy;

@@ -14,7 +14,7 @@ use crate::netsim::{NetSim, SimTime};
 use crate::runtime::{ModelRuntime, TrainState};
 use crate::trainer::data::SyntheticCifar;
 use crate::trainer::metrics::{StepRecord, TrainLog};
-use anyhow::Result;
+use crate::util::error::Result;
 
 /// Configuration for a real-training run.
 #[derive(Clone, Debug)]

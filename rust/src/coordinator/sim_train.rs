@@ -7,6 +7,7 @@
 //! dominated by the spot checks; a 4 000-step run at the default cadence
 //! finishes in seconds.
 
+use super::pipeline_exchange::PipelineConfig;
 use super::strategy::SyncStrategy;
 use super::sync::SyncEngine;
 use crate::netsim::{NetSim, SimTime};
@@ -29,6 +30,8 @@ pub struct SimTrainConfig {
     /// is always full when > 0).
     pub fidelity_every: usize,
     pub seed: u64,
+    /// Bucketed pipelined exchange (None = monolithic compress-then-send).
+    pub pipeline: Option<PipelineConfig>,
 }
 
 impl SimTrainConfig {
@@ -42,6 +45,7 @@ impl SimTrainConfig {
             max_steps: 100_000,
             fidelity_every: 250,
             seed: 42,
+            pipeline: None,
         }
     }
 
@@ -62,6 +66,9 @@ pub fn run_sim_training(config: &SimTrainConfig, sim: &mut NetSim) -> TrainLog {
         config.n_workers,
         config.model.n_params,
     );
+    if let Some(p) = &config.pipeline {
+        engine = engine.with_pipeline(p.clone());
+    }
     // Surrogate state is only materialized when spot checks will run
     // (it allocates n_workers full-size gradient tensors).
     let mut surrogate = SurrogateTrainer::new(config.model, config.n_workers, config.seed);
@@ -207,6 +214,33 @@ mod tests {
         assert_eq!(steps_pred, steps_spot);
         let rel = (t_pred - t_spot).abs() / t_pred;
         assert!(rel < 0.02, "vtime diverged: {t_pred} vs {t_spot}");
+    }
+
+    #[test]
+    fn pipelined_training_matches_monolithic_throughput_or_better() {
+        use crate::coordinator::pipeline_exchange::PipelineConfig;
+        let mut mono = quick_config(SyncStrategy::NetSense, 200.0);
+        // Model compression cost in both runs so the comparison is fair:
+        // the monolithic run is a single-bucket pipeline.
+        mono.pipeline = Some(PipelineConfig {
+            bucket_size_bytes: 4 * resnet().n_params as u64,
+            ..Default::default()
+        });
+        let mut pipe = quick_config(SyncStrategy::NetSense, 200.0);
+        pipe.pipeline = Some(PipelineConfig::default());
+        let tp_mono = {
+            let mut sim = star(8, 200.0);
+            run_sim_training(&mono, &mut sim).mean_throughput()
+        };
+        let tp_pipe = {
+            let mut sim = star(8, 200.0);
+            run_sim_training(&pipe, &mut sim).mean_throughput()
+        };
+        assert!(tp_pipe > 0.0 && tp_mono > 0.0);
+        assert!(
+            tp_pipe >= 0.95 * tp_mono,
+            "pipelined throughput {tp_pipe:.1} collapsed vs monolithic {tp_mono:.1}"
+        );
     }
 
     #[test]

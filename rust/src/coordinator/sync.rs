@@ -1,7 +1,7 @@
 //! One gradient-synchronization round, per strategy: compress → transport
 //! on the simulated network → aggregate → feed the sensing controller.
 //!
-//! Two fidelities (DESIGN.md §6):
+//! Two fidelities (DESIGN.md §4):
 //! - [`SyncEngine::sync_full`] — real numerics: per-worker Algorithm-2
 //!   compression of the actual gradient tensors, sparse aggregation, dense
 //!   reduction. Used every step on the real-training track and on
@@ -11,11 +11,21 @@
 //!   byte-exact against `sync_full` in tests), so million-step sweeps cost
 //!   microseconds per step. The controller sees the identical observable
 //!   stream either way.
+//!
+//! With [`SyncEngine::with_pipeline`] the sparse strategies switch to the
+//! bucketed pipelined exchange: per-bucket Algorithm-2 compression (one
+//! error-feedback residual per bucket), transport stages coalesced to the
+//! sensed BDP, and compression of stage *k+1* overlapped with the
+//! transmission of stage *k* ([`super::pipeline_exchange`]). Scheduling
+//! knobs never change the reduced gradient — only when bytes move.
 
+use super::pipeline_exchange::{pipelined_exchange, ExchangeTiming, PipelineConfig, PipelineStage};
 use super::strategy::SyncStrategy;
 use crate::collectives::{ring_allgather, ring_allreduce, sum_sparse, CollectiveTiming};
-use crate::compress::{NetSenseCompressor, SparseGradient};
-use crate::netsim::NetSim;
+use crate::compress::{
+    group_indices_by_bytes, BucketLayout, BucketedCompressor, NetSenseCompressor, SparseGradient,
+};
+use crate::netsim::{NetSim, SimTime};
 use crate::sensing::RatioController;
 
 /// Result of one synchronization round.
@@ -48,6 +58,10 @@ pub struct SyncEngine {
     /// Lazily allocated — per-worker residual buffers are n_params f32
     /// each, which timing-only runs never need.
     compressors: Vec<NetSenseCompressor>,
+    /// Bucketed pipelined exchange; `None` = monolithic compress-then-send.
+    pipeline: Option<PipelineConfig>,
+    /// Lazily allocated per-worker bucketed compressors (pipeline mode).
+    bucketed: Vec<BucketedCompressor>,
 }
 
 impl SyncEngine {
@@ -61,7 +75,32 @@ impl SyncEngine {
             controller,
             compression_cfg,
             compressors: Vec::new(),
+            pipeline: None,
+            bucketed: Vec::new(),
         }
+    }
+
+    /// Enable the bucketed pipelined exchange for the sparse strategies
+    /// (dense AllReduce is unaffected). Must be called before the first
+    /// sync round (the bucket layout fixes error-feedback granularity).
+    pub fn with_pipeline(mut self, config: PipelineConfig) -> Self {
+        assert!(config.bucket_size_bytes >= 4, "bucket must hold ≥ 1 f32");
+        assert!(
+            self.compressors.is_empty() && self.bucketed.is_empty(),
+            "pipeline must be configured before the first sync round"
+        );
+        self.pipeline = Some(config);
+        self
+    }
+
+    pub fn pipeline_config(&self) -> Option<&PipelineConfig> {
+        self.pipeline.as_ref()
+    }
+
+    /// The compression bucket layout in effect (pipeline mode only).
+    fn bucket_layout(&self) -> BucketLayout {
+        let cfg = self.pipeline.as_ref().expect("pipeline configured");
+        BucketLayout::from_bytes(self.n_params, cfg.bucket_size_bytes)
     }
 
     fn ensure_compressors(&mut self) {
@@ -76,8 +115,26 @@ impl SyncEngine {
         }
     }
 
-    /// Wire bytes Algorithm 2 would produce at `ratio` (no allocation).
-    fn predict_wire(&self, ratio: f64) -> u64 {
+    fn ensure_bucketed(&mut self) {
+        if self.bucketed.is_empty() {
+            let cfg = self
+                .compression_cfg
+                .clone()
+                .expect("sparse strategy has a compression config");
+            let layout = self.bucket_layout();
+            self.bucketed = (0..self.n_workers)
+                .map(|_| BucketedCompressor::new(layout.clone(), cfg.clone()))
+                .collect();
+        }
+    }
+
+    /// Wire bytes Algorithm 2 would produce at `ratio` over `n` elements
+    /// (no allocation). Assumes the quantization density condition
+    /// (`grad ℓ2 > tr_d`) holds whenever `ratio < tr_q` — the steady-state
+    /// case; a near-zero gradient (or bucket) would skip quantization in
+    /// the full path and produce a different size. Same modeling
+    /// assumption as [`NetSenseCompressor::predict_wire_bytes`].
+    fn predict_wire_n(&self, n: usize, ratio: f64) -> u64 {
         let cfg = self
             .compression_cfg
             .as_ref()
@@ -88,8 +145,51 @@ impl SyncEngine {
         } else {
             (ratio, 4u64)
         };
-        let k = crate::compress::topk::k_for_ratio(self.n_params, eff) as u64;
+        let k = crate::compress::topk::k_for_ratio(n, eff) as u64;
         12 + k * (4 + val_bytes)
+    }
+
+    /// Wire bytes for the whole (monolithic) gradient at `ratio`.
+    fn predict_wire(&self, ratio: f64) -> u64 {
+        self.predict_wire_n(self.n_params, ratio)
+    }
+
+    /// Coalesce per-bucket wire sizes into transport stages: adaptive mode
+    /// targets one sensed BDP per stage (shrinking under congestion), and
+    /// falls back to one bucket per stage without an estimate source.
+    fn stage_groups(&self, bucket_wire: &[u64]) -> Vec<std::ops::Range<usize>> {
+        let cfg = self.pipeline.as_ref().expect("pipeline configured");
+        let floor = bucket_wire.iter().copied().max().unwrap_or(1).max(1);
+        let total: u64 = bucket_wire.iter().sum();
+        let target = if cfg.adaptive {
+            match &self.controller {
+                Some(ctl) => ctl.recommended_bucket_bytes(floor, total.max(floor)),
+                None => floor,
+            }
+        } else {
+            floor
+        };
+        group_indices_by_bytes(bucket_wire, target)
+    }
+
+    /// Build the pipeline stages for one round from per-bucket wire sizes
+    /// (`wire[worker][bucket]`).
+    fn build_stages(&self, layout: &BucketLayout, wire: &[Vec<u64>]) -> Vec<PipelineStage> {
+        let cfg = self.pipeline.as_ref().expect("pipeline configured");
+        let nb = layout.n_buckets();
+        let bucket_max: Vec<u64> = (0..nb)
+            .map(|b| wire.iter().map(|w| w[b]).max().unwrap_or(0))
+            .collect();
+        self.stage_groups(&bucket_max)
+            .into_iter()
+            .map(|g| PipelineStage {
+                payload_bytes: wire
+                    .iter()
+                    .map(|w| g.clone().map(|b| w[b]).sum())
+                    .collect(),
+                compress_time: cfg.compress_time(g.clone().map(|b| layout.dense_bytes(b)).sum()),
+            })
+            .collect()
     }
 
     /// The ratio the next round will use.
@@ -145,6 +245,9 @@ impl SyncEngine {
                 }
             }
             SyncStrategy::NetSense | SyncStrategy::TopK(_) => {
+                if self.pipeline.is_some() {
+                    return self.sync_full_pipelined(sim, grads, weights);
+                }
                 self.ensure_compressors();
                 let ratio = self.current_ratio();
                 let mut payloads: Vec<SparseGradient> = Vec::with_capacity(self.n_workers);
@@ -175,6 +278,96 @@ impl SyncEngine {
         }
     }
 
+    /// Full-fidelity bucketed pipelined synchronization: per-bucket
+    /// Algorithm-2 compression, BDP-sized transport stages, compress ∥
+    /// transmit overlap. The reduced gradient is invariant to the transport
+    /// scheduling — only the virtual clock differs from a monolithic send
+    /// of the same bucketed payloads.
+    fn sync_full_pipelined(
+        &mut self,
+        sim: &mut NetSim,
+        grads: &[Vec<f32>],
+        weights: &[f32],
+    ) -> SyncOutcome {
+        self.ensure_bucketed();
+        let ratio = self.current_ratio();
+        let layout = self.bucketed[0].layout().clone();
+        let nb = layout.n_buckets();
+        let mut quantized = false;
+        let mut wire: Vec<Vec<u64>> = Vec::with_capacity(self.n_workers);
+        let mut per_bucket: Vec<Vec<SparseGradient>> =
+            (0..nb).map(|_| Vec::with_capacity(self.n_workers)).collect();
+        for (w, grad) in grads.iter().enumerate() {
+            let outs = self.bucketed[w].compress(grad, weights, ratio);
+            let mut w_wire = Vec::with_capacity(nb);
+            for (b, out) in outs.into_iter().enumerate() {
+                quantized |= out.quantized;
+                w_wire.push(out.wire_bytes);
+                per_bucket[b].push(out.payload);
+            }
+            wire.push(w_wire);
+        }
+        let stages = self.build_stages(&layout, &wire);
+        let depth = self.pipeline.as_ref().unwrap().pipeline_depth;
+        let timing = pipelined_exchange(sim, &stages, depth);
+        // Numeric: bucket-wise mean of everyone's payloads, fused back.
+        let scale = 1.0 / self.n_workers as f32;
+        let parts: Vec<Vec<f32>> = (0..nb)
+            .map(|b| {
+                let mut acc = sum_sparse(layout.elems(b), &per_bucket[b]);
+                for a in acc.iter_mut() {
+                    *a *= scale;
+                }
+                acc
+            })
+            .collect();
+        let mean = layout.fuse(&parts);
+        let bytes: Vec<u64> = wire.iter().map(|w| w.iter().sum()).collect();
+        self.observe_exchange(&bytes, &timing);
+        SyncOutcome {
+            mean_grad: Some(mean),
+            payload_bytes: bytes,
+            comm: timing.comm,
+            ratio,
+            quantized,
+        }
+    }
+
+    /// Timing-only bucketed pipelined synchronization. Byte-exact against
+    /// [`SyncEngine::sync_full_pipelined`] whenever every bucket satisfies
+    /// the quantization density condition (see
+    /// [`SyncEngine::predict_wire_n`]) — the same conditional contract the
+    /// monolithic predicted path has, though bucketing makes the
+    /// near-zero-gradient exception (e.g. a frozen layer's bucket at
+    /// ratios below `tr_q`) easier to reach.
+    fn sync_predicted_pipelined(&mut self, sim: &mut NetSim) -> SyncOutcome {
+        let ratio = self.current_ratio();
+        let layout = self.bucket_layout();
+        let nb = layout.n_buckets();
+        let per_bucket: Vec<u64> = (0..nb)
+            .map(|b| self.predict_wire_n(layout.elems(b), ratio))
+            .collect();
+        let wire: Vec<Vec<u64>> = vec![per_bucket; self.n_workers];
+        let stages = self.build_stages(&layout, &wire);
+        let depth = self.pipeline.as_ref().unwrap().pipeline_depth;
+        let timing = pipelined_exchange(sim, &stages, depth);
+        let bytes: Vec<u64> = wire.iter().map(|w| w.iter().sum()).collect();
+        let quantized = ratio
+            < self
+                .compression_cfg
+                .as_ref()
+                .map(|c| c.quant_ratio_threshold)
+                .unwrap_or(0.0);
+        self.observe_exchange(&bytes, &timing);
+        SyncOutcome {
+            mean_grad: None,
+            payload_bytes: bytes,
+            comm: timing.comm,
+            ratio,
+            quantized,
+        }
+    }
+
     /// Timing-only synchronization (surrogate fast path): identical wire
     /// sizes and controller observations, no tensor math.
     pub fn sync_predicted(&mut self, sim: &mut NetSim) -> SyncOutcome {
@@ -191,6 +384,9 @@ impl SyncEngine {
                 }
             }
             SyncStrategy::NetSense | SyncStrategy::TopK(_) => {
+                if self.pipeline.is_some() {
+                    return self.sync_predicted_pipelined(sim);
+                }
                 let ratio = self.current_ratio();
                 let wire = self.predict_wire(ratio);
                 let bytes = vec![wire; self.n_workers];
@@ -215,9 +411,25 @@ impl SyncEngine {
 
     /// Feed the Algorithm-1 controller with this round's observables.
     fn observe(&mut self, payload_bytes: &[u64], comm: &CollectiveTiming) {
+        self.observe_rtt(payload_bytes, comm.elapsed());
+    }
+
+    /// Pipelined rounds report the *network* portion as the RTT observable
+    /// (the paper measures transfer completion time of the interval's
+    /// data); the leading compression stall is CPU, not network.
+    fn observe_exchange(&mut self, payload_bytes: &[u64], timing: &ExchangeTiming) {
+        self.observe_rtt(payload_bytes, timing.net_elapsed());
+    }
+
+    fn observe_rtt(&mut self, payload_bytes: &[u64], rtt: SimTime) {
         if let Some(ctl) = self.controller.as_mut() {
             let data_size = payload_bytes.iter().copied().max().unwrap_or(0).max(1);
-            ctl.on_interval(data_size, comm.elapsed(), false);
+            let rtt = if rtt > SimTime::ZERO {
+                rtt
+            } else {
+                SimTime::from_nanos(1)
+            };
+            ctl.on_interval(data_size, rtt, false);
         }
     }
 }
@@ -350,6 +562,105 @@ mod tests {
             last < 4 * P as u64 / 2,
             "payload {last} not reduced vs dense {}",
             4 * P
+        );
+    }
+
+    #[test]
+    fn pipelined_and_monolithic_produce_identical_reduced_gradients() {
+        // A pipelined engine whose bucket covers the whole tensor runs the
+        // exact same compression as the monolithic engine; the pipelined
+        // transport scheduling must not change the reduced gradient by a
+        // single bit.
+        for strat in [SyncStrategy::TopK(0.1), SyncStrategy::NetSense] {
+            let mut mono = SyncEngine::new(strat.clone(), N, P);
+            let mut pipe = SyncEngine::new(strat.clone(), N, P).with_pipeline(PipelineConfig {
+                bucket_size_bytes: 4 * P as u64, // single bucket
+                ..Default::default()
+            });
+            let w = weights();
+            for seed in 0..6 {
+                let gs = grads(seed);
+                let a = mono.sync_full(&mut sim(100.0), &gs, &w);
+                let b = pipe.sync_full(&mut sim(100.0), &gs, &w);
+                assert_eq!(a.ratio, b.ratio, "{strat:?} ratio diverged at {seed}");
+                assert_eq!(
+                    a.mean_grad, b.mean_grad,
+                    "{strat:?} reduced gradient diverged at seed {seed}"
+                );
+                assert_eq!(a.payload_bytes, b.payload_bytes);
+            }
+        }
+    }
+
+    #[test]
+    fn pipeline_scheduling_knobs_do_not_change_numerics() {
+        // Same bucket layout, different transport scheduling (depth,
+        // adaptivity): byte-identical payloads and reduced gradients.
+        let mk = |depth: usize, adaptive: bool| {
+            SyncEngine::new(SyncStrategy::TopK(0.1), N, P).with_pipeline(PipelineConfig {
+                bucket_size_bytes: 8_192,
+                pipeline_depth: depth,
+                adaptive,
+                ..Default::default()
+            })
+        };
+        let mut a = mk(1, false);
+        let mut b = mk(8, true);
+        let w = weights();
+        for seed in 0..5 {
+            let gs = grads(seed);
+            let oa = a.sync_full(&mut sim(50.0), &gs, &w);
+            let ob = b.sync_full(&mut sim(50.0), &gs, &w);
+            assert_eq!(oa.mean_grad, ob.mean_grad, "seed {seed}");
+            assert_eq!(oa.payload_bytes, ob.payload_bytes, "seed {seed}");
+        }
+    }
+
+    #[test]
+    fn pipelined_predicted_wire_bytes_match_full_fidelity() {
+        // The timing-only pipelined path must stay byte-exact against the
+        // full pipelined path, bucket layout and all.
+        let cfg = PipelineConfig {
+            bucket_size_bytes: 10_000,
+            ..Default::default()
+        };
+        for strat in [SyncStrategy::TopK(0.1), SyncStrategy::NetSense] {
+            let mut full = SyncEngine::new(strat.clone(), N, P).with_pipeline(cfg.clone());
+            let mut pred = SyncEngine::new(strat.clone(), N, P).with_pipeline(cfg.clone());
+            let w = weights();
+            for seed in 0..8 {
+                let a = full.sync_full(&mut sim(50.0), &grads(seed), &w);
+                let b = pred.sync_predicted(&mut sim(50.0));
+                assert_eq!(a.payload_bytes, b.payload_bytes, "{strat:?} seed {seed}");
+                assert_eq!(a.ratio, b.ratio, "{strat:?} ratio diverged");
+            }
+        }
+    }
+
+    #[test]
+    fn pipelined_round_is_not_slower_than_monolithic_with_compression_cost() {
+        // Same compression granularity (single bucket is mono's exact
+        // equal) — multi-bucket pipeline must win once compression time and
+        // transmission time both matter.
+        let big = 2_000_000usize; // 8 MB dense
+        let cfg = PipelineConfig {
+            bucket_size_bytes: 1 << 20,
+            pipeline_depth: 2,
+            compress_bytes_per_sec: 200e6, // 8 MB → 40 ms per round
+            adaptive: false,
+        };
+        let mut mono = SyncEngine::new(SyncStrategy::TopK(0.25), N, big).with_pipeline(
+            PipelineConfig {
+                bucket_size_bytes: 4 * big as u64,
+                ..cfg.clone()
+            },
+        );
+        let mut pipe = SyncEngine::new(SyncStrategy::TopK(0.25), N, big).with_pipeline(cfg);
+        let t_mono = mono.sync_predicted(&mut sim(100.0)).comm.elapsed();
+        let t_pipe = pipe.sync_predicted(&mut sim(100.0)).comm.elapsed();
+        assert!(
+            t_pipe < t_mono,
+            "pipelined {t_pipe} not faster than monolithic {t_mono}"
         );
     }
 

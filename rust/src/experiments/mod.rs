@@ -1,4 +1,5 @@
-//! Experiment harness: one runner per paper table/figure (DESIGN.md §5).
+//! Experiment harness: one runner per paper table/figure (index with
+//! paper mapping: `EXPERIMENTS.md`).
 //!
 //! | Runner        | Paper artifact                                   |
 //! |---------------|--------------------------------------------------|
@@ -8,6 +9,7 @@
 //! | [`tables`] (table1/table2) | Tables 1–2 — acc/throughput/conv  |
 //! | [`degrading`] | Fig. 7 — throughput under degrading bandwidth    |
 //! | [`fluctuating`] | Fig. 8 — throughput under competing traffic    |
+//! | [`pipelined`] | pipelined vs monolithic exchange (overlap study) |
 //!
 //! Every runner prints a markdown table (and optionally CSV curves) built
 //! with [`report`]; scenarios come from [`scenario`].
@@ -17,6 +19,7 @@ pub mod degrading;
 pub mod fig2;
 pub mod fig3;
 pub mod fluctuating;
+pub mod pipelined;
 pub mod report;
 pub mod scenario;
 pub mod tables;

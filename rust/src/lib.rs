@@ -12,10 +12,27 @@
 //! - **L1** — Pallas kernels (`python/compile/kernels/`) inside the L2 graph.
 //!
 //! The rust binary loads `artifacts/*.hlo.txt` via the PJRT C API
-//! ([`runtime`]) and never calls Python at run time.
+//! ([`runtime`], behind the `pjrt` feature) and never calls Python at run
+//! time.
 //!
-//! See `DESIGN.md` for the system inventory and the experiment index, and
-//! `EXPERIMENTS.md` for the paper-vs-measured results.
+//! ## The gradient hot path
+//!
+//! Gradients travel as **fused buckets through a pipelined exchange**: the
+//! flat gradient is cut into fixed-size buckets
+//! ([`compress::bucket::BucketLayout`]), each bucket runs Algorithm 2 with
+//! its own error-feedback residual
+//! ([`compress::bucket::BucketedCompressor`]), transport stages are
+//! coalesced to the sensed BDP
+//! ([`sensing::RatioController::recommended_bucket_bytes`]), and the
+//! coordinator compresses bucket *k+1* while bucket *k* is in flight on
+//! the simulated link ([`coordinator::pipeline_exchange`], riding the
+//! barrier-free [`collectives::StagedAllGather`]). The monolithic
+//! compress-then-send path remains as the baseline (and the default when
+//! no `[pipeline]` config is given).
+//!
+//! See `README.md` for the quickstart, `DESIGN.md` for the module-by-module
+//! system inventory, `EXPERIMENTS.md` for the experiment ↔ paper-figure
+//! index, and `ROADMAP.md` for open items.
 
 pub mod collectives;
 pub mod compress;

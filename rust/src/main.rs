@@ -7,13 +7,13 @@
 //! - `sense`           — Fig.2-style sensing sweep
 //! - `info`            — artifact/manifest inspection
 
-use anyhow::{anyhow, bail, Result};
 use netsenseml::config::TrainConfig;
+use netsenseml::util::error::{anyhow, bail, Result};
 use netsenseml::coordinator::{
     run_sim_training, RealTrainConfig, RealTrainer, SimTrainConfig, SyncStrategy,
 };
 use netsenseml::experiments::scenario::{RunOpts, Scenario};
-use netsenseml::experiments::{ablation, degrading, fig2, fig3, fluctuating, tables, tta};
+use netsenseml::experiments::{ablation, degrading, fig2, fig3, fluctuating, pipelined, tables, tta};
 use netsenseml::netsim::schedule::mbps;
 use netsenseml::netsim::topology::StarTopology;
 use netsenseml::netsim::{NetSim, SimTime};
@@ -29,7 +29,7 @@ fn cli() -> Cli {
         commands: vec![
             CmdSpec {
                 name: "repro",
-                help: "regenerate paper tables/figures (table1 table2 fig2 fig3 fig5 fig6 fig7 fig8 | all)",
+                help: "regenerate paper tables/figures (table1 table2 fig2 fig3 fig5 fig6 fig7 fig8 pipeline | all)",
                 opts: vec![
                     opt("out", "directory for CSV outputs", None),
                     flag("fast", "10x shorter horizons (CI smoke)"),
@@ -50,6 +50,8 @@ fn cli() -> Cli {
                     opt("vtime", "virtual-time horizon (s)", Some("600")),
                     opt("workers", "number of workers", Some("8")),
                     opt("seed", "seed", Some("42")),
+                    opt("bucket-kb", "pipelined-exchange bucket (KiB dense; 0 = monolithic)", None),
+                    opt("pipeline-depth", "pipelined-exchange lookahead stages", None),
                     opt("csv", "write the step trace to this CSV", None),
                 ],
                 positionals: vec![],
@@ -128,6 +130,7 @@ fn cmd_repro(args: &netsenseml::util::cli::Args) -> Result<()> {
         .unwrap_or("all");
     let known = [
         "table1", "table2", "fig2", "fig3", "fig5", "fig6", "fig7", "fig8", "ablation",
+        "pipeline",
     ];
     let selected: Vec<&str> = if which == "all" {
         known.to_vec()
@@ -160,6 +163,7 @@ fn cmd_repro(args: &netsenseml::util::cli::Args) -> Result<()> {
             "fig6" => tta::fig6(&opts).0.print(),
             "fig7" => degrading::fig7(&opts).0.print(),
             "fig8" => fluctuating::fig8(&opts).0.print(),
+            "pipeline" => pipelined::pipeline_overlap(&opts).0.print(),
             _ => unreachable!(),
         }
         eprintln!("   ({exp} took {:.1}s)", t0.elapsed().as_secs_f64());
@@ -191,6 +195,12 @@ fn cmd_train(args: &netsenseml::util::cli::Args) -> Result<()> {
     if let Some(s) = args.get_u64("seed")? {
         cfg.seed = s;
     }
+    if let Some(b) = args.get_u64("bucket-kb")? {
+        cfg.bucket_kb = b;
+    }
+    if let Some(d) = args.get_usize("pipeline-depth")? {
+        cfg.pipeline_depth = d;
+    }
     cfg.validate()?;
 
     let model = PaperModel::by_name(&cfg.model)
@@ -202,6 +212,7 @@ fn cmd_train(args: &netsenseml::util::cli::Args) -> Result<()> {
     sim_cfg.max_vtime_s = cfg.max_vtime_s;
     sim_cfg.fidelity_every = cfg.fidelity_every;
     sim_cfg.seed = cfg.seed;
+    sim_cfg.pipeline = cfg.pipeline();
     let mut sim = Scenario::static_bottleneck(cfg.n_workers, mbps(cfg.bandwidth_mbps));
     let log = run_sim_training(&sim_cfg, &mut sim);
 

@@ -120,6 +120,33 @@ impl BandwidthSchedule {
             t = seg_end.unwrap();
         }
     }
+
+    /// Bytes the link can carry over `[t0, t1)` at full rate — the
+    /// capacity integral, the analytic inverse of
+    /// [`BandwidthSchedule::finish_time`] (property-tested against it).
+    /// Gives the link-limited lower bound on transfer time under
+    /// time-varying bandwidth.
+    pub fn bytes_between(&self, t0: SimTime, t1: SimTime) -> f64 {
+        assert!(t1 >= t0, "bytes_between: t1 < t0");
+        let mut bits = 0.0;
+        let mut t = t0;
+        while t < t1 {
+            let seg = match self.starts.binary_search(&t) {
+                Ok(i) => i,
+                Err(0) => 0,
+                Err(i) => i - 1,
+            };
+            let seg_end = self
+                .starts
+                .get(seg + 1)
+                .copied()
+                .filter(|&e| e < t1)
+                .unwrap_or(t1);
+            bits += self.rates[seg] * (seg_end - t).as_secs_f64();
+            t = seg_end;
+        }
+        bits / 8.0
+    }
 }
 
 #[cfg(test)]
@@ -219,5 +246,44 @@ mod tests {
     #[should_panic]
     fn piecewise_rejects_nonzero_first_start() {
         BandwidthSchedule::piecewise(vec![(SimTime::from_millis(1), 1e6)]);
+    }
+
+    #[test]
+    fn bytes_between_constant_rate() {
+        let s = BandwidthSchedule::constant(mbps(100.0));
+        // 100 Mbps over 1 s = 12.5 MB
+        let b = s.bytes_between(SimTime::from_secs_f64(2.0), SimTime::from_secs_f64(3.0));
+        assert!((b - 12_500_000.0).abs() < 1.0, "{b}");
+        assert_eq!(s.bytes_between(SimTime::ZERO, SimTime::ZERO), 0.0);
+    }
+
+    #[test]
+    fn bytes_between_spans_segments() {
+        let s = BandwidthSchedule::piecewise(vec![
+            (SimTime::ZERO, mbps(100.0)),
+            (SimTime::from_secs_f64(1.0), mbps(50.0)),
+        ]);
+        // [0.5, 2.5): 0.5 s at 100 Mbps + 1.5 s at 50 Mbps = 6.25 + 9.375 MB
+        let b = s.bytes_between(
+            SimTime::from_secs_f64(0.5),
+            SimTime::from_secs_f64(2.5),
+        );
+        assert!((b - 15_625_000.0).abs() < 1.0, "{b}");
+    }
+
+    #[test]
+    fn bytes_between_is_inverse_of_finish_time() {
+        let s = BandwidthSchedule::stepped(
+            mbps(1000.0),
+            mbps(200.0),
+            -mbps(200.0),
+            SimTime::from_secs_f64(2.0),
+        );
+        let start = SimTime::from_secs_f64(1.0);
+        let bytes = 500_000_000u64;
+        let fin = s.finish_time(start, bytes);
+        let carried = s.bytes_between(start, fin);
+        let rel = (carried - bytes as f64).abs() / bytes as f64;
+        assert!(rel < 1e-6, "rel err {rel}");
     }
 }

@@ -111,9 +111,28 @@ impl NetSim {
     /// One reliable worker→worker transfer starting now. Does **not**
     /// advance the clock — use [`NetSim::phase`] or advance explicitly.
     pub fn transfer(&mut self, src: NodeId, dst: NodeId, bytes: u64) -> TransferResult {
+        let at = self.now;
+        self.transfer_at(src, dst, bytes, at)
+    }
+
+    /// Like [`NetSim::transfer`], but offered to the network at `start`
+    /// (clamped to `now`) **without advancing the public clock** — the
+    /// event-loop primitive for pipelined bucket exchanges, where payload
+    /// *k+1* becomes ready (its compression finishes) while payload *k* is
+    /// still in flight. Competing-traffic events due before the offer are
+    /// injected first so FIFO ordering stays correct; callers should issue
+    /// transfers in roughly non-decreasing `start` order per link.
+    pub fn transfer_at(
+        &mut self,
+        src: NodeId,
+        dst: NodeId,
+        bytes: u64,
+        start: SimTime,
+    ) -> TransferResult {
         assert!(src < self.topology.n_workers() && dst < self.topology.n_workers());
         assert_ne!(src, dst, "self-transfer");
-        let sent_at = self.now;
+        let sent_at = start.max(self.now);
+        self.inject_traffic_until(sent_at);
         // Uplink: src → switch.
         let at_switch = match self.topology.uplinks[src].send_reliable(sent_at, bytes) {
             Offer::Accepted { arrival, .. } => arrival,
@@ -208,6 +227,37 @@ mod tests {
         // 1.25 MB: serialize 100 ms on uplink + 1 ms prop, again on downlink.
         let r = sim.transfer(0, 1, 1_250_000);
         assert_eq!(r.rtt(), SimTime::from_millis(202));
+    }
+
+    #[test]
+    fn transfer_at_future_start_matches_idle_transfer() {
+        // Offering in the future on an idle link: same serialization, just
+        // shifted; the clock does not move.
+        let mut sim = NetSim::quiet(star(2, 100.0, 1));
+        let r = sim.transfer_at(0, 1, 1_250_000, SimTime::from_millis(500));
+        assert_eq!(r.sent_at, SimTime::from_millis(500));
+        assert_eq!(r.rtt(), SimTime::from_millis(202));
+        assert_eq!(sim.now(), SimTime::ZERO);
+    }
+
+    #[test]
+    fn transfer_at_past_start_clamps_to_now() {
+        let mut sim = NetSim::quiet(star(2, 100.0, 1));
+        sim.advance_to(SimTime::from_secs_f64(1.0));
+        let r = sim.transfer_at(0, 1, 1_250_000, SimTime::ZERO);
+        assert_eq!(r.sent_at, SimTime::from_secs_f64(1.0));
+    }
+
+    #[test]
+    fn staggered_transfer_at_queue_fifo_on_shared_link() {
+        // Two messages on the same uplink offered at staggered future
+        // times: the second serializes behind the first.
+        let mut sim = NetSim::quiet(star(2, 100.0, 0));
+        let a = sim.transfer_at(0, 1, 1_250_000, SimTime::from_millis(100));
+        let b = sim.transfer_at(0, 1, 1_250_000, SimTime::from_millis(150));
+        assert_eq!(a.arrival, SimTime::from_millis(300));
+        // b queues on the uplink until 200 ms, then 100 ms per hop.
+        assert_eq!(b.arrival, SimTime::from_millis(400));
     }
 
     #[test]

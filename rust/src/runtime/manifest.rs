@@ -1,8 +1,8 @@
 //! Artifact manifest: the contract between `python/compile/aot.py` and the
 //! rust runtime. Parsed with the in-repo JSON substrate.
 
+use crate::util::error::{anyhow, bail, Context, Result};
 use crate::util::json::Json;
-use anyhow::{anyhow, bail, Context, Result};
 use std::path::{Path, PathBuf};
 
 /// One named parameter tensor.

@@ -6,20 +6,36 @@
 //! `HloModuleProto::from_text_file` → `XlaComputation::from_proto` →
 //! `PjRtClient::compile` → `execute`. Outputs arrive as a 1-tuple literal
 //! (jax lowers with `return_tuple=True`).
+//!
+//! The PJRT bindings (the `xla` crate) are gated behind the off-by-default
+//! `pjrt` cargo feature so the default build has zero external
+//! dependencies. Without the feature, [`ModelRuntime::load`] returns a
+//! descriptive error and everything that needs real model execution (the
+//! `e2e` CLI command, `examples/e2e_train.rs`, `bench_runtime`, the
+//! runtime integration tests) degrades gracefully, exactly as it already
+//! does when `make artifacts` has not run.
 
 pub mod manifest;
 
 pub use manifest::{Manifest, ModelManifest, ParamSpec};
 
-use anyhow::{bail, Context, Result};
+use crate::util::error::{bail, Context, Result};
 use std::path::Path;
 
 /// Process-wide PJRT client plus the compiled executables for one model.
+#[cfg(feature = "pjrt")]
 pub struct ModelRuntime {
     pub manifest: ModelManifest,
     client: xla::PjRtClient,
     grad_step: xla::PjRtLoadedExecutable,
     apply_update: xla::PjRtLoadedExecutable,
+}
+
+/// Stub runtime for builds without the `pjrt` feature: same API surface,
+/// but [`ModelRuntime::load`] always fails with a pointer at the feature.
+#[cfg(not(feature = "pjrt"))]
+pub struct ModelRuntime {
+    pub manifest: ModelManifest,
 }
 
 /// Host-side training state: flat-f32 views of every parameter tensor (in
@@ -56,6 +72,7 @@ pub struct GradStepOut {
     pub n_correct: f32,
 }
 
+#[cfg(feature = "pjrt")]
 impl ModelRuntime {
     /// Load and compile one model's executables from an artifact dir.
     pub fn load(artifact_dir: &Path, model: &str) -> Result<ModelRuntime> {
@@ -87,7 +104,43 @@ impl ModelRuntime {
     pub fn platform(&self) -> String {
         self.client.platform_name()
     }
+}
 
+#[cfg(not(feature = "pjrt"))]
+impl ModelRuntime {
+    /// Without the `pjrt` feature there is nothing to execute artifacts
+    /// with, so loading always fails. Callers degrade gracefully: the e2e
+    /// CLI/example surface the error, `bench_runtime` skips on load
+    /// failure, and the runtime integration tests skip via
+    /// `cfg!(not(feature = "pjrt"))`.
+    pub fn load(artifact_dir: &Path, model: &str) -> Result<ModelRuntime> {
+        let _ = (artifact_dir, model);
+        bail!(
+            "netsenseml was built without the `pjrt` feature; \
+             PJRT execution is unavailable (rebuild with `--features pjrt` \
+             and an `xla` bindings crate)"
+        );
+    }
+
+    pub fn platform(&self) -> String {
+        "unavailable (built without `pjrt`)".to_string()
+    }
+
+    /// Stub: unreachable in practice because [`ModelRuntime::load`] is the
+    /// only constructor and it always fails without the feature.
+    pub fn grad_step(&self, state: &TrainState, x: &[f32], y: &[f32]) -> Result<GradStepOut> {
+        let _ = (state, x, y);
+        bail!("grad_step requires the `pjrt` feature");
+    }
+
+    /// Stub — see [`ModelRuntime::grad_step`].
+    pub fn apply_update(&self, state: &mut TrainState, flat_grad: &[f32], lr: f32) -> Result<()> {
+        let _ = (state, flat_grad, lr);
+        bail!("apply_update requires the `pjrt` feature");
+    }
+}
+
+impl ModelRuntime {
     /// Build the initial [`TrainState`] from `artifacts/<model>_init.bin`.
     pub fn init_state(&self) -> Result<TrainState> {
         let raw = std::fs::read(&self.manifest.init_params_file)
@@ -119,7 +172,10 @@ impl ModelRuntime {
         let moms = params.iter().map(|p| vec![0f32; p.len()]).collect();
         TrainState { params, moms }
     }
+}
 
+#[cfg(feature = "pjrt")]
+impl ModelRuntime {
     fn literal_f32(&self, data: &[f32], shape: &[usize]) -> Result<xla::Literal> {
         let n: usize = shape.iter().product::<usize>().max(1);
         assert_eq!(data.len(), n, "literal shape/data mismatch");

@@ -12,6 +12,25 @@
 //! estimator updates BtlBw/RTprop/BDP, and:
 //! `data_size > 0.9 × BDP  ⇒  ratio ← max(0.005, ratio × α)`  (α = 0.5)
 //! `otherwise              ⇒  ratio ← min(1, ratio + β₂)`      (β₂ = 0.01)
+//!
+//! The controller also advises the bucketed pipeline
+//! ([`RatioController::recommended_bucket_bytes`]): transport stages are
+//! sized to the sensed BDP, so in-flight units shrink under congestion.
+//!
+//! ```
+//! use netsenseml::netsim::SimTime;
+//! use netsenseml::sensing::{ControllerConfig, Phase, RatioController};
+//!
+//! let mut ctl = RatioController::new(ControllerConfig::default());
+//! assert_eq!(ctl.phase(), Phase::Startup);
+//! assert_eq!(ctl.ratio(), 0.01);
+//! // Feed one clean interval observation: startup ramps the ratio.
+//! let r = ctl.on_interval(1_000, SimTime::from_millis(10), false);
+//! assert!(r > 0.01);
+//! // 1 kB / 10 ms → BDP = 1 kB; stage sizing clamps to [floor, ceiling].
+//! let stage = ctl.recommended_bucket_bytes(256, 1 << 20);
+//! assert_eq!(stage, 1_000);
+//! ```
 
 use super::estimator::{BandwidthEstimator, EstimatorConfig, NetworkEstimate};
 use crate::netsim::time::SimTime;
@@ -138,6 +157,22 @@ impl RatioController {
             Phase::NetSense => self.netsense_adjust(data_size_bytes),
         }
         self.ratio
+    }
+
+    /// Transport-stage size the bucketed pipeline should use right now:
+    /// one sensed BDP, clamped to `[floor_bytes, ceil_bytes]`. Keeping each
+    /// in-flight unit near the BDP bounds its transfer time near RTprop, so
+    /// under congestion (shrinking BDP) the pipeline ships smaller buckets
+    /// and the sensing loop stays responsive; with no estimate yet the
+    /// ceiling is used (optimistic, like the startup ramp).
+    pub fn recommended_bucket_bytes(&self, floor_bytes: u64, ceil_bytes: u64) -> u64 {
+        let floor = floor_bytes.min(ceil_bytes);
+        match self.estimator.estimate() {
+            Some(est) if est.bdp_bytes.is_finite() => {
+                (est.bdp_bytes as u64).clamp(floor, ceil_bytes)
+            }
+            _ => ceil_bytes,
+        }
     }
 
     fn netsense_adjust(&mut self, data_size_bytes: u64) {
@@ -271,6 +306,27 @@ mod tests {
             c.on_interval(1_000, SimTime::from_millis(100), false);
         }
         assert_eq!(c.ratio(), 1.0);
+    }
+
+    #[test]
+    fn recommended_bucket_tracks_bdp() {
+        let mut c = ctl();
+        // No estimate yet → optimistic ceiling.
+        assert_eq!(c.recommended_bucket_bytes(1_000, 8_000_000), 8_000_000);
+        // 1 MB / 100 ms → BtlBw 10 MB/s, RTprop 0.1 s → BDP 1 MB.
+        c.on_interval(1_000_000, SimTime::from_millis(100), false);
+        assert_eq!(c.recommended_bucket_bytes(1_000, 8_000_000), 1_000_000);
+        // Clamped by the floor and the ceiling.
+        assert_eq!(c.recommended_bucket_bytes(2_000_000, 8_000_000), 2_000_000);
+        assert_eq!(c.recommended_bucket_bytes(1_000, 500_000), 500_000);
+        // Congestion: same payload, 10× RTT → EBB collapses; after the
+        // BtlBw window ages the old sample out, the BDP (and with it the
+        // recommended stage) must shrink.
+        for _ in 0..20 {
+            c.on_interval(1_000_000, SimTime::from_secs_f64(1.0), false);
+        }
+        let shrunk = c.recommended_bucket_bytes(1_000, 8_000_000);
+        assert!(shrunk < 1_000_000 + 1, "stage did not shrink: {shrunk}");
     }
 
     #[test]

@@ -2,10 +2,7 @@
 //! build): seeded generators, a `forall` runner that reports the failing
 //! seed, and greedy input shrinking for `Vec`-shaped inputs.
 //!
-//! Usage (`no_run`: doctest binaries don't receive the xla rpath link
-//! flag in this offline image, so the example is compile-checked only —
-//! the same pattern executes in this module's unit tests):
-//! ```no_run
+//! ```
 //! use netsenseml::testing::prop::*;
 //! forall("reverse twice is identity", 100, vec_f32(0..500, -1e3..1e3), |v| {
 //!     let mut w = v.clone();

@@ -1,0 +1,207 @@
+//! `anyhow`-compatible error substrate for the offline build (the same
+//! pattern as the other [`crate::util`] replacements): a context-chained
+//! [`Error`], the [`Result`] alias, the [`Context`] extension trait for
+//! `Result`/`Option`, and the [`anyhow!`](crate::anyhow) /
+//! [`bail!`](crate::bail) macros.
+//!
+//! Display semantics mirror `anyhow`: `{e}` prints the outermost message,
+//! `{e:#}` prints the full `outer: inner: ...` chain, and `{e:?}` prints
+//! the chain as `Caused by` paragraphs.
+//!
+//! ```
+//! use netsenseml::util::error::{Context, Result};
+//! use netsenseml::{anyhow, bail};
+//!
+//! fn parse(s: &str) -> Result<u32> {
+//!     if s.is_empty() {
+//!         bail!("empty input");
+//!     }
+//!     s.parse::<u32>().with_context(|| format!("parsing `{s}`"))
+//! }
+//!
+//! assert_eq!(parse("42").unwrap(), 42);
+//! let e = parse("x").unwrap_err();
+//! assert_eq!(format!("{e}"), "parsing `x`");
+//! assert!(format!("{e:#}").contains("invalid digit"));
+//! let _ = anyhow!("standalone {}", "error");
+//! ```
+
+use std::fmt;
+
+/// A chain of error messages, outermost context first.
+#[derive(Clone)]
+pub struct Error {
+    chain: Vec<String>,
+}
+
+impl Error {
+    /// Build an error from a single message.
+    pub fn msg(msg: impl fmt::Display) -> Error {
+        Error {
+            chain: vec![msg.to_string()],
+        }
+    }
+
+    /// Wrap with an outer context message.
+    pub fn context(mut self, msg: impl fmt::Display) -> Error {
+        self.chain.insert(0, msg.to_string());
+        self
+    }
+
+    /// The messages, outermost first.
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        self.chain.iter().map(String::as_str)
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            write!(f, "{}", self.chain.join(": "))
+        } else {
+            write!(f, "{}", self.chain[0])
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.chain[0])?;
+        for cause in &self.chain[1..] {
+            write!(f, "\n\nCaused by:\n    {cause}")?;
+        }
+        Ok(())
+    }
+}
+
+// Like `anyhow::Error`, `Error` deliberately does NOT implement
+// `std::error::Error` — that is what makes this blanket `From` coherent.
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        let mut chain = vec![e.to_string()];
+        let mut source = e.source();
+        while let Some(s) = source {
+            chain.push(s.to_string());
+            source = s.source();
+        }
+        Error { chain }
+    }
+}
+
+/// `Result` defaulted to [`Error`], as in `anyhow`.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Context-attachment extension for `Result` and `Option`.
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, msg: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: Into<Error>> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, msg: C) -> Result<T> {
+        self.map_err(|e| e.into().context(msg))
+    }
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| e.into().context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, msg: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(msg))
+    }
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string (drop-in for `anyhow!`).
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::util::error::Error::msg(format!($($arg)*))
+    };
+}
+
+/// Early-return with an [`Error`] (drop-in for `bail!`).
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::util::error::Error::msg(format!($($arg)*)))
+    };
+}
+
+// Path-based re-exports so call sites can `use crate::util::error::{anyhow,
+// bail}` alongside the types.
+pub use crate::{anyhow, bail};
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "file missing")
+    }
+
+    #[test]
+    fn display_outermost_only() {
+        let e: Error = Error::msg("inner").context("outer");
+        assert_eq!(format!("{e}"), "outer");
+        assert_eq!(format!("{e:#}"), "outer: inner");
+        let dbg = format!("{e:?}");
+        assert!(dbg.contains("outer") && dbg.contains("Caused by") && dbg.contains("inner"));
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn read() -> Result<String> {
+            let s = std::fs::read_to_string("/definitely/not/a/file")?;
+            Ok(s)
+        }
+        assert!(read().is_err());
+    }
+
+    #[test]
+    fn context_on_result_and_option() {
+        let r: std::result::Result<(), std::io::Error> = Err(io_err());
+        let e = r.context("reading config").unwrap_err();
+        assert_eq!(format!("{e:#}"), "reading config: file missing");
+
+        let o: Option<u32> = None;
+        let e = o.with_context(|| format!("missing {}", "key")).unwrap_err();
+        assert_eq!(format!("{e}"), "missing key");
+        assert_eq!(Some(7u32).context("fine").unwrap(), 7);
+    }
+
+    #[test]
+    fn macros_format() {
+        let e = anyhow!("bad value {} at {}", 3, "site");
+        assert_eq!(format!("{e}"), "bad value 3 at site");
+        fn f(fail: bool) -> Result<u32> {
+            if fail {
+                bail!("nope: {}", 1 + 1);
+            }
+            Ok(5)
+        }
+        assert_eq!(f(false).unwrap(), 5);
+        assert_eq!(format!("{}", f(true).unwrap_err()), "nope: 2");
+    }
+
+    #[test]
+    fn source_chain_is_captured() {
+        #[derive(Debug)]
+        struct Outer(std::io::Error);
+        impl fmt::Display for Outer {
+            fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+                write!(f, "outer layer")
+            }
+        }
+        impl std::error::Error for Outer {
+            fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+                Some(&self.0)
+            }
+        }
+        let e: Error = Outer(io_err()).into();
+        assert_eq!(format!("{e:#}"), "outer layer: file missing");
+    }
+}

@@ -1,12 +1,13 @@
 //! Offline-environment substrates: the small, dependency-free replacements
 //! for the crates that are unavailable in this build environment
-//! (`rand`, `serde_json`, `toml`, `clap`, `criterion`, logging).
+//! (`anyhow`, `rand`, `serde_json`, `toml`, `clap`, `criterion`, logging).
 //!
 //! Each submodule is a self-contained, tested implementation of exactly the
 //! surface the rest of the crate needs — see `DESIGN.md` §2.
 
 pub mod bench;
 pub mod cli;
+pub mod error;
 pub mod json;
 pub mod log;
 pub mod rng;

@@ -2,7 +2,7 @@
 //! distributions the simulator and tests need.
 //!
 //! Every stochastic component in the crate takes an explicit seed so that
-//! experiments are reproducible bit-for-bit (`DESIGN.md` §6).
+//! experiments are reproducible bit-for-bit (`DESIGN.md` §5).
 
 /// A PCG64-DXSM generator: 128-bit LCG state with a double-xorshift-multiply
 /// output permutation. Small, fast, and statistically solid for simulation.

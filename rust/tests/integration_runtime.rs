@@ -13,6 +13,10 @@ use netsenseml::runtime::ModelRuntime;
 use std::path::PathBuf;
 
 fn artifact_dir() -> Option<PathBuf> {
+    if cfg!(not(feature = "pjrt")) {
+        eprintln!("skipping: built without the `pjrt` feature (no PJRT runtime)");
+        return None;
+    }
     let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
     if dir.join("manifest.json").exists() {
         Some(dir)

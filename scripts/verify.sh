@@ -1,0 +1,27 @@
+#!/usr/bin/env bash
+# Tier-1 verify + docs gate. Run from anywhere; operates on the repo root.
+#
+#   scripts/verify.sh          # build, tests, rustdoc (warnings fatal), doctests
+#   FAST=1 scripts/verify.sh   # same, with fast bench/experiment settings
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+if [[ "${FAST:-0}" == "1" ]]; then
+  export NETSENSE_BENCH_FAST=1
+fi
+
+echo "== cargo build --release =="
+cargo build --release
+
+echo "== cargo test -q (unit + integration; doctests run separately below) =="
+cargo test -q --lib --bins --tests
+
+# Docs gate: broken intra-doc links and rustdoc warnings fail fast, and
+# every module-header example actually runs.
+echo "== cargo doc --no-deps (warnings are errors) =="
+RUSTDOCFLAGS="-D warnings" cargo doc --no-deps --quiet
+
+echo "== cargo test --doc =="
+cargo test --doc -q
+
+echo "verify: OK"
