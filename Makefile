@@ -1,5 +1,5 @@
 # Entry points referenced by the docs and code comments.
-.PHONY: artifacts verify
+.PHONY: artifacts verify bench-transport
 
 # AOT-lower the JAX/Pallas models (L1+L2) to HLO text artifacts consumed by
 # the rust runtime (`--features pjrt`). Needs JAX; run once, never on the
@@ -10,3 +10,9 @@ artifacts:
 # Tier-1 build + tests plus the docs gate (rustdoc warnings fatal, doctests).
 verify:
 	scripts/verify.sh
+
+# Loopback-throughput bench for the socket transport layer (frame codec,
+# ring collectives, token-bucket overhead). NETSENSE_BENCH_FAST=1 shrinks
+# the measurement windows for CI.
+bench-transport:
+	cargo bench --bench bench_transport

@@ -1,0 +1,76 @@
+//! Transport-layer micro-benchmarks: frame codec throughput, loopback
+//! ring-collective throughput (the satellite registered in the Makefile as
+//! `make bench-transport`), and token-bucket overhead on the unshaped
+//! path. Honors `NETSENSE_BENCH_FAST=1` via the shared harness.
+
+use netsenseml::transport::{
+    encode_frame, decode_frame, ring_allgather_frames, ring_allreduce_f32, LoopbackTransport,
+    ShapedTransport, ShapingConfig, Transport,
+};
+use netsenseml::util::bench::{bb, Bench};
+
+fn main() {
+    let mut b = Bench::new();
+
+    b.group("frame codec");
+    let payload = vec![0xABu8; 1 << 20];
+    b.run_throughput("encode 1 MB", 1 << 20, || {
+        bb(encode_frame(bb(&payload)));
+    });
+    let framed = encode_frame(&payload);
+    b.run_throughput("decode 1 MB", 1 << 20, || {
+        bb(decode_frame(bb(&framed)).unwrap());
+    });
+
+    b.group("loopback collectives (4 ranks × 1 MB)");
+    let block = vec![0x5Au8; 1 << 20];
+    b.run_throughput("ring all-gather", 4 << 20, || {
+        let mesh = LoopbackTransport::mesh(4);
+        let handles: Vec<_> = mesh
+            .into_iter()
+            .map(|mut t| {
+                let payload = block.clone();
+                std::thread::spawn(move || {
+                    bb(ring_allgather_frames(&mut t, &payload).unwrap());
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+    });
+    b.run_throughput("ring all-reduce f32 (4 × 256k elems)", 4 << 20, || {
+        let mesh = LoopbackTransport::mesh(4);
+        let handles: Vec<_> = mesh
+            .into_iter()
+            .map(|mut t| {
+                std::thread::spawn(move || {
+                    let mut data = vec![1.0f32; 1 << 18];
+                    bb(ring_allreduce_f32(&mut t, &mut data).unwrap());
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+    });
+
+    b.group("token bucket");
+    // Rate far above the payload volume AND a burst far above one frame:
+    // the bucket never goes into deficit, so this measures bookkeeping
+    // overhead, not the deficit-sleep floor.
+    let mut mesh = LoopbackTransport::mesh(2);
+    let sink = mesh.pop().unwrap();
+    let src = mesh.pop().unwrap();
+    let mut unthrottled = ShapingConfig::constant(1e12);
+    unthrottled.burst_bytes = 1e9;
+    let mut shaped = ShapedTransport::new(src, unthrottled);
+    let mut sink = sink;
+    let msg = vec![0u8; 64 << 10];
+    b.run_throughput("shaped send+recv 64 kB (unthrottled)", 64 << 10, || {
+        shaped.send(1, &msg).unwrap();
+        bb(sink.recv(0).unwrap());
+    });
+
+    b.finish();
+}

@@ -183,6 +183,12 @@ impl BucketedCompressor {
             .collect()
     }
 
+    /// Would any bucket quantize at `ratio`? (Mirrors the `quantized`
+    /// outcome of [`Self::compress`]: an OR across buckets.)
+    pub fn would_quantize(&self, ratio: f64) -> bool {
+        self.compressors.iter().any(|c| c.would_quantize(ratio))
+    }
+
     /// L2 norm of the concatenated residual across buckets.
     pub fn residual_norm(&self) -> f64 {
         self.compressors

@@ -88,6 +88,11 @@ pub struct NetSenseCompressor {
     /// (§Perf iteration 2; exactness checked in tests to <0.1% mask skew).
     prune_cache: Option<(f64, f32)>,
     prune_cache_age: u32,
+    /// Compensated gradient L2 of the most recent [`Self::compress`] call
+    /// — lets [`Self::predict_wire_bytes`] honor the quantization-skip
+    /// condition (`‖g‖₂ ≤ tr_d`) for near-zero tensors (e.g. a frozen
+    /// layer's bucket) instead of assuming the density condition holds.
+    last_grad_l2: Option<f64>,
 }
 
 /// Steps between exact refreshes of the pruning threshold.
@@ -103,6 +108,7 @@ impl NetSenseCompressor {
             qs_scratch: Vec::new(),
             prune_cache: None,
             prune_cache_age: 0,
+            last_grad_l2: None,
         }
     }
 
@@ -165,6 +171,7 @@ impl NetSenseCompressor {
 
         // ---- Step 1: adaptive quantization --------------------------------
         let grad_l2 = l2(&self.scratch);
+        self.last_grad_l2 = Some(grad_l2);
         let mut effective_ratio = ratio;
         let mut precision = Precision::F32;
         let mut quantized = false;
@@ -225,19 +232,37 @@ impl NetSenseCompressor {
     }
 
     /// Predict the wire size Algorithm 2 would produce for a ratio without
-    /// running it (used by the controller to pick ratios against the BDP).
-    /// Assumes the density condition `‖g‖₂ > tr_d` holds whenever
-    /// `ratio < tr_q` (the steady-state case) — a near-zero gradient would
-    /// skip quantization and produce a different size.
+    /// running it (used by the controller to pick ratios against the BDP,
+    /// and by `sync_predicted` for timing-only rounds).
+    ///
+    /// The quantization branch honors *both* of step 1's conditions: the
+    /// ratio test (`ratio < tr_q`) and the density test (`‖g‖₂ > tr_d`),
+    /// the latter via the compensated gradient norm cached by the most
+    /// recent [`Self::compress`] call. A frozen tensor (zero gradients, so
+    /// zero cached norm — error feedback keeps it pinned there) therefore
+    /// predicts the quantization-*skip* size, byte-exact against the full
+    /// path. Before the first compress there is no norm to consult and the
+    /// steady-state density assumption applies.
     pub fn predict_wire_bytes(&self, ratio: f64) -> u64 {
         let ratio = ratio.clamp(0.0, 1.0);
-        let (eff, prec) = if ratio < self.config.quant_ratio_threshold {
+        let (eff, prec) = if self.would_quantize(ratio) {
             ((2.0 * ratio).min(1.0), Precision::F16)
         } else {
             (ratio, Precision::F32)
         };
         let k = k_for_ratio(self.n(), eff) as u64;
         12 + k * (4 + prec.bytes() as u64)
+    }
+
+    /// Would Algorithm 2's step 1 quantize at `ratio`? Same contract as
+    /// [`Self::predict_wire_bytes`]: the density test uses the cached
+    /// compensated norm; with no compress yet, density is assumed to hold.
+    pub fn would_quantize(&self, ratio: f64) -> bool {
+        let density_ok = self
+            .last_grad_l2
+            .map(|l2| l2 > self.config.density_threshold)
+            .unwrap_or(true);
+        ratio.clamp(0.0, 1.0) < self.config.quant_ratio_threshold && density_ok
     }
 }
 
@@ -339,6 +364,34 @@ mod tests {
             let predicted = c.predict_wire_bytes(r);
             let actual = c.compress(&g, &w, r).wire_bytes;
             assert_eq!(predicted, actual, "ratio {r}");
+        }
+    }
+
+    #[test]
+    fn predict_honors_quantization_skip_for_near_zero_gradients() {
+        // A frozen tensor (zero gradients) fails the density condition, so
+        // the full path skips quantization at low ratios; the prediction
+        // must follow once it has a norm to consult — and stay exact for a
+        // healthy tensor.
+        let n = 5000;
+        let w = randn(n, 21);
+        let zeros = vec![0f32; n];
+        let mut frozen = NetSenseCompressor::new(n, CompressionConfig::default());
+        let mut healthy = NetSenseCompressor::new(n, CompressionConfig::default());
+        let g = randn(n, 22);
+        // Prime the caches (step 0 is full-fidelity in mixed-mode runs).
+        frozen.compress(&zeros, &w, 0.01);
+        healthy.compress(&g, &w, 0.01);
+        for &r in &[0.04, 0.01, 0.005] {
+            let predicted = frozen.predict_wire_bytes(r);
+            let out = frozen.compress(&zeros, &w, r);
+            assert!(!out.quantized, "zero gradient must skip quantization");
+            assert_eq!(predicted, out.wire_bytes, "frozen, ratio {r}");
+
+            let predicted = healthy.predict_wire_bytes(r);
+            let out = healthy.compress(&g, &w, r);
+            assert!(out.quantized);
+            assert_eq!(predicted, out.wire_bytes, "healthy, ratio {r}");
         }
     }
 

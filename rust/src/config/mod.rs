@@ -1,10 +1,18 @@
 //! Typed experiment configuration, loadable from TOML files (see
 //! `configs/*.toml`) with CLI overrides layered on top.
+//!
+//! Two shapes: [`TrainConfig`] for simulated runs (`[train]` / `[net]` /
+//! `[pipeline]`) and [`LiveConfig`] for live-socket runs (`[transport]` /
+//! `[live]`, see `configs/live.toml`). The live tables reject unknown
+//! keys — a typo in a transport knob must fail loudly, not silently fall
+//! back to a default backend.
 
 use crate::coordinator::PipelineConfig;
+use crate::experiments::live::{LiveBackend, LiveOpts};
 use crate::experiments::scenario::RunOpts;
+use crate::transport::ShapingConfig;
 use crate::util::error::{anyhow, Result};
-use crate::util::toml::TomlDoc;
+use crate::util::toml::{TomlDoc, TomlValue};
 use std::path::Path;
 
 /// Everything a `netsenseml train` run needs.
@@ -145,6 +153,317 @@ impl TrainConfig {
     }
 }
 
+/// The `[transport]` table: which backend a live run uses and how its
+/// links are shaped.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TransportConfig {
+    /// `loopback` (in-process channels) or `tcp` (localhost mesh).
+    pub backend: String,
+    /// Rank-0 rendezvous address for the TCP backend (`host:port`; port 0
+    /// lets the OS pick).
+    pub bind: String,
+    pub n_workers: usize,
+    /// Token-bucket rate limit, Mbps (0 = unshaped).
+    pub rate_mbps: f64,
+    /// Token-bucket burst, KiB.
+    pub burst_kb: f64,
+    /// Per-send propagation-delay floor, ms.
+    pub prop_delay_ms: f64,
+    /// Shaping steps: `(seconds from start, rate in Mbps)`.
+    pub schedule: Vec<(f64, f64)>,
+}
+
+impl Default for TransportConfig {
+    fn default() -> Self {
+        TransportConfig {
+            backend: "loopback".to_string(),
+            bind: "127.0.0.1:29500".to_string(),
+            n_workers: 2,
+            rate_mbps: 0.0,
+            burst_kb: 64.0,
+            prop_delay_ms: 0.0,
+            schedule: Vec::new(),
+        }
+    }
+}
+
+/// Keys accepted under `[transport]` — anything else is rejected.
+const TRANSPORT_KEYS: &[&str] = &[
+    "transport.backend",
+    "transport.bind",
+    "transport.n_workers",
+    "transport.rate_mbps",
+    "transport.burst_kb",
+    "transport.prop_delay_ms",
+    "transport.schedule",
+];
+
+/// Keys accepted under `[live]`.
+const LIVE_KEYS: &[&str] = &[
+    "live.steps",
+    "live.n_params",
+    "live.strategy",
+    "live.compute_ms",
+    "live.seed",
+];
+
+/// Non-negative integer lookup with loud failures: a wrong-typed value
+/// errors instead of falling back to the default, and a negative value
+/// errors instead of wrapping through `as usize`/`as u64`.
+fn get_nonneg(doc: &TomlDoc, path: &str) -> Result<Option<i64>> {
+    match doc.get(path) {
+        None => Ok(None),
+        Some(v) => {
+            let v = v
+                .as_i64()
+                .ok_or_else(|| anyhow!("{path} must be an integer"))?;
+            if v < 0 {
+                return Err(anyhow!("{path} must be ≥ 0 (got {v})"));
+            }
+            Ok(Some(v))
+        }
+    }
+}
+
+/// String lookup that errors on a wrong-typed value.
+fn get_str_strict<'a>(doc: &'a TomlDoc, path: &str) -> Result<Option<&'a str>> {
+    match doc.get(path) {
+        None => Ok(None),
+        Some(v) => v
+            .as_str()
+            .map(Some)
+            .ok_or_else(|| anyhow!("{path} must be a string")),
+    }
+}
+
+/// Numeric lookup (int coerces to float) that errors on a wrong-typed
+/// value.
+fn get_f64_strict(doc: &TomlDoc, path: &str) -> Result<Option<f64>> {
+    match doc.get(path) {
+        None => Ok(None),
+        Some(v) => v
+            .as_f64()
+            .map(Some)
+            .ok_or_else(|| anyhow!("{path} must be a number")),
+    }
+}
+
+fn reject_unknown_keys(doc: &TomlDoc, section: &str, known: &[&str]) -> Result<()> {
+    for key in doc.section_keys(section) {
+        if !known.contains(&key) {
+            return Err(anyhow!(
+                "unknown key `{key}` in [{section}] (known: {})",
+                known
+                    .iter()
+                    .map(|k| k.rsplit('.').next().unwrap())
+                    .collect::<Vec<_>>()
+                    .join(", ")
+            ));
+        }
+    }
+    Ok(())
+}
+
+impl TransportConfig {
+    pub fn from_toml_doc(doc: &TomlDoc) -> Result<TransportConfig> {
+        reject_unknown_keys(doc, "transport", TRANSPORT_KEYS)?;
+        let mut c = TransportConfig::default();
+        if let Some(v) = get_str_strict(doc, "transport.backend")? {
+            c.backend = v.to_string();
+        }
+        if let Some(v) = get_str_strict(doc, "transport.bind")? {
+            c.bind = v.to_string();
+        }
+        if let Some(v) = get_nonneg(doc, "transport.n_workers")? {
+            c.n_workers = v as usize;
+        }
+        if let Some(v) = get_f64_strict(doc, "transport.rate_mbps")? {
+            c.rate_mbps = v;
+        }
+        if let Some(v) = get_f64_strict(doc, "transport.burst_kb")? {
+            c.burst_kb = v;
+        }
+        if let Some(v) = get_f64_strict(doc, "transport.prop_delay_ms")? {
+            c.prop_delay_ms = v;
+        }
+        if let Some(v) = doc.get("transport.schedule") {
+            c.schedule = parse_schedule(v)?;
+        }
+        c.validate()?;
+        Ok(c)
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.backend != "loopback" && self.backend != "tcp" {
+            return Err(anyhow!(
+                "unknown transport backend `{}` (loopback|tcp)",
+                self.backend
+            ));
+        }
+        if self.n_workers == 0 {
+            return Err(anyhow!("transport.n_workers must be ≥ 1"));
+        }
+        if self.rate_mbps < 0.0 || self.burst_kb < 0.0 || self.prop_delay_ms < 0.0 {
+            return Err(anyhow!("transport rates/burst/delay must be ≥ 0"));
+        }
+        if !self.schedule.is_empty() && self.rate_mbps <= 0.0 {
+            // A schedule with no base rate would be silently unshaped.
+            return Err(anyhow!(
+                "transport.schedule requires a positive rate_mbps base rate"
+            ));
+        }
+        if let Some(s) = self.shaping() {
+            s.validate().map_err(|e| anyhow!("transport shaping: {e}"))?;
+        }
+        Ok(())
+    }
+
+    /// The token-bucket config this table asks for (None = unshaped).
+    pub fn shaping(&self) -> Option<ShapingConfig> {
+        if self.rate_mbps <= 0.0 {
+            return None;
+        }
+        Some(ShapingConfig {
+            rate_bytes_per_sec: self.rate_mbps * 1e6 / 8.0,
+            burst_bytes: self.burst_kb * 1024.0,
+            prop_delay_s: self.prop_delay_ms / 1e3,
+            schedule: self
+                .schedule
+                .iter()
+                .map(|&(at, mbps)| (at, mbps * 1e6 / 8.0))
+                .collect(),
+        })
+    }
+
+    pub fn live_backend(&self) -> LiveBackend {
+        match self.backend.as_str() {
+            "tcp" => LiveBackend::Tcp {
+                bind: self.bind.clone(),
+            },
+            _ => LiveBackend::Loopback,
+        }
+    }
+}
+
+/// `[[at_s, rate_mbps], …]` from a TOML array of two-element arrays.
+fn parse_schedule(v: &TomlValue) -> Result<Vec<(f64, f64)>> {
+    let arr = v
+        .as_arr()
+        .ok_or_else(|| anyhow!("transport.schedule must be an array of [at_s, rate_mbps]"))?;
+    let mut out = Vec::with_capacity(arr.len());
+    for item in arr {
+        let pair = item
+            .as_arr()
+            .filter(|p| p.len() == 2)
+            .ok_or_else(|| anyhow!("schedule entries must be two-element arrays"))?;
+        let at = pair[0]
+            .as_f64()
+            .ok_or_else(|| anyhow!("schedule offset must be a number"))?;
+        let rate = pair[1]
+            .as_f64()
+            .ok_or_else(|| anyhow!("schedule rate must be a number"))?;
+        out.push((at, rate));
+    }
+    Ok(out)
+}
+
+/// Everything a `netsenseml live` run needs (`[transport]` + `[live]`).
+#[derive(Clone, Debug, PartialEq)]
+pub struct LiveConfig {
+    pub transport: TransportConfig,
+    pub steps: usize,
+    pub n_params: usize,
+    pub strategy: String,
+    pub compute_ms: u64,
+    pub seed: u64,
+}
+
+impl Default for LiveConfig {
+    fn default() -> Self {
+        LiveConfig {
+            transport: TransportConfig::default(),
+            steps: 30,
+            n_params: 100_000,
+            strategy: "netsense".to_string(),
+            compute_ms: 0,
+            seed: 42,
+        }
+    }
+}
+
+impl LiveConfig {
+    pub fn from_toml_file(path: &Path) -> Result<LiveConfig> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow!("reading {}: {e}", path.display()))?;
+        Self::from_toml(&text)
+    }
+
+    pub fn from_toml(text: &str) -> Result<LiveConfig> {
+        let doc = TomlDoc::parse(text).map_err(|e| anyhow!("{e}"))?;
+        // A misspelled *section* must fail as loudly as a misspelled key —
+        // live configs know exactly two tables.
+        for key in doc.entries.keys() {
+            let section = key.split('.').next().unwrap_or(key);
+            if section != "transport" && section != "live" {
+                return Err(anyhow!(
+                    "unknown section or key `{key}` (live configs use [transport] and [live])"
+                ));
+            }
+        }
+        reject_unknown_keys(&doc, "live", LIVE_KEYS)?;
+        let mut c = LiveConfig {
+            transport: TransportConfig::from_toml_doc(&doc)?,
+            ..Default::default()
+        };
+        if let Some(v) = get_nonneg(&doc, "live.steps")? {
+            c.steps = v as usize;
+        }
+        if let Some(v) = get_nonneg(&doc, "live.n_params")? {
+            c.n_params = v as usize;
+        }
+        if let Some(v) = get_str_strict(&doc, "live.strategy")? {
+            c.strategy = v.to_string();
+        }
+        if let Some(v) = get_nonneg(&doc, "live.compute_ms")? {
+            c.compute_ms = v as u64;
+        }
+        if let Some(v) = get_nonneg(&doc, "live.seed")? {
+            c.seed = v as u64;
+        }
+        c.validate()?;
+        Ok(c)
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        self.transport.validate()?;
+        if self.n_params == 0 {
+            return Err(anyhow!("live.n_params must be ≥ 1"));
+        }
+        if crate::coordinator::SyncStrategy::parse(&self.strategy).is_none() {
+            return Err(anyhow!(
+                "unknown strategy `{}` (netsense|allreduce|topk[:r])",
+                self.strategy
+            ));
+        }
+        Ok(())
+    }
+
+    /// Materialize the runner options.
+    pub fn live_opts(&self) -> LiveOpts {
+        LiveOpts {
+            n_workers: self.transport.n_workers,
+            steps: self.steps,
+            n_params: self.n_params,
+            strategy: crate::coordinator::SyncStrategy::parse(&self.strategy)
+                .expect("validated strategy"),
+            backend: self.transport.live_backend(),
+            shaping: self.transport.shaping(),
+            compute_ms: self.compute_ms,
+            seed: self.seed,
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -207,5 +526,99 @@ adaptive = false
         assert!(TrainConfig::from_toml("[pipeline]\nbucket_kb = -1").is_err());
         assert!(TrainConfig::from_toml("[pipeline]\ndepth = -2").is_err());
         assert!(TrainConfig::from_toml("not toml at all").is_err());
+    }
+
+    #[test]
+    fn transport_table_parses_with_shaping_schedule() {
+        let c = LiveConfig::from_toml(
+            r#"
+[transport]
+backend = "tcp"
+bind = "127.0.0.1:29501"
+n_workers = 4
+rate_mbps = 64
+burst_kb = 16
+prop_delay_ms = 4
+schedule = [[0.0, 64], [30.0, 8]]
+
+[live]
+steps = 50
+n_params = 200000
+strategy = "netsense"
+compute_ms = 10
+seed = 7
+"#,
+        )
+        .unwrap();
+        assert_eq!(c.transport.backend, "tcp");
+        assert_eq!(c.transport.n_workers, 4);
+        assert_eq!(c.steps, 50);
+        assert_eq!(c.compute_ms, 10);
+        let s = c.transport.shaping().unwrap();
+        assert_eq!(s.rate_bytes_per_sec, 64.0 * 1e6 / 8.0);
+        assert_eq!(s.burst_bytes, 16.0 * 1024.0);
+        assert_eq!(s.prop_delay_s, 0.004);
+        assert_eq!(s.schedule, vec![(0.0, 8e6), (30.0, 1e6)]);
+        assert_eq!(
+            c.transport.live_backend(),
+            crate::experiments::live::LiveBackend::Tcp {
+                bind: "127.0.0.1:29501".to_string()
+            }
+        );
+        // Rate 0 → no shaping.
+        let c = LiveConfig::from_toml("[transport]\nrate_mbps = 0").unwrap();
+        assert!(c.transport.shaping().is_none());
+    }
+
+    #[test]
+    fn transport_table_rejects_unknown_keys() {
+        // A typo must fail loudly, not silently default.
+        let e = LiveConfig::from_toml("[transport]\nbakend = \"tcp\"").unwrap_err();
+        let msg = format!("{e:#}");
+        assert!(msg.contains("unknown key") && msg.contains("bakend"), "{msg}");
+        let e = LiveConfig::from_toml("[live]\nstep = 10").unwrap_err();
+        assert!(format!("{e:#}").contains("unknown key"), "{e:#}");
+        // Nested unknown sub-tables are caught by the same prefix scan.
+        assert!(LiveConfig::from_toml("[transport.shaping]\nrate = 5").is_err());
+        // A misspelled *section* fails just as loudly — no silent defaults.
+        let e = LiveConfig::from_toml("[trasport]\nbackend = \"tcp\"").unwrap_err();
+        assert!(format!("{e:#}").contains("unknown section"), "{e:#}");
+        assert!(LiveConfig::from_toml("[train]\nmodel = \"resnet18\"").is_err());
+    }
+
+    #[test]
+    fn transport_table_rejects_bad_values() {
+        assert!(LiveConfig::from_toml("[transport]\nbackend = \"udp\"").is_err());
+        assert!(LiveConfig::from_toml("[transport]\nn_workers = 0").is_err());
+        assert!(LiveConfig::from_toml("[transport]\nrate_mbps = -1").is_err());
+        assert!(LiveConfig::from_toml("[live]\nstrategy = \"bogus\"").is_err());
+        assert!(LiveConfig::from_toml("[live]\nn_params = 0").is_err());
+        // Descending schedule offsets.
+        assert!(LiveConfig::from_toml(
+            "[transport]\nrate_mbps = 8\nschedule = [[10.0, 4], [5.0, 2]]"
+        )
+        .is_err());
+        // Malformed schedule entries.
+        assert!(LiveConfig::from_toml("[transport]\nschedule = [1, 2]").is_err());
+        // A schedule without a base rate would be silently unshaped.
+        assert!(LiveConfig::from_toml("[transport]\nschedule = [[5.0, 2]]").is_err());
+        // Negative integers must error, never wrap through `as usize`.
+        assert!(LiveConfig::from_toml("[transport]\nn_workers = -1").is_err());
+        assert!(LiveConfig::from_toml("[live]\nsteps = -1").is_err());
+        assert!(LiveConfig::from_toml("[live]\nn_params = -1").is_err());
+        assert!(LiveConfig::from_toml("[live]\ncompute_ms = -5").is_err());
+        // Wrong-typed values must error, never fall back to defaults.
+        assert!(LiveConfig::from_toml("[transport]\nbackend = 5").is_err());
+        assert!(LiveConfig::from_toml("[transport]\nn_workers = 4.5").is_err());
+        assert!(LiveConfig::from_toml("[live]\nsteps = \"50\"").is_err());
+    }
+
+    #[test]
+    fn live_exemplar_config_file_parses() {
+        let path = Path::new(env!("CARGO_MANIFEST_DIR")).join("configs/live.toml");
+        let c = LiveConfig::from_toml_file(&path).unwrap();
+        assert_eq!(c.transport.backend, "tcp");
+        assert!(c.transport.shaping().is_some());
+        c.live_opts(); // must materialize without panicking
     }
 }

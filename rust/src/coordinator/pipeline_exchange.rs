@@ -14,6 +14,11 @@
 //! [`PipelineConfig::compress_bytes_per_sec`] (dense input bytes per
 //! second), calibrated against the measured throughput of the real
 //! compressor in `bench_compress`.
+//!
+//! This module is the *simulated* backend of
+//! [`crate::transport::GroupTransport::pipelined`]: the coordinator
+//! ([`super::sync`]) never calls it directly — it drives the transport
+//! seam, and the `NetSim` implementation lands here.
 
 use crate::collectives::{ring_allgather, CollectiveTiming, StagedAllGather};
 use crate::netsim::{NetSim, SimTime};

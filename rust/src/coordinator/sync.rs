@@ -1,5 +1,13 @@
 //! One gradient-synchronization round, per strategy: compress → transport
-//! on the simulated network → aggregate → feed the sensing controller.
+//! through the [`GroupTransport`] seam → aggregate → feed the sensing
+//! controller.
+//!
+//! All byte movement goes through
+//! [`crate::transport::GroupTransport`] — the engine never names a
+//! backend. Simulated runs pass a [`NetSim`](crate::netsim::NetSim) (or
+//! [`crate::transport::SimTransport`]); the live-socket track drives the
+//! rank-level [`crate::transport::Transport`] endpoints directly
+//! ([`crate::experiments::live`]).
 //!
 //! Two fidelities (DESIGN.md §4):
 //! - [`SyncEngine::sync_full`] — real numerics: per-worker Algorithm-2
@@ -10,7 +18,10 @@
 //!   [`crate::compress::NetSenseCompressor::predict_wire_bytes`] (proven
 //!   byte-exact against `sync_full` in tests), so million-step sweeps cost
 //!   microseconds per step. The controller sees the identical observable
-//!   stream either way.
+//!   stream either way. Once a run has spot-checked (compressors exist),
+//!   predictions come from the per-worker compressor state, which keeps
+//!   them exact even across the quantization-skip condition (a frozen
+//!   layer's near-zero bucket).
 //!
 //! With [`SyncEngine::with_pipeline`] the sparse strategies switch to the
 //! bucketed pipelined exchange: per-bucket Algorithm-2 compression (one
@@ -19,14 +30,15 @@
 //! transmission of stage *k* ([`super::pipeline_exchange`]). Scheduling
 //! knobs never change the reduced gradient — only when bytes move.
 
-use super::pipeline_exchange::{pipelined_exchange, ExchangeTiming, PipelineConfig, PipelineStage};
+use super::pipeline_exchange::{ExchangeTiming, PipelineConfig, PipelineStage};
 use super::strategy::SyncStrategy;
-use crate::collectives::{ring_allgather, ring_allreduce, sum_sparse, CollectiveTiming};
+use crate::collectives::{sum_sparse, CollectiveTiming};
 use crate::compress::{
     group_indices_by_bytes, BucketLayout, BucketedCompressor, NetSenseCompressor, SparseGradient,
 };
-use crate::netsim::{NetSim, SimTime};
+use crate::netsim::SimTime;
 use crate::sensing::RatioController;
+use crate::transport::GroupTransport;
 
 /// Result of one synchronization round.
 #[derive(Clone, Debug)]
@@ -130,10 +142,11 @@ impl SyncEngine {
 
     /// Wire bytes Algorithm 2 would produce at `ratio` over `n` elements
     /// (no allocation). Assumes the quantization density condition
-    /// (`grad ℓ2 > tr_d`) holds whenever `ratio < tr_q` — the steady-state
-    /// case; a near-zero gradient (or bucket) would skip quantization in
-    /// the full path and produce a different size. Same modeling
-    /// assumption as [`NetSenseCompressor::predict_wire_bytes`].
+    /// (`grad ℓ2 > tr_d`) holds whenever `ratio < tr_q` — the pure
+    /// timing-only case, where no gradient has ever been seen. Runs that
+    /// have spot-checked use the per-worker compressor state instead
+    /// ([`NetSenseCompressor::predict_wire_bytes`]), which also covers the
+    /// quantization-skip condition for near-zero tensors.
     fn predict_wire_n(&self, n: usize, ratio: f64) -> u64 {
         let cfg = self
             .compression_cfg
@@ -192,6 +205,24 @@ impl SyncEngine {
             .collect()
     }
 
+    /// The `quantized` observable for a timing-only round — from compressor
+    /// state when a spot check has run (matching `sync_full`'s density
+    /// test, OR across workers/buckets), else the steady-state ratio test.
+    fn predicted_quantized(&self, ratio: f64) -> bool {
+        if !self.bucketed.is_empty() {
+            return self.bucketed.iter().any(|b| b.would_quantize(ratio));
+        }
+        if !self.compressors.is_empty() {
+            return self.compressors.iter().any(|c| c.would_quantize(ratio));
+        }
+        ratio
+            < self
+                .compression_cfg
+                .as_ref()
+                .map(|c| c.quant_ratio_threshold)
+                .unwrap_or(0.0)
+    }
+
     /// The ratio the next round will use.
     pub fn current_ratio(&self) -> f64 {
         match &self.strategy {
@@ -223,7 +254,7 @@ impl SyncEngine {
     /// used by Algorithm 2's pruning step.
     pub fn sync_full(
         &mut self,
-        sim: &mut NetSim,
+        net: &mut dyn GroupTransport,
         grads: &[Vec<f32>],
         weights: &[f32],
     ) -> SyncOutcome {
@@ -231,7 +262,7 @@ impl SyncEngine {
         match self.strategy.clone() {
             SyncStrategy::AllReduce => {
                 let dense_bytes = 4 * self.n_params as u64;
-                let comm = ring_allreduce(sim, dense_bytes);
+                let comm = net.allreduce(dense_bytes);
                 // Numeric: mean of the dense gradients.
                 let mut acc = grads[0].clone();
                 let others: Vec<&[f32]> = grads[1..].iter().map(|g| g.as_slice()).collect();
@@ -246,7 +277,7 @@ impl SyncEngine {
             }
             SyncStrategy::NetSense | SyncStrategy::TopK(_) => {
                 if self.pipeline.is_some() {
-                    return self.sync_full_pipelined(sim, grads, weights);
+                    return self.sync_full_pipelined(net, grads, weights);
                 }
                 self.ensure_compressors();
                 let ratio = self.current_ratio();
@@ -258,7 +289,7 @@ impl SyncEngine {
                     payloads.push(out.payload);
                 }
                 let bytes: Vec<u64> = payloads.iter().map(SparseGradient::wire_bytes).collect();
-                let comm = ring_allgather(sim, &bytes);
+                let comm = net.allgather(&bytes);
                 // Numeric: every worker materializes the mean of all
                 // payloads (all-gather → local sum).
                 let mut acc = sum_sparse(self.n_params, &payloads);
@@ -285,7 +316,7 @@ impl SyncEngine {
     /// of the same bucketed payloads.
     fn sync_full_pipelined(
         &mut self,
-        sim: &mut NetSim,
+        net: &mut dyn GroupTransport,
         grads: &[Vec<f32>],
         weights: &[f32],
     ) -> SyncOutcome {
@@ -309,7 +340,7 @@ impl SyncEngine {
         }
         let stages = self.build_stages(&layout, &wire);
         let depth = self.pipeline.as_ref().unwrap().pipeline_depth;
-        let timing = pipelined_exchange(sim, &stages, depth);
+        let timing = net.pipelined(&stages, depth);
         // Numeric: bucket-wise mean of everyone's payloads, fused back.
         let scale = 1.0 / self.n_workers as f32;
         let parts: Vec<Vec<f32>> = (0..nb)
@@ -334,30 +365,33 @@ impl SyncEngine {
     }
 
     /// Timing-only bucketed pipelined synchronization. Byte-exact against
-    /// [`SyncEngine::sync_full_pipelined`] whenever every bucket satisfies
-    /// the quantization density condition (see
-    /// [`SyncEngine::predict_wire_n`]) — the same conditional contract the
-    /// monolithic predicted path has, though bucketing makes the
-    /// near-zero-gradient exception (e.g. a frozen layer's bucket at
-    /// ratios below `tr_q`) easier to reach.
-    fn sync_predicted_pipelined(&mut self, sim: &mut NetSim) -> SyncOutcome {
+    /// [`SyncEngine::sync_full_pipelined`]: once a full-fidelity round has
+    /// run (mixed-fidelity runs spot-check step 0), per-bucket predictions
+    /// come from each worker's [`BucketedCompressor`] state, which honors
+    /// the quantization-skip condition for near-zero buckets (a frozen
+    /// layer at ratios below `tr_q`). A never-spot-checked run falls back
+    /// to the steady-state density assumption of
+    /// [`SyncEngine::predict_wire_n`].
+    fn sync_predicted_pipelined(&mut self, net: &mut dyn GroupTransport) -> SyncOutcome {
         let ratio = self.current_ratio();
         let layout = self.bucket_layout();
         let nb = layout.n_buckets();
-        let per_bucket: Vec<u64> = (0..nb)
-            .map(|b| self.predict_wire_n(layout.elems(b), ratio))
-            .collect();
-        let wire: Vec<Vec<u64>> = vec![per_bucket; self.n_workers];
+        let wire: Vec<Vec<u64>> = if self.bucketed.is_empty() {
+            let per_bucket: Vec<u64> = (0..nb)
+                .map(|b| self.predict_wire_n(layout.elems(b), ratio))
+                .collect();
+            vec![per_bucket; self.n_workers]
+        } else {
+            self.bucketed
+                .iter()
+                .map(|bc| bc.predict_wire_bytes(ratio))
+                .collect()
+        };
         let stages = self.build_stages(&layout, &wire);
         let depth = self.pipeline.as_ref().unwrap().pipeline_depth;
-        let timing = pipelined_exchange(sim, &stages, depth);
+        let timing = net.pipelined(&stages, depth);
         let bytes: Vec<u64> = wire.iter().map(|w| w.iter().sum()).collect();
-        let quantized = ratio
-            < self
-                .compression_cfg
-                .as_ref()
-                .map(|c| c.quant_ratio_threshold)
-                .unwrap_or(0.0);
+        let quantized = self.predicted_quantized(ratio);
         self.observe_exchange(&bytes, &timing);
         SyncOutcome {
             mean_grad: None,
@@ -370,11 +404,11 @@ impl SyncEngine {
 
     /// Timing-only synchronization (surrogate fast path): identical wire
     /// sizes and controller observations, no tensor math.
-    pub fn sync_predicted(&mut self, sim: &mut NetSim) -> SyncOutcome {
+    pub fn sync_predicted(&mut self, net: &mut dyn GroupTransport) -> SyncOutcome {
         match self.strategy.clone() {
             SyncStrategy::AllReduce => {
                 let dense_bytes = 4 * self.n_params as u64;
-                let comm = ring_allreduce(sim, dense_bytes);
+                let comm = net.allreduce(dense_bytes);
                 SyncOutcome {
                     mean_grad: None,
                     payload_bytes: vec![dense_bytes; self.n_workers],
@@ -385,19 +419,20 @@ impl SyncEngine {
             }
             SyncStrategy::NetSense | SyncStrategy::TopK(_) => {
                 if self.pipeline.is_some() {
-                    return self.sync_predicted_pipelined(sim);
+                    return self.sync_predicted_pipelined(net);
                 }
                 let ratio = self.current_ratio();
-                let wire = self.predict_wire(ratio);
-                let bytes = vec![wire; self.n_workers];
-                let comm = ring_allgather(sim, &bytes);
+                let bytes: Vec<u64> = if self.compressors.is_empty() {
+                    vec![self.predict_wire(ratio); self.n_workers]
+                } else {
+                    self.compressors
+                        .iter()
+                        .map(|c| c.predict_wire_bytes(ratio))
+                        .collect()
+                };
+                let comm = net.allgather(&bytes);
                 self.observe(&bytes, &comm);
-                let quantized = ratio
-                    < self
-                        .compression_cfg
-                        .as_ref()
-                        .map(|c| c.quant_ratio_threshold)
-                        .unwrap_or(0.0);
+                let quantized = self.predicted_quantized(ratio);
                 SyncOutcome {
                     mean_grad: None,
                     payload_bytes: bytes,
@@ -439,7 +474,7 @@ mod tests {
     use super::*;
     use crate::netsim::schedule::mbps;
     use crate::netsim::topology::StarTopology;
-    use crate::netsim::SimTime;
+    use crate::netsim::{NetSim, SimTime};
     use crate::util::rng::Pcg64;
 
     const N: usize = 4;
@@ -634,6 +669,48 @@ mod tests {
                 assert_eq!(a.payload_bytes, b.payload_bytes, "{strat:?} seed {seed}");
                 assert_eq!(a.ratio, b.ratio, "{strat:?} ratio diverged");
             }
+        }
+    }
+
+    #[test]
+    fn predicted_stays_byte_exact_for_frozen_buckets_after_spot_check() {
+        // Regression (DESIGN.md §3 caveat, now fixed): a frozen layer's
+        // bucket has zero gradient, fails the quantization density
+        // condition, and used to make `sync_predicted` diverge from
+        // `sync_full` at ratios below `tr_q`. With compressor-state-aware
+        // prediction, a mixed-fidelity run (full spot-check at step 0,
+        // predicted after) stays byte-exact against an all-full run.
+        let cfg = PipelineConfig {
+            bucket_size_bytes: 4 * 2_500, // 4 buckets of 2 500 elems
+            ..Default::default()
+        };
+        let mut full = SyncEngine::new(SyncStrategy::NetSense, N, P).with_pipeline(cfg.clone());
+        let mut mixed = SyncEngine::new(SyncStrategy::NetSense, N, P).with_pipeline(cfg);
+        let w = weights();
+        let frozen_grads = |seed: u64| -> Vec<Vec<f32>> {
+            let mut gs = grads(seed);
+            for g in gs.iter_mut() {
+                for x in g[0..2_500].iter_mut() {
+                    *x = 0.0; // bucket 0 is a frozen layer on every worker
+                }
+            }
+            gs
+        };
+        // NetSense starts at ratio 0.01 < tr_q = 0.05, so the healthy
+        // buckets quantize while the frozen bucket must skip.
+        let a0 = full.sync_full(&mut sim(50.0), &frozen_grads(0), &w);
+        let b0 = mixed.sync_full(&mut sim(50.0), &frozen_grads(0), &w);
+        assert_eq!(a0.payload_bytes, b0.payload_bytes);
+        for seed in 1..7 {
+            let a = full.sync_full(&mut sim(50.0), &frozen_grads(seed), &w);
+            let b = mixed.sync_predicted(&mut sim(50.0));
+            assert_eq!(
+                a.payload_bytes, b.payload_bytes,
+                "frozen-bucket divergence at step {seed} (ratio {})",
+                a.ratio
+            );
+            assert_eq!(a.ratio, b.ratio, "controller drifted at step {seed}");
+            assert_eq!(a.quantized, b.quantized, "quantized flag diverged at step {seed}");
         }
     }
 

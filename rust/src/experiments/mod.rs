@@ -10,15 +10,19 @@
 //! | [`degrading`] | Fig. 7 — throughput under degrading bandwidth    |
 //! | [`fluctuating`] | Fig. 8 — throughput under competing traffic    |
 //! | [`pipelined`] | pipelined vs monolithic exchange (overlap study) |
+//! | [`live`]      | live socket training (paper's §5 testbed runs)   |
 //!
 //! Every runner prints a markdown table (and optionally CSV curves) built
-//! with [`report`]; scenarios come from [`scenario`].
+//! with [`report`]; scenarios come from [`scenario`]. [`live`] is the odd
+//! one out: it runs over the real [`crate::transport`] layer (threads +
+//! sockets + wall clock) instead of the simulator.
 
 pub mod ablation;
 pub mod degrading;
 pub mod fig2;
 pub mod fig3;
 pub mod fluctuating;
+pub mod live;
 pub mod pipelined;
 pub mod report;
 pub mod scenario;

@@ -15,6 +15,17 @@
 //! ([`runtime`], behind the `pjrt` feature) and never calls Python at run
 //! time.
 //!
+//! ## Dual-backend transport
+//!
+//! Every byte the coordinator moves goes through the [`transport`] seam:
+//! simulated runs drive [`transport::GroupTransport`] over [`netsim`],
+//! while `netsenseml live` trains over *real* sockets — rank-level
+//! [`transport::Transport`] endpoints (in-process loopback or a TCP mesh
+//! with rank-0 rendezvous), length-prefixed frames, real ring collectives
+//! ([`transport::collective`]), optional token-bucket shaping
+//! ([`transport::ShapedTransport`]) — with the Algorithm-1 controller fed
+//! by *measured* RTTs ([`experiments::live`]).
+//!
 //! ## The gradient hot path
 //!
 //! Gradients travel as **fused buckets through a pipelined exchange**: the
@@ -44,4 +55,5 @@ pub mod runtime;
 pub mod sensing;
 pub mod testing;
 pub mod trainer;
+pub mod transport;
 pub mod util;

@@ -3,11 +3,12 @@
 //! Subcommands:
 //! - `repro <exp|all>` — regenerate the paper's tables/figures
 //! - `train`           — one simulated training run (paper-scale models)
+//! - `live`            — live multi-worker training over real sockets
 //! - `e2e`             — real three-layer training (PJRT + JAX/Pallas)
 //! - `sense`           — Fig.2-style sensing sweep
 //! - `info`            — artifact/manifest inspection
 
-use netsenseml::config::TrainConfig;
+use netsenseml::config::{LiveConfig, TrainConfig};
 use netsenseml::util::error::{anyhow, bail, Result};
 use netsenseml::coordinator::{
     run_sim_training, RealTrainConfig, RealTrainer, SimTrainConfig, SyncStrategy,
@@ -57,6 +58,26 @@ fn cli() -> Cli {
                 positionals: vec![],
             },
             CmdSpec {
+                name: "live",
+                help: "live multi-worker training over real sockets (loopback | tcp)",
+                opts: vec![
+                    opt("config", "TOML config with [transport]/[live] tables", None),
+                    opt("workers", "number of workers (threads, one socket endpoint each)", None),
+                    opt("steps", "training steps", None),
+                    opt("params", "flat gradient length (f32 elements)", None),
+                    opt("strategy", "netsense | allreduce | topk[:r]", None),
+                    opt("backend", "loopback | tcp", None),
+                    opt("bind", "tcp rendezvous address (host:port; port 0 = auto)", None),
+                    opt("rate-mbps", "token-bucket shaping rate (0 = unshaped)", None),
+                    opt("burst-kb", "token-bucket burst", None),
+                    opt("prop-delay-ms", "per-send propagation-delay floor", None),
+                    opt("step-down", "halve-style rate step: `<at_s>:<mbps>`", None),
+                    opt("compute-ms", "local compute time per step", None),
+                    opt("seed", "seed", None),
+                ],
+                positionals: vec![],
+            },
+            CmdSpec {
                 name: "e2e",
                 help: "real training through PJRT (requires `make artifacts`)",
                 opts: vec![
@@ -100,6 +121,7 @@ fn main() {
     let result = match args.command.as_str() {
         "repro" => cmd_repro(&args),
         "train" => cmd_train(&args),
+        "live" => cmd_live(&args),
         "e2e" => cmd_e2e(&args),
         "sense" => cmd_sense(&args),
         "info" => cmd_info(&args),
@@ -231,6 +253,117 @@ fn cmd_train(args: &netsenseml::util::cli::Args) -> Result<()> {
     if let Some(csv) = args.get("csv") {
         log.write_csv(Path::new(csv))?;
         println!("trace written to {csv}");
+    }
+    Ok(())
+}
+
+fn cmd_live(args: &netsenseml::util::cli::Args) -> Result<()> {
+    // Layer: defaults ← TOML ← CLI flags.
+    let mut cfg = match args.get("config") {
+        Some(path) => LiveConfig::from_toml_file(Path::new(path))?,
+        None => LiveConfig::default(),
+    };
+    if let Some(w) = args.get_usize("workers")? {
+        cfg.transport.n_workers = w;
+    }
+    if let Some(s) = args.get_usize("steps")? {
+        cfg.steps = s;
+    }
+    if let Some(p) = args.get_usize("params")? {
+        cfg.n_params = p;
+    }
+    if let Some(s) = args.get("strategy") {
+        cfg.strategy = s.to_string();
+    }
+    if let Some(b) = args.get("backend") {
+        cfg.transport.backend = b.to_string();
+    }
+    if let Some(b) = args.get("bind") {
+        cfg.transport.bind = b.to_string();
+    }
+    if let Some(r) = args.get_f64("rate-mbps")? {
+        cfg.transport.rate_mbps = r;
+        // A schedule entry at t = 0 restates the base rate and would
+        // silently override this flag from the first instant — drop it;
+        // later steps still apply.
+        cfg.transport.schedule.retain(|&(at, _)| at > 0.0);
+    }
+    if let Some(b) = args.get_f64("burst-kb")? {
+        cfg.transport.burst_kb = b;
+    }
+    if let Some(d) = args.get_f64("prop-delay-ms")? {
+        cfg.transport.prop_delay_ms = d;
+    }
+    if let Some(spec) = args.get("step-down") {
+        if cfg.transport.rate_mbps <= 0.0 {
+            bail!("--step-down needs a base rate: pass --rate-mbps > 0");
+        }
+        let (at, mbps) = spec
+            .split_once(':')
+            .and_then(|(a, r)| Some((a.parse::<f64>().ok()?, r.parse::<f64>().ok()?)))
+            .ok_or_else(|| anyhow!("--step-down wants `<at_s>:<mbps>`, got `{spec}`"))?;
+        cfg.transport.schedule = vec![(0.0, cfg.transport.rate_mbps), (at, mbps)];
+    }
+    if let Some(c) = args.get_u64("compute-ms")? {
+        cfg.compute_ms = c;
+    }
+    if let Some(s) = args.get_u64("seed")? {
+        cfg.seed = s;
+    }
+    cfg.validate()?;
+
+    let opts = cfg.live_opts();
+    eprintln!(
+        "live: {} workers over {} — strategy {}, {} steps × {} params{}",
+        opts.n_workers,
+        cfg.transport.backend,
+        cfg.strategy,
+        opts.steps,
+        opts.n_params,
+        match &opts.shaping {
+            Some(s) => format!(
+                ", shaped to {:.1} Mbps ({} steps)",
+                s.rate_bytes_per_sec * 8.0 / 1e6,
+                s.schedule.len()
+            ),
+            None => ", unshaped".to_string(),
+        }
+    );
+    let report = netsenseml::experiments::live::run_live(&opts)?;
+
+    let mut table = netsenseml::experiments::Table::new(
+        "Live training — measured observables (rank 0)",
+        &["Step", "t (s)", "Ratio", "Payload (kB)", "Round (ms)", "Sensed BtlBw (Mbps)"],
+    );
+    let stride = (report.steps.len() / 12).max(1);
+    for r in report.steps.iter().step_by(stride) {
+        table.row(vec![
+            r.step.to_string(),
+            format!("{:.2}", r.at_s),
+            format!("{:.4}", r.ratio),
+            format!("{:.1}", r.payload_bytes as f64 / 1e3),
+            format!("{:.1}", r.round_ms),
+            r.btlbw_mbps
+                .map(|b| format!("{b:.1}"))
+                .unwrap_or_else(|| "—".to_string()),
+        ]);
+    }
+    table.print();
+    println!(
+        "steps={} wall={:.1}s final_ratio={:.4} ctl(+{} / −{}) replicas {}",
+        report.steps.len(),
+        report.wall_s,
+        report.final_ratio,
+        report.controller_increases,
+        report.controller_decreases,
+        if report.consistent {
+            "bit-identical"
+        } else {
+            "DIVERGED"
+        }
+    );
+    if !report.consistent {
+        bail!("reduced gradients diverged across workers");
     }
     Ok(())
 }

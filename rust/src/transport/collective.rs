@@ -1,0 +1,299 @@
+//! Real collectives over a [`Transport`]: the data-moving twins of the
+//! timing-only schedules in [`crate::collectives::patterns`]. Same ring
+//! algorithms, but actual bytes travel — every rank runs its own copy of
+//! these functions concurrently (one thread or process per rank) and the
+//! ring phases synchronize through the transport itself.
+//!
+//! Determinism contract (tested): the reduced result is a pure function of
+//! the inputs and the ring algorithm — identical bits over
+//! [`LoopbackTransport`](super::LoopbackTransport) and
+//! [`TcpTransport`](super::TcpTransport), and (for two ranks, where ring
+//! accumulation order coincides with rank order up to commutativity)
+//! identical bits to the in-memory
+//! [`collectives::numeric`](crate::collectives::numeric) reduction.
+
+use super::Transport;
+use crate::util::error::{anyhow, Result};
+use std::time::{Duration, Instant};
+
+/// Wall-clock timing of one collective round at this rank — the live
+/// analogue of [`crate::collectives::CollectiveTiming`], and the source of
+/// the `(data_size, RTT)` observation the paper's Algorithm 1 consumes.
+#[derive(Clone, Copy, Debug)]
+pub struct RoundTiming {
+    /// Start-to-finish wall time of the collective at this rank.
+    pub elapsed: Duration,
+    /// Payload bytes this rank pushed into the ring (frame headers
+    /// excluded).
+    pub sent_bytes: u64,
+}
+
+/// Ring all-gather of one byte payload per rank: N−1 phases; in phase `p`
+/// this rank forwards the block that originated at `(rank + n − p) % n` to
+/// its successor and receives the predecessor's. Returns every rank's
+/// block, indexed by origin rank (own payload included), plus timing.
+pub fn ring_allgather_frames(
+    t: &mut dyn Transport,
+    payload: &[u8],
+) -> Result<(Vec<Vec<u8>>, RoundTiming)> {
+    let n = t.group_size();
+    let rank = t.rank();
+    let t0 = Instant::now();
+    let mut blocks: Vec<Option<Vec<u8>>> = (0..n).map(|_| None).collect();
+    blocks[rank] = Some(payload.to_vec());
+    let succ = (rank + 1) % n;
+    let pred = (rank + n - 1) % n;
+    let mut sent = 0u64;
+    for p in 0..n.saturating_sub(1) {
+        let origin = (rank + n - p) % n;
+        let out = blocks[origin]
+            .as_ref()
+            .ok_or_else(|| anyhow!("phase {p}: block {origin} not yet received"))?;
+        sent += out.len() as u64;
+        t.send(succ, out)?;
+        let incoming_origin = (pred + n - p) % n;
+        let incoming = t.recv(pred)?;
+        blocks[incoming_origin] = Some(incoming);
+    }
+    let blocks = blocks
+        .into_iter()
+        .map(|b| b.expect("all blocks received"))
+        .collect();
+    Ok((
+        blocks,
+        RoundTiming {
+            elapsed: t0.elapsed(),
+            sent_bytes: sent,
+        },
+    ))
+}
+
+/// In-place ring all-reduce (sum) of a flat f32 tensor: reduce-scatter
+/// then all-gather over `n` near-equal chunks, the standard bandwidth-
+/// optimal schedule. Values move as raw little-endian f32 — bit-exact
+/// across transports.
+pub fn ring_allreduce_f32(t: &mut dyn Transport, data: &mut [f32]) -> Result<RoundTiming> {
+    let n = t.group_size();
+    let rank = t.rank();
+    let t0 = Instant::now();
+    if n == 1 {
+        return Ok(RoundTiming {
+            elapsed: t0.elapsed(),
+            sent_bytes: 0,
+        });
+    }
+    let len = data.len();
+    let q = len.div_ceil(n);
+    let chunk = |c: usize| -> std::ops::Range<usize> {
+        let start = (c * q).min(len);
+        start..((c + 1) * q).min(len)
+    };
+    let succ = (rank + 1) % n;
+    let pred = (rank + n - 1) % n;
+    let mut sent = 0u64;
+
+    // Reduce-scatter: after phase p this rank holds the partial sum of
+    // chunk (rank − p) % n over ranks {rank−p, …, rank}; after n−1 phases
+    // it owns the fully reduced chunk (rank + 1) % n.
+    for p in 0..n - 1 {
+        let out_c = (rank + n - p) % n;
+        let out: Vec<u8> = data[chunk(out_c)]
+            .iter()
+            .flat_map(|x| x.to_le_bytes())
+            .collect();
+        sent += out.len() as u64;
+        t.send(succ, &out)?;
+        let in_c = (rank + n - 1 - p) % n;
+        let incoming = t.recv(pred)?;
+        let dst = &mut data[chunk(in_c)];
+        if incoming.len() != dst.len() * 4 {
+            return Err(anyhow!(
+                "reduce-scatter phase {p}: got {} bytes for a {}-element chunk",
+                incoming.len(),
+                dst.len()
+            ));
+        }
+        for (d, b) in dst.iter_mut().zip(incoming.chunks_exact(4)) {
+            *d += f32::from_le_bytes(b.try_into().unwrap());
+        }
+    }
+
+    // All-gather of the reduced chunks: forward, don't add.
+    for p in 0..n - 1 {
+        let out_c = (rank + 1 + n - p) % n;
+        let out: Vec<u8> = data[chunk(out_c)]
+            .iter()
+            .flat_map(|x| x.to_le_bytes())
+            .collect();
+        sent += out.len() as u64;
+        t.send(succ, &out)?;
+        let in_c = (rank + n - p) % n;
+        let incoming = t.recv(pred)?;
+        let dst = &mut data[chunk(in_c)];
+        if incoming.len() != dst.len() * 4 {
+            return Err(anyhow!(
+                "all-gather phase {p}: got {} bytes for a {}-element chunk",
+                incoming.len(),
+                dst.len()
+            ));
+        }
+        for (d, b) in dst.iter_mut().zip(incoming.chunks_exact(4)) {
+            *d = f32::from_le_bytes(b.try_into().unwrap());
+        }
+    }
+    Ok(RoundTiming {
+        elapsed: t0.elapsed(),
+        sent_bytes: sent,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::collectives::numeric::sum_dense;
+    use crate::transport::LoopbackTransport;
+    use crate::util::rng::Pcg64;
+
+    fn randn(n: usize, seed: u64, stream: u64) -> Vec<f32> {
+        let mut r = Pcg64::new(seed, stream);
+        let mut v = vec![0f32; n];
+        r.fill_normal_f32(&mut v, 0.0, 1.0);
+        v
+    }
+
+    /// Reference: the in-memory reduction every transport must match.
+    fn numeric_sum(inputs: &[Vec<f32>]) -> Vec<f32> {
+        let mut acc = inputs[0].clone();
+        let others: Vec<&[f32]> = inputs[1..].iter().map(|v| v.as_slice()).collect();
+        sum_dense(&mut acc, &others);
+        acc
+    }
+
+    fn allgather_on_loopback(n: usize, payload_len: usize) -> Vec<Vec<Vec<u8>>> {
+        let mesh = LoopbackTransport::mesh(n);
+        let handles: Vec<_> = mesh
+            .into_iter()
+            .map(|mut t| {
+                std::thread::spawn(move || {
+                    let payload = vec![t.rank() as u8; payload_len + t.rank()];
+                    let (blocks, timing) = ring_allgather_frames(&mut t, &payload).unwrap();
+                    assert!(timing.sent_bytes > 0 || t.group_size() == 1);
+                    blocks
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    }
+
+    #[test]
+    fn allgather_delivers_every_origin_to_every_rank() {
+        for n in [2, 3, 5] {
+            let per_rank = allgather_on_loopback(n, 10);
+            for blocks in &per_rank {
+                assert_eq!(blocks.len(), n);
+                for (origin, b) in blocks.iter().enumerate() {
+                    assert_eq!(b, &vec![origin as u8; 10 + origin], "origin {origin}");
+                }
+            }
+        }
+    }
+
+    fn allreduce_on<T: Transport + 'static>(
+        endpoints: Vec<T>,
+        inputs: &[Vec<f32>],
+    ) -> Vec<Vec<f32>> {
+        let handles: Vec<_> = endpoints
+            .into_iter()
+            .map(|mut t| {
+                let mut data = inputs[t.rank()].clone();
+                std::thread::spawn(move || {
+                    ring_allreduce_f32(&mut t, &mut data).unwrap();
+                    t.shutdown().unwrap();
+                    data
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    }
+
+    #[test]
+    fn loopback_allreduce_matches_numeric_bitwise_two_ranks() {
+        let inputs = vec![randn(10_000, 1, 0), randn(10_000, 1, 1)];
+        let want = numeric_sum(&inputs);
+        let reduced = allreduce_on(LoopbackTransport::mesh(2), &inputs);
+        for (rank, got) in reduced.iter().enumerate() {
+            assert_eq!(got, &want, "rank {rank} diverged from numeric sum");
+        }
+    }
+
+    #[test]
+    fn loopback_allreduce_all_ranks_agree_and_track_numeric() {
+        // n > 2: ring accumulation order differs from rank order per
+        // chunk, so bitwise equality holds across ranks/transports while
+        // the numeric reference is matched to float tolerance.
+        let n = 4;
+        let len = 4097; // ragged tail chunk
+        let inputs: Vec<Vec<f32>> = (0..n).map(|w| randn(len, 2, w as u64)).collect();
+        let want = numeric_sum(&inputs);
+        let reduced = allreduce_on(LoopbackTransport::mesh(n), &inputs);
+        for got in &reduced[1..] {
+            assert_eq!(got, &reduced[0], "ranks must agree bitwise");
+        }
+        for (g, w) in reduced[0].iter().zip(&want) {
+            assert!((g - w).abs() <= 1e-4 * w.abs().max(1.0), "{g} vs {w}");
+        }
+    }
+
+    /// The ISSUE acceptance check: a 2-worker TcpTransport ring all-reduce
+    /// over localhost produces gradients bit-identical to
+    /// LoopbackTransport and to the in-memory numeric reduction.
+    #[test]
+    fn tcp_allreduce_bit_identical_to_loopback_and_numeric() {
+        let inputs = vec![randn(50_000, 7, 0), randn(50_000, 7, 1)];
+        let want = numeric_sum(&inputs);
+        let via_loopback = allreduce_on(LoopbackTransport::mesh(2), &inputs);
+
+        let inputs_tcp = inputs.clone();
+        let via_tcp = crate::transport::tcp::tests::with_mesh(2, move |mut t| {
+            let mut data = inputs_tcp[t.rank()].clone();
+            ring_allreduce_f32(&mut t, &mut data).unwrap();
+            t.shutdown().unwrap();
+            data
+        });
+
+        for rank in 0..2 {
+            assert_eq!(via_tcp[rank], via_loopback[rank], "tcp vs loopback, rank {rank}");
+            assert_eq!(via_tcp[rank], want, "tcp vs numeric, rank {rank}");
+        }
+    }
+
+    #[test]
+    fn tcp_allgather_matches_loopback() {
+        let payloads: Vec<Vec<u8>> = (0..3).map(|r| vec![0xA0 + r as u8; 100 * (r + 1)]).collect();
+        let expect = payloads.clone();
+        let out = crate::transport::tcp::tests::with_mesh(3, move |mut t| {
+            let (blocks, _) = ring_allgather_frames(&mut t, &payloads[t.rank()]).unwrap();
+            t.shutdown().unwrap();
+            blocks
+        });
+        for blocks in &out {
+            assert_eq!(blocks, &expect);
+        }
+    }
+
+    #[test]
+    fn single_rank_allreduce_is_identity() {
+        let mut mesh = LoopbackTransport::mesh(1);
+        let mut data = randn(100, 3, 0);
+        let orig = data.clone();
+        let timing = ring_allreduce_f32(&mut mesh[0], &mut data).unwrap();
+        assert_eq!(data, orig);
+        assert_eq!(timing.sent_bytes, 0);
+    }
+
+    #[test]
+    fn empty_tensor_allreduce() {
+        let reduced = allreduce_on(LoopbackTransport::mesh(2), &[vec![], vec![]]);
+        assert!(reduced.iter().all(|v| v.is_empty()));
+    }
+}

@@ -1,0 +1,210 @@
+//! Length-prefixed frame codec — the unit every [`super::Transport`]
+//! moves.
+//!
+//! Wire layout (little-endian):
+//! `[u32 magic "NSML"][u32 payload_len][payload_len bytes]`
+//!
+//! The magic word catches stream desynchronization (a torn read on a real
+//! socket shows up as a named error, not garbage gradients), and the
+//! length prefix is what lets one TCP stream carry back-to-back sparse
+//! payloads of different sizes. The payload itself is opaque — typically a
+//! [`SparseGradient::encode`](crate::compress::SparseGradient::encode)
+//! buffer or a raw f32 block.
+//!
+//! ```
+//! use netsenseml::transport::frame::{decode_frame, encode_frame};
+//!
+//! let wire = encode_frame(b"hello");
+//! assert_eq!(decode_frame(&wire).unwrap(), b"hello");
+//! ```
+
+use crate::util::error::{anyhow, Result};
+use std::io::{Read, Write};
+
+/// Frame magic: `"NSML"` little-endian.
+pub const FRAME_MAGIC: u32 = 0x4c4d_534e;
+
+/// Header bytes prepended to every payload (magic + length).
+pub const FRAME_OVERHEAD: u64 = 8;
+
+/// Refuse frames larger than this (1 GiB) — a corrupted length prefix must
+/// not turn into an OOM allocation.
+pub const MAX_FRAME_BYTES: usize = 1 << 30;
+
+/// Encode one payload as a frame.
+pub fn encode_frame(payload: &[u8]) -> Vec<u8> {
+    assert!(payload.len() <= MAX_FRAME_BYTES, "payload too large");
+    let mut out = Vec::with_capacity(8 + payload.len());
+    out.extend_from_slice(&FRAME_MAGIC.to_le_bytes());
+    out.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+    out.extend_from_slice(payload);
+    out
+}
+
+/// Decode one complete frame (the buffer must hold exactly one frame).
+pub fn decode_frame(buf: &[u8]) -> Result<Vec<u8>> {
+    if buf.len() < 8 {
+        return Err(anyhow!("short frame: {} bytes", buf.len()));
+    }
+    let magic = u32::from_le_bytes(buf[0..4].try_into().unwrap());
+    if magic != FRAME_MAGIC {
+        return Err(anyhow!("bad frame magic {magic:#010x}"));
+    }
+    let len = u32::from_le_bytes(buf[4..8].try_into().unwrap()) as usize;
+    if len > MAX_FRAME_BYTES {
+        return Err(anyhow!("frame length {len} exceeds cap"));
+    }
+    if buf.len() != 8 + len {
+        return Err(anyhow!("frame length {} != header-declared {}", buf.len() - 8, len));
+    }
+    Ok(buf[8..].to_vec())
+}
+
+/// Write one frame to a byte sink (socket hot path: header then payload,
+/// no intermediate copy of the payload).
+pub fn write_frame(w: &mut impl Write, payload: &[u8]) -> std::io::Result<()> {
+    assert!(payload.len() <= MAX_FRAME_BYTES, "payload too large");
+    let mut header = [0u8; 8];
+    header[0..4].copy_from_slice(&FRAME_MAGIC.to_le_bytes());
+    header[4..8].copy_from_slice(&(payload.len() as u32).to_le_bytes());
+    w.write_all(&header)?;
+    w.write_all(payload)?;
+    w.flush()
+}
+
+/// Read one frame from a byte source. An EOF before the first header byte
+/// yields `UnexpectedEof` (the reader-thread shutdown signal); a torn
+/// header or bad magic yields `InvalidData`.
+pub fn read_frame(r: &mut impl Read) -> std::io::Result<Vec<u8>> {
+    let mut header = [0u8; 8];
+    r.read_exact(&mut header)?;
+    let magic = u32::from_le_bytes(header[0..4].try_into().unwrap());
+    if magic != FRAME_MAGIC {
+        return Err(std::io::Error::new(
+            std::io::ErrorKind::InvalidData,
+            format!("bad frame magic {magic:#010x}"),
+        ));
+    }
+    let len = u32::from_le_bytes(header[4..8].try_into().unwrap()) as usize;
+    if len > MAX_FRAME_BYTES {
+        return Err(std::io::Error::new(
+            std::io::ErrorKind::InvalidData,
+            format!("frame length {len} exceeds cap"),
+        ));
+    }
+    let mut payload = vec![0u8; len];
+    r.read_exact(&mut payload)?;
+    Ok(payload)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::quantize::Precision;
+    use crate::compress::topk::top_k_indices;
+    use crate::compress::SparseGradient;
+    use crate::testing::prop::*;
+
+    #[test]
+    fn roundtrip_basic() {
+        for payload in [&b""[..], b"x", b"hello world", &[0u8; 1024][..]] {
+            let wire = encode_frame(payload);
+            assert_eq!(wire.len() as u64, payload.len() as u64 + FRAME_OVERHEAD);
+            assert_eq!(decode_frame(&wire).unwrap(), payload);
+        }
+    }
+
+    #[test]
+    fn decode_rejects_corruption() {
+        let wire = encode_frame(b"payload");
+        assert!(decode_frame(&wire[..4]).is_err()); // short
+        let mut bad = wire.clone();
+        bad[0] ^= 0xff; // magic
+        assert!(decode_frame(&bad).is_err());
+        let mut long = wire.clone();
+        long.push(0); // trailing garbage
+        assert!(decode_frame(&long).is_err());
+        let mut short = wire;
+        short.pop(); // truncated payload
+        assert!(decode_frame(&short).is_err());
+    }
+
+    #[test]
+    fn io_framing_roundtrips_back_to_back() {
+        // Two frames on one stream — the length prefix must split them.
+        let mut stream = Vec::new();
+        write_frame(&mut stream, b"first").unwrap();
+        write_frame(&mut stream, b"second, longer").unwrap();
+        let mut cursor = std::io::Cursor::new(stream);
+        assert_eq!(read_frame(&mut cursor).unwrap(), b"first");
+        assert_eq!(read_frame(&mut cursor).unwrap(), b"second, longer");
+        let eof = read_frame(&mut cursor).unwrap_err();
+        assert_eq!(eof.kind(), std::io::ErrorKind::UnexpectedEof);
+    }
+
+    #[test]
+    fn read_rejects_bad_magic_on_stream() {
+        let mut stream = encode_frame(b"ok");
+        stream[1] ^= 0x55;
+        let e = read_frame(&mut std::io::Cursor::new(stream)).unwrap_err();
+        assert_eq!(e.kind(), std::io::ErrorKind::InvalidData);
+    }
+
+    #[test]
+    fn property_frame_roundtrip_arbitrary_bytes() {
+        forall(
+            "decode(encode(p)) == p",
+            100,
+            vec_f32(0..300, -1e30..1e30),
+            |v| {
+                let payload: Vec<u8> = v.iter().flat_map(|x| x.to_le_bytes()).collect();
+                decode_frame(&encode_frame(&payload)).map(|d| d == payload).unwrap_or(false)
+            },
+        );
+    }
+
+    /// The COO wire codec must survive the frame codec — the exact path a
+    /// sparse gradient takes over a real socket, including nnz = 0 and
+    /// values at the edge of f32 precision.
+    #[test]
+    fn property_coo_payload_survives_framing() {
+        forall(
+            "SparseGradient -> frame -> SparseGradient",
+            100,
+            pair(vec_f32(1..200, -1.7e38..1.7e38), usize_in(0..64)),
+            |(v, k)| {
+                let k = (*k).min(v.len());
+                let idx = top_k_indices(v, k);
+                for prec in [Precision::F32, Precision::F16, Precision::Bf16] {
+                    let raw = SparseGradient::gather(v, idx.clone(), prec);
+                    // Canonicalize to receiver-visible (wire-precision)
+                    // values, then the framed roundtrip must be lossless.
+                    let canon = SparseGradient::decode(&raw.encode()).unwrap();
+                    let framed = encode_frame(&canon.encode());
+                    let Ok(payload) = decode_frame(&framed) else {
+                        return false;
+                    };
+                    let Ok(decoded) = SparseGradient::decode(&payload) else {
+                        return false;
+                    };
+                    if decoded != canon {
+                        return false;
+                    }
+                }
+                true
+            },
+        );
+    }
+
+    #[test]
+    fn coo_nnz_zero_survives_framing() {
+        let s = SparseGradient {
+            n_total: 10,
+            indices: vec![],
+            values: vec![],
+            precision: Precision::F16,
+        };
+        let payload = decode_frame(&encode_frame(&s.encode())).unwrap();
+        assert_eq!(SparseGradient::decode(&payload).unwrap(), s);
+    }
+}

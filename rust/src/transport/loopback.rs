@@ -1,0 +1,195 @@
+//! In-process loopback transport: a full mesh of unbounded channels, one
+//! per ordered peer pair. Deterministic delivery order per peer, no
+//! sockets, no sleeps — the reference implementation tests and benches
+//! compare the real backends against. Payloads still travel as encoded
+//! frames so the codec path is identical to TCP's.
+
+use super::frame::{decode_frame, encode_frame};
+use super::{Transport, TransferObs};
+use crate::util::error::{anyhow, Result};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
+use std::time::{Duration, Instant};
+
+/// One rank's endpoint of an in-process mesh (see
+/// [`LoopbackTransport::mesh`]).
+pub struct LoopbackTransport {
+    rank: usize,
+    n: usize,
+    /// `txs[to]`: channel into peer `to`'s inbox for frames from us.
+    txs: Vec<Option<Sender<Vec<u8>>>>,
+    /// `rxs[from]`: our inbox for frames from peer `from`.
+    rxs: Vec<Option<Receiver<Vec<u8>>>>,
+    obs: Vec<TransferObs>,
+    timeout: Duration,
+}
+
+impl LoopbackTransport {
+    /// Build a fully connected group of `n` endpoints. Hand one to each
+    /// worker thread (endpoints are `Send`, not `Sync`).
+    pub fn mesh(n: usize) -> Vec<LoopbackTransport> {
+        assert!(n >= 1, "empty group");
+        // pairs[from][to]: (sender kept by `from`, receiver kept by `to`).
+        let mut endpoints: Vec<LoopbackTransport> = (0..n)
+            .map(|rank| LoopbackTransport {
+                rank,
+                n,
+                txs: (0..n).map(|_| None).collect(),
+                rxs: (0..n).map(|_| None).collect(),
+                obs: Vec::new(),
+                timeout: Duration::from_secs(30),
+            })
+            .collect();
+        for from in 0..n {
+            for to in 0..n {
+                if from == to {
+                    continue;
+                }
+                let (tx, rx) = channel();
+                endpoints[from].txs[to] = Some(tx);
+                endpoints[to].rxs[from] = Some(rx);
+            }
+        }
+        endpoints
+    }
+
+    /// Replace the blocking-recv timeout (default 30 s).
+    pub fn with_timeout(mut self, timeout: Duration) -> Self {
+        self.timeout = timeout;
+        self
+    }
+}
+
+impl Transport for LoopbackTransport {
+    fn rank(&self) -> usize {
+        self.rank
+    }
+
+    fn group_size(&self) -> usize {
+        self.n
+    }
+
+    fn send(&mut self, to: usize, payload: &[u8]) -> Result<()> {
+        if to >= self.n || to == self.rank {
+            return Err(anyhow!("bad destination rank {to} (self is {})", self.rank));
+        }
+        let t0 = Instant::now();
+        let frame = encode_frame(payload);
+        let bytes = frame.len() as u64;
+        self.txs[to]
+            .as_ref()
+            .ok_or_else(|| anyhow!("transport shut down"))?
+            .send(frame)
+            .map_err(|_| anyhow!("peer {to} hung up"))?;
+        self.obs.push(TransferObs {
+            bytes,
+            elapsed: t0.elapsed(),
+        });
+        Ok(())
+    }
+
+    fn recv(&mut self, from: usize) -> Result<Vec<u8>> {
+        if from >= self.n || from == self.rank {
+            return Err(anyhow!("bad source rank {from} (self is {})", self.rank));
+        }
+        let rx = self.rxs[from]
+            .as_ref()
+            .ok_or_else(|| anyhow!("transport shut down"))?;
+        let frame = match rx.recv_timeout(self.timeout) {
+            Ok(f) => f,
+            Err(RecvTimeoutError::Timeout) => {
+                return Err(anyhow!("recv from rank {from} timed out"));
+            }
+            Err(RecvTimeoutError::Disconnected) => {
+                return Err(anyhow!("peer {from} shut down"));
+            }
+        };
+        decode_frame(&frame)
+    }
+
+    fn take_observations(&mut self) -> Vec<TransferObs> {
+        std::mem::take(&mut self.obs)
+    }
+
+    fn shutdown(&mut self) -> Result<()> {
+        // Dropping the senders signals Disconnected to peers still waiting.
+        for tx in self.txs.iter_mut() {
+            *tx = None;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pairwise_send_recv() {
+        let mut mesh = LoopbackTransport::mesh(3);
+        let mut c = mesh.pop().unwrap();
+        let mut b = mesh.pop().unwrap();
+        let mut a = mesh.pop().unwrap();
+        assert_eq!((a.rank(), b.rank(), c.rank()), (0, 1, 2));
+        assert_eq!(a.group_size(), 3);
+        a.send(1, b"zero to one").unwrap();
+        a.send(2, b"zero to two").unwrap();
+        c.send(1, b"two to one").unwrap();
+        assert_eq!(b.recv(0).unwrap(), b"zero to one");
+        assert_eq!(b.recv(2).unwrap(), b"two to one");
+        assert_eq!(c.recv(0).unwrap(), b"zero to two");
+    }
+
+    #[test]
+    fn per_peer_fifo_order() {
+        let mut mesh = LoopbackTransport::mesh(2);
+        let mut b = mesh.pop().unwrap();
+        let mut a = mesh.pop().unwrap();
+        for i in 0..10u8 {
+            a.send(1, &[i]).unwrap();
+        }
+        for i in 0..10u8 {
+            assert_eq!(b.recv(0).unwrap(), vec![i]);
+        }
+    }
+
+    #[test]
+    fn observations_record_frame_bytes() {
+        let mut mesh = LoopbackTransport::mesh(2);
+        let mut a = mesh.remove(0);
+        a.send(1, &[0u8; 100]).unwrap();
+        a.send(1, &[0u8; 50]).unwrap();
+        let obs = a.take_observations();
+        assert_eq!(obs.len(), 2);
+        assert_eq!(obs[0].bytes, 100 + super::super::FRAME_OVERHEAD);
+        assert_eq!(obs[1].bytes, 50 + super::super::FRAME_OVERHEAD);
+        assert!(a.take_observations().is_empty(), "drained");
+    }
+
+    #[test]
+    fn recv_times_out_instead_of_hanging() {
+        let mut mesh = LoopbackTransport::mesh(2);
+        let mut a = mesh.remove(0).with_timeout(Duration::from_millis(20));
+        let e = a.recv(1).unwrap_err();
+        assert!(format!("{e}").contains("timed out"), "{e}");
+    }
+
+    #[test]
+    fn shutdown_surfaces_as_peer_error() {
+        let mut mesh = LoopbackTransport::mesh(2);
+        let mut b = mesh.pop().unwrap().with_timeout(Duration::from_secs(5));
+        let mut a = mesh.pop().unwrap();
+        a.shutdown().unwrap();
+        drop(a);
+        let e = b.recv(0).unwrap_err();
+        assert!(format!("{e}").contains("shut down"), "{e}");
+    }
+
+    #[test]
+    fn self_and_out_of_range_ranks_rejected() {
+        let mut mesh = LoopbackTransport::mesh(2);
+        let mut a = mesh.remove(0);
+        assert!(a.send(0, b"x").is_err());
+        assert!(a.send(7, b"x").is_err());
+        assert!(a.recv(0).is_err());
+    }
+}

@@ -1,0 +1,137 @@
+//! The transport layer: one seam, two backends — simulated and real.
+//!
+//! Everything the coordinator knows about moving gradient bytes goes
+//! through this module, at two altitudes:
+//!
+//! - [`Transport`] — a *rank-level* endpoint: length-prefixed frame
+//!   send/recv to peers ([`frame`]), with per-transfer `(bytes, elapsed)`
+//!   observations ([`TransferObs`]) for the sensing estimator. Three
+//!   implementations:
+//!   [`LoopbackTransport`](loopback::LoopbackTransport) (in-process
+//!   channels, deterministic, for tests and single-host drills),
+//!   [`TcpTransport`](tcp::TcpTransport) (`std::net` only: full mesh over
+//!   real sockets with a rank-0 rendezvous, one reader thread per peer,
+//!   graceful shutdown), and the token-bucket
+//!   [`ShapedTransport`](shaped::ShapedTransport) wrapper that rate-limits
+//!   any inner transport (rate + burst + optional step schedule, mirroring
+//!   [`crate::netsim::schedule`] so the paper's degrading/fluctuating
+//!   scenarios reproduce on real sockets).
+//! - [`GroupTransport`] — a *group-level* exchange seam: the collective
+//!   operations one synchronization round needs, returning the timing
+//!   observables. [`crate::coordinator::sync`] and the pipelined exchange
+//!   drive this trait instead of calling [`NetSim`](crate::netsim::NetSim)
+//!   directly; the simulator is just one implementation
+//!   ([`sim::SimTransport`], or `NetSim` itself via a blanket impl).
+//!
+//! Real collectives — ring all-gather / all-reduce that move actual bytes
+//! over a [`Transport`] — live in [`collective`]; the live multi-worker
+//! training loop that feeds the [`RatioController`] with *measured* RTTs
+//! is [`crate::experiments::live`] (`netsenseml live` on the CLI).
+//!
+//! [`RatioController`]: crate::sensing::RatioController
+
+pub mod collective;
+pub mod frame;
+pub mod loopback;
+pub mod shaped;
+pub mod sim;
+pub mod tcp;
+
+use crate::collectives::CollectiveTiming;
+use crate::coordinator::pipeline_exchange::{ExchangeTiming, PipelineStage};
+use crate::util::error::Result;
+use std::time::Duration;
+
+pub use collective::{ring_allgather_frames, ring_allreduce_f32, RoundTiming};
+pub use frame::{decode_frame, encode_frame, read_frame, write_frame, FRAME_OVERHEAD};
+pub use loopback::LoopbackTransport;
+pub use shaped::{ShapedTransport, ShapingConfig};
+pub use sim::SimTransport;
+pub use tcp::TcpTransport;
+
+/// One observed transfer: how many wire bytes moved and how long the send
+/// took end-to-end at this endpoint (the only observables a real
+/// deployment has — the paper's §4.1 requirement).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct TransferObs {
+    /// Wire bytes, frame header included.
+    pub bytes: u64,
+    /// Wall-clock duration of the transfer as seen by the sender.
+    pub elapsed: Duration,
+}
+
+/// A rank-level transport endpoint in a fixed-size worker group.
+///
+/// Framing, delivery order per peer, and reliability are the
+/// implementation's job; callers see whole payloads. Implementations
+/// record a [`TransferObs`] per send so the sensing layer can estimate
+/// bandwidth from real transfers ([`Transport::take_observations`]).
+pub trait Transport: Send {
+    /// This endpoint's rank in `[0, group_size)`.
+    fn rank(&self) -> usize;
+
+    /// Number of ranks in the group.
+    fn group_size(&self) -> usize;
+
+    /// Send one payload to `to` as a length-prefixed frame. Blocks until
+    /// the frame is handed to the wire (which, under backpressure or
+    /// shaping, is where transfer time becomes observable).
+    fn send(&mut self, to: usize, payload: &[u8]) -> Result<()>;
+
+    /// Receive the next payload from `from` (blocking, with an
+    /// implementation timeout so a dead peer errors instead of hanging).
+    fn recv(&mut self, from: usize) -> Result<Vec<u8>>;
+
+    /// Drain the `(bytes, elapsed)` observations recorded since the last
+    /// call — the sensing estimator's feed.
+    fn take_observations(&mut self) -> Vec<TransferObs>;
+
+    /// Graceful teardown: close peer connections and join any helper
+    /// threads. Idempotent.
+    fn shutdown(&mut self) -> Result<()>;
+}
+
+/// The group-level exchange seam the coordinator drives: one object stands
+/// for the whole worker group and performs a round's collective byte
+/// movement, reporting its timing. All byte movement in
+/// [`crate::coordinator::sync::SyncEngine`] goes through this trait — the
+/// simulator ([`crate::netsim::NetSim`] / [`sim::SimTransport`]) is an
+/// implementation detail behind it.
+pub trait GroupTransport {
+    /// Number of workers in the group.
+    fn group_size(&self) -> usize;
+
+    /// Dense ring all-reduce of `dense_bytes` per worker.
+    fn allreduce(&mut self, dense_bytes: u64) -> CollectiveTiming;
+
+    /// Ring all-gather of per-worker payloads (sizes may differ).
+    fn allgather(&mut self, payload_bytes: &[u64]) -> CollectiveTiming;
+
+    /// The bucketed pipelined exchange: stages compress sequentially and
+    /// enter a barrier-free staged all-gather as the `depth` window allows
+    /// ([`crate::coordinator::pipeline_exchange`]).
+    fn pipelined(&mut self, stages: &[PipelineStage], depth: usize) -> ExchangeTiming;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::netsim::schedule::mbps;
+    use crate::netsim::topology::StarTopology;
+    use crate::netsim::{NetSim, SimTime};
+
+    #[test]
+    fn netsim_coerces_to_group_transport_object() {
+        // The coordinator takes `&mut dyn GroupTransport`; a bare NetSim
+        // must coerce (that is what keeps every existing call site valid).
+        let mut sim = NetSim::quiet(StarTopology::constant(
+            4,
+            mbps(100.0),
+            SimTime::from_millis(1),
+        ));
+        let net: &mut dyn GroupTransport = &mut sim;
+        assert_eq!(net.group_size(), 4);
+        let t = net.allgather(&[1000, 2000, 3000, 4000]);
+        assert!(t.elapsed() > SimTime::ZERO);
+    }
+}

@@ -1,0 +1,378 @@
+//! Token-bucket shaping for any [`Transport`] — the real-socket analogue
+//! of [`crate::netsim::schedule::BandwidthSchedule`]'s link shaping, so the
+//! paper's degrading/fluctuating scenarios can be reproduced over localhost
+//! TCP with nothing but wall-clock sleeps.
+//!
+//! Every outgoing frame spends tokens equal to its wire size; tokens refill
+//! at the configured rate (integrated piecewise across schedule steps) up
+//! to `burst_bytes`. A send that finds the bucket short sleeps for exactly
+//! the deficit, which is what makes the *measured* transfer time — the only
+//! observable the sensing stack is allowed ([`TransferObs`]) — reflect the
+//! shaped rate.
+
+use super::{Transport, TransferObs};
+use crate::util::error::Result;
+use std::time::{Duration, Instant};
+
+/// Rate-limit configuration (`[transport]` table in config TOML).
+#[derive(Clone, Debug, PartialEq)]
+pub struct ShapingConfig {
+    /// Steady token refill rate, bytes per second.
+    pub rate_bytes_per_sec: f64,
+    /// Bucket capacity: how many bytes may burst through at line rate.
+    pub burst_bytes: f64,
+    /// Optional rate steps: `(seconds since transport creation, bytes/s)`,
+    /// sorted by offset — the step-schedule mirror of
+    /// [`crate::netsim::schedule::BandwidthSchedule::piecewise`].
+    pub schedule: Vec<(f64, f64)>,
+    /// Propagation-delay floor per send, seconds: every frame takes at
+    /// least this long regardless of tokens (the link-emulation analogue
+    /// of [`crate::netsim::link::LinkConfig`]'s prop delay — it is what
+    /// gives the sensing loop a meaningful RTprop over loopback).
+    pub prop_delay_s: f64,
+}
+
+impl ShapingConfig {
+    /// Constant rate with a default one-frame-ish burst and no delay floor.
+    pub fn constant(rate_bytes_per_sec: f64) -> ShapingConfig {
+        ShapingConfig {
+            rate_bytes_per_sec,
+            burst_bytes: 64.0 * 1024.0,
+            schedule: Vec::new(),
+            prop_delay_s: 0.0,
+        }
+    }
+
+    /// Validate rates, burst, and schedule monotonicity.
+    pub fn validate(&self) -> std::result::Result<(), String> {
+        if !(self.rate_bytes_per_sec > 0.0) || !self.rate_bytes_per_sec.is_finite() {
+            return Err(format!("shaping rate must be positive, got {}", self.rate_bytes_per_sec));
+        }
+        if !(self.burst_bytes >= 0.0) || !self.burst_bytes.is_finite() {
+            return Err(format!("shaping burst must be ≥ 0, got {}", self.burst_bytes));
+        }
+        if !(self.prop_delay_s >= 0.0) || !self.prop_delay_s.is_finite() {
+            return Err(format!("shaping prop delay must be ≥ 0, got {}", self.prop_delay_s));
+        }
+        let mut last = 0.0f64;
+        for &(at, rate) in &self.schedule {
+            if at < last {
+                return Err(format!("shaping schedule offsets must be ascending (at {at})"));
+            }
+            if !(rate > 0.0) || !rate.is_finite() {
+                return Err(format!("shaping schedule rate must be positive, got {rate}"));
+            }
+            last = at;
+        }
+        Ok(())
+    }
+
+    /// The rate in force `elapsed` seconds after creation.
+    pub fn rate_at(&self, elapsed: f64) -> f64 {
+        let mut rate = self.rate_bytes_per_sec;
+        for &(at, r) in &self.schedule {
+            if elapsed >= at {
+                rate = r;
+            } else {
+                break;
+            }
+        }
+        rate
+    }
+
+    /// Tokens accrued over `[t0, t1]` (seconds since creation), integrated
+    /// piecewise across schedule steps.
+    fn tokens_earned(&self, t0: f64, t1: f64) -> f64 {
+        let mut total = 0.0;
+        let mut t = t0;
+        while t < t1 {
+            let rate = self.rate_at(t);
+            let next_step = self
+                .schedule
+                .iter()
+                .map(|&(at, _)| at)
+                .find(|&at| at > t)
+                .unwrap_or(f64::INFINITY);
+            let seg_end = t1.min(next_step);
+            total += rate * (seg_end - t);
+            t = seg_end;
+        }
+        total
+    }
+}
+
+/// A [`Transport`] wrapper that rate-limits sends with a token bucket.
+pub struct ShapedTransport<T: Transport> {
+    inner: T,
+    config: ShapingConfig,
+    tokens: f64,
+    /// Seconds since `t0` at which `tokens` was last brought current.
+    refilled_at: f64,
+    t0: Instant,
+    obs: Vec<TransferObs>,
+}
+
+impl<T: Transport> ShapedTransport<T> {
+    pub fn new(inner: T, config: ShapingConfig) -> ShapedTransport<T> {
+        assert!(config.validate().is_ok(), "invalid shaping config");
+        ShapedTransport {
+            inner,
+            // Start with a full burst allowance.
+            tokens: config.burst_bytes,
+            refilled_at: 0.0,
+            t0: Instant::now(),
+            config,
+            obs: Vec::new(),
+        }
+    }
+
+    pub fn config(&self) -> &ShapingConfig {
+        &self.config
+    }
+
+    pub fn inner(&self) -> &T {
+        &self.inner
+    }
+
+    fn refill(&mut self, now: f64) {
+        let earned = self.config.tokens_earned(self.refilled_at, now);
+        self.tokens = (self.tokens + earned).min(self.config.burst_bytes.max(0.0));
+        self.refilled_at = now;
+    }
+
+    /// Spend `cost` tokens, sleeping off any deficit before returning.
+    /// The bucket may go negative (cost > burst): an oversized frame
+    /// borrows against future refill and pays the debt down inside this
+    /// call, exactly like a big message serializing on a slow link.
+    fn acquire(&mut self, cost: f64) {
+        let now = self.t0.elapsed().as_secs_f64();
+        self.refill(now);
+        self.tokens -= cost;
+        while self.tokens < 0.0 {
+            let now = self.t0.elapsed().as_secs_f64();
+            let deficit = -self.tokens;
+            let rate = self.config.rate_at(now);
+            // Sleep at most to the next schedule step, where the rate
+            // (and with it the remaining wait) changes.
+            let next_step = self
+                .config
+                .schedule
+                .iter()
+                .map(|&(at, _)| at)
+                .find(|&at| at > now)
+                .unwrap_or(f64::INFINITY);
+            let wait = (deficit / rate).min((next_step - now).max(1e-4));
+            std::thread::sleep(Duration::from_secs_f64(wait.clamp(1e-4, 1.0)));
+            self.refill(self.t0.elapsed().as_secs_f64());
+        }
+    }
+}
+
+impl<T: Transport> Transport for ShapedTransport<T> {
+    fn rank(&self) -> usize {
+        self.inner.rank()
+    }
+
+    fn group_size(&self) -> usize {
+        self.inner.group_size()
+    }
+
+    fn send(&mut self, to: usize, payload: &[u8]) -> Result<()> {
+        let bytes = payload.len() as u64 + super::FRAME_OVERHEAD;
+        let t0 = Instant::now();
+        self.acquire(bytes as f64);
+        // Propagation floor: pad the transfer up to the configured delay
+        // (before the inner send, so the receiver is held back too).
+        let spent = t0.elapsed().as_secs_f64();
+        if spent < self.config.prop_delay_s {
+            std::thread::sleep(Duration::from_secs_f64(self.config.prop_delay_s - spent));
+        }
+        self.inner.send(to, payload)?;
+        self.obs.push(TransferObs {
+            bytes,
+            elapsed: t0.elapsed(),
+        });
+        Ok(())
+    }
+
+    fn recv(&mut self, from: usize) -> Result<Vec<u8>> {
+        self.inner.recv(from)
+    }
+
+    /// The wrapper's observations (which include shaping delay) supersede
+    /// the inner transport's; the inner log is drained and dropped so
+    /// transfers are not double-counted.
+    fn take_observations(&mut self) -> Vec<TransferObs> {
+        let _ = self.inner.take_observations();
+        std::mem::take(&mut self.obs)
+    }
+
+    fn shutdown(&mut self) -> Result<()> {
+        self.inner.shutdown()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sensing::{BandwidthEstimator, EstimatorConfig};
+    use crate::netsim::SimTime;
+    use crate::transport::LoopbackTransport;
+
+    fn shaped_pair(cfg: ShapingConfig) -> (ShapedTransport<LoopbackTransport>, LoopbackTransport) {
+        let mut mesh = LoopbackTransport::mesh(2);
+        let b = mesh.pop().unwrap();
+        let a = mesh.pop().unwrap();
+        (ShapedTransport::new(a, cfg), b)
+    }
+
+    #[test]
+    fn throughput_converges_to_configured_rate() {
+        // 2 MB/s with a small burst: 20 × 20 kB ≈ 400 kB must take
+        // ≈ 0.2 s. Tolerance is wide for CI scheduling noise (sleep
+        // overshoot only ever slows the shaped path down), but the band
+        // still rules out an unshaped (GB/s) or doubly-shaped link.
+        let rate = 2e6;
+        let cfg = ShapingConfig {
+            rate_bytes_per_sec: rate,
+            burst_bytes: 4096.0,
+            schedule: vec![],
+            prop_delay_s: 0.0,
+        };
+        let (mut a, mut b) = shaped_pair(cfg);
+        let payload = vec![0u8; 20_000];
+        let n = 20;
+        let t0 = Instant::now();
+        for _ in 0..n {
+            a.send(1, &payload).unwrap();
+            b.recv(0).unwrap();
+        }
+        let elapsed = t0.elapsed().as_secs_f64();
+        let sent = n as f64 * (payload.len() as f64 + super::super::FRAME_OVERHEAD as f64);
+        let measured = sent / elapsed;
+        assert!(
+            (0.4 * rate..1.6 * rate).contains(&measured),
+            "measured {measured:.0} B/s vs configured {rate:.0} B/s"
+        );
+    }
+
+    #[test]
+    fn sensed_btlbw_tracks_a_rate_step_within_one_window() {
+        // Step the shaped rate down 8 MB/s → 1 MB/s mid-run; the estimator
+        // fed with the wrapper's own (bytes, elapsed) observations must
+        // follow within one BtlBw window of observations after the step.
+        let hi = 8e6;
+        let lo = 1e6;
+        let window = 5;
+        let cfg = ShapingConfig {
+            rate_bytes_per_sec: hi,
+            burst_bytes: 1024.0, // smaller than a frame: every send is paced
+            schedule: vec![(0.0, hi), (0.15, lo)],
+            prop_delay_s: 0.0,
+        };
+        let (mut a, mut b) = shaped_pair(cfg);
+        let mut est = BandwidthEstimator::new(EstimatorConfig {
+            btlbw_window: window,
+            rtprop_window: 1000,
+        });
+        let payload = vec![0u8; 20_000]; // 2.5 ms at hi, 20 ms at lo
+        // Collect window + 2 post-step samples so the send that straddles
+        // the step itself has aged out of the max-filter window.
+        let mut after_step = 0;
+        while after_step < window + 2 {
+            a.send(1, &payload).unwrap();
+            b.recv(0).unwrap();
+            if a.t0.elapsed().as_secs_f64() > 0.15 {
+                after_step += 1;
+            }
+        }
+        for o in a.take_observations() {
+            let rtt = SimTime::from_secs_f64(o.elapsed.as_secs_f64().max(1e-6));
+            est.observe(o.bytes, rtt);
+        }
+        let sensed = est.estimate().unwrap().btlbw_bytes_per_sec;
+        // Within one window of the step, the high-rate samples have aged
+        // out: the sensed bandwidth must be near `lo`, far from `hi`.
+        assert!(
+            sensed < (hi + lo) / 2.0,
+            "sensed {sensed:.0} B/s still near pre-step rate {hi:.0}"
+        );
+        assert!(
+            sensed > 0.3 * lo && sensed < 3.0 * lo,
+            "sensed {sensed:.0} B/s vs stepped-down rate {lo:.0}"
+        );
+    }
+
+    #[test]
+    fn burst_allows_initial_line_rate() {
+        // A burst larger than the whole workload: sends are effectively
+        // unshaped (no sleeps), so this must finish almost instantly.
+        let cfg = ShapingConfig {
+            rate_bytes_per_sec: 1.0, // 1 B/s steady — only the burst moves bytes
+            burst_bytes: 1e6,
+            schedule: vec![],
+            prop_delay_s: 0.0,
+        };
+        let (mut a, mut b) = shaped_pair(cfg);
+        let t0 = Instant::now();
+        for _ in 0..10 {
+            a.send(1, &[0u8; 10_000]).unwrap();
+            b.recv(0).unwrap();
+        }
+        assert!(t0.elapsed() < Duration::from_millis(500));
+    }
+
+    #[test]
+    fn schedule_validation_rejects_nonsense() {
+        assert!(ShapingConfig::constant(0.0).validate().is_err());
+        assert!(ShapingConfig {
+            rate_bytes_per_sec: 1e6,
+            burst_bytes: -1.0,
+            schedule: vec![],
+            prop_delay_s: 0.0,
+        }
+        .validate()
+        .is_err());
+        assert!(ShapingConfig {
+            rate_bytes_per_sec: 1e6,
+            burst_bytes: 0.0,
+            schedule: vec![(5.0, 1e6), (1.0, 2e6)], // out of order
+            prop_delay_s: 0.0,
+        }
+        .validate()
+        .is_err());
+        assert!(ShapingConfig {
+            rate_bytes_per_sec: 1e6,
+            burst_bytes: 0.0,
+            schedule: vec![(0.0, 1e6), (1.0, -2.0)], // negative rate
+            prop_delay_s: 0.0,
+        }
+        .validate()
+        .is_err());
+        assert!(ShapingConfig {
+            rate_bytes_per_sec: 1e6,
+            burst_bytes: 0.0,
+            schedule: vec![],
+            prop_delay_s: -0.5, // negative delay floor
+        }
+        .validate()
+        .is_err());
+    }
+
+    #[test]
+    fn rate_at_follows_schedule() {
+        let cfg = ShapingConfig {
+            rate_bytes_per_sec: 10.0,
+            burst_bytes: 0.0,
+            schedule: vec![(1.0, 20.0), (2.0, 5.0)],
+            prop_delay_s: 0.0,
+        };
+        assert_eq!(cfg.rate_at(0.5), 10.0);
+        assert_eq!(cfg.rate_at(1.0), 20.0);
+        assert_eq!(cfg.rate_at(1.99), 20.0);
+        assert_eq!(cfg.rate_at(100.0), 5.0);
+        // Piecewise integral across both steps: 1 s at 10 + 1 s at 20 +
+        // 2 s at 5.
+        assert!((cfg.tokens_earned(0.0, 4.0) - 40.0).abs() < 1e-9);
+    }
+}

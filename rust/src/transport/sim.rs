@@ -1,0 +1,167 @@
+//! The simulated backend of the [`GroupTransport`] seam.
+//!
+//! Two forms, same semantics:
+//!
+//! - a blanket `impl GroupTransport for NetSim` — every existing call site
+//!   that hands the coordinator a `&mut NetSim` keeps working, but the
+//!   byte movement now flows through the trait (the coordinator no longer
+//!   names `NetSim` in its sync path);
+//! - [`SimTransport`], an owning adapter that additionally records the
+//!   per-exchange `(bytes, rtt)` observations — the virtual-clock mirror
+//!   of what the rank-level transports log with
+//!   [`Transport::take_observations`](super::Transport::take_observations).
+
+use super::{GroupTransport, TransferObs};
+use crate::collectives::{ring_allgather, ring_allreduce, CollectiveTiming};
+use crate::coordinator::pipeline_exchange::{pipelined_exchange, ExchangeTiming, PipelineStage};
+use crate::netsim::{NetSim, SimTime};
+use std::time::Duration;
+
+impl GroupTransport for NetSim {
+    fn group_size(&self) -> usize {
+        self.topology.n_workers()
+    }
+
+    fn allreduce(&mut self, dense_bytes: u64) -> CollectiveTiming {
+        ring_allreduce(self, dense_bytes)
+    }
+
+    fn allgather(&mut self, payload_bytes: &[u64]) -> CollectiveTiming {
+        ring_allgather(self, payload_bytes)
+    }
+
+    fn pipelined(&mut self, stages: &[PipelineStage], depth: usize) -> ExchangeTiming {
+        pipelined_exchange(self, stages, depth)
+    }
+}
+
+/// Owning [`GroupTransport`] over a [`NetSim`] that keeps an observation
+/// log: one `(max payload bytes, network elapsed)` record per exchange —
+/// the same observable stream the live transports produce, read off the
+/// virtual clock instead of a wall clock.
+pub struct SimTransport {
+    sim: NetSim,
+    obs: Vec<TransferObs>,
+}
+
+impl SimTransport {
+    pub fn new(sim: NetSim) -> SimTransport {
+        SimTransport {
+            sim,
+            obs: Vec::new(),
+        }
+    }
+
+    /// The wrapped simulator (e.g. to advance compute time between
+    /// rounds).
+    pub fn sim_mut(&mut self) -> &mut NetSim {
+        &mut self.sim
+    }
+
+    pub fn into_inner(self) -> NetSim {
+        self.sim
+    }
+
+    /// Drain the per-exchange observations recorded so far.
+    pub fn take_observations(&mut self) -> Vec<TransferObs> {
+        std::mem::take(&mut self.obs)
+    }
+
+    fn record(&mut self, bytes: u64, elapsed: SimTime) {
+        self.obs.push(TransferObs {
+            bytes,
+            elapsed: Duration::from_nanos(elapsed.as_nanos()),
+        });
+    }
+}
+
+impl GroupTransport for SimTransport {
+    fn group_size(&self) -> usize {
+        self.sim.topology.n_workers()
+    }
+
+    fn allreduce(&mut self, dense_bytes: u64) -> CollectiveTiming {
+        let t = self.sim.allreduce(dense_bytes);
+        self.record(dense_bytes, t.elapsed());
+        t
+    }
+
+    fn allgather(&mut self, payload_bytes: &[u64]) -> CollectiveTiming {
+        let t = self.sim.allgather(payload_bytes);
+        let max = payload_bytes.iter().copied().max().unwrap_or(0);
+        self.record(max, t.elapsed());
+        t
+    }
+
+    fn pipelined(&mut self, stages: &[PipelineStage], depth: usize) -> ExchangeTiming {
+        let t = self.sim.pipelined(stages, depth);
+        let max: u64 = (0..self.sim.topology.n_workers())
+            .map(|w| stages.iter().map(|s| s.payload_bytes[w]).sum::<u64>())
+            .max()
+            .unwrap_or(0);
+        self.record(max, t.net_elapsed());
+        t
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::netsim::schedule::mbps;
+    use crate::netsim::topology::StarTopology;
+
+    fn sim(n: usize, bw: f64) -> NetSim {
+        NetSim::quiet(StarTopology::constant(n, mbps(bw), SimTime::from_millis(5)))
+    }
+
+    #[test]
+    fn netsim_impl_matches_direct_collectives() {
+        let payloads = vec![500_000u64, 1_000_000, 750_000, 250_000];
+        let mut a = sim(4, 100.0);
+        let mut b = sim(4, 100.0);
+        let via_trait = GroupTransport::allgather(&mut a, &payloads);
+        let direct = ring_allgather(&mut b, &payloads);
+        assert_eq!(via_trait, direct);
+
+        let mut a = sim(4, 100.0);
+        let mut b = sim(4, 100.0);
+        assert_eq!(
+            GroupTransport::allreduce(&mut a, 4_000_000),
+            ring_allreduce(&mut b, 4_000_000)
+        );
+    }
+
+    #[test]
+    fn sim_transport_records_observations() {
+        let mut t = SimTransport::new(sim(4, 100.0));
+        assert_eq!(t.group_size(), 4);
+        t.allgather(&[100_000, 300_000, 200_000, 50_000]);
+        t.allreduce(1_000_000);
+        let obs = t.take_observations();
+        assert_eq!(obs.len(), 2);
+        assert_eq!(obs[0].bytes, 300_000); // max payload
+        assert_eq!(obs[1].bytes, 1_000_000);
+        assert!(obs.iter().all(|o| o.elapsed > Duration::ZERO));
+        assert!(t.take_observations().is_empty());
+    }
+
+    #[test]
+    fn sim_transport_pipelined_records_net_elapsed() {
+        let stages: Vec<PipelineStage> = (0..3)
+            .map(|_| PipelineStage {
+                payload_bytes: vec![400_000; 4],
+                compress_time: SimTime::from_millis(50),
+            })
+            .collect();
+        let mut t = SimTransport::new(sim(4, 100.0));
+        let x = t.pipelined(&stages, 2);
+        let obs = t.take_observations();
+        assert_eq!(obs.len(), 1);
+        assert_eq!(obs[0].bytes, 3 * 400_000);
+        // The observation is the network portion, not the whole exchange.
+        assert_eq!(
+            obs[0].elapsed,
+            Duration::from_nanos(x.net_elapsed().as_nanos())
+        );
+    }
+}
