@@ -1,5 +1,5 @@
 # Entry points referenced by the docs and code comments.
-.PHONY: artifacts verify bench-transport
+.PHONY: artifacts verify bench-transport bench-json
 
 # AOT-lower the JAX/Pallas models (L1+L2) to HLO text artifacts consumed by
 # the rust runtime (`--features pjrt`). Needs JAX; run once, never on the
@@ -16,3 +16,11 @@ verify:
 # the measurement windows for CI.
 bench-transport:
 	cargo bench --bench bench_transport
+
+# Machine-readable perf baselines: writes BENCH_compress.json (fused vs
+# staged throughput, allocs/step, parallel bucket scaling) and
+# BENCH_pipeline.json (pipelined vs monolithic exchange) at the repo root.
+# NETSENSE_BENCH_FAST=1 shrinks the measurement windows for CI.
+bench-json:
+	cargo bench --bench bench_compress
+	cargo bench --bench bench_pipeline

@@ -1,12 +1,28 @@
-//! Compression hot-path benchmarks (the L3 §Perf targets): top-k selection
-//! on paper-scale tensors, quantization, sparse codec, and the full
-//! Algorithm-2 pipeline. Run: `cargo bench --bench bench_compress`.
+//! Compression hot-path benchmarks (the L3 §Perf targets): the fused
+//! zero-copy gradient→wire path vs the staged reference
+//! (compress → encode → encode_frame), parallel per-bucket compression
+//! scaling, allocs-per-step, and the original micro-benchmarks (top-k,
+//! quantization, sparse codec). Emits the machine-readable baseline
+//! `BENCH_compress.json` at the repo root (`make bench-json`).
+//! Run: `cargo bench --bench bench_compress`.
 
+mod common;
+
+use common::{gbps, BenchJson};
+use netsenseml::compress::bucket::{BucketLayout, BucketedCompressor};
 use netsenseml::compress::quantize::{f32_to_f16_bits, Precision};
 use netsenseml::compress::topk::{top_k_indices, top_k_with_threshold_hint};
-use netsenseml::compress::{CompressionConfig, NetSenseCompressor, SparseGradient};
+use netsenseml::compress::{
+    CompressionConfig, NetSenseCompressor, SparseGradient, Workspace, WorkspacePool,
+};
+use netsenseml::testing::alloc::{thread_alloc_count, CountingAlloc};
+use netsenseml::transport::frame::encode_frame;
 use netsenseml::util::bench::{bb, Bench};
 use netsenseml::util::rng::Pcg64;
+
+// Count allocations so the baseline records allocs/step for both paths.
+#[global_allocator]
+static ALLOC: CountingAlloc = CountingAlloc;
 
 fn randn(n: usize, seed: u64) -> Vec<f32> {
     let mut r = Pcg64::seeded(seed);
@@ -15,23 +31,133 @@ fn randn(n: usize, seed: u64) -> Vec<f32> {
     v
 }
 
+/// One staged reference step: Algorithm 2 → COO encode → transport frame.
+fn staged_step(c: &mut NetSenseCompressor, g: &[f32], w: &[f32], ratio: f64) -> Vec<u8> {
+    let out = c.compress(g, w, ratio);
+    encode_frame(&out.payload.encode())
+}
+
+/// Mean allocations per call of `step` after a short warmup.
+fn allocs_per_step(mut step: impl FnMut()) -> u64 {
+    for _ in 0..3 {
+        step();
+    }
+    let before = thread_alloc_count();
+    let iters = 5u64;
+    for _ in 0..iters {
+        step();
+    }
+    (thread_alloc_count() - before) / iters
+}
+
 fn main() {
     let mut b = Bench::new();
+    let mut json = BenchJson::new("compress");
+
+    // ---- fused vs staged gradient→wire, 1M and 10M elements ------------
+    for &(n, tag) in &[(1_000_000usize, "1m"), (10_000_000usize, "10m")] {
+        let g = randn(n, 1);
+        let w = randn(n, 2);
+        b.group(&format!("Algorithm 2 → wire frame ({tag} elems, ratio 0.1)"));
+
+        let mut staged_c = NetSenseCompressor::new(n, CompressionConfig::default());
+        let staged = b
+            .run_throughput("staged compress→encode→frame", n as u64, || {
+                bb(staged_step(&mut staged_c, bb(&g), bb(&w), 0.1));
+            })
+            .clone();
+
+        let mut fused_c = NetSenseCompressor::new(n, CompressionConfig::default());
+        let mut ws = Workspace::with_capacity(n);
+        let mut wire: Vec<u8> = Vec::new();
+        let fused = b
+            .run_throughput("fused compress_frame_into", n as u64, || {
+                wire.clear();
+                bb(fused_c.compress_frame_into(bb(&g), bb(&w), 0.1, &mut ws, &mut wire));
+            })
+            .clone();
+
+        let speedup = staged.mean.as_secs_f64() / fused.mean.as_secs_f64();
+        eprintln!("  fused vs staged speedup ({tag}): {speedup:.2}x");
+        json.set(&format!("staged_gbps_{tag}"), gbps(n, staged.mean));
+        json.set(&format!("fused_gbps_{tag}"), gbps(n, fused.mean));
+        json.set(&format!("fused_vs_staged_speedup_{tag}"), speedup);
+
+        if tag == "10m" {
+            let mut c1 = NetSenseCompressor::new(n, CompressionConfig::default());
+            let staged_allocs = allocs_per_step(|| {
+                bb(staged_step(&mut c1, &g, &w, 0.1));
+            });
+            let mut c2 = NetSenseCompressor::new(n, CompressionConfig::default());
+            let mut ws2 = Workspace::with_capacity(n);
+            let mut wire2: Vec<u8> = Vec::new();
+            let fused_allocs = allocs_per_step(|| {
+                wire2.clear();
+                bb(c2.compress_frame_into(&g, &w, 0.1, &mut ws2, &mut wire2));
+            });
+            eprintln!("  allocs/step: staged {staged_allocs}, fused {fused_allocs}");
+            json.set("allocs_per_step_staged", staged_allocs);
+            json.set("allocs_per_step_fused", fused_allocs);
+        }
+    }
+
+    // ---- parallel per-bucket compression --------------------------------
+    {
+        let n = 10_000_000usize;
+        let g = randn(n, 3);
+        let w = randn(n, 4);
+        let layout = BucketLayout::new(n, 1 << 20); // 4 MB dense buckets
+        let n_buckets = layout.n_buckets();
+        let threads = std::thread::available_parallelism()
+            .map(|p| p.get())
+            .unwrap_or(1);
+        b.group("parallel per-bucket compression (10M elems, 4MB buckets, ratio 0.1)");
+
+        let mut bc1 = BucketedCompressor::new(layout.clone(), CompressionConfig::default());
+        let mut pool1 = WorkspacePool::new(1);
+        let serial = b
+            .run_throughput("pool=1 (inline, no spawns)", n as u64, || {
+                bb(bc1.compress_frames(bb(&g), bb(&w), 0.1, &mut pool1));
+            })
+            .clone();
+
+        let mut bcn = BucketedCompressor::new(layout, CompressionConfig::default());
+        let mut pooln = WorkspacePool::with_available_parallelism();
+        let par = b
+            .run_throughput(
+                &format!("pool={threads} (scoped threads)"),
+                n as u64,
+                || {
+                    bb(bcn.compress_frames(bb(&g), bb(&w), 0.1, &mut pooln));
+                },
+            )
+            .clone();
+
+        let scaling = serial.mean.as_secs_f64() / par.mean.as_secs_f64();
+        eprintln!("  parallel speedup at {threads} threads / {n_buckets} buckets: {scaling:.2}x");
+        json.set("parallel_threads", threads as u64);
+        json.set("parallel_buckets", n_buckets as u64);
+        json.set("parallel_gbps_pool1", gbps(n, serial.mean));
+        json.set("parallel_gbps", gbps(n, par.mean));
+        json.set("parallel_speedup", scaling);
+    }
+
+    // ---- original micro-benchmarks (ResNet18-size) ----------------------
     let n = 11_550_000; // ResNet18
     let g = randn(n, 1);
     let w = randn(n, 2);
 
     b.group("topk (11.55M elems, ResNet18-size)");
-    b.run_throughput("exact quickselect k=1%", n as u64, || {
-        bb(top_k_indices(bb(&g), n / 100));
-    });
+    let topk = b
+        .run_throughput("exact quickselect k=1%", n as u64, || {
+            bb(top_k_indices(bb(&g), n / 100));
+        })
+        .clone();
+    json.set("topk_exact_melem_per_s", topk.throughput_per_sec().unwrap_or(0.0) / 1e6);
     // Steady-state: reuse last step's threshold.
     let (_, kth) = top_k_with_threshold_hint(&g, n / 100, None, 0.25);
     b.run_throughput("threshold-reuse k=1%", n as u64, || {
         bb(top_k_with_threshold_hint(bb(&g), n / 100, Some(kth), 0.25));
-    });
-    b.run_throughput("exact quickselect k=10%", n as u64, || {
-        bb(top_k_indices(bb(&g), n / 10));
     });
 
     b.group("quantize");
@@ -46,8 +172,10 @@ fn main() {
     b.group("sparse codec (k = 115k)");
     let idx = top_k_indices(&g, n / 100);
     let sg = SparseGradient::gather(&g, idx, Precision::F32);
-    b.run_throughput("encode", sg.nnz() as u64, || {
-        bb(sg.encode());
+    let mut enc_buf = Vec::new();
+    b.run_throughput("encode_into (reused buffer)", sg.nnz() as u64, || {
+        enc_buf.clear();
+        sg.encode_into(bb(&mut enc_buf));
     });
     let wire = sg.encode();
     b.run_throughput("decode", sg.nnz() as u64, || {
@@ -58,7 +186,7 @@ fn main() {
         sg.add_into(bb(&mut acc_buf));
     });
 
-    b.group("Algorithm 2 pipeline (ResNet18-size)");
+    b.group("Algorithm 2 staged pipeline (ResNet18-size)");
     let mut c = NetSenseCompressor::new(n, CompressionConfig::default());
     b.run_throughput("compress ratio=0.01 (steady)", n as u64, || {
         bb(c.compress(bb(&g), bb(&w), 0.01));
@@ -69,4 +197,5 @@ fn main() {
     });
 
     b.finish();
+    json.write();
 }

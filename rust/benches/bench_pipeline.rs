@@ -2,15 +2,20 @@
 //! study (fluctuating-bandwidth scenario, ResNet18 payloads) in fast mode
 //! and reports the wall time. The virtual-time table itself is the
 //! artifact: pipelined schedules must beat the monolithic
-//! compress-then-send baseline. Full-scale table: `netsenseml repro
-//! pipeline`.
+//! compress-then-send baseline. Also emits the machine-readable
+//! `BENCH_pipeline.json` baseline (`make bench-json`). Full-scale table:
+//! `netsenseml repro pipeline`.
 
+mod common;
+
+use common::BenchJson;
 use netsenseml::experiments::pipelined::pipeline_overlap;
 use netsenseml::experiments::scenario::RunOpts;
 use netsenseml::util::bench::{bb, Bench};
 
 fn main() {
     let mut b = Bench::new();
+    let mut json = BenchJson::new("pipeline");
     let opts = RunOpts {
         fast: true,
         out_dir: None,
@@ -19,17 +24,32 @@ fn main() {
         fidelity_every: 0,
     };
     b.group("Pipelined vs monolithic exchange (fluctuating bandwidth)");
-    b.run_once("pipeline overlap study (fast mode)", || {
-        let (table, result) = pipeline_overlap(&opts);
-        bb(table).print();
-        let mono = &result.variants[0];
-        for v in &result.variants[1..] {
-            let verdict = if v.total_s < mono.total_s { "faster" } else { "SLOWER" };
-            eprintln!(
-                "  {}: {:.3}s vs monolithic {:.3}s ({:.3}x, {verdict})",
-                v.label, v.total_s, mono.total_s, v.speedup
-            );
-        }
-    });
+    let mut captured = None;
+    let wall = b
+        .run_once("pipeline overlap study (fast mode)", || {
+            let (table, result) = pipeline_overlap(&opts);
+            bb(table).print();
+            captured = Some(result);
+        })
+        .clone();
     b.finish();
+
+    let result = captured.expect("pipeline_overlap ran");
+    let mono = &result.variants[0];
+    json.set("wall_s", wall.mean.as_secs_f64());
+    json.set("monolithic_total_s", mono.total_s);
+    let mut best = 1.0f64;
+    for (i, v) in result.variants[1..].iter().enumerate() {
+        let verdict = if v.total_s < mono.total_s { "faster" } else { "SLOWER" };
+        eprintln!(
+            "  {}: {:.3}s vs monolithic {:.3}s ({:.3}x, {verdict})",
+            v.label, v.total_s, mono.total_s, v.speedup
+        );
+        json.set(&format!("variant_{i}_label"), v.label.as_str());
+        json.set(&format!("variant_{i}_total_s"), v.total_s);
+        json.set(&format!("variant_{i}_speedup"), v.speedup);
+        best = best.max(v.speedup);
+    }
+    json.set("best_pipelined_speedup", best);
+    json.write();
 }

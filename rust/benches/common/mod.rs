@@ -1,0 +1,68 @@
+//! Shared machine-readable bench reporting: each bench binary records its
+//! headline metrics here and writes one `BENCH_<name>.json` at the repo
+//! root — the perf-trajectory artifact `make bench-json` produces and CI
+//! regenerates on every run (EXPERIMENTS.md "Perf baselines").
+//!
+//! Kept deliberately tiny: a flat string→number/string map on top of
+//! [`netsenseml::util::json`], no schema machinery. Consumers diff fields
+//! across commits; adding a field is always safe, renaming one is not.
+
+// Each bench binary compiles its own copy and uses a subset of helpers.
+#![allow(dead_code)]
+
+use netsenseml::util::json::Json;
+use std::collections::BTreeMap;
+use std::time::{SystemTime, UNIX_EPOCH};
+
+/// Builder for one `BENCH_<name>.json` baseline file.
+pub struct BenchJson {
+    name: String,
+    fields: BTreeMap<String, Json>,
+}
+
+impl BenchJson {
+    pub fn new(name: &str) -> BenchJson {
+        let mut fields = BTreeMap::new();
+        fields.insert("bench".to_string(), Json::from(name));
+        fields.insert("schema_version".to_string(), Json::from(1u64));
+        fields.insert(
+            "fast_mode".to_string(),
+            Json::from(std::env::var("NETSENSE_BENCH_FAST").ok().as_deref() == Some("1")),
+        );
+        fields.insert(
+            "unix_time_s".to_string(),
+            Json::from(
+                SystemTime::now()
+                    .duration_since(UNIX_EPOCH)
+                    .map(|d| d.as_secs())
+                    .unwrap_or(0),
+            ),
+        );
+        BenchJson {
+            name: name.to_string(),
+            fields,
+        }
+    }
+
+    /// Record one metric (numbers, strings, bools — anything `Json`-able).
+    pub fn set(&mut self, key: &str, value: impl Into<Json>) -> &mut Self {
+        self.fields.insert(key.to_string(), value.into());
+        self
+    }
+
+    /// Write `BENCH_<name>.json` into the current directory (cargo bench
+    /// runs from the workspace root, so that is the repo root).
+    pub fn write(&self) {
+        let path = format!("BENCH_{}.json", self.name);
+        let json = Json::Obj(self.fields.clone()).to_string_pretty();
+        match std::fs::write(&path, json + "\n") {
+            Ok(()) => eprintln!("\nwrote {path}"),
+            Err(e) => eprintln!("\nWARNING: could not write {path}: {e}"),
+        }
+    }
+}
+
+/// Dense-f32 GB/s from a per-call mean duration over `elems` elements.
+pub fn gbps(elems: usize, mean: std::time::Duration) -> f64 {
+    (elems as f64 * 4.0) / mean.as_secs_f64() / 1e9
+}

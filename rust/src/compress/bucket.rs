@@ -30,7 +30,8 @@
 //! assert_eq!(layout.fuse(&parts), g);
 //! ```
 
-use super::pipeline::{CompressionConfig, CompressionOutcome, NetSenseCompressor};
+use super::pipeline::{CompressionConfig, CompressionOutcome, FusedOutcome, NetSenseCompressor};
+use super::workspace::WorkspacePool;
 use std::ops::Range;
 
 /// How a flat tensor of `n_total` elements is cut into buckets: every
@@ -132,16 +133,26 @@ pub fn group_indices_by_bytes(sizes: &[u64], target_bytes: u64) -> Vec<Range<usi
 pub struct BucketedCompressor {
     layout: BucketLayout,
     compressors: Vec<NetSenseCompressor>,
+    /// Reused per-bucket wire buffers: after
+    /// [`Self::compress_frames`], `frames[b]` holds bucket `b`'s complete
+    /// length-prefixed frame. Capacity survives across steps (§Perf:
+    /// steady state re-fills in place, no allocation).
+    frames: Vec<Vec<u8>>,
+    /// Reused per-bucket fused outcomes (same indexing as `frames`).
+    outcomes: Vec<FusedOutcome>,
 }
 
 impl BucketedCompressor {
     pub fn new(layout: BucketLayout, config: CompressionConfig) -> BucketedCompressor {
-        let compressors = (0..layout.n_buckets())
+        let nb = layout.n_buckets();
+        let compressors = (0..nb)
             .map(|i| NetSenseCompressor::new(layout.elems(i), config.clone()))
             .collect();
         BucketedCompressor {
             layout,
             compressors,
+            frames: (0..nb).map(|_| Vec::new()).collect(),
+            outcomes: vec![FusedOutcome::default(); nb],
         }
     }
 
@@ -172,6 +183,79 @@ impl BucketedCompressor {
                 c.compress(&grads[r.clone()], &weights[r], ratio)
             })
             .collect()
+    }
+
+    /// Fused compression of every bucket straight to length-prefixed wire
+    /// frames, in parallel across the pool's workspaces.
+    ///
+    /// Buckets are split into contiguous chunks — one per workspace, via a
+    /// dependency-free `std::thread::scope` fan-out — so with a pool of
+    /// `t` workspaces up to `t` buckets compress concurrently. Each bucket
+    /// still runs on its own [`NetSenseCompressor`] (its own residual,
+    /// threshold hint, prune cache), so the result is bit-identical to
+    /// [`Self::compress`]-then-encode at *any* pool width, including 1
+    /// (which runs inline: no spawns, and zero steady-state allocations).
+    ///
+    /// Returns `(outcomes, frames)`, both indexed by bucket; `frames[b]`
+    /// holds `8 + outcomes[b].wire_bytes` bytes.
+    pub fn compress_frames(
+        &mut self,
+        grads: &[f32],
+        weights: &[f32],
+        ratio: f64,
+        pool: &mut WorkspacePool,
+    ) -> (&[FusedOutcome], &[Vec<u8>]) {
+        assert_eq!(grads.len(), self.n(), "gradient length mismatch");
+        assert_eq!(weights.len(), self.n(), "weight length mismatch");
+        let nb = self.layout.n_buckets();
+        let threads = pool.len().min(nb).max(1);
+        let layout = &self.layout;
+        if threads <= 1 {
+            let ws = pool.workspace_mut(0);
+            for (b, ((comp, frame), out)) in self
+                .compressors
+                .iter_mut()
+                .zip(self.frames.iter_mut())
+                .zip(self.outcomes.iter_mut())
+                .enumerate()
+            {
+                let r = layout.range(b);
+                frame.clear();
+                *out = comp.compress_frame_into(&grads[r.clone()], &weights[r], ratio, ws, frame);
+            }
+        } else {
+            let chunk = nb.div_ceil(threads);
+            let compressors = &mut self.compressors;
+            let frames = &mut self.frames;
+            let outcomes = &mut self.outcomes;
+            std::thread::scope(|s| {
+                for (ci, (((comps, frs), outs), ws)) in compressors
+                    .chunks_mut(chunk)
+                    .zip(frames.chunks_mut(chunk))
+                    .zip(outcomes.chunks_mut(chunk))
+                    .zip(pool.workspaces_mut().iter_mut())
+                    .enumerate()
+                {
+                    let base = ci * chunk;
+                    s.spawn(move || {
+                        for (j, ((comp, frame), out)) in
+                            comps.iter_mut().zip(frs.iter_mut()).zip(outs.iter_mut()).enumerate()
+                        {
+                            let r = layout.range(base + j);
+                            frame.clear();
+                            *out = comp.compress_frame_into(
+                                &grads[r.clone()],
+                                &weights[r],
+                                ratio,
+                                ws,
+                                frame,
+                            );
+                        }
+                    });
+                }
+            });
+        }
+        (&self.outcomes, &self.frames)
     }
 
     /// Per-bucket wire-size prediction (byte-exact vs [`Self::compress`],
@@ -352,6 +436,67 @@ mod tests {
                     r.residual_norm(),
                     "step {step} bucket {i} residual"
                 );
+            }
+        }
+    }
+
+    #[test]
+    fn fused_frames_bit_identical_to_staged_compress_across_steps() {
+        // The fused parallel path must emit, bucket for bucket, the exact
+        // frame bytes the staged path (compress → quantize_values →
+        // encode → encode_frame) produces — across steps, so the
+        // error-feedback state evolves identically too.
+        use crate::transport::frame::encode_frame;
+        let n = 4096;
+        let layout = BucketLayout::new(n, 1000);
+        let w = randn(n, 30);
+        let mut staged = BucketedCompressor::new(layout.clone(), CompressionConfig::default());
+        let mut fused = BucketedCompressor::new(layout.clone(), CompressionConfig::default());
+        let mut pool = WorkspacePool::new(3);
+        // Ratio sweep crosses the quantization boundary (0.01 < tr_q) and
+        // includes the ratio=1.0 send-everything case.
+        for (step, &ratio) in [0.1, 0.05, 0.01, 1.0, 0.1, 0.01].iter().enumerate() {
+            let g = randn(n, 300 + step as u64);
+            let outs_staged = staged.compress(&g, &w, ratio);
+            let (outs_fused, frames) = fused.compress_frames(&g, &w, ratio, &mut pool);
+            for (b, (so, fo)) in outs_staged.iter().zip(outs_fused).enumerate() {
+                assert_eq!(
+                    frames[b],
+                    encode_frame(&so.payload.encode()),
+                    "step {step} bucket {b}: wire bytes diverged"
+                );
+                assert_eq!(so.wire_bytes, fo.wire_bytes, "step {step} bucket {b}");
+                assert_eq!(so.quantized, fo.quantized, "step {step} bucket {b}");
+                assert_eq!(so.payload.nnz(), fo.nnz, "step {step} bucket {b}");
+            }
+            assert_eq!(
+                staged.residual_norms(),
+                fused.residual_norms(),
+                "step {step}: error-feedback state diverged"
+            );
+        }
+    }
+
+    #[test]
+    fn fused_frames_identical_at_any_pool_width() {
+        // Parallel chunking is a scheduling choice only: pools of 1 (the
+        // inline no-spawn path), 2, and 8 must produce identical frames.
+        let n = 5000;
+        let layout = BucketLayout::new(n, 640);
+        let w = randn(n, 31);
+        let mut reference: Option<Vec<Vec<u8>>> = None;
+        for width in [1usize, 2, 8] {
+            let mut bc = BucketedCompressor::new(layout.clone(), CompressionConfig::default());
+            let mut pool = WorkspacePool::new(width);
+            let mut got: Vec<Vec<u8>> = Vec::new();
+            for step in 0..4 {
+                let g = randn(n, 400 + step);
+                let (_, frames) = bc.compress_frames(&g, &w, 0.05, &mut pool);
+                got = frames.to_vec();
+            }
+            match &reference {
+                None => reference = Some(got),
+                Some(want) => assert_eq!(&got, want, "pool width {width} diverged"),
             }
         }
     }

@@ -7,6 +7,7 @@
 //! Invariant (tested): `transmitted + residual == gradient + old_residual`
 //! — compression never loses gradient mass, only delays it.
 
+use super::quantize::{f16_bits_to_f32, f32_to_f16_bits, Precision};
 use super::sparse::SparseGradient;
 
 /// Per-worker error-feedback state for one flat gradient tensor.
@@ -48,6 +49,67 @@ impl ErrorFeedback {
         // ...and subtract what made it onto the wire (at wire precision).
         for (&i, &v) in transmitted.indices.iter().zip(transmitted.values.iter()) {
             self.residual[i as usize] -= v;
+        }
+    }
+
+    /// [`ErrorFeedback::absorb`] without a materialized payload, keeping
+    /// the caller's compensated buffer intact (the fused hot path itself
+    /// uses the swap-based [`ErrorFeedback::absorb_owned`] and gives the
+    /// buffer up). The transmitted value at index `i` is
+    /// recomputed as the wire-precision view of `compensated_grad[i]`,
+    /// elementwise-identical to `gather → quantize_values → absorb`
+    /// (including the `quantize_values` quirk of rounding only `F16`:
+    /// bf16 payloads subtract the unrounded local value on both paths).
+    pub fn absorb_selected(
+        &mut self,
+        compensated_grad: &[f32],
+        indices: &[u32],
+        precision: Precision,
+    ) {
+        assert_eq!(compensated_grad.len(), self.residual.len());
+        self.residual.copy_from_slice(compensated_grad);
+        match precision {
+            Precision::F16 => {
+                for &i in indices {
+                    let v = f16_bits_to_f32(f32_to_f16_bits(compensated_grad[i as usize]));
+                    self.residual[i as usize] -= v;
+                }
+            }
+            Precision::F32 | Precision::Bf16 => {
+                for &i in indices {
+                    self.residual[i as usize] -= compensated_grad[i as usize];
+                }
+            }
+        }
+    }
+
+    /// [`ErrorFeedback::absorb_selected`] that *takes* the compensated
+    /// gradient instead of copying it: the caller's buffer becomes the
+    /// new residual via a pointer swap (§Perf: kills a 2·n-float copy per
+    /// step) and the old residual storage is handed back in `compensated`
+    /// with unspecified contents (the fused path clears it next step).
+    /// Residual values are bit-identical to [`ErrorFeedback::absorb`].
+    pub fn absorb_owned(
+        &mut self,
+        compensated: &mut Vec<f32>,
+        indices: &[u32],
+        precision: Precision,
+    ) {
+        assert_eq!(compensated.len(), self.residual.len());
+        std::mem::swap(&mut self.residual, compensated);
+        match precision {
+            Precision::F16 => {
+                for &i in indices {
+                    let v = self.residual[i as usize];
+                    self.residual[i as usize] = v - f16_bits_to_f32(f32_to_f16_bits(v));
+                }
+            }
+            Precision::F32 | Precision::Bf16 => {
+                for &i in indices {
+                    let v = self.residual[i as usize];
+                    self.residual[i as usize] = v - v;
+                }
+            }
         }
     }
 
@@ -169,6 +231,47 @@ mod tests {
         // residual = original - quantized ≠ 0
         assert!(ef.residual()[0] != 0.0);
         assert!((ef.residual()[0] + s.values[0] - 0.1234567).abs() < 1e-7);
+    }
+
+    #[test]
+    fn absorb_selected_matches_staged_absorb_bitwise() {
+        let mut r = Pcg64::seeded(41);
+        for prec in [Precision::F32, Precision::F16, Precision::Bf16] {
+            let n = 128;
+            let mut staged = ErrorFeedback::new(n);
+            let mut fused = ErrorFeedback::new(n);
+            for step in 0..10 {
+                let mut grad = vec![0f32; n];
+                r.fill_normal_f32(&mut grad, 0.0, 1.0);
+                // Staged: compensate → gather → quantize_values → absorb.
+                let mut gs = grad.clone();
+                staged.compensate(&mut gs);
+                let idx = top_k_indices(&gs, 16);
+                let mut s = SparseGradient::gather(&gs, idx.clone(), prec);
+                s.quantize_values();
+                staged.absorb(&gs, &s);
+                // Fused: compensate → absorb, no payload. Alternate the
+                // copying and owning variants — both must match staged.
+                let mut gf = grad.clone();
+                fused.compensate(&mut gf);
+                let idx_f = top_k_indices(&gf, 16);
+                assert_eq!(idx_f, idx, "{prec:?} step {step}: selection diverged");
+                if step % 2 == 0 {
+                    fused.absorb_selected(&gf, &idx_f, prec);
+                } else {
+                    let mut owned = gf.clone();
+                    fused.absorb_owned(&mut owned, &idx_f, prec);
+                }
+                for (i, (a, b)) in staged.residual().iter().zip(fused.residual()).enumerate()
+                {
+                    assert_eq!(
+                        a.to_bits(),
+                        b.to_bits(),
+                        "{prec:?} step {step} elem {i}: {a} vs {b}"
+                    );
+                }
+            }
+        }
     }
 
     #[test]

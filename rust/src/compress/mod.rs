@@ -13,10 +13,19 @@
 //!   was *not* transmitted, re-injected into the next step's gradient
 //!   (memory-compensated compression).
 //! - [`pipeline`] — Algorithm 2 end-to-end: adaptive quantization decision →
-//!   pruning → Top-K sparsification → encoded payload.
+//!   pruning → Top-K sparsification → encoded payload. Two emit paths:
+//!   the staged reference ([`NetSenseCompressor::compress`], materializes a
+//!   [`SparseGradient`]) and the fused hot path
+//!   ([`NetSenseCompressor::compress_frame_into`], single-pass
+//!   select+quantize+encode straight into a reusable wire buffer —
+//!   bit-identical, zero steady-state allocations).
+//! - [`workspace`] — the per-worker arena of reusable scratch buffers the
+//!   fused path runs on ([`Workspace`], [`WorkspacePool`]).
 //! - [`bucket`] — split/fuse of flat gradients into fixed-size buckets with
 //!   per-bucket error-feedback state, feeding the pipelined exchange
-//!   ([`crate::coordinator::pipeline_exchange`]).
+//!   ([`crate::coordinator::pipeline_exchange`]); buckets compress in
+//!   parallel across a workspace pool
+//!   ([`BucketedCompressor::compress_frames`]).
 
 pub mod bucket;
 pub mod error_feedback;
@@ -25,9 +34,11 @@ pub mod prune;
 pub mod quantize;
 pub mod sparse;
 pub mod topk;
+pub mod workspace;
 
 pub use bucket::{group_indices_by_bytes, BucketLayout, BucketedCompressor};
 pub use error_feedback::ErrorFeedback;
-pub use pipeline::{CompressionConfig, CompressionOutcome, NetSenseCompressor};
+pub use pipeline::{CompressionConfig, CompressionOutcome, FusedOutcome, NetSenseCompressor};
 pub use quantize::{f32_to_f16_bits, f16_bits_to_f32, Precision};
 pub use sparse::SparseGradient;
+pub use workspace::{Workspace, WorkspacePool};

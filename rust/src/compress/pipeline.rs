@@ -28,8 +28,13 @@
 use super::error_feedback::ErrorFeedback;
 use super::prune::pruning_rate_for;
 use super::quantize::Precision;
-use super::sparse::SparseGradient;
-use super::topk::{k_for_ratio, kth_magnitude_with, top_k_with_threshold_hint_and_scratch};
+use super::sparse::{encode_gathered_into, SparseGradient};
+use super::topk::{
+    k_for_ratio, kth_magnitude_with, top_k_with_threshold_hint_and_scratch,
+    top_k_with_threshold_hint_into,
+};
+use super::workspace::Workspace;
+use crate::transport::frame::encode_frame_header_into;
 
 /// Tunables of Algorithm 2 (paper defaults).
 #[derive(Clone, Debug)]
@@ -70,6 +75,28 @@ pub struct CompressionOutcome {
     pub wire_bytes: u64,
     /// Wire bytes a dense f32 transfer would have used.
     pub dense_bytes: u64,
+}
+
+/// What one *fused* compression step did — the payload never exists as a
+/// [`SparseGradient`] on the send side, so this carries the metadata only
+/// (the wire bytes land in the caller's buffer).
+#[derive(Clone, Debug, Default)]
+pub struct FusedOutcome {
+    /// Selected coordinate count (== `k_for_ratio(n, effective_ratio)`).
+    pub nnz: usize,
+    pub quantized: bool,
+    /// Ratio after the quantization adjustment (Algorithm 2 line 6).
+    pub effective_ratio: f64,
+    pub pruning_rate: f64,
+    pub grad_l2: f64,
+    /// Sparse COO payload bytes (frame header excluded) — byte-exact
+    /// against [`CompressionOutcome::wire_bytes`] and
+    /// [`NetSenseCompressor::predict_wire_bytes`].
+    pub wire_bytes: u64,
+    /// Wire bytes a dense f32 transfer would have used.
+    pub dense_bytes: u64,
+    /// Wire precision of the payload values.
+    pub precision: Precision,
 }
 
 /// Stateful Algorithm-2 compressor for one flat gradient tensor.
@@ -114,6 +141,22 @@ impl NetSenseCompressor {
 
     /// Pruning threshold for `rate` over `weights`, with caching.
     fn prune_threshold(&mut self, weights: &[f32], rate: f64) -> f32 {
+        let mut qs = std::mem::take(&mut self.qs_scratch);
+        let th = self.prune_threshold_with(weights, rate, &mut qs);
+        self.qs_scratch = qs;
+        th
+    }
+
+    /// [`Self::prune_threshold`] against a caller-owned quickselect buffer
+    /// (the fused path routes every scratch through its [`Workspace`]).
+    /// The threshold value is independent of which buffer performed the
+    /// selection, so staged and fused calls share one cache.
+    fn prune_threshold_with(
+        &mut self,
+        weights: &[f32],
+        rate: f64,
+        pairs: &mut Vec<(f32, u32)>,
+    ) -> f32 {
         let stale = match self.prune_cache {
             None => true,
             Some((cached_rate, _)) => {
@@ -130,7 +173,7 @@ impl NetSenseCompressor {
             } else {
                 // Anything strictly below the (n−n_prune)-th magnitude is
                 // pruned (same rule as PruneMask::smallest_weights).
-                kth_magnitude_with(weights, n - n_prune, &mut self.qs_scratch)
+                kth_magnitude_with(weights, n - n_prune, pairs)
             };
             self.prune_cache = Some((rate, th));
             self.prune_cache_age = 0;
@@ -228,6 +271,154 @@ impl NetSenseCompressor {
             effective_ratio,
             pruning_rate,
             grad_l2,
+        }
+    }
+
+    /// Fused Algorithm 2 straight to wire bytes: one structure-preserving
+    /// pass per stage — compensate+L2 fused into a single sweep, pruning
+    /// applied in place, threshold-reuse top-k through the caller's
+    /// [`Workspace`], then gather+quantize+COO-encode emitted directly
+    /// into `out` (appended; exactly `outcome.wire_bytes` bytes). No
+    /// [`SparseGradient`] is materialized and, once the workspace and
+    /// `out` are warm, the step performs **zero heap allocations**.
+    ///
+    /// Bit-identical on the wire — and in every piece of compressor state
+    /// (residual, threshold hint, prune cache) — to
+    /// [`Self::compress`] + [`SparseGradient::encode`], which stays as the
+    /// property-tested reference implementation.
+    pub fn compress_payload_into(
+        &mut self,
+        grads: &[f32],
+        weights: &[f32],
+        ratio: f64,
+        ws: &mut Workspace,
+        out: &mut Vec<u8>,
+    ) -> FusedOutcome {
+        let outcome = self.fused_select(grads, weights, ratio, ws);
+        let bytes = encode_gathered_into(&self.scratch, &ws.indices, outcome.precision, out);
+        debug_assert_eq!(bytes, outcome.wire_bytes);
+        if self.config.error_feedback {
+            // Swap, don't copy: scratch becomes the new residual.
+            self.ef
+                .absorb_owned(&mut self.scratch, &ws.indices, outcome.precision);
+        }
+        outcome
+    }
+
+    /// [`Self::compress_payload_into`] wrapped in the transport frame: the
+    /// payload size is known the moment selection finishes, so the
+    /// 8-byte length-prefixed header is written first and the payload
+    /// streams in behind it — the full gradient→wire path with no
+    /// intermediate buffer at all. Appends `8 + outcome.wire_bytes` bytes.
+    pub fn compress_frame_into(
+        &mut self,
+        grads: &[f32],
+        weights: &[f32],
+        ratio: f64,
+        ws: &mut Workspace,
+        out: &mut Vec<u8>,
+    ) -> FusedOutcome {
+        let outcome = self.fused_select(grads, weights, ratio, ws);
+        out.reserve(8 + outcome.wire_bytes as usize);
+        encode_frame_header_into(outcome.wire_bytes as usize, out);
+        let bytes = encode_gathered_into(&self.scratch, &ws.indices, outcome.precision, out);
+        debug_assert_eq!(bytes, outcome.wire_bytes);
+        if self.config.error_feedback {
+            // Swap, don't copy: scratch becomes the new residual.
+            self.ef
+                .absorb_owned(&mut self.scratch, &ws.indices, outcome.precision);
+        }
+        outcome
+    }
+
+    /// Steps 0–3 of the fused path: compensate (+L2 in the same sweep),
+    /// quantization decision, in-place pruning, and top-k selection into
+    /// `ws.indices`. Leaves the compensated/pruned gradient in
+    /// `self.scratch` for the emit and absorb phases. Mirrors
+    /// [`Self::compress`] operation-for-operation so both paths stay
+    /// bit-identical.
+    fn fused_select(
+        &mut self,
+        grads: &[f32],
+        weights: &[f32],
+        ratio: f64,
+        ws: &mut Workspace,
+    ) -> FusedOutcome {
+        let n = self.ef.len();
+        assert_eq!(grads.len(), n, "gradient length mismatch");
+        assert_eq!(weights.len(), n, "weight length mismatch");
+        let ratio = ratio.clamp(0.0, 1.0);
+
+        // ---- Fused pass: error-feedback compensate + L2 ------------------
+        // (The staged path walks the tensor three times here: copy,
+        // compensate, norm. Same adds in the same order → same bits.)
+        self.scratch.clear();
+        let mut l2_sq = 0f64;
+        if self.config.error_feedback {
+            self.scratch
+                .extend(grads.iter().zip(self.ef.residual().iter()).map(|(&g, &r)| {
+                    let c = g + r;
+                    l2_sq += (c as f64) * (c as f64);
+                    c
+                }));
+        } else {
+            self.scratch.extend(grads.iter().map(|&g| {
+                l2_sq += (g as f64) * (g as f64);
+                g
+            }));
+        }
+        let grad_l2 = l2_sq.sqrt();
+        self.last_grad_l2 = Some(grad_l2);
+
+        // ---- Step 1: adaptive quantization --------------------------------
+        let mut effective_ratio = ratio;
+        let mut precision = Precision::F32;
+        let mut quantized = false;
+        if ratio < self.config.quant_ratio_threshold && grad_l2 > self.config.density_threshold {
+            precision = Precision::F16;
+            quantized = true;
+            effective_ratio = (2.0 * ratio).min(1.0);
+        }
+
+        // ---- Step 2: model pruning ----------------------------------------
+        let pruning_rate = if self.config.enable_pruning {
+            pruning_rate_for(effective_ratio)
+        } else {
+            0.0
+        };
+        if pruning_rate > 0.0 {
+            let th = self.prune_threshold_with(weights, pruning_rate, &mut ws.pairs);
+            for (g, &w) in self.scratch.iter_mut().zip(weights.iter()) {
+                if w.abs() < th {
+                    *g = 0.0;
+                }
+            }
+        }
+
+        // ---- Step 3: Top-K sparsification ---------------------------------
+        let k = k_for_ratio(n, effective_ratio);
+        let kth = top_k_with_threshold_hint_into(
+            &self.scratch,
+            k,
+            self.last_threshold,
+            self.config.topk_slack,
+            &mut ws.pairs,
+            &mut ws.cand,
+            &mut ws.sub,
+            &mut ws.sub_keep,
+            &mut ws.indices,
+        );
+        self.last_threshold = Some(kth);
+
+        FusedOutcome {
+            nnz: ws.indices.len(),
+            quantized,
+            effective_ratio,
+            pruning_rate,
+            grad_l2,
+            wire_bytes: 12 + (ws.indices.len() as u64) * (4 + precision.bytes() as u64),
+            dense_bytes: 4 * n as u64,
+            precision,
         }
     }
 

@@ -6,8 +6,9 @@
 //! the gradient still carries substantial information (L2 norm test).
 
 /// Wire precision of sparse gradient values.
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub enum Precision {
+    #[default]
     F32,
     F16,
     Bf16,
@@ -128,18 +129,52 @@ pub fn bf16_bits_to_f32(h: u16) -> f32 {
 }
 
 /// Quantize a slice to `precision`, returning the dequantized values (what
-/// the receiver reconstructs). For `F32` this is the identity.
+/// the receiver reconstructs). For `F32` this is the identity — callers
+/// for whom the identity case must not copy the tensor have
+/// [`quantize_roundtrip_ref`] / [`quantize_roundtrip_in_place`] (the
+/// fused send path goes further and quantizes during encode, see
+/// [`super::sparse::encode_gathered_into`]).
 pub fn quantize_roundtrip(xs: &[f32], precision: Precision) -> Vec<f32> {
+    let mut out = xs.to_vec();
+    quantize_roundtrip_in_place(&mut out, precision);
+    out
+}
+
+/// [`quantize_roundtrip`] in place: rewrites `xs` to the receiver-visible
+/// wire-precision values. `F32` touches nothing (§Perf: the healthy-
+/// network path — the paper's common case — moves zero bytes).
+pub fn quantize_roundtrip_in_place(xs: &mut [f32], precision: Precision) {
     match precision {
-        Precision::F32 => xs.to_vec(),
-        Precision::F16 => xs
-            .iter()
-            .map(|&x| f16_bits_to_f32(f32_to_f16_bits(x)))
-            .collect(),
-        Precision::Bf16 => xs
-            .iter()
-            .map(|&x| bf16_bits_to_f32(f32_to_bf16_bits(x)))
-            .collect(),
+        Precision::F32 => {}
+        Precision::F16 => {
+            for x in xs.iter_mut() {
+                *x = f16_bits_to_f32(f32_to_f16_bits(*x));
+            }
+        }
+        Precision::Bf16 => {
+            for x in xs.iter_mut() {
+                *x = bf16_bits_to_f32(f32_to_bf16_bits(*x));
+            }
+        }
+    }
+}
+
+/// Borrowing variant of [`quantize_roundtrip`]: `F32` returns the input
+/// slice unchanged (zero copies, zero allocations); 16-bit precisions
+/// round through `scratch` and return it.
+pub fn quantize_roundtrip_ref<'a>(
+    xs: &'a [f32],
+    precision: Precision,
+    scratch: &'a mut Vec<f32>,
+) -> &'a [f32] {
+    match precision {
+        Precision::F32 => xs,
+        _ => {
+            scratch.clear();
+            scratch.extend_from_slice(xs);
+            quantize_roundtrip_in_place(scratch, precision);
+            scratch
+        }
     }
 }
 
@@ -265,6 +300,40 @@ mod tests {
     fn roundtrip_helper_identity_for_f32() {
         let v = vec![1.5f32, -2.25, 0.0, 1e-20];
         assert_eq!(quantize_roundtrip(&v, Precision::F32), v);
+    }
+
+    #[test]
+    fn roundtrip_ref_borrows_for_f32_and_rounds_for_f16() {
+        let v = vec![0.1234567f32, -2.25, 0.0];
+        let mut scratch = Vec::new();
+        // F32: the returned slice IS the input — no bytes moved.
+        let out = quantize_roundtrip_ref(&v, Precision::F32, &mut scratch);
+        assert!(std::ptr::eq(out.as_ptr(), v.as_ptr()));
+        assert!(scratch.is_empty(), "identity path must not touch scratch");
+        // F16/Bf16: matches the allocating variant exactly.
+        for prec in [Precision::F16, Precision::Bf16] {
+            let out = quantize_roundtrip_ref(&v, prec, &mut scratch).to_vec();
+            assert_eq!(out, quantize_roundtrip(&v, prec), "{prec:?}");
+        }
+    }
+
+    #[test]
+    fn roundtrip_in_place_matches_allocating() {
+        let v = vec![0.1f32, 65519.0, -1e-8, f32::NAN, 3.0];
+        for prec in [Precision::F32, Precision::F16, Precision::Bf16] {
+            let want = quantize_roundtrip(&v, prec);
+            let mut got = v.clone();
+            quantize_roundtrip_in_place(&mut got, prec);
+            assert_eq!(got.len(), want.len());
+            for (g, w) in got.iter().zip(&want) {
+                assert_eq!(g.to_bits(), w.to_bits(), "{prec:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn precision_default_is_f32() {
+        assert_eq!(Precision::default(), Precision::F32);
     }
 
     #[test]

@@ -67,38 +67,20 @@ impl SparseGradient {
     /// Serialize to the wire format.
     pub fn encode(&self) -> Vec<u8> {
         let mut out = Vec::with_capacity(self.wire_bytes() as usize);
-        out.extend_from_slice(&(self.n_total as u32).to_le_bytes());
-        out.extend_from_slice(&(self.nnz() as u32).to_le_bytes());
-        out.push(match self.precision {
-            Precision::F32 => 0,
-            Precision::F16 => 1,
-            Precision::Bf16 => 2,
-        });
-        out.extend_from_slice(&[0u8; 3]);
+        self.encode_into(&mut out);
+        out
+    }
+
+    /// [`SparseGradient::encode`] appending into a caller-owned buffer
+    /// (§Perf: zero allocations once the buffer has capacity).
+    pub fn encode_into(&self, out: &mut Vec<u8>) {
+        let before = out.len();
+        encode_coo_header_into(self.n_total, self.nnz(), self.precision, out);
         for &i in &self.indices {
             out.extend_from_slice(&i.to_le_bytes());
         }
-        match self.precision {
-            Precision::F32 => {
-                for &v in &self.values {
-                    out.extend_from_slice(&v.to_le_bytes());
-                }
-            }
-            Precision::F16 => {
-                for &v in &self.values {
-                    out.extend_from_slice(&f32_to_f16_bits(v).to_le_bytes());
-                }
-            }
-            Precision::Bf16 => {
-                for &v in &self.values {
-                    out.extend_from_slice(
-                        &super::quantize::f32_to_bf16_bits(v).to_le_bytes(),
-                    );
-                }
-            }
-        }
-        debug_assert_eq!(out.len() as u64, self.wire_bytes());
-        out
+        encode_values_into(&self.values, self.precision, out);
+        debug_assert_eq!((out.len() - before) as u64, self.wire_bytes());
     }
 
     /// Deserialize from the wire format.
@@ -155,45 +137,145 @@ impl SparseGradient {
     }
 
     /// Merge-sum two sparse gradients (union of indices, summed values).
-    /// Both must describe the same dense length.
+    /// Both must describe the same dense length. Allocates the result —
+    /// loops that merge repeatedly should reuse a buffer via
+    /// [`SparseGradient::merge_sum_into`].
     pub fn merge_sum(&self, other: &SparseGradient) -> SparseGradient {
+        let mut out = SparseGradient {
+            n_total: self.n_total,
+            indices: Vec::new(),
+            values: Vec::new(),
+            precision: self.precision,
+        };
+        self.merge_sum_into(other, &mut out);
+        out
+    }
+
+    /// [`SparseGradient::merge_sum`] into a caller-owned output: an
+    /// aggregation loop that merges one payload per iteration (e.g. a
+    /// sparse reduce over incoming peers) reuses `out` instead of paying
+    /// per-merge reallocation, and the pre-sizing `reserve` makes even a
+    /// cold buffer fill without incremental growth. The current
+    /// coordinator reduce path densifies via [`SparseGradient::add_into`]
+    /// instead; this is the sparse-output twin for payloads far below the
+    /// dense crossover.
+    pub fn merge_sum_into(&self, other: &SparseGradient, out: &mut SparseGradient) {
         assert_eq!(self.n_total, other.n_total);
-        let mut indices = Vec::with_capacity(self.nnz() + other.nnz());
-        let mut values = Vec::with_capacity(self.nnz() + other.nnz());
+        let cap = self.nnz() + other.nnz();
+        out.n_total = self.n_total;
+        out.indices.clear();
+        out.values.clear();
+        out.indices.reserve(cap);
+        out.values.reserve(cap);
         let (mut a, mut b) = (0usize, 0usize);
         while a < self.nnz() || b < other.nnz() {
             let ia = self.indices.get(a).copied().unwrap_or(u32::MAX);
             let ib = other.indices.get(b).copied().unwrap_or(u32::MAX);
             match ia.cmp(&ib) {
                 std::cmp::Ordering::Less => {
-                    indices.push(ia);
-                    values.push(self.values[a]);
+                    out.indices.push(ia);
+                    out.values.push(self.values[a]);
                     a += 1;
                 }
                 std::cmp::Ordering::Greater => {
-                    indices.push(ib);
-                    values.push(other.values[b]);
+                    out.indices.push(ib);
+                    out.values.push(other.values[b]);
                     b += 1;
                 }
                 std::cmp::Ordering::Equal => {
-                    indices.push(ia);
-                    values.push(self.values[a] + other.values[b]);
+                    out.indices.push(ia);
+                    out.values.push(self.values[a] + other.values[b]);
                     a += 1;
                     b += 1;
                 }
             }
         }
-        SparseGradient {
-            n_total: self.n_total,
-            indices,
-            values,
-            precision: if self.precision == Precision::F32 || other.precision == Precision::F32 {
+        out.precision =
+            if self.precision == Precision::F32 || other.precision == Precision::F32 {
                 Precision::F32
             } else {
                 self.precision
-            },
+            };
+    }
+}
+
+/// Write the 12-byte COO wire header (`n_total`, `nnz`, precision tag,
+/// padding) — shared by the staged codec and the fused encoder.
+fn encode_coo_header_into(n_total: usize, nnz: usize, precision: Precision, out: &mut Vec<u8>) {
+    out.extend_from_slice(&(n_total as u32).to_le_bytes());
+    out.extend_from_slice(&(nnz as u32).to_le_bytes());
+    out.push(match precision {
+        Precision::F32 => 0,
+        Precision::F16 => 1,
+        Precision::Bf16 => 2,
+    });
+    out.extend_from_slice(&[0u8; 3]);
+}
+
+/// Write `values` at wire precision — shared by the staged codec and the
+/// fused encoder (so both produce identical bits by construction).
+fn encode_values_into(values: &[f32], precision: Precision, out: &mut Vec<u8>) {
+    match precision {
+        Precision::F32 => {
+            for &v in values {
+                out.extend_from_slice(&v.to_le_bytes());
+            }
+        }
+        Precision::F16 => {
+            for &v in values {
+                out.extend_from_slice(&f32_to_f16_bits(v).to_le_bytes());
+            }
+        }
+        Precision::Bf16 => {
+            for &v in values {
+                out.extend_from_slice(&super::quantize::f32_to_bf16_bits(v).to_le_bytes());
+            }
         }
     }
+}
+
+/// Fused gather + quantize + encode: write the COO payload for
+/// `dense[indices]` straight into `out` — no `SparseGradient`
+/// materialization on the send side. Bit-identical on the wire to the
+/// staged path (`gather → quantize_values → encode`) because f16/bf16
+/// conversion is idempotent: encoding a raw value and encoding its
+/// rounded-through-16-bit view produce the same bits. Appends exactly the
+/// returned byte count (`12 + nnz·(4 + value_bytes)`).
+pub fn encode_gathered_into(
+    dense: &[f32],
+    indices: &[u32],
+    precision: Precision,
+    out: &mut Vec<u8>,
+) -> u64 {
+    let nnz = indices.len();
+    let bytes = 12 + (nnz as u64) * (4 + precision.bytes() as u64);
+    out.reserve(bytes as usize);
+    let before = out.len();
+    encode_coo_header_into(dense.len(), nnz, precision, out);
+    for &i in indices {
+        out.extend_from_slice(&i.to_le_bytes());
+    }
+    match precision {
+        Precision::F32 => {
+            for &i in indices {
+                out.extend_from_slice(&dense[i as usize].to_le_bytes());
+            }
+        }
+        Precision::F16 => {
+            for &i in indices {
+                out.extend_from_slice(&f32_to_f16_bits(dense[i as usize]).to_le_bytes());
+            }
+        }
+        Precision::Bf16 => {
+            for &i in indices {
+                out.extend_from_slice(
+                    &super::quantize::f32_to_bf16_bits(dense[i as usize]).to_le_bytes(),
+                );
+            }
+        }
+    }
+    debug_assert_eq!((out.len() - before) as u64, bytes);
+    bytes
 }
 
 #[cfg(test)]
@@ -330,6 +412,62 @@ mod tests {
                 a.merge_sum(&b).to_dense() == b.merge_sum(&a).to_dense()
             },
         );
+    }
+
+    #[test]
+    fn property_encode_gathered_matches_staged_path_all_precisions() {
+        // The fused gather+quantize+encode must be bit-identical on the
+        // wire to the staged reference (gather → quantize_values →
+        // encode), for every precision.
+        forall(
+            "encode_gathered_into == staged encode",
+            100,
+            vec_f32(1..200, -1e30..1e30),
+            |v| {
+                let k = (v.len() / 3).max(1);
+                let idx = top_k_indices(v, k);
+                let mut buf = Vec::new();
+                for prec in [Precision::F32, Precision::F16, Precision::Bf16] {
+                    let mut staged = SparseGradient::gather(v, idx.clone(), prec);
+                    staged.quantize_values();
+                    buf.clear();
+                    let bytes = encode_gathered_into(v, &idx, prec, &mut buf);
+                    if buf != staged.encode() || bytes != staged.wire_bytes() {
+                        return false;
+                    }
+                }
+                true
+            },
+        );
+    }
+
+    #[test]
+    fn encode_into_reuses_buffer_and_matches_encode() {
+        let s = sample();
+        let mut buf = Vec::new();
+        s.encode_into(&mut buf);
+        assert_eq!(buf, s.encode());
+        let cap = buf.capacity();
+        let ptr = buf.as_ptr();
+        buf.clear();
+        s.encode_into(&mut buf);
+        assert_eq!(buf, s.encode());
+        assert_eq!(buf.capacity(), cap, "re-encode must not grow the buffer");
+        assert!(std::ptr::eq(buf.as_ptr(), ptr), "re-encode must not realloc");
+    }
+
+    #[test]
+    fn merge_sum_into_reuses_output_buffers() {
+        let a = sample();
+        let mut b = sample();
+        b.indices = vec![0, 4, 9];
+        let mut out = a.merge_sum(&b); // warm: capacity >= union size
+        let want = a.merge_sum(&b);
+        let (ip, vp) = (out.indices.as_ptr(), out.values.as_ptr());
+        a.merge_sum_into(&b, &mut out);
+        assert_eq!(out, want);
+        assert!(std::ptr::eq(out.indices.as_ptr(), ip), "indices realloc'd");
+        assert!(std::ptr::eq(out.values.as_ptr(), vp), "values realloc'd");
     }
 
     #[test]

@@ -26,29 +26,47 @@ pub fn top_k_indices(values: &[f32], k: usize) -> Vec<u32> {
     top_k_indices_with(values, k, &mut scratch)
 }
 
-/// [`top_k_indices`] with a caller-owned scratch buffer — the hot-path
-/// variant (§Perf: avoids a fresh ~12·n-byte allocation per call).
+/// [`top_k_indices`] with a caller-owned scratch buffer — avoids the fresh
+/// ~12·n-byte pair allocation per call, but still allocates the returned
+/// index vector. The fully allocation-free variant is
+/// [`top_k_indices_into`].
 pub fn top_k_indices_with(
     values: &[f32],
     k: usize,
     scratch: &mut Vec<(f32, u32)>,
 ) -> Vec<u32> {
+    let mut out = Vec::with_capacity(k);
+    top_k_indices_into(values, k, scratch, &mut out);
+    out
+}
+
+/// [`top_k_indices`] writing into caller-owned buffers — the hot-path
+/// variant (§Perf: zero allocations once `scratch` and `out` have
+/// capacity). `out` is cleared and left holding the `k` selected indices
+/// in ascending order.
+pub fn top_k_indices_into(
+    values: &[f32],
+    k: usize,
+    scratch: &mut Vec<(f32, u32)>,
+    out: &mut Vec<u32>,
+) {
     let n = values.len();
     assert!(k <= n, "k={k} > n={n}");
     assert!(n <= u32::MAX as usize, "tensor too large for u32 indices");
+    out.clear();
     if k == 0 {
-        return Vec::new();
+        return;
     }
     if k == n {
-        return (0..n as u32).collect();
+        out.extend(0..n as u32);
+        return;
     }
     fill_scratch(values, scratch);
     quickselect_desc(scratch, k);
     // scratch[..k] now holds the top-k (unordered); collect + sort indices.
-    let mut idx: Vec<u32> = scratch[..k].iter().map(|&(_, i)| i).collect();
-    idx.sort_unstable();
-    debug_assert_eq!(idx.len(), k);
-    idx
+    out.extend(scratch[..k].iter().map(|&(_, i)| i));
+    out.sort_unstable();
+    debug_assert_eq!(out.len(), k);
 }
 
 fn fill_scratch(values: &[f32], scratch: &mut Vec<(f32, u32)>) {
@@ -120,12 +138,21 @@ fn quickselect_desc(scratch: &mut [(f32, u32)], k: usize) -> (f32, u32) {
 
 /// Indices (ascending) of all values with |v| >= threshold.
 pub fn threshold_select(values: &[f32], threshold: f32) -> Vec<u32> {
-    values
-        .iter()
-        .enumerate()
-        .filter(|&(_, &v)| v.abs() >= threshold)
-        .map(|(i, _)| i as u32)
-        .collect()
+    let mut out = Vec::new();
+    threshold_select_into(values, threshold, &mut out);
+    out
+}
+
+/// [`threshold_select`] writing into a caller-owned buffer (hot-path
+/// variant: the steady-state pre-filter runs every step, so its candidate
+/// set must not cost a fresh allocation per call).
+pub fn threshold_select_into(values: &[f32], threshold: f32, out: &mut Vec<u32>) {
+    out.clear();
+    for (i, &v) in values.iter().enumerate() {
+        if v.abs() >= threshold {
+            out.push(i as u32);
+        }
+    }
 }
 
 /// Threshold-reuse top-k: try `est_threshold` (e.g. last step's k-th
@@ -141,7 +168,10 @@ pub fn top_k_with_threshold_hint(
     top_k_with_threshold_hint_and_scratch(values, k, est_threshold, slack, &mut scratch)
 }
 
-/// [`top_k_with_threshold_hint`] with caller-owned scratch (hot path).
+/// [`top_k_with_threshold_hint`] with caller-owned quickselect scratch.
+/// Still allocates the candidate/sub-tensor staging and the returned index
+/// vector; the fully allocation-free variant is
+/// [`top_k_with_threshold_hint_into`].
 pub fn top_k_with_threshold_hint_and_scratch(
     values: &[f32],
     k: usize,
@@ -149,37 +179,79 @@ pub fn top_k_with_threshold_hint_and_scratch(
     slack: f64,
     scratch: &mut Vec<(f32, u32)>,
 ) -> (Vec<u32>, f32) {
+    let mut cand = Vec::new();
+    let mut sub = Vec::new();
+    let mut sub_keep = Vec::new();
+    let mut out = Vec::new();
+    let kth = top_k_with_threshold_hint_into(
+        values,
+        k,
+        est_threshold,
+        slack,
+        scratch,
+        &mut cand,
+        &mut sub,
+        &mut sub_keep,
+        &mut out,
+    );
+    (out, kth)
+}
+
+/// [`top_k_with_threshold_hint`] with every buffer caller-owned — the
+/// fused-hot-path variant (§Perf: zero allocations in steady state; both
+/// the threshold-reuse fast path and its exact-quickselect fallback route
+/// through `cand`/`sub`/`sub_keep` instead of collecting fresh vectors).
+/// `out` is cleared and left holding exactly `k` indices in ascending
+/// order; returns the realized k-th magnitude (the next step's hint).
+#[allow(clippy::too_many_arguments)]
+pub fn top_k_with_threshold_hint_into(
+    values: &[f32],
+    k: usize,
+    est_threshold: Option<f32>,
+    slack: f64,
+    scratch: &mut Vec<(f32, u32)>,
+    cand: &mut Vec<u32>,
+    sub: &mut Vec<f32>,
+    sub_keep: &mut Vec<u32>,
+    out: &mut Vec<u32>,
+) -> f32 {
+    out.clear();
     if k == 0 {
-        return (Vec::new(), f32::INFINITY);
+        return f32::INFINITY;
     }
     if k >= values.len() {
-        return ((0..values.len() as u32).collect(), 0.0);
+        out.extend(0..values.len() as u32);
+        return 0.0;
     }
     if let Some(th) = est_threshold {
         if th.is_finite() && th > 0.0 {
-            let cand = threshold_select(values, th);
+            threshold_select_into(values, th, cand);
             let hi = ((k as f64) * (1.0 + slack)) as usize;
             if cand.len() >= k && cand.len() <= hi.max(k + 1) {
                 // Trim the candidate set down to exactly k by selecting
                 // within it (much smaller than n). Always returning exactly
                 // k keeps wire sizes deterministic — the contract
                 // `predict_wire_bytes` relies on.
-                let sub: Vec<f32> = cand.iter().map(|&i| values[i as usize]).collect();
-                let keep = top_k_indices_with(&sub, k, scratch);
-                let mut out: Vec<u32> = keep.iter().map(|&j| cand[j as usize]).collect();
+                sub.clear();
+                sub.extend(cand.iter().map(|&i| values[i as usize]));
+                top_k_indices_into(sub, k, scratch, sub_keep);
+                out.extend(sub_keep.iter().map(|&j| cand[j as usize]));
                 out.sort_unstable();
-                let kth = kth_magnitude_with(&sub, k, scratch);
-                return (out, kth);
+                // The k-th magnitude is the smallest selected |value| —
+                // identical to a second quickselect over `sub`, without
+                // re-filling the pair buffer (§Perf).
+                return sub_keep
+                    .iter()
+                    .map(|&j| sub[j as usize].abs())
+                    .fold(f32::MAX, f32::min);
             }
         }
     }
     // Single quickselect pass yields both the indices and the threshold.
-    let idx = top_k_indices_with(values, k, scratch);
-    let kth = idx
-        .iter()
+    top_k_indices_into(values, k, scratch, out);
+    out.iter()
         .map(|&i| values[i as usize].abs())
-        .fold(f32::MAX, f32::min);
-    (idx, kth)
+        .fold(f32::MAX, f32::min)
 }
 
 #[cfg(test)]
@@ -343,6 +415,33 @@ mod tests {
         // still returns exactly k.
         let (idx, _) = top_k_with_threshold_hint(&v, 10, Some(1e-10), 0.2);
         assert_eq!(idx.len(), 10);
+    }
+
+    #[test]
+    fn into_variants_match_allocating_variants() {
+        // The caller-owned-buffer hot path must select identically to the
+        // allocating API, with every buffer reused across calls.
+        let mut r = Pcg64::seeded(22);
+        let (mut scratch, mut cand, mut sub, mut sub_keep, mut out) =
+            (Vec::new(), Vec::new(), Vec::new(), Vec::new(), Vec::new());
+        let mut hint = None;
+        for trial in 0..30 {
+            let n = 1 + r.index(400);
+            let k = 1 + r.index(n);
+            let mut v = vec![0f32; n];
+            r.fill_normal_f32(&mut v, 0.0, 1.0);
+            top_k_indices_into(&v, k, &mut scratch, &mut out);
+            assert_eq!(out, top_k_indices(&v, k), "trial {trial} top_k");
+            threshold_select_into(&v, 0.5, &mut out);
+            assert_eq!(out, threshold_select(&v, 0.5), "trial {trial} threshold");
+            let kth = top_k_with_threshold_hint_into(
+                &v, k, hint, 0.25, &mut scratch, &mut cand, &mut sub, &mut sub_keep, &mut out,
+            );
+            let (want_idx, want_kth) = top_k_with_threshold_hint(&v, k, hint, 0.25);
+            assert_eq!(out, want_idx, "trial {trial} hinted indices");
+            assert_eq!(kth, want_kth, "trial {trial} hinted kth");
+            hint = Some(kth);
+        }
     }
 
     #[test]

@@ -1,0 +1,269 @@
+//! Per-worker scratch arena for the fused compression→wire hot path.
+//!
+//! Every buffer Algorithm 2 needs between "gradient in" and "frame out" —
+//! quickselect pairs, candidate/sub-tensor staging for the threshold-reuse
+//! fast path, and the selected-index staging — lives here and is reused
+//! across steps and across buckets. One [`Workspace`] serves any tensor
+//! length (buffers are cleared, never shrunk), so a worker needs exactly
+//! one per concurrent compression thread: that is what [`WorkspacePool`]
+//! holds, sized to the machine's available parallelism for the parallel
+//! per-bucket path
+//! ([`BucketedCompressor::compress_frames`](super::bucket::BucketedCompressor::compress_frames)).
+//!
+//! Ownership rules (DESIGN.md §Hot path anatomy):
+//! - A `Workspace` is *transient scratch*: nothing in it survives a call
+//!   as meaningful state. Compressor state (error-feedback residual,
+//!   threshold hint, prune cache) stays in
+//!   [`NetSenseCompressor`](super::NetSenseCompressor).
+//! - Borrow one workspace per thread; never share one across concurrent
+//!   compressions.
+//! - After a few warmup steps every buffer has reached its steady-state
+//!   capacity and the fused path performs **zero heap allocations** per
+//!   step (regression-tested below with a counting allocator).
+
+/// Reusable scratch buffers for one in-flight fused compression.
+#[derive(Debug, Default)]
+pub struct Workspace {
+    /// Quickselect (|value|, index) pairs (~12·n bytes at capacity).
+    pub(crate) pairs: Vec<(f32, u32)>,
+    /// Selected indices — the COO index staging of the frame being built.
+    pub(crate) indices: Vec<u32>,
+    /// Threshold-reuse candidate set (indices passing the hint pre-filter).
+    pub(crate) cand: Vec<u32>,
+    /// Candidate sub-tensor values (gathered for the trim quickselect).
+    pub(crate) sub: Vec<f32>,
+    /// Trim-selection output (indices local to `sub`).
+    pub(crate) sub_keep: Vec<u32>,
+}
+
+impl Workspace {
+    pub fn new() -> Workspace {
+        Workspace::default()
+    }
+
+    /// Pre-size every buffer for tensors of up to `n` elements, so even
+    /// the first step — and any threshold-hint miss, whose candidate set
+    /// can transiently reach `n` — allocates nothing.
+    pub fn with_capacity(n: usize) -> Workspace {
+        Workspace {
+            pairs: Vec::with_capacity(n),
+            indices: Vec::with_capacity(n),
+            cand: Vec::with_capacity(n),
+            sub: Vec::with_capacity(n),
+            sub_keep: Vec::with_capacity(n),
+        }
+    }
+}
+
+/// A fixed set of [`Workspace`]s — one per compression thread.
+///
+/// [`WorkspacePool::with_available_parallelism`] sizes the pool to the
+/// machine (`std::thread::available_parallelism`), which is also the width
+/// the parallel per-bucket path fans out to. A pool of 1 forces the
+/// single-thread inline path (no spawns, zero per-step allocations).
+#[derive(Debug)]
+pub struct WorkspacePool {
+    workspaces: Vec<Workspace>,
+}
+
+impl WorkspacePool {
+    /// Pool of exactly `threads` workspaces (`threads >= 1`).
+    pub fn new(threads: usize) -> WorkspacePool {
+        assert!(threads >= 1, "a pool needs at least one workspace");
+        WorkspacePool {
+            workspaces: (0..threads).map(|_| Workspace::new()).collect(),
+        }
+    }
+
+    /// Pool sized to the machine's available parallelism.
+    pub fn with_available_parallelism() -> WorkspacePool {
+        let threads = std::thread::available_parallelism()
+            .map(|p| p.get())
+            .unwrap_or(1);
+        WorkspacePool::new(threads)
+    }
+
+    /// Number of workspaces (= maximum compression fan-out).
+    pub fn len(&self) -> usize {
+        self.workspaces.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.workspaces.is_empty()
+    }
+
+    /// Borrow workspace `i` (single-thread hot path uses `0`).
+    pub fn workspace_mut(&mut self, i: usize) -> &mut Workspace {
+        &mut self.workspaces[i]
+    }
+
+    /// All workspaces, for chunked parallel fan-out.
+    pub(crate) fn workspaces_mut(&mut self) -> &mut [Workspace] {
+        &mut self.workspaces
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::bucket::{BucketLayout, BucketedCompressor};
+    use crate::compress::{CompressionConfig, NetSenseCompressor};
+    use crate::testing::alloc::thread_alloc_count;
+    use crate::testing::prop::*;
+    use crate::transport::frame::encode_frame;
+    use crate::util::rng::Pcg64;
+
+    fn randn(n: usize, seed: u64) -> Vec<f32> {
+        let mut r = Pcg64::seeded(seed);
+        let mut v = vec![0f32; n];
+        r.fill_normal_f32(&mut v, 0.0, 1.0);
+        v
+    }
+
+    /// The staged reference path of the ISSUE acceptance test:
+    /// compensate → top_k → quantize → encode → encode_frame.
+    fn staged_frame(c: &mut NetSenseCompressor, g: &[f32], w: &[f32], ratio: f64) -> Vec<u8> {
+        let out = c.compress(g, w, ratio);
+        encode_frame(&out.payload.encode())
+    }
+
+    #[test]
+    fn property_fused_frame_bit_identical_to_staged_reference() {
+        // Single-pass select+quantize+encode must match the staged
+        // reference on the wire, bit for bit, across the quantization
+        // boundary (F32 and F16 payloads), at ratio = 1.0 (the healthy-
+        // network send-everything skip), and at ratio = 0.0 (empty
+        // payload).
+        forall(
+            "fused frame == staged frame",
+            60,
+            vec_f32(1..250, -50.0..50.0),
+            |v| {
+                let n = v.len();
+                let w = randn(n, 777);
+                // Fresh per case: `forall` closures are `Fn`, and the
+                // workspace is transient scratch anyway.
+                let mut ws = Workspace::new();
+                let mut out = Vec::new();
+                for ratio in [1.0, 0.5, 0.1, 0.01, 0.003, 0.0] {
+                    let mut staged = NetSenseCompressor::new(n, CompressionConfig::default());
+                    let mut fused = NetSenseCompressor::new(n, CompressionConfig::default());
+                    let want = staged_frame(&mut staged, v, &w, ratio);
+                    out.clear();
+                    let o = fused.compress_frame_into(v, &w, ratio, &mut ws, &mut out);
+                    if out != want || o.wire_bytes + 8 != want.len() as u64 {
+                        return false;
+                    }
+                }
+                true
+            },
+        );
+    }
+
+    #[test]
+    fn fused_stays_bit_identical_over_many_steps() {
+        // Multi-step: the error-feedback residual, threshold hint, and
+        // prune cache must evolve identically on both paths, so the wire
+        // stays bit-identical arbitrarily deep into a run — including
+        // ratio changes that cross the quantization boundary mid-stream.
+        let n = 3000;
+        let w = randn(n, 5);
+        let mut staged = NetSenseCompressor::new(n, CompressionConfig::default());
+        let mut fused = NetSenseCompressor::new(n, CompressionConfig::default());
+        let mut ws = Workspace::new();
+        let mut out = Vec::new();
+        let mut g = randn(n, 6);
+        let mut r = Pcg64::seeded(7);
+        let ratios = [0.1, 0.1, 0.05, 0.01, 0.01, 1.0, 0.1, 0.003, 0.1, 0.0, 0.1];
+        for (step, &ratio) in ratios.iter().cycle().take(40).enumerate() {
+            for x in g.iter_mut() {
+                *x += 0.05 * r.normal() as f32;
+            }
+            let want = staged_frame(&mut staged, &g, &w, ratio);
+            out.clear();
+            let o = fused.compress_frame_into(&g, &w, ratio, &mut ws, &mut out);
+            assert_eq!(out, want, "step {step} ratio {ratio}: wire diverged");
+            assert_eq!(o.wire_bytes as usize + 8, want.len(), "step {step}");
+            assert_eq!(
+                staged.residual_norm(),
+                fused.residual_norm(),
+                "step {step}: residual state diverged"
+            );
+            assert_eq!(
+                staged.predict_wire_bytes(ratio),
+                fused.predict_wire_bytes(ratio),
+                "step {step}: prediction state diverged"
+            );
+        }
+    }
+
+    #[test]
+    fn steady_state_fused_step_is_allocation_free() {
+        // The acceptance gate: once the workspace, the compressor scratch,
+        // and the wire buffer are warm, a compress+encode step performs
+        // ZERO heap allocations. The lib test binary runs under
+        // `testing::alloc::CountingAlloc`, so any allocation on this
+        // thread is caught.
+        let n = 20_000;
+        let w = randn(n, 11);
+        let mut g = randn(n, 12);
+        let mut r = Pcg64::seeded(13);
+        let mut c = NetSenseCompressor::new(n, CompressionConfig::default());
+        let mut ws = Workspace::with_capacity(n);
+        let mut out: Vec<u8> = Vec::new();
+        let mut step = |c: &mut NetSenseCompressor,
+                        ws: &mut Workspace,
+                        out: &mut Vec<u8>,
+                        g: &mut [f32],
+                        r: &mut Pcg64| {
+            for x in g.iter_mut() {
+                *x += 0.05 * r.normal() as f32;
+            }
+            out.clear();
+            c.compress_frame_into(g, &w, 0.1, ws, out);
+        };
+        for _ in 0..40 {
+            step(&mut c, &mut ws, &mut out, &mut g, &mut r);
+        }
+        let before = thread_alloc_count();
+        for _ in 0..10 {
+            step(&mut c, &mut ws, &mut out, &mut g, &mut r);
+        }
+        let allocs = thread_alloc_count() - before;
+        assert_eq!(allocs, 0, "steady-state fused step allocated {allocs} times");
+    }
+
+    #[test]
+    fn steady_state_bucketed_fused_step_is_allocation_free() {
+        // Same gate through the bucketed path: a pool of 1 runs the
+        // inline no-spawn fan-out, and every per-bucket frame buffer is
+        // reused — zero allocations per steady-state step.
+        let n = 16_000;
+        let layout = BucketLayout::new(n, 3000);
+        let w = randn(n, 21);
+        let mut g = randn(n, 22);
+        let mut r = Pcg64::seeded(23);
+        let mut bc = BucketedCompressor::new(layout, CompressionConfig::default());
+        let mut pool = WorkspacePool::new(1);
+        // Pre-size to the largest bucket so even a threshold-hint miss
+        // (candidate set transiently near bucket size) cannot regrow a
+        // buffer mid-measurement.
+        *pool.workspace_mut(0) = Workspace::with_capacity(3000);
+        let mut step = |bc: &mut BucketedCompressor, pool: &mut WorkspacePool, g: &mut [f32], r: &mut Pcg64| {
+            for x in g.iter_mut() {
+                *x += 0.05 * r.normal() as f32;
+            }
+            bc.compress_frames(g, &w, 0.1, pool);
+        };
+        for _ in 0..40 {
+            step(&mut bc, &mut pool, &mut g, &mut r);
+        }
+        let before = thread_alloc_count();
+        for _ in 0..10 {
+            step(&mut bc, &mut pool, &mut g, &mut r);
+        }
+        let allocs = thread_alloc_count() - before;
+        assert_eq!(allocs, 0, "steady-state bucketed step allocated {allocs} times");
+    }
+}
+

@@ -13,7 +13,15 @@
 //! Compression cost is modeled in virtual time via
 //! [`PipelineConfig::compress_bytes_per_sec`] (dense input bytes per
 //! second), calibrated against the measured throughput of the real
-//! compressor in `bench_compress`.
+//! compressor: `bench_compress` records the fused single-pass path
+//! ([`NetSenseCompressor::compress_frame_into`]) and the parallel
+//! per-bucket fan-out
+//! ([`BucketedCompressor::compress_frames`]) in the machine-readable
+//! `BENCH_compress.json` baseline (`make bench-json`) — the
+//! `fused_gbps_*` fields are the number this knob should track.
+//!
+//! [`NetSenseCompressor::compress_frame_into`]: crate::compress::NetSenseCompressor::compress_frame_into
+//! [`BucketedCompressor::compress_frames`]: crate::compress::BucketedCompressor::compress_frames
 //!
 //! This module is the *simulated* backend of
 //! [`crate::transport::GroupTransport::pipelined`]: the coordinator

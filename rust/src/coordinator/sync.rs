@@ -35,6 +35,7 @@ use super::strategy::SyncStrategy;
 use crate::collectives::{sum_sparse, CollectiveTiming};
 use crate::compress::{
     group_indices_by_bytes, BucketLayout, BucketedCompressor, NetSenseCompressor, SparseGradient,
+    WorkspacePool,
 };
 use crate::netsim::SimTime;
 use crate::sensing::RatioController;
@@ -74,6 +75,10 @@ pub struct SyncEngine {
     pipeline: Option<PipelineConfig>,
     /// Lazily allocated per-worker bucketed compressors (pipeline mode).
     bucketed: Vec<BucketedCompressor>,
+    /// Scratch arena for the fused compression hot path, shared across the
+    /// simulated workers (they compress sequentially on this host; buckets
+    /// within one worker fan out across the pool's workspaces).
+    pool: WorkspacePool,
 }
 
 impl SyncEngine {
@@ -89,6 +94,7 @@ impl SyncEngine {
             compressors: Vec::new(),
             pipeline: None,
             bucketed: Vec::new(),
+            pool: WorkspacePool::with_available_parallelism(),
         }
     }
 
@@ -309,11 +315,15 @@ impl SyncEngine {
         }
     }
 
-    /// Full-fidelity bucketed pipelined synchronization: per-bucket
-    /// Algorithm-2 compression, BDP-sized transport stages, compress ∥
-    /// transmit overlap. The reduced gradient is invariant to the transport
-    /// scheduling — only the virtual clock differs from a monolithic send
-    /// of the same bucketed payloads.
+    /// Full-fidelity bucketed pipelined synchronization: per-bucket fused
+    /// Algorithm-2 compression straight to wire frames
+    /// ([`BucketedCompressor::compress_frames`] — no `SparseGradient` on
+    /// the send side, buckets compressed in parallel across the workspace
+    /// pool), BDP-sized transport stages, compress ∥ transmit overlap.
+    /// The receive/reduce side decodes the frames — exactly what a real
+    /// receiver does — and accumulates bucket-wise. The reduced gradient
+    /// is invariant to the transport scheduling — only the virtual clock
+    /// differs from a monolithic send of the same bucketed payloads.
     fn sync_full_pipelined(
         &mut self,
         net: &mut dyn GroupTransport,
@@ -326,15 +336,21 @@ impl SyncEngine {
         let nb = layout.n_buckets();
         let mut quantized = false;
         let mut wire: Vec<Vec<u64>> = Vec::with_capacity(self.n_workers);
-        let mut per_bucket: Vec<Vec<SparseGradient>> =
-            (0..nb).map(|_| Vec::with_capacity(self.n_workers)).collect();
+        // Receive/reduce side: bucket-wise dense accumulators.
+        let mut parts: Vec<Vec<f32>> = (0..nb).map(|b| vec![0f32; layout.elems(b)]).collect();
+        let bucketed = &mut self.bucketed;
+        let pool = &mut self.pool;
         for (w, grad) in grads.iter().enumerate() {
-            let outs = self.bucketed[w].compress(grad, weights, ratio);
+            let (outs, frames) = bucketed[w].compress_frames(grad, weights, ratio, pool);
             let mut w_wire = Vec::with_capacity(nb);
-            for (b, out) in outs.into_iter().enumerate() {
+            for (b, (out, frame)) in outs.iter().zip(frames).enumerate() {
                 quantized |= out.quantized;
                 w_wire.push(out.wire_bytes);
-                per_bucket[b].push(out.payload);
+                // Receive side: strip the 8-byte frame header, decode the
+                // COO payload, accumulate into this bucket's sum.
+                let payload = SparseGradient::decode(&frame[8..])
+                    .expect("self-encoded bucket frame decodes");
+                payload.add_into(&mut parts[b]);
             }
             wire.push(w_wire);
         }
@@ -343,15 +359,11 @@ impl SyncEngine {
         let timing = net.pipelined(&stages, depth);
         // Numeric: bucket-wise mean of everyone's payloads, fused back.
         let scale = 1.0 / self.n_workers as f32;
-        let parts: Vec<Vec<f32>> = (0..nb)
-            .map(|b| {
-                let mut acc = sum_sparse(layout.elems(b), &per_bucket[b]);
-                for a in acc.iter_mut() {
-                    *a *= scale;
-                }
-                acc
-            })
-            .collect();
+        for p in parts.iter_mut() {
+            for a in p.iter_mut() {
+                *a *= scale;
+            }
+        }
         let mean = layout.fuse(&parts);
         let bytes: Vec<u64> = wire.iter().map(|w| w.iter().sum()).collect();
         self.observe_exchange(&bytes, &timing);

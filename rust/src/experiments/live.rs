@@ -11,14 +11,16 @@
 //! does, which is the paper's central claim.
 //!
 //! Per step, per worker (sparse strategies): drifting synthetic gradients
-//! → Algorithm 2 at the controller's ratio →
-//! [`SparseGradient::encode`] → framed ring all-gather
-//! ([`ring_allgather_frames`]) → decode + sparse-sum → controller
-//! observation. The dense baseline uses the real [`ring_allreduce_f32`]
-//! instead. Reduced gradients are hashed per step and compared across
-//! ranks at the end — a live run must stay bit-identical across workers.
+//! → fused Algorithm 2 straight into a reused wire buffer
+//! ([`NetSenseCompressor::compress_payload_into`] — the send side never
+//! materializes a [`SparseGradient`] and allocates nothing in steady
+//! state) → framed ring all-gather ([`ring_allgather_frames`]) → decode +
+//! sparse-sum → controller observation. The dense baseline uses the real
+//! [`ring_allreduce_f32`] instead. Reduced gradients are hashed per step
+//! and compared across ranks at the end — a live run must stay
+//! bit-identical across workers.
 
-use crate::compress::{NetSenseCompressor, SparseGradient};
+use crate::compress::{NetSenseCompressor, SparseGradient, Workspace};
 use crate::collectives::sum_sparse;
 use crate::coordinator::SyncStrategy;
 use crate::netsim::SimTime;
@@ -267,6 +269,10 @@ fn run_worker(t: &mut dyn Transport, opts: &LiveOpts) -> Result<WorkerOut> {
         .strategy
         .compression_config()
         .map(|c| NetSenseCompressor::new(np, c));
+    // Fused-path scratch + wire buffer, reused across every step (§Perf:
+    // the steady-state send side allocates nothing).
+    let mut ws = Workspace::new();
+    let mut wire: Vec<u8> = Vec::new();
 
     let mut hashes = Vec::with_capacity(opts.steps);
     let mut trace = Vec::with_capacity(opts.steps);
@@ -285,8 +291,8 @@ fn run_worker(t: &mut dyn Transport, opts: &LiveOpts) -> Result<WorkerOut> {
                     (None, SyncStrategy::TopK(r)) => *r,
                     (None, _) => 1.0,
                 };
-                let out = comp.compress(&grads, &weights, ratio);
-                let wire = out.payload.encode();
+                wire.clear();
+                comp.compress_payload_into(&grads, &weights, ratio, &mut ws, &mut wire);
                 let (blocks, timing) = ring_allgather_frames(t, &wire)?;
                 let mut payloads = Vec::with_capacity(n);
                 let mut max_payload = 0u64;

@@ -1,0 +1,91 @@
+//! Per-thread allocation counting for allocation-regression tests.
+//!
+//! [`CountingAlloc`] wraps the system allocator and bumps a thread-local
+//! counter on every `alloc`/`alloc_zeroed`/`realloc` (frees are not
+//! counted — the hot-path contract is about *acquiring* memory). The
+//! counter is thread-local, so a test reads only its own allocations even
+//! when the harness runs tests concurrently.
+//!
+//! The lib test harness installs it as the global allocator (see the
+//! `cfg(test)` item below); benches that want allocs-per-step numbers
+//! install it themselves:
+//!
+//! ```ignore
+//! #[global_allocator]
+//! static ALLOC: netsenseml::testing::alloc::CountingAlloc = CountingAlloc;
+//! ```
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::cell::Cell;
+
+thread_local! {
+    // const-initialized: reading it never allocates, so the allocator
+    // cannot recurse into itself, and `Cell<u64>` registers no TLS
+    // destructor.
+    static ALLOC_COUNT: Cell<u64> = const { Cell::new(0) };
+}
+
+/// System-allocator wrapper that counts allocation calls per thread.
+pub struct CountingAlloc;
+
+fn bump() {
+    let _ = ALLOC_COUNT.try_with(|c| c.set(c.get() + 1));
+}
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        bump();
+        System.alloc(layout)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        bump();
+        System.alloc_zeroed(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        bump();
+        System.realloc(ptr, layout, new_size)
+    }
+}
+
+/// Allocation count on the calling thread since it started (monotone;
+/// meaningful only when [`CountingAlloc`] is the global allocator —
+/// otherwise it stays 0).
+pub fn thread_alloc_count() -> u64 {
+    ALLOC_COUNT.try_with(|c| c.get()).unwrap_or(0)
+}
+
+// The lib's own test binary runs with the counting allocator so the
+// zero-alloc hot-path regression tests can assert; every other build
+// (release lib, binaries, benches, integration tests) keeps the plain
+// system allocator unless it opts in.
+#[cfg(test)]
+#[global_allocator]
+static COUNTING_ALLOC: CountingAlloc = CountingAlloc;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counts_this_threads_allocations() {
+        let before = thread_alloc_count();
+        let v: Vec<u64> = Vec::with_capacity(32);
+        let after = thread_alloc_count();
+        assert!(after > before, "Vec::with_capacity must register");
+        drop(v);
+        // A no-op loop registers nothing.
+        let before = thread_alloc_count();
+        let mut acc = 0u64;
+        for i in 0..100u64 {
+            acc = acc.wrapping_add(i);
+        }
+        std::hint::black_box(acc);
+        assert_eq!(thread_alloc_count(), before);
+    }
+}

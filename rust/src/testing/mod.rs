@@ -1,4 +1,7 @@
 //! Test-support substrates: a proptest-style property testing harness
-//! ([`prop`]) used by unit and integration tests across the crate.
+//! ([`prop`]) used by unit and integration tests across the crate, and a
+//! counting allocator ([`alloc`]) for allocation-regression tests and
+//! allocs-per-step bench reporting.
 
+pub mod alloc;
 pub mod prop;

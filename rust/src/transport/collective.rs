@@ -91,18 +91,25 @@ pub fn ring_allreduce_f32(t: &mut dyn Transport, data: &mut [f32]) -> Result<Rou
     let succ = (rank + 1) % n;
     let pred = (rank + n - 1) % n;
     let mut sent = 0u64;
+    // One reused staging buffer for every outgoing chunk (§Perf: the
+    // staged schedule sends 2·(n−1) chunks per call — collecting a fresh
+    // Vec per phase was pure reallocation churn).
+    let mut out_buf: Vec<u8> = Vec::with_capacity(q * 4);
+    let mut fill_out = |buf: &mut Vec<u8>, r: std::ops::Range<usize>, data: &[f32]| {
+        buf.clear();
+        for x in &data[r] {
+            buf.extend_from_slice(&x.to_le_bytes());
+        }
+    };
 
     // Reduce-scatter: after phase p this rank holds the partial sum of
     // chunk (rank − p) % n over ranks {rank−p, …, rank}; after n−1 phases
     // it owns the fully reduced chunk (rank + 1) % n.
     for p in 0..n - 1 {
         let out_c = (rank + n - p) % n;
-        let out: Vec<u8> = data[chunk(out_c)]
-            .iter()
-            .flat_map(|x| x.to_le_bytes())
-            .collect();
-        sent += out.len() as u64;
-        t.send(succ, &out)?;
+        fill_out(&mut out_buf, chunk(out_c), data);
+        sent += out_buf.len() as u64;
+        t.send(succ, &out_buf)?;
         let in_c = (rank + n - 1 - p) % n;
         let incoming = t.recv(pred)?;
         let dst = &mut data[chunk(in_c)];
@@ -121,12 +128,9 @@ pub fn ring_allreduce_f32(t: &mut dyn Transport, data: &mut [f32]) -> Result<Rou
     // All-gather of the reduced chunks: forward, don't add.
     for p in 0..n - 1 {
         let out_c = (rank + 1 + n - p) % n;
-        let out: Vec<u8> = data[chunk(out_c)]
-            .iter()
-            .flat_map(|x| x.to_le_bytes())
-            .collect();
-        sent += out.len() as u64;
-        t.send(succ, &out)?;
+        fill_out(&mut out_buf, chunk(out_c), data);
+        sent += out_buf.len() as u64;
+        t.send(succ, &out_buf)?;
         let in_c = (rank + n - p) % n;
         let incoming = t.recv(pred)?;
         let dst = &mut data[chunk(in_c)];

@@ -33,12 +33,27 @@ pub const MAX_FRAME_BYTES: usize = 1 << 30;
 
 /// Encode one payload as a frame.
 pub fn encode_frame(payload: &[u8]) -> Vec<u8> {
-    assert!(payload.len() <= MAX_FRAME_BYTES, "payload too large");
     let mut out = Vec::with_capacity(8 + payload.len());
-    out.extend_from_slice(&FRAME_MAGIC.to_le_bytes());
-    out.extend_from_slice(&(payload.len() as u32).to_le_bytes());
-    out.extend_from_slice(payload);
+    encode_frame_into(payload, &mut out);
     out
+}
+
+/// [`encode_frame`] appending into a caller-owned buffer (§Perf: zero
+/// allocations once the buffer has capacity — the send-path variant).
+pub fn encode_frame_into(payload: &[u8], out: &mut Vec<u8>) {
+    out.reserve(8 + payload.len());
+    encode_frame_header_into(payload.len(), out);
+    out.extend_from_slice(payload);
+}
+
+/// Write just the 8-byte frame header for a payload of `payload_len`
+/// bytes the caller appends next — the fused compress→wire path knows the
+/// exact payload size before emitting a single payload byte, so the frame
+/// needs no backpatching and no intermediate copy.
+pub fn encode_frame_header_into(payload_len: usize, out: &mut Vec<u8>) {
+    assert!(payload_len <= MAX_FRAME_BYTES, "payload too large");
+    out.extend_from_slice(&FRAME_MAGIC.to_le_bytes());
+    out.extend_from_slice(&(payload_len as u32).to_le_bytes());
 }
 
 /// Decode one complete frame (the buffer must hold exactly one frame).
@@ -76,6 +91,18 @@ pub fn write_frame(w: &mut impl Write, payload: &[u8]) -> std::io::Result<()> {
 /// yields `UnexpectedEof` (the reader-thread shutdown signal); a torn
 /// header or bad magic yields `InvalidData`.
 pub fn read_frame(r: &mut impl Read) -> std::io::Result<Vec<u8>> {
+    let mut payload = Vec::new();
+    read_frame_into(r, &mut payload)?;
+    Ok(payload)
+}
+
+/// [`read_frame`] into a caller-owned buffer, reusing its capacity across
+/// frames — for receive loops that consume each payload in place before
+/// reading the next. Receivers that hand payload ownership onward (the
+/// TCP reader thread pushing into its inbox channel) still need one owned
+/// `Vec` per frame and keep using [`read_frame`]. On error the buffer
+/// contents are unspecified.
+pub fn read_frame_into(r: &mut impl Read, payload: &mut Vec<u8>) -> std::io::Result<()> {
     let mut header = [0u8; 8];
     r.read_exact(&mut header)?;
     let magic = u32::from_le_bytes(header[0..4].try_into().unwrap());
@@ -92,9 +119,10 @@ pub fn read_frame(r: &mut impl Read) -> std::io::Result<Vec<u8>> {
             format!("frame length {len} exceeds cap"),
         ));
     }
-    let mut payload = vec![0u8; len];
-    r.read_exact(&mut payload)?;
-    Ok(payload)
+    payload.clear();
+    payload.resize(len, 0);
+    r.read_exact(payload)?;
+    Ok(())
 }
 
 #[cfg(test)]
@@ -127,6 +155,38 @@ mod tests {
         let mut short = wire;
         short.pop(); // truncated payload
         assert!(decode_frame(&short).is_err());
+    }
+
+    #[test]
+    fn encode_frame_into_reuses_buffer_and_matches() {
+        let mut buf = Vec::new();
+        encode_frame_into(b"first payload", &mut buf);
+        assert_eq!(buf, encode_frame(b"first payload"));
+        let ptr = buf.as_ptr();
+        buf.clear();
+        encode_frame_into(b"second", &mut buf);
+        assert_eq!(buf, encode_frame(b"second"));
+        assert!(std::ptr::eq(buf.as_ptr(), ptr), "shorter frame must not realloc");
+        // Header-then-payload split emission is byte-identical.
+        buf.clear();
+        encode_frame_header_into(5, &mut buf);
+        buf.extend_from_slice(b"hello");
+        assert_eq!(buf, encode_frame(b"hello"));
+    }
+
+    #[test]
+    fn read_frame_into_reuses_buffer() {
+        let mut stream = Vec::new();
+        write_frame(&mut stream, &[7u8; 64]).unwrap();
+        write_frame(&mut stream, &[9u8; 16]).unwrap();
+        let mut cursor = std::io::Cursor::new(stream);
+        let mut buf = Vec::new();
+        read_frame_into(&mut cursor, &mut buf).unwrap();
+        assert_eq!(buf, vec![7u8; 64]);
+        let ptr = buf.as_ptr();
+        read_frame_into(&mut cursor, &mut buf).unwrap();
+        assert_eq!(buf, vec![9u8; 16]);
+        assert!(std::ptr::eq(buf.as_ptr(), ptr), "smaller frame must not realloc");
     }
 
     #[test]

@@ -43,7 +43,10 @@ use crate::util::error::Result;
 use std::time::Duration;
 
 pub use collective::{ring_allgather_frames, ring_allreduce_f32, RoundTiming};
-pub use frame::{decode_frame, encode_frame, read_frame, write_frame, FRAME_OVERHEAD};
+pub use frame::{
+    decode_frame, encode_frame, encode_frame_into, read_frame, read_frame_into, write_frame,
+    FRAME_OVERHEAD,
+};
 pub use loopback::LoopbackTransport;
 pub use shaped::{ShapedTransport, ShapingConfig};
 pub use sim::SimTransport;
