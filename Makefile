@@ -18,9 +18,12 @@ bench-transport:
 	cargo bench --bench bench_transport
 
 # Machine-readable perf baselines: writes BENCH_compress.json (fused vs
-# staged throughput, allocs/step, parallel bucket scaling) and
-# BENCH_pipeline.json (pipelined vs monolithic exchange) at the repo root.
-# NETSENSE_BENCH_FAST=1 shrinks the measurement windows for CI.
+# staged throughput, allocs/step, parallel bucket scaling),
+# BENCH_pipeline.json (pipelined vs monolithic exchange), and
+# BENCH_transport.json (frame codec, ring collectives, envelope + token
+# bucket overhead) at the repo root. NETSENSE_BENCH_FAST=1 shrinks the
+# measurement windows for CI.
 bench-json:
 	cargo bench --bench bench_compress
 	cargo bench --bench bench_pipeline
+	cargo bench --bench bench_transport

@@ -1,8 +1,14 @@
 //! Transport-layer micro-benchmarks: frame codec throughput, loopback
 //! ring-collective throughput (the satellite registered in the Makefile as
-//! `make bench-transport`), and token-bucket overhead on the unshaped
-//! path. Honors `NETSENSE_BENCH_FAST=1` via the shared harness.
+//! `make bench-transport`), elastic-envelope overhead, and token-bucket
+//! overhead on the unshaped path. Honors `NETSENSE_BENCH_FAST=1` via the
+//! shared harness and emits the machine-readable baseline
+//! `BENCH_transport.json` at the repo root (`make bench-json`).
 
+mod common;
+
+use common::BenchJson;
+use netsenseml::fault::{parse_envelope, write_envelope, FrameKind};
 use netsenseml::transport::{
     encode_frame, decode_frame, ring_allgather_frames, ring_allreduce_f32, LoopbackTransport,
     ShapedTransport, ShapingConfig, Transport,
@@ -11,49 +17,79 @@ use netsenseml::util::bench::{bb, Bench};
 
 fn main() {
     let mut b = Bench::new();
+    let mut json = BenchJson::new("transport");
 
     b.group("frame codec");
     let payload = vec![0xABu8; 1 << 20];
-    b.run_throughput("encode 1 MB", 1 << 20, || {
-        bb(encode_frame(bb(&payload)));
-    });
+    let enc = b
+        .run_throughput("encode 1 MB", 1 << 20, || {
+            bb(encode_frame(bb(&payload)));
+        })
+        .throughput_per_sec()
+        .unwrap_or(0.0);
     let framed = encode_frame(&payload);
-    b.run_throughput("decode 1 MB", 1 << 20, || {
-        bb(decode_frame(bb(&framed)).unwrap());
-    });
+    let dec = b
+        .run_throughput("decode 1 MB", 1 << 20, || {
+            bb(decode_frame(bb(&framed)).unwrap());
+        })
+        .throughput_per_sec()
+        .unwrap_or(0.0);
+    json.set("frame_encode_gbps", enc / 1e9);
+    json.set("frame_decode_gbps", dec / 1e9);
+
+    b.group("elastic envelope (fault layer)");
+    let mut env_buf: Vec<u8> = Vec::with_capacity((1 << 20) + 16);
+    let env = b
+        .run_throughput("wrap+parse 1 MB", 1 << 20, || {
+            env_buf.clear();
+            write_envelope(FrameKind::Data, 7, 42, &mut env_buf);
+            env_buf.extend_from_slice(&payload);
+            bb(parse_envelope(bb(&env_buf)).unwrap());
+        })
+        .throughput_per_sec()
+        .unwrap_or(0.0);
+    json.set("envelope_wrap_parse_gbps", env / 1e9);
 
     b.group("loopback collectives (4 ranks × 1 MB)");
     let block = vec![0x5Au8; 1 << 20];
-    b.run_throughput("ring all-gather", 4 << 20, || {
-        let mesh = LoopbackTransport::mesh(4);
-        let handles: Vec<_> = mesh
-            .into_iter()
-            .map(|mut t| {
-                let payload = block.clone();
-                std::thread::spawn(move || {
-                    bb(ring_allgather_frames(&mut t, &payload).unwrap());
+    let ag = b
+        .run_throughput("ring all-gather", 4 << 20, || {
+            let mesh = LoopbackTransport::mesh(4);
+            let handles: Vec<_> = mesh
+                .into_iter()
+                .map(|mut t| {
+                    let payload = block.clone();
+                    std::thread::spawn(move || {
+                        bb(ring_allgather_frames(&mut t, &payload).unwrap());
+                    })
                 })
-            })
-            .collect();
-        for h in handles {
-            h.join().unwrap();
-        }
-    });
-    b.run_throughput("ring all-reduce f32 (4 × 256k elems)", 4 << 20, || {
-        let mesh = LoopbackTransport::mesh(4);
-        let handles: Vec<_> = mesh
-            .into_iter()
-            .map(|mut t| {
-                std::thread::spawn(move || {
-                    let mut data = vec![1.0f32; 1 << 18];
-                    bb(ring_allreduce_f32(&mut t, &mut data).unwrap());
+                .collect();
+            for h in handles {
+                h.join().unwrap();
+            }
+        })
+        .throughput_per_sec()
+        .unwrap_or(0.0);
+    let ar = b
+        .run_throughput("ring all-reduce f32 (4 × 256k elems)", 4 << 20, || {
+            let mesh = LoopbackTransport::mesh(4);
+            let handles: Vec<_> = mesh
+                .into_iter()
+                .map(|mut t| {
+                    std::thread::spawn(move || {
+                        let mut data = vec![1.0f32; 1 << 18];
+                        bb(ring_allreduce_f32(&mut t, &mut data).unwrap());
+                    })
                 })
-            })
-            .collect();
-        for h in handles {
-            h.join().unwrap();
-        }
-    });
+                .collect();
+            for h in handles {
+                h.join().unwrap();
+            }
+        })
+        .throughput_per_sec()
+        .unwrap_or(0.0);
+    json.set("allgather_4x1mb_gbps", ag / 1e9);
+    json.set("allreduce_4x256k_gbps", ar / 1e9);
 
     b.group("token bucket");
     // Rate far above the payload volume AND a burst far above one frame:
@@ -67,10 +103,15 @@ fn main() {
     let mut shaped = ShapedTransport::new(src, unthrottled);
     let mut sink = sink;
     let msg = vec![0u8; 64 << 10];
-    b.run_throughput("shaped send+recv 64 kB (unthrottled)", 64 << 10, || {
-        shaped.send(1, &msg).unwrap();
-        bb(sink.recv(0).unwrap());
-    });
+    let tb = b
+        .run_throughput("shaped send+recv 64 kB (unthrottled)", 64 << 10, || {
+            shaped.send(1, &msg).unwrap();
+            bb(sink.recv(0).unwrap());
+        })
+        .throughput_per_sec()
+        .unwrap_or(0.0);
+    json.set("shaped_sendrecv_gbps", tb / 1e9);
 
     b.finish();
+    json.write();
 }

@@ -30,7 +30,9 @@
 //! assert_eq!(layout.fuse(&parts), g);
 //! ```
 
-use super::pipeline::{CompressionConfig, CompressionOutcome, FusedOutcome, NetSenseCompressor};
+use super::pipeline::{
+    CompressionConfig, CompressionOutcome, CompressorState, FusedOutcome, NetSenseCompressor,
+};
 use super::workspace::WorkspacePool;
 use std::ops::Range;
 
@@ -271,6 +273,28 @@ impl BucketedCompressor {
     /// outcome of [`Self::compress`]: an OR across buckets.)
     pub fn would_quantize(&self, ratio: f64) -> bool {
         self.compressors.iter().any(|c| c.would_quantize(ratio))
+    }
+
+    /// Per-bucket state snapshot for checkpointing (same bit-exact
+    /// resumption contract as [`NetSenseCompressor::export_state`]).
+    pub fn export_state(&self) -> Vec<CompressorState> {
+        self.compressors
+            .iter()
+            .map(NetSenseCompressor::export_state)
+            .collect()
+    }
+
+    /// Restore a [`Self::export_state`] snapshot (bucket count and
+    /// lengths must match the layout).
+    pub fn import_state(&mut self, states: &[CompressorState]) {
+        assert_eq!(
+            states.len(),
+            self.compressors.len(),
+            "checkpoint bucket count mismatch"
+        );
+        for (c, s) in self.compressors.iter_mut().zip(states) {
+            c.import_state(s);
+        }
     }
 
     /// L2 norm of the concatenated residual across buckets.

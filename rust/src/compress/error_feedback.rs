@@ -126,6 +126,17 @@ impl ErrorFeedback {
         &self.residual
     }
 
+    /// Overwrite the residual from a snapshot (checkpoint restore — the
+    /// rejoin path of [`crate::fault::Checkpoint`]).
+    pub fn restore(&mut self, residual: &[f32]) {
+        assert_eq!(
+            residual.len(),
+            self.residual.len(),
+            "residual snapshot length mismatch"
+        );
+        self.residual.copy_from_slice(residual);
+    }
+
     pub fn reset(&mut self) {
         self.residual.iter_mut().for_each(|x| *x = 0.0);
     }

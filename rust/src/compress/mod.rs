@@ -38,7 +38,9 @@ pub mod workspace;
 
 pub use bucket::{group_indices_by_bytes, BucketLayout, BucketedCompressor};
 pub use error_feedback::ErrorFeedback;
-pub use pipeline::{CompressionConfig, CompressionOutcome, FusedOutcome, NetSenseCompressor};
+pub use pipeline::{
+    CompressionConfig, CompressionOutcome, CompressorState, FusedOutcome, NetSenseCompressor,
+};
 pub use quantize::{f32_to_f16_bits, f16_bits_to_f32, Precision};
 pub use sparse::SparseGradient;
 pub use workspace::{Workspace, WorkspacePool};

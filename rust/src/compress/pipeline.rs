@@ -455,6 +455,51 @@ impl NetSenseCompressor {
             .unwrap_or(true);
         ratio.clamp(0.0, 1.0) < self.config.quant_ratio_threshold && density_ok
     }
+
+    /// Snapshot everything that makes future compress calls a pure
+    /// function of future inputs: the error-feedback residual plus the
+    /// selection caches (threshold hint, pruning cache, cached norm). A
+    /// compressor restored from this state continues **bit-identically**
+    /// to the original — the contract [`crate::fault::Checkpoint`] gives
+    /// a rejoining rank.
+    pub fn export_state(&self) -> CompressorState {
+        CompressorState {
+            residual: self.ef.residual().to_vec(),
+            last_threshold: self.last_threshold,
+            prune_cache: self.prune_cache,
+            prune_cache_age: self.prune_cache_age,
+            last_grad_l2: self.last_grad_l2,
+        }
+    }
+
+    /// Restore a [`Self::export_state`] snapshot (tensor length must
+    /// match).
+    pub fn import_state(&mut self, state: &CompressorState) {
+        self.ef.restore(&state.residual);
+        self.last_threshold = state.last_threshold;
+        self.prune_cache = state.prune_cache;
+        self.prune_cache_age = state.prune_cache_age;
+        self.last_grad_l2 = state.last_grad_l2;
+    }
+}
+
+/// The serializable state of one [`NetSenseCompressor`] (one tensor or
+/// one bucket): the error-feedback residual and the caches that make the
+/// next compress call reproducible bit-for-bit. Wire format lives in
+/// [`crate::fault::Checkpoint`].
+#[derive(Clone, Debug, PartialEq)]
+pub struct CompressorState {
+    pub residual: Vec<f32>,
+    /// Last step's k-th magnitude (top-k threshold-reuse hint — it
+    /// changes which coordinates the fast path selects, so it must
+    /// survive a restore for bit-exact resumption).
+    pub last_threshold: Option<f32>,
+    /// Cached `(pruning_rate, |weight| threshold)`.
+    pub prune_cache: Option<(f64, f32)>,
+    pub prune_cache_age: u32,
+    /// Compensated gradient L2 of the most recent compress (the
+    /// quantization-skip predictor).
+    pub last_grad_l2: Option<f64>,
 }
 
 fn l2(xs: &[f32]) -> f64 {

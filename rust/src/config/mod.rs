@@ -10,6 +10,7 @@
 use crate::coordinator::PipelineConfig;
 use crate::experiments::live::{LiveBackend, LiveOpts};
 use crate::experiments::scenario::RunOpts;
+use crate::fault::{FaultConfig, FaultSchedule};
 use crate::transport::ShapingConfig;
 use crate::util::error::{anyhow, Result};
 use crate::util::toml::{TomlDoc, TomlValue};
@@ -207,6 +208,15 @@ const LIVE_KEYS: &[&str] = &[
     "live.seed",
 ];
 
+/// Keys accepted under `[fault]` (failure detector + chaos schedule).
+const FAULT_KEYS: &[&str] = &[
+    "fault.recv_timeout_ms",
+    "fault.probe_timeout_ms",
+    "fault.kill",
+    "fault.stall",
+    "fault.flap",
+];
+
 /// Non-negative integer lookup with loud failures: a wrong-typed value
 /// errors instead of falling back to the default, and a negative value
 /// errors instead of wrapping through `as usize`/`as u64`.
@@ -367,7 +377,35 @@ fn parse_schedule(v: &TomlValue) -> Result<Vec<(f64, f64)>> {
     Ok(out)
 }
 
-/// Everything a `netsenseml live` run needs (`[transport]` + `[live]`).
+/// `[[rank, step], …]` (arity 2) or `[[rank, step, ms], …]` (arity 3)
+/// from a TOML array of integer rows, all entries non-negative.
+fn parse_fault_rows(v: &TomlValue, path: &str, arity: usize) -> Result<Vec<Vec<i64>>> {
+    let arr = v
+        .as_arr()
+        .ok_or_else(|| anyhow!("{path} must be an array of {arity}-element integer rows"))?;
+    let mut out = Vec::with_capacity(arr.len());
+    for item in arr {
+        let row = item
+            .as_arr()
+            .filter(|r| r.len() == arity)
+            .ok_or_else(|| anyhow!("{path} entries must be {arity}-element arrays"))?;
+        let mut vals = Vec::with_capacity(arity);
+        for cell in row {
+            let n = cell
+                .as_i64()
+                .ok_or_else(|| anyhow!("{path} entries must be integers"))?;
+            if n < 0 {
+                return Err(anyhow!("{path} entries must be ≥ 0 (got {n})"));
+            }
+            vals.push(n);
+        }
+        out.push(vals);
+    }
+    Ok(out)
+}
+
+/// Everything a `netsenseml live` run needs
+/// (`[transport]` + `[live]` + `[fault]`).
 #[derive(Clone, Debug, PartialEq)]
 pub struct LiveConfig {
     pub transport: TransportConfig,
@@ -376,6 +414,10 @@ pub struct LiveConfig {
     pub strategy: String,
     pub compute_ms: u64,
     pub seed: u64,
+    /// Failure-detector deadlines.
+    pub fault: FaultConfig,
+    /// Chaos schedule (kills / stalls / link flaps, by rank and step).
+    pub faults: FaultSchedule,
 }
 
 impl Default for LiveConfig {
@@ -387,6 +429,8 @@ impl Default for LiveConfig {
             strategy: "netsense".to_string(),
             compute_ms: 0,
             seed: 42,
+            fault: FaultConfig::default(),
+            faults: FaultSchedule::default(),
         }
     }
 }
@@ -401,16 +445,17 @@ impl LiveConfig {
     pub fn from_toml(text: &str) -> Result<LiveConfig> {
         let doc = TomlDoc::parse(text).map_err(|e| anyhow!("{e}"))?;
         // A misspelled *section* must fail as loudly as a misspelled key —
-        // live configs know exactly two tables.
+        // live configs know exactly three tables.
         for key in doc.entries.keys() {
             let section = key.split('.').next().unwrap_or(key);
-            if section != "transport" && section != "live" {
+            if section != "transport" && section != "live" && section != "fault" {
                 return Err(anyhow!(
-                    "unknown section or key `{key}` (live configs use [transport] and [live])"
+                    "unknown section or key `{key}` (live configs use [transport], [live] and [fault])"
                 ));
             }
         }
         reject_unknown_keys(&doc, "live", LIVE_KEYS)?;
+        reject_unknown_keys(&doc, "fault", FAULT_KEYS)?;
         let mut c = LiveConfig {
             transport: TransportConfig::from_toml_doc(&doc)?,
             ..Default::default()
@@ -430,6 +475,30 @@ impl LiveConfig {
         if let Some(v) = get_nonneg(&doc, "live.seed")? {
             c.seed = v as u64;
         }
+        if let Some(v) = get_nonneg(&doc, "fault.recv_timeout_ms")? {
+            c.fault.recv_timeout_ms = v as u64;
+        }
+        if let Some(v) = get_nonneg(&doc, "fault.probe_timeout_ms")? {
+            c.fault.probe_timeout_ms = v as u64;
+        }
+        if let Some(v) = doc.get("fault.kill") {
+            c.faults.kills = parse_fault_rows(v, "fault.kill", 2)?
+                .into_iter()
+                .map(|r| (r[0] as usize, r[1] as usize))
+                .collect();
+        }
+        if let Some(v) = doc.get("fault.stall") {
+            c.faults.stalls = parse_fault_rows(v, "fault.stall", 3)?
+                .into_iter()
+                .map(|r| (r[0] as usize, r[1] as usize, r[2] as u64))
+                .collect();
+        }
+        if let Some(v) = doc.get("fault.flap") {
+            c.faults.flaps = parse_fault_rows(v, "fault.flap", 3)?
+                .into_iter()
+                .map(|r| (r[0] as usize, r[1] as usize, r[2] as u64))
+                .collect();
+        }
         c.validate()?;
         Ok(c)
     }
@@ -444,6 +513,22 @@ impl LiveConfig {
                 "unknown strategy `{}` (netsense|allreduce|topk[:r])",
                 self.strategy
             ));
+        }
+        if self.fault.recv_timeout_ms == 0 || self.fault.probe_timeout_ms == 0 {
+            return Err(anyhow!("fault timeouts must be ≥ 1 ms"));
+        }
+        if self.faults.kill_step(0).is_some() {
+            return Err(anyhow!(
+                "fault.kill cannot target rank 0 (it carries the report)"
+            ));
+        }
+        if let Some(r) = self.faults.max_rank() {
+            if r >= self.transport.n_workers {
+                return Err(anyhow!(
+                    "fault schedule names rank {r} but transport.n_workers is {}",
+                    self.transport.n_workers
+                ));
+            }
         }
         Ok(())
     }
@@ -460,6 +545,8 @@ impl LiveConfig {
             shaping: self.transport.shaping(),
             compute_ms: self.compute_ms,
             seed: self.seed,
+            fault: self.fault.clone(),
+            faults: self.faults.clone(),
         }
     }
 }
@@ -614,11 +701,74 @@ seed = 7
     }
 
     #[test]
+    fn fault_table_parses_into_schedule_and_deadlines() {
+        let c = LiveConfig::from_toml(
+            r#"
+[transport]
+n_workers = 4
+
+[fault]
+recv_timeout_ms = 250
+probe_timeout_ms = 1000
+kill = [[2, 6]]
+stall = [[1, 3, 50]]
+flap = [[3, 8, 400]]
+"#,
+        )
+        .unwrap();
+        assert_eq!(c.fault.recv_timeout_ms, 250);
+        assert_eq!(c.fault.probe_timeout_ms, 1000);
+        assert_eq!(c.faults.kills, vec![(2, 6)]);
+        assert_eq!(c.faults.stalls, vec![(1, 3, 50)]);
+        assert_eq!(c.faults.flaps, vec![(3, 8, 400)]);
+        let opts = c.live_opts();
+        assert_eq!(opts.fault.recv_timeout_ms, 250);
+        assert_eq!(opts.faults.kill_step(2), Some(6));
+        // Defaults: empty schedule, 10 s deadlines.
+        let c = LiveConfig::from_toml("[transport]\nn_workers = 2").unwrap();
+        assert!(c.faults.is_empty());
+        assert_eq!(c.fault.recv_timeout_ms, 10_000);
+    }
+
+    #[test]
+    fn fault_table_rejects_bad_values() {
+        // A typo must fail loudly.
+        let e = LiveConfig::from_toml("[fault]\nkil = [[1, 2]]").unwrap_err();
+        assert!(format!("{e:#}").contains("unknown key"), "{e:#}");
+        // Rank 0 carries the report — killing it is a config error.
+        assert!(LiveConfig::from_toml("[fault]\nkill = [[0, 3]]").is_err());
+        // Ranks must exist.
+        assert!(LiveConfig::from_toml(
+            "[transport]\nn_workers = 2\n[fault]\nkill = [[5, 3]]"
+        )
+        .is_err());
+        // Malformed rows and negatives.
+        assert!(LiveConfig::from_toml("[fault]\nkill = [[1]]").is_err());
+        assert!(LiveConfig::from_toml("[fault]\nkill = [1, 2]").is_err());
+        assert!(LiveConfig::from_toml("[fault]\nstall = [[1, 2]]").is_err());
+        assert!(LiveConfig::from_toml("[fault]\nstall = [[1, -2, 5]]").is_err());
+        assert!(LiveConfig::from_toml("[fault]\nflap = [[1, 2, -1]]").is_err());
+        // Zero deadlines would make every round a recovery.
+        assert!(LiveConfig::from_toml("[fault]\nrecv_timeout_ms = 0").is_err());
+    }
+
+    #[test]
     fn live_exemplar_config_file_parses() {
         let path = Path::new(env!("CARGO_MANIFEST_DIR")).join("configs/live.toml");
         let c = LiveConfig::from_toml_file(&path).unwrap();
         assert_eq!(c.transport.backend, "tcp");
         assert!(c.transport.shaping().is_some());
+        c.live_opts(); // must materialize without panicking
+    }
+
+    #[test]
+    fn elastic_exemplar_config_file_parses() {
+        let path = Path::new(env!("CARGO_MANIFEST_DIR")).join("configs/elastic.toml");
+        let c = LiveConfig::from_toml_file(&path).unwrap();
+        assert_eq!(c.faults.kills, vec![(2, 12)]);
+        assert_eq!(c.faults.flaps, vec![(3, 24, 400)]);
+        assert_eq!(c.fault.recv_timeout_ms, 250);
+        assert_eq!(c.transport.n_workers, 4);
         c.live_opts(); // must materialize without panicking
     }
 }

@@ -34,9 +34,10 @@ use super::pipeline_exchange::{ExchangeTiming, PipelineConfig, PipelineStage};
 use super::strategy::SyncStrategy;
 use crate::collectives::{sum_sparse, CollectiveTiming};
 use crate::compress::{
-    group_indices_by_bytes, BucketLayout, BucketedCompressor, NetSenseCompressor, SparseGradient,
-    WorkspacePool,
+    group_indices_by_bytes, BucketLayout, BucketedCompressor, CompressorState, NetSenseCompressor,
+    SparseGradient, WorkspacePool,
 };
+use crate::fault::Checkpoint;
 use crate::netsim::SimTime;
 use crate::sensing::RatioController;
 use crate::transport::GroupTransport;
@@ -240,6 +241,53 @@ impl SyncEngine {
 
     pub fn controller(&self) -> Option<&RatioController> {
         self.controller.as_ref()
+    }
+
+    /// Snapshot every worker's compressor state into a [`Checkpoint`]
+    /// (monolithic: one state per worker; pipelined: per-bucket states,
+    /// worker-major). `None` before any full-fidelity round has run —
+    /// there is no state worth saving yet.
+    pub fn export_checkpoint(&self, epoch: u64, step: u64) -> Option<Checkpoint> {
+        let states: Vec<CompressorState> = if !self.bucketed.is_empty() {
+            self.bucketed.iter().flat_map(|b| b.export_state()).collect()
+        } else if !self.compressors.is_empty() {
+            self.compressors
+                .iter()
+                .map(NetSenseCompressor::export_state)
+                .collect()
+        } else {
+            return None;
+        };
+        Some(Checkpoint::new(epoch, step, states))
+    }
+
+    /// Restore a [`Self::export_checkpoint`] snapshot into an engine
+    /// configured identically (strategy, worker count, bucket layout).
+    /// The engine then continues **bit-identically** to the one that
+    /// exported — the rejoin guarantee tested below.
+    pub fn import_checkpoint(&mut self, ck: &Checkpoint) {
+        if self.pipeline.is_some() {
+            self.ensure_bucketed();
+            let nb = self.bucket_layout().n_buckets();
+            assert_eq!(
+                ck.states.len(),
+                self.n_workers * nb,
+                "checkpoint shape mismatch (workers × buckets)"
+            );
+            for (w, b) in self.bucketed.iter_mut().enumerate() {
+                b.import_state(&ck.states[w * nb..(w + 1) * nb]);
+            }
+        } else {
+            self.ensure_compressors();
+            assert_eq!(
+                ck.states.len(),
+                self.n_workers,
+                "checkpoint shape mismatch (one state per worker)"
+            );
+            for (c, s) in self.compressors.iter_mut().zip(&ck.states) {
+                c.import_state(s);
+            }
+        }
     }
 
     /// Mean residual norm across workers (compression-health metric).
@@ -751,6 +799,47 @@ mod tests {
             t_pipe < t_mono,
             "pipelined {t_pipe} not faster than monolithic {t_mono}"
         );
+    }
+
+    /// The rejoin path end-to-end through the coordinator: checkpoint →
+    /// wire → restore into a fresh engine → bitwise-identical
+    /// continuation, monolithic and pipelined both.
+    #[test]
+    fn checkpoint_restores_engine_to_bitwise_continuation() {
+        for pipelined in [false, true] {
+            let mk = || {
+                let e = SyncEngine::new(SyncStrategy::TopK(0.1), N, P);
+                if pipelined {
+                    e.with_pipeline(PipelineConfig {
+                        bucket_size_bytes: 10_000,
+                        ..Default::default()
+                    })
+                } else {
+                    e
+                }
+            };
+            let w = weights();
+            let mut original = mk();
+            assert!(original.export_checkpoint(0, 0).is_none(), "no state yet");
+            for seed in 0..4 {
+                original.sync_full(&mut sim(100.0), &grads(seed), &w);
+            }
+            let wire = original.export_checkpoint(1, 4).unwrap().encode();
+            let ck = crate::fault::Checkpoint::decode(&wire).unwrap();
+            assert_eq!((ck.epoch, ck.step), (1, 4));
+            let mut rejoined = mk();
+            rejoined.import_checkpoint(&ck);
+            for seed in 4..8 {
+                let gs = grads(seed);
+                let a = original.sync_full(&mut sim(100.0), &gs, &w);
+                let b = rejoined.sync_full(&mut sim(100.0), &gs, &w);
+                assert_eq!(
+                    a.mean_grad, b.mean_grad,
+                    "pipelined={pipelined} seed {seed}: restored engine diverged"
+                );
+                assert_eq!(a.payload_bytes, b.payload_bytes, "pipelined={pipelined}");
+            }
+        }
     }
 
     #[test]

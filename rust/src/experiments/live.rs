@@ -5,29 +5,45 @@
 //! Every worker runs in its own thread with its own rank-level
 //! [`Transport`] endpoint, its own Algorithm-2 compressor, and its own
 //! Algorithm-1 [`RatioController`] fed exclusively by *measured*
-//! observables: the bytes it saw move and the wall-clock time its ring
-//! round took. Nothing in this module reads configured rates — shaped
-//! runs demonstrate that the controller reacts to what the wire actually
-//! does, which is the paper's central claim.
+//! observables: the bytes it saw move, the wall-clock time its ring round
+//! took, and whether the round *lost* anything (a recv deadline or a
+//! membership recovery — the controller's backoff trigger). Nothing in
+//! this module reads configured rates — shaped runs demonstrate that the
+//! controller reacts to what the wire actually does, which is the paper's
+//! central claim.
+//!
+//! Every exchange — sparse and the dense baseline alike — rides the
+//! **elastic** collective ([`crate::fault::ElasticExchange`]): payloads
+//! travel in epoch-tagged envelopes over the ring of *live* ranks
+//! ([`crate::fault::Membership`]), a silent rank is suspected on a
+//! deadline, the group agrees on a new epoch through a probe round,
+//! rebuilds the ring over survivors, and replays the interrupted round.
+//! Chaos scenarios ([`crate::fault::FaultSchedule`]) inject kills, stalls
+//! and flapping links per rank through a
+//! [`FaultInjector`](crate::fault::FaultInjector); the same schedule
+//! replayed on the simulator ([`crate::fault::sim_trajectory`]) must
+//! produce the same epoch/live-set trajectory
+//! ([`LiveReport::trajectory`]) — asserted in the chaos tests below.
 //!
 //! Per step, per worker (sparse strategies): drifting synthetic gradients
 //! → fused Algorithm 2 straight into a reused wire buffer
 //! ([`NetSenseCompressor::compress_payload_into`] — the send side never
 //! materializes a [`SparseGradient`] and allocates nothing in steady
-//! state) → framed ring all-gather ([`ring_allgather_frames`]) → decode +
-//! sparse-sum → controller observation. The dense baseline uses the real
-//! [`ring_allreduce_f32`] instead. Reduced gradients are hashed per step
-//! and compared across ranks at the end — a live run must stay
-//! bit-identical across workers.
+//! state) → elastic ring all-gather → decode + sparse-sum over the live
+//! set → controller observation. Reduced gradients are hashed per step
+//! and compared across ranks at the end — survivors must stay
+//! bit-identical through every recovery.
 
-use crate::compress::{NetSenseCompressor, SparseGradient, Workspace};
 use crate::collectives::sum_sparse;
+use crate::compress::{NetSenseCompressor, SparseGradient, Workspace};
 use crate::coordinator::SyncStrategy;
+use crate::fault::{
+    ElasticExchange, FaultConfig, FaultInjector, FaultSchedule, Membership, SyncTrajectory,
+};
 use crate::netsim::SimTime;
 use crate::sensing::RatioController;
 use crate::transport::{
-    ring_allgather_frames, ring_allreduce_f32, LoopbackTransport, ShapedTransport, ShapingConfig,
-    TcpTransport, Transport,
+    LoopbackTransport, ShapedTransport, ShapingConfig, TcpTransport, Transport,
 };
 use crate::util::error::{anyhow, Result};
 use crate::util::rng::Pcg64;
@@ -57,6 +73,12 @@ pub struct LiveOpts {
     /// Simulated local fwd+bwd time per step (thread sleep).
     pub compute_ms: u64,
     pub seed: u64,
+    /// Chaos schedule: per-rank kills / stalls / link flaps, keyed by
+    /// step. Empty = healthy run (the injector is still in the path, as a
+    /// pass-through, so membership checks are always exercised).
+    pub faults: FaultSchedule,
+    /// Failure-detector deadlines (recv + probe).
+    pub fault: FaultConfig,
 }
 
 impl Default for LiveOpts {
@@ -70,6 +92,8 @@ impl Default for LiveOpts {
             shaping: None,
             compute_ms: 0,
             seed: 42,
+            faults: FaultSchedule::default(),
+            fault: FaultConfig::default(),
         }
     }
 }
@@ -82,12 +106,18 @@ pub struct LiveStepRecord {
     pub at_s: f64,
     /// Compression ratio used this step (1.0 = dense).
     pub ratio: f64,
-    /// Largest payload any rank contributed (bytes).
+    /// Largest payload any live rank contributed (bytes).
     pub payload_bytes: u64,
-    /// Measured ring-round time, milliseconds.
+    /// Measured ring-round time, milliseconds (recoveries included).
     pub round_ms: f64,
     /// Sensed bottleneck bandwidth, Mbps (None before first estimate).
     pub btlbw_mbps: Option<f64>,
+    /// Membership epoch the step's round completed at.
+    pub epoch: u64,
+    /// Live ranks when the round completed.
+    pub live: usize,
+    /// Did the round need a deadline abort / recovery?
+    pub lost: bool,
 }
 
 /// What one live run produced.
@@ -95,12 +125,19 @@ pub struct LiveStepRecord {
 pub struct LiveReport {
     /// Rank 0's per-step trace.
     pub steps: Vec<LiveStepRecord>,
-    /// Did every rank's reduced gradient match bit-for-bit, every step?
+    /// Did every rank's reduced gradient match bit-for-bit on every step
+    /// it was alive for? (A killed rank is compared on its prefix.)
     pub consistent: bool,
     pub final_ratio: f64,
     pub controller_decreases: u64,
     pub controller_increases: u64,
     pub wall_s: f64,
+    /// Membership recoveries rank 0 performed (epoch bumps).
+    pub recoveries: u64,
+    /// Intervals rank 0 reported as lost to its controller.
+    pub lost_intervals: u64,
+    /// Live ranks at the end of the run.
+    pub final_live: usize,
 }
 
 impl LiveReport {
@@ -126,21 +163,50 @@ impl LiveReport {
         }
         window.iter().sum::<f64>() / window.len() as f64
     }
+
+    /// The epoch/live-set trajectory of the run — compared against the
+    /// netsim mirror ([`crate::fault::sim_trajectory`]) by the chaos
+    /// determinism test.
+    pub fn trajectory(&self) -> SyncTrajectory {
+        let mut t = SyncTrajectory::default();
+        for r in &self.steps {
+            t.record(r.epoch, r.live);
+        }
+        t
+    }
 }
 
 struct WorkerOut {
     rank: usize,
-    /// FNV-1a of the reduced gradient, one per step.
+    /// FNV-1a of the reduced gradient, one per completed step.
     hashes: Vec<u64>,
     trace: Vec<LiveStepRecord>,
     decreases: u64,
     increases: u64,
     final_ratio: f64,
+    /// Died on schedule (partial trace is expected and legal).
+    killed: bool,
+    recoveries: u64,
+    lost_intervals: u64,
 }
 
 /// Run a live training exchange; blocks until every worker finishes.
 pub fn run_live(opts: &LiveOpts) -> Result<LiveReport> {
     assert!(opts.n_workers >= 1, "need at least one worker");
+    if opts.faults.kill_step(0).is_some() {
+        return Err(anyhow!(
+            "rank 0 cannot be scheduled to die — it carries the report \
+             (kill ranks 1..n_workers instead)"
+        ));
+    }
+    if let Some(r) = opts.faults.max_rank() {
+        if r >= opts.n_workers {
+            return Err(anyhow!(
+                "fault schedule names rank {r} but the group has {} workers",
+                opts.n_workers
+            ));
+        }
+    }
     let t0 = Instant::now();
     let outs = match &opts.backend {
         LiveBackend::Loopback => {
@@ -181,14 +247,26 @@ pub fn run_live(opts: &LiveOpts) -> Result<LiveReport> {
         .iter()
         .find(|o| o.rank == 0)
         .ok_or_else(|| anyhow!("rank 0 produced no output"))?;
-    let consistent = outs.iter().all(|o| o.hashes == rank0.hashes);
+    // Survivors must match rank 0 bit-for-bit on every step; a killed
+    // rank must match on the prefix it lived through.
+    let consistent = outs.iter().all(|o| {
+        let k = o.hashes.len().min(rank0.hashes.len());
+        o.hashes[..k] == rank0.hashes[..k] && (o.killed || o.hashes.len() == rank0.hashes.len())
+    });
     Ok(LiveReport {
-        steps: rank0.trace.clone(),
         consistent,
         final_ratio: rank0.final_ratio,
         controller_decreases: rank0.decreases,
         controller_increases: rank0.increases,
         wall_s,
+        recoveries: rank0.recoveries,
+        lost_intervals: rank0.lost_intervals,
+        final_live: rank0
+            .trace
+            .last()
+            .map(|r| r.live)
+            .unwrap_or(opts.n_workers),
+        steps: rank0.trace.clone(),
     })
 }
 
@@ -223,12 +301,7 @@ fn spawn_and_join_boxed(
         .into_iter()
         .map(|b| {
             let opts = opts.clone();
-            std::thread::spawn(move || -> Result<WorkerOut> {
-                let mut t = b()?;
-                let out = run_worker(t.as_mut(), &opts);
-                t.shutdown()?;
-                out
-            })
+            std::thread::spawn(move || -> Result<WorkerOut> { run_worker(b()?, &opts) })
         })
         .collect();
     // Join every thread before surfacing any error — returning early
@@ -249,12 +322,34 @@ fn spawn_and_join_boxed(
     }
 }
 
-/// One worker's whole run (generic over the transport object).
-fn run_worker(t: &mut dyn Transport, opts: &LiveOpts) -> Result<WorkerOut> {
+/// Decode one dense elastic block (raw little-endian f32s) into `acc`.
+fn accumulate_dense(acc: &mut [f32], block: &[u8]) -> Result<()> {
+    if block.len() != acc.len() * 4 {
+        return Err(anyhow!(
+            "dense block of {} bytes for a {}-element tensor",
+            block.len(),
+            acc.len()
+        ));
+    }
+    for (a, b) in acc.iter_mut().zip(block.chunks_exact(4)) {
+        *a += f32::from_le_bytes(b.try_into().unwrap());
+    }
+    Ok(())
+}
+
+/// One worker's whole run: the elastic training loop.
+fn run_worker(t: Box<dyn Transport>, opts: &LiveOpts) -> Result<WorkerOut> {
     let rank = t.rank();
-    let n = t.group_size();
     let np = opts.n_params;
     let started = Instant::now();
+
+    // Fault layer: the injector executes this rank's chaos slice (a
+    // pass-through when none is scheduled); membership + elastic exchange
+    // carry the group through whatever it does to the others.
+    let mut t = FaultInjector::new(t, opts.faults.specs_for(rank));
+    t.set_recv_timeout(opts.fault.recv_timeout());
+    let mut membership = Membership::new(rank, opts.n_workers);
+    let mut exchange = ElasticExchange::new(&membership, opts.fault.clone());
 
     // Weights are replica-identical (stream independent of rank);
     // gradients drift per rank.
@@ -270,13 +365,21 @@ fn run_worker(t: &mut dyn Transport, opts: &LiveOpts) -> Result<WorkerOut> {
         .compression_config()
         .map(|c| NetSenseCompressor::new(np, c));
     // Fused-path scratch + wire buffer, reused across every step (§Perf:
-    // the steady-state send side allocates nothing).
+    // the steady-state send side allocates nothing before the exchange).
     let mut ws = Workspace::new();
     let mut wire: Vec<u8> = Vec::new();
 
     let mut hashes = Vec::with_capacity(opts.steps);
     let mut trace = Vec::with_capacity(opts.steps);
+    let mut killed = false;
+    let mut recoveries = 0u64;
+    let mut lost_intervals = 0u64;
     for step in 0..opts.steps {
+        t.on_step(step);
+        if t.is_killed() {
+            killed = true;
+            break;
+        }
         if opts.compute_ms > 0 {
             std::thread::sleep(Duration::from_millis(opts.compute_ms));
         }
@@ -284,59 +387,92 @@ fn run_worker(t: &mut dyn Transport, opts: &LiveOpts) -> Result<WorkerOut> {
         for x in grads.iter_mut() {
             *x += 0.05 * grng.normal() as f32;
         }
-        let (mean, ratio, payload_bytes, elapsed) = match compressor.as_mut() {
+        let ratio = match (&controller, &opts.strategy) {
+            (Some(c), _) => c.ratio(),
+            (None, SyncStrategy::TopK(r)) => *r,
+            (None, _) => 1.0,
+        };
+        wire.clear();
+        match compressor.as_mut() {
             Some(comp) => {
-                let ratio = match (&controller, &opts.strategy) {
-                    (Some(c), _) => c.ratio(),
-                    (None, SyncStrategy::TopK(r)) => *r,
-                    (None, _) => 1.0,
-                };
-                wire.clear();
                 comp.compress_payload_into(&grads, &weights, ratio, &mut ws, &mut wire);
-                let (blocks, timing) = ring_allgather_frames(t, &wire)?;
-                let mut payloads = Vec::with_capacity(n);
-                let mut max_payload = 0u64;
-                for b in &blocks {
-                    max_payload = max_payload.max(b.len() as u64);
-                    payloads.push(SparseGradient::decode(b).map_err(|e| anyhow!("{e}"))?);
-                }
-                let mut mean = sum_sparse(np, &payloads);
-                let scale = 1.0 / n as f32;
-                for m in mean.iter_mut() {
-                    *m *= scale;
-                }
-                (mean, ratio, max_payload, timing.elapsed)
             }
             None => {
-                // Dense baseline: a real ring all-reduce of the raw tensor.
-                let mut data = grads.clone();
-                let timing = ring_allreduce_f32(t, &mut data)?;
-                let scale = 1.0 / n as f32;
-                for d in data.iter_mut() {
-                    *d *= scale;
+                // Dense baseline: the raw tensor as the elastic payload.
+                // NOTE: this all-gathers the full tensor ((n−1)·4·np
+                // bytes per rank) where the pre-elastic baseline ran a
+                // ring all-reduce (2(n−1)/n·4·np — n/2× less wire) — the
+                // price of fault tolerance on the dense path, stated
+                // wherever dense round times are compared (EXPERIMENTS.md).
+                for x in &grads {
+                    wire.extend_from_slice(&x.to_le_bytes());
                 }
-                (data, 1.0, 4 * np as u64, timing.elapsed)
             }
+        }
+        let round = match exchange.round(&mut t, &mut membership, step as u32, &wire) {
+            Ok(r) => r,
+            Err(_) if t.is_killed() => {
+                killed = true;
+                break;
+            }
+            Err(e) => return Err(e),
+        };
+        recoveries += round.recoveries;
+        if round.lost {
+            lost_intervals += 1;
+        }
+        let mut max_payload = 0u64;
+        let mean = if compressor.is_some() {
+            let mut payloads = Vec::with_capacity(membership.n_live());
+            for b in round.blocks.iter().flatten() {
+                max_payload = max_payload.max(b.len() as u64);
+                payloads.push(SparseGradient::decode(b).map_err(|e| anyhow!("{e}"))?);
+            }
+            let mut mean = sum_sparse(np, &payloads);
+            let scale = 1.0 / payloads.len() as f32;
+            for m in mean.iter_mut() {
+                *m *= scale;
+            }
+            mean
+        } else {
+            let mut mean = vec![0f32; np];
+            let mut present = 0usize;
+            for b in round.blocks.iter().flatten() {
+                max_payload = max_payload.max(b.len() as u64);
+                accumulate_dense(&mut mean, b)?;
+                present += 1;
+            }
+            let scale = 1.0 / present.max(1) as f32;
+            for m in mean.iter_mut() {
+                *m *= scale;
+            }
+            mean
         };
         if let Some(ctl) = controller.as_mut() {
             // The paper's Algorithm 1 observation: this interval's data
-            // size and its measured transfer-completion time.
-            let rtt = SimTime::from_secs_f64(elapsed.as_secs_f64().max(1e-6));
-            ctl.on_interval(payload_bytes.max(1), rtt, false);
+            // size, its measured transfer-completion time, and whether
+            // anything was lost (deadline abort / membership recovery) —
+            // the live wiring of the controller's backoff trigger.
+            let rtt = SimTime::from_secs_f64(round.elapsed.as_secs_f64().max(1e-6));
+            ctl.on_interval(max_payload.max(1), rtt, round.lost);
         }
         hashes.push(hash_f32s(&mean));
         trace.push(LiveStepRecord {
             step,
             at_s: started.elapsed().as_secs_f64(),
             ratio,
-            payload_bytes,
-            round_ms: elapsed.as_secs_f64() * 1e3,
+            payload_bytes: max_payload,
+            round_ms: round.elapsed.as_secs_f64() * 1e3,
             btlbw_mbps: controller
                 .as_ref()
                 .and_then(|c| c.estimate())
                 .map(|e| e.btlbw_bytes_per_sec * 8.0 / 1e6),
+            epoch: round.epoch,
+            live: membership.n_live(),
+            lost: round.lost,
         });
     }
+    t.shutdown()?;
     let (decreases, increases, final_ratio) = match &controller {
         Some(c) => (c.n_decreases, c.n_increases, c.ratio()),
         None => (0, 0, trace.last().map(|r| r.ratio).unwrap_or(1.0)),
@@ -348,6 +484,9 @@ fn run_worker(t: &mut dyn Transport, opts: &LiveOpts) -> Result<WorkerOut> {
         decreases,
         increases,
         final_ratio,
+        killed,
+        recoveries,
+        lost_intervals,
     })
 }
 
@@ -366,6 +505,7 @@ fn hash_f32s(xs: &[f32]) -> u64 {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::fault::sim_trajectory;
 
     #[test]
     fn loopback_netsense_run_is_consistent_and_senses() {
@@ -383,6 +523,11 @@ mod tests {
         assert!(report.steps.last().unwrap().btlbw_mbps.unwrap() > 0.0);
         // The first adjustment moved the ratio off its initial 0.01.
         assert!(report.steps.iter().any(|r| r.ratio != 0.01));
+        // Healthy run: one epoch, everyone alive, nothing lost.
+        assert_eq!(report.recoveries, 0);
+        assert_eq!(report.lost_intervals, 0);
+        assert_eq!(report.final_live, 4);
+        assert!(report.steps.iter().all(|r| r.epoch == 0 && r.live == 4));
     }
 
     #[test]
@@ -451,6 +596,7 @@ mod tests {
             }),
             compute_ms: 2,
             seed: 7,
+            ..Default::default()
         };
         let report = run_live(&opts).unwrap();
         assert!(report.consistent);
@@ -472,5 +618,172 @@ mod tests {
             after < 0.6 * before,
             "ratio did not drop after step-down: {before:.4} → {after:.4}"
         );
+    }
+
+    /// THE chaos acceptance check (ISSUE): an N=4 loopback run where the
+    /// FaultInjector kills one rank mid-training completes on the 3
+    /// survivors, the epoch bump and ring rebuild are asserted on
+    /// observables, and the equivalent netsim failure schedule reproduces
+    /// the same sync-count trajectory.
+    #[test]
+    fn chaos_kill_one_rank_mid_training_completes_on_survivors() {
+        let kill_step = 6;
+        let opts = LiveOpts {
+            n_workers: 4,
+            steps: 14,
+            n_params: 20_000,
+            strategy: SyncStrategy::NetSense,
+            faults: FaultSchedule {
+                kills: vec![(2, kill_step)],
+                ..Default::default()
+            },
+            fault: FaultConfig {
+                recv_timeout_ms: 150,
+                probe_timeout_ms: 800,
+            },
+            ..Default::default()
+        };
+        let report = run_live(&opts).unwrap();
+        // Survivors completed every step, bit-identically.
+        assert!(report.consistent, "survivors diverged");
+        assert_eq!(report.steps.len(), 14);
+        // Exactly one recovery: the epoch bumps at the kill step and the
+        // ring rebuilds over the 3 survivors.
+        assert_eq!(report.recoveries, 1);
+        assert_eq!(report.steps[kill_step - 1].epoch, 0);
+        assert_eq!(report.steps[kill_step - 1].live, 4);
+        assert_eq!(report.steps[kill_step].epoch, 1);
+        assert_eq!(report.steps[kill_step].live, 3);
+        assert!(report.steps[kill_step].lost);
+        assert_eq!(report.final_live, 3);
+        // The lost interval reached the controller (backoff wiring).
+        assert_eq!(report.lost_intervals, 1);
+        assert!(report.controller_decreases >= 1);
+        // Determinism contract: the netsim mirror of the same failure
+        // schedule walks the exact same epoch/live-set trajectory.
+        let mirror = sim_trajectory(4, 14, &opts.faults, &opts.fault, 20_000);
+        assert_eq!(report.trajectory().segments, mirror.segments);
+        assert!(mirror.vtime_s > 0.0);
+    }
+
+    /// A flapping link long enough to blow the recv deadline: the group
+    /// recovers (epoch bump) but the probe round finds everyone alive —
+    /// nobody is removed, the round replays, and the run stays
+    /// bit-consistent.
+    #[test]
+    fn chaos_flapping_link_recovers_without_deaths() {
+        let opts = LiveOpts {
+            n_workers: 3,
+            steps: 9,
+            n_params: 10_000,
+            strategy: SyncStrategy::TopK(0.2),
+            faults: FaultSchedule {
+                flaps: vec![(1, 4, 500)],
+                ..Default::default()
+            },
+            fault: FaultConfig {
+                recv_timeout_ms: 120,
+                probe_timeout_ms: 3_000,
+            },
+            ..Default::default()
+        };
+        let report = run_live(&opts).unwrap();
+        assert!(report.consistent, "flap broke consistency");
+        assert_eq!(report.steps.len(), 9);
+        assert_eq!(report.final_live, 3, "flap must not kill anyone");
+        assert!(report.recoveries >= 1, "deadline never fired: {report:?}");
+        assert!(report.lost_intervals >= 1);
+        assert_eq!(report.steps[3].epoch, 0);
+        assert!(report.steps[4].epoch >= 1, "epoch must bump at the flap");
+        let mirror = sim_trajectory(3, 9, &opts.faults, &opts.fault, 10_000);
+        assert_eq!(report.trajectory().segments, mirror.segments);
+    }
+
+    /// A straggler below the recv deadline is absorbed as a slow round:
+    /// no recovery, no epoch bump, full consistency.
+    #[test]
+    fn chaos_short_stall_is_absorbed() {
+        let opts = LiveOpts {
+            n_workers: 3,
+            steps: 6,
+            n_params: 10_000,
+            strategy: SyncStrategy::TopK(0.2),
+            faults: FaultSchedule {
+                stalls: vec![(1, 3, 50)],
+                ..Default::default()
+            },
+            fault: FaultConfig {
+                recv_timeout_ms: 2_000,
+                probe_timeout_ms: 2_000,
+            },
+            ..Default::default()
+        };
+        let report = run_live(&opts).unwrap();
+        assert!(report.consistent);
+        assert_eq!(report.recoveries, 0);
+        assert_eq!(report.lost_intervals, 0);
+        assert!(report.steps.iter().all(|r| r.epoch == 0 && r.live == 3));
+        let mirror = sim_trajectory(3, 6, &opts.faults, &opts.fault, 10_000);
+        assert_eq!(report.trajectory().segments, mirror.segments);
+    }
+
+    /// The same kill scenario over real sockets: the reader-thread
+    /// disconnect observation (not a timeout cascade) drives the
+    /// recovery, and survivors stay bit-identical.
+    #[test]
+    fn chaos_kill_over_tcp_mesh() {
+        let opts = LiveOpts {
+            n_workers: 3,
+            steps: 8,
+            n_params: 8_000,
+            strategy: SyncStrategy::TopK(0.25),
+            backend: LiveBackend::Tcp {
+                bind: "127.0.0.1:0".to_string(),
+            },
+            faults: FaultSchedule {
+                kills: vec![(2, 3)],
+                ..Default::default()
+            },
+            fault: FaultConfig {
+                recv_timeout_ms: 400,
+                probe_timeout_ms: 1_500,
+            },
+            ..Default::default()
+        };
+        let report = run_live(&opts).unwrap();
+        assert!(report.consistent, "tcp survivors diverged");
+        assert_eq!(report.steps.len(), 8);
+        assert_eq!(report.recoveries, 1);
+        assert_eq!(report.final_live, 2);
+        assert_eq!(report.steps[3].epoch, 1);
+    }
+
+    #[test]
+    fn fault_schedule_validation_fails_loudly() {
+        // Rank 0 carries the report: killing it is a config error.
+        let e = run_live(&LiveOpts {
+            faults: FaultSchedule {
+                kills: vec![(0, 1)],
+                ..Default::default()
+            },
+            steps: 2,
+            n_params: 10,
+            ..Default::default()
+        })
+        .unwrap_err();
+        assert!(format!("{e}").contains("rank 0"), "{e}");
+        // Out-of-range ranks too.
+        let e = run_live(&LiveOpts {
+            n_workers: 2,
+            faults: FaultSchedule {
+                stalls: vec![(5, 1, 10)],
+                ..Default::default()
+            },
+            steps: 2,
+            n_params: 10,
+            ..Default::default()
+        })
+        .unwrap_err();
+        assert!(format!("{e}").contains("rank 5"), "{e}");
     }
 }

@@ -10,12 +10,15 @@
 //! | [`degrading`] | Fig. 7 — throughput under degrading bandwidth    |
 //! | [`fluctuating`] | Fig. 8 — throughput under competing traffic    |
 //! | [`pipelined`] | pipelined vs monolithic exchange (overlap study) |
-//! | [`live`]      | live socket training (paper's §5 testbed runs)   |
+//! | [`live`]      | live socket training (paper's §5 testbed runs), including the chaos scenarios (`configs/elastic.toml`) |
 //!
 //! Every runner prints a markdown table (and optionally CSV curves) built
 //! with [`report`]; scenarios come from [`scenario`]. [`live`] is the odd
 //! one out: it runs over the real [`crate::transport`] layer (threads +
-//! sockets + wall clock) instead of the simulator.
+//! sockets + wall clock) instead of the simulator — elastically, through
+//! the fault-tolerant membership layer ([`crate::fault`]), so chaos
+//! schedules (kills, stragglers, flapping links) degrade the group
+//! instead of deadlocking it.
 
 pub mod ablation;
 pub mod degrading;

@@ -1,0 +1,320 @@
+//! Compressor-state checkpoints: everything a rejoining rank needs to
+//! resume compression without corrupting convergence.
+//!
+//! Error feedback makes Algorithm 2 *stateful*: the residual carries the
+//! gradient mass every past step withheld, and the selection caches
+//! (top-k threshold hint, pruning threshold) steer which coordinates the
+//! fast paths pick. A rank that rejoins with a blank compressor would
+//! re-inject none of its residual (convergence bias) and reselect from
+//! scratch (divergence from the group's deterministic trajectory). A
+//! [`Checkpoint`] snapshots the full
+//! [`CompressorState`](crate::compress::CompressorState) — per tensor or
+//! per bucket — so a restored compressor continues **bit-identically**
+//! to the original (tested below, fused and staged paths both).
+//!
+//! Wire format (little-endian, versioned):
+//! `[u32 magic "NSCK"][u32 version][u64 epoch][u64 step][u32 n_states]`
+//! then per state: `[u32 n][u8 flags][f32 threshold][f64 prune_rate]
+//! [f32 prune_th][u32 prune_age][f64 grad_l2][n × f32 residual]`
+//! (flag bits mark which of the optional fields are present; absent ones
+//! still occupy their slot, zero-filled, to keep offsets static).
+
+use crate::compress::CompressorState;
+use crate::util::error::{anyhow, Result};
+
+/// Checkpoint magic: `"NSCK"` little-endian.
+pub const CHECKPOINT_MAGIC: u32 = 0x4b43_534e;
+const VERSION: u32 = 1;
+
+const FLAG_THRESHOLD: u8 = 1 << 0;
+const FLAG_PRUNE: u8 = 1 << 1;
+const FLAG_L2: u8 = 1 << 2;
+
+/// A rank's compression state at a membership epoch + training step:
+/// one [`CompressorState`] per tensor (monolithic path) or per bucket
+/// (pipelined path), in layout order.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Checkpoint {
+    pub epoch: u64,
+    pub step: u64,
+    pub states: Vec<CompressorState>,
+}
+
+impl Checkpoint {
+    pub fn new(epoch: u64, step: u64, states: Vec<CompressorState>) -> Checkpoint {
+        Checkpoint {
+            epoch,
+            step,
+            states,
+        }
+    }
+
+    /// Serialize to the versioned binary format.
+    pub fn encode(&self) -> Vec<u8> {
+        let residuals: usize = self.states.iter().map(|s| s.residual.len()).sum();
+        let mut out = Vec::with_capacity(24 + self.states.len() * 29 + residuals * 4);
+        out.extend_from_slice(&CHECKPOINT_MAGIC.to_le_bytes());
+        out.extend_from_slice(&VERSION.to_le_bytes());
+        out.extend_from_slice(&self.epoch.to_le_bytes());
+        out.extend_from_slice(&self.step.to_le_bytes());
+        out.extend_from_slice(&(self.states.len() as u32).to_le_bytes());
+        for s in &self.states {
+            out.extend_from_slice(&(s.residual.len() as u32).to_le_bytes());
+            let mut flags = 0u8;
+            if s.last_threshold.is_some() {
+                flags |= FLAG_THRESHOLD;
+            }
+            if s.prune_cache.is_some() {
+                flags |= FLAG_PRUNE;
+            }
+            if s.last_grad_l2.is_some() {
+                flags |= FLAG_L2;
+            }
+            out.push(flags);
+            out.extend_from_slice(&s.last_threshold.unwrap_or(0.0).to_le_bytes());
+            let (rate, th) = s.prune_cache.unwrap_or((0.0, 0.0));
+            out.extend_from_slice(&rate.to_le_bytes());
+            out.extend_from_slice(&th.to_le_bytes());
+            out.extend_from_slice(&s.prune_cache_age.to_le_bytes());
+            out.extend_from_slice(&s.last_grad_l2.unwrap_or(0.0).to_le_bytes());
+            for x in &s.residual {
+                out.extend_from_slice(&x.to_le_bytes());
+            }
+        }
+        out
+    }
+
+    /// Parse a [`Checkpoint::encode`] buffer; corruption yields named
+    /// errors, never garbage state.
+    pub fn decode(buf: &[u8]) -> Result<Checkpoint> {
+        let mut r = Reader { buf, at: 0 };
+        let magic = r.u32()?;
+        if magic != CHECKPOINT_MAGIC {
+            return Err(anyhow!("bad checkpoint magic {magic:#010x}"));
+        }
+        let version = r.u32()?;
+        if version != VERSION {
+            return Err(anyhow!("unsupported checkpoint version {version}"));
+        }
+        let epoch = r.u64()?;
+        let step = r.u64()?;
+        let n_states = r.u32()? as usize;
+        let mut states = Vec::with_capacity(n_states.min(1 << 16));
+        for i in 0..n_states {
+            let n = r.u32()? as usize;
+            let flags = r.u8()?;
+            if flags & !(FLAG_THRESHOLD | FLAG_PRUNE | FLAG_L2) != 0 {
+                return Err(anyhow!("state {i}: unknown flag bits {flags:#04x}"));
+            }
+            let threshold = r.f32()?;
+            let prune_rate = r.f64()?;
+            let prune_th = r.f32()?;
+            let prune_age = r.u32()?;
+            let grad_l2 = r.f64()?;
+            if r.remaining() < n * 4 {
+                return Err(anyhow!(
+                    "state {i}: truncated residual ({} bytes left, need {})",
+                    r.remaining(),
+                    n * 4
+                ));
+            }
+            let mut residual = Vec::with_capacity(n);
+            for _ in 0..n {
+                residual.push(r.f32()?);
+            }
+            states.push(CompressorState {
+                residual,
+                last_threshold: (flags & FLAG_THRESHOLD != 0).then_some(threshold),
+                prune_cache: (flags & FLAG_PRUNE != 0).then_some((prune_rate, prune_th)),
+                prune_cache_age: prune_age,
+                last_grad_l2: (flags & FLAG_L2 != 0).then_some(grad_l2),
+            });
+        }
+        if r.remaining() != 0 {
+            return Err(anyhow!("{} trailing bytes after checkpoint", r.remaining()));
+        }
+        Ok(Checkpoint {
+            epoch,
+            step,
+            states,
+        })
+    }
+}
+
+/// Bounds-checked little-endian cursor.
+struct Reader<'a> {
+    buf: &'a [u8],
+    at: usize,
+}
+
+impl Reader<'_> {
+    fn remaining(&self) -> usize {
+        self.buf.len() - self.at
+    }
+
+    fn take(&mut self, n: usize) -> Result<&[u8]> {
+        if self.remaining() < n {
+            return Err(anyhow!(
+                "truncated checkpoint: need {n} bytes at offset {}, have {}",
+                self.at,
+                self.remaining()
+            ));
+        }
+        let s = &self.buf[self.at..self.at + n];
+        self.at += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn f32(&mut self) -> Result<f32> {
+        Ok(f32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn f64(&mut self) -> Result<f64> {
+        Ok(f64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::bucket::{BucketLayout, BucketedCompressor};
+    use crate::compress::{CompressionConfig, NetSenseCompressor, Workspace, WorkspacePool};
+    use crate::util::rng::Pcg64;
+
+    fn randn(n: usize, seed: u64) -> Vec<f32> {
+        let mut r = Pcg64::seeded(seed);
+        let mut v = vec![0f32; n];
+        r.fill_normal_f32(&mut v, 0.0, 1.0);
+        v
+    }
+
+    #[test]
+    fn encode_decode_roundtrip() {
+        let mut c = NetSenseCompressor::new(500, CompressionConfig::default());
+        c.compress(&randn(500, 1), &randn(500, 2), 0.1);
+        let ck = Checkpoint::new(3, 42, vec![c.export_state()]);
+        let decoded = Checkpoint::decode(&ck.encode()).unwrap();
+        assert_eq!(decoded, ck);
+        // A never-used compressor has no cached fields: all flags off.
+        let fresh = NetSenseCompressor::new(8, CompressionConfig::default());
+        let ck = Checkpoint::new(0, 0, vec![fresh.export_state()]);
+        let decoded = Checkpoint::decode(&ck.encode()).unwrap();
+        assert_eq!(decoded.states[0].last_threshold, None);
+        assert_eq!(decoded.states[0].prune_cache, None);
+        assert_eq!(decoded.states[0].last_grad_l2, None);
+    }
+
+    #[test]
+    fn decode_rejects_corruption() {
+        let ck = Checkpoint::new(1, 2, vec![CompressorState {
+            residual: vec![1.0, 2.0],
+            last_threshold: Some(0.5),
+            prune_cache: None,
+            prune_cache_age: 3,
+            last_grad_l2: Some(2.2),
+        }]);
+        let wire = ck.encode();
+        assert!(Checkpoint::decode(&wire[..4]).is_err()); // truncated
+        let mut bad = wire.clone();
+        bad[0] ^= 0xff; // magic
+        assert!(Checkpoint::decode(&bad).is_err());
+        let mut bad = wire.clone();
+        bad[4] = 99; // version
+        assert!(Checkpoint::decode(&bad).is_err());
+        let mut long = wire.clone();
+        long.push(0); // trailing garbage
+        assert!(Checkpoint::decode(&long).is_err());
+        let mut short = wire;
+        short.pop(); // torn residual
+        assert!(Checkpoint::decode(&short).is_err());
+    }
+
+    /// The rejoin contract: a compressor restored from a checkpoint
+    /// continues bit-identically — staged and fused paths both.
+    #[test]
+    fn restored_compressor_resumes_bit_identically() {
+        let n = 4_000;
+        let w = randn(n, 10);
+        let mut g = randn(n, 11);
+        let mut drift = Pcg64::seeded(12);
+        let mut original = NetSenseCompressor::new(n, CompressionConfig::default());
+        // A few live steps accumulate residual + caches.
+        for step in 0..5 {
+            for x in g.iter_mut() {
+                *x += 0.05 * drift.normal() as f32;
+            }
+            original.compress(&g, &w, if step % 2 == 0 { 0.1 } else { 0.02 });
+        }
+        // Snapshot → wire → restore into a blank compressor (the rank
+        // that rejoins after a kill).
+        let wire = Checkpoint::new(2, 5, vec![original.export_state()]).encode();
+        let ck = Checkpoint::decode(&wire).unwrap();
+        let mut rejoined = NetSenseCompressor::new(n, CompressionConfig::default());
+        rejoined.import_state(&ck.states[0]);
+        // Both continue on identical inputs: identical wire bytes, via
+        // the staged path on one and the fused path on the other.
+        let mut ws = Workspace::new();
+        for step in 0..6 {
+            for x in g.iter_mut() {
+                *x += 0.05 * drift.normal() as f32;
+            }
+            let ratio = [0.1, 0.05, 0.01][step % 3];
+            let staged = original.compress(&g, &w, ratio);
+            let mut fused_wire = Vec::new();
+            let out = rejoined.compress_payload_into(&g, &w, ratio, &mut ws, &mut fused_wire);
+            assert_eq!(
+                staged.payload.encode(),
+                fused_wire,
+                "step {step}: restored compressor diverged"
+            );
+            assert_eq!(staged.wire_bytes, out.wire_bytes);
+        }
+        assert_eq!(
+            original.residual_norm(),
+            rejoined.residual_norm(),
+            "residuals diverged after resume"
+        );
+    }
+
+    #[test]
+    fn bucketed_state_roundtrips_through_checkpoint() {
+        let n = 3_000;
+        let layout = BucketLayout::new(n, 1_000);
+        let w = randn(n, 20);
+        let mut pool = WorkspacePool::new(1);
+        let mut original = BucketedCompressor::new(layout.clone(), CompressionConfig::default());
+        for step in 0..4 {
+            original.compress_frames(&randn(n, 30 + step), &w, 0.05, &mut pool);
+        }
+        let ck = Checkpoint::new(1, 4, original.export_state());
+        let ck = Checkpoint::decode(&ck.encode()).unwrap();
+        assert_eq!(ck.states.len(), layout.n_buckets());
+        let mut rejoined = BucketedCompressor::new(layout, CompressionConfig::default());
+        rejoined.import_state(&ck.states);
+        let g = randn(n, 99);
+        let (_, frames_a) = original.compress_frames(&g, &w, 0.05, &mut pool);
+        let frames_a: Vec<Vec<u8>> = frames_a.to_vec();
+        let (_, frames_b) = rejoined.compress_frames(&g, &w, 0.05, &mut pool);
+        assert_eq!(frames_a, frames_b.to_vec(), "bucketed resume diverged");
+    }
+
+    #[test]
+    #[should_panic(expected = "residual snapshot length mismatch")]
+    fn import_rejects_wrong_length() {
+        let mut c = NetSenseCompressor::new(10, CompressionConfig::default());
+        let other = NetSenseCompressor::new(11, CompressionConfig::default());
+        c.import_state(&other.export_state());
+    }
+}

@@ -1,0 +1,601 @@
+//! Degraded collectives: a ring all-gather over the *live* membership
+//! that survives dead ranks, stragglers, and flapping links.
+//!
+//! Every payload travels inside a 9-byte **envelope** —
+//! `[kind u8][epoch u32 le][step u32 le]` — so a receiver can tell this
+//! epoch's data from a stale frame of an aborted round, a data frame
+//! from a recovery probe, and — the step tag — *this round's* data from
+//! a neighboring round's. Data frames double as heartbeats (receiving
+//! one clears any suspicion of the sender).
+//!
+//! The exchange protocol, per training step:
+//!
+//! 1. **Attempt** a ring all-gather over the live ring at the current
+//!    epoch ([`super::Membership::live_ring`]). Stale-epoch data frames
+//!    are discarded on arrival.
+//! 2. On a recv deadline or peer disconnect, the observer **suspects**
+//!    its ring predecessor and aborts. On receiving a [`FrameKind::Probe`]
+//!    it aborts immediately (a peer already detected trouble) — this is
+//!    how one rank's timeout propagates around the ring in channel time
+//!    instead of one timeout per hop. A rank whose *own* round overran the
+//!    round budget (one `recv_timeout` — the same rule every peer applies
+//!    to it, so both sides of a slow link reach the same verdict) aborts
+//!    too, even if every frame it needed was already buffered: a straggler
+//!    that limped home late must join the recovery its peers are already
+//!    running, or its view of the round would diverge from theirs.
+//!    Corollary: `recv_timeout` must comfortably exceed a healthy round's
+//!    duration — it is a *round* budget, not a per-hop one.
+//! 3. **Recovery**: every survivor sends a probe to every rank it still
+//!    considers live and awaits one from each (per-peer FIFO guarantees a
+//!    peer's probe precedes its replay data, so draining up to the probe
+//!    never eats next-epoch frames). Ranks that fail to answer within the
+//!    probe deadline are dead. The killed rank answers *nobody*, so every
+//!    survivor removes the same set and [`super::Membership::begin_epoch`]
+//!    lands them on the same epoch — agreement without a coordinator.
+//! 4. **Replay** the round over the rebuilt ring at the new epoch. The
+//!    caller's payload is untouched (compression and error feedback ran
+//!    before the exchange), so the replay is bit-deterministic.
+//!
+//! A recovery that finds nobody dead (a flapping link healed in time)
+//! still bumps the epoch — the replay's frames must outrank the aborted
+//! round's stragglers.
+//!
+//! The step tag closes the one hole the round budget leaves: a rank that
+//! sent everything its peers needed, then was descheduled past the
+//! budget, aborts *alone* while its peers complete and move on. Its
+//! replay would otherwise gather the peers' next-round payloads as this
+//! round's (a silent one-round skew, forever). With the tag, receiving
+//! same-epoch data for a *different* step is proof this rank fell behind
+//! the group — it fails loudly ([`ElasticExchange::round`] errors), the
+//! peers' next recovery removes it, and the survivors continue.
+
+use super::membership::{LiveRing, Membership};
+use super::FaultConfig;
+use crate::transport::Transport;
+use crate::util::error::{anyhow, Result};
+use std::time::{Duration, Instant};
+
+/// Envelope bytes prepended to every elastic payload (kind + epoch +
+/// step).
+pub const ENVELOPE_OVERHEAD: usize = 9;
+
+/// What an envelope carries.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FrameKind {
+    /// A collective payload of the tagged epoch + step (doubles as a
+    /// heartbeat).
+    Data,
+    /// A recovery probe: "I aborted the round at this epoch — are you
+    /// alive?" Answered by the receiver's own probe of the same recovery.
+    Probe,
+}
+
+/// Append the 9-byte envelope header (zero allocations once `out` has
+/// capacity — the membership-checked send path stays on the PR-3
+/// zero-alloc budget).
+pub fn write_envelope(kind: FrameKind, epoch: u32, step: u32, out: &mut Vec<u8>) {
+    out.push(match kind {
+        FrameKind::Data => 0,
+        FrameKind::Probe => 1,
+    });
+    out.extend_from_slice(&epoch.to_le_bytes());
+    out.extend_from_slice(&step.to_le_bytes());
+}
+
+/// Split an enveloped frame into `(kind, epoch, step, payload)`.
+pub fn parse_envelope(buf: &[u8]) -> Result<(FrameKind, u32, u32, &[u8])> {
+    if buf.len() < ENVELOPE_OVERHEAD {
+        return Err(anyhow!("short envelope: {} bytes", buf.len()));
+    }
+    let kind = match buf[0] {
+        0 => FrameKind::Data,
+        1 => FrameKind::Probe,
+        k => return Err(anyhow!("unknown envelope kind {k}")),
+    };
+    let epoch = u32::from_le_bytes(buf[1..5].try_into().unwrap());
+    let step = u32::from_le_bytes(buf[5..9].try_into().unwrap());
+    Ok((kind, epoch, step, &buf[ENVELOPE_OVERHEAD..]))
+}
+
+/// What one elastic exchange round produced.
+#[derive(Clone, Debug)]
+pub struct ElasticRound {
+    /// Payload per absolute rank; `None` for ranks outside the live set
+    /// when the round completed.
+    pub blocks: Vec<Option<Vec<u8>>>,
+    /// Start-to-finish wall time at this rank, recoveries included — the
+    /// transfer-completion observable the sensing controller consumes.
+    pub elapsed: Duration,
+    /// Payload bytes pushed into the ring (envelopes included, aborted
+    /// attempts included).
+    pub sent_bytes: u64,
+    /// Epoch bumps performed while completing this round.
+    pub recoveries: u64,
+    /// Did any deadline or abort fire? This is the `lost` flag the
+    /// Algorithm-1 controller's backoff consumes.
+    pub lost: bool,
+    /// Epoch the round completed at.
+    pub epoch: u64,
+}
+
+/// Why an attempt stopped early.
+enum AttemptEnd {
+    /// Deadline / disconnect / peer probe: recover and replay.
+    Abort(Abort),
+    /// Same-epoch data for a different step (or a future epoch): this
+    /// rank fell out of lockstep with the group — unrecoverable locally.
+    Skew { peer_epoch: u32, peer_step: u32 },
+}
+
+/// An abort's bookkeeping.
+struct Abort {
+    /// The ring predecessor that missed its deadline (None when the abort
+    /// came from a peer's probe).
+    suspect: Option<usize>,
+    /// A probe consumed inside the data loop — already counts as that
+    /// peer's recovery answer.
+    probe_from: Option<usize>,
+}
+
+/// Reusable elastic-exchange state for one endpoint: scratch buffers and
+/// the per-recovery probe bookkeeping, plus the live ring cache (rebuilt
+/// only on epoch change).
+pub struct ElasticExchange {
+    cfg: FaultConfig,
+    ring: LiveRing,
+    /// Reused envelope+payload send buffer.
+    env: Vec<u8>,
+    /// Reused probe frame.
+    probe: Vec<u8>,
+    /// Per-rank: probe already consumed during the aborted data round.
+    probes_seen: Vec<bool>,
+}
+
+impl ElasticExchange {
+    pub fn new(m: &Membership, cfg: FaultConfig) -> ElasticExchange {
+        ElasticExchange {
+            cfg,
+            ring: m.live_ring(),
+            env: Vec::new(),
+            probe: Vec::new(),
+            probes_seen: vec![false; m.world()],
+        }
+    }
+
+    /// The ring in force (test observability).
+    pub fn ring(&self) -> &LiveRing {
+        &self.ring
+    }
+
+    /// One gradient-exchange round at training step `step`: all-gather
+    /// `payload` across the live group, recovering and replaying on
+    /// failures. Returns blocks by absolute rank. Errors only when this
+    /// endpoint itself is broken (killed), fell out of lockstep (round
+    /// skew — see module docs), or recovery keeps failing past any
+    /// plausible schedule.
+    pub fn round(
+        &mut self,
+        t: &mut dyn Transport,
+        m: &mut Membership,
+        step: u32,
+        payload: &[u8],
+    ) -> Result<ElasticRound> {
+        let t0 = Instant::now();
+        let mut sent = 0u64;
+        let mut recoveries = 0u64;
+        let mut lost = false;
+        self.probes_seen.iter_mut().for_each(|p| *p = false);
+        loop {
+            match self.attempt(t, m, step, payload, &mut sent) {
+                Ok(blocks) => {
+                    return Ok(ElasticRound {
+                        blocks,
+                        elapsed: t0.elapsed(),
+                        sent_bytes: sent,
+                        recoveries,
+                        lost,
+                        epoch: m.epoch(),
+                    });
+                }
+                Err(AttemptEnd::Skew {
+                    peer_epoch,
+                    peer_step,
+                }) => {
+                    return Err(anyhow!(
+                        "rank {}: round skew — peer at epoch {peer_epoch}/step {peer_step} \
+                         vs local {}/{step}; this rank fell behind the group and cannot \
+                         rejoin in place (resume from a checkpoint)",
+                        m.self_rank(),
+                        m.epoch()
+                    ));
+                }
+                Err(AttemptEnd::Abort(abort)) => {
+                    lost = true;
+                    recoveries += 1;
+                    if recoveries > m.world() as u64 + 2 {
+                        return Err(anyhow!(
+                            "rank {}: giving up after {recoveries} recoveries in one round",
+                            m.self_rank()
+                        ));
+                    }
+                    if let Some(r) = abort.suspect {
+                        m.suspect(r);
+                    }
+                    if let Some(r) = abort.probe_from {
+                        self.probes_seen[r] = true;
+                    }
+                    let dead = self.probe_phase(t, m, step)?;
+                    m.begin_epoch(&dead);
+                    self.ring = m.live_ring();
+                }
+            }
+        }
+    }
+
+    /// One all-gather attempt over the current live ring. `Ok` carries
+    /// blocks by absolute rank (envelopes stripped); `Err` is an abort or
+    /// a detected round skew.
+    fn attempt(
+        &mut self,
+        t: &mut dyn Transport,
+        m: &mut Membership,
+        step: u32,
+        payload: &[u8],
+        sent: &mut u64,
+    ) -> std::result::Result<Vec<Option<Vec<u8>>>, AttemptEnd> {
+        let ring = &self.ring;
+        let ln = ring.len();
+        let epoch = m.epoch() as u32;
+        let mut blocks: Vec<Option<Vec<u8>>> = vec![None; m.world()];
+        blocks[m.self_rank()] = Some(payload.to_vec());
+        if ring.is_solo() {
+            return Ok(blocks);
+        }
+        // The whole round must finish within one recv budget — the same
+        // deadline every peer applies to us, so a delay that makes *them*
+        // abort makes *us* abort too (a straggler that limped home late
+        // from buffered frames must join the recovery; see module docs).
+        let round_deadline = self.cfg.recv_timeout();
+        let t_start = Instant::now();
+        let succ = ring.succ();
+        let pred = ring.pred();
+        for p in 0..ln - 1 {
+            // Forward the block that originated `p` ring hops back.
+            let origin = ring.rank_at(ring.pos + ln - p);
+            self.env.clear();
+            write_envelope(FrameKind::Data, epoch, step, &mut self.env);
+            self.env
+                .extend_from_slice(blocks[origin].as_ref().expect("origin block in hand"));
+            *sent += self.env.len() as u64;
+            if t.send(succ, &self.env).is_err() {
+                return Err(AttemptEnd::Abort(Abort {
+                    suspect: Some(succ),
+                    probe_from: None,
+                }));
+            }
+            let incoming_origin = ring.rank_at(ring.pos + 2 * ln - 1 - p);
+            loop {
+                let frame = match t.recv(pred) {
+                    Ok(f) => f,
+                    Err(_) => {
+                        return Err(AttemptEnd::Abort(Abort {
+                            suspect: Some(pred),
+                            probe_from: None,
+                        }));
+                    }
+                };
+                match parse_envelope(&frame) {
+                    Ok((FrameKind::Data, e, s, body)) if e == epoch && s == step => {
+                        m.heartbeat(pred);
+                        blocks[incoming_origin] = Some(body.to_vec());
+                        break;
+                    }
+                    Ok((FrameKind::Data, e, _, _)) if e < epoch => continue, // stale round
+                    Ok((FrameKind::Data, e, s, _)) if e == epoch && s < step => {
+                        // A peer that fell behind is replaying an older
+                        // step; it will detect the skew and self-fence —
+                        // drop its doomed frames and keep waiting (our
+                        // deadline then drives the recovery that removes
+                        // it).
+                        continue;
+                    }
+                    Ok((FrameKind::Data, e, s, _)) => {
+                        // A future step (same epoch) or a future epoch:
+                        // the group moved on without us — lockstep is
+                        // broken and cannot be repaired locally.
+                        return Err(AttemptEnd::Skew {
+                            peer_epoch: e,
+                            peer_step: s,
+                        });
+                    }
+                    Ok((FrameKind::Probe, _, _, _)) => {
+                        return Err(AttemptEnd::Abort(Abort {
+                            suspect: None,
+                            probe_from: Some(pred),
+                        }));
+                    }
+                    Err(_) => continue, // garbage frame: drop, keep waiting
+                }
+            }
+        }
+        if t_start.elapsed() > round_deadline {
+            return Err(AttemptEnd::Abort(Abort {
+                suspect: None,
+                probe_from: None,
+            }));
+        }
+        Ok(blocks)
+    }
+
+    /// The all-to-all recovery probe: send one probe to every live peer,
+    /// await one from each (unless already consumed in the data loop).
+    /// Returns the ranks that failed to answer — the dead set every
+    /// survivor agrees on.
+    fn probe_phase(
+        &mut self,
+        t: &mut dyn Transport,
+        m: &Membership,
+        step: u32,
+    ) -> Result<Vec<usize>> {
+        let me = m.self_rank();
+        t.set_recv_timeout(self.cfg.probe_timeout());
+        self.probe.clear();
+        write_envelope(FrameKind::Probe, m.epoch() as u32, step, &mut self.probe);
+        let mut dead = Vec::new();
+        for r in 0..m.world() {
+            if r == me || !m.is_live(r) {
+                continue;
+            }
+            if t.send(r, &self.probe).is_err() {
+                dead.push(r);
+            }
+        }
+        for r in 0..m.world() {
+            if r == me || !m.is_live(r) || dead.contains(&r) || self.probes_seen[r] {
+                continue;
+            }
+            let alive = loop {
+                match t.recv(r) {
+                    Ok(frame) => match parse_envelope(&frame) {
+                        Ok((FrameKind::Probe, _, _, _)) => break true,
+                        _ => continue, // stale data / garbage: drain past it
+                    },
+                    Err(_) => break false, // deadline or disconnect
+                }
+            };
+            if !alive {
+                dead.push(r);
+            }
+        }
+        t.set_recv_timeout(self.cfg.recv_timeout());
+        self.probes_seen.iter_mut().for_each(|p| *p = false);
+        Ok(dead)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fault::injector::{FaultInjector, FaultSpec};
+    use crate::transport::LoopbackTransport;
+
+    fn cfg_ms(recv: u64, probe: u64) -> FaultConfig {
+        FaultConfig {
+            recv_timeout_ms: recv,
+            probe_timeout_ms: probe,
+        }
+    }
+
+    #[test]
+    fn envelope_roundtrip_and_rejects() {
+        let mut buf = Vec::new();
+        write_envelope(FrameKind::Data, 7, 42, &mut buf);
+        buf.extend_from_slice(b"payload");
+        let (k, e, s, body) = parse_envelope(&buf).unwrap();
+        assert_eq!((k, e, s, body), (FrameKind::Data, 7, 42, &b"payload"[..]));
+        let mut probe = Vec::new();
+        write_envelope(FrameKind::Probe, u32::MAX, 0, &mut probe);
+        let (k, e, _, body) = parse_envelope(&probe).unwrap();
+        assert_eq!((k, e), (FrameKind::Probe, u32::MAX));
+        assert!(body.is_empty());
+        assert!(parse_envelope(&[0, 1]).is_err());
+        assert!(parse_envelope(&[0u8; ENVELOPE_OVERHEAD - 1]).is_err());
+        assert!(parse_envelope(&[9, 0, 0, 0, 0, 0, 0, 0, 0]).is_err());
+    }
+
+    /// Run one elastic round on every rank of a loopback mesh with the
+    /// given per-rank fault specs; returns each rank's outcome.
+    fn run_mesh_round(
+        n: usize,
+        cfg: FaultConfig,
+        specs: Vec<Vec<FaultSpec>>,
+        steps: usize,
+    ) -> Vec<Option<Vec<ElasticRound>>> {
+        let mesh = LoopbackTransport::mesh(n);
+        let handles: Vec<_> = mesh
+            .into_iter()
+            .zip(specs)
+            .map(|(t, spec)| {
+                let cfg = cfg.clone();
+                std::thread::spawn(move || {
+                    let rank = t.rank();
+                    let mut t = FaultInjector::new(Box::new(t), spec);
+                    t.set_recv_timeout(cfg.recv_timeout());
+                    let mut m = Membership::new(rank, n);
+                    let mut ex = ElasticExchange::new(&m, cfg);
+                    let mut rounds = Vec::new();
+                    for step in 0..steps {
+                        t.on_step(step);
+                        if t.is_killed() {
+                            return None;
+                        }
+                        let payload = vec![rank as u8; 10 + rank];
+                        match ex.round(&mut t, &mut m, step as u32, &payload) {
+                            Ok(r) => rounds.push(r),
+                            Err(_) if t.is_killed() => return None,
+                            Err(e) => panic!("rank {rank}: {e}"),
+                        }
+                    }
+                    Some(rounds)
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    }
+
+    #[test]
+    fn healthy_group_matches_plain_allgather() {
+        let outs = run_mesh_round(4, cfg_ms(2_000, 2_000), vec![Vec::new(); 4], 2);
+        for out in outs.iter() {
+            let rounds = out.as_ref().expect("no one dies");
+            for r in rounds {
+                assert_eq!(r.recoveries, 0);
+                assert!(!r.lost);
+                assert_eq!(r.epoch, 0);
+                for (origin, b) in r.blocks.iter().enumerate() {
+                    assert_eq!(b.as_deref(), Some(&vec![origin as u8; 10 + origin][..]));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn killed_rank_is_removed_and_survivors_agree() {
+        let n = 4;
+        let mut specs = vec![Vec::new(); n];
+        specs[2] = vec![FaultSpec::KillAtStep { step: 1 }];
+        let outs = run_mesh_round(n, cfg_ms(120, 600), specs, 3);
+        assert!(outs[2].is_none(), "rank 2 must die");
+        for (rank, out) in outs.iter().enumerate() {
+            if rank == 2 {
+                continue;
+            }
+            let rounds = out.as_ref().unwrap_or_else(|| panic!("rank {rank} died"));
+            assert_eq!(rounds.len(), 3);
+            // Step 0: full group.
+            assert_eq!(rounds[0].epoch, 0);
+            assert!(rounds[0].blocks[2].is_some());
+            // Step 1: abort, one recovery, rank 2 gone.
+            assert_eq!(rounds[1].recoveries, 1, "rank {rank}");
+            assert!(rounds[1].lost);
+            assert_eq!(rounds[1].epoch, 1);
+            assert!(rounds[1].blocks[2].is_none());
+            // Step 2: clean ring of 3.
+            assert_eq!(rounds[2].recoveries, 0);
+            assert_eq!(rounds[2].epoch, 1);
+            let present: Vec<usize> = rounds[2]
+                .blocks
+                .iter()
+                .enumerate()
+                .filter_map(|(i, b)| b.as_ref().map(|_| i))
+                .collect();
+            assert_eq!(present, vec![0, 1, 3]);
+        }
+    }
+
+    #[test]
+    fn flap_recovers_without_deaths() {
+        // Rank 1's link goes down for 300 ms with a 100 ms recv deadline:
+        // peers abort and probe; by probe time the link has healed, so the
+        // epoch bumps with zero deaths and the replay includes everyone.
+        let n = 3;
+        let mut specs = vec![Vec::new(); n];
+        specs[1] = vec![FaultSpec::FlapAtStep { step: 1, down_ms: 300 }];
+        let outs = run_mesh_round(n, cfg_ms(100, 2_000), specs, 3);
+        for (rank, out) in outs.iter().enumerate() {
+            let rounds = out.as_ref().unwrap_or_else(|| panic!("rank {rank} died"));
+            assert_eq!(rounds[1].epoch, rounds[1].recoveries, "epoch == recoveries");
+            assert!(rounds[1].lost, "rank {rank} must see the outage");
+            // Everyone still present after the flap.
+            for r in rounds {
+                let live = r.blocks.iter().filter(|b| b.is_some()).count();
+                assert_eq!(live, n, "rank {rank}: flap must not kill anyone");
+            }
+            // Final epochs agree across ranks.
+            assert_eq!(rounds[2].epoch, outs[0].as_ref().unwrap()[2].epoch);
+        }
+    }
+
+    #[test]
+    fn short_stall_is_absorbed_without_recovery() {
+        let n = 3;
+        let mut specs = vec![Vec::new(); n];
+        specs[1] = vec![FaultSpec::StallAtStep { step: 1, stall_ms: 40 }];
+        let outs = run_mesh_round(n, cfg_ms(1_000, 1_000), specs, 3);
+        for out in outs.iter() {
+            for r in out.as_ref().unwrap() {
+                assert_eq!(r.recoveries, 0, "a sub-deadline straggler is just a slow round");
+                assert_eq!(r.epoch, 0);
+            }
+        }
+    }
+
+    /// PR-3's zero-alloc acceptance gate, extended: the fused send path
+    /// (compress → envelope → wire buffer) with membership checks enabled
+    /// still performs ZERO heap allocations in steady state. The lib test
+    /// binary runs under `testing::alloc::CountingAlloc`, so any
+    /// allocation on this thread is caught.
+    #[test]
+    fn steady_state_fused_send_with_membership_checks_is_allocation_free() {
+        use crate::compress::{CompressionConfig, NetSenseCompressor, Workspace};
+        use crate::testing::alloc::thread_alloc_count;
+        use crate::util::rng::Pcg64;
+
+        let n = 20_000;
+        let mut r = Pcg64::seeded(5);
+        let mut w = vec![0f32; n];
+        r.fill_normal_f32(&mut w, 0.0, 0.1);
+        let mut g = vec![0f32; n];
+        r.fill_normal_f32(&mut g, 0.0, 1.0);
+        let m = Membership::new(0, 4);
+        let ring = m.live_ring();
+        let mut c = NetSenseCompressor::new(n, CompressionConfig::default());
+        let mut ws = Workspace::with_capacity(n);
+        let mut wire: Vec<u8> = Vec::new();
+        let mut step = |c: &mut NetSenseCompressor,
+                        ws: &mut Workspace,
+                        wire: &mut Vec<u8>,
+                        g: &mut [f32],
+                        r: &mut Pcg64| {
+            for x in g.iter_mut() {
+                *x += 0.05 * r.normal() as f32;
+            }
+            // The membership checks the elastic send path performs every
+            // step: epoch, liveness, ring neighbors — all allocation-free.
+            assert!(m.is_live(ring.succ()) && m.is_live(ring.pred()));
+            assert_eq!(m.n_live(), 4);
+            wire.clear();
+            write_envelope(FrameKind::Data, m.epoch() as u32, 7, wire);
+            c.compress_payload_into(g, &w, 0.1, ws, wire);
+        };
+        for _ in 0..40 {
+            step(&mut c, &mut ws, &mut wire, &mut g, &mut r);
+        }
+        let before = thread_alloc_count();
+        for _ in 0..10 {
+            step(&mut c, &mut ws, &mut wire, &mut g, &mut r);
+        }
+        let allocs = thread_alloc_count() - before;
+        assert_eq!(
+            allocs, 0,
+            "membership-checked fused send path allocated {allocs} times"
+        );
+    }
+
+    #[test]
+    fn two_rank_group_degrades_to_solo() {
+        let n = 2;
+        let mut specs = vec![Vec::new(); n];
+        specs[1] = vec![FaultSpec::KillAtStep { step: 1 }];
+        let outs = run_mesh_round(n, cfg_ms(100, 400), specs, 3);
+        let rounds = outs[0].as_ref().unwrap();
+        assert_eq!(rounds[1].epoch, 1);
+        assert!(rounds[1].blocks[1].is_none());
+        // Solo ring: the round is the identity, instantly.
+        assert_eq!(rounds[2].recoveries, 0);
+        assert_eq!(
+            rounds[2].blocks[0].as_deref(),
+            Some(&vec![0u8; 10][..])
+        );
+    }
+}

@@ -1,0 +1,262 @@
+//! Deterministic fault injection at the transport seam: a
+//! [`Transport`] wrapper that kills, stalls, or flaps this endpoint on a
+//! step-indexed schedule, so live runs and netsim runs can exercise the
+//! *same* failure scenario ([`super::sim_trajectory`] is the simulator
+//! mirror of the same schedule).
+//!
+//! Faults are keyed by training step, not wall clock — the worker loop
+//! reports its step via [`FaultInjector::on_step`], which is what makes a
+//! chaos run replayable: the same schedule produces the same epoch/live
+//! trajectory every time (wall-clock only shifts *when* the recovery
+//! happens, never *what* it decides).
+
+use super::FaultSchedule;
+use crate::transport::{Transport, TransferObs};
+use crate::util::error::{anyhow, Result};
+use std::time::{Duration, Instant};
+
+/// One fault on one rank's endpoint.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultSpec {
+    /// From the start of `step`, the endpoint is dead: every send/recv
+    /// errors and the inner transport is shut down (peers observe a
+    /// disconnect or a recv timeout).
+    KillAtStep { step: usize },
+    /// A straggler: the first send of `step` is delayed by `stall_ms`
+    /// (local compute hiccup — GC pause, preemption). Below the group's
+    /// recv timeout it is absorbed as a slow round; above it, peers run a
+    /// recovery that finds everyone alive.
+    StallAtStep { step: usize, stall_ms: u64 },
+    /// A flapping link: from the first send at/after `step`, the link is
+    /// down for `down_ms` of wall clock — sends block until the link heals
+    /// (outage buffering), so peers time out, recover, and the replayed
+    /// round finds the rank alive again.
+    FlapAtStep { step: usize, down_ms: u64 },
+}
+
+impl FaultSpec {
+    fn step(&self) -> usize {
+        match self {
+            FaultSpec::KillAtStep { step }
+            | FaultSpec::StallAtStep { step, .. }
+            | FaultSpec::FlapAtStep { step, .. } => *step,
+        }
+    }
+}
+
+/// A [`Transport`] wrapper executing this rank's slice of a
+/// [`FaultSchedule`]. An empty spec list is a pass-through, so the worker
+/// loop always runs with the injector (and its membership checks) on.
+pub struct FaultInjector {
+    inner: Box<dyn Transport>,
+    specs: Vec<FaultSpec>,
+    killed: bool,
+    /// Pending one-shot stall (ms), armed by [`Self::on_step`], consumed
+    /// by the next send.
+    stall_pending: Option<u64>,
+    /// The flap outage end, armed by [`Self::on_step`]; sends before it
+    /// block until it passes.
+    flap_until: Option<Instant>,
+}
+
+impl FaultInjector {
+    pub fn new(inner: Box<dyn Transport>, specs: Vec<FaultSpec>) -> FaultInjector {
+        FaultInjector {
+            inner,
+            specs,
+            killed: false,
+            stall_pending: None,
+            flap_until: None,
+        }
+    }
+
+    /// Wrap with this rank's slice of a whole-group schedule.
+    pub fn from_schedule(inner: Box<dyn Transport>, schedule: &FaultSchedule) -> FaultInjector {
+        let rank = inner.rank();
+        FaultInjector::new(inner, schedule.specs_for(rank))
+    }
+
+    /// The worker loop is entering training step `step` — arm any faults
+    /// scheduled for it.
+    pub fn on_step(&mut self, step: usize) {
+        let (mut kill, mut stall, mut flap) = (false, None, None);
+        for spec in &self.specs {
+            if spec.step() != step {
+                continue;
+            }
+            match *spec {
+                FaultSpec::KillAtStep { .. } => kill = true,
+                FaultSpec::StallAtStep { stall_ms, .. } => stall = Some(stall_ms),
+                FaultSpec::FlapAtStep { down_ms, .. } => flap = Some(down_ms),
+            }
+        }
+        if kill {
+            self.killed = true;
+            let _ = self.inner.shutdown();
+        }
+        if let Some(ms) = stall {
+            self.stall_pending = Some(ms);
+        }
+        if let Some(ms) = flap {
+            self.flap_until = Some(Instant::now() + Duration::from_millis(ms));
+        }
+    }
+
+    /// Did a `KillAtStep` fire? The worker uses this to distinguish its
+    /// own planned death (return a partial trace) from a real failure
+    /// (propagate the error).
+    pub fn is_killed(&self) -> bool {
+        self.killed
+    }
+
+    fn dead_err(&self) -> crate::util::error::Error {
+        anyhow!("injected-kill: rank {} is dead", self.inner.rank())
+    }
+}
+
+impl Transport for FaultInjector {
+    fn rank(&self) -> usize {
+        self.inner.rank()
+    }
+
+    fn group_size(&self) -> usize {
+        self.inner.group_size()
+    }
+
+    fn send(&mut self, to: usize, payload: &[u8]) -> Result<()> {
+        if self.killed {
+            return Err(self.dead_err());
+        }
+        if let Some(ms) = self.stall_pending.take() {
+            std::thread::sleep(Duration::from_millis(ms));
+        }
+        if let Some(until) = self.flap_until {
+            let now = Instant::now();
+            if now < until {
+                std::thread::sleep(until - now);
+            }
+            self.flap_until = None;
+        }
+        self.inner.send(to, payload)
+    }
+
+    fn recv(&mut self, from: usize) -> Result<Vec<u8>> {
+        if self.killed {
+            return Err(self.dead_err());
+        }
+        self.inner.recv(from)
+    }
+
+    fn take_observations(&mut self) -> Vec<TransferObs> {
+        self.inner.take_observations()
+    }
+
+    fn set_recv_timeout(&mut self, timeout: Duration) {
+        self.inner.set_recv_timeout(timeout);
+    }
+
+    fn shutdown(&mut self) -> Result<()> {
+        self.inner.shutdown()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::transport::LoopbackTransport;
+
+    fn pair() -> (Box<dyn Transport>, Box<dyn Transport>) {
+        let mut mesh = LoopbackTransport::mesh(2);
+        let b = mesh.pop().unwrap();
+        let a = mesh.pop().unwrap();
+        (Box::new(a), Box::new(b))
+    }
+
+    #[test]
+    fn empty_spec_is_a_pass_through() {
+        let (a, mut b) = pair();
+        let mut a = FaultInjector::new(a, Vec::new());
+        for step in 0..3 {
+            a.on_step(step);
+            a.send(1, b"ping").unwrap();
+            assert_eq!(b.recv(0).unwrap(), b"ping");
+        }
+        assert!(!a.is_killed());
+        assert_eq!(a.take_observations().len(), 3);
+    }
+
+    #[test]
+    fn kill_fires_at_its_step_and_peers_observe_it() {
+        let (a, mut b) = pair();
+        let mut a = FaultInjector::new(a, vec![FaultSpec::KillAtStep { step: 2 }]);
+        a.on_step(0);
+        a.send(1, b"alive").unwrap();
+        assert_eq!(b.recv(0).unwrap(), b"alive");
+        a.on_step(1);
+        a.on_step(2);
+        assert!(a.is_killed());
+        let e = a.send(1, b"x").unwrap_err();
+        assert!(format!("{e}").contains("injected-kill"), "{e}");
+        assert!(a.recv(1).is_err());
+        // The peer sees the shutdown, not a silent void.
+        let e = b.recv(0).unwrap_err();
+        assert!(format!("{e}").contains("shut down"), "{e}");
+    }
+
+    #[test]
+    fn stall_delays_exactly_one_step() {
+        let (a, mut b) = pair();
+        let mut a = FaultInjector::new(a, vec![FaultSpec::StallAtStep { step: 1, stall_ms: 30 }]);
+        a.on_step(0);
+        let t0 = std::time::Instant::now();
+        a.send(1, b"fast").unwrap();
+        assert!(t0.elapsed() < Duration::from_millis(20));
+        a.on_step(1);
+        let t0 = std::time::Instant::now();
+        a.send(1, b"slow").unwrap();
+        assert!(t0.elapsed() >= Duration::from_millis(30), "stall not applied");
+        // Only the first send of the step stalls.
+        let t0 = std::time::Instant::now();
+        a.send(1, b"fast again").unwrap();
+        assert!(t0.elapsed() < Duration::from_millis(20));
+        for want in [&b"fast"[..], b"slow", b"fast again"] {
+            assert_eq!(b.recv(0).unwrap(), want);
+        }
+    }
+
+    #[test]
+    fn flap_blocks_sends_until_the_link_heals() {
+        let (a, mut b) = pair();
+        let mut a = FaultInjector::new(a, vec![FaultSpec::FlapAtStep { step: 0, down_ms: 40 }]);
+        a.on_step(0);
+        let t0 = std::time::Instant::now();
+        a.send(1, b"delayed").unwrap();
+        assert!(t0.elapsed() >= Duration::from_millis(40), "flap not applied");
+        assert_eq!(b.recv(0).unwrap(), b"delayed");
+        // Healed: later sends are immediate.
+        let t0 = std::time::Instant::now();
+        a.send(1, b"healed").unwrap();
+        assert!(t0.elapsed() < Duration::from_millis(20));
+        assert_eq!(b.recv(0).unwrap(), b"healed");
+    }
+
+    #[test]
+    fn schedule_slices_per_rank() {
+        let schedule = FaultSchedule {
+            kills: vec![(2, 5)],
+            stalls: vec![(1, 3, 50)],
+            flaps: vec![(1, 7, 80)],
+        };
+        assert_eq!(
+            schedule.specs_for(1),
+            vec![
+                FaultSpec::StallAtStep { step: 3, stall_ms: 50 },
+                FaultSpec::FlapAtStep { step: 7, down_ms: 80 },
+            ]
+        );
+        assert_eq!(schedule.specs_for(2), vec![FaultSpec::KillAtStep { step: 5 }]);
+        assert!(schedule.specs_for(0).is_empty());
+        assert_eq!(schedule.kill_step(2), Some(5));
+        assert_eq!(schedule.kill_step(1), None);
+    }
+}

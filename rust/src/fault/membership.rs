@@ -1,0 +1,291 @@
+//! Epoch-numbered membership: which ranks are alive, and the
+//! suspect → dead state machine every survivor advances identically.
+//!
+//! The tracker is deliberately *local* — each rank holds its own
+//! [`Membership`] and updates it from its own observations (recv
+//! timeouts, probe results, heartbeats piggybacked on collective data
+//! frames). Agreement comes from the recovery protocol in
+//! [`super::collective`]: every survivor runs the same all-to-all probe
+//! round after an abort, so every survivor removes the same dead set and
+//! lands on the same epoch. Given the same failure schedule, the
+//! epoch/live-set trajectory is therefore bit-deterministic across ranks
+//! (tested here and end-to-end in [`crate::experiments::live`]).
+//!
+//! ```
+//! use netsenseml::fault::{Membership, RankState};
+//!
+//! let mut m = Membership::new(1, 4);
+//! assert_eq!(m.epoch(), 0);
+//! assert_eq!(m.n_live(), 4);
+//! m.suspect(3);
+//! assert_eq!(m.state(3), RankState::Suspect { strikes: 1 });
+//! m.heartbeat(3); // a frame arrived after all — suspicion cleared
+//! assert_eq!(m.state(3), RankState::Alive);
+//! m.begin_epoch(&[3]); // probe round confirmed rank 3 dead
+//! assert_eq!(m.epoch(), 1);
+//! assert_eq!(m.live_ranks(), vec![0, 1, 2]);
+//! let ring = m.live_ring();
+//! assert_eq!((ring.succ(), ring.pred()), (2, 0));
+//! ```
+
+/// Liveness state of one rank, as seen by the local tracker.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RankState {
+    /// Answering normally.
+    Alive,
+    /// Missed `strikes` consecutive deadlines; cleared by any heartbeat,
+    /// promoted to [`RankState::Dead`] only by a failed probe round.
+    Suspect { strikes: u32 },
+    /// Confirmed unreachable. Absorbing: this PR's membership never
+    /// resurrects a dead rank in-place — a rejoin is a new run resuming
+    /// from a [`super::Checkpoint`].
+    Dead,
+}
+
+impl RankState {
+    pub fn is_live(&self) -> bool {
+        !matches!(self, RankState::Dead)
+    }
+}
+
+/// One rank's epoch-numbered view of the worker group.
+#[derive(Clone, Debug)]
+pub struct Membership {
+    self_rank: usize,
+    epoch: u64,
+    states: Vec<RankState>,
+}
+
+impl Membership {
+    /// Epoch 0: everyone alive.
+    pub fn new(self_rank: usize, world: usize) -> Membership {
+        assert!(world >= 1, "empty group");
+        assert!(self_rank < world, "self rank {self_rank} out of range");
+        Membership {
+            self_rank,
+            epoch: 0,
+            states: vec![RankState::Alive; world],
+        }
+    }
+
+    /// Current membership epoch. Bumps by exactly one per recovery event
+    /// (even a recovery that killed nobody — a flapping link — bumps, so
+    /// replayed rounds are never confused with the aborted round's stale
+    /// frames).
+    pub fn epoch(&self) -> u64 {
+        self.epoch
+    }
+
+    /// Group size at launch (dead ranks included).
+    pub fn world(&self) -> usize {
+        self.states.len()
+    }
+
+    pub fn self_rank(&self) -> usize {
+        self.self_rank
+    }
+
+    pub fn state(&self, rank: usize) -> RankState {
+        self.states[rank]
+    }
+
+    /// Alive or suspect (suspects still get probes and frames).
+    pub fn is_live(&self, rank: usize) -> bool {
+        self.states[rank].is_live()
+    }
+
+    pub fn n_live(&self) -> usize {
+        self.states.iter().filter(|s| s.is_live()).count()
+    }
+
+    /// Live ranks in ascending order (self included).
+    pub fn live_ranks(&self) -> Vec<usize> {
+        (0..self.world()).filter(|&r| self.is_live(r)).collect()
+    }
+
+    /// A frame from `rank` arrived — collective data frames double as
+    /// heartbeats. Clears suspicion; a dead rank stays dead.
+    pub fn heartbeat(&mut self, rank: usize) {
+        if matches!(self.states[rank], RankState::Suspect { .. }) {
+            self.states[rank] = RankState::Alive;
+        }
+    }
+
+    /// `rank` missed a deadline (recv timeout / send error). Returns the
+    /// new state. Never kills — death is decided by the probe round.
+    pub fn suspect(&mut self, rank: usize) -> RankState {
+        self.states[rank] = match self.states[rank] {
+            RankState::Alive => RankState::Suspect { strikes: 1 },
+            RankState::Suspect { strikes } => RankState::Suspect {
+                strikes: strikes.saturating_add(1),
+            },
+            RankState::Dead => RankState::Dead,
+        };
+        self.states[rank]
+    }
+
+    /// Commit a recovery: mark `dead` ranks dead, clear every surviving
+    /// suspicion, and bump the epoch. Returns the new epoch. The caller
+    /// (the probe round) guarantees every survivor passes the same set.
+    pub fn begin_epoch(&mut self, dead: &[usize]) -> u64 {
+        for &r in dead {
+            assert!(r != self.self_rank, "cannot declare self dead");
+            self.states[r] = RankState::Dead;
+        }
+        for s in self.states.iter_mut() {
+            if matches!(s, RankState::Suspect { .. }) {
+                *s = RankState::Alive;
+            }
+        }
+        self.epoch += 1;
+        self.epoch
+    }
+
+    /// The ring over the current live set (self must be live).
+    pub fn live_ring(&self) -> LiveRing {
+        let ranks = self.live_ranks();
+        let pos = ranks
+            .iter()
+            .position(|&r| r == self.self_rank)
+            .expect("self rank must be live to build a ring");
+        LiveRing { ranks, pos }
+    }
+}
+
+/// The collective ring over the live ranks of one epoch: positions are
+/// indices into the sorted live set, `pos` is where `self` sits. Rebuilt
+/// only on epoch change, so per-step membership checks stay
+/// allocation-free.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct LiveRing {
+    /// Live ranks, ascending.
+    pub ranks: Vec<usize>,
+    /// Index of the local rank in `ranks`.
+    pub pos: usize,
+}
+
+impl LiveRing {
+    pub fn len(&self) -> usize {
+        self.ranks.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.ranks.is_empty()
+    }
+
+    /// Alone in the group — collectives degenerate to the identity.
+    pub fn is_solo(&self) -> bool {
+        self.ranks.len() == 1
+    }
+
+    /// Absolute rank of the ring successor.
+    pub fn succ(&self) -> usize {
+        self.ranks[(self.pos + 1) % self.ranks.len()]
+    }
+
+    /// Absolute rank of the ring predecessor.
+    pub fn pred(&self) -> usize {
+        self.ranks[(self.pos + self.ranks.len() - 1) % self.ranks.len()]
+    }
+
+    /// Absolute rank at ring position `p`.
+    pub fn rank_at(&self, p: usize) -> usize {
+        self.ranks[p % self.ranks.len()]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn starts_all_alive_at_epoch_zero() {
+        let m = Membership::new(0, 4);
+        assert_eq!(m.epoch(), 0);
+        assert_eq!(m.n_live(), 4);
+        assert_eq!(m.live_ranks(), vec![0, 1, 2, 3]);
+        assert!(m.is_live(3));
+    }
+
+    #[test]
+    fn suspect_accumulates_strikes_and_heartbeat_clears() {
+        let mut m = Membership::new(0, 3);
+        assert_eq!(m.suspect(2), RankState::Suspect { strikes: 1 });
+        assert_eq!(m.suspect(2), RankState::Suspect { strikes: 2 });
+        assert!(m.is_live(2), "suspects still count as live");
+        m.heartbeat(2);
+        assert_eq!(m.state(2), RankState::Alive);
+    }
+
+    #[test]
+    fn begin_epoch_kills_clears_suspicion_and_bumps() {
+        let mut m = Membership::new(0, 4);
+        m.suspect(1);
+        m.suspect(3);
+        let e = m.begin_epoch(&[3]);
+        assert_eq!(e, 1);
+        assert_eq!(m.state(3), RankState::Dead);
+        assert_eq!(m.state(1), RankState::Alive, "survivor suspicion cleared");
+        assert_eq!(m.live_ranks(), vec![0, 1, 2]);
+        assert_eq!(m.n_live(), 3);
+    }
+
+    #[test]
+    fn empty_recovery_still_bumps_epoch() {
+        // A flapping link aborts a round without killing anyone; the epoch
+        // must still advance so the replay's frames outrank stale ones.
+        let mut m = Membership::new(0, 2);
+        m.suspect(1);
+        assert_eq!(m.begin_epoch(&[]), 1);
+        assert_eq!(m.n_live(), 2);
+        assert_eq!(m.state(1), RankState::Alive);
+    }
+
+    #[test]
+    fn dead_is_absorbing() {
+        let mut m = Membership::new(0, 3);
+        m.begin_epoch(&[2]);
+        m.heartbeat(2);
+        assert_eq!(m.state(2), RankState::Dead);
+        assert_eq!(m.suspect(2), RankState::Dead);
+    }
+
+    #[test]
+    fn ring_rebuilds_over_survivors() {
+        let mut m = Membership::new(2, 4);
+        let ring = m.live_ring();
+        assert_eq!(ring.ranks, vec![0, 1, 2, 3]);
+        assert_eq!((ring.pos, ring.succ(), ring.pred()), (2, 3, 1));
+        m.begin_epoch(&[3]);
+        let ring = m.live_ring();
+        assert_eq!(ring.ranks, vec![0, 1, 2]);
+        assert_eq!((ring.succ(), ring.pred()), (0, 1));
+        m.begin_epoch(&[0, 1]);
+        let ring = m.live_ring();
+        assert!(ring.is_solo());
+        assert_eq!((ring.succ(), ring.pred()), (2, 2));
+    }
+
+    #[test]
+    fn identical_observations_produce_identical_views() {
+        // The agreement property recovery relies on: two ranks applying
+        // the same dead sets in the same order converge to the same view.
+        let mut a = Membership::new(0, 5);
+        let mut b = Membership::new(3, 5);
+        for dead in [vec![2], vec![], vec![4, 1]] {
+            a.begin_epoch(&dead);
+            b.begin_epoch(&dead);
+        }
+        assert_eq!(a.epoch(), b.epoch());
+        assert_eq!(a.live_ranks(), b.live_ranks());
+        assert_eq!(a.epoch(), 3);
+        assert_eq!(a.live_ranks(), vec![0, 3]);
+    }
+
+    #[test]
+    #[should_panic(expected = "cannot declare self dead")]
+    fn self_death_rejected() {
+        let mut m = Membership::new(1, 2);
+        m.begin_epoch(&[1]);
+    }
+}

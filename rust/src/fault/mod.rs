@@ -1,0 +1,360 @@
+//! Fault-tolerant elastic membership: survive stragglers, dead ranks,
+//! and flapping links end-to-end.
+//!
+//! The worst "network condition" a distributed trainer meets in
+//! production is a rank that stops answering — without this module a
+//! single dead worker deadlocks the ring in
+//! [`crate::transport::collective`] forever, and none of the paper's
+//! adaptive machinery ever gets a chance to react. This subsystem makes
+//! the group *elastic*:
+//!
+//! - [`membership`] — an epoch-numbered live-rank view per worker, with
+//!   the suspect → dead state machine ([`Membership`], [`RankState`]) and
+//!   the collective ring over survivors ([`LiveRing`]).
+//! - [`injector`] — deterministic fault injection at the transport seam
+//!   ([`FaultInjector`], [`FaultSpec`]): kill-at-step, stall-for-duration,
+//!   flapping link, all keyed by training step so chaos runs replay
+//!   exactly.
+//! - [`collective`] — the degraded collective ([`ElasticExchange`]): an
+//!   epoch-tagged ring all-gather that reports the suspect on a deadline,
+//!   agrees on a new epoch through an all-to-all probe round, rebuilds the
+//!   ring over survivors, and replays the interrupted round.
+//! - [`checkpoint`] — compressor-state snapshot/restore
+//!   ([`Checkpoint`]): error-feedback residuals (and the selection caches
+//!   that make compression bit-deterministic) serialize so a rejoining
+//!   rank resumes without corrupting convergence.
+//!
+//! The same failure schedule drives live runs
+//! ([`crate::experiments::live`] wires [`FaultInjector`] into every
+//! worker) and the simulator ([`sim_trajectory`] replays the schedule
+//! against [`crate::netsim`]): both produce the same
+//! [`SyncTrajectory`] — the chaos-determinism contract the end-to-end
+//! test asserts.
+//!
+//! Failure-model assumptions (documented, not hidden): ranks are
+//! fail-stop (a dead rank stays dead; rejoin is a new process resuming
+//! from a [`Checkpoint`]), and recovery latency is bounded by the probe
+//! deadline — a rank slower than that is indistinguishable from a dead
+//! one and is removed (the lease assumption every practical membership
+//! service makes).
+
+pub mod checkpoint;
+pub mod collective;
+pub mod injector;
+pub mod membership;
+
+pub use checkpoint::Checkpoint;
+pub use collective::{
+    parse_envelope, write_envelope, ElasticExchange, ElasticRound, FrameKind, ENVELOPE_OVERHEAD,
+};
+pub use injector::{FaultInjector, FaultSpec};
+pub use membership::{LiveRing, Membership, RankState};
+
+use crate::netsim::schedule::mbps;
+use crate::netsim::topology::StarTopology;
+use crate::netsim::{NetSim, SimTime};
+use std::time::Duration;
+
+/// Deadlines of the failure detector (the `[fault]` config table).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct FaultConfig {
+    /// Per-recv deadline during a collective round, ms. A peer silent for
+    /// longer is suspected and the round aborts into recovery.
+    pub recv_timeout_ms: u64,
+    /// Per-peer deadline of the recovery probe round, ms. A suspect that
+    /// fails to answer a probe within it is declared dead.
+    pub probe_timeout_ms: u64,
+}
+
+impl Default for FaultConfig {
+    fn default() -> Self {
+        FaultConfig {
+            recv_timeout_ms: 10_000,
+            probe_timeout_ms: 10_000,
+        }
+    }
+}
+
+impl FaultConfig {
+    pub fn recv_timeout(&self) -> Duration {
+        Duration::from_millis(self.recv_timeout_ms)
+    }
+
+    pub fn probe_timeout(&self) -> Duration {
+        Duration::from_millis(self.probe_timeout_ms)
+    }
+}
+
+/// A whole-group failure schedule, keyed by `(rank, step)` — the single
+/// source both the live [`FaultInjector`]s and the netsim mirror
+/// ([`sim_trajectory`]) execute.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct FaultSchedule {
+    /// `(rank, step)`: the rank dies at the start of `step`.
+    pub kills: Vec<(usize, usize)>,
+    /// `(rank, step, stall_ms)`: the rank stalls for `stall_ms` at `step`.
+    pub stalls: Vec<(usize, usize, u64)>,
+    /// `(rank, step, down_ms)`: the rank's link flaps down for `down_ms`
+    /// starting at `step`.
+    pub flaps: Vec<(usize, usize, u64)>,
+}
+
+impl FaultSchedule {
+    pub fn is_empty(&self) -> bool {
+        self.kills.is_empty() && self.stalls.is_empty() && self.flaps.is_empty()
+    }
+
+    /// The fault specs `rank`'s endpoint executes.
+    pub fn specs_for(&self, rank: usize) -> Vec<FaultSpec> {
+        let mut specs = Vec::new();
+        for &(r, step) in &self.kills {
+            if r == rank {
+                specs.push(FaultSpec::KillAtStep { step });
+            }
+        }
+        for &(r, step, stall_ms) in &self.stalls {
+            if r == rank {
+                specs.push(FaultSpec::StallAtStep { step, stall_ms });
+            }
+        }
+        for &(r, step, down_ms) in &self.flaps {
+            if r == rank {
+                specs.push(FaultSpec::FlapAtStep { step, down_ms });
+            }
+        }
+        specs
+    }
+
+    /// The step `rank` is scheduled to die at, if any.
+    pub fn kill_step(&self, rank: usize) -> Option<usize> {
+        self.kills
+            .iter()
+            .find(|&&(r, _)| r == rank)
+            .map(|&(_, step)| step)
+    }
+
+    /// Largest rank referenced (for config validation).
+    pub fn max_rank(&self) -> Option<usize> {
+        self.kills
+            .iter()
+            .map(|&(r, _)| r)
+            .chain(self.stalls.iter().map(|&(r, _, _)| r))
+            .chain(self.flaps.iter().map(|&(r, _, _)| r))
+            .max()
+    }
+}
+
+/// One stretch of training at a fixed membership view.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct TrajectorySegment {
+    pub epoch: u64,
+    pub group_size: usize,
+    /// Synchronization rounds completed in this segment.
+    pub syncs: u64,
+}
+
+/// The epoch/live-set trajectory of a run: what the chaos-determinism
+/// contract compares between a live run and its netsim mirror.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct SyncTrajectory {
+    pub segments: Vec<TrajectorySegment>,
+    /// Virtual time the simulator spent moving the segments' bytes
+    /// (0 for trajectories folded out of a live trace).
+    pub vtime_s: f64,
+}
+
+impl SyncTrajectory {
+    /// Append one sync at `(epoch, group_size)`, folding into the last
+    /// segment when the view is unchanged.
+    pub fn record(&mut self, epoch: u64, group_size: usize) {
+        match self.segments.last_mut() {
+            Some(seg) if seg.epoch == epoch && seg.group_size == group_size => seg.syncs += 1,
+            _ => self.segments.push(TrajectorySegment {
+                epoch,
+                group_size,
+                syncs: 1,
+            }),
+        }
+    }
+
+    pub fn total_syncs(&self) -> u64 {
+        self.segments.iter().map(|s| s.syncs).sum()
+    }
+}
+
+/// Replay a [`FaultSchedule`] against the simulator: the same membership
+/// state machine the live workers run, with each segment's synchronization
+/// rounds moved over a [`NetSim`] star sized to the surviving group. The
+/// returned trajectory must equal the live run's
+/// ([`crate::experiments::live::LiveReport::trajectory`]) — failure
+/// handling is schedule-deterministic; wall clock only shifts *when*
+/// recovery happens, never *what* it decides.
+///
+/// The events mirror the live semantics: a kill always triggers a
+/// recovery (epoch +1, rank removed); a stall or flap triggers one only
+/// when it exceeds `cfg.recv_timeout_ms` (epoch +1, nobody removed —
+/// the probe round finds the straggler alive).
+pub fn sim_trajectory(
+    world: usize,
+    steps: usize,
+    schedule: &FaultSchedule,
+    cfg: &FaultConfig,
+    payload_bytes: u64,
+) -> SyncTrajectory {
+    let mut m = Membership::new(0, world);
+    let mut traj = SyncTrajectory::default();
+    let mut vtime_acc = 0.0f64;
+    let mut sim = NetSim::quiet(StarTopology::constant(
+        world,
+        mbps(1_000.0),
+        SimTime::from_millis(1),
+    ));
+    for step in 0..steps {
+        // Faults only fire on ranks still alive — a stall or flap
+        // scheduled on a rank after its own kill never reaches the wire
+        // in the live run either (the injector's endpoint is dead).
+        let dead: Vec<usize> = schedule
+            .kills
+            .iter()
+            .filter(|&&(r, s)| s == step && m.is_live(r))
+            .map(|&(r, _)| r)
+            .collect();
+        let disrupted = schedule
+            .stalls
+            .iter()
+            .any(|&(r, s, ms)| s == step && ms > cfg.recv_timeout_ms && m.is_live(r))
+            || schedule
+                .flaps
+                .iter()
+                .any(|&(r, s, ms)| s == step && ms > cfg.recv_timeout_ms && m.is_live(r));
+        if !dead.is_empty() || disrupted {
+            m.begin_epoch(&dead);
+            // The ring rebuilds over survivors: a fresh star topology per
+            // membership change (virtual time accumulates across them).
+            if !dead.is_empty() {
+                vtime_acc += sim.now().as_secs_f64();
+                sim = NetSim::quiet(StarTopology::constant(
+                    m.n_live().max(1),
+                    mbps(1_000.0),
+                    SimTime::from_millis(1),
+                ));
+            }
+        }
+        if m.n_live() > 1 {
+            let payloads = vec![payload_bytes; m.n_live()];
+            crate::collectives::patterns::ring_allgather(&mut sim, &payloads);
+        }
+        traj.record(m.epoch(), m.n_live());
+    }
+    traj.vtime_s = vtime_acc + sim.now().as_secs_f64();
+    traj
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn trajectory_folds_consecutive_views() {
+        let mut t = SyncTrajectory::default();
+        for _ in 0..5 {
+            t.record(0, 4);
+        }
+        for _ in 0..3 {
+            t.record(1, 3);
+        }
+        assert_eq!(
+            t.segments,
+            vec![
+                TrajectorySegment { epoch: 0, group_size: 4, syncs: 5 },
+                TrajectorySegment { epoch: 1, group_size: 3, syncs: 3 },
+            ]
+        );
+        assert_eq!(t.total_syncs(), 8);
+    }
+
+    #[test]
+    fn sim_trajectory_kill_splits_segments() {
+        let schedule = FaultSchedule {
+            kills: vec![(2, 6)],
+            ..Default::default()
+        };
+        let t = sim_trajectory(4, 14, &schedule, &FaultConfig::default(), 10_000);
+        assert_eq!(
+            t.segments,
+            vec![
+                TrajectorySegment { epoch: 0, group_size: 4, syncs: 6 },
+                TrajectorySegment { epoch: 1, group_size: 3, syncs: 8 },
+            ]
+        );
+        assert!(t.vtime_s > 0.0, "netsim must have moved bytes");
+    }
+
+    #[test]
+    fn sim_trajectory_flap_bumps_epoch_without_deaths() {
+        let cfg = FaultConfig {
+            recv_timeout_ms: 100,
+            probe_timeout_ms: 500,
+        };
+        let schedule = FaultSchedule {
+            flaps: vec![(1, 3, 300)],
+            stalls: vec![(1, 5, 20)], // sub-deadline: absorbed, no bump
+            ..Default::default()
+        };
+        let t = sim_trajectory(3, 8, &schedule, &cfg, 1_000);
+        assert_eq!(
+            t.segments,
+            vec![
+                TrajectorySegment { epoch: 0, group_size: 3, syncs: 3 },
+                TrajectorySegment { epoch: 1, group_size: 3, syncs: 5 },
+            ]
+        );
+    }
+
+    #[test]
+    fn sim_trajectory_ignores_faults_on_dead_ranks() {
+        // A flap scheduled after the same rank's kill never reaches the
+        // wire in a live run (the endpoint is dead) — the mirror must
+        // not count it either.
+        let cfg = FaultConfig {
+            recv_timeout_ms: 100,
+            probe_timeout_ms: 500,
+        };
+        let schedule = FaultSchedule {
+            kills: vec![(2, 3)],
+            flaps: vec![(2, 6, 400)],
+            ..Default::default()
+        };
+        let t = sim_trajectory(3, 8, &schedule, &cfg, 1_000);
+        assert_eq!(
+            t.segments,
+            vec![
+                TrajectorySegment { epoch: 0, group_size: 3, syncs: 3 },
+                TrajectorySegment { epoch: 1, group_size: 2, syncs: 5 },
+            ]
+        );
+    }
+
+    #[test]
+    fn sim_trajectory_no_faults_is_one_segment() {
+        let t = sim_trajectory(4, 10, &FaultSchedule::default(), &FaultConfig::default(), 1_000);
+        assert_eq!(
+            t.segments,
+            vec![TrajectorySegment { epoch: 0, group_size: 4, syncs: 10 }]
+        );
+    }
+
+    #[test]
+    fn schedule_helpers() {
+        let s = FaultSchedule {
+            kills: vec![(3, 9)],
+            stalls: vec![(1, 2, 40)],
+            flaps: Vec::new(),
+        };
+        assert!(!s.is_empty());
+        assert!(FaultSchedule::default().is_empty());
+        assert_eq!(s.max_rank(), Some(3));
+        assert_eq!(s.kill_step(3), Some(9));
+        assert_eq!(s.kill_step(0), None);
+    }
+}

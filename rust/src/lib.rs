@@ -41,6 +41,16 @@
 //! compress-then-send path remains as the baseline (and the default when
 //! no `[pipeline]` config is given).
 //!
+//! ## Fault tolerance
+//!
+//! The worker group is *elastic* ([`fault`]): an epoch-numbered
+//! [`fault::Membership`] view per rank, deadline-aware transports, a
+//! degraded collective that rebuilds the ring over survivors and replays
+//! the interrupted round ([`fault::ElasticExchange`]), deterministic
+//! chaos injection ([`fault::FaultInjector`]) mirrored on the simulator
+//! ([`fault::sim_trajectory`]), and compressor-state checkpoints
+//! ([`fault::Checkpoint`]) so a rejoining rank resumes bit-identically.
+//!
 //! See `README.md` for the quickstart, `DESIGN.md` for the module-by-module
 //! system inventory, `EXPERIMENTS.md` for the experiment ↔ paper-figure
 //! index, and `ROADMAP.md` for open items.
@@ -50,6 +60,7 @@ pub mod compress;
 pub mod config;
 pub mod coordinator;
 pub mod experiments;
+pub mod fault;
 pub mod netsim;
 pub mod runtime;
 pub mod sensing;

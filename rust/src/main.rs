@@ -74,6 +74,11 @@ fn cli() -> Cli {
                     opt("step-down", "halve-style rate step: `<at_s>:<mbps>`", None),
                     opt("compute-ms", "local compute time per step", None),
                     opt("seed", "seed", None),
+                    opt("kill", "chaos: kill a rank mid-run: `<rank>:<step>`", None),
+                    opt("stall", "chaos: stall a rank: `<rank>:<step>:<ms>`", None),
+                    opt("flap", "chaos: flap a rank's link: `<rank>:<step>:<down_ms>`", None),
+                    opt("recv-timeout-ms", "failure detector: per-recv deadline", None),
+                    opt("probe-timeout-ms", "failure detector: recovery probe deadline", None),
                 ],
                 positionals: vec![],
             },
@@ -310,11 +315,32 @@ fn cmd_live(args: &netsenseml::util::cli::Args) -> Result<()> {
     if let Some(s) = args.get_u64("seed")? {
         cfg.seed = s;
     }
+    if let Some(spec) = args.get("kill") {
+        let (rank, step) = parse_colon_pair(spec)
+            .ok_or_else(|| anyhow!("--kill wants `<rank>:<step>`, got `{spec}`"))?;
+        cfg.faults.kills.push((rank, step));
+    }
+    if let Some(spec) = args.get("stall") {
+        let (rank, step, ms) = parse_colon_triple(spec)
+            .ok_or_else(|| anyhow!("--stall wants `<rank>:<step>:<ms>`, got `{spec}`"))?;
+        cfg.faults.stalls.push((rank, step, ms));
+    }
+    if let Some(spec) = args.get("flap") {
+        let (rank, step, ms) = parse_colon_triple(spec)
+            .ok_or_else(|| anyhow!("--flap wants `<rank>:<step>:<down_ms>`, got `{spec}`"))?;
+        cfg.faults.flaps.push((rank, step, ms));
+    }
+    if let Some(v) = args.get_u64("recv-timeout-ms")? {
+        cfg.fault.recv_timeout_ms = v;
+    }
+    if let Some(v) = args.get_u64("probe-timeout-ms")? {
+        cfg.fault.probe_timeout_ms = v;
+    }
     cfg.validate()?;
 
     let opts = cfg.live_opts();
     eprintln!(
-        "live: {} workers over {} — strategy {}, {} steps × {} params{}",
+        "live: {} workers over {} — strategy {}, {} steps × {} params{}{}",
         opts.n_workers,
         cfg.transport.backend,
         cfg.strategy,
@@ -327,19 +353,31 @@ fn cmd_live(args: &netsenseml::util::cli::Args) -> Result<()> {
                 s.schedule.len()
             ),
             None => ", unshaped".to_string(),
+        },
+        if opts.faults.is_empty() {
+            String::new()
+        } else {
+            format!(
+                ", chaos: {} kill(s) {} stall(s) {} flap(s)",
+                opts.faults.kills.len(),
+                opts.faults.stalls.len(),
+                opts.faults.flaps.len()
+            )
         }
     );
     let report = netsenseml::experiments::live::run_live(&opts)?;
 
     let mut table = netsenseml::experiments::Table::new(
         "Live training — measured observables (rank 0)",
-        &["Step", "t (s)", "Ratio", "Payload (kB)", "Round (ms)", "Sensed BtlBw (Mbps)"],
+        &["Step", "t (s)", "Epoch", "Live", "Ratio", "Payload (kB)", "Round (ms)", "Sensed BtlBw (Mbps)"],
     );
     let stride = (report.steps.len() / 12).max(1);
     for r in report.steps.iter().step_by(stride) {
         table.row(vec![
             r.step.to_string(),
             format!("{:.2}", r.at_s),
+            r.epoch.to_string(),
+            r.live.to_string(),
             format!("{:.4}", r.ratio),
             format!("{:.1}", r.payload_bytes as f64 / 1e3),
             format!("{:.1}", r.round_ms),
@@ -350,12 +388,16 @@ fn cmd_live(args: &netsenseml::util::cli::Args) -> Result<()> {
     }
     table.print();
     println!(
-        "steps={} wall={:.1}s final_ratio={:.4} ctl(+{} / −{}) replicas {}",
+        "steps={} wall={:.1}s final_ratio={:.4} ctl(+{} / −{}) recoveries={} lost={} live={}/{} replicas {}",
         report.steps.len(),
         report.wall_s,
         report.final_ratio,
         report.controller_increases,
         report.controller_decreases,
+        report.recoveries,
+        report.lost_intervals,
+        report.final_live,
+        opts.n_workers,
         if report.consistent {
             "bit-identical"
         } else {
@@ -363,9 +405,26 @@ fn cmd_live(args: &netsenseml::util::cli::Args) -> Result<()> {
         }
     );
     if !report.consistent {
-        bail!("reduced gradients diverged across workers");
+        bail!("reduced gradients diverged across surviving workers");
     }
     Ok(())
+}
+
+/// `a:b` → (a, b).
+fn parse_colon_pair(spec: &str) -> Option<(usize, usize)> {
+    let (a, b) = spec.split_once(':')?;
+    Some((a.trim().parse().ok()?, b.trim().parse().ok()?))
+}
+
+/// `a:b:c` → (a, b, c).
+fn parse_colon_triple(spec: &str) -> Option<(usize, usize, u64)> {
+    let (a, rest) = spec.split_once(':')?;
+    let (b, c) = rest.split_once(':')?;
+    Some((
+        a.trim().parse().ok()?,
+        b.trim().parse().ok()?,
+        c.trim().parse().ok()?,
+    ))
 }
 
 fn cmd_e2e(args: &netsenseml::util::cli::Args) -> Result<()> {

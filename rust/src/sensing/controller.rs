@@ -13,6 +13,12 @@
 //! `data_size > 0.9 × BDP  ⇒  ratio ← max(0.005, ratio × α)`  (α = 0.5)
 //! `otherwise              ⇒  ratio ← min(1, ratio + β₂)`      (β₂ = 0.01)
 //!
+//! A **lost** interval (a recv deadline, a dropped round, a membership
+//! recovery — the signals [`crate::fault`] and the live exchange feed in)
+//! is congestion evidence stronger than any BDP estimate: it triggers the
+//! multiplicative backoff directly, even when the byte-count test alone
+//! would have ramped up.
+//!
 //! The controller also advises the bucketed pipeline
 //! ([`RatioController::recommended_bucket_bytes`]): transport stages are
 //! sized to the sensed BDP, so in-flight units shrink under congestion.
@@ -130,9 +136,11 @@ impl RatioController {
     /// payload bytes and measured transfer time) and advance the state
     /// machine. Returns the ratio for the next interval.
     ///
-    /// `lost` reports packet loss in the interval (the paper's alternative
-    /// startup-exit trigger; the simulator's reliable path never loses, but
-    /// best-effort overload can surface here).
+    /// `lost` reports loss in the interval: packet loss, a recv deadline,
+    /// or a round that needed a membership recovery — the live exchange
+    /// and the failure detector ([`crate::fault`]) set it from measured
+    /// events (it is the paper's alternative startup-exit trigger, and in
+    /// the steady phase it forces the multiplicative backoff).
     pub fn on_interval(&mut self, data_size_bytes: u64, rtt: SimTime, lost: bool) -> f64 {
         self.intervals += 1;
         self.estimator.observe(data_size_bytes, rtt);
@@ -144,19 +152,39 @@ impl RatioController {
                     .rtt_excessive(rtt, self.config.excess_rtt_factor);
                 if lost || excessive || self.intervals >= self.config.max_startup_intervals {
                     self.phase = Phase::NetSense;
-                    // Fall through to a NetSense-style adjustment this
-                    // interval so congestion found at startup-exit is acted
-                    // on immediately.
-                    self.netsense_adjust(data_size_bytes);
+                    if lost {
+                        // Loss at startup-exit: back off immediately.
+                        self.backoff();
+                    } else {
+                        // Fall through to a NetSense-style adjustment this
+                        // interval so congestion found at startup-exit is
+                        // acted on immediately.
+                        self.netsense_adjust(data_size_bytes);
+                    }
                 } else {
                     // Algorithm 1 line 5: quick ramp.
                     self.ratio = (self.ratio + self.config.beta1).min(1.0);
                     self.n_increases += 1;
                 }
             }
-            Phase::NetSense => self.netsense_adjust(data_size_bytes),
+            Phase::NetSense => {
+                if lost {
+                    // Loss outranks the BDP test: an interval that needed
+                    // a recovery (or dropped data) is congestion evidence
+                    // no matter how small its payload was.
+                    self.backoff();
+                } else {
+                    self.netsense_adjust(data_size_bytes);
+                }
+            }
         }
         self.ratio
+    }
+
+    /// Multiplicative decrease (Algorithm 1 line 16) — the backoff branch.
+    fn backoff(&mut self) {
+        self.ratio = (self.ratio * self.config.alpha).max(self.config.min_ratio);
+        self.n_decreases += 1;
     }
 
     /// Transport-stage size the bucketed pipeline should use right now:
@@ -181,8 +209,7 @@ impl RatioController {
         };
         // Algorithm 1 lines 15–19 / Eq. (3).
         if (data_size_bytes as f64) > self.config.bdp_guard * est.bdp_bytes {
-            self.ratio = (self.ratio * self.config.alpha).max(self.config.min_ratio);
-            self.n_decreases += 1;
+            self.backoff();
         } else {
             self.ratio = (self.ratio + self.config.beta2).min(1.0);
             self.n_increases += 1;
@@ -264,6 +291,32 @@ mod tests {
         let after = c.on_interval(5000, SimTime::from_millis(30), false);
         assert_eq!(c.phase(), Phase::NetSense);
         assert!((after - before * 0.5).abs() < 1e-12);
+    }
+
+    /// The satellite fix: a *lost* interval (recv deadline, membership
+    /// recovery) must trigger the multiplicative backoff in the steady
+    /// phase, even when the payload-vs-BDP test alone would have ramped
+    /// the ratio up.
+    #[test]
+    fn netsense_lost_interval_triggers_backoff() {
+        let mut c = ctl();
+        c.on_interval(1_000_000, SimTime::from_millis(100), true); // → NetSense, BDP = 1 MB
+        // Ramp a few clean under-BDP intervals so the ratio is well off
+        // the floor and the no-loss branch is provably "increase" (few
+        // enough that the 10 MB/s anchor stays inside the BtlBw window).
+        for _ in 0..5 {
+            c.on_interval(100_000, SimTime::from_millis(100), false);
+        }
+        assert_eq!(c.phase(), Phase::NetSense);
+        let before = c.ratio();
+        let decreases_before = c.n_decreases;
+        // Same tiny payload — but lost. Must back off multiplicatively.
+        let after = c.on_interval(100_000, SimTime::from_millis(100), true);
+        assert!((after - (before * 0.5).max(0.005)).abs() < 1e-12, "{before} → {after}");
+        assert_eq!(c.n_decreases, decreases_before + 1);
+        // And the next clean interval resumes the additive climb.
+        let resumed = c.on_interval(100_000, SimTime::from_millis(100), false);
+        assert!((resumed - (after + 0.01)).abs() < 1e-12);
     }
 
     #[test]

@@ -285,6 +285,59 @@ mod tests {
         }
     }
 
+    /// Satellite cross-check: the simulator timing model
+    /// ([`crate::collectives::patterns::ring_allreduce`]) must account
+    /// the same wire volume the data-moving twin actually pushes.
+    #[test]
+    fn timing_model_sent_per_worker_matches_data_mover() {
+        use crate::collectives::patterns;
+        use crate::netsim::schedule::mbps;
+        use crate::netsim::topology::StarTopology;
+        use crate::netsim::{NetSim, SimTime};
+
+        let run_actual = |n: usize, len: usize| -> Vec<u64> {
+            let handles: Vec<_> = LoopbackTransport::mesh(n)
+                .into_iter()
+                .map(|mut t| {
+                    std::thread::spawn(move || {
+                        let mut data = vec![1.0f32; len];
+                        ring_allreduce_f32(&mut t, &mut data).unwrap().sent_bytes
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        };
+
+        // Even split: the model's uniform chunk is exact — simulated
+        // bytes must equal measured wire bytes rank by rank.
+        let (n, len) = (4usize, 8192usize);
+        let mut sim =
+            NetSim::quiet(StarTopology::constant(n, mbps(100.0), SimTime::from_millis(1)));
+        let model = patterns::ring_allreduce(&mut sim, 4 * len as u64);
+        assert_eq!(model.sent_per_worker, run_actual(n, len));
+
+        // Ragged split: the model rounds every chunk up to ceil(total/n);
+        // the data mover's element-aligned chunks sum to exactly the
+        // tensor, so the aggregate discrepancy is exactly
+        // 2(n−1)·(n·ceil − total), and per rank it stays under one chunk.
+        let (n, len) = (3usize, 10_000usize);
+        let total = 4 * len as u64;
+        let mut sim =
+            NetSim::quiet(StarTopology::constant(n, mbps(100.0), SimTime::from_millis(1)));
+        let model = patterns::ring_allreduce(&mut sim, total);
+        let actual = run_actual(n, len);
+        let actual_total: u64 = actual.iter().sum();
+        assert_eq!(actual_total, 2 * (n as u64 - 1) * total);
+        let chunk = total.div_ceil(n as u64);
+        assert_eq!(
+            model.total_sent() - actual_total,
+            2 * (n as u64 - 1) * (n as u64 * chunk - total)
+        );
+        for (m, a) in model.sent_per_worker.iter().zip(&actual) {
+            assert!(m.abs_diff(*a) <= chunk, "model {m} vs measured {a}");
+        }
+    }
+
     #[test]
     fn single_rank_allreduce_is_identity() {
         let mut mesh = LoopbackTransport::mesh(1);

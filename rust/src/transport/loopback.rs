@@ -110,6 +110,10 @@ impl Transport for LoopbackTransport {
         std::mem::take(&mut self.obs)
     }
 
+    fn set_recv_timeout(&mut self, timeout: Duration) {
+        self.timeout = timeout;
+    }
+
     fn shutdown(&mut self) -> Result<()> {
         // Dropping the senders signals Disconnected to peers still waiting.
         for tx in self.txs.iter_mut() {
@@ -171,6 +175,16 @@ mod tests {
         let mut a = mesh.remove(0).with_timeout(Duration::from_millis(20));
         let e = a.recv(1).unwrap_err();
         assert!(format!("{e}").contains("timed out"), "{e}");
+    }
+
+    #[test]
+    fn set_recv_timeout_applies_at_runtime() {
+        let mut mesh = LoopbackTransport::mesh(2);
+        let mut a = mesh.remove(0);
+        a.set_recv_timeout(Duration::from_millis(10));
+        let t0 = Instant::now();
+        assert!(a.recv(1).is_err());
+        assert!(t0.elapsed() < Duration::from_secs(5), "runtime deadline ignored");
     }
 
     #[test]

@@ -85,6 +85,12 @@ pub trait Transport: Send {
     /// implementation timeout so a dead peer errors instead of hanging).
     fn recv(&mut self, from: usize) -> Result<Vec<u8>>;
 
+    /// Replace the blocking-recv deadline at runtime. The failure-recovery
+    /// protocol ([`crate::fault`]) tightens this during collective rounds
+    /// and relaxes it for probe rounds; implementations without a
+    /// meaningful deadline may ignore it (the default is a no-op).
+    fn set_recv_timeout(&mut self, _timeout: Duration) {}
+
     /// Drain the `(bytes, elapsed)` observations recorded since the last
     /// call — the sensing estimator's feed.
     fn take_observations(&mut self) -> Vec<TransferObs>;

@@ -207,6 +207,10 @@ impl<T: Transport> Transport for ShapedTransport<T> {
         std::mem::take(&mut self.obs)
     }
 
+    fn set_recv_timeout(&mut self, timeout: Duration) {
+        self.inner.set_recv_timeout(timeout);
+    }
+
     fn shutdown(&mut self) -> Result<()> {
         self.inner.shutdown()
     }

@@ -17,8 +17,13 @@
 //! Each peer connection gets a reader thread that turns the byte stream
 //! back into frames and parks them in a per-peer inbox; `send` writes
 //! frames directly on the socket (with `TCP_NODELAY`, so small control
-//! frames don't sit in Nagle buffers). Shutdown closes the sockets, which
-//! lands reader threads on `UnexpectedEof`, and joins them.
+//! frames don't sit in Nagle buffers). A read error — peer crash, reset,
+//! or graceful EOF — is pushed into the inbox as an `Err` observation
+//! before the reader exits, so a blocked `recv` surfaces the disconnect
+//! immediately instead of silently waiting out its full timeout (the
+//! failure detector in [`crate::fault`] feeds on exactly this signal).
+//! Shutdown closes the sockets, which lands reader threads on
+//! `UnexpectedEof`, and joins them.
 
 use super::frame::{read_frame, write_frame, FRAME_OVERHEAD};
 use super::{Transport, TransferObs};
@@ -36,6 +41,11 @@ const CONNECT_RETRY_EVERY: Duration = Duration::from_millis(10);
 /// bootstrap errors out (a crashed worker must not hang the run).
 const ACCEPT_FOR: Duration = Duration::from_secs(30);
 
+/// What a reader thread parks in the inbox: a frame, or the read error
+/// that ended the connection (stringly — the reader can't share the
+/// non-`Send`-safe error machinery across the channel).
+type InboxItem = std::result::Result<Vec<u8>, String>;
+
 /// A rank's endpoint of the TCP mesh.
 pub struct TcpTransport {
     rank: usize,
@@ -43,7 +53,7 @@ pub struct TcpTransport {
     /// `peers[j]`: write side of the connection to rank `j`.
     peers: Vec<Option<TcpStream>>,
     /// `inbox[j]`: frames read off the connection to rank `j`.
-    inbox: Vec<Option<Receiver<Vec<u8>>>>,
+    inbox: Vec<Option<Receiver<InboxItem>>>,
     readers: Vec<JoinHandle<()>>,
     obs: Vec<TransferObs>,
     timeout: Duration,
@@ -170,7 +180,7 @@ impl TcpTransport {
             }
             peers[k] = Some(s);
         }
-        let mut inbox: Vec<Option<Receiver<Vec<u8>>>> = (0..world).map(|_| None).collect();
+        let mut inbox: Vec<Option<Receiver<InboxItem>>> = (0..world).map(|_| None).collect();
         let mut readers = Vec::new();
         for (j, peer) in peers.iter().enumerate() {
             let Some(s) = peer else { continue };
@@ -199,15 +209,24 @@ impl TcpTransport {
 }
 
 /// Reader half of one peer connection: frames → inbox until EOF/close.
-fn reader_loop(mut stream: TcpStream, tx: Sender<Vec<u8>>) {
+/// The terminating error is itself delivered as an observation — a
+/// receiver blocked on this peer learns of the disconnect immediately
+/// instead of parking until its timeout expires.
+fn reader_loop(mut stream: TcpStream, tx: Sender<InboxItem>) {
     loop {
         match read_frame(&mut stream) {
             Ok(payload) => {
-                if tx.send(payload).is_err() {
+                if tx.send(Ok(payload)).is_err() {
                     return; // endpoint dropped
                 }
             }
-            Err(_) => return, // EOF (graceful) or connection error
+            Err(e) => {
+                // EOF (graceful close) or connection error: surface it,
+                // then exit. Failure to send means the endpoint is gone
+                // and nobody is listening anyway.
+                let _ = tx.send(Err(e.to_string()));
+                return;
+            }
         }
     }
 }
@@ -299,7 +318,8 @@ impl Transport for TcpTransport {
             .as_ref()
             .with_context(|| format!("connection to rank {from} closed"))?;
         match rx.recv_timeout(self.timeout) {
-            Ok(payload) => Ok(payload),
+            Ok(Ok(payload)) => Ok(payload),
+            Ok(Err(e)) => Err(anyhow!("peer {from} disconnected: {e}")),
             Err(RecvTimeoutError::Timeout) => Err(anyhow!("recv from rank {from} timed out")),
             Err(RecvTimeoutError::Disconnected) => Err(anyhow!("peer {from} closed")),
         }
@@ -307,6 +327,10 @@ impl Transport for TcpTransport {
 
     fn take_observations(&mut self) -> Vec<TransferObs> {
         std::mem::take(&mut self.obs)
+    }
+
+    fn set_recv_timeout(&mut self, timeout: Duration) {
+        self.timeout = timeout;
     }
 
     fn shutdown(&mut self) -> Result<()> {
@@ -431,6 +455,57 @@ pub(crate) mod tests {
             t.recv(1 - t.rank()).is_err()
         });
         assert!(out.iter().all(|&failed| failed));
+    }
+
+    /// Satellite fix: a peer crash/close must surface as an `Err`
+    /// observation the moment the reader thread sees it — not as a
+    /// silent park until the receiver's full timeout expires.
+    #[test]
+    fn peer_disconnect_surfaces_immediately_not_after_timeout() {
+        let out = with_mesh(2, |mut t| {
+            if t.rank() == 1 {
+                t.shutdown().unwrap();
+                (Duration::ZERO, String::new())
+            } else {
+                let t0 = Instant::now();
+                let e = t.recv(1).unwrap_err();
+                let waited = t0.elapsed();
+                t.shutdown().unwrap();
+                (waited, format!("{e}"))
+            }
+        });
+        let (waited, msg) = &out[0];
+        assert!(
+            msg.contains("disconnected") || msg.contains("closed"),
+            "unexpected error: {msg}"
+        );
+        // The mesh timeout is 10 s; the disconnect must beat it by far.
+        assert!(
+            *waited < Duration::from_secs(5),
+            "recv parked for {waited:?} instead of observing the disconnect"
+        );
+    }
+
+    #[test]
+    fn set_recv_timeout_applies_at_runtime() {
+        let out = with_mesh(2, |mut t| {
+            if t.rank() == 0 {
+                t.set_recv_timeout(Duration::from_millis(30));
+                let t0 = Instant::now();
+                let e = t.recv(1).unwrap_err();
+                let waited = t0.elapsed();
+                assert!(format!("{e}").contains("timed out"), "{e}");
+                t.shutdown().unwrap();
+                waited < Duration::from_secs(2)
+            } else {
+                // Keep the peer alive (no frames, no close) past the
+                // other side's shortened deadline.
+                std::thread::sleep(Duration::from_millis(300));
+                t.shutdown().unwrap();
+                true
+            }
+        });
+        assert!(out.iter().all(|&ok| ok));
     }
 
     #[test]

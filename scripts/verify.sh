@@ -13,6 +13,15 @@ fi
 echo "== cargo build --release =="
 cargo build --release
 
+# Lint gate: clippy warnings are errors. Skipped (loudly) when the
+# component is not installed — CI installs it explicitly.
+if cargo clippy --version >/dev/null 2>&1; then
+  echo "== cargo clippy --all-targets (warnings are errors) =="
+  cargo clippy --all-targets -- -D warnings
+else
+  echo "WARNING: cargo clippy not installed — lint gate SKIPPED (rustup component add clippy)"
+fi
+
 echo "== cargo test -q (unit + integration; doctests run separately below) =="
 cargo test -q --lib --bins --tests
 
