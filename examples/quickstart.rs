@@ -36,7 +36,7 @@ fn main() {
         config.fidelity_every = 100; // full Algorithm-2 compression every 100 steps
 
         // 3. Run and read the metrics.
-        let log = run_sim_training(&config, &mut net);
+        let log = run_sim_training(&config, &mut net).expect("sim sync decodes its own frames");
         let mean_ratio =
             log.records.iter().map(|r| r.ratio).sum::<f64>() / log.records.len() as f64;
         table.row(vec![

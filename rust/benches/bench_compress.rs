@@ -13,7 +13,8 @@ use netsenseml::compress::bucket::{BucketLayout, BucketedCompressor};
 use netsenseml::compress::quantize::{f32_to_f16_bits, Precision};
 use netsenseml::compress::topk::{top_k_indices, top_k_with_threshold_hint};
 use netsenseml::compress::{
-    CompressionConfig, NetSenseCompressor, SparseGradient, Workspace, WorkspacePool,
+    decode_reduce_frame_into, decode_reduce_into, CompressionConfig, NetSenseCompressor,
+    SparseGradient, Workspace, WorkspacePool,
 };
 use netsenseml::testing::alloc::{thread_alloc_count, CountingAlloc};
 use netsenseml::transport::frame::encode_frame;
@@ -99,6 +100,89 @@ fn main() {
             json.set("allocs_per_step_staged", staged_allocs);
             json.set("allocs_per_step_fused", fused_allocs);
         }
+    }
+
+    // ---- fused vs staged decode-reduce (the receive half) ---------------
+    for &(n, tag) in &[(1_000_000usize, "1m"), (10_000_000usize, "10m")] {
+        let g = randn(n, 5);
+        let w = randn(n, 6);
+        // One realistic wire payload (ratio 0.1, warm compressor).
+        let mut c = NetSenseCompressor::new(n, CompressionConfig::default());
+        let mut ws = Workspace::with_capacity(n);
+        let mut payload: Vec<u8> = Vec::new();
+        c.compress_payload_into(&g, &w, 0.1, &mut ws, &mut payload);
+        b.group(&format!("wire → dense decode-reduce ({tag} elems, ratio 0.1)"));
+
+        let mut acc1 = vec![0f32; n];
+        let staged = b
+            .run_throughput("staged decode + add_into", n as u64, || {
+                let s = SparseGradient::decode(bb(&payload)).unwrap();
+                s.add_into(bb(&mut acc1));
+            })
+            .clone();
+
+        let mut acc2 = vec![0f32; n];
+        let fused = b
+            .run_throughput("fused decode_reduce_into", n as u64, || {
+                bb(decode_reduce_into(bb(&payload), bb(&mut acc2)).unwrap());
+            })
+            .clone();
+
+        let speedup = staged.mean.as_secs_f64() / fused.mean.as_secs_f64();
+        eprintln!("  fused vs staged decode speedup ({tag}): {speedup:.2}x");
+        json.set(&format!("decode_staged_gbps_{tag}"), gbps(n, staged.mean));
+        json.set(&format!("decode_fused_gbps_{tag}"), gbps(n, fused.mean));
+        json.set(&format!("decode_fused_vs_staged_speedup_{tag}"), speedup);
+
+        if tag == "10m" {
+            let staged_allocs = allocs_per_step(|| {
+                let s = SparseGradient::decode(&payload).unwrap();
+                s.add_into(bb(&mut acc1));
+            });
+            let fused_allocs = allocs_per_step(|| {
+                bb(decode_reduce_into(&payload, bb(&mut acc2)).unwrap());
+            });
+            eprintln!("  decode allocs/step: staged {staged_allocs}, fused {fused_allocs}");
+            json.set("decode_allocs_per_step_staged", staged_allocs);
+            json.set("decode_allocs_per_step_fused", fused_allocs);
+        }
+    }
+
+    // ---- decode-reduce over the standard bucket sweep -------------------
+    {
+        let n = 10_000_000usize;
+        let g = randn(n, 7);
+        let w = randn(n, 8);
+        let layout = BucketLayout::new(n, 1 << 20); // 4 MB dense buckets
+        let mut bc = BucketedCompressor::new(layout.clone(), CompressionConfig::default());
+        let mut pool = WorkspacePool::new(1);
+        let frames: Vec<Vec<u8>> = {
+            let (_, frames) = bc.compress_frames(&g, &w, 0.1, &mut pool);
+            frames.to_vec()
+        };
+        b.group("bucketed decode-reduce (10M elems, 4MB buckets, ratio 0.1)");
+        let mut parts: Vec<Vec<f32>> =
+            (0..layout.n_buckets()).map(|i| vec![0f32; layout.elems(i)]).collect();
+        let staged = b
+            .run_throughput("staged per-bucket decode + add_into", n as u64, || {
+                for (i, frame) in frames.iter().enumerate() {
+                    let s = SparseGradient::decode(&frame[8..]).unwrap();
+                    s.add_into(bb(&mut parts[i]));
+                }
+            })
+            .clone();
+        let fused = b
+            .run_throughput("fused per-bucket decode_reduce_frame_into", n as u64, || {
+                for (i, frame) in frames.iter().enumerate() {
+                    bb(decode_reduce_frame_into(bb(frame), bb(&mut parts[i])).unwrap());
+                }
+            })
+            .clone();
+        let speedup = staged.mean.as_secs_f64() / fused.mean.as_secs_f64();
+        eprintln!("  bucketed fused vs staged decode speedup: {speedup:.2}x");
+        json.set("decode_bucketed_staged_gbps", gbps(n, staged.mean));
+        json.set("decode_bucketed_fused_gbps", gbps(n, fused.mean));
+        json.set("decode_bucketed_fused_vs_staged_speedup", speedup);
     }
 
     // ---- parallel per-bucket compression --------------------------------

@@ -525,6 +525,48 @@ mod tests {
         }
     }
 
+    /// Receive-side twin of the fused-frames property: across ragged
+    /// bucket layouts (runt last bucket), multiple peers, and steps that
+    /// cross the quantization boundary, the fused decode-reduce of every
+    /// bucket frame must reproduce the staged receive (decode → add_into)
+    /// bit for bit.
+    #[test]
+    fn fused_decode_reduce_matches_staged_receive_on_ragged_buckets() {
+        use crate::compress::sparse::decode_reduce_frame_into;
+        use crate::compress::SparseGradient;
+        let n = 4096;
+        let n_peers = 3;
+        // 1000 does not divide 4096: the last bucket is a 96-element runt.
+        let layout = BucketLayout::new(n, 1000);
+        let w = randn(n, 40);
+        let mut peers: Vec<BucketedCompressor> = (0..n_peers)
+            .map(|_| BucketedCompressor::new(layout.clone(), CompressionConfig::default()))
+            .collect();
+        let mut pool = WorkspacePool::new(2);
+        for (step, &ratio) in [0.1, 0.05, 0.01, 1.0, 0.003].iter().enumerate() {
+            let mut staged: Vec<Vec<f32>> =
+                (0..layout.n_buckets()).map(|b| vec![0f32; layout.elems(b)]).collect();
+            let mut fused = staged.clone();
+            for (p, bc) in peers.iter_mut().enumerate() {
+                let g = randn(n, 500 + (step * n_peers + p) as u64);
+                let (_, frames) = bc.compress_frames(&g, &w, ratio, &mut pool);
+                for (b, frame) in frames.iter().enumerate() {
+                    SparseGradient::decode(&frame[8..])
+                        .unwrap()
+                        .add_into(&mut staged[b]);
+                    decode_reduce_frame_into(frame, &mut fused[b])
+                        .unwrap_or_else(|e| panic!("step {step} bucket {b}: {e}"));
+                }
+            }
+            for (b, (s, f)) in staged.iter().zip(&fused).enumerate() {
+                assert!(
+                    s.iter().zip(f.iter()).all(|(x, y)| x.to_bits() == y.to_bits()),
+                    "step {step} bucket {b}: fused receive diverged from staged"
+                );
+            }
+        }
+    }
+
     #[test]
     fn error_feedback_does_not_leak_across_buckets() {
         // Bucket 0 sees zero gradients forever; its residual must stay

@@ -8,7 +8,12 @@
 //! - [`topk`] — exact Top-K selection by |gradient| (quickselect) plus a
 //!   threshold-reuse fast path for the steady state.
 //! - [`sparse`] — the wire codec: COO (index, value) encoding with f32 or
-//!   f16 values, and wire-size accounting.
+//!   f16 values, and wire-size accounting. Both directions have a staged
+//!   reference and a fused hot path: send-side
+//!   [`sparse::encode_gathered_into`] (gather+quantize+encode, no
+//!   [`SparseGradient`]) and receive-side [`sparse::decode_reduce_into`]
+//!   (parse+dequantize+scatter straight into the dense accumulator, no
+//!   [`SparseGradient`] either — bit-identical to decode → `add_into`).
 //! - [`error_feedback`] — local residual accumulation of everything that
 //!   was *not* transmitted, re-injected into the next step's gradient
 //!   (memory-compensated compression).
@@ -42,5 +47,7 @@ pub use pipeline::{
     CompressionConfig, CompressionOutcome, CompressorState, FusedOutcome, NetSenseCompressor,
 };
 pub use quantize::{f32_to_f16_bits, f16_bits_to_f32, Precision};
-pub use sparse::SparseGradient;
+pub use sparse::{
+    decode_reduce_frame_into, decode_reduce_into, DecodeReduceOutcome, SparseGradient,
+};
 pub use workspace::{Workspace, WorkspacePool};

@@ -85,22 +85,7 @@ impl SparseGradient {
 
     /// Deserialize from the wire format.
     pub fn decode(buf: &[u8]) -> Result<SparseGradient, String> {
-        if buf.len() < 12 {
-            return Err("short header".into());
-        }
-        let n_total = u32::from_le_bytes(buf[0..4].try_into().unwrap()) as usize;
-        let nnz = u32::from_le_bytes(buf[4..8].try_into().unwrap()) as usize;
-        let precision = match buf[8] {
-            0 => Precision::F32,
-            1 => Precision::F16,
-            2 => Precision::Bf16,
-            p => return Err(format!("bad precision tag {p}")),
-        };
-        let idx_end = 12 + nnz * 4;
-        let val_end = idx_end + nnz * precision.bytes();
-        if buf.len() != val_end {
-            return Err(format!("bad length {} (expected {val_end})", buf.len()));
-        }
+        let (n_total, nnz, precision, idx_end, val_end) = parse_coo_header(buf)?;
         let mut indices = Vec::with_capacity(nnz);
         for c in buf[12..idx_end].chunks_exact(4) {
             let i = u32::from_le_bytes(c.try_into().unwrap());
@@ -199,6 +184,33 @@ impl SparseGradient {
     }
 }
 
+/// Parse the 12-byte COO wire header and check the declared length
+/// against `buf.len()` — shared by the staged decoder
+/// ([`SparseGradient::decode`]) and the fused decode-reduce
+/// ([`decode_reduce_into`]), so both receive paths accept exactly the
+/// same frames by construction (the decode-side twin of
+/// [`encode_coo_header_into`]). Returns
+/// `(n_total, nnz, precision, idx_end, val_end)`.
+fn parse_coo_header(buf: &[u8]) -> Result<(usize, usize, Precision, usize, usize), String> {
+    if buf.len() < 12 {
+        return Err("short header".into());
+    }
+    let n_total = u32::from_le_bytes(buf[0..4].try_into().unwrap()) as usize;
+    let nnz = u32::from_le_bytes(buf[4..8].try_into().unwrap()) as usize;
+    let precision = match buf[8] {
+        0 => Precision::F32,
+        1 => Precision::F16,
+        2 => Precision::Bf16,
+        p => return Err(format!("bad precision tag {p}")),
+    };
+    let idx_end = 12 + nnz * 4;
+    let val_end = idx_end + nnz * precision.bytes();
+    if buf.len() != val_end {
+        return Err(format!("bad length {} (expected {val_end})", buf.len()));
+    }
+    Ok((n_total, nnz, precision, idx_end, val_end))
+}
+
 /// Write the 12-byte COO wire header (`n_total`, `nnz`, precision tag,
 /// padding) — shared by the staged codec and the fused encoder.
 fn encode_coo_header_into(n_total: usize, nnz: usize, precision: Precision, out: &mut Vec<u8>) {
@@ -276,6 +288,103 @@ pub fn encode_gathered_into(
     }
     debug_assert_eq!((out.len() - before) as u64, bytes);
     bytes
+}
+
+/// What one fused decode-reduce consumed — the receive-side twin of
+/// [`crate::compress::FusedOutcome`]: the payload never exists as a
+/// [`SparseGradient`], so this carries the wire metadata only (the values
+/// landed in the caller's accumulator).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct DecodeReduceOutcome {
+    /// Coordinates scattered into the accumulator.
+    pub nnz: usize,
+    /// Wire precision the values were dequantized from.
+    pub precision: Precision,
+}
+
+/// Fused decode + accumulate: parse a COO wire payload and scatter its
+/// dequantized values straight into `out` — the receive-side mirror of
+/// [`encode_gathered_into`]. No [`SparseGradient`] is materialized and
+/// the call performs **zero heap allocations**: the f32 identity path
+/// moves no extra bytes (read the wire word, add it), and f16/bf16
+/// dequantize in the same sweep that accumulates.
+///
+/// Bit-identical to the staged reference
+/// ([`SparseGradient::decode`] + [`SparseGradient::add_into`]): both
+/// perform the same bits→f32 conversion and the same adds in the same
+/// index order (property-tested below).
+///
+/// Corruption safety: the header, the declared length, and the whole
+/// index region (strict ascent + bounds) are validated **before** the
+/// first scatter, so malformed input returns `Err` with `out` untouched —
+/// it can never scatter out of bounds or leave a partial sum behind. A
+/// payload whose `n_total` disagrees with `out.len()` is malformed too
+/// (the staged path's `add_into` would panic; a real receiver must get a
+/// named error instead).
+pub fn decode_reduce_into(buf: &[u8], out: &mut [f32]) -> Result<DecodeReduceOutcome, String> {
+    let (n_total, nnz, precision, idx_end, val_end) = parse_coo_header(buf)?;
+    if n_total != out.len() {
+        return Err(format!(
+            "payload for {n_total} elements, accumulator holds {}",
+            out.len()
+        ));
+    }
+    // Validation sweep over the index region (cheap: u32 loads + one
+    // compare each) — nothing touches `out` until every index is proven
+    // in-bounds and strictly ascending.
+    let mut prev: i64 = -1;
+    for c in buf[12..idx_end].chunks_exact(4) {
+        let i = u32::from_le_bytes(c.try_into().unwrap());
+        if i as i64 <= prev {
+            return Err("indices not strictly ascending".into());
+        }
+        prev = i as i64;
+    }
+    if prev >= n_total as i64 {
+        return Err(format!("index {prev} out of range {n_total}"));
+    }
+    // Scatter sweep: dequantize + accumulate, one pass over the payload.
+    let indices = buf[12..idx_end].chunks_exact(4);
+    let values = &buf[idx_end..val_end];
+    match precision {
+        Precision::F32 => {
+            for (c, v) in indices.zip(values.chunks_exact(4)) {
+                let i = u32::from_le_bytes(c.try_into().unwrap()) as usize;
+                out[i] += f32::from_le_bytes(v.try_into().unwrap());
+            }
+        }
+        Precision::F16 => {
+            for (c, v) in indices.zip(values.chunks_exact(2)) {
+                let i = u32::from_le_bytes(c.try_into().unwrap()) as usize;
+                out[i] += f16_bits_to_f32(u16::from_le_bytes(v.try_into().unwrap()));
+            }
+        }
+        Precision::Bf16 => {
+            for (c, v) in indices.zip(values.chunks_exact(2)) {
+                let i = u32::from_le_bytes(c.try_into().unwrap()) as usize;
+                out[i] += super::quantize::bf16_bits_to_f32(u16::from_le_bytes(
+                    v.try_into().unwrap(),
+                ));
+            }
+        }
+    }
+    Ok(DecodeReduceOutcome { nnz, precision })
+}
+
+/// [`decode_reduce_into`] for a complete transport frame (the 8-byte
+/// length-prefixed header of
+/// [`crate::transport::frame`] followed by the COO payload) — the unit
+/// [`crate::compress::BucketedCompressor::compress_frames`] emits and the
+/// pipelined receive path consumes. Validates the frame header, then
+/// decodes-reduces the payload; same corruption contract (malformed input
+/// returns `Err`, `out` untouched).
+pub fn decode_reduce_frame_into(
+    frame: &[u8],
+    out: &mut [f32],
+) -> Result<DecodeReduceOutcome, String> {
+    let payload =
+        crate::transport::frame::frame_payload(frame).map_err(|e| e.to_string())?;
+    decode_reduce_into(payload, out)
 }
 
 #[cfg(test)]
@@ -439,6 +548,134 @@ mod tests {
                 true
             },
         );
+    }
+
+    /// The ISSUE acceptance property: fused decode-reduce must be
+    /// bit-identical to the staged reference (decode → add_into) across
+    /// precisions, sparsity ratios, and peer counts — the same harness
+    /// style as the fused-vs-staged compress property above.
+    #[test]
+    fn property_decode_reduce_matches_staged_decode_add_into() {
+        forall(
+            "decode_reduce_into == decode + add_into",
+            100,
+            pair(vec_f32(1..200, -1e30..1e30), usize_in(1..5)),
+            |(v, n_peers)| {
+                let n = v.len();
+                for prec in [Precision::F32, Precision::F16, Precision::Bf16] {
+                    // Each "peer" contributes a different top-k slice of
+                    // the same tensor (k varies per peer).
+                    let wires: Vec<Vec<u8>> = (0..*n_peers)
+                        .map(|p| {
+                            let k = (n / (p + 2)).max(1);
+                            let idx = top_k_indices(v, k);
+                            let mut s = SparseGradient::gather(v, idx, prec);
+                            s.quantize_values();
+                            s.encode()
+                        })
+                        .collect();
+                    let mut staged = vec![0f32; n];
+                    for w in &wires {
+                        SparseGradient::decode(w).unwrap().add_into(&mut staged);
+                    }
+                    let mut fused = vec![0f32; n];
+                    for w in &wires {
+                        let o = decode_reduce_into(w, &mut fused).unwrap();
+                        if o.precision != prec {
+                            return false;
+                        }
+                    }
+                    // Bit-identical, not approximately equal.
+                    if staged.iter().zip(&fused).any(|(a, b)| a.to_bits() != b.to_bits()) {
+                        return false;
+                    }
+                }
+                true
+            },
+        );
+    }
+
+    #[test]
+    fn decode_reduce_frame_matches_payload_path() {
+        use crate::transport::frame::encode_frame;
+        let s = sample();
+        let mut via_payload = vec![0f32; s.n_total];
+        let mut via_frame = vec![0f32; s.n_total];
+        let a = decode_reduce_into(&s.encode(), &mut via_payload).unwrap();
+        let b = decode_reduce_frame_into(&encode_frame(&s.encode()), &mut via_frame).unwrap();
+        assert_eq!(a, b);
+        assert_eq!(via_payload, via_frame);
+        assert_eq!(via_payload, s.to_dense());
+        assert_eq!(a, DecodeReduceOutcome { nnz: 3, precision: Precision::F32 });
+    }
+
+    /// The ISSUE corruption contract: malformed input must return `Err` —
+    /// never panic, never scatter out of bounds — and must leave the
+    /// accumulator untouched (no partial sums from a half-validated
+    /// frame).
+    #[test]
+    fn decode_reduce_rejects_corruption_without_touching_accumulator() {
+        use crate::transport::frame::encode_frame;
+        let s = sample();
+        let wire = s.encode();
+        let sentinel: Vec<f32> = (0..s.n_total).map(|i| i as f32).collect();
+        let mut check = |payload: &[u8]| {
+            let mut acc = sentinel.clone();
+            assert!(decode_reduce_into(payload, &mut acc).is_err());
+            assert_eq!(acc, sentinel, "error path scattered into the accumulator");
+        };
+        check(&wire[..5]); // truncated header
+        check(&wire[..wire.len() - 3]); // short payload
+        let mut bad = wire.clone();
+        bad[8] = 9; // bad precision tag
+        check(&bad);
+        let mut long = wire.clone();
+        long.push(0); // trailing garbage
+        check(&long);
+        // Out-of-range index (would scatter past the accumulator).
+        let mut oob = sample();
+        oob.indices[2] = 99;
+        check(&oob.encode());
+        // Unsorted indices.
+        let mut unsorted = sample();
+        unsorted.indices = vec![4, 1, 7];
+        check(&unsorted.encode());
+        // Duplicate index (not strictly ascending).
+        let mut dup = sample();
+        dup.indices = vec![1, 1, 7];
+        check(&dup.encode());
+        // Accumulator-length mismatch is malformed input, not a panic.
+        let mut short_acc = vec![0f32; s.n_total - 1];
+        assert!(decode_reduce_into(&wire, &mut short_acc).is_err());
+
+        // Frame-level corruption: truncated frame, bad frame header,
+        // payload shorter than the header declares.
+        let mut acc = sentinel.clone();
+        let framed = encode_frame(&wire);
+        assert!(decode_reduce_frame_into(&framed[..4], &mut acc).is_err());
+        let mut bad_magic = framed.clone();
+        bad_magic[0] ^= 0xff;
+        assert!(decode_reduce_frame_into(&bad_magic, &mut acc).is_err());
+        let mut short_frame = framed.clone();
+        short_frame.pop();
+        assert!(decode_reduce_frame_into(&short_frame, &mut acc).is_err());
+        assert_eq!(acc, sentinel);
+        // The intact frame still decodes after all that.
+        assert!(decode_reduce_frame_into(&framed, &mut acc).is_ok());
+    }
+
+    #[test]
+    fn decode_reduce_empty_payload_is_a_noop() {
+        let s = SparseGradient {
+            n_total: 5,
+            indices: vec![],
+            values: vec![],
+            precision: Precision::F16,
+        };
+        let mut acc = vec![1f32; 5];
+        let o = decode_reduce_into(&s.encode(), &mut acc).unwrap();
+        assert_eq!(o.nnz, 0);
+        assert_eq!(acc, vec![1f32; 5]);
     }
 
     #[test]

@@ -43,6 +43,11 @@ pub struct PipelineConfig {
     pub pipeline_depth: usize,
     /// Modeled compression throughput, dense input bytes per second.
     pub compress_bytes_per_sec: f64,
+    /// Modeled decode-reduce throughput, received wire bytes per second.
+    /// The fused receive path is a single dequantize+scatter sweep
+    /// (`decode_reduce_into`), substantially cheaper than compression —
+    /// calibrate against `decode_fused_gbps_*` in `BENCH_compress.json`.
+    pub decode_bytes_per_sec: f64,
     /// Let the sensing controller coalesce buckets into transport stages
     /// sized to the sensed BDP (stages shrink under congestion).
     pub adaptive: bool,
@@ -54,6 +59,7 @@ impl Default for PipelineConfig {
             bucket_size_bytes: 4 << 20, // 4 MB dense per bucket
             pipeline_depth: 2,          // double buffering
             compress_bytes_per_sec: 2e9,
+            decode_bytes_per_sec: 8e9,
             adaptive: true,
         }
     }
@@ -64,6 +70,13 @@ impl PipelineConfig {
     pub fn compress_time(&self, dense_bytes: u64) -> SimTime {
         assert!(self.compress_bytes_per_sec > 0.0);
         SimTime::from_secs_f64(dense_bytes as f64 / self.compress_bytes_per_sec)
+    }
+
+    /// Virtual CPU time to decode-reduce `wire_bytes` of received
+    /// payloads.
+    pub fn decode_time(&self, wire_bytes: u64) -> SimTime {
+        assert!(self.decode_bytes_per_sec > 0.0);
+        SimTime::from_secs_f64(wire_bytes as f64 / self.decode_bytes_per_sec)
     }
 }
 
@@ -76,6 +89,13 @@ pub struct PipelineStage {
     /// CPU time to produce this stage's payload. Workers compress their own
     /// shards in parallel, so this is per-worker (not summed over workers).
     pub compress_time: SimTime,
+    /// CPU time to decode-reduce this stage's received payloads (every
+    /// worker scatters the whole group's stage payloads into its
+    /// accumulator). In the pipelined schedule this overlaps the next
+    /// stage's transfer — reduce bucket *b* while bucket *b+1* is still
+    /// on the wire; the monolithic reference serializes it after the
+    /// all-gather.
+    pub decode_time: SimTime,
 }
 
 /// Timing of one full exchange (compression + transport).
@@ -90,6 +110,12 @@ pub struct ExchangeTiming {
     pub net_start: SimTime,
     /// Total CPU compression time paid this round (per worker).
     pub compress_total: SimTime,
+    /// When the receive-side decode-reduce of the last stage finished.
+    /// In the pipelined schedule earlier stages decode while later ones
+    /// are still on the wire, so only the tail past `comm.end` is
+    /// exposed; the monolithic reference pays the full decode serialized
+    /// after the all-gather.
+    pub decode_done: SimTime,
     /// Number of transport stages.
     pub stages: usize,
 }
@@ -99,6 +125,12 @@ impl ExchangeTiming {
     /// controller (transfer completion time of the round's data).
     pub fn net_elapsed(&self) -> SimTime {
         self.comm.end.saturating_sub(self.net_start)
+    }
+
+    /// The whole exchange including the exposed decode tail — what the
+    /// training step actually waits for.
+    pub fn total_elapsed(&self) -> SimTime {
+        self.decode_done.max(self.comm.end).saturating_sub(self.comm.start)
     }
 }
 
@@ -116,6 +148,7 @@ pub fn pipelined_exchange(
     let mut cpu_free = start;
     let mut compress_total = SimTime::ZERO;
     let mut net_start = start;
+    let mut decode_done = start;
     let mut completions: Vec<SimTime> = Vec::with_capacity(stages.len());
     for (i, st) in stages.iter().enumerate() {
         let gate = if depth > 0 && i >= depth {
@@ -130,13 +163,23 @@ pub fn pipelined_exchange(
             net_start = cpu_free;
         }
         let done = sag.push(sim, cpu_free, &st.payload_bytes);
+        // Decode-reduce of stage i starts the moment its blocks have all
+        // arrived AND the previous stage's decode finished — overlapping
+        // the transfers of every later stage.
+        decode_done = decode_done.max(done) + st.decode_time;
         completions.push(done);
     }
     let comm = sag.finish(sim);
+    // Only the decode tail past the last arrival is exposed wall-clock.
+    if decode_done > sim.now() {
+        let tail = decode_done.saturating_sub(sim.now());
+        sim.advance_by(tail);
+    }
     ExchangeTiming {
         comm,
         net_start,
         compress_total,
+        decode_done: decode_done.max(comm.end),
         stages: stages.len(),
     }
 }
@@ -149,16 +192,21 @@ pub fn monolithic_exchange(sim: &mut NetSim, stages: &[PipelineStage]) -> Exchan
     let n = sim.topology.n_workers();
     let mut total = vec![0u64; n];
     let mut compress_total = SimTime::ZERO;
+    let mut decode_total = SimTime::ZERO;
     for st in stages {
         assert_eq!(st.payload_bytes.len(), n);
         for (t, &b) in total.iter_mut().zip(&st.payload_bytes) {
             *t += b;
         }
         compress_total += st.compress_time;
+        decode_total += st.decode_time;
     }
     sim.advance_by(compress_total);
     let net_start = sim.now();
     let t = ring_allgather(sim, &total);
+    // No overlap: the monolithic receiver decodes everything after the
+    // last block arrives.
+    sim.advance_by(decode_total);
     ExchangeTiming {
         comm: CollectiveTiming {
             start,
@@ -167,6 +215,7 @@ pub fn monolithic_exchange(sim: &mut NetSim, stages: &[PipelineStage]) -> Exchan
         },
         net_start,
         compress_total,
+        decode_done: t.end + decode_total,
         stages: stages.len(),
     }
 }
@@ -188,10 +237,20 @@ mod tests {
     }
 
     fn stages(k: usize, bytes: u64, compress_ms: u64) -> Vec<PipelineStage> {
+        stages_with_decode(k, bytes, compress_ms, 0)
+    }
+
+    fn stages_with_decode(
+        k: usize,
+        bytes: u64,
+        compress_ms: u64,
+        decode_ms: u64,
+    ) -> Vec<PipelineStage> {
         (0..k)
             .map(|_| PipelineStage {
                 payload_bytes: vec![bytes; N],
                 compress_time: SimTime::from_millis(compress_ms),
+                decode_time: SimTime::from_millis(decode_ms),
             })
             .collect()
     }
@@ -258,6 +317,54 @@ mod tests {
         assert_eq!(x.comm.start, SimTime::ZERO);
         assert!(x.net_elapsed() < x.comm.end - x.comm.start);
         assert_eq!(x.stages, 3);
+    }
+
+    /// The ISSUE receive-path claim: in the pipelined schedule the
+    /// decode-reduce of stage *b* runs while stage *b+1* is still on the
+    /// wire, so only the last stage's decode tail is exposed; the
+    /// monolithic reference pays every stage's decode serialized after
+    /// the all-gather.
+    #[test]
+    fn decode_overlaps_recv_in_the_pipelined_schedule() {
+        let k = 8;
+        let st = stages_with_decode(k, 1_000_000, 0, 20);
+        let pipe = pipelined_exchange(&mut sim(100.0), &st, 0);
+        let mono = monolithic_exchange(&mut sim(100.0), &st);
+        // Monolithic: the full decode bill lands after the wire.
+        assert_eq!(
+            mono.decode_done,
+            mono.comm.end + SimTime::from_millis(20 * k as u64)
+        );
+        // Pipelined: stages arrive slower than they decode (1 MB at
+        // 100 Mbps ≫ 20 ms), so every decode except the last hides under
+        // a later transfer — the exposed tail is one stage's decode.
+        assert_eq!(pipe.decode_done, pipe.comm.end + SimTime::from_millis(20));
+        assert!(
+            pipe.total_elapsed() < mono.total_elapsed(),
+            "pipelined decode tail {} not shorter than monolithic {}",
+            pipe.total_elapsed(),
+            mono.total_elapsed()
+        );
+        // Zero decode time: decode_done collapses onto the wire end.
+        let free = stages(3, 500_000, 0);
+        let x = pipelined_exchange(&mut sim(100.0), &free, 0);
+        assert_eq!(x.decode_done, x.comm.end);
+        assert_eq!(x.total_elapsed(), x.comm.end.saturating_sub(x.comm.start));
+    }
+
+    /// The simulator's clock must advance past the exposed decode tail —
+    /// the next round cannot start while this round is still reducing.
+    #[test]
+    fn sim_clock_advances_past_the_decode_tail() {
+        let mut s = sim(100.0);
+        let st = stages_with_decode(2, 100_000, 0, 50);
+        let x = pipelined_exchange(&mut s, &st, 0);
+        assert_eq!(s.now(), x.decode_done);
+        assert!(x.decode_done > x.comm.end);
+
+        let mut s = sim(100.0);
+        let x = monolithic_exchange(&mut s, &st);
+        assert_eq!(s.now(), x.decode_done);
     }
 
     #[test]

@@ -118,7 +118,7 @@ impl<'rt> RealTrainer<'rt> {
 
             // --- gradient synchronization (real numerics + sim network) --
             let weights = self.state.flat_params();
-            let outcome = self.engine.sync_full(sim, &grads, &weights);
+            let outcome = self.engine.sync_full(sim, &grads, &weights)?;
             let mean_grad = outcome.mean_grad.as_ref().expect("full sync has numerics");
 
             // --- optimizer step (real, via PJRT) --------------------------

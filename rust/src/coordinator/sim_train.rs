@@ -14,6 +14,7 @@ use crate::netsim::{NetSim, SimTime};
 use crate::trainer::metrics::{StepRecord, TrainLog};
 use crate::trainer::models::PaperModel;
 use crate::trainer::surrogate::SurrogateTrainer;
+use crate::util::error::Result;
 
 /// Configuration of one simulated training run.
 #[derive(Clone, Debug)]
@@ -55,7 +56,12 @@ impl SimTrainConfig {
 }
 
 /// Run one simulated training job on the given network. Returns the trace.
-pub fn run_sim_training(config: &SimTrainConfig, sim: &mut NetSim) -> TrainLog {
+///
+/// Errors propagate from the sync engine's receive side
+/// ([`SyncEngine::sync_full`] decode-reduces real wire frames on
+/// spot-check steps); a surrogate run's self-encoded frames cannot be
+/// corrupt, so an `Err` here means an engine invariant broke.
+pub fn run_sim_training(config: &SimTrainConfig, sim: &mut NetSim) -> Result<TrainLog> {
     assert_eq!(
         sim.topology.n_workers(),
         config.n_workers,
@@ -90,7 +96,7 @@ pub fn run_sim_training(config: &SimTrainConfig, sim: &mut NetSim) -> TrainLog {
             config.fidelity_every > 0 && step % config.fidelity_every == 0;
         let outcome = if full_fidelity {
             let (grads, weights) = surrogate.grads_and_weights();
-            engine.sync_full(sim, grads, weights)
+            engine.sync_full(sim, grads, weights)?
         } else {
             engine.sync_predicted(sim)
         };
@@ -113,7 +119,7 @@ pub fn run_sim_training(config: &SimTrainConfig, sim: &mut NetSim) -> TrainLog {
             break;
         }
     }
-    log
+    Ok(log)
 }
 
 #[cfg(test)]
@@ -148,7 +154,7 @@ mod tests {
         let tp = |s: SyncStrategy| {
             let c = quick_config(s, horizon);
             let mut sim = star(8, 200.0);
-            run_sim_training(&c, &mut sim).mean_throughput()
+            run_sim_training(&c, &mut sim).unwrap().mean_throughput()
         };
         let ns = tp(SyncStrategy::NetSense);
         let ar = tp(SyncStrategy::AllReduce);
@@ -166,7 +172,7 @@ mod tests {
         let tp = |bw: f64| {
             let c = quick_config(SyncStrategy::NetSense, 300.0);
             let mut sim = star(8, bw);
-            run_sim_training(&c, &mut sim).mean_throughput()
+            run_sim_training(&c, &mut sim).unwrap().mean_throughput()
         };
         let at_200 = tp(200.0);
         let at_800 = tp(800.0);
@@ -181,7 +187,7 @@ mod tests {
         let tp = |bw: f64| {
             let c = quick_config(SyncStrategy::AllReduce, 300.0);
             let mut sim = star(8, bw);
-            run_sim_training(&c, &mut sim).mean_throughput()
+            run_sim_training(&c, &mut sim).unwrap().mean_throughput()
         };
         assert!(tp(800.0) > 2.0 * tp(200.0));
     }
@@ -190,7 +196,7 @@ mod tests {
     fn accuracy_increases_over_run() {
         let c = quick_config(SyncStrategy::NetSense, 400.0);
         let mut sim = star(8, 500.0);
-        let log = run_sim_training(&c, &mut sim);
+        let log = run_sim_training(&c, &mut sim).unwrap();
         assert!(log.records.len() > 100);
         let early = log.records[10].acc;
         let late = log.records.last().unwrap().acc;
@@ -206,7 +212,7 @@ mod tests {
             c.model = resnet();
             c.fidelity_every = fid;
             let mut sim = star(8, 200.0);
-            let log = run_sim_training(&c, &mut sim);
+            let log = run_sim_training(&c, &mut sim).unwrap();
             (log.records.len(), log.total_vtime())
         };
         let (steps_pred, t_pred) = mk(0);
@@ -230,11 +236,11 @@ mod tests {
         pipe.pipeline = Some(PipelineConfig::default());
         let tp_mono = {
             let mut sim = star(8, 200.0);
-            run_sim_training(&mono, &mut sim).mean_throughput()
+            run_sim_training(&mono, &mut sim).unwrap().mean_throughput()
         };
         let tp_pipe = {
             let mut sim = star(8, 200.0);
-            run_sim_training(&pipe, &mut sim).mean_throughput()
+            run_sim_training(&pipe, &mut sim).unwrap().mean_throughput()
         };
         assert!(tp_pipe > 0.0 && tp_mono > 0.0);
         assert!(
@@ -248,7 +254,7 @@ mod tests {
         let mut c = quick_config(SyncStrategy::AllReduce, 1e9);
         c.max_steps = 7;
         let mut sim = star(8, 1000.0);
-        let log = run_sim_training(&c, &mut sim);
+        let log = run_sim_training(&c, &mut sim).unwrap();
         assert_eq!(log.records.len(), 7);
     }
 }

@@ -34,13 +34,14 @@ use super::pipeline_exchange::{ExchangeTiming, PipelineConfig, PipelineStage};
 use super::strategy::SyncStrategy;
 use crate::collectives::{sum_sparse, CollectiveTiming};
 use crate::compress::{
-    group_indices_by_bytes, BucketLayout, BucketedCompressor, CompressorState, NetSenseCompressor,
-    SparseGradient, WorkspacePool,
+    decode_reduce_frame_into, group_indices_by_bytes, BucketLayout, BucketedCompressor,
+    CompressorState, NetSenseCompressor, SparseGradient, WorkspacePool,
 };
 use crate::fault::Checkpoint;
 use crate::netsim::SimTime;
 use crate::sensing::RatioController;
 use crate::transport::GroupTransport;
+use crate::util::error::{anyhow, Result};
 
 /// Result of one synchronization round.
 #[derive(Clone, Debug)]
@@ -202,12 +203,20 @@ impl SyncEngine {
             .collect();
         self.stage_groups(&bucket_max)
             .into_iter()
-            .map(|g| PipelineStage {
-                payload_bytes: wire
+            .map(|g| {
+                let payload_bytes: Vec<u64> = wire
                     .iter()
                     .map(|w| g.clone().map(|b| w[b]).sum())
-                    .collect(),
-                compress_time: cfg.compress_time(g.clone().map(|b| layout.dense_bytes(b)).sum()),
+                    .collect();
+                // Every worker decode-reduces the whole group's stage
+                // payloads (all-gather semantics, own bucket included).
+                let decode_time = cfg.decode_time(payload_bytes.iter().sum());
+                PipelineStage {
+                    compress_time: cfg
+                        .compress_time(g.clone().map(|b| layout.dense_bytes(b)).sum()),
+                    decode_time,
+                    payload_bytes,
+                }
             })
             .collect()
     }
@@ -306,12 +315,17 @@ impl SyncEngine {
     ///
     /// `weights` is the flat parameter vector (identical across replicas),
     /// used by Algorithm 2's pruning step.
+    ///
+    /// Errors name the offending frame when the receive side rejects a
+    /// payload (the pipelined path decode-reduces real wire frames) — a
+    /// corrupt frame must never panic the engine, matching the live
+    /// socket path ([`crate::experiments::live`]).
     pub fn sync_full(
         &mut self,
         net: &mut dyn GroupTransport,
         grads: &[Vec<f32>],
         weights: &[f32],
-    ) -> SyncOutcome {
+    ) -> Result<SyncOutcome> {
         assert_eq!(grads.len(), self.n_workers, "one gradient per worker");
         match self.strategy.clone() {
             SyncStrategy::AllReduce => {
@@ -321,13 +335,13 @@ impl SyncEngine {
                 let mut acc = grads[0].clone();
                 let others: Vec<&[f32]> = grads[1..].iter().map(|g| g.as_slice()).collect();
                 crate::collectives::mean_dense(&mut acc, &others);
-                SyncOutcome {
+                Ok(SyncOutcome {
                     mean_grad: Some(acc),
                     payload_bytes: vec![dense_bytes; self.n_workers],
                     comm,
                     ratio: 1.0,
                     quantized: false,
-                }
+                })
             }
             SyncStrategy::NetSense | SyncStrategy::TopK(_) => {
                 if self.pipeline.is_some() {
@@ -352,13 +366,13 @@ impl SyncEngine {
                     *a *= scale;
                 }
                 self.observe(&bytes, &comm);
-                SyncOutcome {
+                Ok(SyncOutcome {
                     mean_grad: Some(acc),
                     payload_bytes: bytes,
                     comm,
                     ratio,
                     quantized,
-                }
+                })
             }
         }
     }
@@ -367,17 +381,22 @@ impl SyncEngine {
     /// Algorithm-2 compression straight to wire frames
     /// ([`BucketedCompressor::compress_frames`] — no `SparseGradient` on
     /// the send side, buckets compressed in parallel across the workspace
-    /// pool), BDP-sized transport stages, compress ∥ transmit overlap.
-    /// The receive/reduce side decodes the frames — exactly what a real
-    /// receiver does — and accumulates bucket-wise. The reduced gradient
-    /// is invariant to the transport scheduling — only the virtual clock
-    /// differs from a monolithic send of the same bucketed payloads.
+    /// pool), BDP-sized transport stages, compress ∥ transmit overlap,
+    /// and decode ∥ recv overlap on the way back (the stage timing model
+    /// reduces bucket *b* while bucket *b+1* is still on the wire).
+    /// The receive/reduce side consumes the frames exactly as a real
+    /// receiver does — fused [`decode_reduce_frame_into`], no
+    /// `SparseGradient` on this side either — and accumulates
+    /// bucket-wise. A frame the decoder rejects is a named error, never a
+    /// panic. The reduced gradient is invariant to the transport
+    /// scheduling — only the virtual clock differs from a monolithic send
+    /// of the same bucketed payloads.
     fn sync_full_pipelined(
         &mut self,
         net: &mut dyn GroupTransport,
         grads: &[Vec<f32>],
         weights: &[f32],
-    ) -> SyncOutcome {
+    ) -> Result<SyncOutcome> {
         self.ensure_bucketed();
         let ratio = self.current_ratio();
         let layout = self.bucketed[0].layout().clone();
@@ -394,11 +413,11 @@ impl SyncEngine {
             for (b, (out, frame)) in outs.iter().zip(frames).enumerate() {
                 quantized |= out.quantized;
                 w_wire.push(out.wire_bytes);
-                // Receive side: strip the 8-byte frame header, decode the
-                // COO payload, accumulate into this bucket's sum.
-                let payload = SparseGradient::decode(&frame[8..])
-                    .expect("self-encoded bucket frame decodes");
-                payload.add_into(&mut parts[b]);
+                // Receive side: fused decode-reduce straight from the
+                // wire frame into this bucket's dense accumulator.
+                decode_reduce_frame_into(frame, &mut parts[b]).map_err(|e| {
+                    anyhow!("worker {w} bucket {b}: corrupt frame on receive: {e}")
+                })?;
             }
             wire.push(w_wire);
         }
@@ -415,13 +434,13 @@ impl SyncEngine {
         let mean = layout.fuse(&parts);
         let bytes: Vec<u64> = wire.iter().map(|w| w.iter().sum()).collect();
         self.observe_exchange(&bytes, &timing);
-        SyncOutcome {
+        Ok(SyncOutcome {
             mean_grad: Some(mean),
             payload_bytes: bytes,
             comm: timing.comm,
             ratio,
             quantized,
-        }
+        })
     }
 
     /// Timing-only bucketed pipelined synchronization. Byte-exact against
@@ -566,7 +585,7 @@ mod tests {
     fn allreduce_mean_is_exact() {
         let mut eng = SyncEngine::new(SyncStrategy::AllReduce, N, P);
         let gs = grads(1);
-        let out = eng.sync_full(&mut sim(1000.0), &gs, &weights());
+        let out = eng.sync_full(&mut sim(1000.0), &gs, &weights()).unwrap();
         let mean = out.mean_grad.unwrap();
         for i in (0..P).step_by(997) {
             let want: f32 = gs.iter().map(|g| g[i]).sum::<f32>() / N as f32;
@@ -579,7 +598,7 @@ mod tests {
     #[test]
     fn topk_payload_matches_static_ratio() {
         let mut eng = SyncEngine::new(SyncStrategy::TopK(0.1), N, P);
-        let out = eng.sync_full(&mut sim(1000.0), &grads(2), &weights());
+        let out = eng.sync_full(&mut sim(1000.0), &grads(2), &weights()).unwrap();
         let k = (P as f64 * 0.1) as u64;
         for &b in &out.payload_bytes {
             assert_eq!(b, 12 + k * 8);
@@ -602,7 +621,7 @@ mod tests {
         let w = weights();
         let r0 = eng.current_ratio();
         for seed in 0..5 {
-            eng.sync_full(&mut sim(100.0), &grads(seed), &w);
+            eng.sync_full(&mut sim(100.0), &grads(seed), &w).unwrap();
         }
         assert_eq!(eng.controller().unwrap().intervals(), 5);
         // Startup ramp should have moved the ratio off its initial value.
@@ -618,7 +637,7 @@ mod tests {
             let mut pred = SyncEngine::new(strat.clone(), N, P);
             let w = weights();
             for seed in 0..8 {
-                let a = full.sync_full(&mut sim(50.0), &grads(seed), &w);
+                let a = full.sync_full(&mut sim(50.0), &grads(seed), &w).unwrap();
                 let b = pred.sync_predicted(&mut sim(50.0));
                 assert_eq!(
                     a.payload_bytes, b.payload_bytes,
@@ -675,8 +694,8 @@ mod tests {
             let w = weights();
             for seed in 0..6 {
                 let gs = grads(seed);
-                let a = mono.sync_full(&mut sim(100.0), &gs, &w);
-                let b = pipe.sync_full(&mut sim(100.0), &gs, &w);
+                let a = mono.sync_full(&mut sim(100.0), &gs, &w).unwrap();
+                let b = pipe.sync_full(&mut sim(100.0), &gs, &w).unwrap();
                 assert_eq!(a.ratio, b.ratio, "{strat:?} ratio diverged at {seed}");
                 assert_eq!(
                     a.mean_grad, b.mean_grad,
@@ -704,8 +723,8 @@ mod tests {
         let w = weights();
         for seed in 0..5 {
             let gs = grads(seed);
-            let oa = a.sync_full(&mut sim(50.0), &gs, &w);
-            let ob = b.sync_full(&mut sim(50.0), &gs, &w);
+            let oa = a.sync_full(&mut sim(50.0), &gs, &w).unwrap();
+            let ob = b.sync_full(&mut sim(50.0), &gs, &w).unwrap();
             assert_eq!(oa.mean_grad, ob.mean_grad, "seed {seed}");
             assert_eq!(oa.payload_bytes, ob.payload_bytes, "seed {seed}");
         }
@@ -724,7 +743,7 @@ mod tests {
             let mut pred = SyncEngine::new(strat.clone(), N, P).with_pipeline(cfg.clone());
             let w = weights();
             for seed in 0..8 {
-                let a = full.sync_full(&mut sim(50.0), &grads(seed), &w);
+                let a = full.sync_full(&mut sim(50.0), &grads(seed), &w).unwrap();
                 let b = pred.sync_predicted(&mut sim(50.0));
                 assert_eq!(a.payload_bytes, b.payload_bytes, "{strat:?} seed {seed}");
                 assert_eq!(a.ratio, b.ratio, "{strat:?} ratio diverged");
@@ -758,11 +777,11 @@ mod tests {
         };
         // NetSense starts at ratio 0.01 < tr_q = 0.05, so the healthy
         // buckets quantize while the frozen bucket must skip.
-        let a0 = full.sync_full(&mut sim(50.0), &frozen_grads(0), &w);
-        let b0 = mixed.sync_full(&mut sim(50.0), &frozen_grads(0), &w);
+        let a0 = full.sync_full(&mut sim(50.0), &frozen_grads(0), &w).unwrap();
+        let b0 = mixed.sync_full(&mut sim(50.0), &frozen_grads(0), &w).unwrap();
         assert_eq!(a0.payload_bytes, b0.payload_bytes);
         for seed in 1..7 {
-            let a = full.sync_full(&mut sim(50.0), &frozen_grads(seed), &w);
+            let a = full.sync_full(&mut sim(50.0), &frozen_grads(seed), &w).unwrap();
             let b = mixed.sync_predicted(&mut sim(50.0));
             assert_eq!(
                 a.payload_bytes, b.payload_bytes,
@@ -785,6 +804,7 @@ mod tests {
             pipeline_depth: 2,
             compress_bytes_per_sec: 200e6, // 8 MB → 40 ms per round
             adaptive: false,
+            ..Default::default()
         };
         let mut mono = SyncEngine::new(SyncStrategy::TopK(0.25), N, big).with_pipeline(
             PipelineConfig {
@@ -822,7 +842,7 @@ mod tests {
             let mut original = mk();
             assert!(original.export_checkpoint(0, 0).is_none(), "no state yet");
             for seed in 0..4 {
-                original.sync_full(&mut sim(100.0), &grads(seed), &w);
+                original.sync_full(&mut sim(100.0), &grads(seed), &w).unwrap();
             }
             let wire = original.export_checkpoint(1, 4).unwrap().encode();
             let ck = crate::fault::Checkpoint::decode(&wire).unwrap();
@@ -831,8 +851,8 @@ mod tests {
             rejoined.import_checkpoint(&ck);
             for seed in 4..8 {
                 let gs = grads(seed);
-                let a = original.sync_full(&mut sim(100.0), &gs, &w);
-                let b = rejoined.sync_full(&mut sim(100.0), &gs, &w);
+                let a = original.sync_full(&mut sim(100.0), &gs, &w).unwrap();
+                let b = rejoined.sync_full(&mut sim(100.0), &gs, &w).unwrap();
                 assert_eq!(
                     a.mean_grad, b.mean_grad,
                     "pipelined={pipelined} seed {seed}: restored engine diverged"
@@ -852,7 +872,7 @@ mod tests {
         let mut sparse_sum = vec![0f64; P];
         let rounds = 30;
         for _ in 0..rounds {
-            let out = eng.sync_full(&mut sim(1000.0), &gs, &w);
+            let out = eng.sync_full(&mut sim(1000.0), &gs, &w).unwrap();
             for (s, &v) in sparse_sum.iter_mut().zip(out.mean_grad.as_ref().unwrap()) {
                 *s += v as f64;
             }

@@ -34,7 +34,7 @@ pub fn fig7(opts: &RunOpts) -> (Table, DegradingResult) {
         config.fidelity_every = opts.fidelity_every;
         config.seed = opts.seed;
         let mut sim = Scenario::degrading(opts.n_workers, step_secs);
-        logs.push(run_sim_training(&config, &mut sim));
+        logs.push(run_sim_training(&config, &mut sim).expect("sim sync decodes its own frames"));
     }
 
     let mut table = Table::new(

@@ -34,7 +34,7 @@ pub fn fig8(opts: &RunOpts) -> (Table, FluctuatingResult) {
         config.fidelity_every = opts.fidelity_every;
         config.seed = opts.seed;
         let mut sim = Scenario::fluctuating(opts.n_workers, opts.seed);
-        logs.push(run_sim_training(&config, &mut sim));
+        logs.push(run_sim_training(&config, &mut sim).expect("sim sync decodes its own frames"));
     }
 
     let mut series: Vec<(String, Vec<(f64, f64)>)> =

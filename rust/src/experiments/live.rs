@@ -28,14 +28,18 @@
 //! Per step, per worker (sparse strategies): drifting synthetic gradients
 //! → fused Algorithm 2 straight into a reused wire buffer
 //! ([`NetSenseCompressor::compress_payload_into`] — the send side never
-//! materializes a [`SparseGradient`] and allocates nothing in steady
-//! state) → elastic ring all-gather → decode + sparse-sum over the live
-//! set → controller observation. Reduced gradients are hashed per step
-//! and compared across ranks at the end — survivors must stay
-//! bit-identical through every recovery.
+//! materializes a [`SparseGradient`](crate::compress::SparseGradient) and
+//! allocates nothing in steady state) → elastic ring all-gather handing
+//! each live rank's payload to this worker as a **borrowed slice**
+//! ([`ElasticExchange::round_reduce`]) → fused decode-reduce straight
+//! into the reused dense accumulator
+//! ([`decode_reduce_into`](crate::compress::decode_reduce_into) — no
+//! `SparseGradient` on the receive side either) → controller
+//! observation. Reduced gradients are hashed per step and compared
+//! across ranks at the end — survivors must stay bit-identical through
+//! every recovery.
 
-use crate::collectives::sum_sparse;
-use crate::compress::{NetSenseCompressor, SparseGradient, Workspace};
+use crate::compress::{decode_reduce_into, NetSenseCompressor, Workspace};
 use crate::coordinator::SyncStrategy;
 use crate::fault::{
     ElasticExchange, FaultConfig, FaultInjector, FaultSchedule, Membership, SyncTrajectory,
@@ -364,10 +368,13 @@ fn run_worker(t: Box<dyn Transport>, opts: &LiveOpts) -> Result<WorkerOut> {
         .strategy
         .compression_config()
         .map(|c| NetSenseCompressor::new(np, c));
-    // Fused-path scratch + wire buffer, reused across every step (§Perf:
-    // the steady-state send side allocates nothing before the exchange).
+    // Fused-path scratch, wire buffer, and dense accumulator — all reused
+    // across every step (§Perf: neither the steady-state send side nor
+    // the decode-reduce side allocates per step; the exchange's round
+    // buffers recycle too).
     let mut ws = Workspace::new();
     let mut wire: Vec<u8> = Vec::new();
+    let mut mean = vec![0f32; np];
 
     let mut hashes = Vec::with_capacity(opts.steps);
     let mut trace = Vec::with_capacity(opts.steps);
@@ -409,7 +416,27 @@ fn run_worker(t: Box<dyn Transport>, opts: &LiveOpts) -> Result<WorkerOut> {
                 }
             }
         }
-        let round = match exchange.round(&mut t, &mut membership, step as u32, &wire) {
+        // Fused receive: the exchange hands every live rank's payload
+        // (own included, rank order) as a borrowed slice; sparse payloads
+        // scatter straight into the reused dense accumulator, dense
+        // baselines accumulate raw f32 blocks. Same adds in the same
+        // order as the old decode → sparse-sum path — bit-identical.
+        let mut max_payload = 0u64;
+        let sparse = compressor.is_some();
+        mean.iter_mut().for_each(|m| *m = 0.0);
+        let round = {
+            let mean = &mut mean;
+            exchange.round_reduce(&mut t, &mut membership, step as u32, &wire, |_, b| {
+                max_payload = max_payload.max(b.len() as u64);
+                if sparse {
+                    decode_reduce_into(b, mean).map_err(|e| anyhow!("{e}"))?;
+                } else {
+                    accumulate_dense(mean, b)?;
+                }
+                Ok(())
+            })
+        };
+        let round = match round {
             Ok(r) => r,
             Err(_) if t.is_killed() => {
                 killed = true;
@@ -421,33 +448,10 @@ fn run_worker(t: Box<dyn Transport>, opts: &LiveOpts) -> Result<WorkerOut> {
         if round.lost {
             lost_intervals += 1;
         }
-        let mut max_payload = 0u64;
-        let mean = if compressor.is_some() {
-            let mut payloads = Vec::with_capacity(membership.n_live());
-            for b in round.blocks.iter().flatten() {
-                max_payload = max_payload.max(b.len() as u64);
-                payloads.push(SparseGradient::decode(b).map_err(|e| anyhow!("{e}"))?);
-            }
-            let mut mean = sum_sparse(np, &payloads);
-            let scale = 1.0 / payloads.len() as f32;
-            for m in mean.iter_mut() {
-                *m *= scale;
-            }
-            mean
-        } else {
-            let mut mean = vec![0f32; np];
-            let mut present = 0usize;
-            for b in round.blocks.iter().flatten() {
-                max_payload = max_payload.max(b.len() as u64);
-                accumulate_dense(&mut mean, b)?;
-                present += 1;
-            }
-            let scale = 1.0 / present.max(1) as f32;
-            for m in mean.iter_mut() {
-                *m *= scale;
-            }
-            mean
-        };
+        let scale = 1.0 / round.n_blocks.max(1) as f32;
+        for m in mean.iter_mut() {
+            *m *= scale;
+        }
         if let Some(ctl) = controller.as_mut() {
             // The paper's Algorithm 1 observation: this interval's data
             // size, its measured transfer-completion time, and whether

@@ -76,7 +76,7 @@ fn run_one(
     config.fidelity_every = opts.fidelity_every;
     config.seed = opts.seed;
     let mut sim = Scenario::static_bottleneck(opts.n_workers, bw_bps);
-    run_sim_training(&config, &mut sim)
+    run_sim_training(&config, &mut sim).expect("sim sync decodes its own frames")
 }
 
 fn restrict(log: &TrainLog, t_max: f64) -> TrainLog {

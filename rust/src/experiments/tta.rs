@@ -38,7 +38,7 @@ fn run_panel(
         config.fidelity_every = opts.fidelity_every;
         config.seed = opts.seed;
         let mut sim = Scenario::static_bottleneck(opts.n_workers, bw_bps);
-        logs.push(run_sim_training(&config, &mut sim));
+        logs.push(run_sim_training(&config, &mut sim).expect("sim sync decodes its own frames"));
     }
     // Target accuracy: 95% of NetSenseML's best (a reachable common bar).
     let target_acc = logs[0].best_acc() * 0.95;

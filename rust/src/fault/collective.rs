@@ -97,7 +97,10 @@ pub fn parse_envelope(buf: &[u8]) -> Result<(FrameKind, u32, u32, &[u8])> {
     Ok((kind, epoch, step, &buf[ENVELOPE_OVERHEAD..]))
 }
 
-/// What one elastic exchange round produced.
+/// What one elastic exchange round produced (owning form — see
+/// [`ElasticExchange::round`]). The zero-copy reduce path
+/// ([`ElasticExchange::round_reduce`]) returns [`RoundStats`] instead and
+/// hands the payloads to a reducer as borrowed slices.
 #[derive(Clone, Debug)]
 pub struct ElasticRound {
     /// Payload per absolute rank; `None` for ranks outside the live set
@@ -116,6 +119,29 @@ pub struct ElasticRound {
     pub lost: bool,
     /// Epoch the round completed at.
     pub epoch: u64,
+}
+
+/// [`ElasticRound`] minus the payloads: what
+/// [`ElasticExchange::round_reduce`] returns after the reducer has
+/// consumed every block in place.
+#[derive(Clone, Copy, Debug)]
+pub struct RoundStats {
+    /// Start-to-finish wall time at this rank, recoveries included — the
+    /// transfer-completion observable the sensing controller consumes.
+    pub elapsed: Duration,
+    /// Payload bytes pushed into the ring (envelopes included, aborted
+    /// attempts included).
+    pub sent_bytes: u64,
+    /// Epoch bumps performed while completing this round.
+    pub recoveries: u64,
+    /// Did any deadline or abort fire? This is the `lost` flag the
+    /// Algorithm-1 controller's backoff consumes.
+    pub lost: bool,
+    /// Epoch the round completed at.
+    pub epoch: u64,
+    /// Blocks handed to the reducer (own payload included) — the live
+    /// ranks present when the round completed.
+    pub n_blocks: usize,
 }
 
 /// Why an attempt stopped early.
@@ -140,15 +166,31 @@ struct Abort {
 /// Reusable elastic-exchange state for one endpoint: scratch buffers and
 /// the per-recovery probe bookkeeping, plus the live ring cache (rebuilt
 /// only on epoch change).
+///
+/// §Perf (receive-side zero-copy): the round's payloads live in
+/// `blocks` — one reusable enveloped-frame buffer per absolute rank,
+/// refilled in place every round. Incoming frames land in `recv_buf`
+/// ([`crate::transport::Transport::recv_into`]) and are *swapped* into
+/// their origin's slot, so the buffers rotate and steady state moves
+/// payloads without a single heap allocation on this endpoint. Stored
+/// frames keep their envelope: forwarding a block around the ring re-sends
+/// the stored bytes verbatim (the envelope of a valid frame is exactly
+/// what this rank would re-write), and the reducer sees the
+/// envelope-stripped tail as a borrowed slice.
 pub struct ElasticExchange {
     cfg: FaultConfig,
     ring: LiveRing,
-    /// Reused envelope+payload send buffer.
-    env: Vec<u8>,
     /// Reused probe frame.
     probe: Vec<u8>,
     /// Per-rank: probe already consumed during the aborted data round.
     probes_seen: Vec<bool>,
+    /// Per-origin enveloped frames of the round in progress (reused
+    /// across rounds; swapped with `recv_buf` on receipt).
+    blocks: Vec<Vec<u8>>,
+    /// `present[r]`: `blocks[r]` holds rank `r`'s frame for this attempt.
+    present: Vec<bool>,
+    /// Reused receive staging buffer.
+    recv_buf: Vec<u8>,
 }
 
 impl ElasticExchange {
@@ -156,9 +198,11 @@ impl ElasticExchange {
         ElasticExchange {
             cfg,
             ring: m.live_ring(),
-            env: Vec::new(),
             probe: Vec::new(),
             probes_seen: vec![false; m.world()],
+            blocks: (0..m.world()).map(|_| Vec::new()).collect(),
+            present: vec![false; m.world()],
+            recv_buf: Vec::new(),
         }
     }
 
@@ -167,12 +211,12 @@ impl ElasticExchange {
         &self.ring
     }
 
-    /// One gradient-exchange round at training step `step`: all-gather
-    /// `payload` across the live group, recovering and replaying on
-    /// failures. Returns blocks by absolute rank. Errors only when this
-    /// endpoint itself is broken (killed), fell out of lockstep (round
-    /// skew — see module docs), or recovery keeps failing past any
-    /// plausible schedule.
+    /// One gradient-exchange round at training step `step`, owning form:
+    /// all-gather `payload` across the live group, recovering and
+    /// replaying on failures, and return every block as an owned vector
+    /// (envelope stripped, indexed by absolute rank). A thin wrapper over
+    /// [`Self::round_reduce`] — hot paths that aggregate in place use
+    /// that directly and skip these per-block allocations.
     pub fn round(
         &mut self,
         t: &mut dyn Transport,
@@ -180,6 +224,52 @@ impl ElasticExchange {
         step: u32,
         payload: &[u8],
     ) -> Result<ElasticRound> {
+        let mut blocks: Vec<Option<Vec<u8>>> = vec![None; m.world()];
+        let stats = self.round_reduce(t, m, step, payload, |origin, body| {
+            blocks[origin] = Some(body.to_vec());
+            Ok(())
+        })?;
+        Ok(ElasticRound {
+            blocks,
+            elapsed: stats.elapsed,
+            sent_bytes: stats.sent_bytes,
+            recoveries: stats.recoveries,
+            lost: stats.lost,
+            epoch: stats.epoch,
+        })
+    }
+
+    /// One gradient-exchange round at training step `step`, zero-copy
+    /// form: all-gather `payload` across the live group, recovering and
+    /// replaying on failures, then hand each live rank's payload to
+    /// `reduce` as a **borrowed, envelope-stripped slice** — no owned
+    /// byte vectors leave the exchange (the fused receive path scatters
+    /// straight into its dense accumulator from here).
+    ///
+    /// Replay semantics are preserved bit-exactly: the reducer runs only
+    /// after an attempt *completes* at the final epoch, exactly once per
+    /// present rank, in ascending rank order — an aborted attempt's
+    /// partial frames are overwritten by the replay and never reach the
+    /// reducer. The slices borrow the exchange's reusable round buffers
+    /// and are valid only for the duration of the callback.
+    ///
+    /// Errors when this endpoint itself is broken (killed), fell out of
+    /// lockstep (round skew — see module docs), recovery keeps failing
+    /// past any plausible schedule, or the reducer rejects a payload (a
+    /// corrupt frame surfaces as the reducer's named error; the
+    /// accumulator state is then unspecified and the round must not be
+    /// consumed).
+    pub fn round_reduce<F>(
+        &mut self,
+        t: &mut dyn Transport,
+        m: &mut Membership,
+        step: u32,
+        payload: &[u8],
+        mut reduce: F,
+    ) -> Result<RoundStats>
+    where
+        F: FnMut(usize, &[u8]) -> Result<()>,
+    {
         let t0 = Instant::now();
         let mut sent = 0u64;
         let mut recoveries = 0u64;
@@ -187,14 +277,21 @@ impl ElasticExchange {
         self.probes_seen.iter_mut().for_each(|p| *p = false);
         loop {
             match self.attempt(t, m, step, payload, &mut sent) {
-                Ok(blocks) => {
-                    return Ok(ElasticRound {
-                        blocks,
+                Ok(()) => {
+                    let mut n_blocks = 0usize;
+                    for origin in 0..m.world() {
+                        if self.present[origin] {
+                            reduce(origin, &self.blocks[origin][ENVELOPE_OVERHEAD..])?;
+                            n_blocks += 1;
+                        }
+                    }
+                    return Ok(RoundStats {
                         elapsed: t0.elapsed(),
                         sent_bytes: sent,
                         recoveries,
                         lost,
                         epoch: m.epoch(),
+                        n_blocks,
                     });
                 }
                 Err(AttemptEnd::Skew {
@@ -232,9 +329,11 @@ impl ElasticExchange {
         }
     }
 
-    /// One all-gather attempt over the current live ring. `Ok` carries
-    /// blocks by absolute rank (envelopes stripped); `Err` is an abort or
-    /// a detected round skew.
+    /// One all-gather attempt over the current live ring. On `Ok` the
+    /// enveloped frames sit in `self.blocks` (flagged by `self.present`);
+    /// `Err` is an abort or a detected round skew. No allocations in
+    /// steady state: frames land in reused buffers via
+    /// [`crate::transport::Transport::recv_into`] and rotate by swap.
     fn attempt(
         &mut self,
         t: &mut dyn Transport,
@@ -242,14 +341,18 @@ impl ElasticExchange {
         step: u32,
         payload: &[u8],
         sent: &mut u64,
-    ) -> std::result::Result<Vec<Option<Vec<u8>>>, AttemptEnd> {
-        let ring = &self.ring;
-        let ln = ring.len();
+    ) -> std::result::Result<(), AttemptEnd> {
+        let ln = self.ring.len();
         let epoch = m.epoch() as u32;
-        let mut blocks: Vec<Option<Vec<u8>>> = vec![None; m.world()];
-        blocks[m.self_rank()] = Some(payload.to_vec());
-        if ring.is_solo() {
-            return Ok(blocks);
+        let me = m.self_rank();
+        self.present.iter_mut().for_each(|p| *p = false);
+        let own = &mut self.blocks[me];
+        own.clear();
+        write_envelope(FrameKind::Data, epoch, step, own);
+        own.extend_from_slice(payload);
+        self.present[me] = true;
+        if self.ring.is_solo() {
+            return Ok(());
         }
         // The whole round must finish within one recv budget — the same
         // deadline every peer applies to us, so a delay that makes *them*
@@ -257,37 +360,37 @@ impl ElasticExchange {
         // from buffered frames must join the recovery; see module docs).
         let round_deadline = self.cfg.recv_timeout();
         let t_start = Instant::now();
-        let succ = ring.succ();
-        let pred = ring.pred();
+        let succ = self.ring.succ();
+        let pred = self.ring.pred();
         for p in 0..ln - 1 {
-            // Forward the block that originated `p` ring hops back.
-            let origin = ring.rank_at(ring.pos + ln - p);
-            self.env.clear();
-            write_envelope(FrameKind::Data, epoch, step, &mut self.env);
-            self.env
-                .extend_from_slice(blocks[origin].as_ref().expect("origin block in hand"));
-            *sent += self.env.len() as u64;
-            if t.send(succ, &self.env).is_err() {
+            // Forward the block that originated `p` ring hops back — the
+            // stored frame re-sends verbatim (its envelope is exactly
+            // this epoch/step's, validated on receipt).
+            let origin = self.ring.rank_at(self.ring.pos + ln - p);
+            debug_assert!(self.present[origin], "origin block in hand");
+            *sent += self.blocks[origin].len() as u64;
+            if t.send(succ, &self.blocks[origin]).is_err() {
                 return Err(AttemptEnd::Abort(Abort {
                     suspect: Some(succ),
                     probe_from: None,
                 }));
             }
-            let incoming_origin = ring.rank_at(ring.pos + 2 * ln - 1 - p);
+            let incoming_origin = self.ring.rank_at(self.ring.pos + 2 * ln - 1 - p);
             loop {
-                let frame = match t.recv(pred) {
-                    Ok(f) => f,
-                    Err(_) => {
-                        return Err(AttemptEnd::Abort(Abort {
-                            suspect: Some(pred),
-                            probe_from: None,
-                        }));
-                    }
-                };
-                match parse_envelope(&frame) {
-                    Ok((FrameKind::Data, e, s, body)) if e == epoch && s == step => {
+                if t.recv_into(pred, &mut self.recv_buf).is_err() {
+                    return Err(AttemptEnd::Abort(Abort {
+                        suspect: Some(pred),
+                        probe_from: None,
+                    }));
+                }
+                match parse_envelope(&self.recv_buf) {
+                    Ok((FrameKind::Data, e, s, _)) if e == epoch && s == step => {
                         m.heartbeat(pred);
-                        blocks[incoming_origin] = Some(body.to_vec());
+                        // Keep the whole enveloped frame: forwarding
+                        // re-sends it as-is, the reducer strips the
+                        // envelope. Swap, don't copy.
+                        std::mem::swap(&mut self.recv_buf, &mut self.blocks[incoming_origin]);
+                        self.present[incoming_origin] = true;
                         break;
                     }
                     Ok((FrameKind::Data, e, _, _)) if e < epoch => continue, // stale round
@@ -324,7 +427,7 @@ impl ElasticExchange {
                 probe_from: None,
             }));
         }
-        Ok(blocks)
+        Ok(())
     }
 
     /// The all-to-all recovery probe: send one probe to every live peer,
@@ -355,8 +458,8 @@ impl ElasticExchange {
                 continue;
             }
             let alive = loop {
-                match t.recv(r) {
-                    Ok(frame) => match parse_envelope(&frame) {
+                match t.recv_into(r, &mut self.recv_buf) {
+                    Ok(()) => match parse_envelope(&self.recv_buf) {
                         Ok((FrameKind::Probe, _, _, _)) => break true,
                         _ => continue, // stale data / garbage: drain past it
                     },
@@ -528,6 +631,164 @@ mod tests {
                 assert_eq!(r.epoch, 0);
             }
         }
+    }
+
+    /// `round_reduce` must deliver exactly the bytes `round` does — same
+    /// origins, same payloads, same order — while borrowing instead of
+    /// owning.
+    #[test]
+    fn round_reduce_matches_owned_round_block_for_block() {
+        let n = 4;
+        let mesh = LoopbackTransport::mesh(n);
+        let handles: Vec<_> = mesh
+            .into_iter()
+            .map(|mut t| {
+                std::thread::spawn(move || {
+                    let rank = t.rank();
+                    t.set_recv_timeout(cfg_ms(2_000, 2_000).recv_timeout());
+                    let mut m = Membership::new(rank, n);
+                    let mut ex = ElasticExchange::new(&m, cfg_ms(2_000, 2_000));
+                    let payload = vec![rank as u8; 20 + rank];
+                    // Step 0 via the owned API, step 1 via the reducer:
+                    // both must see every origin's payload.
+                    let owned = ex.round(&mut t, &mut m, 0, &payload).unwrap();
+                    let mut reduced: Vec<(usize, Vec<u8>)> = Vec::new();
+                    let stats = ex
+                        .round_reduce(&mut t, &mut m, 1, &payload, |origin, body| {
+                            reduced.push((origin, body.to_vec()));
+                            Ok(())
+                        })
+                        .unwrap();
+                    (owned, reduced, stats)
+                })
+            })
+            .collect();
+        for h in handles {
+            let (owned, reduced, stats) = h.join().unwrap();
+            assert_eq!(stats.n_blocks, n);
+            assert_eq!(reduced.len(), n);
+            assert!(!stats.lost);
+            for (i, (origin, body)) in reduced.iter().enumerate() {
+                assert_eq!(*origin, i, "reducer must run in ascending rank order");
+                assert_eq!(
+                    owned.blocks[i].as_deref(),
+                    Some(&body[..]),
+                    "origin {i}: reduced payload diverged from owned round"
+                );
+            }
+        }
+    }
+
+    /// A reducer error (e.g. a corrupt payload rejected by the fused
+    /// decode) propagates out of `round_reduce` as a named error instead
+    /// of panicking.
+    #[test]
+    fn reducer_error_propagates() {
+        let n = 2;
+        let mesh = LoopbackTransport::mesh(n);
+        let handles: Vec<_> = mesh
+            .into_iter()
+            .map(|mut t| {
+                std::thread::spawn(move || {
+                    let rank = t.rank();
+                    t.set_recv_timeout(cfg_ms(2_000, 2_000).recv_timeout());
+                    let mut m = Membership::new(rank, n);
+                    let mut ex = ElasticExchange::new(&m, cfg_ms(2_000, 2_000));
+                    ex.round_reduce(&mut t, &mut m, 0, &[rank as u8; 4], |origin, _| {
+                        if origin == 1 {
+                            Err(crate::util::error::anyhow!("corrupt payload from {origin}"))
+                        } else {
+                            Ok(())
+                        }
+                    })
+                })
+            })
+            .collect();
+        for h in handles {
+            let e = h.join().unwrap().unwrap_err();
+            assert!(format!("{e}").contains("corrupt payload"), "{e}");
+        }
+    }
+
+    /// The receive-side mirror of the send gate below (ISSUE satellite):
+    /// a full live loopback round's data plane — fused compress into the
+    /// enveloped wire buffer, the wire bytes handed across as borrowed
+    /// enveloped frames (exactly what `round_reduce` hands its reducer
+    /// after the swap-rotated receive), envelope strip, fused
+    /// decode-reduce into the dense accumulator — performs ZERO heap
+    /// allocations per step once warm. Channel internals (mpsc node
+    /// boxes) are the transport's own cost and sit outside the data
+    /// plane; every payload-proportional allocation is covered here.
+    #[test]
+    fn steady_state_receive_decode_reduce_is_allocation_free() {
+        use crate::compress::{
+            decode_reduce_into, CompressionConfig, NetSenseCompressor, Workspace,
+        };
+        use crate::testing::alloc::thread_alloc_count;
+        use crate::util::rng::Pcg64;
+
+        let n = 20_000;
+        let peers = 4usize;
+        let mut r = Pcg64::seeded(9);
+        let mut w = vec![0f32; n];
+        r.fill_normal_f32(&mut w, 0.0, 0.1);
+        // One compressor + drifting gradient per simulated peer.
+        let mut comps: Vec<NetSenseCompressor> = (0..peers)
+            .map(|_| NetSenseCompressor::new(n, CompressionConfig::default()))
+            .collect();
+        let mut grads: Vec<Vec<f32>> = (0..peers)
+            .map(|p| {
+                let mut g = vec![0f32; n];
+                Pcg64::seeded(100 + p as u64).fill_normal_f32(&mut g, 0.0, 1.0);
+                g
+            })
+            .collect();
+        let mut ws = Workspace::with_capacity(n);
+        // Reused enveloped wire frames (what the exchange's round buffers
+        // hold) and the reused dense accumulator.
+        let mut wires: Vec<Vec<u8>> = (0..peers).map(|_| Vec::new()).collect();
+        let mut acc = vec![0f32; n];
+        let m = Membership::new(0, peers);
+        let mut step_no = 0u32;
+        let mut step = |comps: &mut [NetSenseCompressor],
+                        grads: &mut [Vec<f32>],
+                        wires: &mut [Vec<u8>],
+                        ws: &mut Workspace,
+                        acc: &mut [f32],
+                        r: &mut Pcg64,
+                        step_no: &mut u32| {
+            // Send half, per peer: envelope + fused compress.
+            for ((comp, g), wire) in comps.iter_mut().zip(grads.iter_mut()).zip(wires.iter_mut())
+            {
+                for x in g.iter_mut() {
+                    *x += 0.05 * r.normal() as f32;
+                }
+                wire.clear();
+                write_envelope(FrameKind::Data, m.epoch() as u32, *step_no, wire);
+                comp.compress_payload_into(g, &w, 0.1, ws, wire);
+            }
+            // Receive half: envelope strip + fused decode-reduce, in rank
+            // order — byte-for-byte what round_reduce hands the reducer.
+            acc.iter_mut().for_each(|a| *a = 0.0);
+            for wire in wires.iter() {
+                let (kind, e, s, body) = parse_envelope(wire).expect("self-built envelope");
+                assert_eq!((kind, e, s), (FrameKind::Data, m.epoch() as u32, *step_no));
+                decode_reduce_into(body, acc).expect("self-encoded payload decodes");
+            }
+            *step_no += 1;
+        };
+        for _ in 0..40 {
+            step(&mut comps, &mut grads, &mut wires, &mut ws, &mut acc, &mut r, &mut step_no);
+        }
+        let before = thread_alloc_count();
+        for _ in 0..10 {
+            step(&mut comps, &mut grads, &mut wires, &mut ws, &mut acc, &mut r, &mut step_no);
+        }
+        let allocs = thread_alloc_count() - before;
+        assert_eq!(
+            allocs, 0,
+            "steady-state receive/decode-reduce path allocated {allocs} times"
+        );
     }
 
     /// PR-3's zero-alloc acceptance gate, extended: the fused send path

@@ -147,6 +147,15 @@ impl Transport for FaultInjector {
         self.inner.recv(from)
     }
 
+    fn recv_into(&mut self, from: usize, buf: &mut Vec<u8>) -> Result<()> {
+        if self.killed {
+            return Err(self.dead_err());
+        }
+        // Forward (instead of taking the recv-then-copy default) so the
+        // inner transport's receive-buffer recycling stays on the path.
+        self.inner.recv_into(from, buf)
+    }
+
     fn take_observations(&mut self) -> Vec<TransferObs> {
         self.inner.take_observations()
     }

@@ -18,7 +18,11 @@
 //! - [`collective`] — the degraded collective ([`ElasticExchange`]): an
 //!   epoch-tagged ring all-gather that reports the suspect on a deadline,
 //!   agrees on a new epoch through an all-to-all probe round, rebuilds the
-//!   ring over survivors, and replays the interrupted round.
+//!   ring over survivors, and replays the interrupted round. The hot path
+//!   ([`ElasticExchange::round_reduce`]) hands each completed round's
+//!   payloads to a reducer as borrowed, envelope-stripped slices over
+//!   reusable buffers — the receive side of a healthy round allocates
+//!   nothing in steady state.
 //! - [`checkpoint`] — compressor-state snapshot/restore
 //!   ([`Checkpoint`]): error-feedback residuals (and the selection caches
 //!   that make compression bit-deterministic) serialize so a rejoining
@@ -45,7 +49,8 @@ pub mod membership;
 
 pub use checkpoint::Checkpoint;
 pub use collective::{
-    parse_envelope, write_envelope, ElasticExchange, ElasticRound, FrameKind, ENVELOPE_OVERHEAD,
+    parse_envelope, write_envelope, ElasticExchange, ElasticRound, FrameKind, RoundStats,
+    ENVELOPE_OVERHEAD,
 };
 pub use injector::{FaultInjector, FaultSpec};
 pub use membership::{LiveRing, Membership, RankState};

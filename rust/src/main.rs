@@ -241,7 +241,7 @@ fn cmd_train(args: &netsenseml::util::cli::Args) -> Result<()> {
     sim_cfg.seed = cfg.seed;
     sim_cfg.pipeline = cfg.pipeline();
     let mut sim = Scenario::static_bottleneck(cfg.n_workers, mbps(cfg.bandwidth_mbps));
-    let log = run_sim_training(&sim_cfg, &mut sim);
+    let log = run_sim_training(&sim_cfg, &mut sim)?;
 
     println!(
         "model={} strategy={} bw={} Mbps workers={}",

@@ -91,10 +91,13 @@ pub fn ring_allreduce_f32(t: &mut dyn Transport, data: &mut [f32]) -> Result<Rou
     let succ = (rank + 1) % n;
     let pred = (rank + n - 1) % n;
     let mut sent = 0u64;
-    // One reused staging buffer for every outgoing chunk (§Perf: the
-    // staged schedule sends 2·(n−1) chunks per call — collecting a fresh
-    // Vec per phase was pure reallocation churn).
+    // One reused staging buffer for every outgoing chunk and one for
+    // every incoming chunk (§Perf: the staged schedule moves 2·(n−1)
+    // chunks per call in each direction — a fresh Vec per phase was pure
+    // reallocation churn; `recv_into` also lets the transport recycle its
+    // inbox buffers).
     let mut out_buf: Vec<u8> = Vec::with_capacity(q * 4);
+    let mut in_buf: Vec<u8> = Vec::with_capacity(q * 4);
     let mut fill_out = |buf: &mut Vec<u8>, r: std::ops::Range<usize>, data: &[f32]| {
         buf.clear();
         for x in &data[r] {
@@ -111,16 +114,16 @@ pub fn ring_allreduce_f32(t: &mut dyn Transport, data: &mut [f32]) -> Result<Rou
         sent += out_buf.len() as u64;
         t.send(succ, &out_buf)?;
         let in_c = (rank + n - 1 - p) % n;
-        let incoming = t.recv(pred)?;
+        t.recv_into(pred, &mut in_buf)?;
         let dst = &mut data[chunk(in_c)];
-        if incoming.len() != dst.len() * 4 {
+        if in_buf.len() != dst.len() * 4 {
             return Err(anyhow!(
                 "reduce-scatter phase {p}: got {} bytes for a {}-element chunk",
-                incoming.len(),
+                in_buf.len(),
                 dst.len()
             ));
         }
-        for (d, b) in dst.iter_mut().zip(incoming.chunks_exact(4)) {
+        for (d, b) in dst.iter_mut().zip(in_buf.chunks_exact(4)) {
             *d += f32::from_le_bytes(b.try_into().unwrap());
         }
     }
@@ -132,16 +135,16 @@ pub fn ring_allreduce_f32(t: &mut dyn Transport, data: &mut [f32]) -> Result<Rou
         sent += out_buf.len() as u64;
         t.send(succ, &out_buf)?;
         let in_c = (rank + n - p) % n;
-        let incoming = t.recv(pred)?;
+        t.recv_into(pred, &mut in_buf)?;
         let dst = &mut data[chunk(in_c)];
-        if incoming.len() != dst.len() * 4 {
+        if in_buf.len() != dst.len() * 4 {
             return Err(anyhow!(
                 "all-gather phase {p}: got {} bytes for a {}-element chunk",
-                incoming.len(),
+                in_buf.len(),
                 dst.len()
             ));
         }
-        for (d, b) in dst.iter_mut().zip(incoming.chunks_exact(4)) {
+        for (d, b) in dst.iter_mut().zip(in_buf.chunks_exact(4)) {
             *d = f32::from_le_bytes(b.try_into().unwrap());
         }
     }

@@ -58,6 +58,28 @@ pub fn encode_frame_header_into(payload_len: usize, out: &mut Vec<u8>) {
 
 /// Decode one complete frame (the buffer must hold exactly one frame).
 pub fn decode_frame(buf: &[u8]) -> Result<Vec<u8>> {
+    let mut out = Vec::with_capacity(buf.len().saturating_sub(8));
+    decode_frame_into(buf, &mut out)?;
+    Ok(out)
+}
+
+/// [`decode_frame`] into a caller-owned buffer, reusing its capacity —
+/// the receive-side twin of [`encode_frame_into`] (§Perf: zero
+/// allocations once the buffer has capacity). On error `out` is left
+/// untouched, so a corrupt frame can never leak partial payload bytes
+/// into a reused receive buffer.
+pub fn decode_frame_into(buf: &[u8], out: &mut Vec<u8>) -> Result<()> {
+    let payload = frame_payload(buf)?;
+    out.clear();
+    out.extend_from_slice(payload);
+    Ok(())
+}
+
+/// Validate a complete frame's header (magic, size cap, declared length)
+/// and return the payload as a borrowed slice — the zero-copy core every
+/// frame consumer shares, so the 8-byte frame contract lives in exactly
+/// one place (the fused decode-reduce path borrows through this too).
+pub fn frame_payload(buf: &[u8]) -> Result<&[u8]> {
     if buf.len() < 8 {
         return Err(anyhow!("short frame: {} bytes", buf.len()));
     }
@@ -72,7 +94,7 @@ pub fn decode_frame(buf: &[u8]) -> Result<Vec<u8>> {
     if buf.len() != 8 + len {
         return Err(anyhow!("frame length {} != header-declared {}", buf.len() - 8, len));
     }
-    Ok(buf[8..].to_vec())
+    Ok(&buf[8..])
 }
 
 /// Write one frame to a byte sink (socket hot path: header then payload,
@@ -172,6 +194,22 @@ mod tests {
         encode_frame_header_into(5, &mut buf);
         buf.extend_from_slice(b"hello");
         assert_eq!(buf, encode_frame(b"hello"));
+    }
+
+    #[test]
+    fn decode_frame_into_reuses_buffer_and_preserves_on_error() {
+        let mut out = Vec::new();
+        decode_frame_into(&encode_frame(&[7u8; 64]), &mut out).unwrap();
+        assert_eq!(out, vec![7u8; 64]);
+        let ptr = out.as_ptr();
+        decode_frame_into(&encode_frame(&[9u8; 16]), &mut out).unwrap();
+        assert_eq!(out, vec![9u8; 16]);
+        assert!(std::ptr::eq(out.as_ptr(), ptr), "smaller frame must not realloc");
+        // A corrupt frame must leave the reused buffer untouched.
+        let mut bad = encode_frame(b"x");
+        bad[0] ^= 0xff;
+        assert!(decode_frame_into(&bad, &mut out).is_err());
+        assert_eq!(out, vec![9u8; 16], "error path clobbered the buffer");
     }
 
     #[test]

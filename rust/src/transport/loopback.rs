@@ -4,7 +4,7 @@
 //! compare the real backends against. Payloads still travel as encoded
 //! frames so the codec path is identical to TCP's.
 
-use super::frame::{decode_frame, encode_frame};
+use super::frame::{decode_frame_into, encode_frame};
 use super::{Transport, TransferObs};
 use crate::util::error::{anyhow, Result};
 use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
@@ -88,6 +88,12 @@ impl Transport for LoopbackTransport {
     }
 
     fn recv(&mut self, from: usize) -> Result<Vec<u8>> {
+        let mut buf = Vec::new();
+        self.recv_into(from, &mut buf)?;
+        Ok(buf)
+    }
+
+    fn recv_into(&mut self, from: usize, buf: &mut Vec<u8>) -> Result<()> {
         if from >= self.n || from == self.rank {
             return Err(anyhow!("bad source rank {from} (self is {})", self.rank));
         }
@@ -103,7 +109,9 @@ impl Transport for LoopbackTransport {
                 return Err(anyhow!("peer {from} shut down"));
             }
         };
-        decode_frame(&frame)
+        // Decode straight into the caller's buffer: the receiving thread
+        // performs no allocation (the sender paid for the frame).
+        decode_frame_into(&frame, buf)
     }
 
     fn take_observations(&mut self) -> Vec<TransferObs> {
@@ -154,6 +162,25 @@ mod tests {
         for i in 0..10u8 {
             assert_eq!(b.recv(0).unwrap(), vec![i]);
         }
+    }
+
+    #[test]
+    fn recv_into_reuses_buffer_and_matches_recv() {
+        let mut mesh = LoopbackTransport::mesh(2);
+        let mut b = mesh.pop().unwrap();
+        let mut a = mesh.pop().unwrap();
+        a.send(1, &[5u8; 128]).unwrap();
+        a.send(1, &[6u8; 32]).unwrap();
+        let mut buf = Vec::new();
+        b.recv_into(0, &mut buf).unwrap();
+        assert_eq!(buf, vec![5u8; 128]);
+        let ptr = buf.as_ptr();
+        b.recv_into(0, &mut buf).unwrap();
+        assert_eq!(buf, vec![6u8; 32]);
+        assert!(std::ptr::eq(buf.as_ptr(), ptr), "smaller frame must not realloc");
+        // Same validation as recv: bad ranks rejected.
+        assert!(b.recv_into(1, &mut buf).is_err());
+        assert!(b.recv_into(9, &mut buf).is_err());
     }
 
     #[test]

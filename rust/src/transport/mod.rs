@@ -44,8 +44,8 @@ use std::time::Duration;
 
 pub use collective::{ring_allgather_frames, ring_allreduce_f32, RoundTiming};
 pub use frame::{
-    decode_frame, encode_frame, encode_frame_into, read_frame, read_frame_into, write_frame,
-    FRAME_OVERHEAD,
+    decode_frame, decode_frame_into, encode_frame, encode_frame_into, frame_payload,
+    read_frame, read_frame_into, write_frame, FRAME_OVERHEAD,
 };
 pub use loopback::LoopbackTransport;
 pub use shaped::{ShapedTransport, ShapingConfig};
@@ -84,6 +84,22 @@ pub trait Transport: Send {
     /// Receive the next payload from `from` (blocking, with an
     /// implementation timeout so a dead peer errors instead of hanging).
     fn recv(&mut self, from: usize) -> Result<Vec<u8>>;
+
+    /// [`Transport::recv`] into a caller-owned buffer, reusing its
+    /// capacity across frames — the receive-side half of the zero-copy
+    /// hot path. Receive loops that consume each payload in place (the
+    /// elastic exchange, the ring collectives) call this so steady state
+    /// moves payloads without allocating per frame; implementations with
+    /// internal buffering ([`TcpTransport`]) additionally recycle their
+    /// inbox buffers through it. On error the buffer contents are
+    /// unspecified. The default falls back to `recv` + copy, so custom
+    /// transports stay correct without opting in.
+    fn recv_into(&mut self, from: usize, buf: &mut Vec<u8>) -> Result<()> {
+        let payload = self.recv(from)?;
+        buf.clear();
+        buf.extend_from_slice(&payload);
+        Ok(())
+    }
 
     /// Replace the blocking-recv deadline at runtime. The failure-recovery
     /// protocol ([`crate::fault`]) tightens this during collective rounds

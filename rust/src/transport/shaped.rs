@@ -199,6 +199,12 @@ impl<T: Transport> Transport for ShapedTransport<T> {
         self.inner.recv(from)
     }
 
+    fn recv_into(&mut self, from: usize, buf: &mut Vec<u8>) -> Result<()> {
+        // Shaping is send-side; forward so the inner transport's buffer
+        // recycling stays on the path.
+        self.inner.recv_into(from, buf)
+    }
+
     /// The wrapper's observations (which include shaping delay) supersede
     /// the inner transport's; the inner log is drained and dropped so
     /// transfers are not double-counted.

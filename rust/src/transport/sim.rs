@@ -151,6 +151,7 @@ mod tests {
             .map(|_| PipelineStage {
                 payload_bytes: vec![400_000; 4],
                 compress_time: SimTime::from_millis(50),
+                decode_time: SimTime::from_millis(5),
             })
             .collect();
         let mut t = SimTransport::new(sim(4, 100.0));

@@ -25,7 +25,7 @@
 //! Shutdown closes the sockets, which lands reader threads on
 //! `UnexpectedEof`, and joins them.
 
-use super::frame::{read_frame, write_frame, FRAME_OVERHEAD};
+use super::frame::{read_frame, read_frame_into, write_frame, FRAME_OVERHEAD};
 use super::{Transport, TransferObs};
 use crate::util::error::{anyhow, Context, Result};
 use std::net::{Shutdown, TcpListener, TcpStream};
@@ -54,6 +54,13 @@ pub struct TcpTransport {
     peers: Vec<Option<TcpStream>>,
     /// `inbox[j]`: frames read off the connection to rank `j`.
     inbox: Vec<Option<Receiver<InboxItem>>>,
+    /// `recycle[j]`: return path handing spent payload buffers back to
+    /// rank `j`'s reader thread, which refills them in place
+    /// ([`read_frame_into`]) instead of allocating a fresh `Vec` per
+    /// frame. Fed by [`Transport::recv_into`]; the owning
+    /// [`Transport::recv`] path hands the buffer to the caller and skips
+    /// the recycle.
+    recycle: Vec<Option<Sender<Vec<u8>>>>,
     readers: Vec<JoinHandle<()>>,
     obs: Vec<TransferObs>,
     timeout: Duration,
@@ -181,19 +188,23 @@ impl TcpTransport {
             peers[k] = Some(s);
         }
         let mut inbox: Vec<Option<Receiver<InboxItem>>> = (0..world).map(|_| None).collect();
+        let mut recycle: Vec<Option<Sender<Vec<u8>>>> = (0..world).map(|_| None).collect();
         let mut readers = Vec::new();
         for (j, peer) in peers.iter().enumerate() {
             let Some(s) = peer else { continue };
             let (tx, rx) = channel();
+            let (pool_tx, pool_rx) = channel();
             inbox[j] = Some(rx);
+            recycle[j] = Some(pool_tx);
             let reader = s.try_clone().context("cloning stream for reader")?;
-            readers.push(std::thread::spawn(move || reader_loop(reader, tx)));
+            readers.push(std::thread::spawn(move || reader_loop(reader, tx, pool_rx)));
         }
         Ok(TcpTransport {
             rank,
             n: world,
             peers,
             inbox,
+            recycle,
             readers,
             obs: Vec::new(),
             timeout: Duration::from_secs(30),
@@ -212,11 +223,17 @@ impl TcpTransport {
 /// The terminating error is itself delivered as an observation — a
 /// receiver blocked on this peer learns of the disconnect immediately
 /// instead of parking until its timeout expires.
-fn reader_loop(mut stream: TcpStream, tx: Sender<InboxItem>) {
+///
+/// Buffers recycle: each frame is read into a spent payload `Vec` the
+/// endpoint handed back through `pool` (capacity intact), so a receiver
+/// that drains with [`Transport::recv_into`] keeps the reader thread
+/// allocation-free per frame in steady state.
+fn reader_loop(mut stream: TcpStream, tx: Sender<InboxItem>, pool: Receiver<Vec<u8>>) {
     loop {
-        match read_frame(&mut stream) {
-            Ok(payload) => {
-                if tx.send(Ok(payload)).is_err() {
+        let mut buf = pool.try_recv().unwrap_or_default();
+        match read_frame_into(&mut stream, &mut buf) {
+            Ok(()) => {
+                if tx.send(Ok(buf)).is_err() {
                     return; // endpoint dropped
                 }
             }
@@ -311,6 +328,15 @@ impl Transport for TcpTransport {
     }
 
     fn recv(&mut self, from: usize) -> Result<Vec<u8>> {
+        // Delegate so the validation and error mapping live once; the
+        // fresh Vec swaps with the reader's filled buffer in recv_into
+        // (the empty spent buffer going back to the pool is harmless).
+        let mut buf = Vec::new();
+        self.recv_into(from, &mut buf)?;
+        Ok(buf)
+    }
+
+    fn recv_into(&mut self, from: usize, buf: &mut Vec<u8>) -> Result<()> {
         if from >= self.n || from == self.rank {
             return Err(anyhow!("bad source rank {from} (self is {})", self.rank));
         }
@@ -318,7 +344,18 @@ impl Transport for TcpTransport {
             .as_ref()
             .with_context(|| format!("connection to rank {from} closed"))?;
         match rx.recv_timeout(self.timeout) {
-            Ok(Ok(payload)) => Ok(payload),
+            Ok(Ok(mut payload)) => {
+                // Swap, don't copy: the caller gets the reader-filled
+                // buffer, and the caller's spent buffer (capacity intact)
+                // goes back to the reader thread for a later frame —
+                // steady state moves payloads with no copy and no
+                // allocation on either side of the inbox.
+                std::mem::swap(buf, &mut payload);
+                if let Some(pool) = self.recycle[from].as_ref() {
+                    let _ = pool.send(payload);
+                }
+                Ok(())
+            }
             Ok(Err(e)) => Err(anyhow!("peer {from} disconnected: {e}")),
             Err(RecvTimeoutError::Timeout) => Err(anyhow!("recv from rank {from} timed out")),
             Err(RecvTimeoutError::Disconnected) => Err(anyhow!("peer {from} closed")),
@@ -344,6 +381,7 @@ impl Transport for TcpTransport {
             }
         }
         self.inbox.iter_mut().for_each(|r| *r = None);
+        self.recycle.iter_mut().for_each(|r| *r = None);
         for h in self.readers.drain(..) {
             h.join().map_err(|_| anyhow!("reader thread panicked"))?;
         }
@@ -429,6 +467,29 @@ pub(crate) mod tests {
                 assert_eq!(g, &vec![p as u8, me as u8]);
             }
         }
+    }
+
+    /// The recycled receive path: repeated `recv_into` over one
+    /// connection keeps frames intact while inbox buffers rotate back
+    /// through the reader thread's pool.
+    #[test]
+    fn recv_into_recycles_inbox_buffers_without_corruption() {
+        let rounds = 16usize;
+        let out = with_mesh(2, move |mut t| {
+            let peer = 1 - t.rank();
+            let mut buf = Vec::new();
+            let mut ok = true;
+            for i in 0..rounds {
+                // Alternate sizes so recycled buffers shrink and regrow.
+                let len = if i % 2 == 0 { 4096 } else { 64 };
+                t.send(peer, &vec![i as u8; len]).unwrap();
+                t.recv_into(peer, &mut buf).unwrap();
+                ok &= buf == vec![i as u8; len];
+            }
+            t.shutdown().unwrap();
+            ok
+        });
+        assert!(out.iter().all(|&ok| ok), "recycled buffers corrupted a frame");
     }
 
     #[test]

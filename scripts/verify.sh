@@ -25,6 +25,15 @@ fi
 echo "== cargo test -q (unit + integration; doctests run separately below) =="
 cargo test -q --lib --bins --tests
 
+# Receive-path gates, run by name so a filter change can never silently
+# drop them (cheap; also covered by the full run above): the fused
+# decode-reduce corruption contract (malformed frames → named Err, no
+# out-of-bounds scatter) and the zero-alloc steady-state gates on both
+# halves of the data plane.
+echo "== receive-path gates: decode-reduce corruption + zero-alloc (FAST-safe) =="
+cargo test -q --lib decode_reduce
+cargo test -q --lib allocation_free
+
 # Docs gate: broken intra-doc links and rustdoc warnings fail fast, and
 # every module-header example actually runs.
 echo "== cargo doc --no-deps (warnings are errors) =="
