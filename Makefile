@@ -1,5 +1,5 @@
 # Entry points referenced by the docs and code comments.
-.PHONY: artifacts verify bench-transport bench-json
+.PHONY: artifacts verify fuzz-smoke bench-transport bench-json
 
 # AOT-lower the JAX/Pallas models (L1+L2) to HLO text artifacts consumed by
 # the rust runtime (`--features pjrt`). Needs JAX; run once, never on the
@@ -10,6 +10,15 @@ artifacts:
 # Tier-1 build + tests plus the docs gate (rustdoc warnings fatal, doctests).
 verify:
 	scripts/verify.sh
+
+# Deterministic fuzz smoke: the wire-surface harnesses (frame codec, COO
+# payloads, epoch envelopes, checkpoints) at 10k iterations per surface
+# under the fixed default seed, plus the pinned regression-corpus replay.
+# Bounded and reproducible — override with NETSENSE_FUZZ_SEED /
+# NETSENSE_FUZZ_ITERS to explore.
+fuzz-smoke:
+	NETSENSE_FUZZ_ITERS=10000 cargo test -q --lib fuzz
+	cargo test -q --test fuzz_corpus
 
 # Loopback-throughput bench for the socket transport layer (frame codec,
 # ring collectives, token-bucket overhead). NETSENSE_BENCH_FAST=1 shrinks

@@ -49,5 +49,6 @@ pub use pipeline::{
 pub use quantize::{f32_to_f16_bits, f16_bits_to_f32, Precision};
 pub use sparse::{
     decode_reduce_frame_into, decode_reduce_into, DecodeReduceOutcome, SparseGradient,
+    COO_HEADER_BYTES,
 };
 pub use workspace::{Workspace, WorkspacePool};

@@ -7,6 +7,9 @@
 
 use super::quantize::{f16_bits_to_f32, f32_to_f16_bits, Precision};
 
+/// Bytes in the COO wire header (`n_total` + `nnz` + precision tag + pad).
+pub const COO_HEADER_BYTES: usize = 12;
+
 /// A sparse gradient: sorted unique indices + values, tagged with the dense
 /// length it came from.
 #[derive(Clone, Debug, PartialEq)]
@@ -36,7 +39,7 @@ impl SparseGradient {
 
     /// Exact wire size in bytes (header + indices + values).
     pub fn wire_bytes(&self) -> u64 {
-        12 + (self.nnz() as u64) * (4 + self.precision.bytes() as u64)
+        COO_HEADER_BYTES as u64 + (self.nnz() as u64) * (4 + self.precision.bytes() as u64)
     }
 
     /// Densify into a fresh dense vector (receiver side).
@@ -87,7 +90,7 @@ impl SparseGradient {
     pub fn decode(buf: &[u8]) -> Result<SparseGradient, String> {
         let (n_total, nnz, precision, idx_end, val_end) = parse_coo_header(buf)?;
         let mut indices = Vec::with_capacity(nnz);
-        for c in buf[12..idx_end].chunks_exact(4) {
+        for c in buf[COO_HEADER_BYTES..idx_end].chunks_exact(4) {
             let i = u32::from_le_bytes(c.try_into().unwrap());
             if i as usize >= n_total {
                 return Err(format!("index {i} out of range {n_total}"));
@@ -192,7 +195,7 @@ impl SparseGradient {
 /// [`encode_coo_header_into`]). Returns
 /// `(n_total, nnz, precision, idx_end, val_end)`.
 fn parse_coo_header(buf: &[u8]) -> Result<(usize, usize, Precision, usize, usize), String> {
-    if buf.len() < 12 {
+    if buf.len() < COO_HEADER_BYTES {
         return Err("short header".into());
     }
     let n_total = u32::from_le_bytes(buf[0..4].try_into().unwrap()) as usize;
@@ -203,8 +206,17 @@ fn parse_coo_header(buf: &[u8]) -> Result<(usize, usize, Precision, usize, usize
         2 => Precision::Bf16,
         p => return Err(format!("bad precision tag {p}")),
     };
-    let idx_end = 12 + nnz * 4;
-    let val_end = idx_end + nnz * precision.bytes();
+    // Checked arithmetic: a u32 nnz can't overflow usize on 64-bit hosts,
+    // but the header contract shouldn't depend on pointer width — a lying
+    // count is a named error, never a wrapped offset.
+    let idx_end = nnz
+        .checked_mul(4)
+        .and_then(|b| b.checked_add(COO_HEADER_BYTES))
+        .ok_or_else(|| format!("nnz {nnz} overflows frame size"))?;
+    let val_end = nnz
+        .checked_mul(precision.bytes())
+        .and_then(|b| b.checked_add(idx_end))
+        .ok_or_else(|| format!("nnz {nnz} overflows frame size"))?;
     if buf.len() != val_end {
         return Err(format!("bad length {} (expected {val_end})", buf.len()));
     }
@@ -260,7 +272,7 @@ pub fn encode_gathered_into(
     out: &mut Vec<u8>,
 ) -> u64 {
     let nnz = indices.len();
-    let bytes = 12 + (nnz as u64) * (4 + precision.bytes() as u64);
+    let bytes = COO_HEADER_BYTES as u64 + (nnz as u64) * (4 + precision.bytes() as u64);
     out.reserve(bytes as usize);
     let before = out.len();
     encode_coo_header_into(dense.len(), nnz, precision, out);
@@ -333,7 +345,7 @@ pub fn decode_reduce_into(buf: &[u8], out: &mut [f32]) -> Result<DecodeReduceOut
     // compare each) — nothing touches `out` until every index is proven
     // in-bounds and strictly ascending.
     let mut prev: i64 = -1;
-    for c in buf[12..idx_end].chunks_exact(4) {
+    for c in buf[COO_HEADER_BYTES..idx_end].chunks_exact(4) {
         let i = u32::from_le_bytes(c.try_into().unwrap());
         if i as i64 <= prev {
             return Err("indices not strictly ascending".into());
@@ -344,7 +356,7 @@ pub fn decode_reduce_into(buf: &[u8], out: &mut [f32]) -> Result<DecodeReduceOut
         return Err(format!("index {prev} out of range {n_total}"));
     }
     // Scatter sweep: dequantize + accumulate, one pass over the payload.
-    let indices = buf[12..idx_end].chunks_exact(4);
+    let indices = buf[COO_HEADER_BYTES..idx_end].chunks_exact(4);
     let values = &buf[idx_end..val_end];
     match precision {
         Precision::F32 => {

@@ -215,6 +215,9 @@ const FAULT_KEYS: &[&str] = &[
     "fault.kill",
     "fault.stall",
     "fault.flap",
+    "fault.duplicate",
+    "fault.reorder",
+    "fault.partial_kill",
 ];
 
 /// Non-negative integer lookup with loud failures: a wrong-typed value
@@ -499,6 +502,24 @@ impl LiveConfig {
                 .map(|r| (r[0] as usize, r[1] as usize, r[2] as u64))
                 .collect();
         }
+        if let Some(v) = doc.get("fault.duplicate") {
+            c.faults.duplicates = parse_fault_rows(v, "fault.duplicate", 2)?
+                .into_iter()
+                .map(|r| (r[0] as usize, r[1] as usize))
+                .collect();
+        }
+        if let Some(v) = doc.get("fault.reorder") {
+            c.faults.reorders = parse_fault_rows(v, "fault.reorder", 2)?
+                .into_iter()
+                .map(|r| (r[0] as usize, r[1] as usize))
+                .collect();
+        }
+        if let Some(v) = doc.get("fault.partial_kill") {
+            c.faults.partial_kills = parse_fault_rows(v, "fault.partial_kill", 3)?
+                .into_iter()
+                .map(|r| (r[0] as usize, r[1] as usize, r[2] as usize))
+                .collect();
+        }
         c.validate()?;
         Ok(c)
     }
@@ -519,7 +540,7 @@ impl LiveConfig {
         }
         if self.faults.kill_step(0).is_some() {
             return Err(anyhow!(
-                "fault.kill cannot target rank 0 (it carries the report)"
+                "fault.kill/partial_kill cannot target rank 0 (it carries the report)"
             ));
         }
         if let Some(r) = self.faults.max_rank() {
@@ -713,6 +734,9 @@ probe_timeout_ms = 1000
 kill = [[2, 6]]
 stall = [[1, 3, 50]]
 flap = [[3, 8, 400]]
+duplicate = [[1, 4]]
+reorder = [[3, 5]]
+partial_kill = [[2, 9, 5]]
 "#,
         )
         .unwrap();
@@ -721,6 +745,9 @@ flap = [[3, 8, 400]]
         assert_eq!(c.faults.kills, vec![(2, 6)]);
         assert_eq!(c.faults.stalls, vec![(1, 3, 50)]);
         assert_eq!(c.faults.flaps, vec![(3, 8, 400)]);
+        assert_eq!(c.faults.duplicates, vec![(1, 4)]);
+        assert_eq!(c.faults.reorders, vec![(3, 5)]);
+        assert_eq!(c.faults.partial_kills, vec![(2, 9, 5)]);
         let opts = c.live_opts();
         assert_eq!(opts.fault.recv_timeout_ms, 250);
         assert_eq!(opts.faults.kill_step(2), Some(6));
@@ -748,6 +775,15 @@ flap = [[3, 8, 400]]
         assert!(LiveConfig::from_toml("[fault]\nstall = [[1, 2]]").is_err());
         assert!(LiveConfig::from_toml("[fault]\nstall = [[1, -2, 5]]").is_err());
         assert!(LiveConfig::from_toml("[fault]\nflap = [[1, 2, -1]]").is_err());
+        // Byzantine rows follow the same rules: a partial kill is a kill
+        // (rank 0 must survive), ranks must exist, arity is checked.
+        assert!(LiveConfig::from_toml("[fault]\npartial_kill = [[0, 3, 5]]").is_err());
+        assert!(LiveConfig::from_toml(
+            "[transport]\nn_workers = 2\n[fault]\nreorder = [[5, 3]]"
+        )
+        .is_err());
+        assert!(LiveConfig::from_toml("[fault]\nduplicate = [[1, 2, 3]]").is_err());
+        assert!(LiveConfig::from_toml("[fault]\npartial_kill = [[1, 2]]").is_err());
         // Zero deadlines would make every round a recovery.
         assert!(LiveConfig::from_toml("[fault]\nrecv_timeout_ms = 0").is_err());
     }

@@ -274,29 +274,62 @@ impl SyncEngine {
     /// configured identically (strategy, worker count, bucket layout).
     /// The engine then continues **bit-identically** to the one that
     /// exported — the rejoin guarantee tested below.
-    pub fn import_checkpoint(&mut self, ck: &Checkpoint) {
+    ///
+    /// A snapshot whose shape does not match this engine (wrong worker
+    /// count, bucket layout, or residual lengths — a checkpoint from a
+    /// different run, or one that decoded from a corrupted-but-parseable
+    /// blob) is rejected as a named error **before any state is
+    /// touched**: on `Err`, the engine continues exactly as it was.
+    pub fn import_checkpoint(&mut self, ck: &Checkpoint) -> Result<()> {
+        // Validate the full shape first; only then mutate. The inner
+        // `import_state` length assertions become unreachable.
         if self.pipeline.is_some() {
+            let layout = self.bucket_layout();
+            let nb = layout.n_buckets();
+            if ck.states.len() != self.n_workers * nb {
+                return Err(anyhow!(
+                    "checkpoint shape mismatch: {} states, engine has {} workers × {nb} buckets",
+                    ck.states.len(),
+                    self.n_workers
+                ));
+            }
+            for (i, s) in ck.states.iter().enumerate() {
+                let want = layout.elems(i % nb);
+                if s.residual.len() != want {
+                    return Err(anyhow!(
+                        "checkpoint state {i}: residual has {} elems, bucket {} holds {want}",
+                        s.residual.len(),
+                        i % nb
+                    ));
+                }
+            }
             self.ensure_bucketed();
-            let nb = self.bucket_layout().n_buckets();
-            assert_eq!(
-                ck.states.len(),
-                self.n_workers * nb,
-                "checkpoint shape mismatch (workers × buckets)"
-            );
             for (w, b) in self.bucketed.iter_mut().enumerate() {
                 b.import_state(&ck.states[w * nb..(w + 1) * nb]);
             }
         } else {
+            if ck.states.len() != self.n_workers {
+                return Err(anyhow!(
+                    "checkpoint shape mismatch: {} states, engine has {} workers",
+                    ck.states.len(),
+                    self.n_workers
+                ));
+            }
+            for (i, s) in ck.states.iter().enumerate() {
+                if s.residual.len() != self.n_params {
+                    return Err(anyhow!(
+                        "checkpoint state {i}: residual has {} elems, model has {}",
+                        s.residual.len(),
+                        self.n_params
+                    ));
+                }
+            }
             self.ensure_compressors();
-            assert_eq!(
-                ck.states.len(),
-                self.n_workers,
-                "checkpoint shape mismatch (one state per worker)"
-            );
             for (c, s) in self.compressors.iter_mut().zip(&ck.states) {
                 c.import_state(s);
             }
         }
+        Ok(())
     }
 
     /// Mean residual norm across workers (compression-health metric).
@@ -848,7 +881,7 @@ mod tests {
             let ck = crate::fault::Checkpoint::decode(&wire).unwrap();
             assert_eq!((ck.epoch, ck.step), (1, 4));
             let mut rejoined = mk();
-            rejoined.import_checkpoint(&ck);
+            rejoined.import_checkpoint(&ck).unwrap();
             for seed in 4..8 {
                 let gs = grads(seed);
                 let a = original.sync_full(&mut sim(100.0), &gs, &w).unwrap();
@@ -858,6 +891,65 @@ mod tests {
                     "pipelined={pipelined} seed {seed}: restored engine diverged"
                 );
                 assert_eq!(a.payload_bytes, b.payload_bytes, "pipelined={pipelined}");
+            }
+        }
+    }
+
+    /// A checkpoint whose shape does not match the engine — wrong state
+    /// count or wrong residual length, e.g. a blob from a different run
+    /// that still parsed — is a named error, and the engine is left
+    /// untouched: it continues bit-identically to a witness engine that
+    /// never saw the corrupt blob.
+    #[test]
+    fn corrupt_checkpoint_is_rejected_and_engine_continues_untouched() {
+        for pipelined in [false, true] {
+            let mk = || {
+                let e = SyncEngine::new(SyncStrategy::TopK(0.1), N, P);
+                if pipelined {
+                    e.with_pipeline(PipelineConfig {
+                        bucket_size_bytes: 10_000,
+                        ..Default::default()
+                    })
+                } else {
+                    e
+                }
+            };
+            let w = weights();
+            let mut engine = mk();
+            let mut witness = mk();
+            for seed in 0..3 {
+                engine.sync_full(&mut sim(100.0), &grads(seed), &w).unwrap();
+                witness.sync_full(&mut sim(100.0), &grads(seed), &w).unwrap();
+            }
+            let good = engine.export_checkpoint(0, 3).unwrap();
+            // Wrong state count (a different worker count or bucket layout).
+            let mut bad = good.clone();
+            bad.states.pop();
+            let e = engine.import_checkpoint(&bad).unwrap_err();
+            assert!(
+                format!("{e}").contains("shape mismatch"),
+                "pipelined={pipelined}: {e}"
+            );
+            // Right count, wrong residual length in one state — caught by
+            // validation *before* any compressor is mutated (the panic
+            // inside `import_state` is unreachable).
+            let mut bad = good.clone();
+            bad.states[0].residual.pop();
+            let e = engine.import_checkpoint(&bad).unwrap_err();
+            assert!(
+                format!("{e}").contains("residual has"),
+                "pipelined={pipelined}: {e}"
+            );
+            // The engine that survived two rejected imports continues
+            // exactly like the witness that never saw them.
+            for seed in 3..6 {
+                let gs = grads(seed);
+                let a = engine.sync_full(&mut sim(100.0), &gs, &w).unwrap();
+                let b = witness.sync_full(&mut sim(100.0), &gs, &w).unwrap();
+                assert_eq!(
+                    a.mean_grad, b.mean_grad,
+                    "pipelined={pipelined} seed {seed}: engine was perturbed by rejected import"
+                );
             }
         }
     }

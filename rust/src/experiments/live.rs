@@ -437,6 +437,15 @@ fn run_worker(t: Box<dyn Transport>, opts: &LiveOpts) -> Result<WorkerOut> {
             })
         };
         let round = match round {
+            // A rank killed mid-round (e.g. a torn partial write) can
+            // still "complete" the round solo: its probe sends all fail,
+            // it removes everyone, and replays alone. That round is a
+            // dead rank's hallucination — discard it before it pollutes
+            // the hash/trace and desyncs the netsim mirror.
+            Ok(_) if t.is_killed() => {
+                killed = true;
+                break;
+            }
             Ok(r) => r,
             Err(_) if t.is_killed() => {
                 killed = true;
@@ -729,6 +738,61 @@ mod tests {
         assert!(report.steps.iter().all(|r| r.epoch == 0 && r.live == 3));
         let mirror = sim_trajectory(3, 6, &opts.faults, &opts.fault, 10_000);
         assert_eq!(report.trajectory().segments, mirror.segments);
+    }
+
+    /// The Byzantine schedule end-to-end: a duplicated-frame replay
+    /// (absorbed by the epoch/step fencing, no disruption), a reordered
+    /// round (recovery without deaths), and a torn partial write followed
+    /// by death (rank removed; its garbage fragment rejected by envelope
+    /// parse) — and the live `SyncTrajectory` still equals the netsim
+    /// mirror segment-for-segment.
+    #[test]
+    fn chaos_byzantine_schedules_match_netsim_mirror() {
+        let opts = LiveOpts {
+            n_workers: 4,
+            steps: 12,
+            n_params: 20_000,
+            strategy: SyncStrategy::NetSense,
+            faults: FaultSchedule {
+                duplicates: vec![(1, 2)],
+                reorders: vec![(3, 5)],
+                // 5 bytes < the 9-byte envelope: a garbage fragment.
+                partial_kills: vec![(2, 8, 5)],
+                ..Default::default()
+            },
+            fault: FaultConfig {
+                recv_timeout_ms: 150,
+                probe_timeout_ms: 2_000,
+            },
+            ..Default::default()
+        };
+        let report = run_live(&opts).unwrap();
+        assert!(report.consistent, "Byzantine chaos broke bit-consistency");
+        assert_eq!(report.steps.len(), 12);
+        // The duplicate is absorbed: no epoch bump at step 2.
+        assert_eq!(report.steps[2].epoch, 0);
+        assert_eq!(report.steps[2].live, 4);
+        // The reorder forces one recovery but kills nobody.
+        assert_eq!(report.steps[5].epoch, 1);
+        assert_eq!(report.steps[5].live, 4);
+        // The torn write kills rank 2 — and only rank 2.
+        assert_eq!(report.steps[8].epoch, 2);
+        assert_eq!(report.steps[8].live, 3);
+        assert_eq!(report.final_live, 3);
+        assert_eq!(report.recoveries, 2);
+        // Determinism contract, extended to the Byzantine classes: the
+        // netsim replay walks the identical trajectory.
+        let mirror = sim_trajectory(4, 12, &opts.faults, &opts.fault, 20_000);
+        assert_eq!(report.trajectory().segments, mirror.segments);
+        use crate::fault::TrajectorySegment as Seg;
+        assert_eq!(
+            mirror.segments,
+            vec![
+                Seg { epoch: 0, group_size: 4, syncs: 5 },
+                Seg { epoch: 1, group_size: 4, syncs: 3 },
+                Seg { epoch: 2, group_size: 3, syncs: 4 },
+            ]
+        );
     }
 
     /// The same kill scenario over real sockets: the reader-thread

@@ -317,4 +317,87 @@ mod tests {
         let other = NetSenseCompressor::new(11, CompressionConfig::default());
         c.import_state(&other.export_state());
     }
+
+    /// Corruption property: every corruption class maps to its *named*
+    /// error — and a failed restore attempt leaves the engine untouched,
+    /// so retrying with the pristine blob still resumes bit-identically
+    /// (a failed `decode` returns no [`Checkpoint`] at all; there is
+    /// nothing to import).
+    #[test]
+    fn corruption_yields_named_errors_and_a_clean_retry_still_resumes() {
+        let n = 600;
+        let w = randn(n, 40);
+        let mut g = randn(n, 41);
+        let mut original = NetSenseCompressor::new(n, CompressionConfig::default());
+        for _ in 0..3 {
+            original.compress(&g, &w, 0.1);
+        }
+        let wire = Checkpoint::new(1, 3, vec![original.export_state()]).encode();
+
+        let named = |buf: &[u8]| format!("{}", Checkpoint::decode(buf).unwrap_err());
+        // Truncated blob: the residual length check names the shortfall.
+        assert!(named(&wire[..wire.len() - 3]).contains("truncated residual"));
+        // Truncated header: the bounds-checked reader names the offset.
+        assert!(named(&wire[..13]).contains("truncated checkpoint"));
+        // Wrong version.
+        let mut bad = wire.clone();
+        bad[4] = 9;
+        assert!(named(&bad).contains("unsupported checkpoint version 9"));
+        // Bit-flipped CompressorState: the flags byte sits right after
+        // the 28-byte header + the state's 4-byte residual length.
+        let mut bad = wire.clone();
+        bad[32] |= 0x80;
+        assert!(named(&bad).contains("unknown flag bits"));
+        // Bad magic and trailing garbage.
+        let mut bad = wire.clone();
+        bad[1] ^= 0x40;
+        assert!(named(&bad).contains("bad checkpoint magic"));
+        let mut long = wire.clone();
+        long.push(0);
+        assert!(named(&long).contains("trailing bytes after checkpoint"));
+
+        // The failed attempts had no side effects: restoring from the
+        // pristine blob afterwards still continues bit-identically.
+        let ck = Checkpoint::decode(&wire).unwrap();
+        let mut rejoined = NetSenseCompressor::new(n, CompressionConfig::default());
+        rejoined.import_state(&ck.states[0]);
+        let mut ws = Workspace::new();
+        let mut drift = Pcg64::seeded(42);
+        for x in g.iter_mut() {
+            *x += 0.05 * drift.normal() as f32;
+        }
+        let staged = original.compress(&g, &w, 0.05);
+        let mut fused_wire = Vec::new();
+        rejoined.compress_payload_into(&g, &w, 0.05, &mut ws, &mut fused_wire);
+        assert_eq!(staged.payload.encode(), fused_wire, "retry after corruption diverged");
+    }
+
+    /// Fuzz property: `decode` is total over mutations of *real*
+    /// compressor snapshots (richer than the synthetic states the fuzz
+    /// generator builds), and whatever it accepts re-canonicalizes —
+    /// [`crate::testing::fuzz::probe_checkpoint`] asserts the
+    /// decode∘encode idempotence contract internally.
+    #[test]
+    fn mutated_live_snapshots_never_panic_the_decoder() {
+        use crate::testing::fuzz::{fuzz_iters, fuzz_seed, ByteMutator, SplitMix64};
+        let n = 256;
+        let w = randn(n, 50);
+        let mut c = NetSenseCompressor::new(n, CompressionConfig::default());
+        let mut rng = SplitMix64::new(fuzz_seed() ^ 0xc4ec);
+        let mut mutator = ByteMutator::new(fuzz_seed() ^ 0x6d75_7461);
+        let mut rejected = 0usize;
+        for i in 0..fuzz_iters(200) {
+            c.compress(&randn(n, 60 + i as u64), &w, 0.1);
+            let pristine = Checkpoint::new(rng.next(), rng.next(), vec![c.export_state()]);
+            let mut wire = pristine.encode();
+            crate::testing::fuzz::probe_checkpoint(&wire)
+                .unwrap_or_else(|e| panic!("pristine snapshot rejected: {e}"));
+            mutator.mutate(&mut wire);
+            if let Err(e) = crate::testing::fuzz::probe_checkpoint(&wire) {
+                assert!(!e.is_empty(), "corruption must carry a named error");
+                rejected += 1;
+            }
+        }
+        assert!(rejected > 0, "mutator never produced a rejected snapshot");
+    }
 }

@@ -119,6 +119,13 @@ pub struct ElasticRound {
     pub lost: bool,
     /// Epoch the round completed at.
     pub epoch: u64,
+    /// Well-formed frames discarded by the epoch/step fencing (stale
+    /// rounds, replayed duplicates, withheld-then-released reorders) —
+    /// each such frame is dropped exactly once, here.
+    pub dropped_stale: u64,
+    /// Frames that failed envelope parse (torn writes, line noise) —
+    /// rejected by parse, never by trust.
+    pub dropped_garbage: u64,
 }
 
 /// [`ElasticRound`] minus the payloads: what
@@ -142,6 +149,13 @@ pub struct RoundStats {
     /// Blocks handed to the reducer (own payload included) — the live
     /// ranks present when the round completed.
     pub n_blocks: usize,
+    /// Well-formed frames discarded by the epoch/step fencing (stale
+    /// rounds, replayed duplicates, withheld-then-released reorders) —
+    /// each such frame is dropped exactly once, here.
+    pub dropped_stale: u64,
+    /// Frames that failed envelope parse (torn writes, line noise) —
+    /// rejected by parse, never by trust.
+    pub dropped_garbage: u64,
 }
 
 /// Why an attempt stopped early.
@@ -191,6 +205,12 @@ pub struct ElasticExchange {
     present: Vec<bool>,
     /// Reused receive staging buffer.
     recv_buf: Vec<u8>,
+    /// Fenced-frame drops of the round in progress (reset per round,
+    /// snapshotted into [`RoundStats::dropped_stale`]).
+    dropped_stale: u64,
+    /// Parse-failure drops of the round in progress (reset per round,
+    /// snapshotted into [`RoundStats::dropped_garbage`]).
+    dropped_garbage: u64,
 }
 
 impl ElasticExchange {
@@ -203,6 +223,8 @@ impl ElasticExchange {
             blocks: (0..m.world()).map(|_| Vec::new()).collect(),
             present: vec![false; m.world()],
             recv_buf: Vec::new(),
+            dropped_stale: 0,
+            dropped_garbage: 0,
         }
     }
 
@@ -236,6 +258,8 @@ impl ElasticExchange {
             recoveries: stats.recoveries,
             lost: stats.lost,
             epoch: stats.epoch,
+            dropped_stale: stats.dropped_stale,
+            dropped_garbage: stats.dropped_garbage,
         })
     }
 
@@ -275,6 +299,8 @@ impl ElasticExchange {
         let mut recoveries = 0u64;
         let mut lost = false;
         self.probes_seen.iter_mut().for_each(|p| *p = false);
+        self.dropped_stale = 0;
+        self.dropped_garbage = 0;
         loop {
             match self.attempt(t, m, step, payload, &mut sent) {
                 Ok(()) => {
@@ -292,6 +318,8 @@ impl ElasticExchange {
                         lost,
                         epoch: m.epoch(),
                         n_blocks,
+                        dropped_stale: self.dropped_stale,
+                        dropped_garbage: self.dropped_garbage,
                     });
                 }
                 Err(AttemptEnd::Skew {
@@ -393,13 +421,19 @@ impl ElasticExchange {
                         self.present[incoming_origin] = true;
                         break;
                     }
-                    Ok((FrameKind::Data, e, _, _)) if e < epoch => continue, // stale round
+                    Ok((FrameKind::Data, e, _, _)) if e < epoch => {
+                        // Stale round (aborted-attempt leftovers, replayed
+                        // duplicates): fence it, count it, keep waiting.
+                        self.dropped_stale += 1;
+                        continue;
+                    }
                     Ok((FrameKind::Data, e, s, _)) if e == epoch && s < step => {
                         // A peer that fell behind is replaying an older
                         // step; it will detect the skew and self-fence —
                         // drop its doomed frames and keep waiting (our
                         // deadline then drives the recovery that removes
                         // it).
+                        self.dropped_stale += 1;
                         continue;
                     }
                     Ok((FrameKind::Data, e, s, _)) => {
@@ -417,7 +451,12 @@ impl ElasticExchange {
                             probe_from: Some(pred),
                         }));
                     }
-                    Err(_) => continue, // garbage frame: drop, keep waiting
+                    Err(_) => {
+                        // Garbage frame (torn write, line noise): rejected
+                        // by parse — drop, count, keep waiting.
+                        self.dropped_garbage += 1;
+                        continue;
+                    }
                 }
             }
         }
@@ -461,7 +500,17 @@ impl ElasticExchange {
                 match t.recv_into(r, &mut self.recv_buf) {
                     Ok(()) => match parse_envelope(&self.recv_buf) {
                         Ok((FrameKind::Probe, _, _, _)) => break true,
-                        _ => continue, // stale data / garbage: drain past it
+                        Ok(_) => {
+                            // Pre-abort data (including a reordering
+                            // peer's released backlog): drain past it,
+                            // counted once.
+                            self.dropped_stale += 1;
+                            continue;
+                        }
+                        Err(_) => {
+                            self.dropped_garbage += 1;
+                            continue;
+                        }
                     },
                     Err(_) => break false, // deadline or disconnect
                 }
@@ -534,6 +583,13 @@ mod tests {
                         }
                         let payload = vec![rank as u8; 10 + rank];
                         match ex.round(&mut t, &mut m, step as u32, &payload) {
+                            // A rank killed *mid-round* (torn write) can
+                            // still "complete" the round solo — its probe
+                            // sends all fail, so it removes everyone and
+                            // replays alone. That round is a dead rank's
+                            // hallucination: discard it, like the live
+                            // worker loop does.
+                            Ok(_) if t.is_killed() => return None,
                             Ok(r) => rounds.push(r),
                             Err(_) if t.is_killed() => return None,
                             Err(e) => panic!("rank {rank}: {e}"),
@@ -841,6 +897,189 @@ mod tests {
             allocs, 0,
             "membership-checked fused send path allocated {allocs} times"
         );
+    }
+
+    /// Byzantine duplication (ISSUE satellite): rank 1's two data frames
+    /// of step 1 are re-delivered at step 2 with their step-1 envelopes.
+    /// The step fencing must drop each exactly once — no recovery, no
+    /// epoch bump, no corrupted blocks — and `RoundStats` must count them.
+    #[test]
+    fn duplicate_frames_are_fenced_exactly_once_and_counted() {
+        let n = 3;
+        let mut specs = vec![Vec::new(); n];
+        specs[1] = vec![FaultSpec::DuplicateAtStep { step: 1 }];
+        let outs = run_mesh_round(n, cfg_ms(2_000, 2_000), specs, 3);
+        let mut fenced = 0u64;
+        for (rank, out) in outs.iter().enumerate() {
+            let rounds = out.as_ref().unwrap_or_else(|| panic!("rank {rank} died"));
+            for r in rounds {
+                assert_eq!(r.recoveries, 0, "rank {rank}: duplicates must be absorbed");
+                assert!(!r.lost, "rank {rank}");
+                assert_eq!(r.epoch, 0, "rank {rank}");
+                assert_eq!(r.dropped_garbage, 0, "rank {rank}");
+                // Payload integrity: every origin's block is the genuine
+                // article, never a replayed copy misattributed.
+                for (origin, b) in r.blocks.iter().enumerate() {
+                    assert_eq!(
+                        b.as_deref(),
+                        Some(&vec![origin as u8; 10 + origin][..]),
+                        "rank {rank}: origin {origin} corrupted"
+                    );
+                }
+                fenced += r.dropped_stale;
+            }
+        }
+        // Rank 1 forwards two data frames to its ring successor during
+        // step 1 (its own block + the forwarded one); both replays land at
+        // step 2 and are fenced there — exactly once each.
+        assert_eq!(fenced, 2, "each duplicated frame must be dropped exactly once");
+    }
+
+    /// Byzantine reordering (ISSUE satellite): rank 1 withholds its step-1
+    /// data past its own round budget and releases it behind its recovery
+    /// probe. Every rank sees exactly one recovery, nobody is removed, and
+    /// the released backlog is drained as stale — counted, never consumed.
+    #[test]
+    fn reordered_round_recovers_once_and_counts_released_backlog() {
+        let n = 3;
+        let mut specs = vec![Vec::new(); n];
+        specs[1] = vec![FaultSpec::ReorderAtStep { step: 1 }];
+        let outs = run_mesh_round(n, cfg_ms(150, 2_000), specs, 3);
+        let mut fenced = 0u64;
+        for (rank, out) in outs.iter().enumerate() {
+            let rounds = out.as_ref().unwrap_or_else(|| panic!("rank {rank} died"));
+            assert_eq!(rounds[1].recoveries, 1, "rank {rank}: exactly one recovery");
+            assert!(rounds[1].lost, "rank {rank}");
+            assert_eq!(rounds[1].epoch, 1, "rank {rank}");
+            for r in rounds {
+                let live = r.blocks.iter().filter(|b| b.is_some()).count();
+                assert_eq!(live, n, "rank {rank}: a reorder must not kill anyone");
+            }
+            // Step 2 runs clean at the bumped epoch.
+            assert_eq!(rounds[2].recoveries, 0, "rank {rank}");
+            assert_eq!(rounds[2].epoch, 1, "rank {rank}");
+            fenced += rounds[1].dropped_stale;
+        }
+        // The two withheld frames (both addressed to rank 1's ring
+        // successor) are released behind the probe and drained as stale in
+        // the successor's probe phase — exactly once each.
+        assert_eq!(fenced, 2, "released backlog must be fenced exactly once");
+    }
+
+    /// Byzantine torn write, unparseable prefix (ISSUE satellite): rank 2
+    /// dies mid-send at step 1 delivering 5 bytes — too short to be an
+    /// envelope. Its ring successor must reject the fragment by parse
+    /// (counted as garbage), then the group removes rank 2 like any kill.
+    #[test]
+    fn partial_write_garbage_prefix_is_rejected_and_rank_removed() {
+        let n = 4;
+        let mut specs = vec![Vec::new(); n];
+        specs[2] = vec![FaultSpec::PartialSendAtStep { step: 1, keep_bytes: 5 }];
+        let outs = run_mesh_round(n, cfg_ms(150, 600), specs, 3);
+        assert!(outs[2].is_none(), "rank 2's solo zombie round must be discarded");
+        let mut garbage = 0u64;
+        for (rank, out) in outs.iter().enumerate() {
+            if rank == 2 {
+                continue;
+            }
+            let rounds = out.as_ref().unwrap_or_else(|| panic!("rank {rank} died"));
+            assert_eq!(rounds.len(), 3);
+            assert_eq!(rounds[1].recoveries, 1, "rank {rank}");
+            assert_eq!(rounds[1].epoch, 1, "rank {rank}");
+            assert!(rounds[1].blocks[2].is_none(), "rank {rank}: dead rank present");
+            for (origin, b) in rounds[1].blocks.iter().enumerate() {
+                if let Some(b) = b {
+                    assert_eq!(
+                        b,
+                        &vec![origin as u8; 10 + origin],
+                        "rank {rank}: torn bytes leaked into origin {origin}"
+                    );
+                }
+            }
+            garbage += rounds[1].dropped_garbage;
+        }
+        // Only rank 2's ring successor (rank 3) saw the 5-byte fragment.
+        assert_eq!(garbage, 1, "the torn fragment must be dropped exactly once");
+    }
+
+    /// Byzantine torn write, *valid-envelope* prefix: rank 2's torn frame
+    /// keeps its whole 9-byte envelope (current epoch + step) followed by
+    /// a truncated body. The envelope layer cannot tell it from a healthy
+    /// frame — it is accepted, forwarded, and the dead rank's ring
+    /// predecessor (rank 1) completes the round *with* the torn block.
+    /// This is where defense-in-depth hands over: the payload-validating
+    /// reducer must reject the torn body as a named error that propagates
+    /// out of `round_reduce` (the fused COO decode does exactly this in
+    /// production), and the group then removes both rank 2 (dead) and
+    /// rank 1 (failed loudly) in one recovery.
+    #[test]
+    fn partial_write_with_valid_envelope_is_caught_by_payload_validation() {
+        let n = 4;
+        let mut specs = vec![Vec::new(); n];
+        // Rank 2's step-1 frame is 9 (envelope) + 12 (payload) = 21 bytes;
+        // keep 15 → pristine envelope, 6-byte torn body.
+        specs[2] = vec![FaultSpec::PartialSendAtStep { step: 1, keep_bytes: 15 }];
+        let mesh = LoopbackTransport::mesh(n);
+        let handles: Vec<_> = mesh
+            .into_iter()
+            .zip(specs)
+            .map(|(t, spec)| {
+                std::thread::spawn(move || {
+                    let rank = t.rank();
+                    let cfg = cfg_ms(150, 600);
+                    let mut t = FaultInjector::new(Box::new(t), spec);
+                    t.set_recv_timeout(cfg.recv_timeout());
+                    let mut m = Membership::new(rank, n);
+                    let mut ex = ElasticExchange::new(&m, cfg);
+                    let mut completed = Vec::new();
+                    for step in 0..3usize {
+                        t.on_step(step);
+                        if t.is_killed() {
+                            return (rank, completed, None);
+                        }
+                        let payload = vec![rank as u8; 10 + rank];
+                        // The payload-validating reducer every real
+                        // deployment has: a body of the wrong shape is a
+                        // named error, not data.
+                        let r = ex.round_reduce(&mut t, &mut m, step as u32, &payload, |o, b| {
+                            if b != vec![o as u8; 10 + o].as_slice() {
+                                return Err(crate::util::error::anyhow!(
+                                    "torn payload from rank {o}"
+                                ));
+                            }
+                            Ok(())
+                        });
+                        match r {
+                            Ok(_) if t.is_killed() => return (rank, completed, None),
+                            Ok(stats) => completed.push(stats),
+                            Err(_) if t.is_killed() => return (rank, completed, None),
+                            Err(e) => return (rank, completed, Some(format!("{e}"))),
+                        }
+                    }
+                    (rank, completed, None)
+                })
+            })
+            .collect();
+        let outs: Vec<_> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+        // Rank 2 died; its zombie solo round was discarded.
+        assert!(outs[2].1.len() <= 1 && outs[2].2.is_none(), "rank 2 must just die");
+        // Rank 1 — the dead rank's ring predecessor — completed the
+        // poisoned round at the old epoch and must have rejected the torn
+        // body loudly.
+        let (_, ref r1_rounds, ref r1_err) = outs[1];
+        assert_eq!(r1_rounds.len(), 1, "rank 1 completes step 0 only");
+        let e = r1_err.as_ref().expect("rank 1 must fail loudly on the torn body");
+        assert!(e.contains("torn payload from rank 2"), "{e}");
+        // Ranks 0 and 3 recover past both casualties and finish all steps.
+        for &rank in &[0usize, 3] {
+            let (_, ref rounds, ref err) = outs[rank];
+            assert!(err.is_none(), "rank {rank}: {err:?}");
+            assert_eq!(rounds.len(), 3, "rank {rank} must finish");
+            assert_eq!(rounds[1].recoveries, 1, "rank {rank}: one recovery");
+            assert_eq!(rounds[1].epoch, 1, "rank {rank}");
+            assert_eq!(rounds[1].n_blocks, 2, "rank {rank}: survivors are 0 and 3");
+            assert_eq!(rounds[2].n_blocks, 2, "rank {rank}");
+        }
     }
 
     #[test]

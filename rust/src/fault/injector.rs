@@ -32,6 +32,25 @@ pub enum FaultSpec {
     /// (outage buffering), so peers time out, recover, and the replayed
     /// round finds the rank alive again.
     FlapAtStep { step: usize, down_ms: u64 },
+    /// Byzantine duplication: every *data* frame this endpoint sends
+    /// during `step` is recorded and re-delivered verbatim at the start of
+    /// the next step — a retransmitting NIC or a middlebox replaying a
+    /// window. The copies carry the previous step's envelope, so the
+    /// elastic layer's step fencing must drop each exactly once
+    /// ([`RoundStats::dropped_stale`](super::RoundStats)).
+    DuplicateAtStep { step: usize },
+    /// Byzantine reordering: from `step`, outgoing data frames are
+    /// withheld (and the first withheld send blocks past this endpoint's
+    /// own round budget, forcing it to abort the round like a real
+    /// head-of-line blockage would) until the endpoint's first probe send
+    /// releases them — data drains before the probe, per-peer FIFO intact,
+    /// but a full round boundary late.
+    ReorderAtStep { step: usize },
+    /// Byzantine torn write: the first send of `step` delivers only the
+    /// leading `keep_bytes` of the frame, then the endpoint dies exactly
+    /// as [`FaultSpec::KillAtStep`] — a process crash mid-`write(2)`.
+    /// Peers must reject the torn frame by parse, never by trust.
+    PartialSendAtStep { step: usize, keep_bytes: usize },
 }
 
 impl FaultSpec {
@@ -39,7 +58,10 @@ impl FaultSpec {
         match self {
             FaultSpec::KillAtStep { step }
             | FaultSpec::StallAtStep { step, .. }
-            | FaultSpec::FlapAtStep { step, .. } => *step,
+            | FaultSpec::FlapAtStep { step, .. }
+            | FaultSpec::DuplicateAtStep { step }
+            | FaultSpec::ReorderAtStep { step }
+            | FaultSpec::PartialSendAtStep { step, .. } => *step,
         }
     }
 }
@@ -57,6 +79,26 @@ pub struct FaultInjector {
     /// The flap outage end, armed by [`Self::on_step`]; sends before it
     /// block until it passes.
     flap_until: Option<Instant>,
+    /// Recording data frames for Byzantine duplication this step.
+    dup_recording: bool,
+    /// Data frames recorded this step, re-delivered at the next
+    /// [`Self::on_step`] (where their envelope is one step stale).
+    dup_buffer: Vec<(usize, Vec<u8>)>,
+    /// Withholding data frames for Byzantine reordering this step.
+    reorder_armed: bool,
+    /// The reorder head-of-line block already happened (only the first
+    /// withheld send stalls).
+    reorder_stalled: bool,
+    /// Withheld data frames, released by the first probe send (or the next
+    /// [`Self::on_step`] as one-step-stale frames if no probe came).
+    reorder_buffer: Vec<(usize, Vec<u8>)>,
+    /// Pending torn write: deliver this many bytes of the next send, then
+    /// die.
+    partial_pending: Option<usize>,
+    /// Last deadline forwarded through [`Transport::set_recv_timeout`] —
+    /// the reorder stall sleeps just past it so this endpoint's own round
+    /// budget expires, mirroring real head-of-line blocking.
+    recv_timeout: Duration,
 }
 
 impl FaultInjector {
@@ -67,6 +109,13 @@ impl FaultInjector {
             killed: false,
             stall_pending: None,
             flap_until: None,
+            dup_recording: false,
+            dup_buffer: Vec::new(),
+            reorder_armed: false,
+            reorder_stalled: false,
+            reorder_buffer: Vec::new(),
+            partial_pending: None,
+            recv_timeout: Duration::from_secs(10),
         }
     }
 
@@ -79,6 +128,23 @@ impl FaultInjector {
     /// The worker loop is entering training step `step` — arm any faults
     /// scheduled for it.
     pub fn on_step(&mut self, step: usize) {
+        // First, deliver last step's Byzantine leftovers: duplicated
+        // recordings and any still-withheld reorder frames go out now,
+        // carrying the *previous* step's envelope — exactly the stale
+        // frames the elastic layer's step fencing must absorb. Delivery
+        // failures are part of the chaos (the peer may be gone).
+        let stale: Vec<(usize, Vec<u8>)> = self
+            .dup_buffer
+            .drain(..)
+            .chain(self.reorder_buffer.drain(..))
+            .collect();
+        for (to, frame) in stale {
+            let _ = self.inner.send(to, &frame);
+        }
+        self.dup_recording = false;
+        self.reorder_armed = false;
+        self.reorder_stalled = false;
+
         let (mut kill, mut stall, mut flap) = (false, None, None);
         for spec in &self.specs {
             if spec.step() != step {
@@ -88,6 +154,11 @@ impl FaultInjector {
                 FaultSpec::KillAtStep { .. } => kill = true,
                 FaultSpec::StallAtStep { stall_ms, .. } => stall = Some(stall_ms),
                 FaultSpec::FlapAtStep { down_ms, .. } => flap = Some(down_ms),
+                FaultSpec::DuplicateAtStep { .. } => self.dup_recording = true,
+                FaultSpec::ReorderAtStep { .. } => self.reorder_armed = true,
+                FaultSpec::PartialSendAtStep { keep_bytes, .. } => {
+                    self.partial_pending = Some(keep_bytes)
+                }
             }
         }
         if kill {
@@ -137,6 +208,47 @@ impl Transport for FaultInjector {
             }
             self.flap_until = None;
         }
+        // Torn write: deliver a prefix of the frame, then die mid-call —
+        // the peer holds bytes that parse to nothing (or to a valid
+        // envelope with a torn body) and must reject them by parse.
+        if let Some(keep) = self.partial_pending.take() {
+            let _ = self.inner.send(to, &payload[..keep.min(payload.len())]);
+            self.killed = true;
+            let _ = self.inner.shutdown();
+            return Err(self.dead_err());
+        }
+        // Reordering: withhold data frames until this endpoint's first
+        // probe send (which a round recovery always begins with). The
+        // first withheld send blocks past the recv deadline so this rank's
+        // own round budget expires — real head-of-line blocking stalls the
+        // sender too, and that is what keeps live and netsim trajectories
+        // aligned (the rank *observes* its own disruption).
+        if self.reorder_armed {
+            if payload.first() == Some(&1) {
+                // Probe: release withheld data first (per-peer FIFO
+                // intact), then the probe itself, then stop reordering.
+                let withheld = std::mem::take(&mut self.reorder_buffer);
+                for (peer, frame) in withheld {
+                    let _ = self.inner.send(peer, &frame);
+                }
+                self.reorder_armed = false;
+                self.reorder_stalled = false;
+                return self.inner.send(to, payload);
+            }
+            self.reorder_buffer.push((to, payload.to_vec()));
+            if !self.reorder_stalled {
+                self.reorder_stalled = true;
+                std::thread::sleep(
+                    self.recv_timeout + self.recv_timeout / 4 + Duration::from_millis(20),
+                );
+            }
+            return Ok(());
+        }
+        // Duplication: record data frames (never probes — a replayed probe
+        // would fake a recovery) for re-delivery at the next step.
+        if self.dup_recording && payload.first() == Some(&0) {
+            self.dup_buffer.push((to, payload.to_vec()));
+        }
         self.inner.send(to, payload)
     }
 
@@ -161,6 +273,7 @@ impl Transport for FaultInjector {
     }
 
     fn set_recv_timeout(&mut self, timeout: Duration) {
+        self.recv_timeout = timeout;
         self.inner.set_recv_timeout(timeout);
     }
 
@@ -249,23 +362,108 @@ mod tests {
         assert_eq!(b.recv(0).unwrap(), b"healed");
     }
 
+    /// Duplication records data frames (kind byte 0) during its step and
+    /// re-delivers them — and only them — at the next step boundary.
+    #[test]
+    fn duplicate_resends_previous_step_data_frames() {
+        let (a, mut b) = pair();
+        let mut a = FaultInjector::new(a, vec![FaultSpec::DuplicateAtStep { step: 0 }]);
+        a.on_step(0);
+        a.send(1, &[0, 1, 2, 3]).unwrap(); // data — recorded
+        a.send(1, &[1, 9]).unwrap(); // probe — never recorded
+        assert_eq!(b.recv(0).unwrap(), vec![0, 1, 2, 3]);
+        assert_eq!(b.recv(0).unwrap(), vec![1, 9]);
+        // Step boundary: the duplicated data frame arrives again, verbatim.
+        a.on_step(1);
+        assert_eq!(b.recv(0).unwrap(), vec![0, 1, 2, 3]);
+        a.send(1, &[0, 7]).unwrap();
+        assert_eq!(b.recv(0).unwrap(), vec![0, 7]);
+        // Nothing else was replayed (the probe stayed single-shot).
+        a.on_step(2);
+        b.set_recv_timeout(Duration::from_millis(30));
+        assert!(b.recv(0).is_err(), "probe frame was duplicated");
+    }
+
+    /// Reordering withholds data frames, stalls the sender past its own
+    /// recv deadline once, and releases everything — data first, then the
+    /// probe, per-peer FIFO intact — on the first probe send.
+    #[test]
+    fn reorder_withholds_data_until_first_probe() {
+        let (a, mut b) = pair();
+        let mut a = FaultInjector::new(a, vec![FaultSpec::ReorderAtStep { step: 1 }]);
+        a.set_recv_timeout(Duration::from_millis(40));
+        a.on_step(0);
+        a.send(1, &[0, 7]).unwrap();
+        assert_eq!(b.recv(0).unwrap(), vec![0, 7]);
+        a.on_step(1);
+        // First withheld send blocks past the 40 ms recv deadline.
+        let t0 = Instant::now();
+        a.send(1, &[0, 8]).unwrap();
+        assert!(t0.elapsed() >= Duration::from_millis(60), "no head-of-line stall");
+        b.set_recv_timeout(Duration::from_millis(30));
+        assert!(b.recv(0).is_err(), "withheld frame leaked");
+        // Later withheld sends don't stall again.
+        let t0 = Instant::now();
+        a.send(1, &[0, 9]).unwrap();
+        assert!(t0.elapsed() < Duration::from_millis(20));
+        // The probe releases: data in order, then the probe.
+        a.send(1, &[1, 1]).unwrap();
+        b.set_recv_timeout(Duration::from_millis(500));
+        assert_eq!(b.recv(0).unwrap(), vec![0, 8]);
+        assert_eq!(b.recv(0).unwrap(), vec![0, 9]);
+        assert_eq!(b.recv(0).unwrap(), vec![1, 1]);
+    }
+
+    /// A partial send delivers the torn prefix, then the endpoint is dead
+    /// exactly like a kill — the peer sees bytes-then-disconnect.
+    #[test]
+    fn partial_send_truncates_then_kills() {
+        let (a, mut b) = pair();
+        let mut a = FaultInjector::new(
+            a,
+            vec![FaultSpec::PartialSendAtStep { step: 0, keep_bytes: 3 }],
+        );
+        a.on_step(0);
+        let e = a.send(1, &[9, 9, 9, 9, 9, 9]).unwrap_err();
+        assert!(format!("{e}").contains("injected-kill"), "{e}");
+        assert!(a.is_killed());
+        assert!(a.send(1, b"x").is_err(), "dead endpoint accepted a send");
+        // The peer drains the torn prefix, then observes the disconnect.
+        assert_eq!(b.recv(0).unwrap(), vec![9, 9, 9]);
+        let e = b.recv(0).unwrap_err();
+        assert!(format!("{e}").contains("shut down"), "{e}");
+    }
+
     #[test]
     fn schedule_slices_per_rank() {
         let schedule = FaultSchedule {
             kills: vec![(2, 5)],
             stalls: vec![(1, 3, 50)],
             flaps: vec![(1, 7, 80)],
+            duplicates: vec![(0, 2)],
+            reorders: vec![(1, 9)],
+            partial_kills: vec![(3, 4, 5)],
         };
         assert_eq!(
             schedule.specs_for(1),
             vec![
                 FaultSpec::StallAtStep { step: 3, stall_ms: 50 },
                 FaultSpec::FlapAtStep { step: 7, down_ms: 80 },
+                FaultSpec::ReorderAtStep { step: 9 },
             ]
         );
         assert_eq!(schedule.specs_for(2), vec![FaultSpec::KillAtStep { step: 5 }]);
-        assert!(schedule.specs_for(0).is_empty());
+        assert_eq!(
+            schedule.specs_for(0),
+            vec![FaultSpec::DuplicateAtStep { step: 2 }]
+        );
+        assert_eq!(
+            schedule.specs_for(3),
+            vec![FaultSpec::PartialSendAtStep { step: 4, keep_bytes: 5 }]
+        );
         assert_eq!(schedule.kill_step(2), Some(5));
         assert_eq!(schedule.kill_step(1), None);
+        // A partial kill is still a kill for scheduling purposes.
+        assert_eq!(schedule.kill_step(3), Some(4));
     }
 }

@@ -102,11 +102,28 @@ pub struct FaultSchedule {
     /// `(rank, step, down_ms)`: the rank's link flaps down for `down_ms`
     /// starting at `step`.
     pub flaps: Vec<(usize, usize, u64)>,
+    /// `(rank, step)`: Byzantine duplication — every data frame the rank
+    /// sends during `step` is re-delivered one step later (stale-envelope
+    /// replay the step fencing must absorb without a recovery).
+    pub duplicates: Vec<(usize, usize)>,
+    /// `(rank, step)`: Byzantine reordering — the rank's data frames are
+    /// withheld across the round boundary and released behind its next
+    /// probe (peers see one recovery, nobody removed).
+    pub reorders: Vec<(usize, usize)>,
+    /// `(rank, step, keep_bytes)`: Byzantine torn write — the rank dies
+    /// mid-send at `step`, delivering only the frame's first `keep_bytes`
+    /// bytes (a kill whose last frame is garbage on the wire).
+    pub partial_kills: Vec<(usize, usize, usize)>,
 }
 
 impl FaultSchedule {
     pub fn is_empty(&self) -> bool {
-        self.kills.is_empty() && self.stalls.is_empty() && self.flaps.is_empty()
+        self.kills.is_empty()
+            && self.stalls.is_empty()
+            && self.flaps.is_empty()
+            && self.duplicates.is_empty()
+            && self.reorders.is_empty()
+            && self.partial_kills.is_empty()
     }
 
     /// The fault specs `rank`'s endpoint executes.
@@ -127,15 +144,34 @@ impl FaultSchedule {
                 specs.push(FaultSpec::FlapAtStep { step, down_ms });
             }
         }
+        for &(r, step) in &self.duplicates {
+            if r == rank {
+                specs.push(FaultSpec::DuplicateAtStep { step });
+            }
+        }
+        for &(r, step) in &self.reorders {
+            if r == rank {
+                specs.push(FaultSpec::ReorderAtStep { step });
+            }
+        }
+        for &(r, step, keep_bytes) in &self.partial_kills {
+            if r == rank {
+                specs.push(FaultSpec::PartialSendAtStep { step, keep_bytes });
+            }
+        }
         specs
     }
 
-    /// The step `rank` is scheduled to die at, if any.
+    /// The step `rank` is scheduled to die at, if any — a partial kill is
+    /// a kill (the rank is gone after its torn send), so rank-0 validation
+    /// and the mirror's death accounting cover both.
     pub fn kill_step(&self, rank: usize) -> Option<usize> {
         self.kills
             .iter()
-            .find(|&&(r, _)| r == rank)
-            .map(|&(_, step)| step)
+            .map(|&(r, step)| (r, step))
+            .chain(self.partial_kills.iter().map(|&(r, step, _)| (r, step)))
+            .find(|&(r, _)| r == rank)
+            .map(|(_, step)| step)
     }
 
     /// Largest rank referenced (for config validation).
@@ -145,6 +181,9 @@ impl FaultSchedule {
             .map(|&(r, _)| r)
             .chain(self.stalls.iter().map(|&(r, _, _)| r))
             .chain(self.flaps.iter().map(|&(r, _, _)| r))
+            .chain(self.duplicates.iter().map(|&(r, _)| r))
+            .chain(self.reorders.iter().map(|&(r, _)| r))
+            .chain(self.partial_kills.iter().map(|&(r, _, _)| r))
             .max()
     }
 }
@@ -195,10 +234,15 @@ impl SyncTrajectory {
 /// handling is schedule-deterministic; wall clock only shifts *when*
 /// recovery happens, never *what* it decides.
 ///
-/// The events mirror the live semantics: a kill always triggers a
-/// recovery (epoch +1, rank removed); a stall or flap triggers one only
-/// when it exceeds `cfg.recv_timeout_ms` (epoch +1, nobody removed —
-/// the probe round finds the straggler alive).
+/// The events mirror the live semantics: a kill — torn-write partial
+/// kills included — always triggers a recovery (epoch +1, rank removed);
+/// a stall or flap triggers one only when it exceeds
+/// `cfg.recv_timeout_ms` (epoch +1, nobody removed — the probe round
+/// finds the straggler alive). Of the Byzantine schedules, a reorder
+/// always disrupts (the reordering rank blocks past its own round budget,
+/// so the group recovers and finds everyone alive), while a duplicate is
+/// *absorbed*: the replayed frames arrive one step stale and the envelope
+/// fencing drops them without a recovery — the mirror counts nothing.
 pub fn sim_trajectory(
     world: usize,
     steps: usize,
@@ -221,8 +265,10 @@ pub fn sim_trajectory(
         let dead: Vec<usize> = schedule
             .kills
             .iter()
-            .filter(|&&(r, s)| s == step && m.is_live(r))
-            .map(|&(r, _)| r)
+            .map(|&(r, s)| (r, s))
+            .chain(schedule.partial_kills.iter().map(|&(r, s, _)| (r, s)))
+            .filter(|&(r, s)| s == step && m.is_live(r))
+            .map(|(r, _)| r)
             .collect();
         let disrupted = schedule
             .stalls
@@ -231,7 +277,14 @@ pub fn sim_trajectory(
             || schedule
                 .flaps
                 .iter()
-                .any(|&(r, s, ms)| s == step && ms > cfg.recv_timeout_ms && m.is_live(r));
+                .any(|&(r, s, ms)| s == step && ms > cfg.recv_timeout_ms && m.is_live(r))
+            // A reorder blocks its own rank past the round budget, so it
+            // always costs one recovery; duplicates are absorbed by the
+            // step fencing and never appear here.
+            || schedule
+                .reorders
+                .iter()
+                .any(|&(r, s)| s == step && m.is_live(r));
         if !dead.is_empty() || disrupted {
             m.begin_epoch(&dead);
             // The ring rebuilds over survivors: a fresh star topology per
@@ -354,12 +407,76 @@ mod tests {
         let s = FaultSchedule {
             kills: vec![(3, 9)],
             stalls: vec![(1, 2, 40)],
-            flaps: Vec::new(),
+            ..Default::default()
         };
         assert!(!s.is_empty());
         assert!(FaultSchedule::default().is_empty());
         assert_eq!(s.max_rank(), Some(3));
         assert_eq!(s.kill_step(3), Some(9));
         assert_eq!(s.kill_step(0), None);
+        // The Byzantine fields count toward emptiness and rank bounds, and
+        // a partial kill reports as a kill.
+        let b = FaultSchedule {
+            duplicates: vec![(1, 2)],
+            reorders: vec![(2, 4)],
+            partial_kills: vec![(5, 7, 3)],
+            ..Default::default()
+        };
+        assert!(!b.is_empty());
+        assert_eq!(b.max_rank(), Some(5));
+        assert_eq!(b.kill_step(5), Some(7));
+        assert_eq!(b.kill_step(1), None);
+    }
+
+    /// Duplicated frames are absorbed by the step fencing: the mirror
+    /// must show a single unbroken segment, same as no fault at all.
+    #[test]
+    fn sim_trajectory_duplicate_is_absorbed() {
+        let schedule = FaultSchedule {
+            duplicates: vec![(1, 3)],
+            ..Default::default()
+        };
+        let t = sim_trajectory(3, 8, &schedule, &FaultConfig::default(), 1_000);
+        assert_eq!(
+            t.segments,
+            vec![TrajectorySegment { epoch: 0, group_size: 3, syncs: 8 }]
+        );
+    }
+
+    /// A reorder costs one recovery — epoch bump, nobody removed — like
+    /// an over-deadline flap.
+    #[test]
+    fn sim_trajectory_reorder_bumps_epoch_without_deaths() {
+        let schedule = FaultSchedule {
+            reorders: vec![(2, 4)],
+            ..Default::default()
+        };
+        let t = sim_trajectory(3, 9, &schedule, &FaultConfig::default(), 1_000);
+        assert_eq!(
+            t.segments,
+            vec![
+                TrajectorySegment { epoch: 0, group_size: 3, syncs: 4 },
+                TrajectorySegment { epoch: 1, group_size: 3, syncs: 5 },
+            ]
+        );
+    }
+
+    /// A partial kill is a kill on the trajectory: epoch bump and the
+    /// rank removed (the torn bytes themselves are a parse-level concern
+    /// the collective tests cover).
+    #[test]
+    fn sim_trajectory_partial_kill_removes_the_rank() {
+        let schedule = FaultSchedule {
+            partial_kills: vec![(2, 5, 5)],
+            ..Default::default()
+        };
+        let t = sim_trajectory(4, 12, &schedule, &FaultConfig::default(), 1_000);
+        assert_eq!(
+            t.segments,
+            vec![
+                TrajectorySegment { epoch: 0, group_size: 4, syncs: 5 },
+                TrajectorySegment { epoch: 1, group_size: 3, syncs: 7 },
+            ]
+        );
     }
 }

@@ -77,6 +77,9 @@ fn cli() -> Cli {
                     opt("kill", "chaos: kill a rank mid-run: `<rank>:<step>`", None),
                     opt("stall", "chaos: stall a rank: `<rank>:<step>:<ms>`", None),
                     opt("flap", "chaos: flap a rank's link: `<rank>:<step>:<down_ms>`", None),
+                    opt("duplicate", "chaos: replay a rank's frames one step late: `<rank>:<step>`", None),
+                    opt("reorder", "chaos: withhold a rank's data past its round: `<rank>:<step>`", None),
+                    opt("partial-kill", "chaos: torn write then death: `<rank>:<step>:<keep_bytes>`", None),
                     opt("recv-timeout-ms", "failure detector: per-recv deadline", None),
                     opt("probe-timeout-ms", "failure detector: recovery probe deadline", None),
                 ],
@@ -330,6 +333,21 @@ fn cmd_live(args: &netsenseml::util::cli::Args) -> Result<()> {
             .ok_or_else(|| anyhow!("--flap wants `<rank>:<step>:<down_ms>`, got `{spec}`"))?;
         cfg.faults.flaps.push((rank, step, ms));
     }
+    if let Some(spec) = args.get("duplicate") {
+        let (rank, step) = parse_colon_pair(spec)
+            .ok_or_else(|| anyhow!("--duplicate wants `<rank>:<step>`, got `{spec}`"))?;
+        cfg.faults.duplicates.push((rank, step));
+    }
+    if let Some(spec) = args.get("reorder") {
+        let (rank, step) = parse_colon_pair(spec)
+            .ok_or_else(|| anyhow!("--reorder wants `<rank>:<step>`, got `{spec}`"))?;
+        cfg.faults.reorders.push((rank, step));
+    }
+    if let Some(spec) = args.get("partial-kill") {
+        let (rank, step, keep) = parse_colon_triple(spec)
+            .ok_or_else(|| anyhow!("--partial-kill wants `<rank>:<step>:<keep_bytes>`, got `{spec}`"))?;
+        cfg.faults.partial_kills.push((rank, step, keep as usize));
+    }
     if let Some(v) = args.get_u64("recv-timeout-ms")? {
         cfg.fault.recv_timeout_ms = v;
     }
@@ -358,10 +376,13 @@ fn cmd_live(args: &netsenseml::util::cli::Args) -> Result<()> {
             String::new()
         } else {
             format!(
-                ", chaos: {} kill(s) {} stall(s) {} flap(s)",
+                ", chaos: {} kill(s) {} stall(s) {} flap(s) {} dup(s) {} reorder(s) {} partial(s)",
                 opts.faults.kills.len(),
                 opts.faults.stalls.len(),
-                opts.faults.flaps.len()
+                opts.faults.flaps.len(),
+                opts.faults.duplicates.len(),
+                opts.faults.reorders.len(),
+                opts.faults.partial_kills.len()
             )
         }
     );

@@ -1,0 +1,529 @@
+//! Deterministic structured fuzzing of the wire surfaces — dependency
+//! free, seed-reproducible, corpus-pinned (DESIGN.md §3.9).
+//!
+//! Four byte formats cross a trust boundary in this crate: the
+//! length-prefixed transport frame ([`crate::transport::frame`]), the COO
+//! sparse payload ([`crate::compress::sparse`]), the 9-byte elastic
+//! envelope ([`crate::fault::parse_envelope`]), and the versioned
+//! [`Checkpoint`] blob. Each gets a **probe** here — a total function
+//! driving one input through every decoder of that surface while
+//! asserting the PR-5 corruption contract: a malformed input returns a
+//! named `Err` with the accumulator/state untouched, never panics, never
+//! scatters out of bounds; a valid input decodes identically on the fused
+//! and staged paths. The probes are the shared oracle of three layers of
+//! testing:
+//!
+//! - the lib fuzz tests below (structured generator → [`ByteMutator`] →
+//!   probe, bounded iterations, fixed seed — `NETSENSE_FUZZ_ITERS` /
+//!   `NETSENSE_FUZZ_SEED` override them, which is how `make fuzz-smoke`
+//!   runs the same harness at 10k iterations),
+//! - the committed regression corpus (`rust/tests/corpus/` replayed by
+//!   `rust/tests/fuzz_corpus.rs` — every crasher found once is pinned to
+//!   its named error forever),
+//! - ad-hoc reproduction: a corpus file plus [`probe_surface`] is a
+//!   one-line repro of any historical finding.
+//!
+//! The mutator is seeded with SplitMix64 — 64 bits of state, so a failing
+//! case reproduces from nothing but the printed seed and iteration count.
+//!
+//! ```
+//! use netsenseml::testing::fuzz::{probe_frame, ByteMutator};
+//!
+//! let mut frame = netsenseml::transport::frame::encode_frame(b"payload");
+//! assert!(probe_frame(&frame).is_ok());
+//! ByteMutator::new(2).mutate(&mut frame);
+//! let _ = probe_frame(&frame); // Ok or a named Err — never a panic
+//! ```
+
+use crate::compress::{decode_reduce_into, SparseGradient};
+use crate::compress::quantize::Precision;
+use crate::fault::{parse_envelope, write_envelope, Checkpoint, FrameKind, ENVELOPE_OVERHEAD};
+use crate::transport::frame::{decode_frame_into, encode_frame, frame_payload, read_frame_into};
+
+/// Default mutator/generator seed — override with `NETSENSE_FUZZ_SEED`.
+pub const FUZZ_SEED: u64 = 0x5eed_f055;
+
+/// The seed the fuzz harnesses run at (`NETSENSE_FUZZ_SEED` overrides the
+/// built-in [`FUZZ_SEED`]; failures print it, so any run reproduces).
+pub fn fuzz_seed() -> u64 {
+    std::env::var("NETSENSE_FUZZ_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(FUZZ_SEED)
+}
+
+/// Iterations per fuzz harness: `NETSENSE_FUZZ_ITERS` if set (the
+/// `fuzz-smoke` target runs 10_000), else `default` (kept small enough
+/// for tier-1 `cargo test`).
+pub fn fuzz_iters(default: usize) -> usize {
+    std::env::var("NETSENSE_FUZZ_ITERS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(default)
+}
+
+/// SplitMix64: the 64-bit state PRNG the fuzzer is seeded with. Distinct
+/// from the crate's simulation RNG ([`crate::util::rng::Pcg64`]) on
+/// purpose — one u64 of state means a finding replays from the seed
+/// alone, and stepping the generator can never perturb simulation
+/// streams.
+#[derive(Clone, Debug)]
+pub struct SplitMix64 {
+    state: u64,
+}
+
+impl SplitMix64 {
+    pub fn new(seed: u64) -> SplitMix64 {
+        SplitMix64 { state: seed }
+    }
+
+    /// Next 64 random bits.
+    #[inline]
+    pub fn next(&mut self) -> u64 {
+        self.state = self.state.wrapping_add(0x9e37_79b9_7f4a_7c15);
+        let mut z = self.state;
+        z = (z ^ (z >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+        z ^ (z >> 31)
+    }
+
+    /// Uniform in `[0, n)` (multiply-shift; bias is irrelevant at fuzzing
+    /// sample sizes).
+    #[inline]
+    pub fn below(&mut self, n: u64) -> u64 {
+        assert!(n > 0, "below(0)");
+        (((self.next() as u128) * (n as u128)) >> 64) as u64
+    }
+
+    /// Uniform usize in `[0, n)`.
+    #[inline]
+    pub fn index(&mut self, n: usize) -> usize {
+        self.below(n as u64) as usize
+    }
+
+    /// Bernoulli trial with probability `p`.
+    #[inline]
+    pub fn chance(&mut self, p: f64) -> bool {
+        (self.next() >> 11) as f64 * (1.0 / (1u64 << 53) as f64) < p
+    }
+}
+
+/// The byte-level mutation engine: each [`ByteMutator::mutate`] applies
+/// one to three of five mutation classes, chosen and parameterized by the
+/// SplitMix64 stream — bit flips (single-bit corruption), truncation
+/// (torn writes), length-field lies (a plausible-looking header word
+/// rewritten, targeting the u32 length/count fields every surface leads
+/// with), splice (one region copied over another — crossed frames on a
+/// desynchronized stream), and repeat-section (a slice duplicated
+/// in place — replayed or duplicated fragments).
+pub struct ByteMutator {
+    rng: SplitMix64,
+}
+
+impl ByteMutator {
+    pub fn new(seed: u64) -> ByteMutator {
+        ByteMutator {
+            rng: SplitMix64::new(seed),
+        }
+    }
+
+    /// Mutate `buf` in place (1–3 rounds). Empty buffers stay empty under
+    /// shrinking mutations but can grow back via repeat-section's cousin
+    /// (a length-lie on an empty buffer is a no-op; callers fuzz decoders
+    /// with the empty input anyway since truncation reaches it).
+    pub fn mutate(&mut self, buf: &mut Vec<u8>) {
+        let rounds = 1 + self.rng.index(3);
+        for _ in 0..rounds {
+            match self.rng.index(5) {
+                // Bit flip.
+                0 => {
+                    if !buf.is_empty() {
+                        let at = self.rng.index(buf.len());
+                        buf[at] ^= 1 << self.rng.index(8);
+                    }
+                }
+                // Truncation (possibly to empty).
+                1 => {
+                    if !buf.is_empty() {
+                        let keep = self.rng.index(buf.len());
+                        buf.truncate(keep);
+                    }
+                }
+                // Length-field lie: rewrite one u32-aligned word among the
+                // first 16 bytes — where every wire surface keeps its
+                // magic / length / count fields.
+                2 => {
+                    let words = (buf.len() / 4).min(4);
+                    if words > 0 {
+                        let at = 4 * self.rng.index(words);
+                        let lie = match self.rng.index(4) {
+                            0 => u32::MAX,               // absurd
+                            1 => (1u32 << 30) + 1,       // just over the frame cap
+                            2 => self.rng.next() as u32, // arbitrary
+                            _ => {
+                                // Off-by-a-little: the hardest class to
+                                // catch with pure randomness.
+                                let cur = u32::from_le_bytes(buf[at..at + 4].try_into().unwrap());
+                                cur.wrapping_add(self.rng.below(9) as u32).wrapping_sub(4)
+                            }
+                        };
+                        buf[at..at + 4].copy_from_slice(&lie.to_le_bytes());
+                    }
+                }
+                // Splice: copy one region over another (overwrite).
+                3 => {
+                    if buf.len() >= 2 {
+                        let n = 1 + self.rng.index(buf.len().min(16));
+                        let src = self.rng.index(buf.len() - n + 1);
+                        let dst = self.rng.index(buf.len() - n + 1);
+                        buf.copy_within(src..src + n, dst);
+                    }
+                }
+                // Repeat-section: duplicate a slice, growing the buffer
+                // (bounded so a mutation chain cannot balloon).
+                _ => {
+                    if !buf.is_empty() && buf.len() <= 1 << 16 {
+                        let n = 1 + self.rng.index(buf.len().min(16));
+                        let start = self.rng.index(buf.len() - n + 1);
+                        let at = self.rng.index(buf.len() + 1);
+                        let section: Vec<u8> = buf[start..start + n].to_vec();
+                        buf.splice(at..at, section);
+                    }
+                }
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Surface probes: total functions with the corruption contract asserted
+// inside. The returned Result is the decoder's verdict (the corpus pins
+// its Err strings); the asserts are the fuzz oracle.
+// ---------------------------------------------------------------------------
+
+/// Drive one input through the **frame** surface: the borrowing validator
+/// ([`frame_payload`]), the buffer-reusing decoder ([`decode_frame_into`]
+/// — must agree with the validator and must leave its output untouched on
+/// error), and the streaming reader ([`read_frame_into`] — any verdict is
+/// legal on a byte blob, but it must neither panic nor reserve
+/// unboundedly). Panics if any contract is violated.
+pub fn probe_frame(bytes: &[u8]) -> Result<(), String> {
+    let staged: Result<Vec<u8>, String> =
+        frame_payload(bytes).map(|p| p.to_vec()).map_err(|e| e.to_string());
+    let sentinel = vec![0xa5u8; 7];
+    let mut out = sentinel.clone();
+    match decode_frame_into(bytes, &mut out) {
+        Ok(()) => {
+            let p = staged.as_ref().expect("decode_frame_into accepted what frame_payload rejected");
+            assert_eq!(&out, p, "decode_frame_into != frame_payload");
+        }
+        Err(e) => {
+            assert!(staged.is_err(), "decode_frame_into rejected what frame_payload accepted");
+            assert_eq!(out, sentinel, "frame error path clobbered the out buffer: {e}");
+        }
+    }
+    // The same bytes as a stream: a short or lying stream must error (or
+    // yield a prefix frame), never panic, and a length lie must not turn
+    // into a huge up-front reservation (the chunked-read contract).
+    let mut cursor = std::io::Cursor::new(bytes);
+    let mut payload = Vec::new();
+    let _ = read_frame_into(&mut cursor, &mut payload);
+    // Chunked-growth bound: delivered bytes plus one 1 MiB read chunk,
+    // doubled for Vec's amortized growth — a length lie must never reserve
+    // anywhere near its declared size.
+    assert!(
+        payload.capacity() <= 2 * (bytes.len() + (1 << 20)),
+        "read_frame_into reserved {} bytes for a {}-byte stream",
+        payload.capacity(),
+        bytes.len()
+    );
+    staged.map(|_| ())
+}
+
+/// Drive one input through the **COO** surface: the fused decode-reduce
+/// ([`decode_reduce_into`], against a sentinel accumulator sized from the
+/// declared `n_total`, capped) differentially checked against the staged
+/// decode + scatter ([`SparseGradient::decode`] + `add_into`). On `Err`
+/// the accumulator must be bit-untouched (no partial scatter); on `Ok`
+/// both paths must produce bit-identical sums. Panics if violated.
+pub fn probe_coo(bytes: &[u8]) -> Result<(), String> {
+    // The accumulator a receiver would hold: the declared dense length
+    // (capped so a lying header cannot make the *harness* allocate big —
+    // past the cap the mismatch is itself a named error, which is the
+    // contract under test).
+    let n = if bytes.len() >= 4 {
+        (u32::from_le_bytes(bytes[0..4].try_into().unwrap()) as usize).min(4096)
+    } else {
+        16
+    };
+    let sentinel: Vec<f32> = (0..n).map(|i| i as f32 * 0.5 - 3.0).collect();
+    let mut fused = sentinel.clone();
+    let verdict = decode_reduce_into(bytes, &mut fused);
+    let staged = SparseGradient::decode(bytes); // must be total too
+    match &verdict {
+        Ok(out) => {
+            let s = staged
+                .as_ref()
+                .expect("fused decode-reduce accepted what staged decode rejected");
+            assert_eq!(s.nnz(), out.nnz, "fused/staged nnz diverged");
+            let mut acc = sentinel.clone();
+            s.add_into(&mut acc);
+            assert!(
+                acc.iter().zip(&fused).all(|(a, b)| a.to_bits() == b.to_bits()),
+                "fused scatter diverged from staged decode + add_into"
+            );
+        }
+        Err(e) => {
+            assert!(
+                fused.iter().zip(&sentinel).all(|(a, b)| a.to_bits() == b.to_bits()),
+                "COO error `{e}` left a partial scatter in the accumulator"
+            );
+        }
+    }
+    verdict.map(|_| ())
+}
+
+/// Drive one input through the **envelope** surface
+/// ([`parse_envelope`]): an accepted envelope must slice exactly as the
+/// manual layout says and re-encode byte-identically via
+/// [`write_envelope`]; a rejected one must name the defect. Panics if
+/// violated.
+pub fn probe_envelope(bytes: &[u8]) -> Result<(), String> {
+    match parse_envelope(bytes) {
+        Ok((kind, epoch, step, body)) => {
+            assert!(bytes.len() >= ENVELOPE_OVERHEAD);
+            assert_eq!(body.len(), bytes.len() - ENVELOPE_OVERHEAD);
+            assert_eq!(epoch, u32::from_le_bytes(bytes[1..5].try_into().unwrap()));
+            assert_eq!(step, u32::from_le_bytes(bytes[5..9].try_into().unwrap()));
+            let mut re = Vec::with_capacity(bytes.len());
+            write_envelope(kind, epoch, step, &mut re);
+            re.extend_from_slice(body);
+            assert_eq!(re, bytes, "envelope re-encode diverged");
+            Ok(())
+        }
+        Err(e) => {
+            let msg = e.to_string();
+            assert!(!msg.is_empty(), "envelope rejection must be named");
+            Err(msg)
+        }
+    }
+}
+
+/// Drive one input through the **checkpoint** surface
+/// ([`Checkpoint::decode`]): an accepted blob must re-encode to a
+/// canonical form that decodes back to the same checkpoint (flag-off
+/// slots zero; byte-stable thereafter); a rejected one names the defect.
+/// Panics if violated.
+pub fn probe_checkpoint(bytes: &[u8]) -> Result<(), String> {
+    match Checkpoint::decode(bytes) {
+        Ok(ck) => {
+            let canon = ck.encode();
+            let again = Checkpoint::decode(&canon)
+                .expect("canonical re-encode of an accepted checkpoint must decode");
+            // Bit-level comparison (re-encode) rather than PartialEq:
+            // mutated-but-accepted blobs may carry NaN residuals, which
+            // compare unequal to themselves.
+            assert_eq!(again.encode(), canon, "checkpoint decode∘encode not canonical");
+            Ok(())
+        }
+        Err(e) => Err(e.to_string()),
+    }
+}
+
+/// Dispatch a corpus entry to its surface probe (`None` for an unknown
+/// surface tag) — the replay seam `rust/tests/fuzz_corpus.rs` shares with
+/// ad-hoc reproduction.
+pub fn probe_surface(surface: &str, bytes: &[u8]) -> Option<Result<(), String>> {
+    match surface {
+        "frame" => Some(probe_frame(bytes)),
+        "coo" => Some(probe_coo(bytes)),
+        "envelope" => Some(probe_envelope(bytes)),
+        "checkpoint" => Some(probe_checkpoint(bytes)),
+        _ => None,
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Structured generators: a *valid* instance per surface, driven by the
+// same SplitMix64 stream. Mutating a valid encoding reaches the deep
+// validation paths (index ordering, residual lengths, trailing-byte
+// checks) that random bytes never get past the magic word to see.
+// ---------------------------------------------------------------------------
+
+/// A valid transport frame with a random payload (up to ~300 bytes).
+pub fn gen_frame(rng: &mut SplitMix64) -> Vec<u8> {
+    let n = rng.index(300);
+    let payload: Vec<u8> = (0..n).map(|_| rng.next() as u8).collect();
+    encode_frame(&payload)
+}
+
+/// A valid COO payload: `n_total ≤ 512` (within [`probe_coo`]'s
+/// accumulator cap), sorted distinct indices, finite values, random
+/// precision.
+pub fn gen_coo(rng: &mut SplitMix64) -> Vec<u8> {
+    let n_total = 1 + rng.index(512);
+    let nnz = rng.index(n_total.min(64) + 1);
+    // Selection sampling: nnz distinct sorted indices in [0, n_total).
+    let mut indices = Vec::with_capacity(nnz);
+    for i in 0..n_total {
+        let left = (n_total - i) as u64;
+        let need = (nnz - indices.len()) as u64;
+        if need > 0 && rng.below(left) < need {
+            indices.push(i as u32);
+        }
+    }
+    let precision = [Precision::F32, Precision::F16, Precision::Bf16][rng.index(3)];
+    let values: Vec<f32> = (0..nnz).map(|_| (rng.next() as i32 as f32) * 1e-6).collect();
+    let s = SparseGradient {
+        n_total,
+        indices,
+        values,
+        precision,
+    };
+    s.encode()
+}
+
+/// A valid elastic envelope (random kind/epoch/step) plus a random body.
+pub fn gen_envelope(rng: &mut SplitMix64) -> Vec<u8> {
+    let kind = if rng.chance(0.5) { FrameKind::Data } else { FrameKind::Probe };
+    let mut out = Vec::new();
+    write_envelope(kind, rng.next() as u32, rng.next() as u32, &mut out);
+    let n = rng.index(32);
+    out.extend((0..n).map(|_| rng.next() as u8));
+    out
+}
+
+/// A valid checkpoint blob: 1–3 compressor states with random residual
+/// lengths, optional cache fields present at random.
+pub fn gen_checkpoint(rng: &mut SplitMix64) -> Vec<u8> {
+    use crate::compress::CompressorState;
+    let n_states = 1 + rng.index(3);
+    let states: Vec<CompressorState> = (0..n_states)
+        .map(|_| {
+            let n = rng.index(48);
+            CompressorState {
+                residual: (0..n).map(|_| (rng.next() as i32 as f32) * 1e-6).collect(),
+                last_threshold: rng.chance(0.5).then(|| (rng.next() as i32 as f32) * 1e-6),
+                prune_cache: rng
+                    .chance(0.5)
+                    .then(|| ((rng.next() as i32 as f64) * 1e-6, (rng.next() as i32 as f32) * 1e-6)),
+                prune_cache_age: rng.next() as u32,
+                last_grad_l2: rng.chance(0.5).then(|| (rng.next() as i32 as f64) * 1e-6),
+            }
+        })
+        .collect();
+    Checkpoint::new(rng.next(), rng.next(), states).encode()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Generator → pristine probe (must accept) → mutate → probe (must be
+    /// total: Ok or a named Err, contract asserts inside). One harness per
+    /// surface; `NETSENSE_FUZZ_ITERS` scales it to smoke depth.
+    fn fuzz_surface(
+        name: &str,
+        gen: fn(&mut SplitMix64) -> Vec<u8>,
+        probe: fn(&[u8]) -> Result<(), String>,
+    ) {
+        let iters = fuzz_iters(400);
+        let seed = fuzz_seed();
+        let mut rng = SplitMix64::new(seed);
+        let mut mutator = ByteMutator::new(seed ^ 0x6d75_7461); // "muta"
+        let mut rejected = 0usize;
+        for i in 0..iters {
+            let mut buf = gen(&mut rng);
+            if let Err(e) = probe(&buf) {
+                panic!("{name}: pristine input rejected at iter {i} (seed {seed:#x}): {e}");
+            }
+            mutator.mutate(&mut buf);
+            match probe(&buf) {
+                Ok(()) => {}
+                Err(e) => {
+                    assert!(!e.is_empty(), "{name}: unnamed rejection at iter {i} (seed {seed:#x})");
+                    rejected += 1;
+                }
+            }
+        }
+        assert!(
+            rejected > 0,
+            "{name}: {iters} mutations never produced a rejected input (seed {seed:#x})"
+        );
+    }
+
+    #[test]
+    fn fuzz_frame_surface() {
+        fuzz_surface("frame", gen_frame, probe_frame);
+    }
+
+    #[test]
+    fn fuzz_coo_surface() {
+        fuzz_surface("coo", gen_coo, probe_coo);
+    }
+
+    #[test]
+    fn fuzz_envelope_surface() {
+        fuzz_surface("envelope", gen_envelope, probe_envelope);
+    }
+
+    #[test]
+    fn fuzz_checkpoint_surface() {
+        fuzz_surface("checkpoint", gen_checkpoint, probe_checkpoint);
+    }
+
+    /// Hostile raw bytes (no valid prefix at all) — the probes must stay
+    /// total from byte zero, including the empty input.
+    #[test]
+    fn fuzz_raw_bytes_never_panic() {
+        let mut rng = SplitMix64::new(fuzz_seed() ^ 0x7261_77);
+        for len in [0usize, 1, 3, 8, 9, 11, 12, 13, 29, 64, 257] {
+            for _ in 0..32 {
+                let buf: Vec<u8> = (0..len).map(|_| rng.next() as u8).collect();
+                let _ = probe_frame(&buf);
+                let _ = probe_coo(&buf);
+                let _ = probe_envelope(&buf);
+                let _ = probe_checkpoint(&buf);
+            }
+        }
+    }
+
+    #[test]
+    fn fuzz_mutator_is_seed_deterministic() {
+        let base = gen_frame(&mut SplitMix64::new(1));
+        let (mut a, mut b, mut c) = (base.clone(), base.clone(), base);
+        let mut ma = ByteMutator::new(7);
+        let mut mb = ByteMutator::new(7);
+        let mut mc = ByteMutator::new(8);
+        let mut other_seed_diverged = false;
+        for _ in 0..200 {
+            ma.mutate(&mut a);
+            mb.mutate(&mut b);
+            mc.mutate(&mut c);
+            assert_eq!(a, b, "same seed must produce the same mutation stream");
+            other_seed_diverged |= c != a;
+        }
+        assert!(other_seed_diverged, "a different seed never diverged");
+    }
+
+    #[test]
+    fn fuzz_generators_emit_valid_instances() {
+        let mut rng = SplitMix64::new(fuzz_seed() ^ 0x67_656e);
+        for _ in 0..50 {
+            probe_frame(&gen_frame(&mut rng)).expect("gen_frame invalid");
+            probe_coo(&gen_coo(&mut rng)).expect("gen_coo invalid");
+            probe_envelope(&gen_envelope(&mut rng)).expect("gen_envelope invalid");
+            probe_checkpoint(&gen_checkpoint(&mut rng)).expect("gen_checkpoint invalid");
+        }
+    }
+
+    #[test]
+    fn fuzz_probe_surface_dispatches_and_rejects_unknown() {
+        let mut rng = SplitMix64::new(3);
+        assert!(probe_surface("frame", &gen_frame(&mut rng)).unwrap().is_ok());
+        assert!(probe_surface("coo", &gen_coo(&mut rng)).unwrap().is_ok());
+        assert!(probe_surface("envelope", &gen_envelope(&mut rng)).unwrap().is_ok());
+        assert!(probe_surface("checkpoint", &gen_checkpoint(&mut rng)).unwrap().is_ok());
+        assert!(probe_surface("unknown-surface", b"").is_none());
+    }
+}

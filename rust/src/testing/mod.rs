@@ -1,7 +1,10 @@
 //! Test-support substrates: a proptest-style property testing harness
-//! ([`prop`]) used by unit and integration tests across the crate, and a
+//! ([`prop`]) used by unit and integration tests across the crate, a
 //! counting allocator ([`alloc`]) for allocation-regression tests and
-//! allocs-per-step bench reporting.
+//! allocs-per-step bench reporting, and the deterministic wire-surface
+//! fuzzer ([`fuzz`]) with its committed regression corpus
+//! (`rust/tests/corpus/`).
 
 pub mod alloc;
+pub mod fuzz;
 pub mod prop;

@@ -141,11 +141,26 @@ pub fn read_frame_into(r: &mut impl Read, payload: &mut Vec<u8>) -> std::io::Res
             format!("frame length {len} exceeds cap"),
         ));
     }
+    // Grow the buffer in bounded chunks as bytes actually arrive: a length
+    // prefix under the cap can still lie by hundreds of megabytes, and a
+    // single up-front `resize(len)` would hand that lie a huge reservation
+    // before the stream runs dry. Chunked, a lying header on a short
+    // stream costs at most one chunk of memory before `UnexpectedEof`.
     payload.clear();
-    payload.resize(len, 0);
-    r.read_exact(payload)?;
+    let mut filled = 0;
+    while filled < len {
+        let chunk = (len - filled).min(READ_CHUNK_BYTES);
+        payload.resize(filled + chunk, 0);
+        r.read_exact(&mut payload[filled..])?;
+        filled += chunk;
+    }
     Ok(())
 }
+
+/// Granularity of [`read_frame_into`]'s incremental buffer growth (1 MiB):
+/// the most memory a lying length prefix can reserve beyond what the
+/// stream actually delivers.
+const READ_CHUNK_BYTES: usize = 1 << 20;
 
 #[cfg(test)]
 mod tests {
@@ -238,6 +253,50 @@ mod tests {
         assert_eq!(read_frame(&mut cursor).unwrap(), b"second, longer");
         let eof = read_frame(&mut cursor).unwrap_err();
         assert_eq!(eof.kind(), std::io::ErrorKind::UnexpectedEof);
+    }
+
+    /// A length prefix over the 1 GiB cap is a named error on every
+    /// decode path — never an attempted reservation (satellite of the
+    /// fuzzing PR: the mutator's "length-field lie" class hits this).
+    #[test]
+    fn length_prefix_over_cap_is_named_error_not_reservation() {
+        let mut lie = Vec::new();
+        lie.extend_from_slice(&FRAME_MAGIC.to_le_bytes());
+        lie.extend_from_slice(&(MAX_FRAME_BYTES as u32 + 1).to_le_bytes());
+        // Borrowing validator.
+        let e = frame_payload(&lie).unwrap_err().to_string();
+        assert!(e.contains("exceeds cap"), "unexpected error: {e}");
+        // Buffer-reusing decoder: same rejection, out untouched.
+        let mut out = vec![1u8, 2, 3];
+        let e = decode_frame_into(&lie, &mut out).unwrap_err().to_string();
+        assert!(e.contains("exceeds cap"), "unexpected error: {e}");
+        assert_eq!(out, vec![1u8, 2, 3]);
+        // Streaming reader: rejected from the header alone, before any
+        // payload byte is read or reserved.
+        let mut payload = Vec::new();
+        let e = read_frame_into(&mut std::io::Cursor::new(&lie), &mut payload).unwrap_err();
+        assert_eq!(e.kind(), std::io::ErrorKind::InvalidData);
+        assert!(e.to_string().contains("exceeds cap"), "unexpected error: {e}");
+        assert_eq!(payload.capacity(), 0, "over-cap lie reserved memory");
+    }
+
+    /// An *under*-cap length lie (say 512 MiB) on a stream that dries up
+    /// must fail with EOF having reserved at most one read chunk — the
+    /// chunked-growth contract of `read_frame_into`.
+    #[test]
+    fn read_frame_into_bounds_reservation_under_length_lie() {
+        let mut lie = Vec::new();
+        lie.extend_from_slice(&FRAME_MAGIC.to_le_bytes());
+        lie.extend_from_slice(&(512u32 << 20).to_le_bytes());
+        lie.extend_from_slice(&[0xabu8; 100]); // far fewer bytes than declared
+        let mut payload = Vec::new();
+        let e = read_frame_into(&mut std::io::Cursor::new(&lie), &mut payload).unwrap_err();
+        assert_eq!(e.kind(), std::io::ErrorKind::UnexpectedEof);
+        assert!(
+            payload.capacity() <= 2 * READ_CHUNK_BYTES,
+            "length lie reserved {} bytes",
+            payload.capacity()
+        );
     }
 
     #[test]

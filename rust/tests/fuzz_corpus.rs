@@ -1,0 +1,55 @@
+//! Regression-corpus replay: every committed crasher/rejecter under
+//! `rust/tests/corpus/` must keep mapping to its pinned outcome.
+//!
+//! The corpus is the fuzzing subsystem's long-term memory: each entry is
+//! a small wire blob (frame, COO payload, epoch envelope, or checkpoint)
+//! that once exercised an interesting decoder path, pinned in
+//! `MANIFEST.tsv` to either `ok` (must decode, and re-canonicalize where
+//! the surface defines it) or a named-error substring (must be rejected
+//! with exactly that named error). A refactor that changes an error
+//! message, starts accepting a malformed input, or starts rejecting a
+//! valid one fails here — loudly, with the entry's name.
+//!
+//! Replays go through [`netsenseml::testing::fuzz::probe_surface`], the
+//! same harness the fuzz tests drive, so the full PR-5 contract (no
+//! panic, no OOB scatter, accumulator untouched on `Err`,
+//! fused-vs-staged agreement) is asserted on every entry too.
+
+use std::path::Path;
+
+#[test]
+fn corpus_replays_to_pinned_outcomes() {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("rust/tests/corpus");
+    let manifest = std::fs::read_to_string(dir.join("MANIFEST.tsv"))
+        .expect("rust/tests/corpus/MANIFEST.tsv must exist");
+    let mut n_entries = 0usize;
+    for (lineno, line) in manifest.lines().enumerate() {
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let mut cols = line.split('\t');
+        let (file, surface, expected) = match (cols.next(), cols.next(), cols.next()) {
+            (Some(f), Some(s), Some(e)) => (f, s, e),
+            _ => panic!("MANIFEST.tsv line {}: want `file\\tsurface\\texpected`", lineno + 1),
+        };
+        let bytes = std::fs::read(dir.join(file))
+            .unwrap_or_else(|e| panic!("{file}: unreadable corpus entry: {e}"));
+        let verdict = netsenseml::testing::fuzz::probe_surface(surface, &bytes)
+            .unwrap_or_else(|| panic!("{file}: unknown surface `{surface}`"));
+        match (expected, verdict) {
+            ("ok", Ok(())) => {}
+            ("ok", Err(e)) => panic!("{file}: pinned ok, now rejected: {e}"),
+            (pin, Ok(())) => panic!("{file}: pinned error `{pin}`, now accepted"),
+            (pin, Err(e)) => assert!(
+                e.contains(pin),
+                "{file}: pinned error `{pin}`, got `{e}`"
+            ),
+        }
+        n_entries += 1;
+    }
+    assert!(
+        n_entries >= 15,
+        "corpus shrank to {n_entries} entries — it only ever grows"
+    );
+}

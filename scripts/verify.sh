@@ -34,6 +34,15 @@ echo "== receive-path gates: decode-reduce corruption + zero-alloc (FAST-safe) =
 cargo test -q --lib decode_reduce
 cargo test -q --lib allocation_free
 
+# Adversarial gates, run by name for the same reason: the deterministic
+# wire-surface fuzz harness (frame codec, COO payloads, epoch envelopes,
+# checkpoints — malformed input → named Err, never a panic or OOB
+# scatter) and the committed regression corpus, every entry pinned to
+# its outcome. `make fuzz-smoke` runs the same harness at 10k iterations.
+echo "== adversarial gates: wire-surface fuzz + corpus replay (FAST-safe) =="
+cargo test -q --lib fuzz
+cargo test -q --test fuzz_corpus
+
 # Docs gate: broken intra-doc links and rustdoc warnings fail fast, and
 # every module-header example actually runs.
 echo "== cargo doc --no-deps (warnings are errors) =="
