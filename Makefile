@@ -1,5 +1,5 @@
 # Entry points referenced by the docs and code comments.
-.PHONY: artifacts verify fuzz-smoke bench-transport bench-json
+.PHONY: artifacts verify fuzz-smoke bench-transport bench-json trace-smoke
 
 # AOT-lower the JAX/Pallas models (L1+L2) to HLO text artifacts consumed by
 # the rust runtime (`--features pjrt`). Needs JAX; run once, never on the
@@ -28,11 +28,24 @@ bench-transport:
 
 # Machine-readable perf baselines: writes BENCH_compress.json (fused vs
 # staged throughput, allocs/step, parallel bucket scaling),
+# BENCH_obs.json (telemetry-on vs -off fused throughput, <2% gate),
 # BENCH_pipeline.json (pipelined vs monolithic exchange), and
 # BENCH_transport.json (frame codec, ring collectives, envelope + token
 # bucket overhead) at the repo root. NETSENSE_BENCH_FAST=1 shrinks the
 # measurement windows for CI.
 bench-json:
 	cargo bench --bench bench_compress
+	cargo bench --bench bench_obs
 	cargo bench --bench bench_pipeline
 	cargo bench --bench bench_transport
+
+# Telemetry smoke: a short healthy live run with tracing, the decision
+# journal, and a metrics snapshot enabled, then structural validation of
+# all three artifacts (Chrome-trace nesting, Prometheus cumulative
+# buckets, journal ratio chain). CI uploads the artifacts.
+trace-smoke:
+	cargo build --release
+	./target/release/netsenseml live --workers 4 --steps 12 --params 20000 \
+	  --trace-out trace_smoke.json --journal-out journal_smoke.json \
+	  --metrics-out metrics_smoke.prom
+	python3 scripts/check_trace.py trace_smoke.json metrics_smoke.prom journal_smoke.json

@@ -1,0 +1,160 @@
+//! Telemetry-overhead benchmark: the fused compress → decode-reduce step
+//! with observability ON (span ring + hot-metric observes, exactly what
+//! `experiments::live` records per step) vs OFF (disabled tracer, no
+//! observes). The two variants run in interleaved windows and compare
+//! medians, so clock drift and thermal throttling hit both equally.
+//!
+//! Emits `BENCH_obs.json` with both throughputs and the overhead
+//! percentage. The "zero-overhead" claim is enforced: in full mode an
+//! overhead above the gate fails the run (exit 1); under
+//! `NETSENSE_BENCH_FAST=1` (CI smoke, noisy shared runners) it only
+//! warns.
+
+mod common;
+
+use common::{gbps, BenchJson};
+use netsenseml::compress::{decode_reduce_into, CompressionConfig, NetSenseCompressor, Workspace};
+use netsenseml::obs::{hot, Tracer};
+use netsenseml::util::bench::bb;
+use netsenseml::util::rng::Pcg64;
+use std::time::Instant;
+
+/// Maximum tolerated telemetry-on slowdown, percent.
+const GATE_PCT: f64 = 2.0;
+
+struct Fixture {
+    comp: NetSenseCompressor,
+    grads: Vec<f32>,
+    weights: Vec<f32>,
+    ws: Workspace,
+    wire: Vec<u8>,
+    acc: Vec<f32>,
+}
+
+impl Fixture {
+    fn new(n: usize) -> Fixture {
+        let mut grads = vec![0f32; n];
+        let mut weights = vec![0f32; n];
+        let mut rng = Pcg64::new(7, 0xbe);
+        rng.fill_normal_f32(&mut grads, 0.0, 1.0);
+        rng.fill_normal_f32(&mut weights, 0.0, 0.1);
+        Fixture {
+            comp: NetSenseCompressor::new(n, CompressionConfig::default()),
+            grads,
+            weights,
+            ws: Workspace::new(),
+            wire: Vec::new(),
+            acc: vec![0f32; n],
+        }
+    }
+
+    /// One fused step with no telemetry in the path.
+    fn step_off(&mut self) {
+        self.wire.clear();
+        self.comp
+            .compress_payload_into(&self.grads, &self.weights, 0.05, &mut self.ws, &mut self.wire);
+        self.acc.iter_mut().for_each(|a| *a = 0.0);
+        bb(decode_reduce_into(bb(&self.wire), &mut self.acc).unwrap());
+    }
+
+    /// The same step wrapped exactly the way `experiments::live` wraps
+    /// it: step/compress/decode spans plus the per-step hot observes.
+    fn step_on(&mut self, tracer: &mut Tracer) {
+        let om = hot();
+        let sp_step = tracer.start("step", 0);
+        let sp_c = tracer.start("compress", 0);
+        let t_c = Instant::now();
+        self.wire.clear();
+        self.comp
+            .compress_payload_into(&self.grads, &self.weights, 0.05, &mut self.ws, &mut self.wire);
+        om.compress_ns.observe(t_c.elapsed().as_nanos() as u64);
+        tracer.end(sp_c);
+        om.bytes_sent_total.add(self.wire.len() as u64);
+        self.acc.iter_mut().for_each(|a| *a = 0.0);
+        let sp_d = tracer.start("decode", 0);
+        let t_d = Instant::now();
+        bb(decode_reduce_into(bb(&self.wire), &mut self.acc).unwrap());
+        om.decode_ns.observe(t_d.elapsed().as_nanos() as u64);
+        tracer.end(sp_d);
+        om.rounds_total.inc();
+        tracer.end(sp_step);
+    }
+}
+
+fn median(xs: &mut [f64]) -> f64 {
+    xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    xs[xs.len() / 2]
+}
+
+fn main() {
+    let fast = std::env::var("NETSENSE_BENCH_FAST").ok().as_deref() == Some("1");
+    let n = if fast { 1 << 16 } else { 1 << 18 };
+    let (windows, iters) = if fast { (5, 20) } else { (11, 60) };
+
+    let mut fx = Fixture::new(n);
+    let mut tracer = Tracer::new(0, 4096, Instant::now());
+
+    // Warm both variants: first-touch faults, registry registration, and
+    // wire-buffer growth all happen here, outside the timed windows.
+    for _ in 0..iters {
+        fx.step_off();
+        fx.step_on(&mut tracer);
+    }
+
+    let mut off_s: Vec<f64> = Vec::with_capacity(windows);
+    let mut on_s: Vec<f64> = Vec::with_capacity(windows);
+    for w in 0..windows {
+        // Alternate which variant goes first so slow drift cancels.
+        for leg in 0..2 {
+            let on_leg = (w + leg) % 2 == 1;
+            let t0 = Instant::now();
+            for _ in 0..iters {
+                if on_leg {
+                    fx.step_on(&mut tracer);
+                } else {
+                    fx.step_off();
+                }
+            }
+            let dt = t0.elapsed().as_secs_f64() / iters as f64;
+            if on_leg {
+                on_s.push(dt);
+            } else {
+                off_s.push(dt);
+            }
+        }
+    }
+    let off_med = median(&mut off_s);
+    let on_med = median(&mut on_s);
+    let off_gbps = gbps(n, std::time::Duration::from_secs_f64(off_med));
+    let on_gbps = gbps(n, std::time::Duration::from_secs_f64(on_med));
+    let overhead_pct = (on_med - off_med) / off_med * 100.0;
+
+    println!(
+        "fused step ({n} params, ratio 0.05): telemetry off {off_gbps:.2} GB/s, \
+         on {on_gbps:.2} GB/s — overhead {overhead_pct:+.2}% (gate {GATE_PCT}%)"
+    );
+
+    let mut json = BenchJson::new("obs");
+    json.set("n_params", n as u64);
+    json.set("windows", windows as u64);
+    json.set("iters_per_window", iters as u64);
+    json.set("fused_off_gbps", off_gbps);
+    json.set("fused_on_gbps", on_gbps);
+    json.set("overhead_pct", overhead_pct);
+    json.set("gate_pct", GATE_PCT);
+    json.write();
+
+    if overhead_pct > GATE_PCT {
+        if fast {
+            eprintln!(
+                "WARNING: telemetry overhead {overhead_pct:.2}% exceeds the {GATE_PCT}% gate \
+                 (fast mode: warn only)"
+            );
+        } else {
+            eprintln!(
+                "FAIL: telemetry overhead {overhead_pct:.2}% exceeds the {GATE_PCT}% gate"
+            );
+            std::process::exit(1);
+        }
+    }
+}

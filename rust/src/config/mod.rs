@@ -3,12 +3,12 @@
 //!
 //! Two shapes: [`TrainConfig`] for simulated runs (`[train]` / `[net]` /
 //! `[pipeline]`) and [`LiveConfig`] for live-socket runs (`[transport]` /
-//! `[live]`, see `configs/live.toml`). The live tables reject unknown
-//! keys — a typo in a transport knob must fail loudly, not silently fall
-//! back to a default backend.
+//! `[live]` / `[fault]` / `[obs]`, see `configs/live.toml`). The live
+//! tables reject unknown keys — a typo in a transport knob must fail
+//! loudly, not silently fall back to a default backend.
 
 use crate::coordinator::PipelineConfig;
-use crate::experiments::live::{LiveBackend, LiveOpts};
+use crate::experiments::live::{LiveBackend, LiveOpts, ObsOpts};
 use crate::experiments::scenario::RunOpts;
 use crate::fault::{FaultConfig, FaultSchedule};
 use crate::transport::ShapingConfig;
@@ -208,6 +208,9 @@ const LIVE_KEYS: &[&str] = &[
     "live.seed",
 ];
 
+/// Keys accepted under `[obs]` (telemetry capture).
+const OBS_KEYS: &[&str] = &["obs.trace", "obs.trace_capacity", "obs.journal"];
+
 /// Keys accepted under `[fault]` (failure detector + chaos schedule).
 const FAULT_KEYS: &[&str] = &[
     "fault.recv_timeout_ms",
@@ -246,6 +249,17 @@ fn get_str_strict<'a>(doc: &'a TomlDoc, path: &str) -> Result<Option<&'a str>> {
             .as_str()
             .map(Some)
             .ok_or_else(|| anyhow!("{path} must be a string")),
+    }
+}
+
+/// Boolean lookup that errors on a wrong-typed value.
+fn get_bool_strict(doc: &TomlDoc, path: &str) -> Result<Option<bool>> {
+    match doc.get(path) {
+        None => Ok(None),
+        Some(v) => v
+            .as_bool()
+            .map(Some)
+            .ok_or_else(|| anyhow!("{path} must be a boolean")),
     }
 }
 
@@ -421,6 +435,31 @@ pub struct LiveConfig {
     pub fault: FaultConfig,
     /// Chaos schedule (kills / stalls / link flaps, by rank and step).
     pub faults: FaultSchedule,
+    /// Telemetry capture (`[obs]`).
+    pub obs: ObsConfig,
+}
+
+/// The `[obs]` table: what telemetry a live run captures beyond the
+/// always-on metrics registry.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ObsConfig {
+    /// Record per-rank tracing spans (Chrome `trace_event` export).
+    pub trace: bool,
+    /// Span-ring capacity per rank.
+    pub trace_capacity: usize,
+    /// Record rank 0's controller decision journal.
+    pub journal: bool,
+}
+
+impl Default for ObsConfig {
+    fn default() -> Self {
+        let d = ObsOpts::default();
+        ObsConfig {
+            trace: d.trace,
+            trace_capacity: d.trace_capacity,
+            journal: d.journal,
+        }
+    }
 }
 
 impl Default for LiveConfig {
@@ -434,6 +473,7 @@ impl Default for LiveConfig {
             seed: 42,
             fault: FaultConfig::default(),
             faults: FaultSchedule::default(),
+            obs: ObsConfig::default(),
         }
     }
 }
@@ -451,14 +491,17 @@ impl LiveConfig {
         // live configs know exactly three tables.
         for key in doc.entries.keys() {
             let section = key.split('.').next().unwrap_or(key);
-            if section != "transport" && section != "live" && section != "fault" {
+            if section != "transport" && section != "live" && section != "fault" && section != "obs"
+            {
                 return Err(anyhow!(
-                    "unknown section or key `{key}` (live configs use [transport], [live] and [fault])"
+                    "unknown section or key `{key}` (live configs use [transport], [live], \
+                     [fault] and [obs])"
                 ));
             }
         }
         reject_unknown_keys(&doc, "live", LIVE_KEYS)?;
         reject_unknown_keys(&doc, "fault", FAULT_KEYS)?;
+        reject_unknown_keys(&doc, "obs", OBS_KEYS)?;
         let mut c = LiveConfig {
             transport: TransportConfig::from_toml_doc(&doc)?,
             ..Default::default()
@@ -520,6 +563,15 @@ impl LiveConfig {
                 .map(|r| (r[0] as usize, r[1] as usize, r[2] as usize))
                 .collect();
         }
+        if let Some(v) = get_bool_strict(&doc, "obs.trace")? {
+            c.obs.trace = v;
+        }
+        if let Some(v) = get_nonneg(&doc, "obs.trace_capacity")? {
+            c.obs.trace_capacity = v as usize;
+        }
+        if let Some(v) = get_bool_strict(&doc, "obs.journal")? {
+            c.obs.journal = v;
+        }
         c.validate()?;
         Ok(c)
     }
@@ -551,6 +603,10 @@ impl LiveConfig {
                 ));
             }
         }
+        if self.obs.trace && self.obs.trace_capacity == 0 {
+            // A zero-capacity ring would silently record nothing.
+            return Err(anyhow!("obs.trace_capacity must be ≥ 1 when obs.trace is on"));
+        }
         Ok(())
     }
 
@@ -568,6 +624,11 @@ impl LiveConfig {
             seed: self.seed,
             fault: self.fault.clone(),
             faults: self.faults.clone(),
+            obs: ObsOpts {
+                trace: self.obs.trace,
+                trace_capacity: self.obs.trace_capacity,
+                journal: self.obs.journal,
+            },
         }
     }
 }
@@ -786,6 +847,35 @@ partial_kill = [[2, 9, 5]]
         assert!(LiveConfig::from_toml("[fault]\npartial_kill = [[1, 2]]").is_err());
         // Zero deadlines would make every round a recovery.
         assert!(LiveConfig::from_toml("[fault]\nrecv_timeout_ms = 0").is_err());
+    }
+
+    #[test]
+    fn obs_table_parses_and_rejects_bad_values() {
+        // Default: everything off, the always-on registry aside.
+        let c = LiveConfig::from_toml("[transport]\nn_workers = 2").unwrap();
+        assert!(!c.obs.trace && !c.obs.journal);
+        let c = LiveConfig::from_toml(
+            r#"
+[obs]
+trace = true
+trace_capacity = 512
+journal = true
+"#,
+        )
+        .unwrap();
+        assert!(c.obs.trace && c.obs.journal);
+        assert_eq!(c.obs.trace_capacity, 512);
+        let opts = c.live_opts();
+        assert!(opts.obs.trace && opts.obs.journal);
+        assert_eq!(opts.obs.trace_capacity, 512);
+        // A typo must fail loudly.
+        let e = LiveConfig::from_toml("[obs]\ntracing = true").unwrap_err();
+        assert!(format!("{e:#}").contains("unknown key"), "{e:#}");
+        // Wrong types and a useless zero-capacity ring are errors.
+        assert!(LiveConfig::from_toml("[obs]\ntrace = 1").is_err());
+        assert!(LiveConfig::from_toml("[obs]\njournal = \"yes\"").is_err());
+        assert!(LiveConfig::from_toml("[obs]\ntrace_capacity = -1").is_err());
+        assert!(LiveConfig::from_toml("[obs]\ntrace = true\ntrace_capacity = 0").is_err());
     }
 
     #[test]

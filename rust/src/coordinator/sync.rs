@@ -329,6 +329,7 @@ impl SyncEngine {
                 c.import_state(s);
             }
         }
+        crate::obs::hot().checkpoint_restores_total.inc();
         Ok(())
     }
 
@@ -360,6 +361,7 @@ impl SyncEngine {
         weights: &[f32],
     ) -> Result<SyncOutcome> {
         assert_eq!(grads.len(), self.n_workers, "one gradient per worker");
+        crate::obs::hot().sim_syncs_total.inc();
         match self.strategy.clone() {
             SyncStrategy::AllReduce => {
                 let dense_bytes = 4 * self.n_params as u64;

@@ -45,7 +45,10 @@ use crate::fault::{
     ElasticExchange, FaultConfig, FaultInjector, FaultSchedule, Membership, SyncTrajectory,
 };
 use crate::netsim::SimTime;
-use crate::sensing::RatioController;
+use crate::obs::{
+    self, chrome_trace_json, DecisionJournal, DecisionKind, DecisionRecord, SpanRecord, Tracer,
+};
+use crate::sensing::{Branch, Phase, RatioController};
 use crate::transport::{
     LoopbackTransport, ShapedTransport, ShapingConfig, TcpTransport, Transport,
 };
@@ -83,6 +86,43 @@ pub struct LiveOpts {
     pub faults: FaultSchedule,
     /// Failure-detector deadlines (recv + probe).
     pub fault: FaultConfig,
+    /// Telemetry capture (spans + decision journal). Off by default; the
+    /// always-on metrics registry ([`crate::obs::hot`]) ticks regardless.
+    pub obs: ObsOpts,
+}
+
+/// What telemetry a live run captures beyond the always-on registry.
+#[derive(Clone, Debug)]
+pub struct ObsOpts {
+    /// Record per-rank tracing spans (step/compress/round/decode) into
+    /// preallocated rings, exported via [`LiveReport::trace_json`].
+    pub trace: bool,
+    /// Span-ring capacity per rank (oldest spans overwritten past it).
+    pub trace_capacity: usize,
+    /// Record rank 0's controller decision journal, exported via
+    /// [`LiveReport::journal_json`].
+    pub journal: bool,
+}
+
+impl Default for ObsOpts {
+    fn default() -> Self {
+        ObsOpts {
+            trace: false,
+            trace_capacity: 4096,
+            journal: false,
+        }
+    }
+}
+
+impl ObsOpts {
+    /// Everything on — what `--trace-out`/`--journal-out` runs use.
+    pub fn all() -> ObsOpts {
+        ObsOpts {
+            trace: true,
+            trace_capacity: 4096,
+            journal: true,
+        }
+    }
 }
 
 impl Default for LiveOpts {
@@ -98,6 +138,7 @@ impl Default for LiveOpts {
             seed: 42,
             faults: FaultSchedule::default(),
             fault: FaultConfig::default(),
+            obs: ObsOpts::default(),
         }
     }
 }
@@ -142,6 +183,15 @@ pub struct LiveReport {
     pub lost_intervals: u64,
     /// Live ranks at the end of the run.
     pub final_live: usize,
+    /// Tracing spans from every rank, merged and start-ordered (empty
+    /// unless [`ObsOpts::trace`] was set).
+    pub spans: Vec<SpanRecord>,
+    /// Spans overwritten by ring wrap, summed across ranks.
+    pub spans_dropped: u64,
+    /// Rank 0's decision journal (empty unless [`ObsOpts::journal`]).
+    pub journal: Vec<DecisionRecord>,
+    /// Journal records refused past capacity.
+    pub journal_dropped: u64,
 }
 
 impl LiveReport {
@@ -178,6 +228,18 @@ impl LiveReport {
         }
         t
     }
+
+    /// The run's spans as Chrome `trace_event` JSON — load in Perfetto or
+    /// `chrome://tracing` (one track per rank).
+    pub fn trace_json(&self) -> String {
+        chrome_trace_json(&self.spans)
+    }
+
+    /// The run's decision journal as a JSON document
+    /// ([`crate::obs::journal`] schema).
+    pub fn journal_json(&self) -> String {
+        obs::journal::records_to_json(&self.journal, self.journal_dropped)
+    }
 }
 
 struct WorkerOut {
@@ -192,6 +254,10 @@ struct WorkerOut {
     killed: bool,
     recoveries: u64,
     lost_intervals: u64,
+    spans: Vec<SpanRecord>,
+    spans_dropped: u64,
+    journal: Vec<DecisionRecord>,
+    journal_dropped: u64,
 }
 
 /// Run a live training exchange; blocks until every worker finishes.
@@ -223,6 +289,7 @@ pub fn run_live(opts: &LiveOpts) -> Result<LiveReport> {
                     })
                     .collect(),
                 opts,
+                t0,
             )?
         }
         LiveBackend::Tcp { bind } => {
@@ -242,7 +309,7 @@ pub fn run_live(opts: &LiveOpts) -> Result<LiveReport> {
                     Ok(boxed(TcpTransport::join(&addr, rank, world)?, &opts_r))
                 }));
             }
-            spawn_and_join_boxed(builders, opts)?
+            spawn_and_join_boxed(builders, opts, t0)?
         }
     };
     let wall_s = t0.elapsed().as_secs_f64();
@@ -257,7 +324,15 @@ pub fn run_live(opts: &LiveOpts) -> Result<LiveReport> {
         let k = o.hashes.len().min(rank0.hashes.len());
         o.hashes[..k] == rank0.hashes[..k] && (o.killed || o.hashes.len() == rank0.hashes.len())
     });
+    // Merge every rank's span ring into one start-ordered timeline (all
+    // tracers share `t0` as their clock origin, so the ranks line up).
+    let mut spans: Vec<SpanRecord> = outs.iter().flat_map(|o| o.spans.iter().copied()).collect();
+    spans.sort_by_key(|s| (s.start_ns, s.rank, s.id));
     Ok(LiveReport {
+        spans,
+        spans_dropped: outs.iter().map(|o| o.spans_dropped).sum(),
+        journal: rank0.journal.clone(),
+        journal_dropped: rank0.journal_dropped,
         consistent,
         final_ratio: rank0.final_ratio,
         controller_decreases: rank0.decreases,
@@ -285,6 +360,7 @@ fn boxed<T: Transport + 'static>(t: T, opts: &LiveOpts) -> Box<dyn Transport> {
 fn spawn_and_join(
     builders: Vec<impl FnOnce() -> Box<dyn Transport> + Send + 'static>,
     opts: &LiveOpts,
+    origin: Instant,
 ) -> Result<Vec<WorkerOut>> {
     spawn_and_join_boxed(
         builders
@@ -294,18 +370,20 @@ fn spawn_and_join(
             })
             .collect(),
         opts,
+        origin,
     )
 }
 
 fn spawn_and_join_boxed(
     builders: Vec<Box<dyn FnOnce() -> Result<Box<dyn Transport>> + Send>>,
     opts: &LiveOpts,
+    origin: Instant,
 ) -> Result<Vec<WorkerOut>> {
     let handles: Vec<_> = builders
         .into_iter()
         .map(|b| {
             let opts = opts.clone();
-            std::thread::spawn(move || -> Result<WorkerOut> { run_worker(b()?, &opts) })
+            std::thread::spawn(move || -> Result<WorkerOut> { run_worker(b()?, &opts, origin) })
         })
         .collect();
     // Join every thread before surfacing any error — returning early
@@ -342,10 +420,27 @@ fn accumulate_dense(acc: &mut [f32], block: &[u8]) -> Result<()> {
 }
 
 /// One worker's whole run: the elastic training loop.
-fn run_worker(t: Box<dyn Transport>, opts: &LiveOpts) -> Result<WorkerOut> {
+fn run_worker(t: Box<dyn Transport>, opts: &LiveOpts, origin: Instant) -> Result<WorkerOut> {
     let rank = t.rank();
     let np = opts.n_params;
     let started = Instant::now();
+
+    // Telemetry: per-rank span ring (all ranks share `origin`, so the
+    // merged timeline lines up), rank 0's decision journal, and the
+    // always-on metric handles. Everything here is preallocated — the
+    // training loop below stays allocation-free with telemetry enabled
+    // (gated by the `obs` zero-alloc test).
+    let mut tracer = if opts.obs.trace {
+        Tracer::new(rank, opts.obs.trace_capacity, origin)
+    } else {
+        Tracer::disabled()
+    };
+    let mut journal = if opts.obs.journal && rank == 0 {
+        DecisionJournal::with_capacity(2 * opts.steps + 8)
+    } else {
+        DecisionJournal::disabled()
+    };
+    let om = obs::hot();
 
     // Fault layer: the injector executes this rank's chaos slice (a
     // pass-through when none is scheduled); membership + elastic exchange
@@ -399,6 +494,9 @@ fn run_worker(t: Box<dyn Transport>, opts: &LiveOpts) -> Result<WorkerOut> {
             (None, SyncStrategy::TopK(r)) => *r,
             (None, _) => 1.0,
         };
+        let sp_step = tracer.start("step", step as u32);
+        let sp_compress = tracer.start("compress", step as u32);
+        let t_compress = Instant::now();
         wire.clear();
         match compressor.as_mut() {
             Some(comp) => {
@@ -421,21 +519,31 @@ fn run_worker(t: Box<dyn Transport>, opts: &LiveOpts) -> Result<WorkerOut> {
         // scatter straight into the reused dense accumulator, dense
         // baselines accumulate raw f32 blocks. Same adds in the same
         // order as the old decode → sparse-sum path — bit-identical.
+        om.compress_ns
+            .observe(t_compress.elapsed().as_nanos() as u64);
+        tracer.end(sp_compress);
         let mut max_payload = 0u64;
         let sparse = compressor.is_some();
         mean.iter_mut().for_each(|m| *m = 0.0);
+        let sp_round = tracer.start("round", step as u32);
         let round = {
             let mean = &mut mean;
+            let tr = &mut tracer;
             exchange.round_reduce(&mut t, &mut membership, step as u32, &wire, |_, b| {
                 max_payload = max_payload.max(b.len() as u64);
-                if sparse {
-                    decode_reduce_into(b, mean).map_err(|e| anyhow!("{e}"))?;
+                let sp_decode = tr.start("decode", step as u32);
+                let t_decode = Instant::now();
+                let r = if sparse {
+                    decode_reduce_into(b, mean).map_err(|e| anyhow!("{e}"))
                 } else {
-                    accumulate_dense(mean, b)?;
-                }
-                Ok(())
+                    accumulate_dense(mean, b)
+                };
+                om.decode_ns.observe(t_decode.elapsed().as_nanos() as u64);
+                tr.end(sp_decode);
+                r
             })
         };
+        tracer.end(sp_round);
         let round = match round {
             // A rank killed mid-round (e.g. a torn partial write) can
             // still "complete" the round solo: its probe sends all fail,
@@ -457,9 +565,41 @@ fn run_worker(t: Box<dyn Transport>, opts: &LiveOpts) -> Result<WorkerOut> {
         if round.lost {
             lost_intervals += 1;
         }
+        if round.recoveries > 0 {
+            // Zero-width marker: the recovery itself ran inside the round
+            // span; its latency lands in the `recovery_us` histogram.
+            let sp = tracer.start("recovery", step as u32);
+            tracer.end(sp);
+        }
+        om.rtt_us.observe(round.elapsed.as_micros() as u64);
         let scale = 1.0 / round.n_blocks.max(1) as f32;
         for m in mean.iter_mut() {
             *m *= scale;
+        }
+        journal.push(DecisionRecord {
+            kind: DecisionKind::Round,
+            rank,
+            step: step as u32,
+            epoch: round.epoch as u32,
+            live: membership.n_live(),
+            rtt_us: round.elapsed.as_micros() as u64,
+            payload_bytes: max_payload,
+            lost: round.lost,
+            recoveries: round.recoveries as u32,
+            dropped_stale: round.dropped_stale as u32,
+            dropped_garbage: round.dropped_garbage as u32,
+            ..DecisionRecord::default()
+        });
+        if round.recoveries > 0 {
+            journal.push(DecisionRecord {
+                kind: DecisionKind::Membership,
+                rank,
+                step: step as u32,
+                epoch: round.epoch as u32,
+                live: membership.n_live(),
+                recoveries: round.recoveries as u32,
+                ..DecisionRecord::default()
+            });
         }
         if let Some(ctl) = controller.as_mut() {
             // The paper's Algorithm 1 observation: this interval's data
@@ -468,6 +608,41 @@ fn run_worker(t: Box<dyn Transport>, opts: &LiveOpts) -> Result<WorkerOut> {
             // the live wiring of the controller's backoff trigger.
             let rtt = SimTime::from_secs_f64(round.elapsed.as_secs_f64().max(1e-6));
             ctl.on_interval(max_payload.max(1), rtt, round.lost);
+            if let Some(tr) = ctl.last_transition() {
+                match tr.branch {
+                    Branch::Backoff => om.ctl_backoffs_total.inc(),
+                    Branch::Increase | Branch::StartupRamp => om.ctl_increases_total.inc(),
+                    Branch::Hold => {}
+                }
+                journal.push(DecisionRecord {
+                    kind: DecisionKind::Ratio,
+                    rank,
+                    step: step as u32,
+                    epoch: round.epoch as u32,
+                    live: membership.n_live(),
+                    rtt_us: (tr.rtt.as_secs_f64() * 1e6) as u64,
+                    payload_bytes: tr.data_size_bytes,
+                    lost: tr.lost,
+                    phase_netsense: tr.phase_after == Phase::NetSense,
+                    old_ratio: tr.old_ratio,
+                    new_ratio: tr.new_ratio,
+                    predicted_wire_bytes: compressor
+                        .as_ref()
+                        .map(|c| c.predict_wire_bytes(tr.new_ratio))
+                        .unwrap_or(0),
+                    ..DecisionRecord::default()
+                });
+            }
+        }
+        if rank == 0 {
+            om.ratio.set(
+                controller
+                    .as_ref()
+                    .map(|c| c.ratio())
+                    .unwrap_or(ratio),
+            );
+            om.live_ranks.set(membership.n_live() as f64);
+            om.epoch.set(round.epoch as f64);
         }
         hashes.push(hash_f32s(&mean));
         trace.push(LiveStepRecord {
@@ -484,12 +659,15 @@ fn run_worker(t: Box<dyn Transport>, opts: &LiveOpts) -> Result<WorkerOut> {
             live: membership.n_live(),
             lost: round.lost,
         });
+        tracer.end(sp_step);
     }
     t.shutdown()?;
     let (decreases, increases, final_ratio) = match &controller {
         Some(c) => (c.n_decreases, c.n_increases, c.ratio()),
         None => (0, 0, trace.last().map(|r| r.ratio).unwrap_or(1.0)),
     };
+    let spans_dropped = tracer.dropped();
+    let journal_dropped = journal.dropped();
     Ok(WorkerOut {
         rank,
         hashes,
@@ -500,6 +678,10 @@ fn run_worker(t: Box<dyn Transport>, opts: &LiveOpts) -> Result<WorkerOut> {
         killed,
         recoveries,
         lost_intervals,
+        spans: tracer.drain(),
+        spans_dropped,
+        journal: journal.records().to_vec(),
+        journal_dropped,
     })
 }
 
@@ -519,6 +701,107 @@ fn hash_f32s(xs: &[f32]) -> u64 {
 mod tests {
     use super::*;
     use crate::fault::sim_trajectory;
+    use crate::util::json::Json;
+
+    /// THE observability acceptance check (ISSUE): a 4-worker live run
+    /// with telemetry on emits (1) a Perfetto-loadable trace with spans
+    /// from every rank, (2) a decision journal whose Ratio chain equals
+    /// the run's per-step ratio trajectory and whose Round records walk
+    /// the run's epoch/live trajectory, and (3) a Prometheus snapshot
+    /// carrying the run's counters.
+    #[test]
+    fn obs_live_run_emits_trace_journal_and_metrics() {
+        let opts = LiveOpts {
+            n_workers: 4,
+            steps: 10,
+            n_params: 20_000,
+            obs: ObsOpts::all(),
+            ..Default::default()
+        };
+        let report = run_live(&opts).unwrap();
+        assert!(report.consistent);
+
+        // Spans: every rank traced, nothing dropped, all labels present,
+        // no negative durations, one "step" span per step on rank 0.
+        assert_eq!(report.spans_dropped, 0);
+        for rank in 0..4usize {
+            assert!(
+                report.spans.iter().any(|s| s.rank == rank),
+                "rank {rank} produced no spans"
+            );
+        }
+        for label in ["step", "compress", "round", "decode"] {
+            assert!(
+                report.spans.iter().any(|s| s.label == label),
+                "no {label} spans"
+            );
+        }
+        assert!(report.spans.iter().all(|s| s.end_ns >= s.start_ns));
+        assert_eq!(
+            report
+                .spans
+                .iter()
+                .filter(|s| s.rank == 0 && s.label == "step")
+                .count(),
+            10
+        );
+        // The Chrome trace parses and carries every span.
+        let doc = Json::parse(&report.trace_json()).expect("trace JSON parses");
+        let events = doc.get("traceEvents").and_then(|e| e.as_arr()).unwrap();
+        assert_eq!(events.len(), report.spans.len());
+
+        // Journal: one Ratio record per step; its old→new chain must be
+        // exactly the per-step ratio trajectory the run reported.
+        let ratios: Vec<&DecisionRecord> = report
+            .journal
+            .iter()
+            .filter(|r| r.kind == DecisionKind::Ratio)
+            .collect();
+        assert_eq!(ratios.len(), report.steps.len());
+        for (s, r) in report.steps.iter().zip(&ratios) {
+            assert_eq!(r.old_ratio, s.ratio, "old_ratio mismatch at step {}", s.step);
+            assert!(r.predicted_wire_bytes > 0);
+            assert!(r.rtt_us > 0);
+        }
+        for (next, r) in report.steps.iter().skip(1).zip(&ratios) {
+            assert_eq!(
+                r.new_ratio, next.ratio,
+                "new_ratio mismatch before step {}",
+                next.step
+            );
+        }
+
+        // Round records walk the same (epoch, live) trajectory as the
+        // run report — i.e. the same story the netsim mirror tells.
+        let jt = obs::journal::epoch_trajectory_of(&report.journal);
+        let mut st: Vec<(u32, usize)> = Vec::new();
+        for s in &report.steps {
+            if st.last() != Some(&(s.epoch as u32, s.live)) {
+                st.push((s.epoch as u32, s.live));
+            }
+        }
+        assert_eq!(jt, st);
+        assert_eq!(report.journal_dropped, 0);
+        let jdoc = Json::parse(&report.journal_json()).expect("journal JSON parses");
+        assert_eq!(
+            jdoc.get("records").and_then(|r| r.as_arr()).unwrap().len(),
+            report.journal.len()
+        );
+
+        // The registry saw the run.
+        let snap = crate::obs::registry().prometheus();
+        for name in [
+            "netsense_rounds_total",
+            "netsense_rtt_us",
+            "netsense_round_us",
+            "netsense_compress_ns",
+            "netsense_decode_ns",
+            "netsense_frame_bytes",
+            "netsense_ratio",
+        ] {
+            assert!(snap.contains(name), "{name} missing from snapshot");
+        }
+    }
 
     #[test]
     fn loopback_netsense_run_is_consistent_and_senses() {
@@ -654,6 +937,7 @@ mod tests {
                 recv_timeout_ms: 150,
                 probe_timeout_ms: 800,
             },
+            obs: ObsOpts::all(),
             ..Default::default()
         };
         let report = run_live(&opts).unwrap();
@@ -677,6 +961,23 @@ mod tests {
         let mirror = sim_trajectory(4, 14, &opts.faults, &opts.fault, 20_000);
         assert_eq!(report.trajectory().segments, mirror.segments);
         assert!(mirror.vtime_s > 0.0);
+        // The decision journal tells the same story: a Membership record
+        // at the kill step and the identical epoch/live walk, plus a
+        // zero-width "recovery" marker span on the trace.
+        let membership_recs: Vec<&DecisionRecord> = report
+            .journal
+            .iter()
+            .filter(|r| r.kind == DecisionKind::Membership)
+            .collect();
+        assert_eq!(membership_recs.len(), 1);
+        assert_eq!(membership_recs[0].step, kill_step as u32);
+        assert_eq!(membership_recs[0].epoch, 1);
+        assert_eq!(membership_recs[0].live, 3);
+        assert_eq!(
+            obs::journal::epoch_trajectory_of(&report.journal),
+            vec![(0, 4), (1, 3)]
+        );
+        assert!(report.spans.iter().any(|s| s.label == "recovery"));
     }
 
     /// A flapping link long enough to blow the recv deadline: the group

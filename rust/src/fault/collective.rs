@@ -51,6 +51,7 @@
 
 use super::membership::{LiveRing, Membership};
 use super::FaultConfig;
+use crate::obs;
 use crate::transport::Transport;
 use crate::util::error::{anyhow, Result};
 use std::time::{Duration, Instant};
@@ -311,8 +312,30 @@ impl ElasticExchange {
                             n_blocks += 1;
                         }
                     }
+                    let elapsed = t0.elapsed();
+                    // Telemetry: relaxed atomic bumps on the global
+                    // registry — allocation-free (the zero-alloc gates
+                    // below run with these live).
+                    let om = obs::hot();
+                    let elapsed_us = elapsed.as_micros() as u64;
+                    om.rounds_total.inc();
+                    om.bytes_sent_total.add(sent);
+                    om.round_us.observe(elapsed_us);
+                    if recoveries > 0 {
+                        om.recoveries_total.add(recoveries);
+                        om.recovery_us.observe(elapsed_us);
+                    }
+                    if lost {
+                        om.lost_rounds_total.inc();
+                    }
+                    if self.dropped_stale > 0 {
+                        om.dropped_stale_total.add(self.dropped_stale);
+                    }
+                    if self.dropped_garbage > 0 {
+                        om.dropped_garbage_total.add(self.dropped_garbage);
+                    }
                     return Ok(RoundStats {
-                        elapsed: t0.elapsed(),
+                        elapsed,
                         sent_bytes: sent,
                         recoveries,
                         lost,
@@ -775,11 +798,16 @@ mod tests {
     /// allocations per step once warm. Channel internals (mpsc node
     /// boxes) are the transport's own cost and sit outside the data
     /// plane; every payload-proportional allocation is covered here.
+    ///
+    /// Telemetry is ON throughout (obs acceptance criterion): every step
+    /// records spans and hot-registry metrics exactly as the live worker
+    /// loop does, and the step still allocates nothing.
     #[test]
     fn steady_state_receive_decode_reduce_is_allocation_free() {
         use crate::compress::{
             decode_reduce_into, CompressionConfig, NetSenseCompressor, Workspace,
         };
+        use crate::obs::{hot, Tracer};
         use crate::testing::alloc::thread_alloc_count;
         use crate::util::rng::Pcg64;
 
@@ -805,6 +833,10 @@ mod tests {
         let mut wires: Vec<Vec<u8>> = (0..peers).map(|_| Vec::new()).collect();
         let mut acc = vec![0f32; n];
         let m = Membership::new(0, peers);
+        // Telemetry on: a live-loop-sized tracer plus the hot registry
+        // (registration allocates once, here — before the measured loop).
+        let mut tracer = Tracer::new(0, 512, std::time::Instant::now());
+        let om = hot();
         let mut step_no = 0u32;
         let mut step = |comps: &mut [NetSenseCompressor],
                         grads: &mut [Vec<f32>],
@@ -812,39 +844,59 @@ mod tests {
                         ws: &mut Workspace,
                         acc: &mut [f32],
                         r: &mut Pcg64,
+                        tracer: &mut Tracer,
                         step_no: &mut u32| {
+            let sp_step = tracer.start("step", *step_no);
             // Send half, per peer: envelope + fused compress.
             for ((comp, g), wire) in comps.iter_mut().zip(grads.iter_mut()).zip(wires.iter_mut())
             {
                 for x in g.iter_mut() {
                     *x += 0.05 * r.normal() as f32;
                 }
+                let sp_c = tracer.start("compress", *step_no);
+                let t_c = std::time::Instant::now();
                 wire.clear();
                 write_envelope(FrameKind::Data, m.epoch() as u32, *step_no, wire);
                 comp.compress_payload_into(g, &w, 0.1, ws, wire);
+                om.compress_ns.observe(t_c.elapsed().as_nanos() as u64);
+                om.bytes_sent_total.add(wire.len() as u64);
+                tracer.end(sp_c);
             }
             // Receive half: envelope strip + fused decode-reduce, in rank
             // order — byte-for-byte what round_reduce hands the reducer.
             acc.iter_mut().for_each(|a| *a = 0.0);
             for wire in wires.iter() {
+                let sp_d = tracer.start("decode", *step_no);
+                let t_d = std::time::Instant::now();
                 let (kind, e, s, body) = parse_envelope(wire).expect("self-built envelope");
                 assert_eq!((kind, e, s), (FrameKind::Data, m.epoch() as u32, *step_no));
                 decode_reduce_into(body, acc).expect("self-encoded payload decodes");
+                om.decode_ns.observe(t_d.elapsed().as_nanos() as u64);
+                tracer.end(sp_d);
             }
+            om.rounds_total.inc();
+            tracer.end(sp_step);
             *step_no += 1;
         };
         for _ in 0..40 {
-            step(&mut comps, &mut grads, &mut wires, &mut ws, &mut acc, &mut r, &mut step_no);
+            step(
+                &mut comps, &mut grads, &mut wires, &mut ws, &mut acc, &mut r, &mut tracer,
+                &mut step_no,
+            );
         }
         let before = thread_alloc_count();
         for _ in 0..10 {
-            step(&mut comps, &mut grads, &mut wires, &mut ws, &mut acc, &mut r, &mut step_no);
+            step(
+                &mut comps, &mut grads, &mut wires, &mut ws, &mut acc, &mut r, &mut tracer,
+                &mut step_no,
+            );
         }
         let allocs = thread_alloc_count() - before;
         assert_eq!(
             allocs, 0,
-            "steady-state receive/decode-reduce path allocated {allocs} times"
+            "steady-state receive/decode-reduce path (telemetry on) allocated {allocs} times"
         );
+        assert!(tracer.recorded() >= 50 * 9, "spans actually recorded");
     }
 
     /// PR-3's zero-alloc acceptance gate, extended: the fused send path
@@ -852,9 +904,13 @@ mod tests {
     /// still performs ZERO heap allocations in steady state. The lib test
     /// binary runs under `testing::alloc::CountingAlloc`, so any
     /// allocation on this thread is caught.
+    ///
+    /// Telemetry is ON throughout (obs acceptance criterion): span +
+    /// metric recording per step, still zero allocations.
     #[test]
     fn steady_state_fused_send_with_membership_checks_is_allocation_free() {
         use crate::compress::{CompressionConfig, NetSenseCompressor, Workspace};
+        use crate::obs::{hot, Tracer};
         use crate::testing::alloc::thread_alloc_count;
         use crate::util::rng::Pcg64;
 
@@ -869,11 +925,16 @@ mod tests {
         let mut c = NetSenseCompressor::new(n, CompressionConfig::default());
         let mut ws = Workspace::with_capacity(n);
         let mut wire: Vec<u8> = Vec::new();
+        let mut tracer = Tracer::new(0, 128, std::time::Instant::now());
+        let om = hot();
+        let mut step_no = 0u32;
         let mut step = |c: &mut NetSenseCompressor,
                         ws: &mut Workspace,
                         wire: &mut Vec<u8>,
                         g: &mut [f32],
-                        r: &mut Pcg64| {
+                        r: &mut Pcg64,
+                        tracer: &mut Tracer,
+                        step_no: &mut u32| {
             for x in g.iter_mut() {
                 *x += 0.05 * r.normal() as f32;
             }
@@ -881,22 +942,28 @@ mod tests {
             // step: epoch, liveness, ring neighbors — all allocation-free.
             assert!(m.is_live(ring.succ()) && m.is_live(ring.pred()));
             assert_eq!(m.n_live(), 4);
+            let sp = tracer.start("compress", *step_no);
+            let t_c = std::time::Instant::now();
             wire.clear();
             write_envelope(FrameKind::Data, m.epoch() as u32, 7, wire);
             c.compress_payload_into(g, &w, 0.1, ws, wire);
+            om.compress_ns.observe(t_c.elapsed().as_nanos() as u64);
+            tracer.end(sp);
+            *step_no += 1;
         };
         for _ in 0..40 {
-            step(&mut c, &mut ws, &mut wire, &mut g, &mut r);
+            step(&mut c, &mut ws, &mut wire, &mut g, &mut r, &mut tracer, &mut step_no);
         }
         let before = thread_alloc_count();
         for _ in 0..10 {
-            step(&mut c, &mut ws, &mut wire, &mut g, &mut r);
+            step(&mut c, &mut ws, &mut wire, &mut g, &mut r, &mut tracer, &mut step_no);
         }
         let allocs = thread_alloc_count() - before;
         assert_eq!(
             allocs, 0,
-            "membership-checked fused send path allocated {allocs} times"
+            "membership-checked fused send path (telemetry on) allocated {allocs} times"
         );
+        assert_eq!(tracer.recorded(), 50);
     }
 
     /// Byzantine duplication (ISSUE satellite): rank 1's two data frames

@@ -11,6 +11,7 @@
 //! happens, never *what* it decides).
 
 use super::FaultSchedule;
+use crate::obs;
 use crate::transport::{Transport, TransferObs};
 use crate::util::error::{anyhow, Result};
 use std::time::{Duration, Instant};
@@ -133,6 +134,11 @@ impl FaultInjector {
         // carrying the *previous* step's envelope — exactly the stale
         // frames the elastic layer's step fencing must absorb. Delivery
         // failures are part of the chaos (the peer may be gone).
+        if !self.dup_buffer.is_empty() {
+            obs::hot()
+                .faults_duplicate_total
+                .add(self.dup_buffer.len() as u64);
+        }
         let stale: Vec<(usize, Vec<u8>)> = self
             .dup_buffer
             .drain(..)
@@ -163,6 +169,7 @@ impl FaultInjector {
         }
         if kill {
             self.killed = true;
+            obs::hot().faults_kill_total.inc();
             let _ = self.inner.shutdown();
         }
         if let Some(ms) = stall {
@@ -199,9 +206,11 @@ impl Transport for FaultInjector {
             return Err(self.dead_err());
         }
         if let Some(ms) = self.stall_pending.take() {
+            obs::hot().faults_stall_total.inc();
             std::thread::sleep(Duration::from_millis(ms));
         }
         if let Some(until) = self.flap_until {
+            obs::hot().faults_flap_total.inc();
             let now = Instant::now();
             if now < until {
                 std::thread::sleep(until - now);
@@ -212,6 +221,7 @@ impl Transport for FaultInjector {
         // the peer holds bytes that parse to nothing (or to a valid
         // envelope with a torn body) and must reject them by parse.
         if let Some(keep) = self.partial_pending.take() {
+            obs::hot().faults_partial_total.inc();
             let _ = self.inner.send(to, &payload[..keep.min(payload.len())]);
             self.killed = true;
             let _ = self.inner.shutdown();
@@ -238,6 +248,7 @@ impl Transport for FaultInjector {
             self.reorder_buffer.push((to, payload.to_vec()));
             if !self.reorder_stalled {
                 self.reorder_stalled = true;
+                obs::hot().faults_reorder_total.inc();
                 std::thread::sleep(
                     self.recv_timeout + self.recv_timeout / 4 + Duration::from_millis(20),
                 );
@@ -432,6 +443,30 @@ mod tests {
         assert_eq!(b.recv(0).unwrap(), vec![9, 9, 9]);
         let e = b.recv(0).unwrap_err();
         assert!(format!("{e}").contains("shut down"), "{e}");
+    }
+
+    /// ISSUE satellite: schedule firings are quantifiable — each fault
+    /// that actually fires ticks its registry counter. (The registry is
+    /// process-global and shared across tests, so assert deltas.)
+    #[test]
+    fn fault_firings_tick_registry_counters() {
+        let m = crate::obs::hot();
+        let kills = m.faults_kill_total.get();
+        let stalls = m.faults_stall_total.get();
+        let (a, mut b) = pair();
+        let mut a = FaultInjector::new(
+            a,
+            vec![
+                FaultSpec::StallAtStep { step: 0, stall_ms: 1 },
+                FaultSpec::KillAtStep { step: 1 },
+            ],
+        );
+        a.on_step(0);
+        a.send(1, &[0, 1]).unwrap();
+        assert_eq!(b.recv(0).unwrap(), vec![0, 1]);
+        assert!(m.faults_stall_total.get() >= stalls + 1, "stall not counted");
+        a.on_step(1);
+        assert!(m.faults_kill_total.get() >= kills + 1, "kill not counted");
     }
 
     #[test]

@@ -51,6 +51,15 @@
 //! ([`fault::sim_trajectory`]), and compressor-state checkpoints
 //! ([`fault::Checkpoint`]) so a rejoining rank resumes bit-identically.
 //!
+//! ## Observability
+//!
+//! Runtime telemetry lives in [`obs`]: a lock-free metrics registry with a
+//! Prometheus-text exporter ([`obs::metrics`]), per-rank tracing spans
+//! exportable as Perfetto-loadable Chrome trace JSON ([`obs::trace`]), and
+//! a controller decision journal cross-checkable against netsim replays
+//! ([`obs::journal`]) — all recording allocation-free on the fused hot
+//! paths (the counting-allocator gates run with telemetry on).
+//!
 //! See `README.md` for the quickstart, `DESIGN.md` for the module-by-module
 //! system inventory, `EXPERIMENTS.md` for the experiment ↔ paper-figure
 //! index, and `ROADMAP.md` for open items.
@@ -62,6 +71,7 @@ pub mod coordinator;
 pub mod experiments;
 pub mod fault;
 pub mod netsim;
+pub mod obs;
 pub mod runtime;
 pub mod sensing;
 pub mod testing;

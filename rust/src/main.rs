@@ -37,6 +37,8 @@ fn cli() -> Cli {
                     opt("seed", "experiment seed", Some("42")),
                     opt("workers", "number of workers", Some("8")),
                     opt("fidelity-every", "full-compression cadence in steps (0=never)", Some("250")),
+                    flag("quiet", "only warnings/errors on stderr"),
+                    flag("verbose", "debug-level progress on stderr"),
                 ],
                 positionals: vec!["experiment"],
             },
@@ -82,6 +84,12 @@ fn cli() -> Cli {
                     opt("partial-kill", "chaos: torn write then death: `<rank>:<step>:<keep_bytes>`", None),
                     opt("recv-timeout-ms", "failure detector: per-recv deadline", None),
                     opt("probe-timeout-ms", "failure detector: recovery probe deadline", None),
+                    opt("trace-out", "write per-rank spans as Chrome trace JSON (Perfetto)", None),
+                    opt("journal-out", "write rank 0's controller decision journal (JSON)", None),
+                    opt("metrics-out", "write a Prometheus-text metrics snapshot", None),
+                    opt("metrics-addr", "serve /metrics over HTTP while the run lasts (host:port)", None),
+                    flag("quiet", "only warnings/errors on stderr"),
+                    flag("verbose", "debug-level progress on stderr"),
                 ],
                 positionals: vec![],
             },
@@ -126,6 +134,14 @@ fn main() {
             std::process::exit(2);
         }
     };
+    // Progress/diagnostics ride the leveled stderr logger; --quiet and
+    // --verbose move the bar (flags default to false on commands that
+    // don't declare them).
+    if args.flag("quiet") {
+        netsenseml::util::log::set_level(netsenseml::util::log::Level::Warn);
+    } else if args.flag("verbose") {
+        netsenseml::util::log::set_level(netsenseml::util::log::Level::Debug);
+    }
     let result = match args.command.as_str() {
         "repro" => cmd_repro(&args),
         "train" => cmd_train(&args),
@@ -170,7 +186,7 @@ fn cmd_repro(args: &netsenseml::util::cli::Args) -> Result<()> {
         bail!("unknown experiment `{which}` (have {known:?} or `all`)");
     };
     for exp in selected {
-        eprintln!("== running {exp} ==");
+        netsenseml::log_info!("== running {exp} ==");
         let t0 = std::time::Instant::now();
         match exp {
             "table1" => tables::table1(&opts).0.print(),
@@ -196,7 +212,7 @@ fn cmd_repro(args: &netsenseml::util::cli::Args) -> Result<()> {
             "pipeline" => pipelined::pipeline_overlap(&opts).0.print(),
             _ => unreachable!(),
         }
-        eprintln!("   ({exp} took {:.1}s)", t0.elapsed().as_secs_f64());
+        netsenseml::log_info!("{exp} took {:.1}s", t0.elapsed().as_secs_f64());
     }
     Ok(())
 }
@@ -354,10 +370,32 @@ fn cmd_live(args: &netsenseml::util::cli::Args) -> Result<()> {
     if let Some(v) = args.get_u64("probe-timeout-ms")? {
         cfg.fault.probe_timeout_ms = v;
     }
+    // Asking for an artifact implies capturing it.
+    let trace_out = args.get("trace-out").map(PathBuf::from);
+    let journal_out = args.get("journal-out").map(PathBuf::from);
+    let metrics_out = args.get("metrics-out").map(PathBuf::from);
+    if trace_out.is_some() {
+        cfg.obs.trace = true;
+    }
+    if journal_out.is_some() {
+        cfg.obs.journal = true;
+    }
     cfg.validate()?;
 
+    // A tiny scrape endpoint for the duration of the run (shut down on
+    // drop, rendered requests read the same global registry the snapshot
+    // file does).
+    let _metrics_server = match args.get("metrics-addr") {
+        Some(addr) => {
+            let server = netsenseml::obs::MetricsServer::start(addr)?;
+            netsenseml::log_info!("serving metrics at http://{}/metrics", server.local_addr());
+            Some(server)
+        }
+        None => None,
+    };
+
     let opts = cfg.live_opts();
-    eprintln!(
+    netsenseml::log_info!(
         "live: {} workers over {} — strategy {}, {} steps × {} params{}{}",
         opts.n_workers,
         cfg.transport.backend,
@@ -425,6 +463,30 @@ fn cmd_live(args: &netsenseml::util::cli::Args) -> Result<()> {
             "DIVERGED"
         }
     );
+    // Telemetry artifacts are written even for a diverged run — they're
+    // exactly what a post-mortem needs.
+    if let Some(path) = &trace_out {
+        std::fs::write(path, report.trace_json())?;
+        netsenseml::log_info!(
+            "trace written to {} ({} spans, {} dropped)",
+            path.display(),
+            report.spans.len(),
+            report.spans_dropped
+        );
+    }
+    if let Some(path) = &journal_out {
+        std::fs::write(path, report.journal_json())?;
+        netsenseml::log_info!(
+            "journal written to {} ({} records, {} dropped)",
+            path.display(),
+            report.journal.len(),
+            report.journal_dropped
+        );
+    }
+    if let Some(path) = &metrics_out {
+        std::fs::write(path, netsenseml::obs::registry().prometheus())?;
+        netsenseml::log_info!("metrics snapshot written to {}", path.display());
+    }
     if !report.consistent {
         bail!("reduced gradients diverged across surviving workers");
     }

@@ -1,0 +1,310 @@
+//! The controller decision journal: a flat, preallocated record of what
+//! the adaptive loop *decided* — every [`RatioController`] transition
+//! (observed RTT/loss, phase, old → new ratio, predicted wire bytes) and
+//! every round/membership event — dumped as JSON per run.
+//!
+//! Records are `Copy` and live in a bounded `Vec` allocated up front:
+//! pushing in steady state is a slot write (gated by the zero-alloc test
+//! in the parent module), and unlike the span ring the journal does NOT
+//! wrap — decisions are the ground truth a replay is checked against, so
+//! dropping the *oldest* would be worse than dropping the newest. Past
+//! capacity, pushes tick a drop counter and the journal says so.
+//!
+//! Cross-checks this enables (asserted in `experiments::live` tests):
+//! the `Ratio` records' `old_ratio`/`new_ratio` chain must match the
+//! run's per-step trace, and the `Round` records' `(epoch, live)`
+//! sequence must equal the run's
+//! [`SyncTrajectory`](crate::fault::SyncTrajectory) — i.e. the journal
+//! is the same story netsim replays tell.
+//!
+//! [`RatioController`]: crate::sensing::RatioController
+
+use crate::util::json::{obj, Json};
+
+/// What a [`DecisionRecord`] describes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum DecisionKind {
+    /// A [`RatioController`](crate::sensing::RatioController) transition.
+    #[default]
+    Ratio,
+    /// A completed elastic round (`RoundStats` digest).
+    Round,
+    /// A membership change (epoch bump / live-set shrink).
+    Membership,
+}
+
+impl DecisionKind {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            DecisionKind::Ratio => "ratio",
+            DecisionKind::Round => "round",
+            DecisionKind::Membership => "membership",
+        }
+    }
+}
+
+/// One journal entry. Flat and `Copy`; unused fields stay at their
+/// `Default` for the record's kind (construct with
+/// `..DecisionRecord::default()`).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct DecisionRecord {
+    pub kind: DecisionKind,
+    /// Worker rank that recorded the entry.
+    pub rank: usize,
+    /// Training step the entry belongs to.
+    pub step: u32,
+    /// Membership epoch in force.
+    pub epoch: u32,
+    /// Live ranks in force.
+    pub live: usize,
+    /// Observed transfer-completion time, µs (Ratio/Round).
+    pub rtt_us: u64,
+    /// Payload bytes the observation covered (Ratio: `data_size`;
+    /// Round: `sent_bytes`).
+    pub payload_bytes: u64,
+    /// Whether the interval/round lost something.
+    pub lost: bool,
+    /// Controller phase after the transition (Ratio only):
+    /// `false` = Startup, `true` = NetSense.
+    pub phase_netsense: bool,
+    /// Compression ratio before the transition (Ratio only).
+    pub old_ratio: f64,
+    /// Compression ratio after the transition (Ratio only).
+    pub new_ratio: f64,
+    /// Wire bytes the compressor predicts at `new_ratio` (Ratio only).
+    pub predicted_wire_bytes: u64,
+    /// Recoveries performed in the round (Round/Membership).
+    pub recoveries: u32,
+    /// Stale frames fenced in the round (Round only).
+    pub dropped_stale: u32,
+    /// Garbage frames rejected in the round (Round only).
+    pub dropped_garbage: u32,
+}
+
+impl DecisionRecord {
+    /// Serialize one record as a JSON object (kind-irrelevant fields
+    /// included — flat schema, trivially diffable).
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("kind", Json::from(self.kind.as_str())),
+            ("rank", Json::from(self.rank)),
+            ("step", Json::from(self.step as usize)),
+            ("epoch", Json::from(self.epoch as usize)),
+            ("live", Json::from(self.live)),
+            ("rtt_us", Json::from(self.rtt_us)),
+            ("payload_bytes", Json::from(self.payload_bytes)),
+            ("lost", Json::from(self.lost)),
+            ("phase_netsense", Json::from(self.phase_netsense)),
+            ("old_ratio", Json::from(self.old_ratio)),
+            ("new_ratio", Json::from(self.new_ratio)),
+            ("predicted_wire_bytes", Json::from(self.predicted_wire_bytes)),
+            ("recoveries", Json::from(self.recoveries as usize)),
+            ("dropped_stale", Json::from(self.dropped_stale as usize)),
+            ("dropped_garbage", Json::from(self.dropped_garbage as usize)),
+        ])
+    }
+}
+
+/// Bounded, preallocated journal of [`DecisionRecord`]s. See module docs.
+pub struct DecisionJournal {
+    records: Vec<DecisionRecord>,
+    enabled: bool,
+    dropped: u64,
+}
+
+impl DecisionJournal {
+    /// A journal holding up to `capacity` records, all storage allocated
+    /// here. Size generously: one live run produces roughly
+    /// `steps × (1 ratio + 1 round)` records on the journaling rank.
+    pub fn with_capacity(capacity: usize) -> DecisionJournal {
+        DecisionJournal {
+            records: Vec::with_capacity(capacity),
+            enabled: capacity > 0,
+            dropped: 0,
+        }
+    }
+
+    /// A journal whose `push` is a no-op — the disabled default, so call
+    /// sites don't branch.
+    pub fn disabled() -> DecisionJournal {
+        DecisionJournal {
+            records: Vec::new(),
+            enabled: false,
+            dropped: 0,
+        }
+    }
+
+    pub fn is_enabled(&self) -> bool {
+        self.enabled
+    }
+
+    /// Append a record. Past capacity, ticks the drop counter instead of
+    /// growing (keeps the hot path allocation-free).
+    #[inline]
+    pub fn push(&mut self, rec: DecisionRecord) {
+        if !self.enabled {
+            return;
+        }
+        if self.records.len() < self.records.capacity() {
+            self.records.push(rec);
+        } else {
+            self.dropped += 1;
+        }
+    }
+
+    pub fn records(&self) -> &[DecisionRecord] {
+        &self.records
+    }
+
+    pub fn len(&self) -> usize {
+        self.records.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.records.is_empty()
+    }
+
+    /// Records refused because the journal was full.
+    pub fn dropped(&self) -> u64 {
+        self.dropped
+    }
+
+    /// The `(epoch, live)` sequence of the `Round` records — directly
+    /// comparable to a run's
+    /// [`SyncTrajectory`](crate::fault::SyncTrajectory) without importing
+    /// `fault` here.
+    pub fn epoch_trajectory(&self) -> Vec<(u32, usize)> {
+        epoch_trajectory_of(&self.records)
+    }
+
+    /// Serialize the whole journal (records + drop accounting) as a JSON
+    /// document. Cold path.
+    pub fn to_json(&self) -> String {
+        records_to_json(&self.records, self.dropped)
+    }
+}
+
+/// [`DecisionJournal::epoch_trajectory`] over a bare record slice (for
+/// callers that hold the records without the journal, e.g. a merged run
+/// report).
+pub fn epoch_trajectory_of(records: &[DecisionRecord]) -> Vec<(u32, usize)> {
+    let mut out = Vec::new();
+    for r in records {
+        if r.kind != DecisionKind::Round {
+            continue;
+        }
+        if out.last() != Some(&(r.epoch, r.live)) {
+            out.push((r.epoch, r.live));
+        }
+    }
+    out
+}
+
+/// [`DecisionJournal::to_json`] over a bare record slice.
+pub fn records_to_json(records: &[DecisionRecord], dropped: u64) -> String {
+    let records: Vec<Json> = records.iter().map(|r| r.to_json()).collect();
+    obj(vec![
+        ("schema_version", Json::from(1usize)),
+        ("dropped", Json::from(dropped)),
+        ("records", Json::Arr(records)),
+    ])
+    .to_string_pretty()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn push_is_bounded_and_counts_drops() {
+        let mut j = DecisionJournal::with_capacity(2);
+        assert!(j.is_enabled() && j.is_empty());
+        for step in 0..5u32 {
+            j.push(DecisionRecord {
+                step,
+                ..DecisionRecord::default()
+            });
+        }
+        assert_eq!(j.len(), 2);
+        assert_eq!(j.dropped(), 3);
+        // Oldest records survive — they're what replays are checked against.
+        assert_eq!(j.records()[0].step, 0);
+        assert_eq!(j.records()[1].step, 1);
+    }
+
+    #[test]
+    fn disabled_journal_records_nothing() {
+        let mut j = DecisionJournal::disabled();
+        j.push(DecisionRecord::default());
+        assert!(j.is_empty());
+        assert_eq!(j.dropped(), 0);
+        assert!(!j.is_enabled());
+    }
+
+    #[test]
+    fn epoch_trajectory_dedupes_consecutive_rounds() {
+        let mut j = DecisionJournal::with_capacity(8);
+        for (step, (epoch, live)) in [(0u32, (0u32, 4usize)), (1, (0, 4)), (2, (1, 3)), (3, (1, 3))]
+        {
+            j.push(DecisionRecord {
+                kind: DecisionKind::Round,
+                step,
+                epoch,
+                live,
+                ..DecisionRecord::default()
+            });
+        }
+        // A Ratio record with a different epoch must not leak in.
+        j.push(DecisionRecord {
+            kind: DecisionKind::Ratio,
+            epoch: 9,
+            live: 9,
+            ..DecisionRecord::default()
+        });
+        assert_eq!(j.epoch_trajectory(), vec![(0, 4), (1, 3)]);
+    }
+
+    #[test]
+    fn journal_json_round_trips_through_the_parser() {
+        let mut j = DecisionJournal::with_capacity(4);
+        j.push(DecisionRecord {
+            kind: DecisionKind::Ratio,
+            rank: 0,
+            step: 3,
+            epoch: 1,
+            live: 4,
+            rtt_us: 250,
+            payload_bytes: 8192,
+            lost: true,
+            phase_netsense: true,
+            old_ratio: 0.25,
+            new_ratio: 0.125,
+            predicted_wire_bytes: 4096,
+            ..DecisionRecord::default()
+        });
+        j.push(DecisionRecord {
+            kind: DecisionKind::Membership,
+            epoch: 2,
+            live: 3,
+            recoveries: 1,
+            ..DecisionRecord::default()
+        });
+        let doc = Json::parse(&j.to_json()).expect("journal JSON parses");
+        assert_eq!(doc.get("dropped").and_then(|v| v.as_f64()), Some(0.0));
+        let records = doc.get("records").and_then(|r| r.as_arr()).unwrap();
+        assert_eq!(records.len(), 2);
+        let r0 = &records[0];
+        assert_eq!(r0.get("kind").and_then(|v| v.as_str()), Some("ratio"));
+        assert_eq!(r0.get("old_ratio").and_then(|v| v.as_f64()), Some(0.25));
+        assert_eq!(r0.get("new_ratio").and_then(|v| v.as_f64()), Some(0.125));
+        assert_eq!(r0.get("lost").and_then(|v| v.as_bool()), Some(true));
+        assert_eq!(
+            r0.get("predicted_wire_bytes").and_then(|v| v.as_usize()),
+            Some(4096)
+        );
+        assert_eq!(
+            records[1].get("kind").and_then(|v| v.as_str()),
+            Some("membership")
+        );
+    }
+}

@@ -1,0 +1,617 @@
+//! The metrics registry: named atomic counters, gauges, and log₂-bucketed
+//! histograms with lock-free hot-path recording and a Prometheus-text
+//! snapshot exporter.
+//!
+//! Recording is a relaxed atomic RMW — no locks, no allocation, safe from
+//! any thread (worker threads of one live run share the process-global
+//! registry, so counters aggregate across ranks). Registration
+//! ([`Registry::counter`] and friends) takes a mutex and leaks one small
+//! box per metric — it happens once per name, at startup or in a warmup
+//! loop, never on the hot path. [`hot`] pre-registers every well-known
+//! metric of the runtime layers so hot paths pay a single static deref.
+//!
+//! Histogram buckets are powers of two: bucket 0 holds exact zeros,
+//! bucket *i* ≥ 1 holds `[2^(i−1), 2^i − 1]`, the last bucket (64) tops
+//! out at `u64::MAX`. Two orders of magnitude per ~6.6 buckets is plenty
+//! for latency/size distributions, and the bucket index is two ALU ops
+//! (`leading_zeros`), no search, no float math.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Mutex, OnceLock};
+
+/// Monotone event counter.
+#[derive(Debug, Default)]
+pub struct Counter {
+    value: AtomicU64,
+}
+
+impl Counter {
+    pub const fn new() -> Counter {
+        Counter {
+            value: AtomicU64::new(0),
+        }
+    }
+
+    #[inline]
+    pub fn inc(&self) {
+        self.value.fetch_add(1, Ordering::Relaxed);
+    }
+
+    #[inline]
+    pub fn add(&self, n: u64) {
+        self.value.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.value.load(Ordering::Relaxed)
+    }
+}
+
+/// Last-write-wins f64 gauge (stored as bits in an `AtomicU64`).
+#[derive(Debug, Default)]
+pub struct Gauge {
+    bits: AtomicU64,
+}
+
+impl Gauge {
+    pub const fn new() -> Gauge {
+        Gauge {
+            bits: AtomicU64::new(0),
+        }
+    }
+
+    #[inline]
+    pub fn set(&self, v: f64) {
+        self.bits.store(v.to_bits(), Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> f64 {
+        f64::from_bits(self.bits.load(Ordering::Relaxed))
+    }
+}
+
+/// Number of histogram buckets: one for zero plus one per bit position.
+pub const N_BUCKETS: usize = 65;
+
+/// Log₂-bucketed histogram of `u64` observations (latencies in ns/µs,
+/// sizes in bytes). `sum` wraps on overflow (relevant only for
+/// `u64::MAX`-scale observations); counts are exact.
+#[derive(Debug)]
+pub struct Histogram {
+    buckets: [AtomicU64; N_BUCKETS],
+    sum: AtomicU64,
+    count: AtomicU64,
+}
+
+impl Default for Histogram {
+    fn default() -> Histogram {
+        Histogram {
+            buckets: std::array::from_fn(|_| AtomicU64::new(0)),
+            sum: AtomicU64::new(0),
+            count: AtomicU64::new(0),
+        }
+    }
+}
+
+impl Histogram {
+    pub fn new() -> Histogram {
+        Histogram::default()
+    }
+
+    /// Bucket index of `v`: 0 for 0, else `64 − leading_zeros(v)` — so
+    /// bucket *i* ≥ 1 covers `[2^(i−1), 2^i − 1]`.
+    #[inline]
+    pub fn bucket_index(v: u64) -> usize {
+        if v == 0 {
+            0
+        } else {
+            (64 - v.leading_zeros()) as usize
+        }
+    }
+
+    /// Inclusive upper bound of bucket `i` (the value a percentile
+    /// estimate reports).
+    pub fn bucket_upper_bound(i: usize) -> u64 {
+        match i {
+            0 => 0,
+            _ if i >= 64 => u64::MAX,
+            _ => (1u64 << i) - 1,
+        }
+    }
+
+    #[inline]
+    pub fn observe(&self, v: u64) {
+        self.buckets[Self::bucket_index(v)].fetch_add(1, Ordering::Relaxed);
+        self.sum.fetch_add(v, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    pub fn sum(&self) -> u64 {
+        self.sum.load(Ordering::Relaxed)
+    }
+
+    /// Raw per-bucket counts (snapshot; concurrent observes may land
+    /// between loads).
+    pub fn bucket_counts(&self) -> [u64; N_BUCKETS] {
+        std::array::from_fn(|i| self.buckets[i].load(Ordering::Relaxed))
+    }
+
+    /// Upper-bound percentile estimate: the inclusive upper bound of the
+    /// first bucket whose cumulative count reaches `q` of the total
+    /// (`q` clamped to `[0, 1]`). Returns 0 on an empty histogram.
+    /// Monotone in `q` by construction — cumulative counts and bucket
+    /// bounds both only grow.
+    pub fn percentile(&self, q: f64) -> u64 {
+        let counts = self.bucket_counts();
+        let total: u64 = counts.iter().sum();
+        if total == 0 {
+            return 0;
+        }
+        let q = q.clamp(0.0, 1.0);
+        let target = ((q * total as f64).ceil() as u64).max(1).min(total);
+        let mut cum = 0u64;
+        for (i, &c) in counts.iter().enumerate() {
+            cum += c;
+            if cum >= target {
+                return Self::bucket_upper_bound(i);
+            }
+        }
+        u64::MAX
+    }
+}
+
+enum Metric {
+    Counter(&'static Counter),
+    Gauge(&'static Gauge),
+    Histogram(&'static Histogram),
+}
+
+struct Entry {
+    name: &'static str,
+    help: &'static str,
+    metric: Metric,
+}
+
+/// A named collection of metrics. Most code uses the process [`registry`]
+/// (and the [`hot`] struct over it); tests construct their own to assert
+/// exact values without cross-test interference.
+#[derive(Default)]
+pub struct Registry {
+    entries: Mutex<Vec<Entry>>,
+}
+
+impl Registry {
+    pub fn new() -> Registry {
+        Registry::default()
+    }
+
+    /// Register (or look up) a counter. Idempotent by name; registering
+    /// the same name as a different metric kind is a programming error
+    /// and panics.
+    pub fn counter(&self, name: &'static str, help: &'static str) -> &'static Counter {
+        let mut entries = self.entries.lock().unwrap();
+        if let Some(e) = entries.iter().find(|e| e.name == name) {
+            match e.metric {
+                Metric::Counter(c) => return c,
+                _ => panic!("metric `{name}` already registered with a different kind"),
+            }
+        }
+        let c: &'static Counter = Box::leak(Box::new(Counter::new()));
+        entries.push(Entry {
+            name,
+            help,
+            metric: Metric::Counter(c),
+        });
+        c
+    }
+
+    /// Register (or look up) a gauge — same contract as [`Self::counter`].
+    pub fn gauge(&self, name: &'static str, help: &'static str) -> &'static Gauge {
+        let mut entries = self.entries.lock().unwrap();
+        if let Some(e) = entries.iter().find(|e| e.name == name) {
+            match e.metric {
+                Metric::Gauge(g) => return g,
+                _ => panic!("metric `{name}` already registered with a different kind"),
+            }
+        }
+        let g: &'static Gauge = Box::leak(Box::new(Gauge::new()));
+        entries.push(Entry {
+            name,
+            help,
+            metric: Metric::Gauge(g),
+        });
+        g
+    }
+
+    /// Register (or look up) a histogram — same contract as
+    /// [`Self::counter`].
+    pub fn histogram(&self, name: &'static str, help: &'static str) -> &'static Histogram {
+        let mut entries = self.entries.lock().unwrap();
+        if let Some(e) = entries.iter().find(|e| e.name == name) {
+            match e.metric {
+                Metric::Histogram(h) => return h,
+                _ => panic!("metric `{name}` already registered with a different kind"),
+            }
+        }
+        let h: &'static Histogram = Box::leak(Box::new(Histogram::new()));
+        entries.push(Entry {
+            name,
+            help,
+            metric: Metric::Histogram(h),
+        });
+        h
+    }
+
+    /// Snapshot every metric in Prometheus text exposition format
+    /// (`# HELP` / `# TYPE` / samples; histograms as cumulative
+    /// `_bucket{le=…}` plus `_sum`/`_count`). Names sort alphabetically
+    /// so snapshots diff cleanly.
+    pub fn prometheus(&self) -> String {
+        let entries = self.entries.lock().unwrap();
+        let mut order: Vec<usize> = (0..entries.len()).collect();
+        order.sort_by_key(|&i| entries[i].name);
+        let mut out = String::new();
+        for &i in &order {
+            let e = &entries[i];
+            match e.metric {
+                Metric::Counter(c) => {
+                    out.push_str(&format!("# HELP {} {}\n", e.name, e.help));
+                    out.push_str(&format!("# TYPE {} counter\n", e.name));
+                    out.push_str(&format!("{} {}\n", e.name, c.get()));
+                }
+                Metric::Gauge(g) => {
+                    out.push_str(&format!("# HELP {} {}\n", e.name, e.help));
+                    out.push_str(&format!("# TYPE {} gauge\n", e.name));
+                    out.push_str(&format!("{} {}\n", e.name, g.get()));
+                }
+                Metric::Histogram(h) => {
+                    out.push_str(&format!("# HELP {} {}\n", e.name, e.help));
+                    out.push_str(&format!("# TYPE {} histogram\n", e.name));
+                    let counts = h.bucket_counts();
+                    let mut cum = 0u64;
+                    for (b, &c) in counts.iter().enumerate() {
+                        if c == 0 && b != 0 {
+                            // Empty interior buckets add nothing to a
+                            // cumulative export; keep the snapshot short.
+                            continue;
+                        }
+                        cum += c;
+                        out.push_str(&format!(
+                            "{}_bucket{{le=\"{}\"}} {}\n",
+                            e.name,
+                            Histogram::bucket_upper_bound(b),
+                            cum
+                        ));
+                    }
+                    out.push_str(&format!(
+                        "{}_bucket{{le=\"+Inf\"}} {}\n",
+                        e.name,
+                        h.count()
+                    ));
+                    out.push_str(&format!("{}_sum {}\n", e.name, h.sum()));
+                    out.push_str(&format!("{}_count {}\n", e.name, h.count()));
+                }
+            }
+        }
+        out
+    }
+}
+
+/// The process-global registry every runtime layer records into.
+pub fn registry() -> &'static Registry {
+    static REGISTRY: OnceLock<Registry> = OnceLock::new();
+    REGISTRY.get_or_init(Registry::new)
+}
+
+/// Every well-known metric of the runtime layers, pre-registered on the
+/// global [`registry`] — hot paths hold this struct once and record
+/// through static derefs (no name lookup, no lock).
+pub struct HotMetrics {
+    // ---- transport / elastic exchange ------------------------------------
+    /// Measured ring-round completion time (the controller's RTT
+    /// observable), µs.
+    pub rtt_us: &'static Histogram,
+    /// Elastic round wall time, recoveries included, µs.
+    pub round_us: &'static Histogram,
+    /// Wall time of rounds that needed ≥ 1 membership recovery, µs — the
+    /// cost of an epoch bump end to end.
+    pub recovery_us: &'static Histogram,
+    /// Enveloped frame sizes pushed into the ring, bytes.
+    pub frame_bytes: &'static Histogram,
+    /// Completed elastic rounds.
+    pub rounds_total: &'static Counter,
+    /// Payload bytes pushed into the ring (envelopes + aborted attempts
+    /// included).
+    pub bytes_sent_total: &'static Counter,
+    /// Membership recoveries (epoch bumps) performed.
+    pub recoveries_total: &'static Counter,
+    /// Rounds that lost something (deadline abort / recovery) — the
+    /// controller's backoff trigger.
+    pub lost_rounds_total: &'static Counter,
+    /// Well-formed frames discarded by epoch/step fencing.
+    pub dropped_stale_total: &'static Counter,
+    /// Frames rejected by envelope parse (torn writes, line noise).
+    pub dropped_garbage_total: &'static Counter,
+    // ---- compress --------------------------------------------------------
+    /// Fused compress sweep (compensate→prune→top-k→quantize→COO→frame), ns.
+    pub compress_ns: &'static Histogram,
+    /// Fused decode-reduce sweep (parse→validate→dequantize→scatter), ns.
+    pub decode_ns: &'static Histogram,
+    // ---- sensing / controller --------------------------------------------
+    /// Multiplicative-backoff transitions (Algorithm 1 line 16).
+    pub ctl_backoffs_total: &'static Counter,
+    /// Additive-increase transitions (startup ramp + β₂ climbs).
+    pub ctl_increases_total: &'static Counter,
+    /// Compression ratio in force (rank 0's controller).
+    pub ratio: &'static Gauge,
+    // ---- membership ------------------------------------------------------
+    /// Live ranks (rank 0's view).
+    pub live_ranks: &'static Gauge,
+    /// Membership epoch (rank 0's view).
+    pub epoch: &'static Gauge,
+    // ---- chaos injection -------------------------------------------------
+    /// FaultInjector kill firings.
+    pub faults_kill_total: &'static Counter,
+    /// FaultInjector stall firings.
+    pub faults_stall_total: &'static Counter,
+    /// FaultInjector link-flap firings.
+    pub faults_flap_total: &'static Counter,
+    /// FaultInjector duplicate-replay firings.
+    pub faults_duplicate_total: &'static Counter,
+    /// FaultInjector reorder firings.
+    pub faults_reorder_total: &'static Counter,
+    /// FaultInjector torn-write (partial-kill) firings.
+    pub faults_partial_total: &'static Counter,
+    // ---- coordinator / checkpoint ----------------------------------------
+    /// Simulated sync rounds driven by the coordinator's SyncEngine.
+    pub sim_syncs_total: &'static Counter,
+    /// Checkpoint restores applied (live rejoin + SyncEngine import).
+    pub checkpoint_restores_total: &'static Counter,
+}
+
+/// The hot-metrics struct (registered once, on first use).
+pub fn hot() -> &'static HotMetrics {
+    static HOT: OnceLock<HotMetrics> = OnceLock::new();
+    HOT.get_or_init(|| {
+        let r = registry();
+        HotMetrics {
+            rtt_us: r.histogram(
+                "netsense_rtt_us",
+                "measured transfer-completion time fed to the controller, microseconds",
+            ),
+            round_us: r.histogram(
+                "netsense_round_us",
+                "elastic ring-round wall time (recoveries included), microseconds",
+            ),
+            recovery_us: r.histogram(
+                "netsense_recovery_us",
+                "wall time of rounds that needed a membership recovery, microseconds",
+            ),
+            frame_bytes: r.histogram(
+                "netsense_frame_bytes",
+                "enveloped frame sizes pushed into the ring, bytes",
+            ),
+            rounds_total: r.counter("netsense_rounds_total", "completed elastic rounds"),
+            bytes_sent_total: r.counter(
+                "netsense_bytes_sent_total",
+                "payload bytes pushed into the ring (envelopes and aborted attempts included)",
+            ),
+            recoveries_total: r.counter(
+                "netsense_recoveries_total",
+                "membership recoveries (epoch bumps)",
+            ),
+            lost_rounds_total: r.counter(
+                "netsense_lost_rounds_total",
+                "rounds that lost something (deadline abort or recovery)",
+            ),
+            dropped_stale_total: r.counter(
+                "netsense_dropped_stale_total",
+                "well-formed frames discarded by epoch/step fencing",
+            ),
+            dropped_garbage_total: r.counter(
+                "netsense_dropped_garbage_total",
+                "frames rejected by envelope parse (torn writes, line noise)",
+            ),
+            compress_ns: r.histogram(
+                "netsense_compress_ns",
+                "fused compress sweep duration, nanoseconds",
+            ),
+            decode_ns: r.histogram(
+                "netsense_decode_ns",
+                "fused decode-reduce sweep duration, nanoseconds",
+            ),
+            ctl_backoffs_total: r.counter(
+                "netsense_ctl_backoffs_total",
+                "controller multiplicative-backoff transitions",
+            ),
+            ctl_increases_total: r.counter(
+                "netsense_ctl_increases_total",
+                "controller additive-increase transitions",
+            ),
+            ratio: r.gauge("netsense_ratio", "compression ratio in force (rank 0)"),
+            live_ranks: r.gauge("netsense_live_ranks", "live ranks (rank 0's view)"),
+            epoch: r.gauge("netsense_epoch", "membership epoch (rank 0's view)"),
+            faults_kill_total: r.counter("netsense_faults_kill_total", "injected kill firings"),
+            faults_stall_total: r.counter("netsense_faults_stall_total", "injected stall firings"),
+            faults_flap_total: r.counter(
+                "netsense_faults_flap_total",
+                "injected link-flap firings",
+            ),
+            faults_duplicate_total: r.counter(
+                "netsense_faults_duplicate_total",
+                "injected duplicate-replay firings",
+            ),
+            faults_reorder_total: r.counter(
+                "netsense_faults_reorder_total",
+                "injected reorder firings",
+            ),
+            faults_partial_total: r.counter(
+                "netsense_faults_partial_total",
+                "injected torn-write (partial-kill) firings",
+            ),
+            sim_syncs_total: r.counter(
+                "netsense_sim_syncs_total",
+                "simulated sync rounds driven by the coordinator",
+            ),
+            checkpoint_restores_total: r.counter(
+                "netsense_checkpoint_restores_total",
+                "checkpoint restores applied",
+            ),
+        }
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counter_and_gauge_basics() {
+        let c = Counter::new();
+        assert_eq!(c.get(), 0);
+        c.inc();
+        c.add(41);
+        assert_eq!(c.get(), 42);
+        let g = Gauge::new();
+        assert_eq!(g.get(), 0.0);
+        g.set(0.125);
+        assert_eq!(g.get(), 0.125);
+        g.set(-3.5);
+        assert_eq!(g.get(), -3.5);
+    }
+
+    /// ISSUE satellite: bucketing edge cases — zero, u64::MAX, and the
+    /// power-of-two boundaries in between.
+    #[test]
+    fn histogram_bucket_edges() {
+        // Zero gets its own bucket.
+        assert_eq!(Histogram::bucket_index(0), 0);
+        // 1 = 2^0 → bucket 1; bucket i covers [2^(i-1), 2^i - 1].
+        assert_eq!(Histogram::bucket_index(1), 1);
+        assert_eq!(Histogram::bucket_index(2), 2);
+        assert_eq!(Histogram::bucket_index(3), 2);
+        assert_eq!(Histogram::bucket_index(4), 3);
+        assert_eq!(Histogram::bucket_index(7), 3);
+        assert_eq!(Histogram::bucket_index(8), 4);
+        // The top bucket holds everything from 2^63 up to u64::MAX.
+        assert_eq!(Histogram::bucket_index(1 << 63), 64);
+        assert_eq!(Histogram::bucket_index(u64::MAX), 64);
+        // Upper bounds mirror the index ranges.
+        assert_eq!(Histogram::bucket_upper_bound(0), 0);
+        assert_eq!(Histogram::bucket_upper_bound(1), 1);
+        assert_eq!(Histogram::bucket_upper_bound(3), 7);
+        assert_eq!(Histogram::bucket_upper_bound(64), u64::MAX);
+        // Every value lands in the bucket whose range contains it.
+        for v in [0u64, 1, 2, 3, 255, 256, 1_000_000, u64::MAX - 1, u64::MAX] {
+            let i = Histogram::bucket_index(v);
+            assert!(v <= Histogram::bucket_upper_bound(i), "{v} above bucket {i}");
+            if i > 0 {
+                assert!(
+                    v > Histogram::bucket_upper_bound(i - 1),
+                    "{v} belongs below bucket {i}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn histogram_observe_and_counts() {
+        let h = Histogram::new();
+        assert_eq!(h.percentile(0.5), 0, "empty histogram reports 0");
+        h.observe(0);
+        h.observe(1);
+        h.observe(100);
+        h.observe(u64::MAX);
+        assert_eq!(h.count(), 4);
+        let counts = h.bucket_counts();
+        assert_eq!(counts[0], 1);
+        assert_eq!(counts[1], 1);
+        assert_eq!(counts[Histogram::bucket_index(100)], 1);
+        assert_eq!(counts[64], 1);
+        // sum wraps with u64::MAX in play; count stays exact.
+        assert_eq!(counts.iter().sum::<u64>(), 4);
+    }
+
+    /// ISSUE satellite: percentile estimates are monotone in q and report
+    /// bucket upper bounds that bracket the observed values.
+    #[test]
+    fn histogram_percentiles_are_monotone() {
+        let h = Histogram::new();
+        for v in [3u64, 3, 3, 40, 40, 500, 500, 500, 9_000, 1_000_000] {
+            h.observe(v);
+        }
+        let qs = [0.0, 0.1, 0.25, 0.5, 0.75, 0.9, 0.99, 1.0];
+        let ps: Vec<u64> = qs.iter().map(|&q| h.percentile(q)).collect();
+        for w in ps.windows(2) {
+            assert!(w[0] <= w[1], "percentiles not monotone: {ps:?}");
+        }
+        // The median of this set is 500 → its bucket's upper bound (511).
+        assert_eq!(h.percentile(0.5), 511);
+        // p100 covers the max observation.
+        assert!(ps[qs.len() - 1] >= 1_000_000);
+        // Out-of-range q clamps instead of panicking.
+        assert_eq!(h.percentile(-1.0), h.percentile(0.0));
+        assert_eq!(h.percentile(2.0), h.percentile(1.0));
+    }
+
+    #[test]
+    fn registry_registers_and_dedupes() {
+        let r = Registry::new();
+        let a = r.counter("t_a", "a");
+        let b = r.counter("t_a", "a again");
+        assert!(std::ptr::eq(a, b), "same name must return the same metric");
+        a.inc();
+        assert_eq!(b.get(), 1);
+        let g = r.gauge("t_g", "g");
+        g.set(2.5);
+        let h = r.histogram("t_h", "h");
+        h.observe(9);
+        let snap = r.prometheus();
+        assert!(snap.contains("# TYPE t_a counter"), "{snap}");
+        assert!(snap.contains("t_a 1\n"), "{snap}");
+        assert!(snap.contains("t_g 2.5\n"), "{snap}");
+        assert!(snap.contains("# TYPE t_h histogram"), "{snap}");
+        assert!(snap.contains("t_h_bucket{le=\"15\"} 1"), "{snap}");
+        assert!(snap.contains("t_h_bucket{le=\"+Inf\"} 1"), "{snap}");
+        assert!(snap.contains("t_h_sum 9"), "{snap}");
+        assert!(snap.contains("t_h_count 1"), "{snap}");
+    }
+
+    #[test]
+    fn prometheus_buckets_are_cumulative() {
+        let r = Registry::new();
+        let h = r.histogram("t_cum", "cumulative check");
+        h.observe(1); // bucket 1 (le 1)
+        h.observe(2); // bucket 2 (le 3)
+        h.observe(3); // bucket 2
+        let snap = r.prometheus();
+        assert!(snap.contains("t_cum_bucket{le=\"1\"} 1"), "{snap}");
+        assert!(snap.contains("t_cum_bucket{le=\"3\"} 3"), "{snap}");
+        assert!(snap.contains("t_cum_bucket{le=\"+Inf\"} 3"), "{snap}");
+    }
+
+    #[test]
+    #[should_panic(expected = "different kind")]
+    fn registry_panics_on_kind_mismatch() {
+        let r = Registry::new();
+        r.counter("t_kind", "as counter");
+        r.gauge("t_kind", "as gauge");
+    }
+
+    #[test]
+    fn hot_metrics_register_once_on_the_global_registry() {
+        let m1 = hot();
+        let m2 = hot();
+        assert!(std::ptr::eq(m1, m2));
+        // Recording through hot() lands in the global snapshot. (Other
+        // tests share the process registry — assert on deltas only.)
+        let before = m1.rounds_total.get();
+        m1.rounds_total.inc();
+        assert!(m2.rounds_total.get() >= before + 1);
+        assert!(registry().prometheus().contains("netsense_rounds_total"));
+    }
+}

@@ -1,0 +1,102 @@
+//! Zero-overhead runtime telemetry: what the adaptive system *decided*
+//! and what each decision *cost*, observable without perturbing the
+//! zero-alloc hot paths it measures.
+//!
+//! Three dependency-free pieces:
+//!
+//! - **[`metrics`]** — a global registry of named atomic counters, gauges
+//!   and log₂-bucketed histograms (RTT, compress/decode ns, frame bytes,
+//!   recovery latency). Hot-path recording is a single relaxed atomic
+//!   add — lock-free, allocation-free — and the registry snapshots to
+//!   Prometheus text exposition format ([`metrics::Registry::prometheus`])
+//!   for files or the live scrape endpoint ([`serve`]).
+//! - **[`trace`]** — per-rank tracing spans in a preallocated ring buffer
+//!   (span id, parent, label, start/end ns, step), recorded by the live
+//!   worker loop around the fused compress sweep, the elastic ring round
+//!   and each decode-reduce, and exported as Chrome `trace_event` JSON
+//!   ([`trace::chrome_trace_json`]) — drop the file on
+//!   <https://ui.perfetto.dev> and read a multi-worker step off the
+//!   timeline, one track per rank.
+//! - **[`journal`]** — the controller decision journal: every
+//!   [`RatioController`](crate::sensing::RatioController) transition
+//!   (observed RTT/loss, phase, old → new ratio, predicted wire bytes)
+//!   and every round/membership event as flat `Copy` records in a
+//!   preallocated buffer, dumped as JSON per run and cross-checkable
+//!   against the run's [`SyncTrajectory`](crate::fault::SyncTrajectory)
+//!   and netsim replays.
+//!
+//! §Perf contract: recording a metric, opening/closing a span, and
+//! pushing a journal record are all allocation-free in steady state — the
+//! counting-allocator gates in [`crate::fault::collective`] run the fused
+//! send and receive paths *with telemetry on* and still assert 0
+//! allocs/step, and `telemetry_recording_is_allocation_free` below gates
+//! the recording primitives themselves. Registration (naming a metric)
+//! allocates once, at startup; export (JSON/Prometheus strings) is cold
+//! by construction.
+
+pub mod journal;
+pub mod metrics;
+pub mod serve;
+pub mod trace;
+
+pub use journal::{DecisionJournal, DecisionKind, DecisionRecord};
+pub use metrics::{hot, registry, Counter, Gauge, Histogram, HotMetrics, Registry};
+pub use serve::MetricsServer;
+pub use trace::{chrome_trace_json, SpanId, SpanRecord, Tracer};
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::alloc::thread_alloc_count;
+    use std::time::Instant;
+
+    /// The obs-layer half of the zero-alloc contract: one synthetic
+    /// "step" that records everything the live worker loop records —
+    /// nested spans, histogram observations, counter bumps, gauge sets,
+    /// and a journal push — performs ZERO heap allocations once warm.
+    #[test]
+    fn telemetry_recording_is_allocation_free() {
+        let origin = Instant::now();
+        let mut tracer = Tracer::new(0, 256, origin);
+        let mut journal = DecisionJournal::with_capacity(128);
+        let m = hot();
+        let mut step_no = 0u32;
+        let mut step = |tracer: &mut Tracer, journal: &mut DecisionJournal, step_no: &mut u32| {
+            let sp_step = tracer.start("step", *step_no);
+            let sp_c = tracer.start("compress", *step_no);
+            m.compress_ns.observe(1234);
+            tracer.end(sp_c);
+            let sp_r = tracer.start("round", *step_no);
+            for _ in 0..4 {
+                let sp_d = tracer.start("decode", *step_no);
+                m.decode_ns.observe(567);
+                tracer.end(sp_d);
+            }
+            m.rounds_total.inc();
+            m.bytes_sent_total.add(4096);
+            m.rtt_us.observe(250);
+            m.round_us.observe(300);
+            m.frame_bytes.observe(1024);
+            m.ratio.set(0.25);
+            tracer.end(sp_r);
+            tracer.end(sp_step);
+            journal.push(DecisionRecord {
+                kind: DecisionKind::Ratio,
+                step: *step_no,
+                old_ratio: 0.25,
+                new_ratio: 0.26,
+                ..DecisionRecord::default()
+            });
+            *step_no += 1;
+        };
+        for _ in 0..40 {
+            step(&mut tracer, &mut journal, &mut step_no);
+        }
+        let before = thread_alloc_count();
+        for _ in 0..10 {
+            step(&mut tracer, &mut journal, &mut step_no);
+        }
+        let allocs = thread_alloc_count() - before;
+        assert_eq!(allocs, 0, "telemetry recording allocated {allocs} times");
+    }
+}

@@ -1,0 +1,136 @@
+//! A tiny `std::net` scrape endpoint for live runs: every HTTP request
+//! gets a fresh Prometheus-text snapshot of the global registry.
+//!
+//! One background thread, a nonblocking listener polled at ~20 Hz, and a
+//! plain HTTP/1.0 response with `Connection: close` — enough for
+//! `curl`/Prometheus, nothing more. The accept loop never touches the
+//! hot path; it only *reads* the atomics the workers write.
+
+use std::io::{Read, Write};
+use std::net::TcpListener;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use super::metrics::registry;
+
+/// Handle to the background scrape thread. Dropping it (or calling
+/// [`shutdown`](MetricsServer::shutdown)) stops the thread.
+pub struct MetricsServer {
+    addr: std::net::SocketAddr,
+    stop: Arc<AtomicBool>,
+    handle: Option<JoinHandle<()>>,
+}
+
+impl MetricsServer {
+    /// Bind `addr` (e.g. `"127.0.0.1:0"` for an ephemeral port) and start
+    /// serving snapshots of the global registry.
+    pub fn start(addr: &str) -> std::io::Result<MetricsServer> {
+        let listener = TcpListener::bind(addr)?;
+        listener.set_nonblocking(true)?;
+        let local = listener.local_addr()?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop_flag = Arc::clone(&stop);
+        let handle = std::thread::Builder::new()
+            .name("netsense-metrics".into())
+            .spawn(move || serve_loop(listener, &stop_flag))
+            .expect("spawn metrics thread");
+        Ok(MetricsServer {
+            addr: local,
+            stop,
+            handle: Some(handle),
+        })
+    }
+
+    /// The bound address (useful with port 0).
+    pub fn local_addr(&self) -> std::net::SocketAddr {
+        self.addr
+    }
+
+    /// Stop the accept loop and join the thread.
+    pub fn shutdown(&mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for MetricsServer {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+fn serve_loop(listener: TcpListener, stop: &AtomicBool) {
+    while !stop.load(Ordering::SeqCst) {
+        match listener.accept() {
+            Ok((stream, _)) => {
+                // Best-effort: a scrape that fails mid-write is the
+                // scraper's problem, not the run's.
+                let _ = answer(stream);
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(Duration::from_millis(50));
+            }
+            Err(_) => std::thread::sleep(Duration::from_millis(50)),
+        }
+    }
+}
+
+fn answer(mut stream: std::net::TcpStream) -> std::io::Result<()> {
+    stream.set_read_timeout(Some(Duration::from_millis(200)))?;
+    stream.set_write_timeout(Some(Duration::from_millis(500)))?;
+    // Drain whatever request line/headers arrive; we answer any request
+    // the same way, so parsing would be ceremony.
+    let mut buf = [0u8; 1024];
+    let _ = stream.read(&mut buf);
+    let body = registry().prometheus();
+    let head = format!(
+        "HTTP/1.0 200 OK\r\nContent-Type: text/plain; version=0.0.4\r\nContent-Length: {}\r\nConnection: close\r\n\r\n",
+        body.len()
+    );
+    stream.write_all(head.as_bytes())?;
+    stream.write_all(body.as_bytes())?;
+    stream.flush()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::metrics::hot;
+
+    #[test]
+    fn scrape_endpoint_serves_a_prometheus_snapshot() {
+        // Touch the hot metrics so the snapshot is non-trivial.
+        hot().rounds_total.inc();
+        let mut server = MetricsServer::start("127.0.0.1:0").expect("bind ephemeral port");
+        let addr = server.local_addr();
+        let mut stream = std::net::TcpStream::connect(addr).expect("connect");
+        stream
+            .write_all(b"GET /metrics HTTP/1.0\r\n\r\n")
+            .expect("send request");
+        let mut response = String::new();
+        stream.read_to_string(&mut response).expect("read response");
+        assert!(response.starts_with("HTTP/1.0 200 OK"), "{response}");
+        assert!(
+            response.contains("text/plain; version=0.0.4"),
+            "{response}"
+        );
+        assert!(response.contains("netsense_rounds_total"), "{response}");
+        // Content-Length matches the body actually sent.
+        let (head, body) = response.split_once("\r\n\r\n").expect("header/body split");
+        let clen: usize = head
+            .lines()
+            .find_map(|l| l.strip_prefix("Content-Length: "))
+            .expect("Content-Length header")
+            .trim()
+            .parse()
+            .expect("numeric length");
+        assert_eq!(clen, body.len());
+        server.shutdown();
+        // Idempotent shutdown + Drop after shutdown must not hang.
+        server.shutdown();
+    }
+}

@@ -86,6 +86,41 @@ pub enum Phase {
     NetSense,
 }
 
+/// Which Algorithm 1 branch an interval took.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Branch {
+    /// Startup additive ramp (β₁).
+    StartupRamp,
+    /// Multiplicative decrease (α) — loss or BDP-guard violation.
+    Backoff,
+    /// Steady additive increase (β₂).
+    Increase,
+    /// No estimate yet / no adjustment this interval.
+    Hold,
+}
+
+/// Everything one [`RatioController::on_interval`] call observed and
+/// decided — the record the decision journal
+/// ([`crate::obs::journal`]) persists per interval.
+#[derive(Clone, Copy, Debug)]
+pub struct Transition {
+    /// 1-based interval counter (equals [`RatioController::intervals`]
+    /// after the call).
+    pub interval: u64,
+    pub phase_before: Phase,
+    pub phase_after: Phase,
+    pub old_ratio: f64,
+    pub new_ratio: f64,
+    /// Payload bytes the observation covered.
+    pub data_size_bytes: u64,
+    /// Measured transfer time fed in.
+    pub rtt: SimTime,
+    /// Whether the interval lost something.
+    pub lost: bool,
+    /// Which branch fired.
+    pub branch: Branch,
+}
+
 /// The Algorithm 1 state machine.
 #[derive(Clone, Debug)]
 pub struct RatioController {
@@ -97,6 +132,10 @@ pub struct RatioController {
     /// Diagnostics: how often each branch fired.
     pub n_decreases: u64,
     pub n_increases: u64,
+    /// The most recent interval's full transition record.
+    last_transition: Option<Transition>,
+    /// Branch taken by the current `on_interval` call (scratch).
+    branch: Branch,
 }
 
 impl RatioController {
@@ -111,6 +150,8 @@ impl RatioController {
             intervals: 0,
             n_decreases: 0,
             n_increases: 0,
+            last_transition: None,
+            branch: Branch::Hold,
             config,
         }
     }
@@ -144,6 +185,9 @@ impl RatioController {
     pub fn on_interval(&mut self, data_size_bytes: u64, rtt: SimTime, lost: bool) -> f64 {
         self.intervals += 1;
         self.estimator.observe(data_size_bytes, rtt);
+        let phase_before = self.phase;
+        let old_ratio = self.ratio;
+        self.branch = Branch::Hold;
 
         match self.phase {
             Phase::Startup => {
@@ -165,6 +209,7 @@ impl RatioController {
                     // Algorithm 1 line 5: quick ramp.
                     self.ratio = (self.ratio + self.config.beta1).min(1.0);
                     self.n_increases += 1;
+                    self.branch = Branch::StartupRamp;
                 }
             }
             Phase::NetSense => {
@@ -178,13 +223,33 @@ impl RatioController {
                 }
             }
         }
+        self.last_transition = Some(Transition {
+            interval: self.intervals,
+            phase_before,
+            phase_after: self.phase,
+            old_ratio,
+            new_ratio: self.ratio,
+            data_size_bytes,
+            rtt,
+            lost,
+            branch: self.branch,
+        });
         self.ratio
+    }
+
+    /// The full record of the most recent [`Self::on_interval`] call —
+    /// what was observed, which branch fired, and the old → new ratio.
+    /// `None` before the first interval. The decision journal persists
+    /// these; sensing itself stays telemetry-agnostic.
+    pub fn last_transition(&self) -> Option<Transition> {
+        self.last_transition
     }
 
     /// Multiplicative decrease (Algorithm 1 line 16) — the backoff branch.
     fn backoff(&mut self) {
         self.ratio = (self.ratio * self.config.alpha).max(self.config.min_ratio);
         self.n_decreases += 1;
+        self.branch = Branch::Backoff;
     }
 
     /// Transport-stage size the bucketed pipeline should use right now:
@@ -213,6 +278,7 @@ impl RatioController {
         } else {
             self.ratio = (self.ratio + self.config.beta2).min(1.0);
             self.n_increases += 1;
+            self.branch = Branch::Increase;
         }
     }
 }
@@ -317,6 +383,37 @@ mod tests {
         // And the next clean interval resumes the additive climb.
         let resumed = c.on_interval(100_000, SimTime::from_millis(100), false);
         assert!((resumed - (after + 0.01)).abs() < 1e-12);
+    }
+
+    /// The transition record mirrors exactly what `on_interval` did —
+    /// the observability layer journals these verbatim.
+    #[test]
+    fn last_transition_records_each_branch() {
+        let mut c = ctl();
+        assert!(c.last_transition().is_none());
+        // Startup ramp.
+        let r1 = c.on_interval(1000, SimTime::from_millis(10), false);
+        let t = c.last_transition().unwrap();
+        assert_eq!(t.interval, 1);
+        assert_eq!(t.branch, Branch::StartupRamp);
+        assert_eq!((t.phase_before, t.phase_after), (Phase::Startup, Phase::Startup));
+        assert_eq!(t.old_ratio, 0.01);
+        assert_eq!(t.new_ratio, r1);
+        assert_eq!(t.data_size_bytes, 1000);
+        assert_eq!(t.rtt, SimTime::from_millis(10));
+        assert!(!t.lost);
+        // Loss exits startup via backoff.
+        let r2 = c.on_interval(1000, SimTime::from_millis(10), true);
+        let t = c.last_transition().unwrap();
+        assert_eq!(t.branch, Branch::Backoff);
+        assert_eq!((t.phase_before, t.phase_after), (Phase::Startup, Phase::NetSense));
+        assert!(t.lost);
+        assert_eq!((t.old_ratio, t.new_ratio), (r1, r2));
+        // Clean under-BDP interval → additive increase.
+        let r3 = c.on_interval(100, SimTime::from_millis(10), false);
+        let t = c.last_transition().unwrap();
+        assert_eq!(t.branch, Branch::Increase);
+        assert_eq!((t.old_ratio, t.new_ratio), (r2, r3));
     }
 
     #[test]

@@ -15,5 +15,5 @@
 pub mod controller;
 pub mod estimator;
 
-pub use controller::{ControllerConfig, Phase, RatioController};
+pub use controller::{Branch, ControllerConfig, Phase, RatioController, Transition};
 pub use estimator::{BandwidthEstimator, EstimatorConfig, NetworkEstimate};

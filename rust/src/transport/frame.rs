@@ -52,6 +52,12 @@ pub fn encode_frame_into(payload: &[u8], out: &mut Vec<u8>) {
 /// needs no backpatching and no intermediate copy.
 pub fn encode_frame_header_into(payload_len: usize, out: &mut Vec<u8>) {
     assert!(payload_len <= MAX_FRAME_BYTES, "payload too large");
+    // Every encoded frame passes this choke point — one histogram
+    // observation gives the wire-size distribution for free (relaxed
+    // atomic, allocation-free; the zero-alloc gates cover this path).
+    crate::obs::hot()
+        .frame_bytes
+        .observe(payload_len as u64 + FRAME_OVERHEAD);
     out.extend_from_slice(&FRAME_MAGIC.to_le_bytes());
     out.extend_from_slice(&(payload_len as u32).to_le_bytes());
 }

@@ -1,0 +1,135 @@
+#!/usr/bin/env python3
+"""Validate the telemetry artifacts a live run emits (`make trace-smoke`).
+
+Usage: check_trace.py TRACE.json METRICS.prom [JOURNAL.json]
+
+Checks, hard-failing on the first violation:
+  trace   — well-formed Chrome trace_event JSON: complete events ("ph": "X")
+            with non-negative ts/dur, spans on one thread properly nested,
+            and the live loop's span labels all present.
+  metrics — parseable Prometheus text exposition whose histogram bucket
+            counts are cumulative, with the run's core series present.
+  journal — (optional) decision-journal JSON: schema_version 1, records
+            with known kinds, and every ratio transition chained
+            old_ratio -> new_ratio -> next old_ratio.
+"""
+
+import json
+import sys
+
+
+def fail(msg: str) -> None:
+    print(f"check_trace: FAIL: {msg}", file=sys.stderr)
+    sys.exit(1)
+
+
+def check_trace(path: str) -> None:
+    with open(path) as f:
+        doc = json.load(f)
+    events = doc.get("traceEvents")
+    if not isinstance(events, list) or not events:
+        fail(f"{path}: traceEvents missing or empty")
+    by_tid = {}
+    labels = set()
+    for i, ev in enumerate(events):
+        for key in ("name", "ph", "ts", "dur", "pid", "tid"):
+            if key not in ev:
+                fail(f"{path}: event {i} lacks `{key}`")
+        if ev["ph"] != "X":
+            fail(f"{path}: event {i} has ph={ev['ph']!r}, want complete events")
+        if ev["ts"] < 0 or ev["dur"] < 0:
+            fail(f"{path}: event {i} has negative ts/dur")
+        labels.add(ev["name"])
+        by_tid.setdefault(ev["tid"], []).append((ev["ts"], ev["ts"] + ev["dur"]))
+    for want in ("step", "compress", "round", "decode"):
+        if want not in labels:
+            fail(f"{path}: no `{want}` spans (have {sorted(labels)})")
+    # Within one thread, spans must nest: sorted by start, each span either
+    # contains or is disjoint from the next (tolerance for µs rounding).
+    eps = 1e-3
+    for tid, spans in by_tid.items():
+        # On a start-time tie the enclosing (longer) span must come first.
+        spans.sort(key=lambda x: (x[0], -x[1]))
+        stack = []
+        for s, e in spans:
+            while stack and s >= stack[-1] - eps:
+                stack.pop()
+            if stack and e > stack[-1] + eps:
+                fail(f"{path}: tid {tid}: span [{s}, {e}] crosses enclosing end {stack[-1]}")
+            stack.append(e)
+    print(f"check_trace: {path}: {len(events)} events across {len(by_tid)} ranks, "
+          f"labels {sorted(labels)}")
+
+
+def check_metrics(path: str) -> None:
+    with open(path) as f:
+        text = f.read()
+    seen = set()
+    buckets = {}
+    for lineno, line in enumerate(text.splitlines(), 1):
+        if not line or line.startswith("#"):
+            continue
+        parts = line.rsplit(None, 1)
+        if len(parts) != 2:
+            fail(f"{path}:{lineno}: not `name value`: {line!r}")
+        name, value = parts
+        try:
+            v = float(value)
+        except ValueError:
+            fail(f"{path}:{lineno}: non-numeric value {value!r}")
+        base = name.split("{")[0]
+        seen.add(base)
+        if base.endswith("_bucket"):
+            series = buckets.setdefault(base, [])
+            if series and v < series[-1]:
+                fail(f"{path}:{lineno}: {base} counts not cumulative ({v} < {series[-1]})")
+            series.append(v)
+        elif base.endswith("_count") and v < 0:
+            fail(f"{path}:{lineno}: negative count")
+    for want in ("netsense_rounds_total", "netsense_rtt_us_bucket",
+                 "netsense_compress_ns_bucket", "netsense_decode_ns_bucket",
+                 "netsense_frame_bytes_bucket", "netsense_ratio"):
+        if want not in seen:
+            fail(f"{path}: series `{want}` missing")
+    print(f"check_trace: {path}: {len(seen)} series, histogram buckets cumulative")
+
+
+def check_journal(path: str) -> None:
+    with open(path) as f:
+        doc = json.load(f)
+    if doc.get("schema_version") != 1:
+        fail(f"{path}: schema_version != 1")
+    records = doc.get("records")
+    if not isinstance(records, list) or not records:
+        fail(f"{path}: records missing or empty")
+    kinds = {"ratio", "round", "membership"}
+    prev_new = None
+    n_ratio = 0
+    for i, r in enumerate(records):
+        if r.get("kind") not in kinds:
+            fail(f"{path}: record {i} has kind {r.get('kind')!r}")
+        if r["kind"] != "ratio":
+            continue
+        n_ratio += 1
+        if prev_new is not None and abs(r["old_ratio"] - prev_new) > 1e-12:
+            fail(f"{path}: record {i} breaks the ratio chain "
+                 f"({prev_new} -> old_ratio {r['old_ratio']})")
+        prev_new = r["new_ratio"]
+    if n_ratio == 0:
+        fail(f"{path}: no ratio transitions recorded")
+    print(f"check_trace: {path}: {len(records)} records, {n_ratio}-link ratio chain intact")
+
+
+def main() -> None:
+    if len(sys.argv) not in (3, 4):
+        print(__doc__, file=sys.stderr)
+        sys.exit(2)
+    check_trace(sys.argv[1])
+    check_metrics(sys.argv[2])
+    if len(sys.argv) == 4:
+        check_journal(sys.argv[3])
+    print("check_trace: OK")
+
+
+if __name__ == "__main__":
+    main()

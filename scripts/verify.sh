@@ -34,6 +34,13 @@ echo "== receive-path gates: decode-reduce corruption + zero-alloc (FAST-safe) =
 cargo test -q --lib decode_reduce
 cargo test -q --lib allocation_free
 
+# Observability gates, run by name for the same reason: the metrics
+# registry / span ring / decision journal unit tests and the live-run
+# acceptance test (trace + journal + snapshot cross-checks). The
+# zero-alloc gates above already run with telemetry enabled.
+echo "== observability gates: registry + spans + journal (FAST-safe) =="
+cargo test -q --lib obs
+
 # Adversarial gates, run by name for the same reason: the deterministic
 # wire-surface fuzz harness (frame codec, COO payloads, epoch envelopes,
 # checkpoints — malformed input → named Err, never a panic or OOB
