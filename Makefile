@@ -1,5 +1,5 @@
 # Entry points referenced by the docs and code comments.
-.PHONY: artifacts verify fuzz-smoke bench-transport bench-json trace-smoke
+.PHONY: artifacts verify fuzz-smoke bench-transport bench-json trace-smoke perf-compare
 
 # AOT-lower the JAX/Pallas models (L1+L2) to HLO text artifacts consumed by
 # the rust runtime (`--features pjrt`). Needs JAX; run once, never on the
@@ -38,6 +38,14 @@ bench-json:
 	cargo bench --bench bench_obs
 	cargo bench --bench bench_pipeline
 	cargo bench --bench bench_transport
+
+# Perf-trajectory gate: rerun the JSON benches and diff against the
+# committed baselines (baselines/perf/). Direction-aware — throughput keys
+# must not drop, cost keys must not rise, alloc counters are exact.
+# PERF_TOLERANCE widens the relative band (default 0.35);
+# PERF_COMPARE_MODE=warn reports without failing (noisy shared runners).
+perf-compare: bench-json
+	python3 scripts/perf_compare.py
 
 # Telemetry smoke: a short healthy live run with tracing, the decision
 # journal, and a metrics snapshot enabled, then structural validation of

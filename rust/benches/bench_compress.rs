@@ -11,6 +11,7 @@ mod common;
 use common::{gbps, BenchJson};
 use netsenseml::compress::bucket::{BucketLayout, BucketedCompressor};
 use netsenseml::compress::quantize::{f32_to_f16_bits, Precision};
+use netsenseml::compress::simd::{self, SimdLevel};
 use netsenseml::compress::topk::{top_k_indices, top_k_with_threshold_hint};
 use netsenseml::compress::{
     decode_reduce_frame_into, decode_reduce_into, CompressionConfig, NetSenseCompressor,
@@ -269,6 +270,159 @@ fn main() {
     b.run_throughput("add_into (aggregate)", sg.nnz() as u64, || {
         sg.add_into(bb(&mut acc_buf));
     });
+
+    // ---- SIMD kernels vs scalar reference (the tentpole trajectory) -----
+    {
+        let active = simd::active_level();
+        let level_tag = format!("{active:?}").to_lowercase();
+        json.set("simd_level", level_tag.as_str());
+        b.group(&format!(
+            "simd kernels, scalar vs {level_tag} (11.55M elems)"
+        ));
+
+        // quantize f32 → f16 bits
+        let mut bits = vec![0u16; n];
+        let q_scalar = b
+            .run_throughput("quantize f16 scalar", n as u64, || {
+                simd::quantize_f16_bits_with(SimdLevel::Scalar, bb(&g), bb(&mut bits));
+            })
+            .clone();
+        let q_simd = b
+            .run_throughput(&format!("quantize f16 {level_tag}"), n as u64, || {
+                simd::quantize_f16_bits_with(active, bb(&g), bb(&mut bits));
+            })
+            .clone();
+        json.set("simd_quantize_f16_scalar_gbps", gbps(n, q_scalar.mean));
+        json.set("simd_quantize_f16_gbps", gbps(n, q_simd.mean));
+        json.set(
+            "simd_quantize_f16_speedup",
+            q_scalar.mean.as_secs_f64() / q_simd.mean.as_secs_f64(),
+        );
+
+        // dequantize f16 bits → f32
+        let mut floats = vec![0f32; n];
+        let d_scalar = b
+            .run_throughput("dequantize f16 scalar", n as u64, || {
+                simd::dequantize_f16_bits_with(SimdLevel::Scalar, bb(&bits), bb(&mut floats));
+            })
+            .clone();
+        let d_simd = b
+            .run_throughput(&format!("dequantize f16 {level_tag}"), n as u64, || {
+                simd::dequantize_f16_bits_with(active, bb(&bits), bb(&mut floats));
+            })
+            .clone();
+        json.set("simd_dequantize_f16_scalar_gbps", gbps(n, d_scalar.mean));
+        json.set("simd_dequantize_f16_gbps", gbps(n, d_simd.mean));
+        json.set(
+            "simd_dequantize_f16_speedup",
+            d_scalar.mean.as_secs_f64() / d_simd.mean.as_secs_f64(),
+        );
+
+        // threshold scan (the steady-state top-k pre-filter, ~1% pass rate)
+        let (_, kth) = top_k_with_threshold_hint(&g, n / 100, None, 0.25);
+        let mut sel = Vec::with_capacity(n);
+        let t_scalar = b
+            .run_throughput("threshold scan scalar", n as u64, || {
+                simd::threshold_select_into_with(SimdLevel::Scalar, bb(&g), kth, bb(&mut sel));
+            })
+            .clone();
+        let t_simd = b
+            .run_throughput(&format!("threshold scan {level_tag}"), n as u64, || {
+                simd::threshold_select_into_with(active, bb(&g), kth, bb(&mut sel));
+            })
+            .clone();
+        json.set("simd_threshold_scan_scalar_gbps", gbps(n, t_scalar.mean));
+        json.set("simd_threshold_scan_gbps", gbps(n, t_simd.mean));
+        json.set(
+            "simd_threshold_scan_speedup",
+            t_scalar.mean.as_secs_f64() / t_simd.mean.as_secs_f64(),
+        );
+
+        // fused compensate + striped L2 sweep
+        let residual = randn(n, 9);
+        let mut comp = Vec::with_capacity(n);
+        let c_scalar = b
+            .run_throughput("compensate+L2 scalar", n as u64, || {
+                bb(simd::compensate_sum_sq_extend_with(
+                    SimdLevel::Scalar,
+                    bb(&g),
+                    bb(&residual),
+                    &mut comp,
+                ));
+            })
+            .clone();
+        let c_simd = b
+            .run_throughput(&format!("compensate+L2 {level_tag}"), n as u64, || {
+                bb(simd::compensate_sum_sq_extend_with(
+                    active,
+                    bb(&g),
+                    bb(&residual),
+                    &mut comp,
+                ));
+            })
+            .clone();
+        json.set("simd_compensate_l2_scalar_gbps", gbps(n, c_scalar.mean));
+        json.set("simd_compensate_l2_gbps", gbps(n, c_simd.mean));
+        json.set(
+            "simd_compensate_l2_speedup",
+            c_scalar.mean.as_secs_f64() / c_simd.mean.as_secs_f64(),
+        );
+    }
+
+    // ---- lossless stage: wire reduction + fused round-trip --------------
+    {
+        let cfg = CompressionConfig {
+            lossless: true,
+            ..Default::default()
+        };
+        // ratio 0.01 quantizes to f16 — the payload 3LC targets.
+        let mut c = NetSenseCompressor::new(n, cfg.clone());
+        let mut ws = Workspace::with_capacity(n);
+        let mut frame: Vec<u8> = Vec::new();
+        b.group("lossless stage (11.55M elems, ratio 0.01 → f16)");
+        let mut last_outcome = Default::default();
+        let fused = b
+            .run_throughput("fused compress_frame_into (lossless)", n as u64, || {
+                frame.clear();
+                last_outcome = bb(c.compress_frame_into(bb(&g), bb(&w), 0.01, &mut ws, &mut frame));
+            })
+            .clone();
+        let o: netsenseml::compress::FusedOutcome = last_outcome;
+        eprintln!(
+            "  lossless wire {} vs raw {} ({:.2}x reduction, won: {})",
+            o.wire_bytes,
+            o.raw_wire_bytes,
+            o.raw_wire_bytes as f64 / o.wire_bytes as f64,
+            o.lossless
+        );
+        json.set("lossless_wire_bytes", o.wire_bytes);
+        json.set("lossless_raw_wire_bytes", o.raw_wire_bytes);
+        json.set(
+            "lossless_wire_reduction",
+            o.raw_wire_bytes as f64 / o.wire_bytes as f64,
+        );
+        json.set("lossless_fused_gbps", gbps(n, fused.mean));
+
+        let mut acc = vec![0f32; n];
+        let dec = b
+            .run_throughput("fused decode_reduce_frame_into (lossless)", n as u64, || {
+                bb(decode_reduce_frame_into(bb(&frame), bb(&mut acc)).unwrap());
+            })
+            .clone();
+        json.set("lossless_decode_gbps", gbps(n, dec.mean));
+
+        let mut c2 = NetSenseCompressor::new(n, cfg);
+        let mut ws2 = Workspace::with_capacity(n);
+        let mut frame2: Vec<u8> = Vec::new();
+        let mut acc2 = vec![0f32; n];
+        let lossless_allocs = allocs_per_step(|| {
+            frame2.clear();
+            bb(c2.compress_frame_into(&g, &w, 0.01, &mut ws2, &mut frame2));
+            bb(decode_reduce_frame_into(&frame2, bb(&mut acc2)).unwrap());
+        });
+        eprintln!("  lossless round-trip allocs/step: {lossless_allocs}");
+        json.set("lossless_allocs_per_step", lossless_allocs);
+    }
 
     b.group("Algorithm 2 staged pipeline (ResNet18-size)");
     let mut c = NetSenseCompressor::new(n, CompressionConfig::default());

@@ -1,0 +1,686 @@
+//! 3LC-style lossless stage: zero-run-length encoding over byte planes of
+//! the quantized COO payload (DESIGN.md §3.11; PAPERS.md: Lim et al.,
+//! "3LC", arXiv 1802.07389).
+//!
+//! Quantized gradient payloads are highly structured: index deltas of a
+//! top-k selection are small (high delta bytes are almost all zero), and
+//! the low mantissa byte of f16/bf16 values clusters near zero for
+//! small-magnitude gradients. Splitting each little-endian word into byte
+//! planes and run-length-encoding the zeros typically buys another ~2×
+//! wire reduction **at zero accuracy cost** — decode is bit-exact.
+//!
+//! # Wire layout (codec byte = 1 in the COO header)
+//!
+//! ```text
+//! offset 0   [u32 n_total]                  ┐
+//! offset 4   [u32 nnz]                      │ standard 12-byte COO header
+//! offset 8   [u8 precision][u8 codec=1]     │ (codec was a pad byte; raw
+//! offset 10  [u8 0][u8 0]                   ┘  frames carry codec=0)
+//! offset 12  plane 0   [u32 comp_len][comp_len bytes ZRLE]
+//!            plane 1   …
+//!            …
+//! ```
+//!
+//! There are `4 + precision.bytes()` planes: four for the
+//! **delta-encoded indices** (`d₀ = idx₀`, `dⱼ = idxⱼ − idxⱼ₋₁ − 1`;
+//! strictly-ascending by construction on decode), then one per value
+//! byte. Plane *p* holds byte *p* (little-endian) of every word, in
+//! element order; each plane decodes to exactly `nnz` bytes.
+//!
+//! # ZRLE token stream
+//!
+//! A control byte `c < 0x80` is a **literal** run: the next `c + 1` bytes
+//! are copied verbatim. A control byte `c ≥ 0x80` is a **zero** run of
+//! `c − 0x7f` bytes (1–128). The encoder emits zero tokens only for
+//! maximal zero runs of length ≥ 2 (isolated zeros ride inside literals),
+//! bounding worst-case expansion at ~0.8%; the decoder accepts any
+//! well-formed token stream. Per-bucket negotiation in
+//! [`crate::compress::NetSenseCompressor::compress_frame_into`] ships the
+//! raw codec whenever the staged payload would not shrink, so
+//! incompressible buckets never pay the expansion.
+//!
+//! # Contracts
+//!
+//! - **Bit-exact**: a lossless frame decodes to exactly the bytes the raw
+//!   twin would carry — fused decode-reduce and the staged
+//!   [`SparseGradient`] decoder both accept it with identical results.
+//! - **Accumulator untouched on error**: the fused decoder fully
+//!   validates structure, indices, and plane totals *before* the first
+//!   scatter.
+//! - **Zero allocations** on the encode and fused-decode success paths
+//!   (the encoder writes into caller-owned scratch; the decoder streams
+//!   from borrowed planes).
+
+use super::quantize::{bf16_bits_to_f32, f16_bits_to_f32, Precision};
+use super::sparse::{DecodeReduceOutcome, SparseGradient, COO_HEADER_BYTES};
+
+/// Codec tag for this stage in COO header byte 9 (raw frames carry 0).
+pub(crate) const CODEC_LOSSLESS: u8 = 1;
+
+/// Upper bound on plane count (4 index planes + up to 4 value planes).
+const MAX_PLANES: usize = 8;
+
+fn truncated() -> String {
+    "lossless plane truncated".to_string()
+}
+
+// ---------------------------------------------------------------------------
+// ZRLE encode
+// ---------------------------------------------------------------------------
+
+/// Append the ZRLE stream for the `n`-byte virtual sequence `byte_at` to
+/// `out`. Canonical form: maximal zero runs ≥ 2 become zero tokens,
+/// everything else is packed into literal tokens of ≤ 128 bytes.
+fn zrle_encode<F: Fn(usize) -> u8>(n: usize, byte_at: F, out: &mut Vec<u8>) {
+    let mut i = 0usize;
+    while i < n {
+        // Literal segment [i, j): stops where a zero run of ≥ 2 begins.
+        let mut j = i;
+        while j < n {
+            if byte_at(j) == 0 && j + 1 < n && byte_at(j + 1) == 0 {
+                break;
+            }
+            j += 1;
+        }
+        let mut s = i;
+        while s < j {
+            let take = (j - s).min(128);
+            out.push((take - 1) as u8);
+            for t in s..s + take {
+                out.push(byte_at(t));
+            }
+            s += take;
+        }
+        i = j;
+        // Zero segment: all zeros from here (≥ 2 by the break condition,
+        // or we are at the end).
+        let mut z = i;
+        while z < n && byte_at(z) == 0 {
+            z += 1;
+        }
+        let mut left = z - i;
+        while left > 0 {
+            let take = left.min(128);
+            out.push((0x7f + take) as u8);
+            left -= take;
+        }
+        i = z;
+    }
+}
+
+/// Write one `[u32 comp_len][ZRLE]` plane section.
+fn encode_plane<F: Fn(usize) -> u8>(n: usize, byte_at: F, out: &mut Vec<u8>) {
+    let len_pos = out.len();
+    out.extend_from_slice(&[0u8; 4]);
+    let start = out.len();
+    zrle_encode(n, byte_at, out);
+    let comp = (out.len() - start) as u32;
+    out[len_pos..len_pos + 4].copy_from_slice(&comp.to_le_bytes());
+}
+
+#[inline]
+fn index_delta(indices: &[u32], j: usize) -> u32 {
+    if j == 0 {
+        indices[0]
+    } else {
+        indices[j] - indices[j - 1] - 1
+    }
+}
+
+/// Encode `dense[indices]` at `precision` as a complete lossless COO
+/// payload (header included) into `out`, which is cleared first.
+/// `val_bits` is caller scratch for the quantized wire words (reused
+/// across steps → zero steady-state allocations). Returns the payload
+/// length; the caller compares it against the raw size
+/// (`12 + nnz·(4 + precision.bytes())`) and ships whichever is smaller.
+pub(crate) fn encode_gathered_lossless_into(
+    dense: &[f32],
+    indices: &[u32],
+    precision: Precision,
+    val_bits: &mut Vec<u32>,
+    out: &mut Vec<u8>,
+) -> usize {
+    let nnz = indices.len();
+    out.clear();
+    out.extend_from_slice(&(dense.len() as u32).to_le_bytes());
+    out.extend_from_slice(&(nnz as u32).to_le_bytes());
+    out.push(match precision {
+        Precision::F32 => 0,
+        Precision::F16 => 1,
+        Precision::Bf16 => 2,
+    });
+    out.push(CODEC_LOSSLESS);
+    out.extend_from_slice(&[0u8; 2]);
+    // Quantize once into scratch; the planes read these words. The same
+    // conversions as the raw wire path, so decode is bit-identical to the
+    // raw twin.
+    val_bits.clear();
+    val_bits.reserve(nnz);
+    match precision {
+        Precision::F32 => {
+            for &i in indices {
+                val_bits.push(dense[i as usize].to_bits());
+            }
+        }
+        Precision::F16 => {
+            for &i in indices {
+                val_bits.push(super::quantize::f32_to_f16_bits(dense[i as usize]) as u32);
+            }
+        }
+        Precision::Bf16 => {
+            for &i in indices {
+                val_bits.push(super::quantize::f32_to_bf16_bits(dense[i as usize]) as u32);
+            }
+        }
+    }
+    for p in 0..4usize {
+        let shift = 8 * p as u32;
+        encode_plane(nnz, |j| (index_delta(indices, j) >> shift) as u8, out);
+    }
+    for p in 0..precision.bytes() {
+        let shift = 8 * p as u32;
+        encode_plane(nnz, |j| (val_bits[j] >> shift) as u8, out);
+    }
+    out.len()
+}
+
+// ---------------------------------------------------------------------------
+// Decode
+// ---------------------------------------------------------------------------
+
+/// A streaming reader over one plane's ZRLE tokens (borrowed, no
+/// allocation on the success path).
+struct PlaneStream<'a> {
+    data: &'a [u8],
+    pos: usize,
+    zeros_left: usize,
+    lit_left: usize,
+}
+
+impl<'a> PlaneStream<'a> {
+    fn new(data: &'a [u8]) -> Self {
+        PlaneStream {
+            data,
+            pos: 0,
+            zeros_left: 0,
+            lit_left: 0,
+        }
+    }
+
+    fn next_byte(&mut self) -> Result<u8, String> {
+        loop {
+            if self.zeros_left > 0 {
+                self.zeros_left -= 1;
+                return Ok(0);
+            }
+            if self.lit_left > 0 {
+                let b = *self.data.get(self.pos).ok_or_else(truncated)?;
+                self.pos += 1;
+                self.lit_left -= 1;
+                return Ok(b);
+            }
+            let c = *self.data.get(self.pos).ok_or_else(truncated)?;
+            self.pos += 1;
+            if c < 0x80 {
+                self.lit_left = c as usize + 1;
+            } else {
+                self.zeros_left = c as usize - 0x7f;
+            }
+        }
+    }
+
+    /// True once every token has been fully consumed.
+    fn finished(&self) -> bool {
+        self.pos == self.data.len() && self.zeros_left == 0 && self.lit_left == 0
+    }
+}
+
+/// Structural view of a lossless payload: the plane slices, bounds-checked
+/// against the buffer (total length must match exactly, mirroring the raw
+/// codec's "bad length" contract).
+pub(crate) struct LosslessView<'a> {
+    planes: [&'a [u8]; MAX_PLANES],
+    n_planes: usize,
+}
+
+pub(crate) fn parse_lossless_planes(
+    buf: &[u8],
+    precision: Precision,
+) -> Result<LosslessView<'_>, String> {
+    let n_planes = 4 + precision.bytes();
+    let mut planes: [&[u8]; MAX_PLANES] = [&[]; MAX_PLANES];
+    let mut off = COO_HEADER_BYTES;
+    for slot in planes.iter_mut().take(n_planes) {
+        if buf.len() < off + 4 {
+            return Err(truncated());
+        }
+        let len = u32::from_le_bytes(buf[off..off + 4].try_into().unwrap()) as usize;
+        off += 4;
+        if buf.len() - off < len {
+            return Err(truncated());
+        }
+        *slot = &buf[off..off + len];
+        off += len;
+    }
+    if off != buf.len() {
+        return Err(format!("bad length {} (expected {off})", buf.len()));
+    }
+    Ok(LosslessView { planes, n_planes })
+}
+
+/// Streaming walk over a parsed payload: reconstructs `(index, word)`
+/// pairs, enforcing the strictly-ascending-by-construction index chain
+/// and the `n_total` bound as it goes.
+struct LosslessReader<'a> {
+    streams: [PlaneStream<'a>; MAX_PLANES],
+    n_val_planes: usize,
+    prev: i64,
+    n_total: usize,
+}
+
+impl<'a> LosslessReader<'a> {
+    fn new(view: &LosslessView<'a>, n_total: usize) -> Self {
+        LosslessReader {
+            streams: std::array::from_fn(|p| PlaneStream::new(view.planes[p])),
+            n_val_planes: view.n_planes - 4,
+            prev: -1,
+            n_total,
+        }
+    }
+
+    fn next_entry(&mut self) -> Result<(u32, u32), String> {
+        let mut d = 0u32;
+        for p in 0..4usize {
+            d |= (self.streams[p].next_byte()? as u32) << (8 * p as u32);
+        }
+        // Delta-plus-one chain: ascending by construction, so the only
+        // index failure mode left is the n_total bound.
+        let i = if self.prev < 0 {
+            d as i64
+        } else {
+            self.prev + 1 + d as i64
+        };
+        if i >= self.n_total as i64 {
+            return Err(format!("index {i} out of range {}", self.n_total));
+        }
+        self.prev = i;
+        let mut w = 0u32;
+        for p in 0..self.n_val_planes {
+            w |= (self.streams[4 + p].next_byte()? as u32) << (8 * p as u32);
+        }
+        Ok((i as u32, w))
+    }
+
+    /// After `nnz` entries every plane must be exactly drained — a plane
+    /// whose tokens decode to more than `nnz` bytes is malformed.
+    fn finish(&self) -> Result<(), String> {
+        let live = self.n_val_planes + 4;
+        for s in self.streams.iter().take(live) {
+            if !s.finished() {
+                return Err("lossless plane length mismatch".to_string());
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Shared validation walk: proves the whole payload well-formed (bounds,
+/// plane totals) without touching any accumulator. Both decoders run this
+/// first so they accept exactly the same frames by construction.
+fn validate(view: &LosslessView<'_>, n_total: usize, nnz: usize) -> Result<(), String> {
+    if nnz > n_total {
+        // Strictly-ascending indices in [0, n_total) can't number more
+        // than n_total; rejecting early also bounds the token walk.
+        return Err(format!("nnz {nnz} exceeds n_total {n_total}"));
+    }
+    let mut r = LosslessReader::new(view, n_total);
+    for _ in 0..nnz {
+        r.next_entry()?;
+    }
+    r.finish()
+}
+
+#[inline]
+fn word_to_f32(w: u32, precision: Precision) -> f32 {
+    match precision {
+        Precision::F32 => f32::from_bits(w),
+        Precision::F16 => f16_bits_to_f32(w as u16),
+        Precision::Bf16 => bf16_bits_to_f32(w as u16),
+    }
+}
+
+/// Fused decode + accumulate for a lossless payload — the codec-1 branch
+/// of [`crate::compress::decode_reduce_into`]. Two passes: a full
+/// validation walk (accumulator untouched on any error), then the
+/// reconstruct + scatter sweep. Zero heap allocations on success.
+pub(crate) fn decode_reduce_lossless(
+    buf: &[u8],
+    n_total: usize,
+    nnz: usize,
+    precision: Precision,
+    out: &mut [f32],
+) -> Result<DecodeReduceOutcome, String> {
+    let view = parse_lossless_planes(buf, precision)?;
+    validate(&view, n_total, nnz)?;
+    let mut r = LosslessReader::new(&view, n_total);
+    for _ in 0..nnz {
+        // Cannot fail: validate() walked the identical token stream.
+        let (i, w) = r.next_entry()?;
+        out[i as usize] += word_to_f32(w, precision);
+    }
+    Ok(DecodeReduceOutcome { nnz, precision })
+}
+
+/// Staged (allocating) decoder for a lossless payload — the codec-1
+/// branch of [`SparseGradient::decode`]. Accepts exactly the frames
+/// [`decode_reduce_lossless`] accepts (shared [`validate`] walk), so the
+/// fused-vs-staged differential holds on this surface too.
+pub(crate) fn decode_lossless_sparse(
+    buf: &[u8],
+    n_total: usize,
+    nnz: usize,
+    precision: Precision,
+) -> Result<SparseGradient, String> {
+    let view = parse_lossless_planes(buf, precision)?;
+    validate(&view, n_total, nnz)?;
+    let mut indices = Vec::with_capacity(nnz);
+    let mut values = Vec::with_capacity(nnz);
+    let mut r = LosslessReader::new(&view, n_total);
+    for _ in 0..nnz {
+        let (i, w) = r.next_entry()?;
+        indices.push(i);
+        values.push(word_to_f32(w, precision));
+    }
+    Ok(SparseGradient {
+        n_total,
+        indices,
+        values,
+        precision,
+    })
+}
+
+/// Decode one plane of a payload into `dst` (test/tooling helper): plane
+/// `p` must decode to exactly `dst.len()` bytes.
+#[cfg(test)]
+fn decode_plane(view: &LosslessView<'_>, p: usize, dst: &mut [u8]) -> Result<(), String> {
+    let mut s = PlaneStream::new(view.planes[p]);
+    for b in dst.iter_mut() {
+        *b = s.next_byte()?;
+    }
+    if !s.finished() {
+        return Err("lossless plane length mismatch".to_string());
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// Raw-size accounting
+// ---------------------------------------------------------------------------
+
+/// The raw-codec size this payload would occupy — the negotiation
+/// baseline (`12 + nnz·(4 + value_bytes)`).
+pub(crate) fn raw_wire_bytes(nnz: usize, precision: Precision) -> usize {
+    COO_HEADER_BYTES + nnz * (4 + precision.bytes())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::sparse::decode_reduce_into;
+    use crate::compress::topk::top_k_indices;
+    use crate::util::rng::Pcg64;
+
+    /// Round-trip through the standalone ZRLE codec.
+    fn zrle_roundtrip(bytes: &[u8]) -> Vec<u8> {
+        let mut enc = Vec::new();
+        zrle_encode(bytes.len(), |i| bytes[i], &mut enc);
+        let mut s = PlaneStream::new(&enc);
+        let mut out = vec![0u8; bytes.len()];
+        for b in out.iter_mut() {
+            *b = s.next_byte().unwrap();
+        }
+        assert!(s.finished(), "tokens must drain exactly");
+        out
+    }
+
+    #[test]
+    fn zrle_roundtrips_edge_patterns() {
+        let cases: Vec<Vec<u8>> = vec![
+            vec![],
+            vec![0],
+            vec![7],
+            vec![0, 0],
+            vec![0; 5],
+            vec![0; 128],
+            vec![0; 129],
+            vec![0; 300],
+            vec![1; 200],
+            vec![1, 0, 2, 0, 3],          // isolated zeros stay literal
+            vec![0, 0, 1, 0, 0, 2, 0, 0], // zero runs around literals
+            vec![5, 0],                   // single trailing zero
+            (0..=255u8).collect(),
+            [vec![0; 130], vec![9], vec![0; 2]].concat(),
+        ];
+        for c in cases {
+            assert_eq!(zrle_roundtrip(&c), c, "pattern {:?}…", &c[..c.len().min(8)]);
+        }
+    }
+
+    #[test]
+    fn zrle_roundtrips_random_buffers() {
+        let mut rng = Pcg64::seeded(0x31c0);
+        for len in [1usize, 3, 17, 64, 255, 1024] {
+            for density in [0u64, 2, 5, 9] {
+                let bytes: Vec<u8> = (0..len)
+                    .map(|_| {
+                        if rng.next_u64() % 10 <= density {
+                            0
+                        } else {
+                            rng.next_u64() as u8
+                        }
+                    })
+                    .collect();
+                assert_eq!(zrle_roundtrip(&bytes), bytes);
+            }
+        }
+    }
+
+    #[test]
+    fn zrle_compresses_sparse_planes() {
+        let mut bytes = vec![0u8; 1000];
+        bytes[3] = 7;
+        bytes[500] = 9;
+        let mut enc = Vec::new();
+        zrle_encode(bytes.len(), |i| bytes[i], &mut enc);
+        assert!(enc.len() < 30, "ZRLE stream was {} bytes", enc.len());
+    }
+
+    fn sample_payload(precision: Precision) -> (Vec<f32>, Vec<u32>, Vec<u8>) {
+        let mut rng = Pcg64::seeded(77);
+        let n = 512usize;
+        let dense: Vec<f32> = (0..n)
+            .map(|_| (rng.next_u64() as i32 as f32) * 1e-7)
+            .collect();
+        let indices = top_k_indices(&dense, 40);
+        let mut scratch = Vec::new();
+        let mut out = Vec::new();
+        encode_gathered_lossless_into(&dense, &indices, precision, &mut scratch, &mut out);
+        (dense, indices, out)
+    }
+
+    #[test]
+    fn lossless_decodes_bit_identical_to_raw_twin() {
+        for precision in [Precision::F32, Precision::F16, Precision::Bf16] {
+            let (dense, indices, wire) = sample_payload(precision);
+            let mut raw = Vec::new();
+            crate::compress::sparse::encode_gathered_into(&dense, &indices, precision, &mut raw);
+            let mut from_lossless = vec![0f32; dense.len()];
+            let o1 = decode_reduce_into(&wire, &mut from_lossless).unwrap();
+            let mut from_raw = vec![0f32; dense.len()];
+            let o2 = decode_reduce_into(&raw, &mut from_raw).unwrap();
+            assert_eq!(o1, o2);
+            let a: Vec<u32> = from_lossless.iter().map(|x| x.to_bits()).collect();
+            let b: Vec<u32> = from_raw.iter().map(|x| x.to_bits()).collect();
+            assert_eq!(a, b, "lossless decode must be bit-identical ({precision:?})");
+        }
+    }
+
+    #[test]
+    fn lossless_staged_decode_matches_fused() {
+        for precision in [Precision::F32, Precision::F16, Precision::Bf16] {
+            let (dense, _indices, wire) = sample_payload(precision);
+            let staged = SparseGradient::decode(&wire).unwrap();
+            let mut fused = vec![0f32; dense.len()];
+            decode_reduce_into(&wire, &mut fused).unwrap();
+            let dense_staged = staged.to_dense();
+            let a: Vec<u32> = dense_staged.iter().map(|x| x.to_bits()).collect();
+            let b: Vec<u32> = fused.iter().map(|x| x.to_bits()).collect();
+            assert_eq!(a, b);
+        }
+    }
+
+    #[test]
+    fn lossless_shrinks_quantized_payloads() {
+        for precision in [Precision::F16, Precision::Bf16] {
+            let (_dense, indices, wire) = sample_payload(precision);
+            let raw = raw_wire_bytes(indices.len(), precision);
+            assert!(
+                wire.len() < raw,
+                "{precision:?}: lossless {} !< raw {raw}",
+                wire.len()
+            );
+        }
+    }
+
+    #[test]
+    fn lossless_empty_payload_roundtrips() {
+        let dense = vec![0f32; 16];
+        let mut scratch = Vec::new();
+        let mut out = Vec::new();
+        encode_gathered_lossless_into(&dense, &[], Precision::F16, &mut scratch, &mut out);
+        let mut acc = vec![0f32; 16];
+        let o = decode_reduce_into(&out, &mut acc).unwrap();
+        assert_eq!(o.nnz, 0);
+        assert_eq!(acc, vec![0f32; 16]);
+    }
+
+    #[test]
+    fn lossless_planes_decode_to_expected_bytes() {
+        let (_dense, indices, wire) = sample_payload(Precision::F16);
+        let view = parse_lossless_planes(&wire, Precision::F16).unwrap();
+        let nnz = indices.len();
+        // plane 0 of the indices must be the low delta bytes
+        let mut plane0 = vec![0u8; nnz];
+        decode_plane(&view, 0, &mut plane0).unwrap();
+        let expect: Vec<u8> = (0..nnz).map(|j| index_delta(&indices, j) as u8).collect();
+        assert_eq!(plane0, expect);
+        // high index planes of a 512-element tensor are all zero
+        for p in 2..4 {
+            let mut plane = vec![0xffu8; nnz];
+            decode_plane(&view, p, &mut plane).unwrap();
+            assert!(plane.iter().all(|&b| b == 0), "plane {p} not zero");
+        }
+    }
+
+    #[test]
+    fn lossless_rejects_corruption_without_touching_accumulator() {
+        let (dense, _indices, wire) = sample_payload(Precision::F16);
+        let sentinel: Vec<f32> = (0..dense.len()).map(|i| i as f32 * 0.5 - 3.0).collect();
+        let mut check = |payload: &[u8], pin: &str| {
+            let mut acc = sentinel.clone();
+            let err = decode_reduce_into(payload, &mut acc).unwrap_err();
+            assert!(err.contains(pin), "error {err:?} missing pin {pin:?}");
+            assert_eq!(acc, sentinel, "error path scattered into the accumulator");
+        };
+        // bad codec tag
+        let mut bad = wire.clone();
+        bad[9] = 7;
+        check(&bad, "bad codec tag");
+        // truncated: drop the tail of the last plane
+        check(&wire[..wire.len() - 2], "lossless plane truncated");
+        // trailing garbage after the last plane
+        let mut long = wire.clone();
+        long.push(0);
+        check(&long, "bad length");
+        // nnz lies upward: the plane walk runs dry
+        let mut lie = wire.clone();
+        let nnz = u32::from_le_bytes(lie[4..8].try_into().unwrap());
+        lie[4..8].copy_from_slice(&(nnz + 1).to_le_bytes());
+        check(&lie, "lossless plane");
+        // nnz above n_total is rejected by the cheap guard
+        let mut huge = wire.clone();
+        huge[4..8].copy_from_slice(&u32::MAX.to_le_bytes());
+        check(&huge, "exceeds n_total");
+    }
+
+    #[test]
+    fn lossless_rejects_out_of_range_reconstructed_index() {
+        // Hand-build a payload whose delta chain runs past n_total.
+        let dense = vec![1.0f32; 4];
+        let indices = vec![0u32, 1, 2, 3];
+        let mut scratch = Vec::new();
+        let mut wire = Vec::new();
+        encode_gathered_lossless_into(&dense, &indices, Precision::F32, &mut scratch, &mut wire);
+        // Shrink the declared n_total below the real top index.
+        wire[0..4].copy_from_slice(&2u32.to_le_bytes());
+        let mut acc = vec![0f32; 2];
+        let err = decode_reduce_into(&wire, &mut acc).unwrap_err();
+        assert!(err.contains("out of range"), "got {err:?}");
+        assert_eq!(acc, vec![0f32; 2]);
+    }
+
+    #[test]
+    fn lossless_encode_reuses_scratch() {
+        let (dense, indices, _wire) = sample_payload(Precision::F16);
+        let mut scratch = Vec::new();
+        let mut out = Vec::new();
+        encode_gathered_lossless_into(&dense, &indices, Precision::F16, &mut scratch, &mut out);
+        let (sc, oc) = (scratch.capacity(), out.capacity());
+        let (sp, op) = (scratch.as_ptr(), out.as_ptr());
+        for _ in 0..3 {
+            encode_gathered_lossless_into(&dense, &indices, Precision::F16, &mut scratch, &mut out);
+        }
+        assert_eq!(scratch.capacity(), sc);
+        assert_eq!(out.capacity(), oc);
+        assert!(std::ptr::eq(scratch.as_ptr(), sp));
+        assert!(std::ptr::eq(out.as_ptr(), op));
+    }
+
+    #[test]
+    fn lossless_accepts_non_canonical_token_streams() {
+        // A decoder-only stream: single-zero zero-runs and fragmented
+        // literals are legal even though the encoder never emits them.
+        // Payload: n_total=8, nnz=2, f32, indices [1, 3], values [1.0, 2.0].
+        let mut wire = Vec::new();
+        wire.extend_from_slice(&8u32.to_le_bytes());
+        wire.extend_from_slice(&2u32.to_le_bytes());
+        wire.push(0); // f32
+        wire.push(CODEC_LOSSLESS);
+        wire.extend_from_slice(&[0, 0]);
+        // deltas: [1, 1]; plane 0 as two 1-byte literals (non-canonical)
+        let plane0 = [0x00u8, 1, 0x00, 1];
+        wire.extend_from_slice(&(plane0.len() as u32).to_le_bytes());
+        wire.extend_from_slice(&plane0);
+        // planes 1..4: two zeros as two single-zero runs (non-canonical)
+        for _ in 0..3 {
+            let plane = [0x80u8, 0x80];
+            wire.extend_from_slice(&(plane.len() as u32).to_le_bytes());
+            wire.extend_from_slice(&plane);
+        }
+        // value words 1.0f32, 2.0f32 little-endian byte planes
+        let words = [1.0f32.to_bits(), 2.0f32.to_bits()];
+        for p in 0..4u32 {
+            let bytes = [(words[0] >> (8 * p)) as u8, (words[1] >> (8 * p)) as u8];
+            let mut plane = Vec::new();
+            zrle_encode(2, |i| bytes[i], &mut plane);
+            wire.extend_from_slice(&(plane.len() as u32).to_le_bytes());
+            wire.extend_from_slice(&plane);
+        }
+        let mut acc = vec![0f32; 8];
+        let o = decode_reduce_into(&wire, &mut acc).unwrap();
+        assert_eq!(o.nnz, 2);
+        assert_eq!(acc[1], 1.0);
+        assert_eq!(acc[3], 2.0);
+        assert_eq!(acc.iter().filter(|&&x| x != 0.0).count(), 2);
+    }
+}

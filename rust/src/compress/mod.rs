@@ -24,6 +24,14 @@
 //!   ([`NetSenseCompressor::compress_frame_into`], single-pass
 //!   select+quantize+encode straight into a reusable wire buffer —
 //!   bit-identical, zero steady-state allocations).
+//! - [`simd`] — runtime-dispatched (AVX2/SSE4.1/scalar) kernels for the
+//!   four hot loops: fused compensate+L2, quantize/dequantize, the
+//!   threshold scan, and the decode-side ascending-index check. Every
+//!   level is bit-identical to the scalar reference.
+//! - [`lossless`] — optional 3LC-style lossless stage (byte-plane packing
+//!   + zero-run-length encoding) applied after quantization, negotiated
+//!   per bucket so incompressible payloads ship raw (codec byte in the
+//!   COO header).
 //! - [`workspace`] — the per-worker arena of reusable scratch buffers the
 //!   fused path runs on ([`Workspace`], [`WorkspacePool`]).
 //! - [`bucket`] — split/fuse of flat gradients into fixed-size buckets with
@@ -34,9 +42,11 @@
 
 pub mod bucket;
 pub mod error_feedback;
+pub mod lossless;
 pub mod pipeline;
 pub mod prune;
 pub mod quantize;
+pub mod simd;
 pub mod sparse;
 pub mod topk;
 pub mod workspace;
@@ -47,6 +57,7 @@ pub use pipeline::{
     CompressionConfig, CompressionOutcome, CompressorState, FusedOutcome, NetSenseCompressor,
 };
 pub use quantize::{f32_to_f16_bits, f16_bits_to_f32, Precision};
+pub use simd::{active_level, SimdLevel};
 pub use sparse::{
     decode_reduce_frame_into, decode_reduce_into, DecodeReduceOutcome, SparseGradient,
     COO_HEADER_BYTES,

@@ -26,8 +26,10 @@
 //! ```
 
 use super::error_feedback::ErrorFeedback;
+use super::lossless;
 use super::prune::pruning_rate_for;
 use super::quantize::Precision;
+use super::simd;
 use super::sparse::{encode_gathered_into, SparseGradient};
 use super::topk::{
     k_for_ratio, kth_magnitude_with, top_k_with_threshold_hint_and_scratch,
@@ -49,6 +51,13 @@ pub struct CompressionConfig {
     pub error_feedback: bool,
     /// Slack for threshold-reuse top-k (fraction of k).
     pub topk_slack: f64,
+    /// Enable the 3LC-style lossless stage (byte-plane packing + zero-run
+    /// length encoding) on the fused emit paths. Negotiated per payload:
+    /// the packed candidate ships only when it is strictly smaller than
+    /// the raw COO encoding, so incompressible buckets cost nothing but
+    /// the encode attempt. Off by default — the raw wire stays
+    /// bit-identical to the staged reference.
+    pub lossless: bool,
 }
 
 impl Default for CompressionConfig {
@@ -59,6 +68,7 @@ impl Default for CompressionConfig {
             enable_pruning: true,
             error_feedback: true,
             topk_slack: 0.25,
+            lossless: false,
         }
     }
 }
@@ -89,10 +99,19 @@ pub struct FusedOutcome {
     pub effective_ratio: f64,
     pub pruning_rate: f64,
     pub grad_l2: f64,
-    /// Sparse COO payload bytes (frame header excluded) — byte-exact
-    /// against [`CompressionOutcome::wire_bytes`] and
-    /// [`NetSenseCompressor::predict_wire_bytes`].
+    /// Payload bytes actually emitted (frame header excluded). With the
+    /// lossless stage off — or skipped as incompressible — this equals
+    /// [`Self::raw_wire_bytes`] and is byte-exact against
+    /// [`CompressionOutcome::wire_bytes`] and
+    /// [`NetSenseCompressor::predict_wire_bytes`]; when the stage wins it
+    /// is strictly smaller.
     pub wire_bytes: u64,
+    /// Raw COO payload bytes (the lossless stage's input and
+    /// [`NetSenseCompressor::predict_wire_bytes`]'s value — always
+    /// `12 + nnz·(4 + precision.bytes())`).
+    pub raw_wire_bytes: u64,
+    /// Did the lossless stage win the negotiation for this payload?
+    pub lossless: bool,
     /// Wire bytes a dense f32 transfer would have used.
     pub dense_bytes: u64,
     /// Wire precision of the payload values.
@@ -294,9 +313,13 @@ impl NetSenseCompressor {
         ws: &mut Workspace,
         out: &mut Vec<u8>,
     ) -> FusedOutcome {
-        let outcome = self.fused_select(grads, weights, ratio, ws);
-        let bytes = encode_gathered_into(&self.scratch, &ws.indices, outcome.precision, out);
-        debug_assert_eq!(bytes, outcome.wire_bytes);
+        let mut outcome = self.fused_select(grads, weights, ratio, ws);
+        if self.lossless_stage(ws, &mut outcome) {
+            out.extend_from_slice(&ws.lossless);
+        } else {
+            let bytes = encode_gathered_into(&self.scratch, &ws.indices, outcome.precision, out);
+            debug_assert_eq!(bytes, outcome.wire_bytes);
+        }
         if self.config.error_feedback {
             // Swap, don't copy: scratch becomes the new residual.
             self.ef
@@ -318,11 +341,17 @@ impl NetSenseCompressor {
         ws: &mut Workspace,
         out: &mut Vec<u8>,
     ) -> FusedOutcome {
-        let outcome = self.fused_select(grads, weights, ratio, ws);
-        out.reserve(8 + outcome.wire_bytes as usize);
-        encode_frame_header_into(outcome.wire_bytes as usize, out);
-        let bytes = encode_gathered_into(&self.scratch, &ws.indices, outcome.precision, out);
-        debug_assert_eq!(bytes, outcome.wire_bytes);
+        let mut outcome = self.fused_select(grads, weights, ratio, ws);
+        if self.lossless_stage(ws, &mut outcome) {
+            out.reserve(8 + ws.lossless.len());
+            encode_frame_header_into(ws.lossless.len(), out);
+            out.extend_from_slice(&ws.lossless);
+        } else {
+            out.reserve(8 + outcome.wire_bytes as usize);
+            encode_frame_header_into(outcome.wire_bytes as usize, out);
+            let bytes = encode_gathered_into(&self.scratch, &ws.indices, outcome.precision, out);
+            debug_assert_eq!(bytes, outcome.wire_bytes);
+        }
         if self.config.error_feedback {
             // Swap, don't copy: scratch becomes the new residual.
             self.ef
@@ -351,22 +380,15 @@ impl NetSenseCompressor {
 
         // ---- Fused pass: error-feedback compensate + L2 ------------------
         // (The staged path walks the tensor three times here: copy,
-        // compensate, norm. Same adds in the same order → same bits.)
-        self.scratch.clear();
-        let mut l2_sq = 0f64;
-        if self.config.error_feedback {
-            self.scratch
-                .extend(grads.iter().zip(self.ef.residual().iter()).map(|(&g, &r)| {
-                    let c = g + r;
-                    l2_sq += (c as f64) * (c as f64);
-                    c
-                }));
+        // compensate, norm. Both kernels use the same 8-lane-striped f64
+        // accumulation at every dispatch level → same bits.)
+        let l2_sq = if self.config.error_feedback {
+            simd::compensate_sum_sq_extend(grads, self.ef.residual(), &mut self.scratch)
         } else {
-            self.scratch.extend(grads.iter().map(|&g| {
-                l2_sq += (g as f64) * (g as f64);
-                g
-            }));
-        }
+            self.scratch.clear();
+            self.scratch.extend_from_slice(grads);
+            simd::sum_sq(&self.scratch)
+        };
         let grad_l2 = l2_sq.sqrt();
         self.last_grad_l2 = Some(grad_l2);
 
@@ -410,15 +432,52 @@ impl NetSenseCompressor {
         );
         self.last_threshold = Some(kth);
 
+        let raw_wire_bytes = 12 + (ws.indices.len() as u64) * (4 + precision.bytes() as u64);
         FusedOutcome {
             nnz: ws.indices.len(),
             quantized,
             effective_ratio,
             pruning_rate,
             grad_l2,
-            wire_bytes: 12 + (ws.indices.len() as u64) * (4 + precision.bytes() as u64),
+            wire_bytes: raw_wire_bytes,
+            raw_wire_bytes,
+            lossless: false,
             dense_bytes: 4 * n as u64,
             precision,
+        }
+    }
+
+    /// Lossless negotiation on the fused emit paths: when
+    /// [`CompressionConfig::lossless`] is set, encode the byte-plane +
+    /// zero-run candidate into `ws.lossless` and ship it iff it is
+    /// strictly smaller than the raw COO payload. Updates `outcome`
+    /// (`wire_bytes`, `lossless`) and the obs byte-ratio metrics; returns
+    /// whether the candidate won (caller then emits `ws.lossless` instead
+    /// of running [`encode_gathered_into`]).
+    fn lossless_stage(&mut self, ws: &mut Workspace, outcome: &mut FusedOutcome) -> bool {
+        if !self.config.lossless {
+            return false;
+        }
+        let raw = outcome.raw_wire_bytes;
+        let packed = lossless::encode_gathered_lossless_into(
+            &self.scratch,
+            &ws.indices,
+            outcome.precision,
+            &mut ws.val_bits,
+            &mut ws.lossless,
+        ) as u64;
+        let m = crate::obs::hot();
+        m.lossless_raw_bytes_total.add(raw);
+        if packed < raw {
+            outcome.wire_bytes = packed;
+            outcome.lossless = true;
+            m.lossless_wire_bytes_total.add(packed);
+            m.lossless_ratio_pct.observe(packed * 100 / raw);
+            true
+        } else {
+            m.lossless_wire_bytes_total.add(raw);
+            m.lossless_skipped_total.inc();
+            false
         }
     }
 
@@ -434,6 +493,12 @@ impl NetSenseCompressor {
     /// predicts the quantization-*skip* size, byte-exact against the full
     /// path. Before the first compress there is no norm to consult and the
     /// steady-state density assumption applies.
+    ///
+    /// With [`CompressionConfig::lossless`] enabled the prediction is the
+    /// *raw* COO size ([`FusedOutcome::raw_wire_bytes`]) — an upper bound
+    /// on the emitted bytes, since the packed candidate only ships when it
+    /// is strictly smaller. The controller sizing against the BDP stays
+    /// safe (never under-predicts), just conservative.
     pub fn predict_wire_bytes(&self, ratio: f64) -> u64 {
         let ratio = ratio.clamp(0.0, 1.0);
         let (eff, prec) = if self.would_quantize(ratio) {
@@ -502,8 +567,12 @@ pub struct CompressorState {
     pub last_grad_l2: Option<f64>,
 }
 
+/// L2 norm via the runtime-dispatched striped sum-of-squares kernel. Every
+/// dispatch level — and the fused compensate+L2 sweep — accumulates in the
+/// same 8-lane-striped f64 order, so staged and fused norms stay
+/// f64-bit-identical.
 fn l2(xs: &[f32]) -> f64 {
-    xs.iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>().sqrt()
+    simd::sum_sq(xs).sqrt()
 }
 
 #[cfg(test)]
@@ -676,6 +745,90 @@ mod tests {
         let out = c.compress(&g, &randn(n, 14), 1.0);
         assert_eq!(out.payload.nnz(), n);
         assert_eq!(out.payload.to_dense(), g);
+    }
+
+    #[test]
+    fn lossless_frames_decode_bit_identical_to_raw_twins() {
+        // Two compressors in lockstep — one raw, one with the lossless
+        // stage — must produce frames that decode-reduce to bit-identical
+        // dense updates, with the lossless wire never larger than raw and
+        // strictly smaller somewhere along the run.
+        use crate::compress::sparse::decode_reduce_frame_into;
+        use crate::compress::workspace::Workspace;
+        let n = 3000;
+        let w = randn(n, 31);
+        let mut g = randn(n, 32);
+        let mut rng = Pcg64::seeded(33);
+        let mut raw = NetSenseCompressor::new(n, CompressionConfig::default());
+        let mut packed = NetSenseCompressor::new(
+            n,
+            CompressionConfig {
+                lossless: true,
+                ..Default::default()
+            },
+        );
+        let mut ws = Workspace::with_capacity(n);
+        let (mut raw_frame, mut packed_frame) = (Vec::new(), Vec::new());
+        let mut wins = 0;
+        for (step, &ratio) in [0.1, 0.05, 0.01, 0.003, 1.0, 0.0, 0.1]
+            .iter()
+            .cycle()
+            .take(21)
+            .enumerate()
+        {
+            for x in g.iter_mut() {
+                *x += 0.05 * rng.normal() as f32;
+            }
+            raw_frame.clear();
+            packed_frame.clear();
+            let or = raw.compress_frame_into(&g, &w, ratio, &mut ws, &mut raw_frame);
+            let op = packed.compress_frame_into(&g, &w, ratio, &mut ws, &mut packed_frame);
+            assert!(!or.lossless, "step {step}: raw config took the stage");
+            assert_eq!(or.wire_bytes, or.raw_wire_bytes, "step {step}");
+            assert_eq!(op.raw_wire_bytes, or.raw_wire_bytes, "step {step}");
+            assert!(
+                op.wire_bytes <= op.raw_wire_bytes,
+                "step {step}: negotiation shipped a larger payload"
+            );
+            assert_eq!(op.lossless, op.wire_bytes < op.raw_wire_bytes);
+            wins += op.lossless as u32;
+            let mut acc_raw = vec![0f32; n];
+            let mut acc_packed = vec![0f32; n];
+            decode_reduce_frame_into(&raw_frame, &mut acc_raw).expect("raw frame decodes");
+            decode_reduce_frame_into(&packed_frame, &mut acc_packed)
+                .expect("lossless frame decodes");
+            for (i, (a, b)) in acc_raw.iter().zip(&acc_packed).enumerate() {
+                assert_eq!(a.to_bits(), b.to_bits(), "step {step} element {i}");
+            }
+            // Identical decoded updates → identical compressor evolution.
+            assert_eq!(raw.residual_norm(), packed.residual_norm(), "step {step}");
+        }
+        assert!(wins > 0, "lossless stage never won on quantized payloads");
+    }
+
+    #[test]
+    fn predict_is_upper_bound_under_lossless() {
+        use crate::compress::workspace::Workspace;
+        let n = 2000;
+        let g = randn(n, 41);
+        let w = randn(n, 42);
+        let mut c = NetSenseCompressor::new(
+            n,
+            CompressionConfig {
+                lossless: true,
+                ..Default::default()
+            },
+        );
+        let mut ws = Workspace::new();
+        let mut out = Vec::new();
+        for &r in &[0.3, 0.1, 0.01, 0.003] {
+            let predicted = c.predict_wire_bytes(r);
+            out.clear();
+            let o = c.compress_frame_into(&g, &w, r, &mut ws, &mut out);
+            assert_eq!(predicted, o.raw_wire_bytes, "ratio {r}");
+            assert!(o.wire_bytes <= predicted, "ratio {r}");
+            assert_eq!(out.len() as u64, 8 + o.wire_bytes, "ratio {r}");
+        }
     }
 
     #[test]

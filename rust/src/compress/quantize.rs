@@ -129,33 +129,30 @@ pub fn bf16_bits_to_f32(h: u16) -> f32 {
 }
 
 /// Quantize a slice to `precision`, returning the dequantized values (what
-/// the receiver reconstructs). For `F32` this is the identity — callers
-/// for whom the identity case must not copy the tensor have
-/// [`quantize_roundtrip_ref`] / [`quantize_roundtrip_in_place`] (the
-/// fused send path goes further and quantizes during encode, see
-/// [`super::sparse::encode_gathered_into`]).
+/// the receiver reconstructs). For `F32` this is the identity.
+///
+/// Allocating convenience kept for tests and examples only — hot-path call
+/// sites must use [`quantize_roundtrip_ref`] /
+/// [`quantize_roundtrip_in_place`] (hidden from docs so new code can't
+/// pick it up by accident; the fused send path goes further and quantizes
+/// during encode, see [`super::sparse::encode_gathered_into`]).
+#[doc(hidden)]
 pub fn quantize_roundtrip(xs: &[f32], precision: Precision) -> Vec<f32> {
     let mut out = xs.to_vec();
     quantize_roundtrip_in_place(&mut out, precision);
     out
 }
 
-/// [`quantize_roundtrip`] in place: rewrites `xs` to the receiver-visible
+/// Quantize-roundtrip in place: rewrites `xs` to the receiver-visible
 /// wire-precision values. `F32` touches nothing (§Perf: the healthy-
-/// network path — the paper's common case — moves zero bytes).
+/// network path — the paper's common case — moves zero bytes). 16-bit
+/// precisions run the runtime-dispatched SIMD kernels, bit-identical to
+/// the scalar [`f32_to_f16_bits`]/[`f16_bits_to_f32`] composition.
 pub fn quantize_roundtrip_in_place(xs: &mut [f32], precision: Precision) {
     match precision {
         Precision::F32 => {}
-        Precision::F16 => {
-            for x in xs.iter_mut() {
-                *x = f16_bits_to_f32(f32_to_f16_bits(*x));
-            }
-        }
-        Precision::Bf16 => {
-            for x in xs.iter_mut() {
-                *x = bf16_bits_to_f32(f32_to_bf16_bits(*x));
-            }
-        }
+        Precision::F16 => super::simd::roundtrip_f16_in_place(xs),
+        Precision::Bf16 => super::simd::roundtrip_bf16_in_place(xs),
     }
 }
 

@@ -1,0 +1,1660 @@
+//! Vectorized codec kernels behind a runtime-detected feature gate
+//! (DESIGN.md §3.11).
+//!
+//! The fused send/receive paths (PRs 3/5) are zero-alloc but were scalar;
+//! on a fast link the codec — not the socket — is the hot-path ceiling.
+//! This module vectorizes the four sweeps that dominate a step:
+//!
+//! 1. the fused compensate + L2 sweep ([`compensate_sum_sq_extend`]),
+//! 2. quantize/dequantize ([`quantize_f16_bits`] & friends),
+//! 3. the threshold scan ([`threshold_select_into`]),
+//! 4. the decode-reduce scatter helpers ([`dequantize_f16_le_bytes`],
+//!    [`max_strictly_ascending_u32le`]).
+//!
+//! # Dispatch
+//!
+//! [`active_level`] probes `is_x86_feature_detected!` once, honours the
+//! `NETSENSE_SIMD` env override (`off|scalar|sse41|avx2|auto`, clamped to
+//! what the host supports), and caches the answer in an atomic so the hot
+//! path pays a single relaxed load. Every kernel also has a `_with(level)`
+//! variant so tests and benches can pin a level deterministically; the
+//! scalar tier is the always-correct reference on every architecture.
+//!
+//! # Bit-identity contract
+//!
+//! Each vector kernel is **bit-identical** to its scalar reference — not
+//! merely close. Two design rules make that hold:
+//!
+//! - f16/bf16 conversion is implemented branchlessly from the same
+//!   integer round-to-nearest-even algebra as the scalar code (including
+//!   the scalar's flush of |x| < 2⁻²⁴ to signed zero and its fixed
+//!   `0x0200` NaN payload) — the hardware F16C path is deliberately *not*
+//!   used because `vcvtps2ph` preserves NaN payload bits the scalar
+//!   drops. The one float operation in the subnormal path,
+//!   round-to-nearest of |x|·2²⁴, is exact-by-construction (the product
+//!   has ≤ 24 significant bits) and matches the scalar integer rounding.
+//! - every L2 accumulation — scalar, SSE4.1, AVX2, staged and fused —
+//!   uses the same fixed 8-lane-striped f64 layout: lane *j* accumulates
+//!   elements *i* with `i & 7 == j` in increasing *i*, and the lanes are
+//!   reduced sequentially at the end. The grouping is level-independent,
+//!   so staged-vs-fused stays bit-identical even across hosts with
+//!   different SIMD tiers.
+//!
+//! # Allocation contract
+//!
+//! Kernels never allocate on the success path. [`threshold_select_into`]
+//! reserves `len + 8` once (vector stores may overspill up to one lane
+//! past the live count); the growth lands in warmup, keeping the
+//! counting-allocator gate at 0 allocs/step.
+
+use super::quantize::{bf16_bits_to_f32, f16_bits_to_f32, f32_to_bf16_bits, f32_to_f16_bits};
+use std::sync::atomic::{AtomicU8, Ordering};
+
+/// Number of interleaved f64 accumulators in every L2 kernel. Fixed so
+/// scalar/SSE/AVX2 produce identical bits (see module docs).
+pub const L2_LANES: usize = 8;
+
+/// A vectorization tier. Ordered: higher tiers imply the lower ones.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum SimdLevel {
+    /// Portable scalar reference (always available, always correct).
+    Scalar,
+    /// 128-bit SSE4.1 kernels (x86-64 only).
+    Sse41,
+    /// 256-bit AVX2 kernels (x86-64 only).
+    Avx2,
+}
+
+const LEVEL_UNSET: u8 = 0;
+const LEVEL_SCALAR: u8 = 1;
+const LEVEL_SSE41: u8 = 2;
+const LEVEL_AVX2: u8 = 3;
+
+static LEVEL: AtomicU8 = AtomicU8::new(LEVEL_UNSET);
+
+fn encode_level(l: SimdLevel) -> u8 {
+    match l {
+        SimdLevel::Scalar => LEVEL_SCALAR,
+        SimdLevel::Sse41 => LEVEL_SSE41,
+        SimdLevel::Avx2 => LEVEL_AVX2,
+    }
+}
+
+/// What the host CPU supports, ignoring the env override.
+#[cfg(target_arch = "x86_64")]
+pub fn hw_level() -> SimdLevel {
+    if is_x86_feature_detected!("avx2") {
+        SimdLevel::Avx2
+    } else if is_x86_feature_detected!("sse4.1") {
+        SimdLevel::Sse41
+    } else {
+        SimdLevel::Scalar
+    }
+}
+
+/// What the host CPU supports, ignoring the env override.
+#[cfg(not(target_arch = "x86_64"))]
+pub fn hw_level() -> SimdLevel {
+    SimdLevel::Scalar
+}
+
+/// Every level the host can run, lowest first. Property tests iterate
+/// this to compare each available tier against the scalar reference.
+pub fn supported_levels() -> &'static [SimdLevel] {
+    match hw_level() {
+        SimdLevel::Scalar => &[SimdLevel::Scalar],
+        SimdLevel::Sse41 => &[SimdLevel::Scalar, SimdLevel::Sse41],
+        SimdLevel::Avx2 => &[SimdLevel::Scalar, SimdLevel::Sse41, SimdLevel::Avx2],
+    }
+}
+
+fn detect_level() -> SimdLevel {
+    let cap = hw_level();
+    match std::env::var("NETSENSE_SIMD").ok().as_deref() {
+        Some("off") | Some("scalar") => SimdLevel::Scalar,
+        Some("sse41") => cap.min(SimdLevel::Sse41),
+        // "avx2", "auto", unset, or garbage: best the host offers.
+        _ => cap,
+    }
+}
+
+/// The tier the dispatched kernels run at: detected once (env override +
+/// CPUID), then cached. The env read can allocate; the first call happens
+/// during warmup, so steady state stays allocation-free.
+pub fn active_level() -> SimdLevel {
+    match LEVEL.load(Ordering::Relaxed) {
+        LEVEL_SCALAR => SimdLevel::Scalar,
+        LEVEL_SSE41 => SimdLevel::Sse41,
+        LEVEL_AVX2 => SimdLevel::Avx2,
+        _ => {
+            let l = detect_level();
+            LEVEL.store(encode_level(l), Ordering::Relaxed);
+            l
+        }
+    }
+}
+
+fn check_supported(level: SimdLevel) {
+    assert!(
+        level <= hw_level(),
+        "SIMD level {level:?} not supported by this host (max {:?})",
+        hw_level()
+    );
+}
+
+// ---------------------------------------------------------------------------
+// L2 kernels (striped f64 accumulation)
+// ---------------------------------------------------------------------------
+
+/// Σx² in the fixed 8-lane-striped f64 order (bit-identical at any level).
+pub fn sum_sq(xs: &[f32]) -> f64 {
+    sum_sq_with(active_level(), xs)
+}
+
+/// [`sum_sq`] pinned to `level` (test/bench seam; `level` must be
+/// supported by the host, see [`supported_levels`]).
+pub fn sum_sq_with(level: SimdLevel, xs: &[f32]) -> f64 {
+    check_supported(level);
+    match level {
+        SimdLevel::Scalar => scalar::sum_sq(xs),
+        #[cfg(target_arch = "x86_64")]
+        SimdLevel::Sse41 => unsafe { x86::sum_sq_sse41(xs) },
+        #[cfg(target_arch = "x86_64")]
+        SimdLevel::Avx2 => unsafe { x86::sum_sq_avx2(xs) },
+        #[cfg(not(target_arch = "x86_64"))]
+        _ => scalar::sum_sq(xs),
+    }
+}
+
+/// Fused compensate + L2: `out ← g + r` elementwise (overwriting `out`,
+/// which is cleared first) and returns Σ(g+r)² in the striped order.
+/// Bit-identical to `extend(g+r)` followed by [`sum_sq`].
+pub fn compensate_sum_sq_extend(g: &[f32], r: &[f32], out: &mut Vec<f32>) -> f64 {
+    compensate_sum_sq_extend_with(active_level(), g, r, out)
+}
+
+/// [`compensate_sum_sq_extend`] pinned to `level`.
+pub fn compensate_sum_sq_extend_with(
+    level: SimdLevel,
+    g: &[f32],
+    r: &[f32],
+    out: &mut Vec<f32>,
+) -> f64 {
+    check_supported(level);
+    assert_eq!(g.len(), r.len(), "gradient/residual length mismatch");
+    out.clear();
+    out.reserve(g.len());
+    // Raw-pointer writes into the spare capacity: each element is written
+    // exactly once (no memset), matching the old extend()-based sweep.
+    let dst = out.spare_capacity_mut().as_mut_ptr() as *mut f32;
+    let sq = unsafe {
+        match level {
+            SimdLevel::Scalar => scalar::compensate_sum_sq(g, r, dst),
+            #[cfg(target_arch = "x86_64")]
+            SimdLevel::Sse41 => x86::compensate_sum_sq_sse41(g, r, dst),
+            #[cfg(target_arch = "x86_64")]
+            SimdLevel::Avx2 => x86::compensate_sum_sq_avx2(g, r, dst),
+            #[cfg(not(target_arch = "x86_64"))]
+            _ => scalar::compensate_sum_sq(g, r, dst),
+        }
+    };
+    // SAFETY: the kernel wrote g.len() elements into the reserved spare
+    // capacity.
+    unsafe { out.set_len(g.len()) };
+    sq
+}
+
+// ---------------------------------------------------------------------------
+// Quantize / dequantize kernels
+// ---------------------------------------------------------------------------
+
+/// f32 → f16 wire bits, elementwise (`dst.len() == src.len()`).
+pub fn quantize_f16_bits(src: &[f32], dst: &mut [u16]) {
+    quantize_f16_bits_with(active_level(), src, dst)
+}
+
+/// [`quantize_f16_bits`] pinned to `level`.
+pub fn quantize_f16_bits_with(level: SimdLevel, src: &[f32], dst: &mut [u16]) {
+    check_supported(level);
+    assert_eq!(src.len(), dst.len(), "quantize length mismatch");
+    match level {
+        SimdLevel::Scalar => scalar::quantize_f16(src, dst),
+        #[cfg(target_arch = "x86_64")]
+        SimdLevel::Sse41 => unsafe { x86::quantize_f16_sse41(src, dst) },
+        #[cfg(target_arch = "x86_64")]
+        SimdLevel::Avx2 => unsafe { x86::quantize_f16_avx2(src, dst) },
+        #[cfg(not(target_arch = "x86_64"))]
+        _ => scalar::quantize_f16(src, dst),
+    }
+}
+
+/// f16 wire bits → f32, elementwise (`dst.len() == src.len()`).
+pub fn dequantize_f16_bits(src: &[u16], dst: &mut [f32]) {
+    dequantize_f16_bits_with(active_level(), src, dst)
+}
+
+/// [`dequantize_f16_bits`] pinned to `level`.
+pub fn dequantize_f16_bits_with(level: SimdLevel, src: &[u16], dst: &mut [f32]) {
+    check_supported(level);
+    assert_eq!(src.len(), dst.len(), "dequantize length mismatch");
+    match level {
+        SimdLevel::Scalar => scalar::dequantize_f16(src, dst),
+        #[cfg(target_arch = "x86_64")]
+        SimdLevel::Sse41 => unsafe { x86::dequantize_f16_sse41(src, dst) },
+        #[cfg(target_arch = "x86_64")]
+        SimdLevel::Avx2 => unsafe { x86::dequantize_f16_avx2(src, dst) },
+        #[cfg(not(target_arch = "x86_64"))]
+        _ => scalar::dequantize_f16(src, dst),
+    }
+}
+
+/// f32 → bf16 wire bits, elementwise (`dst.len() == src.len()`).
+pub fn quantize_bf16_bits(src: &[f32], dst: &mut [u16]) {
+    quantize_bf16_bits_with(active_level(), src, dst)
+}
+
+/// [`quantize_bf16_bits`] pinned to `level`.
+pub fn quantize_bf16_bits_with(level: SimdLevel, src: &[f32], dst: &mut [u16]) {
+    check_supported(level);
+    assert_eq!(src.len(), dst.len(), "quantize length mismatch");
+    match level {
+        SimdLevel::Scalar => scalar::quantize_bf16(src, dst),
+        #[cfg(target_arch = "x86_64")]
+        SimdLevel::Sse41 => unsafe { x86::quantize_bf16_sse41(src, dst) },
+        #[cfg(target_arch = "x86_64")]
+        SimdLevel::Avx2 => unsafe { x86::quantize_bf16_avx2(src, dst) },
+        #[cfg(not(target_arch = "x86_64"))]
+        _ => scalar::quantize_bf16(src, dst),
+    }
+}
+
+/// bf16 wire bits → f32, elementwise (`dst.len() == src.len()`).
+pub fn dequantize_bf16_bits(src: &[u16], dst: &mut [f32]) {
+    dequantize_bf16_bits_with(active_level(), src, dst)
+}
+
+/// [`dequantize_bf16_bits`] pinned to `level`.
+pub fn dequantize_bf16_bits_with(level: SimdLevel, src: &[u16], dst: &mut [f32]) {
+    check_supported(level);
+    assert_eq!(src.len(), dst.len(), "dequantize length mismatch");
+    match level {
+        SimdLevel::Scalar => scalar::dequantize_bf16(src, dst),
+        #[cfg(target_arch = "x86_64")]
+        SimdLevel::Sse41 => unsafe { x86::dequantize_bf16_sse41(src, dst) },
+        #[cfg(target_arch = "x86_64")]
+        SimdLevel::Avx2 => unsafe { x86::dequantize_bf16_avx2(src, dst) },
+        #[cfg(not(target_arch = "x86_64"))]
+        _ => scalar::dequantize_bf16(src, dst),
+    }
+}
+
+/// In-place f32 → f16 → f32 roundtrip (the error-feedback residual sweep).
+pub fn roundtrip_f16_in_place(xs: &mut [f32]) {
+    roundtrip_f16_in_place_with(active_level(), xs)
+}
+
+/// [`roundtrip_f16_in_place`] pinned to `level`.
+pub fn roundtrip_f16_in_place_with(level: SimdLevel, xs: &mut [f32]) {
+    check_supported(level);
+    match level {
+        SimdLevel::Scalar => scalar::roundtrip_f16(xs),
+        #[cfg(target_arch = "x86_64")]
+        SimdLevel::Sse41 => unsafe { x86::roundtrip_f16_sse41(xs) },
+        #[cfg(target_arch = "x86_64")]
+        SimdLevel::Avx2 => unsafe { x86::roundtrip_f16_avx2(xs) },
+        #[cfg(not(target_arch = "x86_64"))]
+        _ => scalar::roundtrip_f16(xs),
+    }
+}
+
+/// In-place f32 → bf16 → f32 roundtrip.
+pub fn roundtrip_bf16_in_place(xs: &mut [f32]) {
+    roundtrip_bf16_in_place_with(active_level(), xs)
+}
+
+/// [`roundtrip_bf16_in_place`] pinned to `level`.
+pub fn roundtrip_bf16_in_place_with(level: SimdLevel, xs: &mut [f32]) {
+    check_supported(level);
+    match level {
+        SimdLevel::Scalar => scalar::roundtrip_bf16(xs),
+        #[cfg(target_arch = "x86_64")]
+        SimdLevel::Sse41 => unsafe { x86::roundtrip_bf16_sse41(xs) },
+        #[cfg(target_arch = "x86_64")]
+        SimdLevel::Avx2 => unsafe { x86::roundtrip_bf16_avx2(xs) },
+        #[cfg(not(target_arch = "x86_64"))]
+        _ => scalar::roundtrip_bf16(xs),
+    }
+}
+
+/// Dequantize little-endian f16 wire bytes (`src.len() == 2·dst.len()`)
+/// into f32s — the decode-reduce scatter feeds fixed stack chunks through
+/// this.
+pub fn dequantize_f16_le_bytes(src: &[u8], dst: &mut [f32]) {
+    dequantize_f16_le_bytes_with(active_level(), src, dst)
+}
+
+/// [`dequantize_f16_le_bytes`] pinned to `level`.
+pub fn dequantize_f16_le_bytes_with(level: SimdLevel, src: &[u8], dst: &mut [f32]) {
+    check_supported(level);
+    assert_eq!(src.len(), dst.len() * 2, "f16 byte length mismatch");
+    match level {
+        SimdLevel::Scalar => scalar::dequantize_f16_le(src, dst),
+        // x86 is little-endian: u16 lane loads see the same values the
+        // scalar from_le_bytes path decodes.
+        #[cfg(target_arch = "x86_64")]
+        SimdLevel::Sse41 => unsafe { x86::dequantize_f16_le_sse41(src, dst) },
+        #[cfg(target_arch = "x86_64")]
+        SimdLevel::Avx2 => unsafe { x86::dequantize_f16_le_avx2(src, dst) },
+        #[cfg(not(target_arch = "x86_64"))]
+        _ => scalar::dequantize_f16_le(src, dst),
+    }
+}
+
+/// Dequantize little-endian bf16 wire bytes (`src.len() == 2·dst.len()`).
+pub fn dequantize_bf16_le_bytes(src: &[u8], dst: &mut [f32]) {
+    dequantize_bf16_le_bytes_with(active_level(), src, dst)
+}
+
+/// [`dequantize_bf16_le_bytes`] pinned to `level`.
+pub fn dequantize_bf16_le_bytes_with(level: SimdLevel, src: &[u8], dst: &mut [f32]) {
+    check_supported(level);
+    assert_eq!(src.len(), dst.len() * 2, "bf16 byte length mismatch");
+    match level {
+        SimdLevel::Scalar => scalar::dequantize_bf16_le(src, dst),
+        #[cfg(target_arch = "x86_64")]
+        SimdLevel::Sse41 => unsafe { x86::dequantize_bf16_le_sse41(src, dst) },
+        #[cfg(target_arch = "x86_64")]
+        SimdLevel::Avx2 => unsafe { x86::dequantize_bf16_le_avx2(src, dst) },
+        #[cfg(not(target_arch = "x86_64"))]
+        _ => scalar::dequantize_bf16_le(src, dst),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Threshold scan
+// ---------------------------------------------------------------------------
+
+/// Collect indices of every element with `|v| >= threshold` into `out`
+/// (cleared first), preserving order. Vector tiers left-pack compare
+/// masks; output is byte-identical to the scalar push loop.
+pub fn threshold_select_into(values: &[f32], threshold: f32, out: &mut Vec<u32>) {
+    threshold_select_into_with(active_level(), values, threshold, out)
+}
+
+/// [`threshold_select_into`] pinned to `level`.
+pub fn threshold_select_into_with(
+    level: SimdLevel,
+    values: &[f32],
+    threshold: f32,
+    out: &mut Vec<u32>,
+) {
+    check_supported(level);
+    out.clear();
+    // Vector stores write a full lane; up to 8 slots past the live count
+    // are scratch. One-time growth, covered by warmup.
+    out.reserve(values.len() + 8);
+    match level {
+        SimdLevel::Scalar => scalar::threshold_select(values, threshold, out),
+        #[cfg(target_arch = "x86_64")]
+        SimdLevel::Sse41 => unsafe { x86::threshold_select_sse41(values, threshold, out) },
+        #[cfg(target_arch = "x86_64")]
+        SimdLevel::Avx2 => unsafe { x86::threshold_select_avx2(values, threshold, out) },
+        #[cfg(not(target_arch = "x86_64"))]
+        _ => scalar::threshold_select(values, threshold, out),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Ascending-index validation
+// ---------------------------------------------------------------------------
+
+/// Validate that the little-endian u32 words in `bytes` are strictly
+/// ascending; returns the last value as i64 (or -1 when empty). `Err(())`
+/// mirrors the scalar first-violation outcome (the caller owns the error
+/// message). `bytes.len()` must be a multiple of 4.
+pub fn max_strictly_ascending_u32le(bytes: &[u8]) -> Result<i64, ()> {
+    max_strictly_ascending_u32le_with(active_level(), bytes)
+}
+
+/// [`max_strictly_ascending_u32le`] pinned to `level`.
+pub fn max_strictly_ascending_u32le_with(level: SimdLevel, bytes: &[u8]) -> Result<i64, ()> {
+    check_supported(level);
+    debug_assert_eq!(bytes.len() % 4, 0);
+    match level {
+        SimdLevel::Scalar => scalar::max_ascending_u32le(bytes),
+        #[cfg(target_arch = "x86_64")]
+        SimdLevel::Sse41 => unsafe { x86::max_ascending_u32le_sse41(bytes) },
+        #[cfg(target_arch = "x86_64")]
+        SimdLevel::Avx2 => unsafe { x86::max_ascending_u32le_avx2(bytes) },
+        #[cfg(not(target_arch = "x86_64"))]
+        _ => scalar::max_ascending_u32le(bytes),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Scalar reference kernels
+// ---------------------------------------------------------------------------
+
+pub(crate) mod scalar {
+    use super::*;
+
+    pub fn sum_sq(xs: &[f32]) -> f64 {
+        let mut acc = [0f64; L2_LANES];
+        for (i, &x) in xs.iter().enumerate() {
+            let d = x as f64;
+            acc[i & (L2_LANES - 1)] += d * d;
+        }
+        acc.iter().sum()
+    }
+
+    /// # Safety
+    /// `dst` must be valid for `g.len()` writes.
+    pub unsafe fn compensate_sum_sq(g: &[f32], r: &[f32], dst: *mut f32) -> f64 {
+        let mut acc = [0f64; L2_LANES];
+        for (i, (&gv, &rv)) in g.iter().zip(r).enumerate() {
+            let c = gv + rv;
+            dst.add(i).write(c);
+            let d = c as f64;
+            acc[i & (L2_LANES - 1)] += d * d;
+        }
+        acc.iter().sum()
+    }
+
+    pub fn quantize_f16(src: &[f32], dst: &mut [u16]) {
+        for (d, &s) in dst.iter_mut().zip(src) {
+            *d = f32_to_f16_bits(s);
+        }
+    }
+
+    pub fn dequantize_f16(src: &[u16], dst: &mut [f32]) {
+        for (d, &s) in dst.iter_mut().zip(src) {
+            *d = f16_bits_to_f32(s);
+        }
+    }
+
+    pub fn quantize_bf16(src: &[f32], dst: &mut [u16]) {
+        for (d, &s) in dst.iter_mut().zip(src) {
+            *d = f32_to_bf16_bits(s);
+        }
+    }
+
+    pub fn dequantize_bf16(src: &[u16], dst: &mut [f32]) {
+        for (d, &s) in dst.iter_mut().zip(src) {
+            *d = bf16_bits_to_f32(s);
+        }
+    }
+
+    pub fn roundtrip_f16(xs: &mut [f32]) {
+        for x in xs.iter_mut() {
+            *x = f16_bits_to_f32(f32_to_f16_bits(*x));
+        }
+    }
+
+    pub fn roundtrip_bf16(xs: &mut [f32]) {
+        for x in xs.iter_mut() {
+            *x = bf16_bits_to_f32(f32_to_bf16_bits(*x));
+        }
+    }
+
+    pub fn dequantize_f16_le(src: &[u8], dst: &mut [f32]) {
+        for (d, c) in dst.iter_mut().zip(src.chunks_exact(2)) {
+            *d = f16_bits_to_f32(u16::from_le_bytes([c[0], c[1]]));
+        }
+    }
+
+    pub fn dequantize_bf16_le(src: &[u8], dst: &mut [f32]) {
+        for (d, c) in dst.iter_mut().zip(src.chunks_exact(2)) {
+            *d = bf16_bits_to_f32(u16::from_le_bytes([c[0], c[1]]));
+        }
+    }
+
+    pub fn threshold_select(values: &[f32], threshold: f32, out: &mut Vec<u32>) {
+        for (i, &v) in values.iter().enumerate() {
+            if v.abs() >= threshold {
+                out.push(i as u32);
+            }
+        }
+    }
+
+    pub fn max_ascending_u32le(bytes: &[u8]) -> Result<i64, ()> {
+        let mut prev: i64 = -1;
+        for c in bytes.chunks_exact(4) {
+            let i = u32::from_le_bytes([c[0], c[1], c[2], c[3]]) as i64;
+            if i <= prev {
+                return Err(());
+            }
+            prev = i;
+        }
+        Ok(prev)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// x86-64 vector kernels
+// ---------------------------------------------------------------------------
+
+#[cfg(target_arch = "x86_64")]
+mod x86 {
+    use super::quantize_tables::{AVX2_COMPACT, SSE_COMPACT};
+    use crate::compress::quantize::{f32_to_bf16_bits, f32_to_f16_bits};
+    use std::arch::x86_64::*;
+
+    // --- L2 ----------------------------------------------------------------
+
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn sum_sq_avx2(xs: &[f32]) -> f64 {
+        let n = xs.len();
+        let mut acc0 = _mm256_setzero_pd(); // stripe lanes 0..4
+        let mut acc1 = _mm256_setzero_pd(); // stripe lanes 4..8
+        let mut i = 0usize;
+        while i + 8 <= n {
+            let v = _mm256_loadu_ps(xs.as_ptr().add(i));
+            let lo = _mm256_cvtps_pd(_mm256_castps256_ps128(v));
+            let hi = _mm256_cvtps_pd(_mm256_extractf128_ps::<1>(v));
+            acc0 = _mm256_add_pd(acc0, _mm256_mul_pd(lo, lo));
+            acc1 = _mm256_add_pd(acc1, _mm256_mul_pd(hi, hi));
+            i += 8;
+        }
+        let mut lanes = [0f64; 8];
+        _mm256_storeu_pd(lanes.as_mut_ptr(), acc0);
+        _mm256_storeu_pd(lanes.as_mut_ptr().add(4), acc1);
+        while i < n {
+            let d = *xs.get_unchecked(i) as f64;
+            lanes[i & 7] += d * d;
+            i += 1;
+        }
+        lanes.iter().sum()
+    }
+
+    #[target_feature(enable = "sse4.1")]
+    pub unsafe fn sum_sq_sse41(xs: &[f32]) -> f64 {
+        let n = xs.len();
+        let mut a01 = _mm_setzero_pd();
+        let mut a23 = _mm_setzero_pd();
+        let mut a45 = _mm_setzero_pd();
+        let mut a67 = _mm_setzero_pd();
+        let mut i = 0usize;
+        while i + 8 <= n {
+            let v0 = _mm_loadu_ps(xs.as_ptr().add(i));
+            let v1 = _mm_loadu_ps(xs.as_ptr().add(i + 4));
+            let l0 = _mm_cvtps_pd(v0);
+            let h0 = _mm_cvtps_pd(_mm_movehl_ps(v0, v0));
+            let l1 = _mm_cvtps_pd(v1);
+            let h1 = _mm_cvtps_pd(_mm_movehl_ps(v1, v1));
+            a01 = _mm_add_pd(a01, _mm_mul_pd(l0, l0));
+            a23 = _mm_add_pd(a23, _mm_mul_pd(h0, h0));
+            a45 = _mm_add_pd(a45, _mm_mul_pd(l1, l1));
+            a67 = _mm_add_pd(a67, _mm_mul_pd(h1, h1));
+            i += 8;
+        }
+        let mut lanes = [0f64; 8];
+        _mm_storeu_pd(lanes.as_mut_ptr(), a01);
+        _mm_storeu_pd(lanes.as_mut_ptr().add(2), a23);
+        _mm_storeu_pd(lanes.as_mut_ptr().add(4), a45);
+        _mm_storeu_pd(lanes.as_mut_ptr().add(6), a67);
+        while i < n {
+            let d = *xs.get_unchecked(i) as f64;
+            lanes[i & 7] += d * d;
+            i += 1;
+        }
+        lanes.iter().sum()
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn compensate_sum_sq_avx2(g: &[f32], r: &[f32], dst: *mut f32) -> f64 {
+        let n = g.len();
+        let mut acc0 = _mm256_setzero_pd();
+        let mut acc1 = _mm256_setzero_pd();
+        let mut i = 0usize;
+        while i + 8 <= n {
+            let c = _mm256_add_ps(
+                _mm256_loadu_ps(g.as_ptr().add(i)),
+                _mm256_loadu_ps(r.as_ptr().add(i)),
+            );
+            _mm256_storeu_ps(dst.add(i), c);
+            let lo = _mm256_cvtps_pd(_mm256_castps256_ps128(c));
+            let hi = _mm256_cvtps_pd(_mm256_extractf128_ps::<1>(c));
+            acc0 = _mm256_add_pd(acc0, _mm256_mul_pd(lo, lo));
+            acc1 = _mm256_add_pd(acc1, _mm256_mul_pd(hi, hi));
+            i += 8;
+        }
+        let mut lanes = [0f64; 8];
+        _mm256_storeu_pd(lanes.as_mut_ptr(), acc0);
+        _mm256_storeu_pd(lanes.as_mut_ptr().add(4), acc1);
+        while i < n {
+            let c = *g.get_unchecked(i) + *r.get_unchecked(i);
+            dst.add(i).write(c);
+            let d = c as f64;
+            lanes[i & 7] += d * d;
+            i += 1;
+        }
+        lanes.iter().sum()
+    }
+
+    #[target_feature(enable = "sse4.1")]
+    pub unsafe fn compensate_sum_sq_sse41(g: &[f32], r: &[f32], dst: *mut f32) -> f64 {
+        let n = g.len();
+        let mut a01 = _mm_setzero_pd();
+        let mut a23 = _mm_setzero_pd();
+        let mut a45 = _mm_setzero_pd();
+        let mut a67 = _mm_setzero_pd();
+        let mut i = 0usize;
+        while i + 8 <= n {
+            let c0 = _mm_add_ps(
+                _mm_loadu_ps(g.as_ptr().add(i)),
+                _mm_loadu_ps(r.as_ptr().add(i)),
+            );
+            let c1 = _mm_add_ps(
+                _mm_loadu_ps(g.as_ptr().add(i + 4)),
+                _mm_loadu_ps(r.as_ptr().add(i + 4)),
+            );
+            _mm_storeu_ps(dst.add(i), c0);
+            _mm_storeu_ps(dst.add(i + 4), c1);
+            let l0 = _mm_cvtps_pd(c0);
+            let h0 = _mm_cvtps_pd(_mm_movehl_ps(c0, c0));
+            let l1 = _mm_cvtps_pd(c1);
+            let h1 = _mm_cvtps_pd(_mm_movehl_ps(c1, c1));
+            a01 = _mm_add_pd(a01, _mm_mul_pd(l0, l0));
+            a23 = _mm_add_pd(a23, _mm_mul_pd(h0, h0));
+            a45 = _mm_add_pd(a45, _mm_mul_pd(l1, l1));
+            a67 = _mm_add_pd(a67, _mm_mul_pd(h1, h1));
+            i += 8;
+        }
+        let mut lanes = [0f64; 8];
+        _mm_storeu_pd(lanes.as_mut_ptr(), a01);
+        _mm_storeu_pd(lanes.as_mut_ptr().add(2), a23);
+        _mm_storeu_pd(lanes.as_mut_ptr().add(4), a45);
+        _mm_storeu_pd(lanes.as_mut_ptr().add(6), a67);
+        while i < n {
+            let c = *g.get_unchecked(i) + *r.get_unchecked(i);
+            dst.add(i).write(c);
+            let d = c as f64;
+            lanes[i & 7] += d * d;
+            i += 1;
+        }
+        lanes.iter().sum()
+    }
+
+    // --- f16 quantize (branchless, bit-identical to f32_to_f16_bits) ------
+    //
+    // Produces the u32 lanes holding the u16 result for 8 (AVX2) or 4
+    // (SSE4.1) floats. See DESIGN.md §3.11 for the mask algebra; the
+    // subnormal tier uses cvtps(|x|·2²⁴) whose round-to-nearest-even is
+    // exact-by-construction and equal to the scalar integer rounding.
+
+    #[target_feature(enable = "avx2")]
+    unsafe fn f16_lanes_avx2(bits: __m256i) -> __m256i {
+        let abs_mask = _mm256_set1_epi32(0x7fff_ffff);
+        let abs = _mm256_and_si256(bits, abs_mask);
+        let sign16 = _mm256_srli_epi32::<16>(_mm256_andnot_si256(abs_mask, bits));
+        // normal tier: exponent rebias + RNE on bit 13
+        let base = _mm256_srli_epi32::<13>(abs);
+        let norm = _mm256_sub_epi32(base, _mm256_set1_epi32(112 << 10));
+        let rest = _mm256_and_si256(abs, _mm256_set1_epi32(0x1fff));
+        let half = _mm256_set1_epi32(0x1000);
+        let one = _mm256_set1_epi32(1);
+        let rest_gt = _mm256_cmpgt_epi32(rest, half);
+        let rest_eq = _mm256_cmpeq_epi32(rest, half);
+        let odd = _mm256_cmpeq_epi32(_mm256_and_si256(base, one), one);
+        let round = _mm256_and_si256(
+            _mm256_or_si256(rest_gt, _mm256_and_si256(rest_eq, odd)),
+            one,
+        );
+        let norm = _mm256_add_epi32(norm, round);
+        // subnormal tier: RNE(|x|·2²⁴) — exact, matches scalar rounding
+        let absf = _mm256_castsi256_ps(abs);
+        let subv = _mm256_cvtps_epi32(_mm256_mul_ps(absf, _mm256_set1_ps(16_777_216.0)));
+        // NaN/Inf tier
+        let is_naninf = _mm256_cmpgt_epi32(abs, _mm256_set1_epi32(0x7f7f_ffff));
+        let is_nan = _mm256_cmpgt_epi32(abs, _mm256_set1_epi32(0x7f80_0000));
+        let naninf = _mm256_or_si256(
+            _mm256_set1_epi32(0x7c00),
+            _mm256_and_si256(is_nan, _mm256_set1_epi32(0x0200)),
+        );
+        // tier thresholds (abs < 2³¹ so signed compares are safe)
+        let ge_sub = _mm256_cmpgt_epi32(abs, _mm256_set1_epi32(0x3380_0000 - 1));
+        let ge_norm = _mm256_cmpgt_epi32(abs, _mm256_set1_epi32(0x3880_0000 - 1));
+        let ge_over = _mm256_cmpgt_epi32(abs, _mm256_set1_epi32(0x4780_0000 - 1));
+        let mut out = _mm256_setzero_si256();
+        out = _mm256_blendv_epi8(out, subv, ge_sub);
+        out = _mm256_blendv_epi8(out, norm, ge_norm);
+        out = _mm256_blendv_epi8(out, _mm256_set1_epi32(0x7c00), ge_over);
+        out = _mm256_blendv_epi8(out, naninf, is_naninf);
+        _mm256_or_si256(out, sign16)
+    }
+
+    #[target_feature(enable = "sse4.1")]
+    unsafe fn f16_lanes_sse41(bits: __m128i) -> __m128i {
+        let abs_mask = _mm_set1_epi32(0x7fff_ffff);
+        let abs = _mm_and_si128(bits, abs_mask);
+        let sign16 = _mm_srli_epi32::<16>(_mm_andnot_si128(abs_mask, bits));
+        let base = _mm_srli_epi32::<13>(abs);
+        let norm = _mm_sub_epi32(base, _mm_set1_epi32(112 << 10));
+        let rest = _mm_and_si128(abs, _mm_set1_epi32(0x1fff));
+        let half = _mm_set1_epi32(0x1000);
+        let one = _mm_set1_epi32(1);
+        let rest_gt = _mm_cmpgt_epi32(rest, half);
+        let rest_eq = _mm_cmpeq_epi32(rest, half);
+        let odd = _mm_cmpeq_epi32(_mm_and_si128(base, one), one);
+        let round = _mm_and_si128(_mm_or_si128(rest_gt, _mm_and_si128(rest_eq, odd)), one);
+        let norm = _mm_add_epi32(norm, round);
+        let absf = _mm_castsi128_ps(abs);
+        let subv = _mm_cvtps_epi32(_mm_mul_ps(absf, _mm_set1_ps(16_777_216.0)));
+        let is_naninf = _mm_cmpgt_epi32(abs, _mm_set1_epi32(0x7f7f_ffff));
+        let is_nan = _mm_cmpgt_epi32(abs, _mm_set1_epi32(0x7f80_0000));
+        let naninf = _mm_or_si128(
+            _mm_set1_epi32(0x7c00),
+            _mm_and_si128(is_nan, _mm_set1_epi32(0x0200)),
+        );
+        let ge_sub = _mm_cmpgt_epi32(abs, _mm_set1_epi32(0x3380_0000 - 1));
+        let ge_norm = _mm_cmpgt_epi32(abs, _mm_set1_epi32(0x3880_0000 - 1));
+        let ge_over = _mm_cmpgt_epi32(abs, _mm_set1_epi32(0x4780_0000 - 1));
+        let mut out = _mm_setzero_si128();
+        out = _mm_blendv_epi8(out, subv, ge_sub);
+        out = _mm_blendv_epi8(out, norm, ge_norm);
+        out = _mm_blendv_epi8(out, _mm_set1_epi32(0x7c00), ge_over);
+        out = _mm_blendv_epi8(out, naninf, is_naninf);
+        _mm_or_si128(out, sign16)
+    }
+
+    // --- bf16 quantize (RNE on bit 15, quiet-NaN) --------------------------
+
+    #[target_feature(enable = "avx2")]
+    unsafe fn bf16_lanes_avx2(bits: __m256i) -> __m256i {
+        let abs = _mm256_and_si256(bits, _mm256_set1_epi32(0x7fff_ffff));
+        let is_nan = _mm256_cmpgt_epi32(abs, _mm256_set1_epi32(0x7f80_0000));
+        let hi = _mm256_srli_epi32::<16>(bits);
+        let low = _mm256_and_si256(bits, _mm256_set1_epi32(0xffff));
+        let half = _mm256_set1_epi32(0x8000);
+        let one = _mm256_set1_epi32(1);
+        let low_gt = _mm256_cmpgt_epi32(low, half);
+        let low_eq = _mm256_cmpeq_epi32(low, half);
+        let odd = _mm256_cmpeq_epi32(_mm256_and_si256(hi, one), one);
+        let round = _mm256_and_si256(
+            _mm256_or_si256(low_gt, _mm256_and_si256(low_eq, odd)),
+            one,
+        );
+        let rounded = _mm256_and_si256(_mm256_add_epi32(hi, round), _mm256_set1_epi32(0xffff));
+        let nan = _mm256_or_si256(hi, _mm256_set1_epi32(0x0040));
+        _mm256_blendv_epi8(rounded, nan, is_nan)
+    }
+
+    #[target_feature(enable = "sse4.1")]
+    unsafe fn bf16_lanes_sse41(bits: __m128i) -> __m128i {
+        let abs = _mm_and_si128(bits, _mm_set1_epi32(0x7fff_ffff));
+        let is_nan = _mm_cmpgt_epi32(abs, _mm_set1_epi32(0x7f80_0000));
+        let hi = _mm_srli_epi32::<16>(bits);
+        let low = _mm_and_si128(bits, _mm_set1_epi32(0xffff));
+        let half = _mm_set1_epi32(0x8000);
+        let one = _mm_set1_epi32(1);
+        let low_gt = _mm_cmpgt_epi32(low, half);
+        let low_eq = _mm_cmpeq_epi32(low, half);
+        let odd = _mm_cmpeq_epi32(_mm_and_si128(hi, one), one);
+        let round = _mm_and_si128(_mm_or_si128(low_gt, _mm_and_si128(low_eq, odd)), one);
+        let rounded = _mm_and_si128(_mm_add_epi32(hi, round), _mm_set1_epi32(0xffff));
+        let nan = _mm_or_si128(hi, _mm_set1_epi32(0x0040));
+        _mm_blendv_epi8(rounded, nan, is_nan)
+    }
+
+    // --- f16/bf16 dequantize lanes -----------------------------------------
+
+    #[target_feature(enable = "avx2")]
+    unsafe fn f16_to_f32_lanes_avx2(h: __m256i) -> __m256 {
+        // h: u32 lanes each holding a u16 half-float pattern
+        let sign = _mm256_slli_epi32::<16>(_mm256_and_si256(h, _mm256_set1_epi32(0x8000)));
+        let expmant = _mm256_and_si256(h, _mm256_set1_epi32(0x7fff));
+        let exp = _mm256_srli_epi32::<10>(expmant);
+        let mant = _mm256_and_si256(h, _mm256_set1_epi32(0x3ff));
+        // normal: ((exp+112)<<23) | (mant<<13) == (expmant<<13) + (112<<23)
+        let norm = _mm256_add_epi32(
+            _mm256_slli_epi32::<13>(expmant),
+            _mm256_set1_epi32(112 << 23),
+        );
+        // exp==31: Inf/NaN
+        let infnan = _mm256_or_si256(
+            _mm256_set1_epi32(0x7f80_0000),
+            _mm256_slli_epi32::<13>(mant),
+        );
+        // exp==0: exact mant·2⁻²⁴
+        let subf = _mm256_mul_ps(
+            _mm256_cvtepi32_ps(mant),
+            _mm256_set1_ps(5.960_464_5e-8), // 2^-24
+        );
+        let is_inf = _mm256_cmpeq_epi32(exp, _mm256_set1_epi32(31));
+        let is_sub = _mm256_cmpeq_epi32(exp, _mm256_setzero_si256());
+        let mut out = norm;
+        out = _mm256_blendv_epi8(out, infnan, is_inf);
+        out = _mm256_blendv_epi8(out, _mm256_castps_si256(subf), is_sub);
+        _mm256_castsi256_ps(_mm256_or_si256(out, sign))
+    }
+
+    #[target_feature(enable = "sse4.1")]
+    unsafe fn f16_to_f32_lanes_sse41(h: __m128i) -> __m128 {
+        let sign = _mm_slli_epi32::<16>(_mm_and_si128(h, _mm_set1_epi32(0x8000)));
+        let expmant = _mm_and_si128(h, _mm_set1_epi32(0x7fff));
+        let exp = _mm_srli_epi32::<10>(expmant);
+        let mant = _mm_and_si128(h, _mm_set1_epi32(0x3ff));
+        let norm = _mm_add_epi32(_mm_slli_epi32::<13>(expmant), _mm_set1_epi32(112 << 23));
+        let infnan = _mm_or_si128(_mm_set1_epi32(0x7f80_0000), _mm_slli_epi32::<13>(mant));
+        let subf = _mm_mul_ps(_mm_cvtepi32_ps(mant), _mm_set1_ps(5.960_464_5e-8));
+        let is_inf = _mm_cmpeq_epi32(exp, _mm_set1_epi32(31));
+        let is_sub = _mm_cmpeq_epi32(exp, _mm_setzero_si128());
+        let mut out = norm;
+        out = _mm_blendv_epi8(out, infnan, is_inf);
+        out = _mm_blendv_epi8(out, _mm_castps_si128(subf), is_sub);
+        _mm_castsi128_ps(_mm_or_si128(out, sign))
+    }
+
+    // --- pack/widen helpers -------------------------------------------------
+
+    /// Pack 8 u32 lanes (each ≤ 0xffff) into 8 u16s and store.
+    #[target_feature(enable = "avx2")]
+    unsafe fn store_u16x8_avx2(lanes: __m256i, dst: *mut u16) {
+        let packed = _mm256_packus_epi32(lanes, lanes);
+        // qwords 0 and 2 hold the in-order halves
+        let perm = _mm256_permute4x64_epi64::<0b1000>(packed);
+        _mm_storeu_si128(dst as *mut __m128i, _mm256_castsi256_si128(perm));
+    }
+
+    /// Pack 4 u32 lanes (each ≤ 0xffff) into 4 u16s and store.
+    #[target_feature(enable = "sse4.1")]
+    unsafe fn store_u16x4_sse41(lanes: __m128i, dst: *mut u16) {
+        let packed = _mm_packus_epi32(lanes, lanes);
+        _mm_storel_epi64(dst as *mut __m128i, packed);
+    }
+
+    // --- quantize/dequantize drivers ---------------------------------------
+
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn quantize_f16_avx2(src: &[f32], dst: &mut [u16]) {
+        let n = src.len();
+        let mut i = 0usize;
+        while i + 8 <= n {
+            let bits = _mm256_loadu_si256(src.as_ptr().add(i) as *const __m256i);
+            store_u16x8_avx2(f16_lanes_avx2(bits), dst.as_mut_ptr().add(i));
+            i += 8;
+        }
+        while i < n {
+            *dst.get_unchecked_mut(i) = f32_to_f16_bits(*src.get_unchecked(i));
+            i += 1;
+        }
+    }
+
+    #[target_feature(enable = "sse4.1")]
+    pub unsafe fn quantize_f16_sse41(src: &[f32], dst: &mut [u16]) {
+        let n = src.len();
+        let mut i = 0usize;
+        while i + 4 <= n {
+            let bits = _mm_loadu_si128(src.as_ptr().add(i) as *const __m128i);
+            store_u16x4_sse41(f16_lanes_sse41(bits), dst.as_mut_ptr().add(i));
+            i += 4;
+        }
+        while i < n {
+            *dst.get_unchecked_mut(i) = f32_to_f16_bits(*src.get_unchecked(i));
+            i += 1;
+        }
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn quantize_bf16_avx2(src: &[f32], dst: &mut [u16]) {
+        let n = src.len();
+        let mut i = 0usize;
+        while i + 8 <= n {
+            let bits = _mm256_loadu_si256(src.as_ptr().add(i) as *const __m256i);
+            store_u16x8_avx2(bf16_lanes_avx2(bits), dst.as_mut_ptr().add(i));
+            i += 8;
+        }
+        while i < n {
+            *dst.get_unchecked_mut(i) = f32_to_bf16_bits(*src.get_unchecked(i));
+            i += 1;
+        }
+    }
+
+    #[target_feature(enable = "sse4.1")]
+    pub unsafe fn quantize_bf16_sse41(src: &[f32], dst: &mut [u16]) {
+        let n = src.len();
+        let mut i = 0usize;
+        while i + 4 <= n {
+            let bits = _mm_loadu_si128(src.as_ptr().add(i) as *const __m128i);
+            store_u16x4_sse41(bf16_lanes_sse41(bits), dst.as_mut_ptr().add(i));
+            i += 4;
+        }
+        while i < n {
+            *dst.get_unchecked_mut(i) = f32_to_bf16_bits(*src.get_unchecked(i));
+            i += 1;
+        }
+    }
+
+    #[target_feature(enable = "avx2")]
+    unsafe fn dequantize_f16_ptr_avx2(src: *const u16, dst: *mut f32, n: usize) {
+        let mut i = 0usize;
+        while i + 8 <= n {
+            let h = _mm256_cvtepu16_epi32(_mm_loadu_si128(src.add(i) as *const __m128i));
+            _mm256_storeu_ps(dst.add(i), f16_to_f32_lanes_avx2(h));
+            i += 8;
+        }
+        while i < n {
+            dst.add(i)
+                .write(crate::compress::quantize::f16_bits_to_f32(*src.add(i)));
+            i += 1;
+        }
+    }
+
+    #[target_feature(enable = "sse4.1")]
+    unsafe fn dequantize_f16_ptr_sse41(src: *const u16, dst: *mut f32, n: usize) {
+        let mut i = 0usize;
+        while i + 4 <= n {
+            let h = _mm_cvtepu16_epi32(_mm_loadl_epi64(src.add(i) as *const __m128i));
+            _mm_storeu_ps(dst.add(i), f16_to_f32_lanes_sse41(h));
+            i += 4;
+        }
+        while i < n {
+            dst.add(i)
+                .write(crate::compress::quantize::f16_bits_to_f32(*src.add(i)));
+            i += 1;
+        }
+    }
+
+    #[target_feature(enable = "avx2")]
+    unsafe fn dequantize_bf16_ptr_avx2(src: *const u16, dst: *mut f32, n: usize) {
+        let mut i = 0usize;
+        while i + 8 <= n {
+            let h = _mm256_cvtepu16_epi32(_mm_loadu_si128(src.add(i) as *const __m128i));
+            let bits = _mm256_slli_epi32::<16>(h);
+            _mm256_storeu_ps(dst.add(i), _mm256_castsi256_ps(bits));
+            i += 8;
+        }
+        while i < n {
+            dst.add(i)
+                .write(crate::compress::quantize::bf16_bits_to_f32(*src.add(i)));
+            i += 1;
+        }
+    }
+
+    #[target_feature(enable = "sse4.1")]
+    unsafe fn dequantize_bf16_ptr_sse41(src: *const u16, dst: *mut f32, n: usize) {
+        let mut i = 0usize;
+        while i + 4 <= n {
+            let h = _mm_cvtepu16_epi32(_mm_loadl_epi64(src.add(i) as *const __m128i));
+            let bits = _mm_slli_epi32::<16>(h);
+            _mm_storeu_ps(dst.add(i), _mm_castsi128_ps(bits));
+            i += 4;
+        }
+        while i < n {
+            dst.add(i)
+                .write(crate::compress::quantize::bf16_bits_to_f32(*src.add(i)));
+            i += 1;
+        }
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn dequantize_f16_avx2(src: &[u16], dst: &mut [f32]) {
+        dequantize_f16_ptr_avx2(src.as_ptr(), dst.as_mut_ptr(), src.len());
+    }
+
+    #[target_feature(enable = "sse4.1")]
+    pub unsafe fn dequantize_f16_sse41(src: &[u16], dst: &mut [f32]) {
+        dequantize_f16_ptr_sse41(src.as_ptr(), dst.as_mut_ptr(), src.len());
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn dequantize_bf16_avx2(src: &[u16], dst: &mut [f32]) {
+        dequantize_bf16_ptr_avx2(src.as_ptr(), dst.as_mut_ptr(), src.len());
+    }
+
+    #[target_feature(enable = "sse4.1")]
+    pub unsafe fn dequantize_bf16_sse41(src: &[u16], dst: &mut [f32]) {
+        dequantize_bf16_ptr_sse41(src.as_ptr(), dst.as_mut_ptr(), src.len());
+    }
+
+    // Wire bytes are little-endian u16s and x86 is little-endian, so the
+    // byte-slice variants are straight reinterpreting loads. The pointers
+    // may be unaligned; all loads are loadu/loadl.
+
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn dequantize_f16_le_avx2(src: &[u8], dst: &mut [f32]) {
+        dequantize_f16_ptr_avx2(src.as_ptr() as *const u16, dst.as_mut_ptr(), dst.len());
+    }
+
+    #[target_feature(enable = "sse4.1")]
+    pub unsafe fn dequantize_f16_le_sse41(src: &[u8], dst: &mut [f32]) {
+        dequantize_f16_ptr_sse41(src.as_ptr() as *const u16, dst.as_mut_ptr(), dst.len());
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn dequantize_bf16_le_avx2(src: &[u8], dst: &mut [f32]) {
+        dequantize_bf16_ptr_avx2(src.as_ptr() as *const u16, dst.as_mut_ptr(), dst.len());
+    }
+
+    #[target_feature(enable = "sse4.1")]
+    pub unsafe fn dequantize_bf16_le_sse41(src: &[u8], dst: &mut [f32]) {
+        dequantize_bf16_ptr_sse41(src.as_ptr() as *const u16, dst.as_mut_ptr(), dst.len());
+    }
+
+    // --- roundtrips (quantize lanes → dequantize lanes, no pack) ------------
+
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn roundtrip_f16_avx2(xs: &mut [f32]) {
+        let n = xs.len();
+        let mut i = 0usize;
+        while i + 8 <= n {
+            let bits = _mm256_loadu_si256(xs.as_ptr().add(i) as *const __m256i);
+            let h = f16_lanes_avx2(bits);
+            _mm256_storeu_ps(xs.as_mut_ptr().add(i), f16_to_f32_lanes_avx2(h));
+            i += 8;
+        }
+        while i < n {
+            let x = xs.get_unchecked_mut(i);
+            *x = crate::compress::quantize::f16_bits_to_f32(f32_to_f16_bits(*x));
+            i += 1;
+        }
+    }
+
+    #[target_feature(enable = "sse4.1")]
+    pub unsafe fn roundtrip_f16_sse41(xs: &mut [f32]) {
+        let n = xs.len();
+        let mut i = 0usize;
+        while i + 4 <= n {
+            let bits = _mm_loadu_si128(xs.as_ptr().add(i) as *const __m128i);
+            let h = f16_lanes_sse41(bits);
+            _mm_storeu_ps(xs.as_mut_ptr().add(i), f16_to_f32_lanes_sse41(h));
+            i += 4;
+        }
+        while i < n {
+            let x = xs.get_unchecked_mut(i);
+            *x = crate::compress::quantize::f16_bits_to_f32(f32_to_f16_bits(*x));
+            i += 1;
+        }
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn roundtrip_bf16_avx2(xs: &mut [f32]) {
+        let n = xs.len();
+        let mut i = 0usize;
+        while i + 8 <= n {
+            let bits = _mm256_loadu_si256(xs.as_ptr().add(i) as *const __m256i);
+            let h = bf16_lanes_avx2(bits);
+            let out = _mm256_slli_epi32::<16>(h);
+            _mm256_storeu_ps(xs.as_mut_ptr().add(i), _mm256_castsi256_ps(out));
+            i += 8;
+        }
+        while i < n {
+            let x = xs.get_unchecked_mut(i);
+            *x = crate::compress::quantize::bf16_bits_to_f32(f32_to_bf16_bits(*x));
+            i += 1;
+        }
+    }
+
+    #[target_feature(enable = "sse4.1")]
+    pub unsafe fn roundtrip_bf16_sse41(xs: &mut [f32]) {
+        let n = xs.len();
+        let mut i = 0usize;
+        while i + 4 <= n {
+            let bits = _mm_loadu_si128(xs.as_ptr().add(i) as *const __m128i);
+            let h = bf16_lanes_sse41(bits);
+            let out = _mm_slli_epi32::<16>(h);
+            _mm_storeu_ps(xs.as_mut_ptr().add(i), _mm_castsi128_ps(out));
+            i += 4;
+        }
+        while i < n {
+            let x = xs.get_unchecked_mut(i);
+            *x = crate::compress::quantize::bf16_bits_to_f32(f32_to_bf16_bits(*x));
+            i += 1;
+        }
+    }
+
+    // --- threshold scan (compare → movemask → left-pack) --------------------
+
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn threshold_select_avx2(values: &[f32], threshold: f32, out: &mut Vec<u32>) {
+        let n = values.len();
+        debug_assert!(out.capacity() >= n + 8);
+        let ptr = out.as_mut_ptr();
+        let mut count = 0usize;
+        let abs_mask = _mm256_castsi256_ps(_mm256_set1_epi32(0x7fff_ffff));
+        let th = _mm256_set1_ps(threshold);
+        let iota = _mm256_setr_epi32(0, 1, 2, 3, 4, 5, 6, 7);
+        let eight = _mm256_set1_epi32(8);
+        let mut base = iota;
+        let mut i = 0usize;
+        while i + 8 <= n {
+            let v = _mm256_loadu_ps(values.as_ptr().add(i));
+            let a = _mm256_and_ps(v, abs_mask);
+            // GE_OQ is false on NaN, matching scalar `v.abs() >= threshold`
+            let m = _mm256_movemask_ps(_mm256_cmp_ps::<_CMP_GE_OQ>(a, th)) as usize;
+            if m != 0 {
+                let perm =
+                    _mm256_loadu_si256(AVX2_COMPACT.0[m].as_ptr() as *const __m256i);
+                let packed = _mm256_permutevar8x32_epi32(base, perm);
+                _mm256_storeu_si256(ptr.add(count) as *mut __m256i, packed);
+                count += m.count_ones() as usize;
+            }
+            base = _mm256_add_epi32(base, eight);
+            i += 8;
+        }
+        while i < n {
+            if values.get_unchecked(i).abs() >= threshold {
+                ptr.add(count).write(i as u32);
+                count += 1;
+            }
+            i += 1;
+        }
+        out.set_len(count);
+    }
+
+    #[target_feature(enable = "sse4.1")]
+    pub unsafe fn threshold_select_sse41(values: &[f32], threshold: f32, out: &mut Vec<u32>) {
+        let n = values.len();
+        debug_assert!(out.capacity() >= n + 8);
+        let ptr = out.as_mut_ptr();
+        let mut count = 0usize;
+        let abs_mask = _mm_castsi128_ps(_mm_set1_epi32(0x7fff_ffff));
+        let th = _mm_set1_ps(threshold);
+        let four = _mm_set1_epi32(4);
+        let mut base = _mm_setr_epi32(0, 1, 2, 3);
+        let mut i = 0usize;
+        while i + 4 <= n {
+            let v = _mm_loadu_ps(values.as_ptr().add(i));
+            let a = _mm_and_ps(v, abs_mask);
+            let m = _mm_movemask_ps(_mm_cmpge_ps(a, th)) as usize;
+            if m != 0 {
+                let shuf = _mm_loadu_si128(SSE_COMPACT.0[m].as_ptr() as *const __m128i);
+                let packed = _mm_shuffle_epi8(base, shuf);
+                _mm_storeu_si128(ptr.add(count) as *mut __m128i, packed);
+                count += m.count_ones() as usize;
+            }
+            base = _mm_add_epi32(base, four);
+            i += 4;
+        }
+        while i < n {
+            if values.get_unchecked(i).abs() >= threshold {
+                ptr.add(count).write(i as u32);
+                count += 1;
+            }
+            i += 1;
+        }
+        out.set_len(count);
+    }
+
+    // --- strictly-ascending u32 validation ----------------------------------
+
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn max_ascending_u32le_avx2(bytes: &[u8]) -> Result<i64, ()> {
+        let n = bytes.len() / 4;
+        if n == 0 {
+            return Ok(-1);
+        }
+        let p = bytes.as_ptr();
+        let bias = _mm256_set1_epi32(i32::MIN);
+        let mut ok = _mm256_set1_epi32(-1);
+        let mut e = 1usize;
+        while e + 8 <= n {
+            let cur = _mm256_loadu_si256(p.add(4 * e) as *const __m256i);
+            let prev = _mm256_loadu_si256(p.add(4 * (e - 1)) as *const __m256i);
+            // unsigned > via sign-bias
+            let gt = _mm256_cmpgt_epi32(
+                _mm256_xor_si256(cur, bias),
+                _mm256_xor_si256(prev, bias),
+            );
+            ok = _mm256_and_si256(ok, gt);
+            e += 8;
+        }
+        if _mm256_movemask_epi8(ok) != -1i32 {
+            return Err(());
+        }
+        scalar_ascending_tail(bytes, e)
+    }
+
+    #[target_feature(enable = "sse4.1")]
+    pub unsafe fn max_ascending_u32le_sse41(bytes: &[u8]) -> Result<i64, ()> {
+        let n = bytes.len() / 4;
+        if n == 0 {
+            return Ok(-1);
+        }
+        let p = bytes.as_ptr();
+        let bias = _mm_set1_epi32(i32::MIN);
+        let mut ok = _mm_set1_epi32(-1);
+        let mut e = 1usize;
+        while e + 4 <= n {
+            let cur = _mm_loadu_si128(p.add(4 * e) as *const __m128i);
+            let prev = _mm_loadu_si128(p.add(4 * (e - 1)) as *const __m128i);
+            let gt = _mm_cmpgt_epi32(_mm_xor_si128(cur, bias), _mm_xor_si128(prev, bias));
+            ok = _mm_and_si128(ok, gt);
+            e += 4;
+        }
+        if _mm_movemask_epi8(ok) != 0xffff {
+            return Err(());
+        }
+        scalar_ascending_tail(bytes, e)
+    }
+
+    /// Finish an ascending sweep from word index `e` (≥ 1): the vector
+    /// loop validated words [1, e); check the rest and return the last.
+    fn scalar_ascending_tail(bytes: &[u8], e: usize) -> Result<i64, ()> {
+        let n = bytes.len() / 4;
+        let word = |j: usize| -> u32 {
+            u32::from_le_bytes([
+                bytes[4 * j],
+                bytes[4 * j + 1],
+                bytes[4 * j + 2],
+                bytes[4 * j + 3],
+            ])
+        };
+        let mut prev = word(e - 1);
+        for j in e..n {
+            let cur = word(j);
+            if cur <= prev {
+                return Err(());
+            }
+            prev = cur;
+        }
+        Ok(word(n - 1) as i64)
+    }
+
+}
+
+/// Left-packing lookup tables for the threshold scan, built at compile
+/// time (mask → lane permutation placing selected lanes first).
+#[cfg(target_arch = "x86_64")]
+mod quantize_tables {
+    /// AVX2: for each 8-bit mask, the `vpermd` indices that move selected
+    /// lanes to the front (unselected lanes duplicate lane 0; only the
+    /// first `popcount` outputs are live).
+    pub struct Avx2Lut(pub [[u32; 8]; 256]);
+    /// SSE4.1: for each 4-bit mask, the `pshufb` byte shuffle packing
+    /// selected 4-byte lanes to the front.
+    pub struct SseLut(pub [[u8; 16]; 16]);
+
+    const fn build_avx2() -> Avx2Lut {
+        let mut lut = [[0u32; 8]; 256];
+        let mut m = 0usize;
+        while m < 256 {
+            let mut out_i = 0usize;
+            let mut lane = 0usize;
+            while lane < 8 {
+                if m & (1 << lane) != 0 {
+                    lut[m][out_i] = lane as u32;
+                    out_i += 1;
+                }
+                lane += 1;
+            }
+            m += 1;
+        }
+        Avx2Lut(lut)
+    }
+
+    const fn build_sse() -> SseLut {
+        let mut lut = [[0x80u8; 16]; 16];
+        let mut m = 0usize;
+        while m < 16 {
+            let mut out_i = 0usize;
+            let mut lane = 0usize;
+            while lane < 4 {
+                if m & (1 << lane) != 0 {
+                    let mut b = 0usize;
+                    while b < 4 {
+                        lut[m][out_i * 4 + b] = (lane * 4 + b) as u8;
+                        b += 1;
+                    }
+                    out_i += 1;
+                }
+                lane += 1;
+            }
+            m += 1;
+        }
+        SseLut(lut)
+    }
+
+    pub static AVX2_COMPACT: Avx2Lut = build_avx2();
+    pub static SSE_COMPACT: SseLut = build_sse();
+}
+
+// ---------------------------------------------------------------------------
+// Tests: every kernel bit-identical to the scalar reference across ragged
+// tails, all precisions, and denormal/NaN/±Inf inputs, at every level the
+// host supports (the suite also runs with NETSENSE_SIMD=off in verify.sh).
+// ---------------------------------------------------------------------------
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    /// Adversarial float inputs: denormals, NaN payload variants, ±Inf,
+    /// exact halfway-rounding cases, and the f16 under/overflow edges.
+    fn edge_values() -> Vec<f32> {
+        let mut v = vec![
+            0.0,
+            -0.0,
+            1.0,
+            -1.0,
+            0.5,
+            f32::NAN,
+            -f32::NAN,
+            f32::INFINITY,
+            f32::NEG_INFINITY,
+            f32::MIN_POSITIVE,          // smallest normal f32
+            -f32::MIN_POSITIVE,
+            f32::from_bits(1),          // smallest denormal f32
+            f32::from_bits(0x0000_ffff),
+            f32::from_bits(0x7f80_0001), // signalling NaN, low payload
+            f32::from_bits(0xffc0_1234), // quiet NaN with payload
+            f32::from_bits(0x3380_0000), // 2^-24 (f16 subnormal floor)
+            f32::from_bits(0x337f_ffff), // just below the floor
+            f32::from_bits(0x3400_0000), // 2^-23 halfway region
+            f32::from_bits(0x3880_0000), // smallest f16 normal
+            f32::from_bits(0x477f_e000), // f16 max (65504)
+            f32::from_bits(0x477f_f000), // rounds to f16 Inf
+            f32::from_bits(0x4780_0000), // 65536 → f16 Inf
+            65504.0,
+            -65504.0,
+            65520.0,
+            1e-30,
+            -1e-30,
+            3.141_592_7,
+        ];
+        // halfway cases for f16 (bit 13 boundary) and bf16 (bit 15)
+        v.push(f32::from_bits(0x3f80_1000));
+        v.push(f32::from_bits(0x3f80_3000));
+        v.push(f32::from_bits(0x3f80_8000));
+        v.push(f32::from_bits(0x3f81_8000));
+        v
+    }
+
+    /// A ragged-length pseudorandom buffer salted with edge values.
+    fn mixed_input(len: usize, seed: u64) -> Vec<f32> {
+        let mut rng = Pcg64::seeded(seed);
+        let edges = edge_values();
+        (0..len)
+            .map(|i| {
+                if i % 7 == 3 {
+                    edges[(rng.next_u64() as usize) % edges.len()]
+                } else {
+                    // full-range bit patterns: exercises denormals/NaNs too
+                    f32::from_bits(rng.next_u64() as u32)
+                }
+            })
+            .collect()
+    }
+
+    fn lens() -> Vec<usize> {
+        // ragged tails: every residue mod the widest lane count, plus
+        // sizes around the unroll boundaries
+        let mut ls: Vec<usize> = (0..=9).collect();
+        ls.extend([15, 16, 17, 31, 32, 33, 63, 64, 65, 127, 257, 1000]);
+        ls
+    }
+
+    #[test]
+    fn active_level_is_cached_and_supported() {
+        let l = active_level();
+        assert!(supported_levels().contains(&l));
+        assert_eq!(l, active_level());
+    }
+
+    #[test]
+    fn simd_sum_sq_bit_identical_across_levels() {
+        for &len in &lens() {
+            let xs: Vec<f32> = mixed_input(len, 0xA11CE + len as u64)
+                .iter()
+                // keep L2 finite: strip NaN/Inf (sum order still exercised)
+                .map(|x| if x.is_finite() { *x } else { 1.5 })
+                .collect();
+            let reference = scalar::sum_sq(&xs);
+            for &level in supported_levels() {
+                let got = sum_sq_with(level, &xs);
+                assert_eq!(
+                    got.to_bits(),
+                    reference.to_bits(),
+                    "sum_sq mismatch at len {len} level {level:?}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn simd_compensate_sum_sq_matches_extend_plus_sum() {
+        for &len in &lens() {
+            let g: Vec<f32> = mixed_input(len, 77 + len as u64)
+                .iter()
+                .map(|x| if x.is_finite() { *x } else { -0.25 })
+                .collect();
+            let r: Vec<f32> = mixed_input(len, 991 + len as u64)
+                .iter()
+                .map(|x| if x.is_finite() { *x } else { 2.0 })
+                .collect();
+            let expect_vec: Vec<f32> = g.iter().zip(&r).map(|(a, b)| a + b).collect();
+            let expect_sq = scalar::sum_sq(&expect_vec);
+            for &level in supported_levels() {
+                let mut out = Vec::new();
+                let sq = compensate_sum_sq_extend_with(level, &g, &r, &mut out);
+                assert_eq!(out.len(), len);
+                for (i, (a, b)) in out.iter().zip(&expect_vec).enumerate() {
+                    assert_eq!(
+                        a.to_bits(),
+                        b.to_bits(),
+                        "compensate lane {i} mismatch at len {len} level {level:?}"
+                    );
+                }
+                assert_eq!(sq.to_bits(), expect_sq.to_bits(), "L2 at {level:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn simd_f16_quantize_bit_identical_across_levels() {
+        for &len in &lens() {
+            let xs = mixed_input(len, 5 + len as u64);
+            let mut reference = vec![0u16; len];
+            scalar::quantize_f16(&xs, &mut reference);
+            for &level in supported_levels() {
+                let mut got = vec![0u16; len];
+                quantize_f16_bits_with(level, &xs, &mut got);
+                assert_eq!(got, reference, "f16 quantize len {len} level {level:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn simd_f16_quantize_exhaustive_exponent_sweep() {
+        // every exponent × a mantissa sample, both signs: catches tier
+        // boundary mistakes the random sweep could miss
+        let mut xs = Vec::new();
+        for e in 0..=255u32 {
+            for m in [0u32, 1, 0x1000, 0x1fff, 0x2000, 0x2001, 0x7fffff] {
+                xs.push(f32::from_bits((e << 23) | m));
+                xs.push(f32::from_bits(0x8000_0000 | (e << 23) | m));
+            }
+        }
+        let mut reference = vec![0u16; xs.len()];
+        scalar::quantize_f16(&xs, &mut reference);
+        for &level in supported_levels() {
+            let mut got = vec![0u16; xs.len()];
+            quantize_f16_bits_with(level, &xs, &mut got);
+            for (i, (g, r)) in got.iter().zip(&reference).enumerate() {
+                assert_eq!(
+                    g, r,
+                    "f16 sweep mismatch at {level:?} input {:#010x}",
+                    xs[i].to_bits()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn simd_f16_dequantize_exhaustive_all_patterns() {
+        // all 65536 half patterns — dequantize must be bit-exact on each
+        let src: Vec<u16> = (0..=u16::MAX).collect();
+        let mut reference = vec![0f32; src.len()];
+        scalar::dequantize_f16(&src, &mut reference);
+        for &level in supported_levels() {
+            let mut got = vec![0f32; src.len()];
+            dequantize_f16_bits_with(level, &src, &mut got);
+            for (i, (g, r)) in got.iter().zip(&reference).enumerate() {
+                assert_eq!(
+                    g.to_bits(),
+                    r.to_bits(),
+                    "f16 dequantize mismatch at {level:?} pattern {:#06x}",
+                    src[i]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn simd_bf16_quantize_dequantize_bit_identical() {
+        for &len in &lens() {
+            let xs = mixed_input(len, 31 + len as u64);
+            let mut qref = vec![0u16; len];
+            scalar::quantize_bf16(&xs, &mut qref);
+            let mut dref = vec![0f32; len];
+            scalar::dequantize_bf16(&qref, &mut dref);
+            for &level in supported_levels() {
+                let mut q = vec![0u16; len];
+                quantize_bf16_bits_with(level, &xs, &mut q);
+                assert_eq!(q, qref, "bf16 quantize len {len} level {level:?}");
+                let mut d = vec![0f32; len];
+                dequantize_bf16_bits_with(level, &q, &mut d);
+                let bits: Vec<u32> = d.iter().map(|x| x.to_bits()).collect();
+                let rbits: Vec<u32> = dref.iter().map(|x| x.to_bits()).collect();
+                assert_eq!(bits, rbits, "bf16 dequantize len {len} level {level:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn simd_roundtrips_match_scalar_reference() {
+        for &len in &lens() {
+            let xs = mixed_input(len, 1234 + len as u64);
+            let mut f16_ref = xs.clone();
+            scalar::roundtrip_f16(&mut f16_ref);
+            let mut bf16_ref = xs.clone();
+            scalar::roundtrip_bf16(&mut bf16_ref);
+            for &level in supported_levels() {
+                let mut a = xs.clone();
+                roundtrip_f16_in_place_with(level, &mut a);
+                let mut b = xs.clone();
+                roundtrip_bf16_in_place_with(level, &mut b);
+                let ab: Vec<u32> = a.iter().map(|x| x.to_bits()).collect();
+                let rb: Vec<u32> = f16_ref.iter().map(|x| x.to_bits()).collect();
+                assert_eq!(ab, rb, "f16 roundtrip len {len} level {level:?}");
+                let bb: Vec<u32> = b.iter().map(|x| x.to_bits()).collect();
+                let rbb: Vec<u32> = bf16_ref.iter().map(|x| x.to_bits()).collect();
+                assert_eq!(bb, rbb, "bf16 roundtrip len {len} level {level:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn simd_le_byte_dequantize_matches_u16_path() {
+        for &len in &lens() {
+            let xs = mixed_input(len, 555 + len as u64);
+            let mut words = vec![0u16; len];
+            scalar::quantize_f16(&xs, &mut words);
+            let bytes: Vec<u8> = words.iter().flat_map(|w| w.to_le_bytes()).collect();
+            let mut reference = vec![0f32; len];
+            scalar::dequantize_f16_le(&bytes, &mut reference);
+            for &level in supported_levels() {
+                let mut got = vec![0f32; len];
+                dequantize_f16_le_bytes_with(level, &bytes, &mut got);
+                let gb: Vec<u32> = got.iter().map(|x| x.to_bits()).collect();
+                let rb: Vec<u32> = reference.iter().map(|x| x.to_bits()).collect();
+                assert_eq!(gb, rb, "f16 LE len {len} level {level:?}");
+                let mut got2 = vec![0f32; len];
+                dequantize_bf16_le_bytes_with(level, &bytes, &mut got2);
+                let mut ref2 = vec![0f32; len];
+                scalar::dequantize_bf16_le(&bytes, &mut ref2);
+                let g2: Vec<u32> = got2.iter().map(|x| x.to_bits()).collect();
+                let r2: Vec<u32> = ref2.iter().map(|x| x.to_bits()).collect();
+                assert_eq!(g2, r2, "bf16 LE len {len} level {level:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn simd_threshold_select_identical_output() {
+        for &len in &lens() {
+            let xs = mixed_input(len, 4242 + len as u64);
+            for threshold in [0.0f32, 0.25, 1.0, 1e30, f32::INFINITY] {
+                let mut reference = Vec::new();
+                scalar::threshold_select(&xs, threshold, &mut reference);
+                for &level in supported_levels() {
+                    let mut got = Vec::new();
+                    threshold_select_into_with(level, &xs, threshold, &mut got);
+                    assert_eq!(
+                        got, reference,
+                        "threshold scan len {len} th {threshold} level {level:?}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn simd_threshold_select_reuses_capacity() {
+        let xs = mixed_input(300, 9);
+        let mut out = Vec::new();
+        threshold_select_into(&xs, 0.5, &mut out);
+        let cap = out.capacity();
+        for _ in 0..5 {
+            threshold_select_into(&xs, 0.5, &mut out);
+            assert_eq!(out.capacity(), cap, "capacity must be stable after warmup");
+        }
+    }
+
+    #[test]
+    fn simd_ascending_check_matches_scalar() {
+        let mut rng = Pcg64::seeded(7);
+        for &n in &[0usize, 1, 2, 3, 7, 8, 9, 15, 16, 17, 40, 100] {
+            // ascending case
+            let mut asc: Vec<u32> = Vec::new();
+            let mut cur = 0u32;
+            for _ in 0..n {
+                cur = cur.wrapping_add(1 + (rng.next_u64() as u32 % 50));
+                asc.push(cur);
+            }
+            let bytes: Vec<u8> = asc.iter().flat_map(|w| w.to_le_bytes()).collect();
+            let reference = scalar::max_ascending_u32le(&bytes);
+            for &level in supported_levels() {
+                assert_eq!(
+                    max_strictly_ascending_u32le_with(level, &bytes),
+                    reference,
+                    "ascending n {n} level {level:?}"
+                );
+            }
+            // corrupt one word (if any): duplicate its predecessor
+            if n >= 2 {
+                let k = 1 + (rng.next_u64() as usize % (n - 1));
+                let mut bad = asc.clone();
+                bad[k] = bad[k - 1];
+                let bytes: Vec<u8> = bad.iter().flat_map(|w| w.to_le_bytes()).collect();
+                assert!(scalar::max_ascending_u32le(&bytes).is_err());
+                for &level in supported_levels() {
+                    assert!(
+                        max_strictly_ascending_u32le_with(level, &bytes).is_err(),
+                        "corruption must be caught at n {n} level {level:?}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn simd_ascending_check_handles_high_bit_indices() {
+        // indices above i32::MAX exercise the unsigned sign-bias compare
+        let asc: Vec<u32> = vec![5, 0x7fff_ffff, 0x8000_0000, 0x8000_0001, 0xffff_fffe];
+        let bytes: Vec<u8> = asc.iter().flat_map(|w| w.to_le_bytes()).collect();
+        for &level in supported_levels() {
+            assert_eq!(
+                max_strictly_ascending_u32le_with(level, &bytes),
+                Ok(0xffff_fffe),
+                "high-bit ascent at {level:?}"
+            );
+        }
+        let desc: Vec<u32> = vec![0x8000_0000, 0x7fff_ffff];
+        let bytes: Vec<u8> = desc.iter().flat_map(|w| w.to_le_bytes()).collect();
+        for &level in supported_levels() {
+            assert!(max_strictly_ascending_u32le_with(level, &bytes).is_err());
+        }
+    }
+}

@@ -3,9 +3,16 @@
 //! the collectives need (sum of sparse gradients, densify).
 //!
 //! Wire layout (little-endian):
-//! `[u32 n_total][u32 nnz][u8 precision][pad 3][nnz × u32 idx][nnz × value]`
+//! `[u32 n_total][u32 nnz][u8 precision][u8 codec][pad 2][payload]`
+//!
+//! Codec 0 (raw) carries `[nnz × u32 idx][nnz × value]`; codec 1 routes
+//! the payload through the 3LC-style lossless stage
+//! ([`super::lossless`]: delta + zero-run + byte-plane packing). The
+//! codec byte was padding before the lossless stage existed, so raw
+//! frames are wire-compatible in both directions.
 
 use super::quantize::{f16_bits_to_f32, f32_to_f16_bits, Precision};
+use super::{lossless, simd};
 
 /// Bytes in the COO wire header (`n_total` + `nnz` + precision tag + pad).
 pub const COO_HEADER_BYTES: usize = 12;
@@ -86,9 +93,13 @@ impl SparseGradient {
         debug_assert_eq!((out.len() - before) as u64, self.wire_bytes());
     }
 
-    /// Deserialize from the wire format.
+    /// Deserialize from the wire format (either codec).
     pub fn decode(buf: &[u8]) -> Result<SparseGradient, String> {
-        let (n_total, nnz, precision, idx_end, val_end) = parse_coo_header(buf)?;
+        let (n_total, nnz, precision, codec) = parse_coo_prefix(buf)?;
+        if codec == lossless::CODEC_LOSSLESS {
+            return lossless::decode_lossless_sparse(buf, n_total, nnz, precision);
+        }
+        let (idx_end, val_end) = raw_extents(buf.len(), nnz, precision)?;
         let mut indices = Vec::with_capacity(nnz);
         for c in buf[COO_HEADER_BYTES..idx_end].chunks_exact(4) {
             let i = u32::from_le_bytes(c.try_into().unwrap());
@@ -187,14 +198,15 @@ impl SparseGradient {
     }
 }
 
-/// Parse the 12-byte COO wire header and check the declared length
-/// against `buf.len()` — shared by the staged decoder
+/// Parse the fixed 12-byte COO wire prefix — shared by the staged decoder
 /// ([`SparseGradient::decode`]) and the fused decode-reduce
 /// ([`decode_reduce_into`]), so both receive paths accept exactly the
 /// same frames by construction (the decode-side twin of
-/// [`encode_coo_header_into`]). Returns
-/// `(n_total, nnz, precision, idx_end, val_end)`.
-fn parse_coo_header(buf: &[u8]) -> Result<(usize, usize, Precision, usize, usize), String> {
+/// [`encode_coo_header_into`]). Returns `(n_total, nnz, precision,
+/// codec)`; the raw-codec extents and length check live in
+/// [`raw_extents`] because the lossless codec sizes its payload from the
+/// per-plane sections instead.
+fn parse_coo_prefix(buf: &[u8]) -> Result<(usize, usize, Precision, u8), String> {
     if buf.len() < COO_HEADER_BYTES {
         return Err("short header".into());
     }
@@ -206,6 +218,16 @@ fn parse_coo_header(buf: &[u8]) -> Result<(usize, usize, Precision, usize, usize
         2 => Precision::Bf16,
         p => return Err(format!("bad precision tag {p}")),
     };
+    let codec = buf[9];
+    if codec != 0 && codec != lossless::CODEC_LOSSLESS {
+        return Err(format!("bad codec tag {codec}"));
+    }
+    Ok((n_total, nnz, precision, codec))
+}
+
+/// Raw-codec payload extents: check the declared element count against
+/// `len` and return `(idx_end, val_end)`.
+fn raw_extents(len: usize, nnz: usize, precision: Precision) -> Result<(usize, usize), String> {
     // Checked arithmetic: a u32 nnz can't overflow usize on 64-bit hosts,
     // but the header contract shouldn't depend on pointer width — a lying
     // count is a named error, never a wrapped offset.
@@ -217,14 +239,16 @@ fn parse_coo_header(buf: &[u8]) -> Result<(usize, usize, Precision, usize, usize
         .checked_mul(precision.bytes())
         .and_then(|b| b.checked_add(idx_end))
         .ok_or_else(|| format!("nnz {nnz} overflows frame size"))?;
-    if buf.len() != val_end {
-        return Err(format!("bad length {} (expected {val_end})", buf.len()));
+    if len != val_end {
+        return Err(format!("bad length {len} (expected {val_end})"));
     }
-    Ok((n_total, nnz, precision, idx_end, val_end))
+    Ok((idx_end, val_end))
 }
 
 /// Write the 12-byte COO wire header (`n_total`, `nnz`, precision tag,
-/// padding) — shared by the staged codec and the fused encoder.
+/// codec 0 = raw, padding) — shared by the staged codec and the fused
+/// encoder. The lossless encoder writes its own header with codec 1
+/// ([`lossless::encode_gathered_lossless_into`]).
 fn encode_coo_header_into(n_total: usize, nnz: usize, precision: Precision, out: &mut Vec<u8>) {
     out.extend_from_slice(&(n_total as u32).to_le_bytes());
     out.extend_from_slice(&(nnz as u32).to_le_bytes());
@@ -334,53 +358,73 @@ pub struct DecodeReduceOutcome {
 /// (the staged path's `add_into` would panic; a real receiver must get a
 /// named error instead).
 pub fn decode_reduce_into(buf: &[u8], out: &mut [f32]) -> Result<DecodeReduceOutcome, String> {
-    let (n_total, nnz, precision, idx_end, val_end) = parse_coo_header(buf)?;
+    let (n_total, nnz, precision, codec) = parse_coo_prefix(buf)?;
     if n_total != out.len() {
         return Err(format!(
             "payload for {n_total} elements, accumulator holds {}",
             out.len()
         ));
     }
-    // Validation sweep over the index region (cheap: u32 loads + one
-    // compare each) — nothing touches `out` until every index is proven
-    // in-bounds and strictly ascending.
-    let mut prev: i64 = -1;
-    for c in buf[COO_HEADER_BYTES..idx_end].chunks_exact(4) {
-        let i = u32::from_le_bytes(c.try_into().unwrap());
-        if i as i64 <= prev {
-            return Err("indices not strictly ascending".into());
-        }
-        prev = i as i64;
+    if codec == lossless::CODEC_LOSSLESS {
+        return lossless::decode_reduce_lossless(buf, n_total, nnz, precision, out);
     }
-    if prev >= n_total as i64 {
-        return Err(format!("index {prev} out of range {n_total}"));
+    let (idx_end, val_end) = raw_extents(buf.len(), nnz, precision)?;
+    // Validation sweep over the index region (vectorized compare chain,
+    // DESIGN.md §3.11) — nothing touches `out` until every index is
+    // proven in-bounds and strictly ascending.
+    let idx_bytes = &buf[COO_HEADER_BYTES..idx_end];
+    let last = simd::max_strictly_ascending_u32le(idx_bytes)
+        .map_err(|()| String::from("indices not strictly ascending"))?;
+    if last >= n_total as i64 {
+        return Err(format!("index {last} out of range {n_total}"));
     }
-    // Scatter sweep: dequantize + accumulate, one pass over the payload.
-    let indices = buf[COO_HEADER_BYTES..idx_end].chunks_exact(4);
+    // Scatter sweep: dequantize in vectorized stack-buffer chunks, then
+    // scatter-accumulate. Same conversions, same order as the scalar
+    // reference → bit-identical.
     let values = &buf[idx_end..val_end];
     match precision {
         Precision::F32 => {
+            let indices = idx_bytes.chunks_exact(4);
             for (c, v) in indices.zip(values.chunks_exact(4)) {
                 let i = u32::from_le_bytes(c.try_into().unwrap()) as usize;
                 out[i] += f32::from_le_bytes(v.try_into().unwrap());
             }
         }
-        Precision::F16 => {
-            for (c, v) in indices.zip(values.chunks_exact(2)) {
-                let i = u32::from_le_bytes(c.try_into().unwrap()) as usize;
-                out[i] += f16_bits_to_f32(u16::from_le_bytes(v.try_into().unwrap()));
-            }
-        }
-        Precision::Bf16 => {
-            for (c, v) in indices.zip(values.chunks_exact(2)) {
-                let i = u32::from_le_bytes(c.try_into().unwrap()) as usize;
-                out[i] += super::quantize::bf16_bits_to_f32(u16::from_le_bytes(
-                    v.try_into().unwrap(),
-                ));
-            }
-        }
+        Precision::F16 => scatter_16bit(idx_bytes, values, out, simd::dequantize_f16_le_bytes),
+        Precision::Bf16 => scatter_16bit(idx_bytes, values, out, simd::dequantize_bf16_le_bytes),
     }
     Ok(DecodeReduceOutcome { nnz, precision })
+}
+
+/// Chunk size (elements) for the dequantize-then-scatter sweep: small
+/// enough to live on the stack and stay in L1, big enough to amortize the
+/// vector kernel's tail handling.
+const SCATTER_CHUNK: usize = 256;
+
+/// Dequantize 16-bit wire values through fixed stack chunks and scatter
+/// them — the adds happen in the same element order as the scalar loop,
+/// so the result is bit-identical. Zero heap allocations.
+fn scatter_16bit(
+    idx_bytes: &[u8],
+    values: &[u8],
+    out: &mut [f32],
+    dequant: fn(&[u8], &mut [f32]),
+) {
+    let nnz = idx_bytes.len() / 4;
+    let mut chunk = [0f32; SCATTER_CHUNK];
+    let mut off = 0usize;
+    while off < nnz {
+        let m = (nnz - off).min(SCATTER_CHUNK);
+        dequant(&values[2 * off..2 * (off + m)], &mut chunk[..m]);
+        for (c, &v) in idx_bytes[4 * off..4 * (off + m)]
+            .chunks_exact(4)
+            .zip(&chunk[..m])
+        {
+            let i = u32::from_le_bytes([c[0], c[1], c[2], c[3]]) as usize;
+            out[i] += v;
+        }
+        off += m;
+    }
 }
 
 /// [`decode_reduce_into`] for a complete transport frame (the 8-byte

@@ -137,22 +137,25 @@ fn quickselect_desc(scratch: &mut [(f32, u32)], k: usize) -> (f32, u32) {
 }
 
 /// Indices (ascending) of all values with |v| >= threshold.
+///
+/// Allocating convenience kept for tests and examples only — hot-path call
+/// sites must use [`threshold_select_into`], which reuses a caller-owned
+/// buffer (hidden from docs so new code can't pick it up by accident).
+#[doc(hidden)]
 pub fn threshold_select(values: &[f32], threshold: f32) -> Vec<u32> {
     let mut out = Vec::new();
     threshold_select_into(values, threshold, &mut out);
     out
 }
 
-/// [`threshold_select`] writing into a caller-owned buffer (hot-path
-/// variant: the steady-state pre-filter runs every step, so its candidate
-/// set must not cost a fresh allocation per call).
+/// Indices (ascending) of all values with |v| >= threshold, written into a
+/// caller-owned buffer (hot-path variant: the steady-state pre-filter runs
+/// every step, so its candidate set must not cost a fresh allocation per
+/// call). Runs the runtime-dispatched SIMD scan
+/// ([`super::simd::threshold_select_into`]); the scalar fallback is
+/// bit-identical.
 pub fn threshold_select_into(values: &[f32], threshold: f32, out: &mut Vec<u32>) {
-    out.clear();
-    for (i, &v) in values.iter().enumerate() {
-        if v.abs() >= threshold {
-            out.push(i as u32);
-        }
-    }
+    super::simd::threshold_select_into(values, threshold, out);
 }
 
 /// Threshold-reuse top-k: try `est_threshold` (e.g. last step's k-th

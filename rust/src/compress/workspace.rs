@@ -34,6 +34,11 @@ pub struct Workspace {
     pub(crate) sub: Vec<f32>,
     /// Trim-selection output (indices local to `sub`).
     pub(crate) sub_keep: Vec<u32>,
+    /// Lossless-stage candidate payload (byte planes + ZRLE); shipped only
+    /// when it beats the raw COO encoding, else discarded in place.
+    pub(crate) lossless: Vec<u8>,
+    /// Quantized wire words staged for byte-plane packing.
+    pub(crate) val_bits: Vec<u32>,
 }
 
 impl Workspace {
@@ -51,6 +56,11 @@ impl Workspace {
             cand: Vec::with_capacity(n),
             sub: Vec::with_capacity(n),
             sub_keep: Vec::with_capacity(n),
+            // Worst case the lossless candidate is header + planes with no
+            // zero runs at all: bounded by the raw encoding plus per-plane
+            // length words; 9n is a safe ceiling for every precision.
+            lossless: Vec::with_capacity(12 + 8 * 4 + 9 * n),
+            val_bits: Vec::with_capacity(n),
         }
     }
 }
@@ -231,6 +241,51 @@ mod tests {
         }
         let allocs = thread_alloc_count() - before;
         assert_eq!(allocs, 0, "steady-state fused step allocated {allocs} times");
+    }
+
+    #[test]
+    fn steady_state_lossless_fused_step_is_allocation_free() {
+        // Same gate with the lossless stage on: the byte-plane + ZRLE
+        // candidate is built in the workspace's own scratch, so a warm
+        // step still performs ZERO heap allocations — win or skip.
+        let n = 20_000;
+        let w = randn(n, 31);
+        let mut g = randn(n, 32);
+        let mut r = Pcg64::seeded(33);
+        let cfg = CompressionConfig {
+            lossless: true,
+            ..Default::default()
+        };
+        let mut c = NetSenseCompressor::new(n, cfg);
+        let mut ws = Workspace::with_capacity(n);
+        let mut out: Vec<u8> = Vec::new();
+        let mut step = |c: &mut NetSenseCompressor,
+                        ws: &mut Workspace,
+                        out: &mut Vec<u8>,
+                        g: &mut [f32],
+                        r: &mut Pcg64,
+                        ratio: f64| {
+            for x in g.iter_mut() {
+                *x += 0.05 * r.normal() as f32;
+            }
+            out.clear();
+            c.compress_frame_into(g, &w, ratio, ws, out)
+        };
+        // Warm both the quantized (f16, stage wins) and the f32 regimes,
+        // plus the lazily-initialized obs metrics.
+        let mut saw_win = false;
+        for i in 0..40 {
+            let ratio = if i % 2 == 0 { 0.1 } else { 0.01 };
+            saw_win |= step(&mut c, &mut ws, &mut out, &mut g, &mut r, ratio).lossless;
+        }
+        assert!(saw_win, "lossless stage never won during warmup");
+        let before = thread_alloc_count();
+        for i in 0..10 {
+            let ratio = if i % 2 == 0 { 0.1 } else { 0.01 };
+            step(&mut c, &mut ws, &mut out, &mut g, &mut r, ratio);
+        }
+        let allocs = thread_alloc_count() - before;
+        assert_eq!(allocs, 0, "steady-state lossless step allocated {allocs} times");
     }
 
     #[test]

@@ -341,6 +341,18 @@ pub struct HotMetrics {
     pub compress_ns: &'static Histogram,
     /// Fused decode-reduce sweep (parse→validate→dequantize→scatter), ns.
     pub decode_ns: &'static Histogram,
+    /// Raw COO payload bytes offered to the lossless stage (its input —
+    /// counted whether the stage wins or ships raw).
+    pub lossless_raw_bytes_total: &'static Counter,
+    /// Payload bytes actually shipped after lossless negotiation (wins
+    /// ship the packed candidate, losses ship raw); together with
+    /// `lossless_raw_bytes_total` this is the stage's net wire reduction.
+    pub lossless_wire_bytes_total: &'static Counter,
+    /// Buckets whose lossless candidate lost to raw COO (incompressible —
+    /// the decision journal's "stage skipped" signal).
+    pub lossless_skipped_total: &'static Counter,
+    /// Per-bucket shipped-vs-raw byte ratio when the stage runs, percent.
+    pub lossless_ratio_pct: &'static Histogram,
     // ---- sensing / controller --------------------------------------------
     /// Multiplicative-backoff transitions (Algorithm 1 line 16).
     pub ctl_backoffs_total: &'static Counter,
@@ -423,6 +435,22 @@ pub fn hot() -> &'static HotMetrics {
             decode_ns: r.histogram(
                 "netsense_decode_ns",
                 "fused decode-reduce sweep duration, nanoseconds",
+            ),
+            lossless_raw_bytes_total: r.counter(
+                "netsense_lossless_raw_bytes_total",
+                "raw COO payload bytes offered to the lossless stage",
+            ),
+            lossless_wire_bytes_total: r.counter(
+                "netsense_lossless_wire_bytes_total",
+                "payload bytes shipped after lossless negotiation",
+            ),
+            lossless_skipped_total: r.counter(
+                "netsense_lossless_skipped_total",
+                "buckets whose lossless candidate lost to raw COO",
+            ),
+            lossless_ratio_pct: r.histogram(
+                "netsense_lossless_ratio_pct",
+                "per-bucket shipped-vs-raw byte ratio of the lossless stage, percent",
             ),
             ctl_backoffs_total: r.counter(
                 "netsense_ctl_backoffs_total",

@@ -336,7 +336,9 @@ pub fn probe_checkpoint(bytes: &[u8]) -> Result<(), String> {
 pub fn probe_surface(surface: &str, bytes: &[u8]) -> Option<Result<(), String>> {
     match surface {
         "frame" => Some(probe_frame(bytes)),
-        "coo" => Some(probe_coo(bytes)),
+        // Both COO codecs (raw 0, lossless 1) go through the same probe —
+        // the codec byte is part of the payload under test.
+        "coo" | "coo-lossless" => Some(probe_coo(bytes)),
         "envelope" => Some(probe_envelope(bytes)),
         "checkpoint" => Some(probe_checkpoint(bytes)),
         _ => None,
@@ -381,6 +383,33 @@ pub fn gen_coo(rng: &mut SplitMix64) -> Vec<u8> {
         precision,
     };
     s.encode()
+}
+
+/// A valid **lossless-codec** COO payload (codec byte 1: delta-encoded
+/// byte planes + ZRLE): same structural space as [`gen_coo`], emitted
+/// through the fused lossless encoder. Mutations of these reach the
+/// plane-length, token-stream, and index-reconstruction validators that
+/// raw-codec inputs never touch.
+pub fn gen_coo_lossless(rng: &mut SplitMix64) -> Vec<u8> {
+    use crate::compress::lossless::encode_gathered_lossless_into;
+    let n_total = 1 + rng.index(512);
+    let nnz = rng.index(n_total.min(64) + 1);
+    let mut indices = Vec::with_capacity(nnz);
+    for i in 0..n_total {
+        let left = (n_total - i) as u64;
+        let need = (nnz - indices.len()) as u64;
+        if need > 0 && rng.below(left) < need {
+            indices.push(i as u32);
+        }
+    }
+    let precision = [Precision::F32, Precision::F16, Precision::Bf16][rng.index(3)];
+    let mut dense = vec![0f32; n_total];
+    for &i in &indices {
+        dense[i as usize] = (rng.next() as i32 as f32) * 1e-6;
+    }
+    let (mut val_bits, mut out) = (Vec::new(), Vec::new());
+    encode_gathered_lossless_into(&dense, &indices, precision, &mut val_bits, &mut out);
+    out
 }
 
 /// A valid elastic envelope (random kind/epoch/step) plus a random body.
@@ -463,6 +492,11 @@ mod tests {
     }
 
     #[test]
+    fn fuzz_coo_lossless_surface() {
+        fuzz_surface("coo-lossless", gen_coo_lossless, probe_coo);
+    }
+
+    #[test]
     fn fuzz_envelope_surface() {
         fuzz_surface("envelope", gen_envelope, probe_envelope);
     }
@@ -512,6 +546,7 @@ mod tests {
         for _ in 0..50 {
             probe_frame(&gen_frame(&mut rng)).expect("gen_frame invalid");
             probe_coo(&gen_coo(&mut rng)).expect("gen_coo invalid");
+            probe_coo(&gen_coo_lossless(&mut rng)).expect("gen_coo_lossless invalid");
             probe_envelope(&gen_envelope(&mut rng)).expect("gen_envelope invalid");
             probe_checkpoint(&gen_checkpoint(&mut rng)).expect("gen_checkpoint invalid");
         }

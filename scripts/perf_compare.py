@@ -1,0 +1,241 @@
+#!/usr/bin/env python3
+"""Perf-trajectory regression gate: diff fresh `make bench-json` output
+against the committed baselines under `baselines/perf/`.
+
+Usage:
+    python3 scripts/perf_compare.py                 # compare repo-root BENCH_*.json
+    python3 scripts/perf_compare.py --mode warn     # report only, always exit 0
+    python3 scripts/perf_compare.py --tolerance 0.5 # looser gate (noisy runners)
+    python3 scripts/perf_compare.py --self-test     # prove the gate trips
+
+Environment overrides (CI wires these): PERF_TOLERANCE, PERF_COMPARE_MODE.
+
+Direction awareness is keyed off the metric name:
+  - throughput-ish keys (``*_gbps``, ``*_speedup``, ``*_per_s``,
+    ``*_reduction``) regress when they DROP below baseline*(1-tol);
+  - cost-ish keys (``*_pct``, ``*_ns``, ``*_us``, ``*_s``, ``*_bytes``,
+    ``*overhead*``, ``*wall*``) regress when they RISE above
+    baseline*(1+tol);
+  - allocation counters (``*allocs*``) are exact: any increase over the
+    committed baseline is a regression, tolerance does not apply (the
+    zero-alloc contract is not a statistical property);
+  - metadata and environment-shape keys (timestamps, thread counts,
+    simd_level, …) are informational and never gated.
+
+EXPERIMENTS.md ("Perf trajectory") documents how to read a failure and how
+to bump a baseline on purpose.
+"""
+
+import argparse
+import json
+import os
+import sys
+import tempfile
+
+BENCHES = ["compress", "pipeline", "obs"]
+BASELINE_DIR = os.path.join("baselines", "perf")
+DEFAULT_TOLERANCE = 0.35  # generous: shared runners are noisy
+
+# Keys that describe the run, not its performance.
+META_KEYS = {
+    "bench",
+    "schema_version",
+    "fast_mode",
+    "unix_time_s",
+    "simd_level",
+    "parallel_threads",
+    "parallel_buckets",
+    "n_params",
+    "windows",
+    "iters_per_window",
+}
+
+# Unit tokens appear mid-key too (`fused_gbps_10m`), so match as substrings —
+# except `_per_s`, kept suffix-only so it cannot collide with `_per_step`.
+HIGHER_BETTER_TOKENS = ("_gbps", "_speedup", "_reduction")
+LOWER_BETTER_SUFFIXES = ("_pct", "_ns", "_us", "_s", "_bytes")
+LOWER_BETTER_SUBSTRINGS = ("overhead", "wall")
+
+
+def classify(key):
+    """Return 'higher', 'lower', 'exact', or None (ungated)."""
+    if key in META_KEYS:
+        return None
+    if "allocs" in key:
+        return "exact"
+    if key.endswith("_per_s") or any(t in key for t in HIGHER_BETTER_TOKENS):
+        return "higher"
+    if key.endswith(LOWER_BETTER_SUFFIXES) or any(
+        s in key for s in LOWER_BETTER_SUBSTRINGS
+    ):
+        return "lower"
+    return None
+
+
+def compare_bench(name, baseline, fresh, tolerance):
+    """Yield (severity, message) pairs; severity is 'regression' or 'note'."""
+    for key in sorted(baseline):
+        base = baseline[key]
+        direction = classify(key)
+        if direction is None or not isinstance(base, (int, float)) or isinstance(base, bool):
+            continue
+        if key not in fresh:
+            yield ("regression", f"{name}: `{key}` missing from fresh run "
+                                 "(renamed or dropped — baselines only gain fields)")
+            continue
+        cur = fresh[key]
+        if not isinstance(cur, (int, float)) or isinstance(cur, bool):
+            yield ("regression", f"{name}: `{key}` is no longer numeric ({cur!r})")
+            continue
+        if direction == "exact":
+            if cur > base:
+                yield ("regression",
+                       f"{name}: `{key}` rose {base} -> {cur} (allocation gate is exact)")
+            continue
+        if direction == "higher":
+            floor = base * (1.0 - tolerance)
+            if cur < floor:
+                yield ("regression",
+                       f"{name}: `{key}` dropped {base:.4g} -> {cur:.4g} "
+                       f"(floor {floor:.4g} at tolerance {tolerance:.0%})")
+            continue
+        # direction == "lower"
+        if base == 0:
+            if cur > 0:
+                yield ("note", f"{name}: `{key}` moved off a zero baseline (0 -> {cur:.4g})")
+            continue
+        ceil = base * (1.0 + tolerance)
+        if cur > ceil:
+            yield ("regression",
+                   f"{name}: `{key}` rose {base:.4g} -> {cur:.4g} "
+                   f"(ceiling {ceil:.4g} at tolerance {tolerance:.0%})")
+    for key in sorted(set(fresh) - set(baseline)):
+        if classify(key) is not None:
+            yield ("note", f"{name}: new metric `{key}` = {fresh[key]!r} "
+                           "(not in baseline yet — bump the baseline to start gating it)")
+
+
+def load(path):
+    with open(path) as f:
+        return json.load(f)
+
+
+def run_compare(fresh_dir, baseline_dir, tolerance, mode):
+    regressions, notes, compared = [], [], 0
+    for bench in BENCHES:
+        fname = f"BENCH_{bench}.json"
+        base_path = os.path.join(baseline_dir, fname)
+        fresh_path = os.path.join(fresh_dir, fname)
+        if not os.path.exists(base_path):
+            notes.append(f"{bench}: no committed baseline at {base_path} — skipped")
+            continue
+        if not os.path.exists(fresh_path):
+            regressions.append(
+                f"{bench}: fresh {fresh_path} missing — run `make bench-json` first"
+            )
+            continue
+        baseline, fresh = load(base_path), load(fresh_path)
+        if baseline.get("fast_mode") != fresh.get("fast_mode"):
+            notes.append(
+                f"{bench}: fast_mode differs (baseline {baseline.get('fast_mode')}, "
+                f"fresh {fresh.get('fast_mode')}) — absolute numbers are not comparable; "
+                "ratios/speedups/allocs still gate"
+            )
+        compared += 1
+        for severity, msg in compare_bench(bench, baseline, fresh, tolerance):
+            (regressions if severity == "regression" else notes).append(msg)
+
+    for n in notes:
+        print(f"note: {n}")
+    for r in regressions:
+        print(f"REGRESSION: {r}")
+    if compared == 0:
+        print("perf-compare: no baselines compared (nothing committed yet?)")
+    if regressions:
+        print(f"perf-compare: {len(regressions)} regression(s) beyond tolerance "
+              f"{tolerance:.0%} across {compared} bench file(s)")
+        if mode == "warn":
+            print("perf-compare: warn mode — not failing the build")
+            return 0
+        return 1
+    print(f"perf-compare: OK ({compared} bench file(s) within tolerance {tolerance:.0%})")
+    return 0
+
+
+def self_test():
+    """Prove the gate trips on a synthetically regressed run and passes on a
+    healthy one — the verify.sh hook, so a refactor can't neuter the gate."""
+    baseline = {
+        "bench": "compress",
+        "schema_version": 1,
+        "fast_mode": False,
+        "unix_time_s": 0,
+        "fused_gbps_10m": 10.0,
+        "simd_quantize_f16_speedup": 4.0,
+        "allocs_per_step_fused": 0,
+        "lossless_wire_bytes": 1000,
+        "decode_allocs_per_step_fused": 0,
+    }
+    healthy = dict(baseline, fused_gbps_10m=9.5, simd_quantize_f16_speedup=3.8)
+    regressed = dict(
+        baseline,
+        fused_gbps_10m=2.0,            # throughput collapse
+        allocs_per_step_fused=3,       # zero-alloc contract broken
+        lossless_wire_bytes=5000,      # wire bloat
+    )
+    failures = []
+    with tempfile.TemporaryDirectory() as tmp:
+        base_dir = os.path.join(tmp, "baselines")
+        os.makedirs(base_dir)
+        with open(os.path.join(base_dir, "BENCH_compress.json"), "w") as f:
+            json.dump(baseline, f)
+
+        def write_fresh(doc):
+            with open(os.path.join(tmp, "BENCH_compress.json"), "w") as f:
+                json.dump(doc, f)
+
+        write_fresh(healthy)
+        if run_compare(tmp, base_dir, 0.35, "block") != 0:
+            failures.append("healthy run was flagged as a regression")
+        write_fresh(regressed)
+        if run_compare(tmp, base_dir, 0.35, "block") == 0:
+            failures.append("regressed run passed the gate")
+        if run_compare(tmp, base_dir, 0.35, "warn") != 0:
+            failures.append("warn mode failed the build")
+        # Exactness of the alloc gate: +1 alloc must trip even at huge tolerance.
+        write_fresh(dict(baseline, allocs_per_step_fused=1))
+        if run_compare(tmp, base_dir, 10.0, "block") == 0:
+            failures.append("alloc increase slipped through tolerance")
+    if failures:
+        for f in failures:
+            print(f"self-test FAILED: {f}")
+        return 1
+    print("perf-compare self-test: OK")
+    return 0
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__,
+                                 formatter_class=argparse.RawDescriptionHelpFormatter)
+    ap.add_argument("--tolerance", type=float,
+                    default=float(os.environ.get("PERF_TOLERANCE", DEFAULT_TOLERANCE)),
+                    help="relative tolerance before a drift is a regression "
+                         f"(default {DEFAULT_TOLERANCE}, env PERF_TOLERANCE)")
+    ap.add_argument("--mode", choices=["block", "warn"],
+                    default=os.environ.get("PERF_COMPARE_MODE", "block"),
+                    help="block: exit 1 on regression (self-hosted); "
+                         "warn: report but exit 0 (shared runners). env PERF_COMPARE_MODE")
+    ap.add_argument("--fresh-dir", default=".",
+                    help="directory holding the fresh BENCH_*.json (default: repo root)")
+    ap.add_argument("--baseline-dir", default=BASELINE_DIR,
+                    help=f"committed baseline directory (default: {BASELINE_DIR})")
+    ap.add_argument("--self-test", action="store_true",
+                    help="synthesize a regressed run and assert the gate trips")
+    args = ap.parse_args()
+    if args.self_test:
+        sys.exit(self_test())
+    sys.exit(run_compare(args.fresh_dir, args.baseline_dir, args.tolerance, args.mode))
+
+
+if __name__ == "__main__":
+    main()

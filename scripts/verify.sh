@@ -41,6 +41,23 @@ cargo test -q --lib allocation_free
 echo "== observability gates: registry + spans + journal (FAST-safe) =="
 cargo test -q --lib obs
 
+# Codec-kernel gates, run by name for the same reason: the SIMD kernels
+# must stay bit-identical to the scalar reference at every dispatch level
+# (the full run above exercises the runtime-detected level; the
+# NETSENSE_SIMD=off rerun pins the scalar fallback on hardware where they
+# would otherwise never diverge), and the 3LC-style lossless stage must
+# round-trip bit-exactly through both decode paths.
+echo "== codec-kernel gates: SIMD bit-identity (detected + forced-scalar) + lossless (FAST-safe) =="
+cargo test -q --lib simd
+NETSENSE_SIMD=off cargo test -q --lib simd
+cargo test -q --lib lossless
+
+# Perf-trajectory gate self-test: prove the regression comparator trips on
+# a synthetically regressed bench JSON (the real diff against
+# baselines/perf/ runs via `make perf-compare`, which needs bench runs).
+echo "== perf-compare self-test (comparator must trip on synthetic regression) =="
+python3 scripts/perf_compare.py --self-test
+
 # Adversarial gates, run by name for the same reason: the deterministic
 # wire-surface fuzz harness (frame codec, COO payloads, epoch envelopes,
 # checkpoints — malformed input → named Err, never a panic or OOB
