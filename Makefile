@@ -47,13 +47,16 @@ bench-json:
 perf-compare: bench-json
 	python3 scripts/perf_compare.py
 
-# Telemetry smoke: a short healthy live run with tracing, the decision
-# journal, and a metrics snapshot enabled, then structural validation of
-# all three artifacts (Chrome-trace nesting, Prometheus cumulative
-# buckets, journal ratio chain). CI uploads the artifacts.
+# Telemetry smoke: a short healthy live run over real TCP sockets with
+# tracing, the decision journal, the cluster gather, and a metrics
+# snapshot enabled, then structural validation of all four artifacts
+# (clock-aligned multi-rank Chrome trace, Prometheus cumulative buckets,
+# journal ratio chain, critical-path attribution). CI uploads them.
 trace-smoke:
 	cargo build --release
 	./target/release/netsenseml live --workers 4 --steps 12 --params 20000 \
+	  --backend tcp --bind 127.0.0.1:0 --obs-collect \
 	  --trace-out trace_smoke.json --journal-out journal_smoke.json \
-	  --metrics-out metrics_smoke.prom
-	python3 scripts/check_trace.py trace_smoke.json metrics_smoke.prom journal_smoke.json
+	  --metrics-out metrics_smoke.prom --analysis-out analysis_smoke.json
+	python3 scripts/check_trace.py trace_smoke.json metrics_smoke.prom \
+	  journal_smoke.json analysis_smoke.json

@@ -9,12 +9,21 @@
 //! overhead above the gate fails the run (exit 1); under
 //! `NETSENSE_BENCH_FAST=1` (CI smoke, noisy shared runners) it only
 //! warns.
+//!
+//! A second section prices the end-of-run collection path — OBS payload
+//! encode + decode round-trip and the critical-path analyzer over a
+//! merged multi-rank trace. These run strictly after training, so they
+//! are cost keys (`*_us`, gated lower-is-better by perf_compare.py), not
+//! part of the per-step overhead gate.
 
 mod common;
 
 use common::{gbps, BenchJson};
 use netsenseml::compress::{decode_reduce_into, CompressionConfig, NetSenseCompressor, Workspace};
-use netsenseml::obs::{hot, Tracer};
+use netsenseml::obs::{
+    analyze, decode_telemetry, encode_telemetry, hot, merge_aligned, DecisionKind,
+    DecisionRecord, RankTelemetry, SpanRecord, Tracer,
+};
 use netsenseml::util::bench::bb;
 use netsenseml::util::rng::Pcg64;
 use std::time::Instant;
@@ -86,6 +95,57 @@ fn median(xs: &mut [f64]) -> f64 {
     xs[xs.len() / 2]
 }
 
+/// Synthetic cluster telemetry shaped like a real run: rank 0 carries the
+/// full step/compress/round/decode nest, the other ranks their round
+/// spans, and the journal alternates Round digests with Ratio
+/// transitions.
+fn synth_cluster(n_ranks: usize, steps: u32) -> (Vec<Vec<SpanRecord>>, Vec<DecisionRecord>) {
+    let mut per_rank: Vec<Vec<SpanRecord>> = vec![Vec::new(); n_ranks];
+    for step in 0..steps {
+        let base = step as u64 * 1_000_000;
+        per_rank[0].extend([
+            SpanRecord { rank: 0, id: u64::from(step) * 8 + 1, parent: 0, label: "step", step, start_ns: base, end_ns: base + 900_000 },
+            SpanRecord { rank: 0, id: u64::from(step) * 8 + 2, parent: u64::from(step) * 8 + 1, label: "compress", step, start_ns: base + 10_000, end_ns: base + 100_000 },
+            SpanRecord { rank: 0, id: u64::from(step) * 8 + 3, parent: u64::from(step) * 8 + 1, label: "round", step, start_ns: base + 200_000, end_ns: base + 800_000 },
+            SpanRecord { rank: 0, id: u64::from(step) * 8 + 4, parent: u64::from(step) * 8 + 3, label: "decode", step, start_ns: base + 210_000, end_ns: base + 300_000 },
+        ]);
+        for (r, spans) in per_rank.iter_mut().enumerate().skip(1) {
+            spans.push(SpanRecord {
+                rank: r,
+                id: u64::from(step) + 1,
+                parent: 0,
+                label: "round",
+                step,
+                start_ns: base + 200_000,
+                end_ns: base + 700_000 + (r as u64) * 50_000,
+            });
+        }
+    }
+    let mut journal = Vec::new();
+    for step in 0..steps {
+        journal.push(DecisionRecord {
+            kind: DecisionKind::Round,
+            step,
+            live: n_ranks,
+            rtt_us: 600,
+            payload_bytes: 40_000,
+            ..DecisionRecord::default()
+        });
+        if step % 8 == 0 {
+            journal.push(DecisionRecord {
+                kind: DecisionKind::Ratio,
+                step,
+                live: n_ranks,
+                old_ratio: 0.05,
+                new_ratio: 0.06,
+                predicted_wire_bytes: 40_000,
+                ..DecisionRecord::default()
+            });
+        }
+    }
+    (per_rank, journal)
+}
+
 fn main() {
     let fast = std::env::var("NETSENSE_BENCH_FAST").ok().as_deref() == Some("1");
     let n = if fast { 1 << 16 } else { 1 << 18 };
@@ -134,6 +194,49 @@ fn main() {
          on {on_gbps:.2} GB/s — overhead {overhead_pct:+.2}% (gate {GATE_PCT}%)"
     );
 
+    // --- collection cost (runs after training, never on the hot path) ---
+    let n_ranks = 4;
+    let steps = if fast { 128u32 } else { 1024 };
+    let (per_rank, journal) = synth_cluster(n_ranks, steps);
+    let telemetry = RankTelemetry {
+        rank: 1,
+        clock_ns: 1_234_567,
+        spans: per_rank[1].clone(),
+        spans_dropped: 0,
+        journal: journal.clone(),
+        journal_dropped: 0,
+        final_ratio: 0.06,
+        recoveries: 0,
+        lost_intervals: 0,
+        decreases: 1,
+        increases: 2,
+    };
+    let offsets: Vec<i64> = (0..n_ranks as i64).map(|r| r * 1_500 - 800).collect();
+    let merged = merge_aligned(&per_rank, &offsets);
+    let c_iters = if fast { 20 } else { 40 };
+    let mut rt_us: Vec<f64> = Vec::with_capacity(windows);
+    let mut an_us: Vec<f64> = Vec::with_capacity(windows);
+    for _ in 0..windows {
+        let t0 = Instant::now();
+        for _ in 0..c_iters {
+            let wire = encode_telemetry(bb(&telemetry));
+            bb(decode_telemetry(bb(&wire)).unwrap());
+        }
+        rt_us.push(t0.elapsed().as_secs_f64() * 1e6 / c_iters as f64);
+        let t1 = Instant::now();
+        for _ in 0..c_iters {
+            bb(analyze(bb(&merged), bb(&journal), n_ranks, 400_000));
+        }
+        an_us.push(t1.elapsed().as_secs_f64() * 1e6 / c_iters as f64);
+    }
+    let rt_med = median(&mut rt_us);
+    let an_med = median(&mut an_us);
+    println!(
+        "collection ({} spans x {n_ranks} ranks): OBS round-trip {rt_med:.1} us, \
+         analyze {an_med:.1} us",
+        per_rank[0].len()
+    );
+
     let mut json = BenchJson::new("obs");
     json.set("n_params", n as u64);
     json.set("windows", windows as u64);
@@ -142,6 +245,10 @@ fn main() {
     json.set("fused_on_gbps", on_gbps);
     json.set("overhead_pct", overhead_pct);
     json.set("gate_pct", GATE_PCT);
+    json.set("collect_ranks", n_ranks as u64);
+    json.set("collect_steps", steps as u64);
+    json.set("collect_roundtrip_us", rt_med);
+    json.set("analyze_us", an_med);
     json.write();
 
     if overhead_pct > GATE_PCT {

@@ -209,7 +209,7 @@ const LIVE_KEYS: &[&str] = &[
 ];
 
 /// Keys accepted under `[obs]` (telemetry capture).
-const OBS_KEYS: &[&str] = &["obs.trace", "obs.trace_capacity", "obs.journal"];
+const OBS_KEYS: &[&str] = &["obs.trace", "obs.trace_capacity", "obs.journal", "obs.collect"];
 
 /// Keys accepted under `[fault]` (failure detector + chaos schedule).
 const FAULT_KEYS: &[&str] = &[
@@ -447,8 +447,11 @@ pub struct ObsConfig {
     pub trace: bool,
     /// Span-ring capacity per rank.
     pub trace_capacity: usize,
-    /// Record rank 0's controller decision journal.
+    /// Record each rank's controller decision journal.
     pub journal: bool,
+    /// End-of-run cluster gather: ship every rank's telemetry to rank 0,
+    /// clock-align the merged trace, run the critical-path analyzer.
+    pub collect: bool,
 }
 
 impl Default for ObsConfig {
@@ -458,6 +461,7 @@ impl Default for ObsConfig {
             trace: d.trace,
             trace_capacity: d.trace_capacity,
             journal: d.journal,
+            collect: d.collect,
         }
     }
 }
@@ -572,6 +576,9 @@ impl LiveConfig {
         if let Some(v) = get_bool_strict(&doc, "obs.journal")? {
             c.obs.journal = v;
         }
+        if let Some(v) = get_bool_strict(&doc, "obs.collect")? {
+            c.obs.collect = v;
+        }
         c.validate()?;
         Ok(c)
     }
@@ -628,6 +635,7 @@ impl LiveConfig {
                 trace: self.obs.trace,
                 trace_capacity: self.obs.trace_capacity,
                 journal: self.obs.journal,
+                collect: self.obs.collect,
             },
         }
     }
@@ -853,21 +861,23 @@ partial_kill = [[2, 9, 5]]
     fn obs_table_parses_and_rejects_bad_values() {
         // Default: everything off, the always-on registry aside.
         let c = LiveConfig::from_toml("[transport]\nn_workers = 2").unwrap();
-        assert!(!c.obs.trace && !c.obs.journal);
+        assert!(!c.obs.trace && !c.obs.journal && !c.obs.collect);
         let c = LiveConfig::from_toml(
             r#"
 [obs]
 trace = true
 trace_capacity = 512
 journal = true
+collect = true
 "#,
         )
         .unwrap();
-        assert!(c.obs.trace && c.obs.journal);
+        assert!(c.obs.trace && c.obs.journal && c.obs.collect);
         assert_eq!(c.obs.trace_capacity, 512);
         let opts = c.live_opts();
-        assert!(opts.obs.trace && opts.obs.journal);
+        assert!(opts.obs.trace && opts.obs.journal && opts.obs.collect);
         assert_eq!(opts.obs.trace_capacity, 512);
+        assert!(LiveConfig::from_toml("[obs]\ncollect = \"on\"").is_err());
         // A typo must fail loudly.
         let e = LiveConfig::from_toml("[obs]\ntracing = true").unwrap_err();
         assert!(format!("{e:#}").contains("unknown key"), "{e:#}");

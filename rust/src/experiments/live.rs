@@ -46,7 +46,9 @@ use crate::fault::{
 };
 use crate::netsim::SimTime;
 use crate::obs::{
-    self, chrome_trace_json, DecisionJournal, DecisionKind, DecisionRecord, SpanRecord, Tracer,
+    self, analyze, chrome_trace_json_with_offsets, gather_at_rank0, merge_aligned,
+    respond_to_collector, Analysis, DecisionJournal, DecisionKind, DecisionRecord, RankTelemetry,
+    SpanRecord, Tracer,
 };
 use crate::sensing::{Branch, Phase, RatioController};
 use crate::transport::{
@@ -99,9 +101,17 @@ pub struct ObsOpts {
     pub trace: bool,
     /// Span-ring capacity per rank (oldest spans overwritten past it).
     pub trace_capacity: usize,
-    /// Record rank 0's controller decision journal, exported via
-    /// [`LiveReport::journal_json`].
+    /// Record every rank's controller decision journal (rank 0's is
+    /// exported via [`LiveReport::journal_json`]; the rest land in
+    /// [`LiveReport::journals`] and ride the collection gather).
     pub journal: bool,
+    /// End-of-run cluster gather ([`crate::obs::collect`]): every
+    /// surviving rank ships its span ring + journal + counters to rank 0
+    /// behind a clock ping/pong, the merged timeline is clock-aligned
+    /// ([`crate::obs::align`]), and the critical-path analyzer runs
+    /// ([`LiveReport::analysis`]). Strictly post-loop — the training hot
+    /// path never sees any of it.
+    pub collect: bool,
 }
 
 impl Default for ObsOpts {
@@ -110,6 +120,7 @@ impl Default for ObsOpts {
             trace: false,
             trace_capacity: 4096,
             journal: false,
+            collect: false,
         }
     }
 }
@@ -121,6 +132,7 @@ impl ObsOpts {
             trace: true,
             trace_capacity: 4096,
             journal: true,
+            collect: true,
         }
     }
 }
@@ -188,10 +200,26 @@ pub struct LiveReport {
     pub spans: Vec<SpanRecord>,
     /// Spans overwritten by ring wrap, summed across ranks.
     pub spans_dropped: u64,
-    /// Rank 0's decision journal (empty unless [`ObsOpts::journal`]).
+    /// Rank 0's decision journal (empty unless [`ObsOpts::journal`]),
+    /// with the analyzer's `Straggler`/`Congestion` verdicts appended
+    /// when collection ran.
     pub journal: Vec<DecisionRecord>,
     /// Journal records refused past capacity.
     pub journal_dropped: u64,
+    /// Every rank's decision journal, indexed by rank (each empty unless
+    /// [`ObsOpts::journal`]; a killed rank keeps the prefix it recorded).
+    pub journals: Vec<Vec<DecisionRecord>>,
+    /// Per-peer clock offsets applied to the merged timeline, ns, indexed
+    /// by rank (empty unless [`ObsOpts::collect`]; entry 0 is always 0).
+    pub clock_offsets_ns: Vec<i64>,
+    /// Workers that aborted with an error, `"rank N: cause"` (flight
+    /// recorder: their partial trace/journal is still in the report).
+    pub worker_errors: Vec<String>,
+    /// Collection-gather diagnostics (silent peers, malformed payloads).
+    pub collect_notes: Vec<String>,
+    /// Critical-path attribution over the merged timeline (None unless
+    /// [`ObsOpts::collect`] gathered spans).
+    pub analysis: Option<Analysis>,
 }
 
 impl LiveReport {
@@ -230,15 +258,23 @@ impl LiveReport {
     }
 
     /// The run's spans as Chrome `trace_event` JSON — load in Perfetto or
-    /// `chrome://tracing` (one track per rank).
+    /// `chrome://tracing` (one track per rank). When collection ran, the
+    /// spans are clock-aligned and the applied offsets are embedded as
+    /// `clockOffsetsNs` trace metadata.
     pub fn trace_json(&self) -> String {
-        chrome_trace_json(&self.spans)
+        chrome_trace_json_with_offsets(&self.spans, &self.clock_offsets_ns)
     }
 
     /// The run's decision journal as a JSON document
     /// ([`crate::obs::journal`] schema).
     pub fn journal_json(&self) -> String {
         obs::journal::records_to_json(&self.journal, self.journal_dropped)
+    }
+
+    /// The critical-path attribution report as `ANALYSIS.json` (None
+    /// unless collection ran).
+    pub fn analysis_json(&self) -> Option<String> {
+        self.analysis.as_ref().map(|a| a.to_json())
     }
 }
 
@@ -258,6 +294,14 @@ struct WorkerOut {
     spans_dropped: u64,
     journal: Vec<DecisionRecord>,
     journal_dropped: u64,
+    /// Aborted mid-loop with this error (flight recorder: the fields
+    /// above hold everything recorded up to the failure).
+    error: Option<String>,
+    /// Rank 0 only: the gathered telemetry (own + each live peer's).
+    collected: Vec<RankTelemetry>,
+    /// Rank 0 only: estimated per-peer clock offsets, indexed by rank.
+    offsets_ns: Vec<i64>,
+    collect_notes: Vec<String>,
 }
 
 /// Run a live training exchange; blocks until every worker finishes.
@@ -318,21 +362,79 @@ pub fn run_live(opts: &LiveOpts) -> Result<LiveReport> {
         .iter()
         .find(|o| o.rank == 0)
         .ok_or_else(|| anyhow!("rank 0 produced no output"))?;
-    // Survivors must match rank 0 bit-for-bit on every step; a killed
-    // rank must match on the prefix it lived through.
+    // Survivors must match rank 0 bit-for-bit on every step; a killed or
+    // aborted rank must match on the prefix it lived through.
     let consistent = outs.iter().all(|o| {
         let k = o.hashes.len().min(rank0.hashes.len());
-        o.hashes[..k] == rank0.hashes[..k] && (o.killed || o.hashes.len() == rank0.hashes.len())
+        o.hashes[..k] == rank0.hashes[..k]
+            && (o.killed || o.error.is_some() || o.hashes.len() == rank0.hashes.len())
     });
-    // Merge every rank's span ring into one start-ordered timeline (all
-    // tracers share `t0` as their clock origin, so the ranks line up).
-    let mut spans: Vec<SpanRecord> = outs.iter().flat_map(|o| o.spans.iter().copied()).collect();
-    spans.sort_by_key(|s| (s.start_ns, s.rank, s.id));
+    // Merge every rank's span ring into one start-ordered timeline. The
+    // joined worker outputs all share `t0` as their clock origin, so a
+    // plain sort lines the ranks up; when the gather ran, rank 0's
+    // collected telemetry (which, unlike joined outputs, survives
+    // multi-process deployments) is merged through the estimated clock
+    // offsets instead.
+    let collected = !rank0.collected.is_empty();
+    let clock_offsets_ns = if collected {
+        rank0.offsets_ns.clone()
+    } else {
+        Vec::new()
+    };
+    let spans: Vec<SpanRecord> = if collected {
+        let mut per_rank: Vec<Vec<SpanRecord>> = vec![Vec::new(); opts.n_workers];
+        for tel in &rank0.collected {
+            if let Some(slot) = per_rank.get_mut(tel.rank) {
+                slot.extend(tel.spans.iter().copied());
+            }
+        }
+        merge_aligned(&per_rank, &clock_offsets_ns)
+    } else {
+        let mut spans: Vec<SpanRecord> =
+            outs.iter().flat_map(|o| o.spans.iter().copied()).collect();
+        spans.sort_by_key(|s| (s.start_ns, s.rank, s.id));
+        spans
+    };
+    if let Some(max_abs) = clock_offsets_ns.iter().map(|o| o.abs()).max() {
+        obs::hot().clock_offset_ns.set(max_abs as f64);
+    }
+    let analysis = if collected && !spans.is_empty() {
+        Some(analyze(
+            &spans,
+            &rank0.journal,
+            opts.n_workers,
+            (opts.n_params * 4) as u64,
+        ))
+    } else {
+        None
+    };
+    let mut journal = rank0.journal.clone();
+    if let Some(a) = &analysis {
+        let verdicts = a.verdict_records(&journal);
+        journal.extend(verdicts);
+    }
+    let mut journals: Vec<Vec<DecisionRecord>> = vec![Vec::new(); opts.n_workers];
+    for o in &outs {
+        if let Some(slot) = journals.get_mut(o.rank) {
+            slot.clone_from(&o.journal);
+        }
+    }
     Ok(LiveReport {
         spans,
         spans_dropped: outs.iter().map(|o| o.spans_dropped).sum(),
-        journal: rank0.journal.clone(),
+        journal,
         journal_dropped: rank0.journal_dropped,
+        journals,
+        clock_offsets_ns,
+        worker_errors: outs
+            .iter()
+            .filter_map(|o| o.error.as_ref().map(|e| format!("rank {}: {e}", o.rank)))
+            .collect(),
+        collect_notes: outs
+            .iter()
+            .flat_map(|o| o.collect_notes.iter().cloned())
+            .collect(),
+        analysis,
         consistent,
         final_ratio: rank0.final_ratio,
         controller_decreases: rank0.decreases,
@@ -435,7 +537,7 @@ fn run_worker(t: Box<dyn Transport>, opts: &LiveOpts, origin: Instant) -> Result
     } else {
         Tracer::disabled()
     };
-    let mut journal = if opts.obs.journal && rank == 0 {
+    let mut journal = if opts.obs.journal {
         DecisionJournal::with_capacity(2 * opts.steps + 8)
     } else {
         DecisionJournal::disabled()
@@ -474,6 +576,7 @@ fn run_worker(t: Box<dyn Transport>, opts: &LiveOpts, origin: Instant) -> Result
     let mut hashes = Vec::with_capacity(opts.steps);
     let mut trace = Vec::with_capacity(opts.steps);
     let mut killed = false;
+    let mut worker_error: Option<String> = None;
     let mut recoveries = 0u64;
     let mut lost_intervals = 0u64;
     for step in 0..opts.steps {
@@ -559,7 +662,14 @@ fn run_worker(t: Box<dyn Transport>, opts: &LiveOpts, origin: Instant) -> Result
                 killed = true;
                 break;
             }
-            Err(e) => return Err(e),
+            Err(e) => {
+                // Flight recorder: don't throw the telemetry away with
+                // the error — break out with everything recorded up to
+                // the failure still in the rings, so the report (and the
+                // gather, on the surviving side) can carry it.
+                worker_error = Some(format!("{e:#}"));
+                break;
+            }
         };
         recoveries += round.recoveries;
         if round.lost {
@@ -661,11 +771,55 @@ fn run_worker(t: Box<dyn Transport>, opts: &LiveOpts, origin: Instant) -> Result
         });
         tracer.end(sp_step);
     }
-    t.shutdown()?;
     let (decreases, increases, final_ratio) = match &controller {
         Some(c) => (c.n_decreases, c.n_increases, c.ratio()),
         None => (0, 0, trace.last().map(|r| r.ratio).unwrap_or(1.0)),
     };
+
+    // Cluster gather — strictly after the training loop, so the hot path
+    // (and its zero-alloc gates) never see any of this. Best-effort on
+    // both sides: a dead or silent counterpart becomes a note.
+    let mut collected: Vec<RankTelemetry> = Vec::new();
+    let mut offsets_ns: Vec<i64> = Vec::new();
+    let mut collect_notes: Vec<String> = Vec::new();
+    if opts.obs.collect && !killed && worker_error.is_none() {
+        let own = RankTelemetry {
+            rank,
+            clock_ns: origin.elapsed().as_nanos() as u64,
+            spans: tracer.drain(),
+            spans_dropped: tracer.dropped(),
+            journal: journal.records().to_vec(),
+            journal_dropped: journal.dropped(),
+            final_ratio,
+            recoveries: recoveries as u32,
+            lost_intervals: lost_intervals as u32,
+            decreases: decreases as u32,
+            increases: increases as u32,
+        };
+        let timeout = opts.fault.probe_timeout().max(Duration::from_millis(500));
+        if rank == 0 {
+            let peers: Vec<usize> = (1..opts.n_workers)
+                .filter(|&r| membership.is_live(r))
+                .collect();
+            let pc = gather_at_rank0(&mut t, origin, &peers, timeout);
+            offsets_ns = pc.offsets_ns;
+            collect_notes = pc.notes;
+            collected.push(own);
+            collected.extend(pc.telemetry);
+        } else if membership.is_live(0) {
+            if let Err(e) = respond_to_collector(&mut t, origin, &own, timeout) {
+                collect_notes.push(format!("rank {rank}: telemetry hand-off failed: {e:#}"));
+            }
+        }
+    }
+
+    if let Err(e) = t.shutdown() {
+        // An aborted worker's shutdown error is secondary — keep the
+        // original failure as the story.
+        if worker_error.is_none() {
+            return Err(e);
+        }
+    }
     let spans_dropped = tracer.dropped();
     let journal_dropped = journal.dropped();
     Ok(WorkerOut {
@@ -682,6 +836,10 @@ fn run_worker(t: Box<dyn Transport>, opts: &LiveOpts, origin: Instant) -> Result
         spans_dropped,
         journal: journal.records().to_vec(),
         journal_dropped,
+        error: worker_error,
+        collected,
+        offsets_ns,
+        collect_notes,
     })
 }
 
@@ -801,6 +959,121 @@ mod tests {
         ] {
             assert!(snap.contains(name), "{name} missing from snapshot");
         }
+    }
+
+    /// The cluster-plane acceptance check (ISSUE): a 4-worker run with
+    /// collection on gathers every rank's telemetry to rank 0, estimates
+    /// per-peer clock offsets, runs the critical-path analyzer, and the
+    /// per-rank journals tell one consistent story: every rank walked
+    /// the same epoch/live trajectory (Ratio records are rank-local).
+    #[test]
+    fn obs_collect_aligns_ranks_and_keeps_journals_consistent() {
+        let opts = LiveOpts {
+            n_workers: 4,
+            steps: 10,
+            n_params: 20_000,
+            obs: ObsOpts::all(),
+            ..Default::default()
+        };
+        let report = run_live(&opts).unwrap();
+        assert!(report.consistent);
+        assert!(report.worker_errors.is_empty(), "{:?}", report.worker_errors);
+        assert!(report.collect_notes.is_empty(), "{:?}", report.collect_notes);
+
+        // The gather reached every peer: offsets indexed by rank, rank
+        // 0's own entry pinned at zero, and — same process, same clock —
+        // every estimate small.
+        assert_eq!(report.clock_offsets_ns.len(), 4);
+        assert_eq!(report.clock_offsets_ns[0], 0);
+        for (r, off) in report.clock_offsets_ns.iter().enumerate() {
+            assert!(
+                off.abs() < 100_000_000,
+                "rank {r} offset {off} ns is implausible for one process"
+            );
+        }
+        // Aligned merge carries all four ranks and stays start-ordered.
+        for rank in 0..4usize {
+            assert!(
+                report.spans.iter().any(|s| s.rank == rank),
+                "rank {rank} missing from the merged timeline"
+            );
+        }
+        assert!(report.spans.windows(2).all(|w| w[0].start_ns <= w[1].start_ns));
+
+        // Cross-rank journal consistency: all four journals recorded,
+        // and every rank's Round records walk the identical (epoch, live)
+        // trajectory — the rank-local records (Ratio) differ, the shared
+        // membership story must not.
+        assert_eq!(report.journals.len(), 4);
+        let t0 = obs::journal::epoch_trajectory_of(&report.journals[0]);
+        assert!(!t0.is_empty());
+        for (r, j) in report.journals.iter().enumerate() {
+            assert!(!j.is_empty(), "rank {r} journal is empty");
+            assert_eq!(
+                obs::journal::epoch_trajectory_of(j),
+                t0,
+                "rank {r} walked a different epoch/live trajectory"
+            );
+            assert_eq!(
+                j.iter().filter(|rec| rec.kind == DecisionKind::Round).count(),
+                10,
+                "rank {r} journaled a different round count"
+            );
+        }
+
+        // The analyzer ran and its books balance: every step's parts sum
+        // to the step's wall time exactly, critical ranks are in range,
+        // and the straggler tally counts every attributed round.
+        let analysis = report.analysis.as_ref().expect("analysis present");
+        assert_eq!(analysis.n_ranks, 4);
+        assert_eq!(analysis.steps.len(), 10);
+        for b in &analysis.steps {
+            assert_eq!(
+                b.compute_ns + b.compress_ns + b.wire_ns + b.decode_ns + b.recovery_ns,
+                b.wall_ns,
+                "step {} attribution does not sum to wall time",
+                b.step
+            );
+            if let Some(r) = b.critical_rank {
+                assert!(r < 4);
+            }
+        }
+        let attributed: u64 = analysis.straggler_counts.iter().sum();
+        assert_eq!(
+            attributed,
+            analysis.steps.iter().filter(|b| b.critical_rank.is_some()).count() as u64
+        );
+        // ANALYSIS.json parses and matches the documented schema.
+        let doc = Json::parse(&report.analysis_json().unwrap()).expect("ANALYSIS.json parses");
+        assert_eq!(doc.get("schema_version").and_then(|v| v.as_f64()), Some(1.0));
+        assert_eq!(
+            doc.get("steps").and_then(|s| s.as_arr()).map(|s| s.len()),
+            Some(10)
+        );
+    }
+
+    /// Two tracers with deliberately skewed clock origins merge into a
+    /// monotonic timeline end-to-end through the report path: the offsets
+    /// the gather estimated land in the trace metadata.
+    #[test]
+    fn obs_collect_embeds_offsets_in_trace_metadata() {
+        let opts = LiveOpts {
+            n_workers: 2,
+            steps: 4,
+            n_params: 5_000,
+            strategy: SyncStrategy::TopK(0.2),
+            obs: ObsOpts::all(),
+            ..Default::default()
+        };
+        let report = run_live(&opts).unwrap();
+        let doc = Json::parse(&report.trace_json()).expect("trace parses");
+        let offs = doc
+            .get("clockOffsetsNs")
+            .and_then(|o| o.as_obj())
+            .expect("collection runs must embed clockOffsetsNs");
+        assert_eq!(offs.len(), 2);
+        assert_eq!(offs.get("0").and_then(|v| v.as_f64()), Some(0.0));
+        assert!(offs.contains_key("1"));
     }
 
     #[test]

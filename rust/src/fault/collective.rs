@@ -69,6 +69,13 @@ pub enum FrameKind {
     /// A recovery probe: "I aborted the round at this epoch — are you
     /// alive?" Answered by the receiver's own probe of the same recovery.
     Probe,
+    /// A serialized telemetry payload for the end-of-run gather
+    /// ([`crate::obs::collect`]). Never seen mid-round; the data loop
+    /// fences it like any stale frame.
+    Obs,
+    /// A clock-offset ping/pong (rank 0's `t0`, or a peer's own clock)
+    /// preceding the telemetry payload. Fenced mid-round like `Obs`.
+    Clock,
 }
 
 /// Append the 9-byte envelope header (zero allocations once `out` has
@@ -78,6 +85,8 @@ pub fn write_envelope(kind: FrameKind, epoch: u32, step: u32, out: &mut Vec<u8>)
     out.push(match kind {
         FrameKind::Data => 0,
         FrameKind::Probe => 1,
+        FrameKind::Obs => 2,
+        FrameKind::Clock => 3,
     });
     out.extend_from_slice(&epoch.to_le_bytes());
     out.extend_from_slice(&step.to_le_bytes());
@@ -91,6 +100,8 @@ pub fn parse_envelope(buf: &[u8]) -> Result<(FrameKind, u32, u32, &[u8])> {
     let kind = match buf[0] {
         0 => FrameKind::Data,
         1 => FrameKind::Probe,
+        2 => FrameKind::Obs,
+        3 => FrameKind::Clock,
         k => return Err(anyhow!("unknown envelope kind {k}")),
     };
     let epoch = u32::from_le_bytes(buf[1..5].try_into().unwrap());
@@ -474,6 +485,14 @@ impl ElasticExchange {
                             probe_from: Some(pred),
                         }));
                     }
+                    Ok((FrameKind::Obs | FrameKind::Clock, _, _, _)) => {
+                        // Telemetry-gather frames belong strictly after
+                        // the training loop; one leaking into a round
+                        // (e.g. a chaos-duplicated replay) is fenced like
+                        // any stale frame.
+                        self.dropped_stale += 1;
+                        continue;
+                    }
                     Err(_) => {
                         // Garbage frame (torn write, line noise): rejected
                         // by parse — drop, count, keep waiting.
@@ -573,6 +592,14 @@ mod tests {
         let (k, e, _, body) = parse_envelope(&probe).unwrap();
         assert_eq!((k, e), (FrameKind::Probe, u32::MAX));
         assert!(body.is_empty());
+        for kind in [FrameKind::Obs, FrameKind::Clock] {
+            let mut buf = Vec::new();
+            write_envelope(kind, 0, 0, &mut buf);
+            buf.extend_from_slice(&77u64.to_le_bytes());
+            let (k, _, _, body) = parse_envelope(&buf).unwrap();
+            assert_eq!(k, kind);
+            assert_eq!(body, 77u64.to_le_bytes());
+        }
         assert!(parse_envelope(&[0, 1]).is_err());
         assert!(parse_envelope(&[0u8; ENVELOPE_OVERHEAD - 1]).is_err());
         assert!(parse_envelope(&[9, 0, 0, 0, 0, 0, 0, 0, 0]).is_err());

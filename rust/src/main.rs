@@ -87,6 +87,8 @@ fn cli() -> Cli {
                     opt("trace-out", "write per-rank spans as Chrome trace JSON (Perfetto)", None),
                     opt("journal-out", "write rank 0's controller decision journal (JSON)", None),
                     opt("metrics-out", "write a Prometheus-text metrics snapshot", None),
+                    flag("obs-collect", "gather every rank's telemetry to rank 0 (clock-aligned merge)"),
+                    opt("analysis-out", "write critical-path attribution (ANALYSIS.json; implies --obs-collect)", None),
                     opt("metrics-addr", "serve /metrics over HTTP while the run lasts (host:port)", None),
                     flag("quiet", "only warnings/errors on stderr"),
                     flag("verbose", "debug-level progress on stderr"),
@@ -374,10 +376,18 @@ fn cmd_live(args: &netsenseml::util::cli::Args) -> Result<()> {
     let trace_out = args.get("trace-out").map(PathBuf::from);
     let journal_out = args.get("journal-out").map(PathBuf::from);
     let metrics_out = args.get("metrics-out").map(PathBuf::from);
+    let analysis_out = args.get("analysis-out").map(PathBuf::from);
     if trace_out.is_some() {
         cfg.obs.trace = true;
     }
     if journal_out.is_some() {
+        cfg.obs.journal = true;
+    }
+    if args.flag("obs-collect") || analysis_out.is_some() {
+        // The gather ships span rings and journals; the analyzer needs
+        // both — collecting empty rings would be ceremony.
+        cfg.obs.collect = true;
+        cfg.obs.trace = true;
         cfg.obs.journal = true;
     }
     cfg.validate()?;
@@ -486,6 +496,39 @@ fn cmd_live(args: &netsenseml::util::cli::Args) -> Result<()> {
     if let Some(path) = &metrics_out {
         std::fs::write(path, netsenseml::obs::registry().prometheus())?;
         netsenseml::log_info!("metrics snapshot written to {}", path.display());
+    }
+    if let Some(path) = &analysis_out {
+        match report.analysis_json() {
+            Some(json) => {
+                std::fs::write(path, json)?;
+                netsenseml::log_info!("analysis written to {}", path.display());
+            }
+            None => netsenseml::log_warn!(
+                "no analysis to write to {} (collection gathered no spans)",
+                path.display()
+            ),
+        }
+    }
+    for note in &report.collect_notes {
+        netsenseml::log_warn!("telemetry gather: {note}");
+    }
+    if let Some(a) = &report.analysis {
+        match a.straggler_verdict {
+            Some(r) => netsenseml::log_info!(
+                "critical path: rank {r} dominated ({}/{} attributed rounds)",
+                a.straggler_counts.get(r).copied().unwrap_or(0),
+                a.straggler_counts.iter().sum::<u64>()
+            ),
+            None => netsenseml::log_info!("critical path: no dominant straggler"),
+        }
+        if a.congestion_verdict {
+            netsenseml::log_info!("congestion: lossy intervals drove controller backoffs");
+        }
+    }
+    // Worker errors surface only after every artifact is on disk — the
+    // flight-recorder telemetry is exactly what the post-mortem needs.
+    if !report.worker_errors.is_empty() {
+        bail!("worker(s) aborted: {}", report.worker_errors.join("; "));
     }
     if !report.consistent {
         bail!("reduced gradients diverged across surviving workers");

@@ -1,0 +1,171 @@
+//! Clock alignment for multi-process traces (DESIGN.md §3.12).
+//!
+//! Every rank's [`Tracer`](crate::obs::trace::Tracer) stamps spans
+//! relative to its own `Instant` origin. The in-process loopback backend
+//! shares one origin, so its merged traces align for free — but separate
+//! TCP processes each pick their own origin, and the raw merge shears the
+//! tracks apart by the origin skew. The collection handshake
+//! ([`crate::obs::collect`]) measures that skew per peer with the NTP
+//! midpoint method: rank 0 notes `t0`, the peer answers with its own
+//! clock `p`, rank 0 notes `t2`, and under the symmetric-delay assumption
+//! the peer's clock read true time `(t0 + t2) / 2`, so
+//!
+//! ```text
+//! offset = p − (t0 + t2) / 2        (positive ⇒ peer's clock runs ahead)
+//! aligned_peer_time = local_peer_time − offset
+//! ```
+//!
+//! [`merge_aligned`] applies those offsets when stitching per-rank rings
+//! into one timeline, then shifts the whole trace uniformly so no
+//! timestamp goes negative (Chrome's trace viewer clips negative `ts`).
+//! With all-zero offsets it degrades to exactly the old shared-origin
+//! merge (sort by start time, rank, id).
+//!
+//! ```
+//! use netsenseml::obs::align::estimate_offset;
+//!
+//! // Peer answered 1100 between our 100 and 300 → its clock runs 900 ahead.
+//! assert_eq!(estimate_offset(100, 1_100, 300), 900);
+//! ```
+
+use crate::obs::trace::SpanRecord;
+
+/// NTP midpoint clock-offset estimate, in nanoseconds: `peer_ns` is the
+/// peer's clock sampled between our `t0_ns` and `t2_ns`. Positive means
+/// the peer's clock (origin) runs ahead of ours. `i128` internally —
+/// origin-relative u64 nanoseconds can exceed `i64` when summed.
+pub fn estimate_offset(t0_ns: u64, peer_ns: u64, t2_ns: u64) -> i64 {
+    let midpoint = (t0_ns as i128 + t2_ns as i128) / 2;
+    (peer_ns as i128 - midpoint) as i64
+}
+
+/// Merge per-rank span rings into one timeline, subtracting each rank's
+/// estimated clock offset (`offsets_ns[rank]`, missing ranks treated as
+/// 0), then uniformly shifting so the earliest start is non-negative.
+/// Output is sorted by `(start_ns, rank, id)` — the same order the
+/// shared-origin merge produced, which this degrades to when every
+/// offset is zero.
+pub fn merge_aligned(per_rank: &[Vec<SpanRecord>], offsets_ns: &[i64]) -> Vec<SpanRecord> {
+    let mut aligned: Vec<(i128, i128, SpanRecord)> = Vec::new();
+    for spans in per_rank {
+        for s in spans {
+            let off = offsets_ns.get(s.rank).copied().unwrap_or(0) as i128;
+            aligned.push((s.start_ns as i128 - off, s.end_ns as i128 - off, *s));
+        }
+    }
+    let min_start = aligned.iter().map(|(s, _, _)| *s).min().unwrap_or(0);
+    let shift = (-min_start).max(0);
+    let mut out: Vec<SpanRecord> = aligned
+        .into_iter()
+        .map(|(start, end, mut s)| {
+            s.start_ns = (start + shift) as u64;
+            s.end_ns = (end + shift) as u64;
+            s
+        })
+        .collect();
+    out.sort_by_key(|s| (s.start_ns, s.rank, s.id));
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::trace::Tracer;
+    use std::time::{Duration, Instant};
+
+    #[test]
+    fn obs_offset_estimate_is_the_midpoint_residual() {
+        assert_eq!(estimate_offset(100, 1_100, 300), 900);
+        assert_eq!(estimate_offset(1_000, 200, 1_200), -900); // peer behind
+        assert_eq!(estimate_offset(500, 500, 500), 0);
+        // Sums beyond i64 territory must not overflow.
+        let big = u64::MAX / 2;
+        assert_eq!(estimate_offset(big, big, big), 0);
+    }
+
+    #[test]
+    fn obs_merge_with_zero_offsets_is_the_plain_sorted_merge() {
+        let a = SpanRecord {
+            rank: 0,
+            id: 1,
+            parent: 0,
+            label: "step",
+            step: 0,
+            start_ns: 5_000,
+            end_ns: 9_000,
+        };
+        let b = SpanRecord {
+            rank: 1,
+            id: 1,
+            parent: 0,
+            label: "step",
+            step: 0,
+            start_ns: 4_000,
+            end_ns: 8_000,
+        };
+        let merged = merge_aligned(&[vec![a], vec![b]], &[0, 0]);
+        assert_eq!(merged.len(), 2);
+        assert_eq!((merged[0].rank, merged[0].start_ns), (1, 4_000));
+        assert_eq!((merged[1].rank, merged[1].start_ns), (0, 5_000));
+    }
+
+    #[test]
+    fn obs_merge_shifts_uniformly_when_alignment_goes_negative() {
+        let s = SpanRecord {
+            rank: 1,
+            id: 1,
+            parent: 0,
+            label: "step",
+            step: 0,
+            start_ns: 1_000,
+            end_ns: 2_000,
+        };
+        // Offset larger than the local timestamp: aligned start would be
+        // -9_000; the uniform shift keeps durations and brings it to 0.
+        let merged = merge_aligned(&[vec![s]], &[0, 10_000]);
+        assert_eq!(merged[0].start_ns, 0);
+        assert_eq!(merged[0].end_ns, 1_000);
+    }
+
+    /// The satellite regression: two tracers with deliberately skewed
+    /// origins (rank 1's origin set 10 ms in the past, so its raw
+    /// timestamps run 10 ms hot) merge into a monotonic timeline once the
+    /// known offset is applied — and visibly shear without it.
+    #[test]
+    fn obs_skewed_tracer_origins_merge_monotonic_after_alignment() {
+        const SKEW: Duration = Duration::from_millis(10);
+        let origin_a = Instant::now();
+        let Some(origin_b) = origin_a.checked_sub(SKEW) else {
+            return; // clock too close to boot to synthesize the skew
+        };
+        let mut ta = Tracer::new(0, 16, origin_a);
+        let mut tb = Tracer::new(1, 16, origin_b);
+
+        let sa = ta.start("step", 0);
+        std::thread::sleep(Duration::from_millis(1));
+        ta.end(sa);
+        // Rank 1 works strictly *after* rank 0 in real time...
+        let sb = tb.start("step", 0);
+        std::thread::sleep(Duration::from_millis(1));
+        tb.end(sb);
+
+        let (a, b) = (ta.drain(), tb.drain());
+        // ...yet unaligned, rank 1's span appears ~10 ms later than the
+        // real gap (origin skew leaks into the timeline).
+        let raw_gap = b[0].start_ns as i128 - a[0].end_ns as i128;
+        assert!(raw_gap > 8_000_000, "raw gap {raw_gap} ns should carry the 10 ms skew");
+
+        let merged = merge_aligned(&[a.clone(), b.clone()], &[0, SKEW.as_nanos() as i64]);
+        assert_eq!(merged.len(), 2);
+        assert_eq!(merged[0].rank, 0, "aligned order must follow real time");
+        assert_eq!(merged[1].rank, 1);
+        let aligned_gap = merged[1].start_ns as i128 - merged[0].end_ns as i128;
+        assert!(
+            aligned_gap >= 0 && aligned_gap < 8_000_000,
+            "aligned gap {aligned_gap} ns should be the real sub-ms gap, not the skew"
+        );
+        // Alignment preserves every duration bit-exactly.
+        assert_eq!(merged[0].end_ns - merged[0].start_ns, a[0].end_ns - a[0].start_ns);
+        assert_eq!(merged[1].end_ns - merged[1].start_ns, b[0].end_ns - b[0].start_ns);
+    }
+}

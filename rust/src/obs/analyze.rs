@@ -1,0 +1,429 @@
+//! Critical-path attribution over a merged, clock-aligned timeline
+//! (DESIGN.md §3.12) — the analysis pass behind `--analysis-out`.
+//!
+//! The paper's thesis is that compression should be applied *only when
+//! congestion actually hurts*: answering "was it helping at step N?"
+//! needs to know, per step, where the wall time went — compute, codec,
+//! wire, or recovery — and which rank's slowness actually stalled each
+//! round. [`analyze`] derives all of that from nothing but the merged
+//! span rings ([`crate::obs::align::merge_aligned`] output) and rank 0's
+//! decision journal:
+//!
+//! - **per-step breakdown** from rank 0's span tree (`step ⊃ compress,
+//!   round ⊃ decode×n`): `compress` and `decode` are their spans' sums,
+//!   `wire = round − Σdecode`, `compute = step − compress − round`
+//!   (saturating), so the parts sum to the step wall time *exactly*. A
+//!   step that ran a recovery reports its round remainder as `recovery`
+//!   instead of `wire` — inside the round span the two are
+//!   indistinguishable, and misattributing a recovery storm as wire time
+//!   would fake a congestion signal.
+//! - **straggler attribution**: per round, the critical-path rank is the
+//!   one whose `round` span ran longest (everyone else finished the
+//!   exchange waiting for it); a count-by-rank table plus a verdict when
+//!   one rank owns ≥ half of all rounds.
+//! - **compression efficacy**: the journal's ratio decisions joined with
+//!   step wall times — predicted wire bytes vs the dense baseline vs
+//!   what the step actually cost.
+//!
+//! Verdicts are also emitted as [`DecisionKind::Straggler`] /
+//! [`DecisionKind::Congestion`] journal records
+//! ([`Analysis::verdict_records`]) so downstream consumers see them in
+//! the same stream as the controller's own decisions. Everything here is
+//! dependency-free and runs strictly after training — never on the fused
+//! hot path.
+
+use crate::obs::journal::{DecisionKind, DecisionRecord};
+use crate::obs::trace::SpanRecord;
+use crate::util::json::{obj, Json};
+
+/// Where one step's wall time went, in nanoseconds. Invariant:
+/// `compute + compress + wire + decode + recovery == wall` exactly
+/// (the analyzer derives `wire` and `compute` by subtraction).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct StepBreakdown {
+    pub step: u32,
+    pub wall_ns: u64,
+    pub compute_ns: u64,
+    pub compress_ns: u64,
+    pub wire_ns: u64,
+    pub decode_ns: u64,
+    pub recovery_ns: u64,
+    /// The rank whose `round` span ran longest this step (`None` when no
+    /// rank recorded a round — e.g. tracing disabled on peers).
+    pub critical_rank: Option<usize>,
+}
+
+/// One point of the compression-efficacy series: a ratio decision joined
+/// with the step it acted on.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct EfficacyPoint {
+    pub step: u32,
+    pub ratio: f64,
+    pub predicted_wire_bytes: u64,
+    /// Dense baseline minus predicted wire bytes (saturating) — what the
+    /// current ratio saved on the wire this interval.
+    pub bytes_saved: u64,
+    pub wall_ns: u64,
+}
+
+/// The machine-readable product of [`analyze`] — serialized to
+/// `ANALYSIS.json` by the live CLI (`--analysis-out`).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct Analysis {
+    pub n_ranks: usize,
+    pub steps: Vec<StepBreakdown>,
+    /// `straggler_counts[r]` = number of rounds rank `r` was the
+    /// critical path of. Sums to the number of steps with a verdict.
+    pub straggler_counts: Vec<u64>,
+    /// A rank that owned ≥ half of all attributed rounds (multi-rank
+    /// runs only — a solo run has no one to straggle behind).
+    pub straggler_verdict: Option<usize>,
+    /// True when the journal shows at least one loss-driven backoff —
+    /// the controller itself sensed congestion during the run.
+    pub congestion_verdict: bool,
+    pub efficacy: Vec<EfficacyPoint>,
+}
+
+/// Run the attribution pass. `spans` is the merged (clock-aligned)
+/// timeline, `journal` rank 0's decision journal, `dense_bytes` the
+/// uncompressed gradient size (`n_params × 4`) anchoring the efficacy
+/// series.
+pub fn analyze(
+    spans: &[SpanRecord],
+    journal: &[DecisionRecord],
+    n_ranks: usize,
+    dense_bytes: u64,
+) -> Analysis {
+    // Steps in rank 0's track order; per-step rollups off the span tree.
+    let mut steps: Vec<StepBreakdown> = Vec::new();
+    for s in spans.iter().filter(|s| s.rank == 0 && s.label == "step") {
+        steps.push(StepBreakdown {
+            step: s.step,
+            wall_ns: s.end_ns - s.start_ns,
+            ..StepBreakdown::default()
+        });
+    }
+    steps.sort_by_key(|b| b.step);
+    steps.dedup_by_key(|b| b.step); // ring wrap can re-record a step id
+
+    let mut counts = vec![0u64; n_ranks];
+    for b in &mut steps {
+        let mut round_ns = 0u64;
+        let mut had_recovery = false;
+        for s in spans.iter().filter(|s| s.step == b.step) {
+            match (s.rank, s.label) {
+                (0, "compress") => b.compress_ns += s.end_ns - s.start_ns,
+                (0, "round") => round_ns += s.end_ns - s.start_ns,
+                (0, "decode") => b.decode_ns += s.end_ns - s.start_ns,
+                (0, "recovery") => had_recovery = true,
+                _ => {}
+            }
+        }
+        // Critical path: the rank whose exchange ran longest this round.
+        let mut worst: Option<(u64, usize)> = None;
+        for s in spans.iter().filter(|s| s.step == b.step && s.label == "round") {
+            let d = s.end_ns - s.start_ns;
+            let better = match worst {
+                None => true,
+                Some((wd, wr)) => d > wd || (d == wd && s.rank < wr),
+            };
+            if better {
+                worst = Some((d, s.rank));
+            }
+        }
+        if let Some((_, r)) = worst {
+            b.critical_rank = Some(r);
+            if let Some(c) = counts.get_mut(r) {
+                *c += 1;
+            }
+        }
+        let remainder = round_ns.saturating_sub(b.decode_ns);
+        if had_recovery {
+            b.recovery_ns = remainder;
+        } else {
+            b.wire_ns = remainder;
+        }
+        b.compute_ns = b.wall_ns.saturating_sub(b.compress_ns).saturating_sub(round_ns);
+    }
+
+    let attributed: u64 = counts.iter().sum();
+    let straggler_verdict = counts
+        .iter()
+        .enumerate()
+        .max_by_key(|(_, c)| **c)
+        .filter(|(_, c)| n_ranks > 1 && attributed > 0 && **c * 2 >= attributed)
+        .map(|(r, _)| r);
+
+    let congestion_verdict = journal
+        .iter()
+        .any(|r| r.kind == DecisionKind::Ratio && r.lost);
+
+    let efficacy = journal
+        .iter()
+        .filter(|r| r.kind == DecisionKind::Ratio)
+        .map(|r| EfficacyPoint {
+            step: r.step,
+            ratio: r.new_ratio,
+            predicted_wire_bytes: r.predicted_wire_bytes,
+            bytes_saved: dense_bytes.saturating_sub(r.predicted_wire_bytes),
+            wall_ns: steps
+                .iter()
+                .find(|b| b.step == r.step)
+                .map_or(0, |b| b.wall_ns),
+        })
+        .collect();
+
+    Analysis {
+        n_ranks,
+        steps,
+        straggler_counts: counts,
+        straggler_verdict,
+        congestion_verdict,
+        efficacy,
+    }
+}
+
+impl Analysis {
+    /// `ANALYSIS.json` (pretty-printed, `schema_version` 1 — the schema
+    /// `scripts/check_trace.py` validates).
+    pub fn to_json(&self) -> String {
+        let steps: Vec<Json> = self
+            .steps
+            .iter()
+            .map(|b| {
+                obj(vec![
+                    ("step", Json::from(b.step as usize)),
+                    ("wall_ns", Json::from(b.wall_ns)),
+                    ("compute_ns", Json::from(b.compute_ns)),
+                    ("compress_ns", Json::from(b.compress_ns)),
+                    ("wire_ns", Json::from(b.wire_ns)),
+                    ("decode_ns", Json::from(b.decode_ns)),
+                    ("recovery_ns", Json::from(b.recovery_ns)),
+                    (
+                        "critical_rank",
+                        b.critical_rank.map_or(Json::Null, Json::from),
+                    ),
+                ])
+            })
+            .collect();
+        let efficacy: Vec<Json> = self
+            .efficacy
+            .iter()
+            .map(|p| {
+                obj(vec![
+                    ("step", Json::from(p.step as usize)),
+                    ("ratio", Json::from(p.ratio)),
+                    ("predicted_wire_bytes", Json::from(p.predicted_wire_bytes)),
+                    ("bytes_saved", Json::from(p.bytes_saved)),
+                    ("wall_ns", Json::from(p.wall_ns)),
+                ])
+            })
+            .collect();
+        obj(vec![
+            ("schema_version", Json::from(1usize)),
+            ("n_ranks", Json::from(self.n_ranks)),
+            ("steps", Json::Arr(steps)),
+            (
+                "straggler_counts",
+                Json::Arr(self.straggler_counts.iter().map(|c| Json::from(*c)).collect()),
+            ),
+            (
+                "straggler_verdict",
+                self.straggler_verdict.map_or(Json::Null, Json::from),
+            ),
+            ("congestion_verdict", Json::from(self.congestion_verdict)),
+            ("efficacy", Json::Arr(efficacy)),
+        ])
+        .to_string_pretty()
+    }
+
+    /// The verdicts as journal records, appended to the run's journal so
+    /// downstream consumers see them in the controller's own stream.
+    /// Field reuse (flat `Copy` record, no payload variants): a
+    /// `Straggler` record carries the straggling rank in `rank`, its
+    /// round count in `payload_bytes`, and the attributed total in
+    /// `rtt_us`; a `Congestion` record sets `lost` and carries the
+    /// backoff count in `payload_bytes`.
+    pub fn verdict_records(&self, journal: &[DecisionRecord]) -> Vec<DecisionRecord> {
+        let mut out = Vec::new();
+        if let Some(r) = self.straggler_verdict {
+            out.push(DecisionRecord {
+                kind: DecisionKind::Straggler,
+                rank: r,
+                live: self.n_ranks,
+                payload_bytes: self.straggler_counts.get(r).copied().unwrap_or(0),
+                rtt_us: self.straggler_counts.iter().sum(),
+                ..DecisionRecord::default()
+            });
+        }
+        if self.congestion_verdict {
+            let backoffs = journal
+                .iter()
+                .filter(|r| r.kind == DecisionKind::Ratio && r.lost)
+                .count() as u64;
+            out.push(DecisionRecord {
+                kind: DecisionKind::Congestion,
+                live: self.n_ranks,
+                lost: true,
+                payload_bytes: backoffs,
+                ..DecisionRecord::default()
+            });
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn span(rank: usize, id: u64, label: &'static str, step: u32, start: u64, end: u64) -> SpanRecord {
+        SpanRecord {
+            rank,
+            id,
+            parent: 0,
+            label,
+            step,
+            start_ns: start,
+            end_ns: end,
+        }
+    }
+
+    /// Two ranks, two steps with hand-built trees; every attribution
+    /// value is pinned and the parts sum to the wall exactly.
+    #[test]
+    fn obs_analyze_pins_the_per_step_breakdown() {
+        let spans = vec![
+            // step 0: wall 10_000, compress 2_000, round 5_000 with two
+            // decodes of 1_000 → wire 3_000, compute 3_000.
+            span(0, 1, "step", 0, 0, 10_000),
+            span(0, 2, "compress", 0, 500, 2_500),
+            span(0, 3, "round", 0, 3_000, 8_000),
+            span(0, 4, "decode", 0, 3_500, 4_500),
+            span(0, 5, "decode", 0, 5_000, 6_000),
+            span(1, 1, "round", 0, 3_000, 9_000), // rank 1 straggles
+            // step 1: recovery — round remainder becomes recovery_ns.
+            span(0, 6, "step", 1, 10_000, 30_000),
+            span(0, 7, "compress", 1, 10_500, 12_500),
+            span(0, 8, "round", 1, 13_000, 28_000),
+            span(0, 9, "decode", 1, 14_000, 15_000),
+            span(0, 10, "recovery", 1, 28_000, 28_000),
+            span(1, 2, "round", 1, 13_000, 29_000), // rank 1 straggles again
+        ];
+        let a = analyze(&spans, &[], 2, 0);
+        assert_eq!(a.steps.len(), 2);
+
+        let s0 = a.steps[0];
+        assert_eq!(
+            (s0.wall_ns, s0.compute_ns, s0.compress_ns, s0.wire_ns, s0.decode_ns, s0.recovery_ns),
+            (10_000, 3_000, 2_000, 3_000, 2_000, 0)
+        );
+        assert_eq!(s0.critical_rank, Some(1));
+
+        let s1 = a.steps[1];
+        assert_eq!(
+            (s1.wall_ns, s1.compute_ns, s1.compress_ns, s1.wire_ns, s1.decode_ns, s1.recovery_ns),
+            (20_000, 3_000, 2_000, 0, 1_000, 14_000)
+        );
+        assert_eq!(s1.critical_rank, Some(1));
+
+        for s in &a.steps {
+            assert_eq!(
+                s.compute_ns + s.compress_ns + s.wire_ns + s.decode_ns + s.recovery_ns,
+                s.wall_ns,
+                "attribution must sum to the wall exactly (step {})",
+                s.step
+            );
+        }
+
+        assert_eq!(a.straggler_counts, vec![0, 2]);
+        assert_eq!(a.straggler_verdict, Some(1));
+        assert!(!a.congestion_verdict);
+    }
+
+    #[test]
+    fn obs_analyze_requires_a_majority_for_the_straggler_verdict() {
+        // Three steps, critical rank alternates 0, 1, 2 — nobody owns half.
+        let mut spans = Vec::new();
+        for step in 0..3u32 {
+            let base = step as u64 * 10_000;
+            spans.push(span(0, 10 + step as u64, "step", step, base, base + 9_000));
+            for rank in 0..3usize {
+                let d = if rank == step as usize % 3 { 5_000 } else { 2_000 };
+                spans.push(span(rank, 20 + step as u64, "round", step, base + 1_000, base + 1_000 + d));
+            }
+        }
+        let a = analyze(&spans, &[], 3, 0);
+        assert_eq!(a.straggler_counts, vec![1, 1, 1]);
+        assert_eq!(a.straggler_verdict, None);
+        // And a solo run never has a straggler, even at 100% share.
+        let solo = vec![
+            span(0, 1, "step", 0, 0, 1_000),
+            span(0, 2, "round", 0, 100, 900),
+        ];
+        assert_eq!(analyze(&solo, &[], 1, 0).straggler_verdict, None);
+    }
+
+    #[test]
+    fn obs_analyze_joins_efficacy_and_flags_congestion() {
+        let spans = vec![
+            span(0, 1, "step", 3, 0, 7_000),
+            span(0, 2, "round", 3, 1_000, 3_000),
+        ];
+        let journal = vec![
+            DecisionRecord {
+                kind: DecisionKind::Ratio,
+                step: 3,
+                new_ratio: 0.25,
+                predicted_wire_bytes: 1_000,
+                lost: true,
+                ..DecisionRecord::default()
+            },
+            DecisionRecord {
+                kind: DecisionKind::Round,
+                step: 3,
+                ..DecisionRecord::default()
+            },
+        ];
+        let a = analyze(&spans, &journal, 1, 4_000);
+        assert!(a.congestion_verdict);
+        assert_eq!(a.efficacy.len(), 1, "only Ratio records join the series");
+        let p = a.efficacy[0];
+        assert_eq!(
+            (p.step, p.ratio, p.predicted_wire_bytes, p.bytes_saved, p.wall_ns),
+            (3, 0.25, 1_000, 3_000, 7_000)
+        );
+
+        let verdicts = a.verdict_records(&journal);
+        assert_eq!(verdicts.len(), 1); // congestion only (solo run)
+        assert_eq!(verdicts[0].kind, DecisionKind::Congestion);
+        assert!(verdicts[0].lost);
+        assert_eq!(verdicts[0].payload_bytes, 1);
+    }
+
+    #[test]
+    fn obs_analysis_json_has_the_documented_schema() {
+        let spans = vec![
+            span(0, 1, "step", 0, 0, 5_000),
+            span(0, 2, "round", 0, 1_000, 3_000),
+            span(1, 3, "round", 0, 1_000, 4_000),
+        ];
+        let a = analyze(&spans, &[], 2, 0);
+        let doc = crate::util::json::Json::parse(&a.to_json()).expect("ANALYSIS.json must parse");
+        assert_eq!(doc.get("schema_version").and_then(|v| v.as_usize()), Some(1));
+        assert_eq!(doc.get("n_ranks").and_then(|v| v.as_usize()), Some(2));
+        let steps = doc.get("steps").and_then(|v| v.as_arr()).unwrap();
+        assert_eq!(steps.len(), 1);
+        for key in ["step", "wall_ns", "compute_ns", "compress_ns", "wire_ns", "decode_ns", "recovery_ns"] {
+            assert!(steps[0].get(key).and_then(|v| v.as_f64()).is_some(), "missing {key}");
+        }
+        assert_eq!(steps[0].get("critical_rank").and_then(|v| v.as_usize()), Some(1));
+        assert_eq!(
+            doc.get("straggler_counts").and_then(|v| v.as_arr()).map(|a| a.len()),
+            Some(2)
+        );
+        assert_eq!(doc.get("straggler_verdict").and_then(|v| v.as_usize()), Some(1));
+        assert_eq!(doc.get("congestion_verdict").and_then(|v| v.as_bool()), Some(false));
+        assert!(doc.get("efficacy").and_then(|v| v.as_arr()).is_some());
+    }
+}

@@ -1,0 +1,675 @@
+//! Cross-rank telemetry collection: the end-of-run gather that turns
+//! per-rank observability islands into one cluster-wide picture
+//! (DESIGN.md §3.12).
+//!
+//! Each rank serializes its span ring, decision journal, and a flat
+//! snapshot of its run counters into a versioned **OBS payload** (magic
+//! `NSOB`), then ships it to rank 0 over the existing transport seam
+//! inside [`FrameKind::Obs`](crate::fault::FrameKind) envelopes. A
+//! [`FrameKind::Clock`](crate::fault::FrameKind) ping/pong precedes the
+//! payload so rank 0 can estimate each peer's clock offset
+//! ([`crate::obs::align::estimate_offset`], NTP midpoint method) and
+//! stitch the rings onto one timeline.
+//!
+//! The payload obeys the PR-5/PR-6 corruption contract: a malformed blob
+//! returns a named `Err`, never panics, and a lying count field cannot
+//! trigger a large allocation (every count is cross-checked against the
+//! bytes actually present before reserving). The whole path runs strictly
+//! **after** the training loop — the fused hot path and its zero-alloc
+//! gates never see it.
+//!
+//! ```
+//! use netsenseml::obs::collect::{decode_telemetry, encode_telemetry, RankTelemetry};
+//!
+//! let telemetry = RankTelemetry { rank: 3, final_ratio: 0.25, ..RankTelemetry::default() };
+//! let bytes = encode_telemetry(&telemetry);
+//! assert_eq!(decode_telemetry(&bytes).unwrap(), telemetry);
+//! assert!(decode_telemetry(&bytes[..bytes.len() - 1]).is_err()); // truncated → named Err
+//! ```
+
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+use crate::fault::{parse_envelope, write_envelope, FrameKind, ENVELOPE_OVERHEAD};
+use crate::obs::align::estimate_offset;
+use crate::obs::journal::{DecisionKind, DecisionRecord};
+use crate::obs::trace::SpanRecord;
+use crate::transport::Transport;
+use crate::util::error::{anyhow, Result};
+
+/// Leading magic of an OBS payload.
+pub const OBS_MAGIC: [u8; 4] = *b"NSOB";
+/// Current payload format version (bump on any layout change).
+pub const OBS_VERSION: u16 = 1;
+
+/// Fixed-size header: magic + version + rank + clock + drop counters +
+/// the flat run-counter snapshot.
+const HEADER_BYTES: usize = 4 + 2 + 4 + 8 + 8 + 8 + 8 + 4 + 4 + 4 + 4;
+/// Serialized size of one span record (label index replaces the label).
+const SPAN_BYTES: usize = 2 + 8 + 8 + 4 + 8 + 8;
+/// Serialized size of one journal record.
+const JOURNAL_BYTES: usize = 1 + 4 + 4 + 4 + 4 + 8 + 8 + 1 + 8 + 8 + 8 + 4 + 4 + 4;
+
+/// Decode-side caps: a lying header names a defect instead of an
+/// allocation. Counts are *additionally* checked against remaining bytes.
+const MAX_LABELS: usize = 1024;
+const MAX_LABEL_LEN: usize = 256;
+const MAX_RECORDS: usize = 1 << 22;
+
+/// Span labels are `&'static str` by contract ([`SpanRecord`]); decoding
+/// foreign labels re-uses the well-known set and leak-interns the rest,
+/// capped so hostile payloads cannot grow the intern table unboundedly.
+const KNOWN_LABELS: &[&str] = &["step", "compress", "round", "decode", "recovery"];
+const MAX_INTERNED_LABELS: usize = 64;
+static INTERNED: Mutex<Vec<&'static str>> = Mutex::new(Vec::new());
+
+/// Bounded skip budget while waiting for a specific envelope kind: stray
+/// duplicated / reordered frames from a chaotic last round are discarded,
+/// but a babbling peer cannot pin the collector forever.
+const MAX_SKIPPED_FRAMES: usize = 64;
+
+fn intern_label(s: &str) -> Result<&'static str> {
+    if let Some(k) = KNOWN_LABELS.iter().find(|k| **k == s) {
+        return Ok(k);
+    }
+    let mut table = INTERNED.lock().unwrap();
+    if let Some(k) = table.iter().find(|k| **k == s) {
+        return Ok(k);
+    }
+    if table.len() >= MAX_INTERNED_LABELS {
+        return Err(anyhow!("too many distinct span labels"));
+    }
+    let leaked: &'static str = Box::leak(s.to_string().into_boxed_str());
+    table.push(leaked);
+    Ok(leaked)
+}
+
+/// Everything one rank contributes to the cluster picture: its span
+/// ring, its decision journal, and a flat snapshot of the counters the
+/// live report aggregates. `clock_ns` is the rank's origin-relative time
+/// at snapshot — a sanity anchor, not the offset source (that is the
+/// Clock ping/pong).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct RankTelemetry {
+    pub rank: usize,
+    pub clock_ns: u64,
+    pub spans: Vec<SpanRecord>,
+    pub spans_dropped: u64,
+    pub journal: Vec<DecisionRecord>,
+    pub journal_dropped: u64,
+    pub final_ratio: f64,
+    pub recoveries: u32,
+    pub lost_intervals: u32,
+    pub decreases: u32,
+    pub increases: u32,
+}
+
+/// What a rank-0 gather produced: per-peer telemetry (rank 0's own is
+/// not included — the caller already holds it), the estimated clock
+/// offset per world rank (index = rank, `[0] == 0`, unknown peers stay
+/// 0), and human-readable notes for every peer that could not be
+/// collected. Collection is best-effort by design: a dead or garbled
+/// peer becomes a note, never an error.
+#[derive(Clone, Debug, Default)]
+pub struct PeerCollection {
+    pub telemetry: Vec<RankTelemetry>,
+    pub offsets_ns: Vec<i64>,
+    pub notes: Vec<String>,
+}
+
+// ---------------------------------------------------------------------------
+// Codec
+// ---------------------------------------------------------------------------
+
+/// Serialize one rank's telemetry into the versioned OBS payload.
+pub fn encode_telemetry(t: &RankTelemetry) -> Vec<u8> {
+    // Label table in first-use order (spans reference it by index).
+    let mut labels: Vec<&'static str> = Vec::new();
+    for s in &t.spans {
+        if !labels.contains(&s.label) {
+            labels.push(s.label);
+        }
+    }
+    assert!(labels.len() <= MAX_LABELS, "span label table overflow");
+    let mut out = Vec::with_capacity(
+        HEADER_BYTES + 2 + labels.iter().map(|l| 2 + l.len()).sum::<usize>()
+            + 4 + SPAN_BYTES * t.spans.len()
+            + 4 + JOURNAL_BYTES * t.journal.len(),
+    );
+    out.extend_from_slice(&OBS_MAGIC);
+    out.extend_from_slice(&OBS_VERSION.to_le_bytes());
+    out.extend_from_slice(&(t.rank as u32).to_le_bytes());
+    out.extend_from_slice(&t.clock_ns.to_le_bytes());
+    out.extend_from_slice(&t.spans_dropped.to_le_bytes());
+    out.extend_from_slice(&t.journal_dropped.to_le_bytes());
+    out.extend_from_slice(&t.final_ratio.to_bits().to_le_bytes());
+    out.extend_from_slice(&t.recoveries.to_le_bytes());
+    out.extend_from_slice(&t.lost_intervals.to_le_bytes());
+    out.extend_from_slice(&t.decreases.to_le_bytes());
+    out.extend_from_slice(&t.increases.to_le_bytes());
+    out.extend_from_slice(&(labels.len() as u16).to_le_bytes());
+    for l in &labels {
+        out.extend_from_slice(&(l.len() as u16).to_le_bytes());
+        out.extend_from_slice(l.as_bytes());
+    }
+    out.extend_from_slice(&(t.spans.len() as u32).to_le_bytes());
+    for s in &t.spans {
+        let idx = labels.iter().position(|l| *l == s.label).unwrap() as u16;
+        out.extend_from_slice(&idx.to_le_bytes());
+        out.extend_from_slice(&s.id.to_le_bytes());
+        out.extend_from_slice(&s.parent.to_le_bytes());
+        out.extend_from_slice(&s.step.to_le_bytes());
+        out.extend_from_slice(&s.start_ns.to_le_bytes());
+        out.extend_from_slice(&s.end_ns.to_le_bytes());
+    }
+    out.extend_from_slice(&(t.journal.len() as u32).to_le_bytes());
+    for r in &t.journal {
+        out.push(match r.kind {
+            DecisionKind::Ratio => 0,
+            DecisionKind::Round => 1,
+            DecisionKind::Membership => 2,
+            DecisionKind::Straggler => 3,
+            DecisionKind::Congestion => 4,
+        });
+        out.extend_from_slice(&(r.rank as u32).to_le_bytes());
+        out.extend_from_slice(&r.step.to_le_bytes());
+        out.extend_from_slice(&r.epoch.to_le_bytes());
+        out.extend_from_slice(&(r.live as u32).to_le_bytes());
+        out.extend_from_slice(&r.rtt_us.to_le_bytes());
+        out.extend_from_slice(&r.payload_bytes.to_le_bytes());
+        out.push(u8::from(r.lost) | (u8::from(r.phase_netsense) << 1));
+        out.extend_from_slice(&r.old_ratio.to_bits().to_le_bytes());
+        out.extend_from_slice(&r.new_ratio.to_bits().to_le_bytes());
+        out.extend_from_slice(&r.predicted_wire_bytes.to_le_bytes());
+        out.extend_from_slice(&r.recoveries.to_le_bytes());
+        out.extend_from_slice(&r.dropped_stale.to_le_bytes());
+        out.extend_from_slice(&r.dropped_garbage.to_le_bytes());
+    }
+    out
+}
+
+/// Byte cursor with named-error take primitives — every read is
+/// length-checked, so a truncated payload fails with "truncated OBS
+/// payload" at the exact shortfall instead of panicking.
+struct Cursor<'a> {
+    buf: &'a [u8],
+    at: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.buf.len() - self.at < n {
+            return Err(anyhow!(
+                "truncated OBS payload: need {n} bytes at offset {}, have {}",
+                self.at,
+                self.buf.len() - self.at
+            ));
+        }
+        let s = &self.buf[self.at..self.at + n];
+        self.at += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u16(&mut self) -> Result<u16> {
+        Ok(u16::from_le_bytes(self.take(2)?.try_into().unwrap()))
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn remaining(&self) -> usize {
+        self.buf.len() - self.at
+    }
+}
+
+/// Decode an OBS payload. Malformed input — short, lying counts, bad
+/// magic, unknown version or record kind, non-UTF-8 labels, trailing
+/// bytes — returns a named `Err`; the function never panics and never
+/// allocates more than the input length justifies.
+pub fn decode_telemetry(bytes: &[u8]) -> Result<RankTelemetry> {
+    let mut c = Cursor { buf: bytes, at: 0 };
+    let magic = c.take(4)?;
+    if magic != OBS_MAGIC {
+        return Err(anyhow!("bad OBS magic {magic:02x?}"));
+    }
+    let version = c.u16()?;
+    if version != OBS_VERSION {
+        return Err(anyhow!("unsupported OBS version {version} (have {OBS_VERSION})"));
+    }
+    let rank = c.u32()? as usize;
+    let clock_ns = c.u64()?;
+    let spans_dropped = c.u64()?;
+    let journal_dropped = c.u64()?;
+    let final_ratio = f64::from_bits(c.u64()?);
+    let recoveries = c.u32()?;
+    let lost_intervals = c.u32()?;
+    let decreases = c.u32()?;
+    let increases = c.u32()?;
+
+    let n_labels = c.u16()? as usize;
+    if n_labels > MAX_LABELS {
+        return Err(anyhow!("OBS label count {n_labels} exceeds cap {MAX_LABELS}"));
+    }
+    let mut labels: Vec<&'static str> = Vec::with_capacity(n_labels);
+    for _ in 0..n_labels {
+        let len = c.u16()? as usize;
+        if len > MAX_LABEL_LEN {
+            return Err(anyhow!("OBS span label of {len} bytes exceeds cap {MAX_LABEL_LEN}"));
+        }
+        let raw = c.take(len)?;
+        let s = std::str::from_utf8(raw).map_err(|_| anyhow!("invalid UTF-8 in span label"))?;
+        labels.push(intern_label(s)?);
+    }
+
+    let n_spans = c.u32()? as usize;
+    if n_spans > MAX_RECORDS || c.remaining() < n_spans.saturating_mul(SPAN_BYTES) {
+        return Err(anyhow!(
+            "truncated OBS payload: {n_spans} spans declared, {} bytes remain",
+            c.remaining()
+        ));
+    }
+    let mut spans = Vec::with_capacity(n_spans);
+    for _ in 0..n_spans {
+        let idx = c.u16()? as usize;
+        let label = *labels
+            .get(idx)
+            .ok_or_else(|| anyhow!("span label index {idx} out of range ({n_labels} labels)"))?;
+        spans.push(SpanRecord {
+            rank,
+            id: c.u64()?,
+            parent: c.u64()?,
+            label,
+            step: c.u32()?,
+            start_ns: c.u64()?,
+            end_ns: c.u64()?,
+        });
+    }
+
+    let n_journal = c.u32()? as usize;
+    if n_journal > MAX_RECORDS || c.remaining() < n_journal.saturating_mul(JOURNAL_BYTES) {
+        return Err(anyhow!(
+            "truncated OBS payload: {n_journal} journal records declared, {} bytes remain",
+            c.remaining()
+        ));
+    }
+    let mut journal = Vec::with_capacity(n_journal);
+    for _ in 0..n_journal {
+        let kind = match c.u8()? {
+            0 => DecisionKind::Ratio,
+            1 => DecisionKind::Round,
+            2 => DecisionKind::Membership,
+            3 => DecisionKind::Straggler,
+            4 => DecisionKind::Congestion,
+            k => return Err(anyhow!("unknown journal record kind {k}")),
+        };
+        let r_rank = c.u32()? as usize;
+        let step = c.u32()?;
+        let epoch = c.u32()?;
+        let live = c.u32()? as usize;
+        let rtt_us = c.u64()?;
+        let payload_bytes = c.u64()?;
+        let flags = c.u8()?;
+        journal.push(DecisionRecord {
+            kind,
+            rank: r_rank,
+            step,
+            epoch,
+            live,
+            rtt_us,
+            payload_bytes,
+            lost: flags & 1 != 0,
+            phase_netsense: flags & 2 != 0,
+            old_ratio: f64::from_bits(c.u64()?),
+            new_ratio: f64::from_bits(c.u64()?),
+            predicted_wire_bytes: c.u64()?,
+            recoveries: c.u32()?,
+            dropped_stale: c.u32()?,
+            dropped_garbage: c.u32()?,
+        });
+    }
+
+    if c.remaining() != 0 {
+        return Err(anyhow!("trailing bytes after OBS payload: {}", c.remaining()));
+    }
+    Ok(RankTelemetry {
+        rank,
+        clock_ns,
+        spans,
+        spans_dropped,
+        journal,
+        journal_dropped,
+        final_ratio,
+        recoveries,
+        lost_intervals,
+        decreases,
+        increases,
+    })
+}
+
+// ---------------------------------------------------------------------------
+// Gather protocol
+// ---------------------------------------------------------------------------
+
+/// Receive from `from` until an envelope of `want` arrives, discarding a
+/// bounded number of stray frames (duplicated / reordered leftovers from
+/// the last training round parse as `Data`/`Probe` and are skipped, as is
+/// outright garbage). Returns the envelope body.
+fn recv_kind(t: &mut dyn Transport, from: usize, want: FrameKind) -> Result<Vec<u8>> {
+    for _ in 0..MAX_SKIPPED_FRAMES {
+        let bytes = t.recv(from)?;
+        match parse_envelope(&bytes) {
+            Ok((kind, _, _, body)) if kind == want => return Ok(body.to_vec()),
+            Ok(_) | Err(_) => continue,
+        }
+    }
+    Err(anyhow!(
+        "no {want:?} frame from rank {from} within {MAX_SKIPPED_FRAMES} frames"
+    ))
+}
+
+/// Rank 0's side of the gather: for each live peer, run the Clock
+/// ping/pong (offset estimate), then receive and decode its OBS payload.
+/// Best-effort — a peer that times out, disconnects, or sends a malformed
+/// payload becomes a note, and the gather moves on.
+pub fn gather_at_rank0(
+    t: &mut dyn Transport,
+    origin: Instant,
+    peers: &[usize],
+    timeout: Duration,
+) -> PeerCollection {
+    let mut out = PeerCollection {
+        offsets_ns: vec![0; t.group_size()],
+        ..PeerCollection::default()
+    };
+    t.set_recv_timeout(timeout);
+    for &r in peers {
+        let t0 = origin.elapsed().as_nanos() as u64;
+        let mut env = Vec::with_capacity(ENVELOPE_OVERHEAD + 8);
+        write_envelope(FrameKind::Clock, 0, 0, &mut env);
+        env.extend_from_slice(&t0.to_le_bytes());
+        if let Err(e) = t.send(r, &env) {
+            out.notes.push(format!("rank {r}: clock ping send failed: {e}"));
+            continue;
+        }
+        let pong = match recv_kind(t, r, FrameKind::Clock) {
+            Ok(b) => b,
+            Err(e) => {
+                out.notes.push(format!("rank {r}: no clock pong: {e}"));
+                continue;
+            }
+        };
+        let t2 = origin.elapsed().as_nanos() as u64;
+        let Ok(peer_ns) = pong.as_slice().try_into().map(u64::from_le_bytes) else {
+            out.notes.push(format!("rank {r}: clock pong body was {} bytes, want 8", pong.len()));
+            continue;
+        };
+        let offset = estimate_offset(t0, peer_ns, t2);
+        let payload = match recv_kind(t, r, FrameKind::Obs) {
+            Ok(b) => b,
+            Err(e) => {
+                out.notes.push(format!("rank {r}: no OBS payload: {e}"));
+                continue;
+            }
+        };
+        match decode_telemetry(&payload) {
+            Ok(telemetry) => {
+                if telemetry.rank != r {
+                    out.notes
+                        .push(format!("rank {r}: OBS payload claims rank {}", telemetry.rank));
+                    continue;
+                }
+                if let Some(slot) = out.offsets_ns.get_mut(r) {
+                    *slot = offset;
+                }
+                out.telemetry.push(telemetry);
+            }
+            Err(e) => out.notes.push(format!("rank {r}: malformed OBS payload: {e:#}")),
+        }
+    }
+    out
+}
+
+/// A peer's side of the gather: answer rank 0's Clock ping with this
+/// rank's own origin-relative time, then ship the OBS payload.
+pub fn respond_to_collector(
+    t: &mut dyn Transport,
+    origin: Instant,
+    own: &RankTelemetry,
+    timeout: Duration,
+) -> Result<()> {
+    t.set_recv_timeout(timeout);
+    recv_kind(t, 0, FrameKind::Clock)?;
+    let now = origin.elapsed().as_nanos() as u64;
+    let mut env = Vec::with_capacity(ENVELOPE_OVERHEAD + 8);
+    write_envelope(FrameKind::Clock, 0, 0, &mut env);
+    env.extend_from_slice(&now.to_le_bytes());
+    t.send(0, &env)?;
+    let payload = encode_telemetry(own);
+    let mut obs = Vec::with_capacity(ENVELOPE_OVERHEAD + payload.len());
+    write_envelope(FrameKind::Obs, 0, 0, &mut obs);
+    obs.extend_from_slice(&payload);
+    t.send(0, &obs)?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::transport::LoopbackTransport;
+
+    fn sample() -> RankTelemetry {
+        RankTelemetry {
+            rank: 2,
+            clock_ns: 123_456_789,
+            spans: vec![
+                SpanRecord {
+                    rank: 2,
+                    id: 1,
+                    parent: 0,
+                    label: "step",
+                    step: 0,
+                    start_ns: 1_000,
+                    end_ns: 9_000,
+                },
+                SpanRecord {
+                    rank: 2,
+                    id: 2,
+                    parent: 1,
+                    label: "round",
+                    step: 0,
+                    start_ns: 2_000,
+                    end_ns: 8_000,
+                },
+                SpanRecord {
+                    rank: 2,
+                    id: 3,
+                    parent: 2,
+                    label: "decode",
+                    step: 0,
+                    start_ns: 3_000,
+                    end_ns: 4_000,
+                },
+            ],
+            spans_dropped: 7,
+            journal: vec![
+                DecisionRecord {
+                    kind: DecisionKind::Ratio,
+                    rank: 2,
+                    step: 0,
+                    epoch: 1,
+                    live: 4,
+                    rtt_us: 1500,
+                    payload_bytes: 4096,
+                    lost: true,
+                    phase_netsense: true,
+                    old_ratio: 0.5,
+                    new_ratio: 0.25,
+                    predicted_wire_bytes: 2048,
+                    recoveries: 1,
+                    dropped_stale: 2,
+                    dropped_garbage: 3,
+                },
+                DecisionRecord {
+                    kind: DecisionKind::Membership,
+                    rank: 2,
+                    epoch: 2,
+                    live: 3,
+                    ..DecisionRecord::default()
+                },
+            ],
+            journal_dropped: 1,
+            final_ratio: 0.125,
+            recoveries: 4,
+            lost_intervals: 5,
+            decreases: 6,
+            increases: 9,
+        }
+    }
+
+    #[test]
+    fn obs_payload_roundtrips() {
+        let t = sample();
+        let bytes = encode_telemetry(&t);
+        assert_eq!(decode_telemetry(&bytes).unwrap(), t);
+    }
+
+    #[test]
+    fn obs_payload_interns_unknown_labels() {
+        let mut t = sample();
+        t.spans[0].label = "custom-phase";
+        let bytes = encode_telemetry(&t);
+        // The fuzz harness shares this process and may have filled the
+        // bounded intern table with mutated labels — both outcomes are
+        // in-contract, and which one we got must be stable.
+        match decode_telemetry(&bytes) {
+            Ok(back) => {
+                assert_eq!(back.spans[0].label, "custom-phase");
+                // A second decode reuses the interned copy.
+                let again = decode_telemetry(&bytes).unwrap();
+                assert!(std::ptr::eq(back.spans[0].label, again.spans[0].label));
+            }
+            Err(e) => {
+                assert!(
+                    format!("{e}").contains("too many distinct span labels"),
+                    "unexpected decode error: {e}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn obs_payload_truncation_at_every_prefix_is_a_named_err() {
+        let bytes = encode_telemetry(&sample());
+        for len in 0..bytes.len() {
+            let err = decode_telemetry(&bytes[..len])
+                .expect_err("every strict prefix must be rejected");
+            assert!(!format!("{err:#}").is_empty());
+        }
+    }
+
+    #[test]
+    fn obs_payload_names_every_defect() {
+        let good = encode_telemetry(&sample());
+
+        let mut bad = good.clone();
+        bad[0] = b'X';
+        let e = decode_telemetry(&bad).unwrap_err();
+        assert!(format!("{e}").contains("bad OBS magic"), "{e}");
+
+        let mut bad = good.clone();
+        bad[4] = 0xff;
+        let e = decode_telemetry(&bad).unwrap_err();
+        assert!(format!("{e}").contains("unsupported OBS version"), "{e}");
+
+        let mut bad = good.clone();
+        bad.push(0);
+        let e = decode_telemetry(&bad).unwrap_err();
+        assert!(format!("{e}").contains("trailing bytes"), "{e}");
+
+        // Journal records sit at the tail: patch the first record's kind
+        // byte to an unassigned value.
+        let n_journal = sample().journal.len();
+        let mut bad = good.clone();
+        let at = bad.len() - n_journal * JOURNAL_BYTES;
+        bad[at] = 9;
+        let e = decode_telemetry(&bad).unwrap_err();
+        assert!(format!("{e}").contains("unknown journal record kind 9"), "{e}");
+
+        // A lying span count must fail by arithmetic, not by allocation:
+        // patch n_spans (right after the label table) to a huge value.
+        let labels_bytes: usize = 2 + ["step", "round", "decode"].iter().map(|l| 2 + l.len()).sum::<usize>();
+        let mut bad = good;
+        let at = HEADER_BYTES + labels_bytes;
+        bad[at..at + 4].copy_from_slice(&u32::MAX.to_le_bytes());
+        let e = decode_telemetry(&bad).unwrap_err();
+        assert!(format!("{e}").contains("truncated OBS payload"), "{e}");
+    }
+
+    #[test]
+    fn obs_gather_rejects_a_payload_claiming_the_wrong_rank() {
+        let mut mesh = LoopbackTransport::mesh(2);
+        let mut peer = mesh.pop().unwrap();
+        let mut root = mesh.pop().unwrap();
+        let origin = Instant::now();
+        let own = sample(); // claims rank 2, arrives from rank 1
+        let h = std::thread::spawn(move || {
+            respond_to_collector(&mut peer, origin, &own, Duration::from_secs(5)).unwrap();
+        });
+        let got = gather_at_rank0(&mut root, origin, &[1], Duration::from_secs(5));
+        h.join().unwrap();
+        assert!(got.telemetry.is_empty());
+        assert_eq!(got.notes.len(), 1);
+        assert!(got.notes[0].contains("claims rank 2"), "{}", got.notes[0]);
+        assert_eq!(got.offsets_ns, vec![0, 0]);
+    }
+
+    #[test]
+    fn obs_gather_roundtrips_and_estimates_offsets_over_loopback() {
+        let mut mesh = LoopbackTransport::mesh(2);
+        let mut peer = mesh.pop().unwrap();
+        let mut root = mesh.pop().unwrap();
+        let origin = Instant::now();
+        let mut own = sample();
+        own.rank = 1;
+        for s in &mut own.spans {
+            s.rank = 1;
+        }
+        let own_for_peer = own.clone();
+        let h = std::thread::spawn(move || {
+            respond_to_collector(&mut peer, origin, &own_for_peer, Duration::from_secs(5)).unwrap();
+        });
+        let got = gather_at_rank0(&mut root, origin, &[1], Duration::from_secs(5));
+        h.join().unwrap();
+        assert!(got.notes.is_empty(), "{:?}", got.notes);
+        assert_eq!(got.telemetry, vec![own]);
+        // Shared origin → the estimated offset is bounded by the RTT of an
+        // in-process channel; generous bound for loaded CI machines.
+        assert!(got.offsets_ns[1].abs() < 1_000_000_000, "offset {}", got.offsets_ns[1]);
+        assert_eq!(got.offsets_ns[0], 0);
+    }
+
+    #[test]
+    fn obs_gather_notes_a_silent_peer_instead_of_failing() {
+        let mut mesh = LoopbackTransport::mesh(2);
+        drop(mesh.pop()); // peer never responds (channel closed)
+        let mut root = mesh.pop().unwrap();
+        let got = gather_at_rank0(
+            &mut root,
+            Instant::now(),
+            &[1],
+            Duration::from_millis(50),
+        );
+        assert!(got.telemetry.is_empty());
+        assert_eq!(got.notes.len(), 1);
+        assert!(got.notes[0].contains("rank 1"), "{}", got.notes[0]);
+    }
+}

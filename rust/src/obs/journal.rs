@@ -31,6 +31,12 @@ pub enum DecisionKind {
     Round,
     /// A membership change (epoch bump / live-set shrink).
     Membership,
+    /// An analyzer verdict: one rank was the critical path of ≥ half the
+    /// rounds ([`crate::obs::analyze`] — `rank` holds the straggler).
+    Straggler,
+    /// An analyzer verdict: the run saw loss-driven backoff (the
+    /// controller itself sensed congestion).
+    Congestion,
 }
 
 impl DecisionKind {
@@ -39,6 +45,8 @@ impl DecisionKind {
             DecisionKind::Ratio => "ratio",
             DecisionKind::Round => "round",
             DecisionKind::Membership => "membership",
+            DecisionKind::Straggler => "straggler",
+            DecisionKind::Congestion => "congestion",
         }
     }
 }
@@ -46,7 +54,7 @@ impl DecisionKind {
 /// One journal entry. Flat and `Copy`; unused fields stay at their
 /// `Default` for the record's kind (construct with
 /// `..DecisionRecord::default()`).
-#[derive(Debug, Clone, Copy, Default)]
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
 pub struct DecisionRecord {
     pub kind: DecisionKind,
     /// Worker rank that recorded the entry.

@@ -162,6 +162,39 @@ impl Histogram {
         }
         u64::MAX
     }
+
+    /// Interpolated quantile estimate: finds the bucket holding the
+    /// `q`-th observation (by rank, `q` clamped to `[0, 1]`) and
+    /// interpolates linearly within the bucket's `[2^(i−1), 2^i − 1]`
+    /// range by the rank's position among the bucket's observations —
+    /// a smoother estimate than [`Self::percentile`]'s upper bound,
+    /// always ≤ it. Returns 0.0 on an empty histogram. This is what the
+    /// Prometheus exporter's `_p50`/`_p95`/`_p99` summary lines and the
+    /// analyzer report ([`crate::obs::analyze`]) use.
+    pub fn quantile(&self, q: f64) -> f64 {
+        let counts = self.bucket_counts();
+        let total: u64 = counts.iter().sum();
+        if total == 0 {
+            return 0.0;
+        }
+        let q = q.clamp(0.0, 1.0);
+        let target = (q * total as f64).max(1.0);
+        let mut cum = 0u64;
+        for (i, &c) in counts.iter().enumerate() {
+            if c == 0 {
+                continue;
+            }
+            let before = cum;
+            cum += c;
+            if cum as f64 >= target {
+                let lo = if i == 0 { 0.0 } else { (1u64 << (i - 1)) as f64 };
+                let hi = Self::bucket_upper_bound(i) as f64;
+                let frac = (target - before as f64) / c as f64;
+                return lo + frac * (hi - lo);
+            }
+        }
+        Self::bucket_upper_bound(N_BUCKETS - 1) as f64
+    }
 }
 
 enum Metric {
@@ -294,6 +327,12 @@ impl Registry {
                     ));
                     out.push_str(&format!("{}_sum {}\n", e.name, h.sum()));
                     out.push_str(&format!("{}_count {}\n", e.name, h.count()));
+                    // Interpolated quantile summary lines (untyped
+                    // samples — legal exposition, and greppable without
+                    // reconstructing the cumulative buckets).
+                    for (tag, q) in [("p50", 0.5), ("p95", 0.95), ("p99", 0.99)] {
+                        out.push_str(&format!("{}_{} {}\n", e.name, tag, h.quantile(q)));
+                    }
                 }
             }
         }
@@ -365,6 +404,11 @@ pub struct HotMetrics {
     pub live_ranks: &'static Gauge,
     /// Membership epoch (rank 0's view).
     pub epoch: &'static Gauge,
+    // ---- cluster observability plane -------------------------------------
+    /// Largest estimated per-peer clock offset of the end-of-run gather
+    /// ([`crate::obs::collect`]), nanoseconds, signed (NTP midpoint
+    /// method; 0 until a gather runs).
+    pub clock_offset_ns: &'static Gauge,
     // ---- chaos injection -------------------------------------------------
     /// FaultInjector kill firings.
     pub faults_kill_total: &'static Counter,
@@ -463,6 +507,10 @@ pub fn hot() -> &'static HotMetrics {
             ratio: r.gauge("netsense_ratio", "compression ratio in force (rank 0)"),
             live_ranks: r.gauge("netsense_live_ranks", "live ranks (rank 0's view)"),
             epoch: r.gauge("netsense_epoch", "membership epoch (rank 0's view)"),
+            clock_offset_ns: r.gauge(
+                "netsense_clock_offset_ns",
+                "largest estimated per-peer clock offset of the telemetry gather, nanoseconds",
+            ),
             faults_kill_total: r.counter("netsense_faults_kill_total", "injected kill firings"),
             faults_stall_total: r.counter("netsense_faults_stall_total", "injected stall firings"),
             faults_flap_total: r.counter(
@@ -586,6 +634,64 @@ mod tests {
         assert_eq!(h.percentile(2.0), h.percentile(1.0));
     }
 
+    /// Pins the interpolated quantile estimator on hand-computable
+    /// distributions: all mass in one bucket interpolates linearly
+    /// across that bucket's `[2^(i−1), 2^i − 1]` range by rank.
+    #[test]
+    fn histogram_quantiles_interpolate_within_buckets() {
+        // Empty histogram: defined, zero.
+        let empty = Histogram::new();
+        assert_eq!(empty.quantile(0.5), 0.0);
+
+        // 100 observations, all in bucket 9 = [256, 511]. The q-th rank
+        // sits at fraction q through the bucket: lo + q·(hi − lo).
+        let h = Histogram::new();
+        for _ in 0..100 {
+            h.observe(300);
+        }
+        assert!((h.quantile(0.5) - 383.5).abs() < 1e-9, "{}", h.quantile(0.5));
+        assert!((h.quantile(0.95) - (256.0 + 0.95 * 255.0)).abs() < 1e-9);
+        assert!((h.quantile(0.99) - (256.0 + 0.99 * 255.0)).abs() < 1e-9);
+        // Clamping mirrors percentile().
+        assert_eq!(h.quantile(-3.0), h.quantile(0.0));
+        assert_eq!(h.quantile(7.0), h.quantile(1.0));
+        assert!((h.quantile(1.0) - 511.0).abs() < 1e-9);
+
+        // Split mass: 50 zeros + 50 in [256, 511]. The lower half lands
+        // in the zero bucket, the upper half interpolates as before.
+        let s = Histogram::new();
+        for _ in 0..50 {
+            s.observe(0);
+        }
+        for _ in 0..50 {
+            s.observe(300);
+        }
+        assert_eq!(s.quantile(0.25), 0.0);
+        assert!((s.quantile(0.75) - 383.5).abs() < 1e-9, "{}", s.quantile(0.75));
+    }
+
+    /// The interpolated quantile is monotone in q and never exceeds the
+    /// conservative bucket-upper-bound percentile at the same q.
+    #[test]
+    fn histogram_quantiles_are_monotone_and_bounded_by_percentiles() {
+        let h = Histogram::new();
+        for v in [3u64, 3, 3, 40, 40, 500, 500, 500, 9_000, 1_000_000] {
+            h.observe(v);
+        }
+        let qs = [0.0, 0.1, 0.25, 0.5, 0.75, 0.9, 0.99, 1.0];
+        let vs: Vec<f64> = qs.iter().map(|&q| h.quantile(q)).collect();
+        for w in vs.windows(2) {
+            assert!(w[0] <= w[1], "quantiles not monotone: {vs:?}");
+        }
+        for (&q, &v) in qs.iter().zip(&vs) {
+            assert!(
+                v <= h.percentile(q) as f64,
+                "quantile({q}) = {v} exceeds percentile upper bound {}",
+                h.percentile(q)
+            );
+        }
+    }
+
     #[test]
     fn registry_registers_and_dedupes() {
         let r = Registry::new();
@@ -620,6 +726,26 @@ mod tests {
         assert!(snap.contains("t_cum_bucket{le=\"1\"} 1"), "{snap}");
         assert!(snap.contains("t_cum_bucket{le=\"3\"} 3"), "{snap}");
         assert!(snap.contains("t_cum_bucket{le=\"+Inf\"} 3"), "{snap}");
+    }
+
+    /// Each exported histogram carries interpolated `_p50`/`_p95`/`_p99`
+    /// summary lines so quantiles are greppable from the scrape without
+    /// reconstructing the cumulative buckets.
+    #[test]
+    fn prometheus_histograms_carry_quantile_summary_lines() {
+        let r = Registry::new();
+        let h = r.histogram("t_qs", "quantile summary check");
+        for _ in 0..100 {
+            h.observe(300); // bucket [256, 511]
+        }
+        let snap = r.prometheus();
+        assert!(snap.contains("t_qs_p50 383.5"), "{snap}");
+        assert!(snap.contains("t_qs_p95 "), "{snap}");
+        assert!(snap.contains("t_qs_p99 "), "{snap}");
+        // Summary lines come after _count, inside the same family block.
+        let count_at = snap.find("t_qs_count").expect("count line");
+        let p50_at = snap.find("t_qs_p50").expect("p50 line");
+        assert!(p50_at > count_at, "{snap}");
     }
 
     #[test]

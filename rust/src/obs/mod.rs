@@ -25,6 +25,25 @@
 //!   against the run's [`SyncTrajectory`](crate::fault::SyncTrajectory)
 //!   and netsim replays.
 //!
+//! On top of the per-rank pieces sits the **cluster observability plane**
+//! (DESIGN.md §3.12), three more modules that run strictly after (or on
+//! abort of) the training loop:
+//!
+//! - **[`collect`]** — the end-of-run gather: each rank serializes its
+//!   span ring + journal + counter snapshot into a versioned `NSOB`
+//!   payload and ships it to rank 0 over the transport seam, preceded by
+//!   a clock ping/pong per peer. Malformed payloads are named `Err`s,
+//!   dead peers become notes — collection is best-effort by design.
+//! - **[`align`]** — NTP-midpoint clock-offset estimation and the
+//!   offset-applying merge that stitches per-rank rings into one
+//!   monotonic timeline, so multi-process TCP traces align like the
+//!   shared-origin loopback ones always did.
+//! - **[`analyze`]** — critical-path attribution over the merged
+//!   timeline: per-step compute/compress/wire/decode/recovery breakdown,
+//!   per-round straggler attribution, and a compression-efficacy series,
+//!   emitted as `ANALYSIS.json` plus `Straggler`/`Congestion` journal
+//!   verdicts.
+//!
 //! §Perf contract: recording a metric, opening/closing a span, and
 //! pushing a journal record are all allocation-free in steady state — the
 //! counting-allocator gates in [`crate::fault::collective`] run the fused
@@ -34,15 +53,24 @@
 //! allocates once, at startup; export (JSON/Prometheus strings) is cold
 //! by construction.
 
+pub mod align;
+pub mod analyze;
+pub mod collect;
 pub mod journal;
 pub mod metrics;
 pub mod serve;
 pub mod trace;
 
+pub use align::{estimate_offset, merge_aligned};
+pub use analyze::{analyze, Analysis, EfficacyPoint, StepBreakdown};
+pub use collect::{
+    decode_telemetry, encode_telemetry, gather_at_rank0, respond_to_collector, PeerCollection,
+    RankTelemetry,
+};
 pub use journal::{DecisionJournal, DecisionKind, DecisionRecord};
 pub use metrics::{hot, registry, Counter, Gauge, Histogram, HotMetrics, Registry};
 pub use serve::MetricsServer;
-pub use trace::{chrome_trace_json, SpanId, SpanRecord, Tracer};
+pub use trace::{chrome_trace_json, chrome_trace_json_with_offsets, SpanId, SpanRecord, Tracer};
 
 #[cfg(test)]
 mod tests {

@@ -133,4 +133,25 @@ mod tests {
         // Idempotent shutdown + Drop after shutdown must not hang.
         server.shutdown();
     }
+
+    /// Graceful shutdown releases the port: after `shutdown()` returns,
+    /// the accept thread has joined and the exact same address can be
+    /// rebound immediately — no lingering listener, no reliance on
+    /// SO_REUSEADDR, no sleep.
+    #[test]
+    fn shutdown_joins_the_thread_and_releases_the_port() {
+        let mut server = MetricsServer::start("127.0.0.1:0").expect("bind ephemeral port");
+        let addr = server.local_addr();
+        assert_ne!(addr.port(), 0, "port 0 must resolve to a real port");
+        server.shutdown();
+        let rebound = TcpListener::bind(addr)
+            .unwrap_or_else(|e| panic!("rebinding {addr} after shutdown failed: {e}"));
+        assert_eq!(rebound.local_addr().expect("local addr").port(), addr.port());
+
+        // A server dropped without an explicit shutdown releases too.
+        let second = MetricsServer::start("127.0.0.1:0").expect("bind second");
+        let addr2 = second.local_addr();
+        drop(second);
+        TcpListener::bind(addr2).expect("rebind after drop");
+    }
 }

@@ -31,7 +31,7 @@ impl SpanId {
 }
 
 /// One finished span. Flat and `Copy` so the ring is a plain slab.
-#[derive(Debug, Clone, Copy)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct SpanRecord {
     /// Rank of the worker that recorded the span.
     pub rank: usize,
@@ -211,6 +211,17 @@ impl Tracer {
 /// one track per rank. `args` carries the step and span/parent ids for
 /// cross-referencing against the decision journal.
 pub fn chrome_trace_json(spans: &[SpanRecord]) -> String {
+    chrome_trace_json_with_offsets(spans, &[])
+}
+
+/// [`chrome_trace_json`] plus clock-alignment provenance: when
+/// `offsets_ns` is non-empty, a top-level `clockOffsetsNs` object maps
+/// each rank to the estimated clock offset the merger subtracted from
+/// its track ([`crate::obs::align::merge_aligned`] — the spans passed
+/// here are already aligned; the metadata records what was applied, and
+/// `scripts/check_trace.py` validates it). With an empty `offsets_ns`
+/// the output is byte-identical to the pre-alignment format.
+pub fn chrome_trace_json_with_offsets(spans: &[SpanRecord], offsets_ns: &[i64]) -> String {
     let events: Vec<Json> = spans
         .iter()
         .map(|s| {
@@ -232,11 +243,18 @@ pub fn chrome_trace_json(spans: &[SpanRecord]) -> String {
             ])
         })
         .collect();
-    obj(vec![
+    let mut top = vec![
         ("traceEvents", Json::Arr(events)),
         ("displayTimeUnit", Json::from("ms")),
-    ])
-    .to_string_compact()
+    ];
+    if !offsets_ns.is_empty() {
+        let mut map = std::collections::BTreeMap::new();
+        for (rank, off) in offsets_ns.iter().enumerate() {
+            map.insert(rank.to_string(), Json::from(*off));
+        }
+        top.push(("clockOffsetsNs", Json::Obj(map)));
+    }
+    obj(top).to_string_compact()
 }
 
 #[cfg(test)]
@@ -318,6 +336,21 @@ mod tests {
         assert_eq!(t.recorded(), 0);
         assert!(t.drain().is_empty());
         assert_eq!(chrome_trace_json(&t.drain()), r#"{"displayTimeUnit":"ms","traceEvents":[]}"#);
+    }
+
+    #[test]
+    fn chrome_trace_offsets_metadata_is_optional_and_typed() {
+        // Empty offsets → byte-identical to the historical format.
+        assert_eq!(
+            chrome_trace_json_with_offsets(&[], &[]),
+            r#"{"displayTimeUnit":"ms","traceEvents":[]}"#
+        );
+        let json = chrome_trace_json_with_offsets(&[], &[0, -1_500, 2_000]);
+        let doc = crate::util::json::Json::parse(&json).expect("trace JSON parses");
+        let offs = doc.get("clockOffsetsNs").expect("clockOffsetsNs present");
+        assert_eq!(offs.get("0").and_then(|v| v.as_f64()), Some(0.0));
+        assert_eq!(offs.get("1").and_then(|v| v.as_f64()), Some(-1_500.0));
+        assert_eq!(offs.get("2").and_then(|v| v.as_f64()), Some(2_000.0));
     }
 
     /// ISSUE satellite: Chrome-trace JSON well-formedness — parses with

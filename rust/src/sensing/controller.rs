@@ -136,6 +136,9 @@ pub struct RatioController {
     last_transition: Option<Transition>,
     /// Branch taken by the current `on_interval` call (scratch).
     branch: Branch,
+    /// Out-of-band congestion evidence ([`Self::note_congestion`])
+    /// pending application to the next interval.
+    pending_congestion: bool,
 }
 
 impl RatioController {
@@ -152,6 +155,7 @@ impl RatioController {
             n_increases: 0,
             last_transition: None,
             branch: Branch::Hold,
+            pending_congestion: false,
             config,
         }
     }
@@ -183,6 +187,7 @@ impl RatioController {
     /// events (it is the paper's alternative startup-exit trigger, and in
     /// the steady phase it forces the multiplicative backoff).
     pub fn on_interval(&mut self, data_size_bytes: u64, rtt: SimTime, lost: bool) -> f64 {
+        let lost = lost || std::mem::take(&mut self.pending_congestion);
         self.intervals += 1;
         self.estimator.observe(data_size_bytes, rtt);
         let phase_before = self.phase;
@@ -243,6 +248,19 @@ impl RatioController {
     /// these; sensing itself stays telemetry-agnostic.
     pub fn last_transition(&self) -> Option<Transition> {
         self.last_transition
+    }
+
+    /// Register out-of-band congestion evidence — e.g. a `Congestion`
+    /// verdict from the cluster analyzer ([`crate::obs::analyze`]) when a
+    /// prior run's trace showed backoff-under-loss — to be treated as a
+    /// lost interval by the *next* [`Self::on_interval`] call, then
+    /// cleared. The live loop deliberately does not self-feed this
+    /// (measured loss already reaches `on_interval` directly, and the
+    /// loop must stay deterministic against its netsim mirror); it exists
+    /// for operators and offline replay tooling priming a controller from
+    /// a previous run's verdicts.
+    pub fn note_congestion(&mut self) {
+        self.pending_congestion = true;
     }
 
     /// Multiplicative decrease (Algorithm 1 line 16) — the backoff branch.
@@ -414,6 +432,32 @@ mod tests {
         let t = c.last_transition().unwrap();
         assert_eq!(t.branch, Branch::Increase);
         assert_eq!((t.old_ratio, t.new_ratio), (r2, r3));
+    }
+
+    /// `note_congestion()` makes the next interval loss-equivalent (one
+    /// multiplicative backoff, recorded as lost in the transition), then
+    /// clears — the interval after that resumes the additive climb.
+    #[test]
+    fn noted_congestion_backs_off_exactly_one_interval() {
+        let mut c = ctl();
+        c.on_interval(1_000_000, SimTime::from_millis(100), true); // → NetSense, BDP = 1 MB
+        for _ in 0..5 {
+            c.on_interval(100_000, SimTime::from_millis(100), false);
+        }
+        let before = c.ratio();
+        let decreases_before = c.n_decreases;
+        c.note_congestion();
+        // A clean, under-BDP observation — but the noted verdict outranks it.
+        let after = c.on_interval(100_000, SimTime::from_millis(100), false);
+        assert!((after - (before * 0.5).max(0.005)).abs() < 1e-12, "{before} → {after}");
+        assert_eq!(c.n_decreases, decreases_before + 1);
+        let t = c.last_transition().unwrap();
+        assert_eq!(t.branch, Branch::Backoff);
+        assert!(t.lost, "noted congestion must be journaled as a lost interval");
+        // Cleared: the next clean interval increases again.
+        let resumed = c.on_interval(100_000, SimTime::from_millis(100), false);
+        assert!((resumed - (after + 0.01)).abs() < 1e-12);
+        assert!(!c.last_transition().unwrap().lost);
     }
 
     #[test]

@@ -1,11 +1,12 @@
 //! Deterministic structured fuzzing of the wire surfaces — dependency
 //! free, seed-reproducible, corpus-pinned (DESIGN.md §3.9).
 //!
-//! Four byte formats cross a trust boundary in this crate: the
+//! Five byte formats cross a trust boundary in this crate: the
 //! length-prefixed transport frame ([`crate::transport::frame`]), the COO
 //! sparse payload ([`crate::compress::sparse`]), the 9-byte elastic
-//! envelope ([`crate::fault::parse_envelope`]), and the versioned
-//! [`Checkpoint`] blob. Each gets a **probe** here — a total function
+//! envelope ([`crate::fault::parse_envelope`]), the versioned
+//! [`Checkpoint`] blob, and the `NSOB` telemetry-gather payload
+//! ([`crate::obs::collect`]). Each gets a **probe** here — a total function
 //! driving one input through every decoder of that surface while
 //! asserting the PR-5 corruption contract: a malformed input returns a
 //! named `Err` with the accumulator/state untouched, never panics, never
@@ -38,6 +39,9 @@
 use crate::compress::{decode_reduce_into, SparseGradient};
 use crate::compress::quantize::Precision;
 use crate::fault::{parse_envelope, write_envelope, Checkpoint, FrameKind, ENVELOPE_OVERHEAD};
+use crate::obs::{
+    decode_telemetry, encode_telemetry, DecisionKind, DecisionRecord, RankTelemetry, SpanRecord,
+};
 use crate::transport::frame::{decode_frame_into, encode_frame, frame_payload, read_frame_into};
 
 /// Default mutator/generator seed — override with `NETSENSE_FUZZ_SEED`.
@@ -330,6 +334,31 @@ pub fn probe_checkpoint(bytes: &[u8]) -> Result<(), String> {
     }
 }
 
+/// Drive one input through the **OBS telemetry** surface
+/// ([`decode_telemetry`]): an accepted payload must re-encode to a
+/// canonical form (unused label-table entries dropped, span ranks
+/// normalized to the header rank) that decodes back byte-stably; a
+/// rejected one names the defect. Panics if violated.
+pub fn probe_obs(bytes: &[u8]) -> Result<(), String> {
+    match decode_telemetry(bytes) {
+        Ok(t) => {
+            let canon = encode_telemetry(&t);
+            // Bit-level comparison (re-encode) rather than PartialEq:
+            // mutated-but-accepted payloads may carry NaN ratios, which
+            // compare unequal to themselves.
+            let again = decode_telemetry(&canon)
+                .expect("canonical re-encode of accepted telemetry must decode");
+            assert_eq!(encode_telemetry(&again), canon, "OBS decode∘encode not canonical");
+            Ok(())
+        }
+        Err(e) => {
+            let msg = format!("{e:#}");
+            assert!(!msg.is_empty(), "OBS rejection must be named");
+            Err(msg)
+        }
+    }
+}
+
 /// Dispatch a corpus entry to its surface probe (`None` for an unknown
 /// surface tag) — the replay seam `rust/tests/fuzz_corpus.rs` shares with
 /// ad-hoc reproduction.
@@ -341,6 +370,7 @@ pub fn probe_surface(surface: &str, bytes: &[u8]) -> Option<Result<(), String>> 
         "coo" | "coo-lossless" => Some(probe_coo(bytes)),
         "envelope" => Some(probe_envelope(bytes)),
         "checkpoint" => Some(probe_checkpoint(bytes)),
+        "obs" => Some(probe_obs(bytes)),
         _ => None,
     }
 }
@@ -444,6 +474,69 @@ pub fn gen_checkpoint(rng: &mut SplitMix64) -> Vec<u8> {
     Checkpoint::new(rng.next(), rng.next(), states).encode()
 }
 
+/// A valid OBS telemetry payload: random header counters, 0–12 spans over
+/// the well-known label set (mutations reach the unknown-label and
+/// interning paths; generating unknown labels here would instead leak
+/// into the process-global intern table), 0–8 journal records across all
+/// five kinds.
+pub fn gen_obs(rng: &mut SplitMix64) -> Vec<u8> {
+    const LABELS: &[&str] = &["step", "compress", "round", "decode", "recovery"];
+    const KINDS: &[DecisionKind] = &[
+        DecisionKind::Ratio,
+        DecisionKind::Round,
+        DecisionKind::Membership,
+        DecisionKind::Straggler,
+        DecisionKind::Congestion,
+    ];
+    let rank = rng.index(64);
+    let spans: Vec<SpanRecord> = (0..rng.index(13))
+        .map(|i| {
+            let start_ns = rng.below(1 << 40);
+            SpanRecord {
+                rank,
+                id: i as u64 + 1,
+                parent: rng.below(i as u64 + 1),
+                label: LABELS[rng.index(LABELS.len())],
+                step: rng.next() as u32,
+                start_ns,
+                end_ns: start_ns + rng.below(1 << 30),
+            }
+        })
+        .collect();
+    let journal: Vec<DecisionRecord> = (0..rng.index(9))
+        .map(|_| DecisionRecord {
+            kind: KINDS[rng.index(KINDS.len())],
+            rank,
+            step: rng.next() as u32,
+            epoch: rng.next() as u32,
+            live: rng.index(64),
+            rtt_us: rng.below(1 << 30),
+            payload_bytes: rng.below(1 << 30),
+            lost: rng.chance(0.3),
+            phase_netsense: rng.chance(0.5),
+            old_ratio: (rng.next() as i32 as f64) * 1e-9,
+            new_ratio: (rng.next() as i32 as f64) * 1e-9,
+            predicted_wire_bytes: rng.below(1 << 30),
+            recoveries: rng.next() as u32,
+            dropped_stale: rng.next() as u32,
+            dropped_garbage: rng.next() as u32,
+        })
+        .collect();
+    encode_telemetry(&RankTelemetry {
+        rank,
+        clock_ns: rng.next(),
+        spans,
+        spans_dropped: rng.below(1 << 20),
+        journal,
+        journal_dropped: rng.below(1 << 20),
+        final_ratio: (rng.next() as i32 as f64) * 1e-9,
+        recoveries: rng.next() as u32,
+        lost_intervals: rng.next() as u32,
+        decreases: rng.next() as u32,
+        increases: rng.next() as u32,
+    })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -506,6 +599,11 @@ mod tests {
         fuzz_surface("checkpoint", gen_checkpoint, probe_checkpoint);
     }
 
+    #[test]
+    fn fuzz_obs_surface() {
+        fuzz_surface("obs", gen_obs, probe_obs);
+    }
+
     /// Hostile raw bytes (no valid prefix at all) — the probes must stay
     /// total from byte zero, including the empty input.
     #[test]
@@ -518,6 +616,7 @@ mod tests {
                 let _ = probe_coo(&buf);
                 let _ = probe_envelope(&buf);
                 let _ = probe_checkpoint(&buf);
+                let _ = probe_obs(&buf);
             }
         }
     }
@@ -549,6 +648,7 @@ mod tests {
             probe_coo(&gen_coo_lossless(&mut rng)).expect("gen_coo_lossless invalid");
             probe_envelope(&gen_envelope(&mut rng)).expect("gen_envelope invalid");
             probe_checkpoint(&gen_checkpoint(&mut rng)).expect("gen_checkpoint invalid");
+            probe_obs(&gen_obs(&mut rng)).expect("gen_obs invalid");
         }
     }
 
@@ -559,6 +659,7 @@ mod tests {
         assert!(probe_surface("coo", &gen_coo(&mut rng)).unwrap().is_ok());
         assert!(probe_surface("envelope", &gen_envelope(&mut rng)).unwrap().is_ok());
         assert!(probe_surface("checkpoint", &gen_checkpoint(&mut rng)).unwrap().is_ok());
+        assert!(probe_surface("obs", &gen_obs(&mut rng)).unwrap().is_ok());
         assert!(probe_surface("unknown-surface", b"").is_none());
     }
 }

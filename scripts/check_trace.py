@@ -1,17 +1,23 @@
 #!/usr/bin/env python3
 """Validate the telemetry artifacts a live run emits (`make trace-smoke`).
 
-Usage: check_trace.py TRACE.json METRICS.prom [JOURNAL.json]
+Usage: check_trace.py TRACE.json METRICS.prom [JOURNAL.json [ANALYSIS.json]]
 
 Checks, hard-failing on the first violation:
-  trace   — well-formed Chrome trace_event JSON: complete events ("ph": "X")
-            with non-negative ts/dur, spans on one thread properly nested,
-            and the live loop's span labels all present.
-  metrics — parseable Prometheus text exposition whose histogram bucket
-            counts are cumulative, with the run's core series present.
-  journal — (optional) decision-journal JSON: schema_version 1, records
-            with known kinds, and every ratio transition chained
-            old_ratio -> new_ratio -> next old_ratio.
+  trace    — well-formed Chrome trace_event JSON: complete events ("ph": "X")
+             with non-negative ts/dur, spans on one thread properly nested,
+             and the live loop's span labels all present. When the gather
+             ran, the top-level `clockOffsetsNs` object must cover every
+             rank track and pin rank 0 at offset 0.
+  metrics  — parseable Prometheus text exposition whose histogram bucket
+             counts are cumulative, with the run's core series present.
+  journal  — (optional) decision-journal JSON: schema_version 1, records
+             with known kinds, and every ratio transition chained
+             old_ratio -> new_ratio -> next old_ratio.
+  analysis — (optional) critical-path report: schema_version 1, per-step
+             attribution (compute/compress/wire/decode/recovery) summing
+             exactly to the step wall time, critical ranks in range, and
+             straggler counts consistent with the attributed steps.
 """
 
 import json
@@ -57,8 +63,23 @@ def check_trace(path: str) -> None:
             if stack and e > stack[-1] + eps:
                 fail(f"{path}: tid {tid}: span [{s}, {e}] crosses enclosing end {stack[-1]}")
             stack.append(e)
+    # The gather embeds the clock offsets it applied; when present they
+    # must cover every rank track and rank 0 (the reference) must be 0.
+    offsets = doc.get("clockOffsetsNs")
+    if offsets is not None:
+        if not isinstance(offsets, dict) or not offsets:
+            fail(f"{path}: clockOffsetsNs present but not a non-empty object")
+        for rank, off in offsets.items():
+            if not isinstance(off, (int, float)):
+                fail(f"{path}: clockOffsetsNs[{rank!r}] is not a number")
+        if offsets.get("0") not in (0, 0.0):
+            fail(f"{path}: clockOffsetsNs['0'] must be 0, got {offsets.get('0')!r}")
+        for tid in by_tid:
+            if str(tid) not in offsets:
+                fail(f"{path}: rank track {tid} has no clockOffsetsNs entry")
     print(f"check_trace: {path}: {len(events)} events across {len(by_tid)} ranks, "
-          f"labels {sorted(labels)}")
+          f"labels {sorted(labels)}"
+          + (f", {len(offsets)} clock offsets" if offsets else ""))
 
 
 def check_metrics(path: str) -> None:
@@ -102,7 +123,7 @@ def check_journal(path: str) -> None:
     records = doc.get("records")
     if not isinstance(records, list) or not records:
         fail(f"{path}: records missing or empty")
-    kinds = {"ratio", "round", "membership"}
+    kinds = {"ratio", "round", "membership", "straggler", "congestion"}
     prev_new = None
     n_ratio = 0
     for i, r in enumerate(records):
@@ -120,14 +141,58 @@ def check_journal(path: str) -> None:
     print(f"check_trace: {path}: {len(records)} records, {n_ratio}-link ratio chain intact")
 
 
+def check_analysis(path: str) -> None:
+    with open(path) as f:
+        doc = json.load(f)
+    if doc.get("schema_version") != 1:
+        fail(f"{path}: schema_version != 1")
+    n_ranks = doc.get("n_ranks")
+    if not isinstance(n_ranks, int) or n_ranks < 1:
+        fail(f"{path}: n_ranks {n_ranks!r} not a positive integer")
+    steps = doc.get("steps")
+    if not isinstance(steps, list) or not steps:
+        fail(f"{path}: steps missing or empty")
+    parts = ("compute_ns", "compress_ns", "wire_ns", "decode_ns", "recovery_ns")
+    attributed = 0
+    for i, b in enumerate(steps):
+        for key in ("step", "wall_ns") + parts:
+            if not isinstance(b.get(key), (int, float)) or b[key] < 0:
+                fail(f"{path}: step {i}: `{key}` missing or negative")
+        # The analyzer assigns every wall nanosecond to exactly one part.
+        total = sum(b[k] for k in parts)
+        if total != b["wall_ns"]:
+            fail(f"{path}: step {i}: parts sum to {total}, wall_ns {b['wall_ns']}")
+        crit = b.get("critical_rank")
+        if crit is not None:
+            if not isinstance(crit, int) or not 0 <= crit < n_ranks:
+                fail(f"{path}: step {i}: critical_rank {crit!r} out of range")
+            attributed += 1
+    counts = doc.get("straggler_counts")
+    if not isinstance(counts, list) or len(counts) != n_ranks:
+        fail(f"{path}: straggler_counts must list one count per rank")
+    if sum(counts) != attributed:
+        fail(f"{path}: straggler_counts sum {sum(counts)} != {attributed} attributed steps")
+    verdict = doc.get("straggler_verdict")
+    if verdict is not None and (not isinstance(verdict, int) or not 0 <= verdict < n_ranks):
+        fail(f"{path}: straggler_verdict {verdict!r} out of range")
+    if not isinstance(doc.get("congestion_verdict"), bool):
+        fail(f"{path}: congestion_verdict missing or not a bool")
+    if not isinstance(doc.get("efficacy"), list):
+        fail(f"{path}: efficacy missing or not a list")
+    print(f"check_trace: {path}: {len(steps)} steps, {attributed} attributed, "
+          f"straggler_verdict={verdict}")
+
+
 def main() -> None:
-    if len(sys.argv) not in (3, 4):
+    if len(sys.argv) not in (3, 4, 5):
         print(__doc__, file=sys.stderr)
         sys.exit(2)
     check_trace(sys.argv[1])
     check_metrics(sys.argv[2])
-    if len(sys.argv) == 4:
+    if len(sys.argv) >= 4:
         check_journal(sys.argv[3])
+    if len(sys.argv) == 5:
+        check_analysis(sys.argv[4])
     print("check_trace: OK")
 
 
