@@ -31,8 +31,9 @@ bench-transport:
 # BENCH_obs.json (telemetry-on vs -off fused throughput, <2% gate),
 # BENCH_pipeline.json (pipelined vs monolithic exchange), and
 # BENCH_transport.json (frame codec, ring collectives, envelope + token
-# bucket overhead) at the repo root. NETSENSE_BENCH_FAST=1 shrinks the
-# measurement windows for CI.
+# bucket overhead, and the event-loop fan-in: frames/s + p99 latency at
+# 4/16/64 peers vs a thread-per-peer reference) at the repo root.
+# NETSENSE_BENCH_FAST=1 shrinks the measurement windows for CI.
 bench-json:
 	cargo bench --bench bench_compress
 	cargo bench --bench bench_obs

@@ -10,10 +10,13 @@ mod common;
 use common::BenchJson;
 use netsenseml::fault::{parse_envelope, write_envelope, FrameKind};
 use netsenseml::transport::{
-    encode_frame, decode_frame, ring_allgather_frames, ring_allreduce_f32, LoopbackTransport,
-    ShapedTransport, ShapingConfig, Transport,
+    encode_frame, decode_frame, read_frame_into, ring_allgather_frames, ring_allreduce_f32,
+    write_frame, LoopbackTransport, ShapedTransport, ShapingConfig, Transport,
 };
 use netsenseml::util::bench::{bb, Bench};
+use netsenseml::util::poller::Poller;
+use std::net::{TcpListener, TcpStream};
+use std::time::{Duration, Instant};
 
 fn main() {
     let mut b = Bench::new();
@@ -112,6 +115,148 @@ fn main() {
         .unwrap_or(0.0);
     json.set("shaped_sendrecv_gbps", tb / 1e9);
 
+    // Event-loop fan-in over real sockets: N senders ship timestamped
+    // 4 KiB frames to one receiver whose connections all ride the shared
+    // epoll pool — versus the old design's thread-per-peer blocking
+    // readers, rebuilt here inline as the reference harness. Frames/s is
+    // the headline; p99 is the caller-visible sent→recv latency.
+    b.group("event-loop fan-in (real TCP, 4 KiB frames)");
+    let fast = std::env::var("NETSENSE_BENCH_FAST").ok().as_deref() == Some("1");
+    let total_frames: usize = if fast { 2_048 } else { 12_800 };
+    for &peers in &[4usize, 16, 64] {
+        let frames = (total_frames / peers).max(8);
+        let mut fps = 0.0;
+        let mut p99_us = 0.0;
+        b.run_once(&format!("evloop fan-in, {peers} peers"), || {
+            let (elapsed_s, p99) = fanin_evloop(peers, frames, 4096);
+            fps = (peers * frames) as f64 / elapsed_s;
+            p99_us = p99;
+        });
+        json.set(&format!("evloop_p{peers}_frames_per_s"), fps);
+        json.set(&format!("evloop_p{peers}_p99_latency_us"), p99_us);
+        if peers == 16 {
+            let mut ref_fps = 0.0;
+            b.run_once("thread-per-peer reference, 16 peers", || {
+                let (elapsed_s, _) = fanin_threadper(peers, frames, 4096);
+                ref_fps = (peers * frames) as f64 / elapsed_s;
+            });
+            json.set(
+                "evloop_p16_speedup",
+                if ref_fps > 0.0 { fps / ref_fps } else { 0.0 },
+            );
+        }
+    }
+    // Informational (no higher/lower-is-better direction): reader-side
+    // thread cost of each design at 16 peers. The event loop's pool is
+    // process-global and fixed; the reference spawns one thread per peer.
+    json.set(
+        "threads_spawned_evloop",
+        Poller::global().pool_size() as u64,
+    );
+    json.set("threads_spawned_threadper", 16u64);
+
     b.finish();
     json.write();
+}
+
+/// `peers` localhost connections fan into one receiver over the shared
+/// event-loop pool. Senders stamp each 4 KiB payload with a send-time
+/// offset; the receiver drains one frame per connection per pass
+/// (round-robin, matching the collective receive pattern) and records the
+/// caller-visible latency. Returns `(elapsed_s, p99_latency_us)`.
+fn fanin_evloop(peers: usize, frames: usize, payload_len: usize) -> (f64, f64) {
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let origin = Instant::now();
+    let mut conns = Vec::with_capacity(peers);
+    let mut senders = Vec::with_capacity(peers);
+    for _ in 0..peers {
+        let tx = TcpStream::connect(addr).unwrap();
+        let (rx, _) = listener.accept().unwrap();
+        conns.push(Poller::global().register(rx).unwrap());
+        senders.push(tx);
+    }
+    let t0 = Instant::now();
+    let threads: Vec<_> = senders
+        .into_iter()
+        .map(|mut tx| {
+            std::thread::spawn(move || {
+                let mut payload = vec![0u8; payload_len];
+                for _ in 0..frames {
+                    let ns = origin.elapsed().as_nanos() as u64;
+                    payload[..8].copy_from_slice(&ns.to_le_bytes());
+                    write_frame(&mut tx, &payload).unwrap();
+                }
+            })
+        })
+        .collect();
+    let mut lat_ns: Vec<u64> = Vec::with_capacity(peers * frames);
+    let mut buf: Vec<u8> = Vec::with_capacity(payload_len);
+    for _ in 0..frames {
+        for c in &conns {
+            c.recv_frame_into(&mut buf, Duration::from_secs(30)).unwrap();
+            let sent = u64::from_le_bytes(buf[..8].try_into().unwrap());
+            lat_ns.push((origin.elapsed().as_nanos() as u64).saturating_sub(sent));
+        }
+    }
+    let elapsed = t0.elapsed().as_secs_f64();
+    for th in threads {
+        th.join().unwrap();
+    }
+    (elapsed, p99_us(&mut lat_ns))
+}
+
+/// The pre-event-loop design, rebuilt as the comparison baseline: one
+/// blocking reader thread per connection, frames funneled to the caller
+/// through an mpsc channel (which is exactly what the old transport's
+/// per-peer readers did). Latency is measured where the caller sees the
+/// frame — the channel pop.
+fn fanin_threadper(peers: usize, frames: usize, payload_len: usize) -> (f64, f64) {
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let origin = Instant::now();
+    let (fan_tx, fan_rx) = std::sync::mpsc::channel::<u64>();
+    let mut threads = Vec::with_capacity(2 * peers);
+    for _ in 0..peers {
+        let mut tx = TcpStream::connect(addr).unwrap();
+        let (mut rx, _) = listener.accept().unwrap();
+        let fan_tx = fan_tx.clone();
+        threads.push(std::thread::spawn(move || {
+            let mut buf: Vec<u8> = Vec::with_capacity(payload_len);
+            for _ in 0..frames {
+                read_frame_into(&mut rx, &mut buf).unwrap();
+                let sent = u64::from_le_bytes(buf[..8].try_into().unwrap());
+                let _ = fan_tx.send(sent);
+            }
+        }));
+        threads.push(std::thread::spawn(move || {
+            let mut payload = vec![0u8; payload_len];
+            for _ in 0..frames {
+                let ns = origin.elapsed().as_nanos() as u64;
+                payload[..8].copy_from_slice(&ns.to_le_bytes());
+                write_frame(&mut tx, &payload).unwrap();
+            }
+        }));
+    }
+    drop(fan_tx);
+    let t0 = Instant::now();
+    let mut lat_ns: Vec<u64> = Vec::with_capacity(peers * frames);
+    for _ in 0..peers * frames {
+        let sent = fan_rx.recv().unwrap();
+        lat_ns.push((origin.elapsed().as_nanos() as u64).saturating_sub(sent));
+    }
+    let elapsed = t0.elapsed().as_secs_f64();
+    for th in threads {
+        th.join().unwrap();
+    }
+    (elapsed, p99_us(&mut lat_ns))
+}
+
+/// p99 of a nanosecond sample set, in microseconds (sorts in place).
+fn p99_us(lat_ns: &mut [u64]) -> f64 {
+    if lat_ns.is_empty() {
+        return 0.0;
+    }
+    lat_ns.sort_unstable();
+    lat_ns[(lat_ns.len() - 1) * 99 / 100] as f64 / 1e3
 }

@@ -172,6 +172,9 @@ pub struct TransportConfig {
     pub prop_delay_ms: f64,
     /// Shaping steps: `(seconds from start, rate in Mbps)`.
     pub schedule: Vec<(f64, f64)>,
+    /// Event-loop threads for the shared socket poller
+    /// ([`crate::util::poller`]); 0 = auto (one per core, capped).
+    pub poller_threads: usize,
 }
 
 impl Default for TransportConfig {
@@ -184,6 +187,7 @@ impl Default for TransportConfig {
             burst_kb: 64.0,
             prop_delay_ms: 0.0,
             schedule: Vec::new(),
+            poller_threads: 0,
         }
     }
 }
@@ -197,6 +201,7 @@ const TRANSPORT_KEYS: &[&str] = &[
     "transport.burst_kb",
     "transport.prop_delay_ms",
     "transport.schedule",
+    "transport.poller_threads",
 ];
 
 /// Keys accepted under `[live]`.
@@ -315,6 +320,9 @@ impl TransportConfig {
         }
         if let Some(v) = doc.get("transport.schedule") {
             c.schedule = parse_schedule(v)?;
+        }
+        if let Some(v) = get_nonneg(doc, "transport.poller_threads")? {
+            c.poller_threads = v as usize;
         }
         c.validate()?;
         Ok(c)
@@ -631,6 +639,7 @@ impl LiveConfig {
             seed: self.seed,
             fault: self.fault.clone(),
             faults: self.faults.clone(),
+            poller_threads: self.transport.poller_threads,
             obs: ObsOpts {
                 trace: self.obs.trace,
                 trace_capacity: self.obs.trace_capacity,
@@ -745,6 +754,13 @@ seed = 7
         // Rate 0 → no shaping.
         let c = LiveConfig::from_toml("[transport]\nrate_mbps = 0").unwrap();
         assert!(c.transport.shaping().is_none());
+        // Event-loop pool size: default auto (0), explicit value plumbs
+        // through to LiveOpts, negatives rejected.
+        assert_eq!(c.transport.poller_threads, 0);
+        let c = LiveConfig::from_toml("[transport]\npoller_threads = 3").unwrap();
+        assert_eq!(c.transport.poller_threads, 3);
+        assert_eq!(c.live_opts().poller_threads, 3);
+        assert!(LiveConfig::from_toml("[transport]\npoller_threads = -1").is_err());
     }
 
     #[test]

@@ -207,14 +207,13 @@ impl Transport for FaultInjector {
         }
         if let Some(ms) = self.stall_pending.take() {
             obs::hot().faults_stall_total.inc();
-            std::thread::sleep(Duration::from_millis(ms));
+            // Injected delays are event-loop timer deadlines, same as the
+            // shaping layer — no wrapper thread burns a blocking sleep.
+            crate::util::poller::sleep_until(Instant::now() + Duration::from_millis(ms));
         }
         if let Some(until) = self.flap_until {
             obs::hot().faults_flap_total.inc();
-            let now = Instant::now();
-            if now < until {
-                std::thread::sleep(until - now);
-            }
+            crate::util::poller::sleep_until(until);
             self.flap_until = None;
         }
         // Torn write: deliver a prefix of the frame, then die mid-call —
@@ -249,8 +248,11 @@ impl Transport for FaultInjector {
             if !self.reorder_stalled {
                 self.reorder_stalled = true;
                 obs::hot().faults_reorder_total.inc();
-                std::thread::sleep(
-                    self.recv_timeout + self.recv_timeout / 4 + Duration::from_millis(20),
+                crate::util::poller::sleep_until(
+                    Instant::now()
+                        + self.recv_timeout
+                        + self.recv_timeout / 4
+                        + Duration::from_millis(20),
                 );
             }
             return Ok(());
@@ -281,6 +283,10 @@ impl Transport for FaultInjector {
 
     fn take_observations(&mut self) -> Vec<TransferObs> {
         self.inner.take_observations()
+    }
+
+    fn take_wire_wait_ns(&mut self) -> u64 {
+        self.inner.take_wire_wait_ns()
     }
 
     fn set_recv_timeout(&mut self, timeout: Duration) {

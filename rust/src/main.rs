@@ -70,6 +70,7 @@ fn cli() -> Cli {
                     opt("strategy", "netsense | allreduce | topk[:r]", None),
                     opt("backend", "loopback | tcp", None),
                     opt("bind", "tcp rendezvous address (host:port; port 0 = auto)", None),
+                    opt("poller-threads", "event-loop threads for the socket poller (0 = auto)", None),
                     opt("rate-mbps", "token-bucket shaping rate (0 = unshaped)", None),
                     opt("burst-kb", "token-bucket burst", None),
                     opt("prop-delay-ms", "per-send propagation-delay floor", None),
@@ -306,6 +307,9 @@ fn cmd_live(args: &netsenseml::util::cli::Args) -> Result<()> {
     }
     if let Some(b) = args.get("bind") {
         cfg.transport.bind = b.to_string();
+    }
+    if let Some(p) = args.get_usize("poller-threads")? {
+        cfg.transport.poller_threads = p;
     }
     if let Some(r) = args.get_f64("rate-mbps")? {
         cfg.transport.rate_mbps = r;

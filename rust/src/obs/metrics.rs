@@ -409,6 +409,17 @@ pub struct HotMetrics {
     /// ([`crate::obs::collect`]), nanoseconds, signed (NTP midpoint
     /// method; 0 until a gather runs).
     pub clock_offset_ns: &'static Gauge,
+    // ---- event-loop poller -----------------------------------------------
+    /// `epoll_wait` returns across every event-loop thread (wakeups from
+    /// socket readiness, command eventfds, and timer deadlines combined).
+    pub poller_wakeups_total: &'static Counter,
+    /// Ready events delivered per `epoll_wait` return — the batching
+    /// factor; a distribution stuck at 1 means the loop pays a full
+    /// syscall per frame.
+    pub poller_ready_events: &'static Histogram,
+    /// Connections currently armed for write interest on the sampling
+    /// loop (senders parked in backpressure).
+    pub poller_write_queue_depth: &'static Gauge,
     // ---- chaos injection -------------------------------------------------
     /// FaultInjector kill firings.
     pub faults_kill_total: &'static Counter,
@@ -510,6 +521,18 @@ pub fn hot() -> &'static HotMetrics {
             clock_offset_ns: r.gauge(
                 "netsense_clock_offset_ns",
                 "largest estimated per-peer clock offset of the telemetry gather, nanoseconds",
+            ),
+            poller_wakeups_total: r.counter(
+                "netsense_poller_wakeups_total",
+                "epoll_wait returns across all event-loop threads",
+            ),
+            poller_ready_events: r.histogram(
+                "netsense_poller_ready_events",
+                "ready events delivered per epoll_wait return",
+            ),
+            poller_write_queue_depth: r.gauge(
+                "netsense_poller_write_queue_depth",
+                "connections armed for write interest (senders in backpressure)",
             ),
             faults_kill_total: r.counter("netsense_faults_kill_total", "injected kill firings"),
             faults_stall_total: r.counter("netsense_faults_stall_total", "injected stall firings"),

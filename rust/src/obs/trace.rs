@@ -165,6 +165,44 @@ impl Tracer {
         }
     }
 
+    /// Record an already-finished span of known duration, ending *now* —
+    /// for costs measured elsewhere and reported after the fact, like the
+    /// wire-wait nanoseconds a [`Transport`] accumulated during a round
+    /// ([`Transport::take_wire_wait_ns`]). The span is parented under the
+    /// current stack top (so the live loop's `evloop` span nests inside
+    /// `round`), and its start is clamped to the parent's start so it can
+    /// never escape the enclosing span. No-op when disabled or `dur_ns`
+    /// is 0.
+    ///
+    /// [`Transport`]: crate::transport::Transport
+    /// [`Transport::take_wire_wait_ns`]: crate::transport::Transport::take_wire_wait_ns
+    #[inline]
+    pub fn record_backdated(&mut self, label: &'static str, step: u32, dur_ns: u64) {
+        if !self.enabled || dur_ns == 0 {
+            return;
+        }
+        let end_ns = self.now_ns();
+        let mut start_ns = end_ns.saturating_sub(dur_ns);
+        let parent = match self.stack.last() {
+            Some(open) => {
+                start_ns = start_ns.max(open.start_ns);
+                open.id
+            }
+            None => 0,
+        };
+        let id = self.next_id;
+        self.next_id += 1;
+        self.push_record(SpanRecord {
+            rank: self.rank,
+            id,
+            parent,
+            label,
+            step,
+            start_ns,
+            end_ns,
+        });
+    }
+
     #[inline]
     fn push_record(&mut self, rec: SpanRecord) {
         if self.ring.len() < self.ring.capacity() {
@@ -325,6 +363,44 @@ mod tests {
         // Survivors are the newest four, oldest first.
         let steps: Vec<u32> = spans.iter().map(|s| s.step).collect();
         assert_eq!(steps, vec![6, 7, 8, 9]);
+    }
+
+    /// ISSUE satellite: the backdated `evloop` span nests under the open
+    /// `round` span, clamps at the parent's start, and is a no-op when
+    /// disabled or zero-length.
+    #[test]
+    fn backdated_span_nests_under_open_parent_and_clamps() {
+        let mut t = Tracer::new(2, 16, Instant::now());
+        let sp_round = t.start("round", 5);
+        busy_wait_ns(50_000);
+        // Plausible duration: nests inside `round`, ends "now".
+        t.record_backdated("evloop", 5, 10_000);
+        // Implausible duration (longer than the run): start clamps to the
+        // parent's start rather than escaping it.
+        t.record_backdated("evloop", 5, u64::MAX);
+        t.end(sp_round);
+        let spans = t.drain();
+        assert_eq!(spans.len(), 3);
+        let round = spans.iter().find(|s| s.label == "round").unwrap();
+        let evs: Vec<_> = spans.iter().filter(|s| s.label == "evloop").collect();
+        assert_eq!(evs.len(), 2);
+        for ev in &evs {
+            assert_eq!(ev.parent, round.id, "evloop parented under round");
+            assert_eq!(ev.step, 5);
+            assert!(ev.start_ns >= round.start_ns, "start clamped to parent");
+            assert!(ev.end_ns <= round.end_ns, "ends before parent closes");
+            assert!(ev.end_ns >= ev.start_ns);
+        }
+        // Zero duration records nothing; top-level backdating parents at 0.
+        let before = t.recorded();
+        t.record_backdated("evloop", 6, 0);
+        assert_eq!(t.recorded(), before);
+        t.record_backdated("evloop", 6, 1_000);
+        assert_eq!(t.drain().last().unwrap().parent, 0);
+        // Disabled tracer: no-op.
+        let mut d = Tracer::disabled();
+        d.record_backdated("evloop", 0, 1_000);
+        assert_eq!(d.recorded(), 0);
     }
 
     #[test]

@@ -103,13 +103,47 @@ pub fn frame_payload(buf: &[u8]) -> Result<&[u8]> {
     Ok(&buf[8..])
 }
 
+/// Build the 8-byte header for a payload of `payload_len` bytes as a
+/// stack array — the vectored-write path hands this and the payload to
+/// `write_vectored` as two iovecs, so the payload is never copied into a
+/// concatenated buffer. Unlike [`encode_frame_header_into`] this does
+/// *not* observe the frame-size histogram: the envelope path already
+/// observes every enveloped frame at encode time, and observing again at
+/// the socket would double-count.
+pub fn frame_header(payload_len: usize) -> [u8; 8] {
+    assert!(payload_len <= MAX_FRAME_BYTES, "payload too large");
+    let mut header = [0u8; 8];
+    header[0..4].copy_from_slice(&FRAME_MAGIC.to_le_bytes());
+    header[4..8].copy_from_slice(&(payload_len as u32).to_le_bytes());
+    header
+}
+
+/// Validate a complete 8-byte header (magic + length cap) and return the
+/// declared payload length — the incremental read-state machine in
+/// [`crate::util::poller`] parses headers byte-by-byte as they arrive and
+/// needs the header contract without a blocking `Read`.
+pub fn parse_frame_header(header: &[u8; 8]) -> std::io::Result<usize> {
+    let magic = u32::from_le_bytes(header[0..4].try_into().unwrap());
+    if magic != FRAME_MAGIC {
+        return Err(std::io::Error::new(
+            std::io::ErrorKind::InvalidData,
+            format!("bad frame magic {magic:#010x}"),
+        ));
+    }
+    let len = u32::from_le_bytes(header[4..8].try_into().unwrap()) as usize;
+    if len > MAX_FRAME_BYTES {
+        return Err(std::io::Error::new(
+            std::io::ErrorKind::InvalidData,
+            format!("frame length {len} exceeds cap"),
+        ));
+    }
+    Ok(len)
+}
+
 /// Write one frame to a byte sink (socket hot path: header then payload,
 /// no intermediate copy of the payload).
 pub fn write_frame(w: &mut impl Write, payload: &[u8]) -> std::io::Result<()> {
-    assert!(payload.len() <= MAX_FRAME_BYTES, "payload too large");
-    let mut header = [0u8; 8];
-    header[0..4].copy_from_slice(&FRAME_MAGIC.to_le_bytes());
-    header[4..8].copy_from_slice(&(payload.len() as u32).to_le_bytes());
+    let header = frame_header(payload.len());
     w.write_all(&header)?;
     w.write_all(payload)?;
     w.flush()
@@ -133,20 +167,7 @@ pub fn read_frame(r: &mut impl Read) -> std::io::Result<Vec<u8>> {
 pub fn read_frame_into(r: &mut impl Read, payload: &mut Vec<u8>) -> std::io::Result<()> {
     let mut header = [0u8; 8];
     r.read_exact(&mut header)?;
-    let magic = u32::from_le_bytes(header[0..4].try_into().unwrap());
-    if magic != FRAME_MAGIC {
-        return Err(std::io::Error::new(
-            std::io::ErrorKind::InvalidData,
-            format!("bad frame magic {magic:#010x}"),
-        ));
-    }
-    let len = u32::from_le_bytes(header[4..8].try_into().unwrap()) as usize;
-    if len > MAX_FRAME_BYTES {
-        return Err(std::io::Error::new(
-            std::io::ErrorKind::InvalidData,
-            format!("frame length {len} exceeds cap"),
-        ));
-    }
+    let len = parse_frame_header(&header)?;
     // Grow the buffer in bounded chunks as bytes actually arrive: a length
     // prefix under the cap can still lie by hundreds of megabytes, and a
     // single up-front `resize(len)` would hand that lie a huge reservation
@@ -163,10 +184,12 @@ pub fn read_frame_into(r: &mut impl Read, payload: &mut Vec<u8>) -> std::io::Res
     Ok(())
 }
 
-/// Granularity of [`read_frame_into`]'s incremental buffer growth (1 MiB):
-/// the most memory a lying length prefix can reserve beyond what the
-/// stream actually delivers.
-const READ_CHUNK_BYTES: usize = 1 << 20;
+/// Granularity of incremental frame-buffer growth (1 MiB): the most
+/// memory a lying length prefix can reserve beyond what the stream
+/// actually delivers. Shared with the event-loop read-state machine in
+/// [`crate::util::poller`], which grows its pooled payload buffers at the
+/// same pace.
+pub(crate) const READ_CHUNK_BYTES: usize = 1 << 20;
 
 #[cfg(test)]
 mod tests {
@@ -246,6 +269,33 @@ mod tests {
         read_frame_into(&mut cursor, &mut buf).unwrap();
         assert_eq!(buf, vec![9u8; 16]);
         assert!(std::ptr::eq(buf.as_ptr(), ptr), "smaller frame must not realloc");
+    }
+
+    /// The stack-array header builder and the incremental header parser
+    /// are exact inverses, and both agree byte-for-byte with the
+    /// streaming codec.
+    #[test]
+    fn frame_header_roundtrips_and_matches_streaming_codec() {
+        for len in [0usize, 1, 7, 1024, MAX_FRAME_BYTES] {
+            let header = frame_header(len);
+            assert_eq!(parse_frame_header(&header).unwrap(), len);
+        }
+        let header = frame_header(5);
+        let mut wire = header.to_vec();
+        wire.extend_from_slice(b"hello");
+        assert_eq!(wire, encode_frame(b"hello"));
+        // Corruption classes: magic flip and over-cap length are the same
+        // named InvalidData errors the streaming reader raises.
+        let mut bad = frame_header(5);
+        bad[0] ^= 0xff;
+        let e = parse_frame_header(&bad).unwrap_err();
+        assert_eq!(e.kind(), std::io::ErrorKind::InvalidData);
+        assert!(e.to_string().contains("bad frame magic"));
+        let mut lie = [0u8; 8];
+        lie[0..4].copy_from_slice(&FRAME_MAGIC.to_le_bytes());
+        lie[4..8].copy_from_slice(&(MAX_FRAME_BYTES as u32 + 1).to_le_bytes());
+        let e = parse_frame_header(&lie).unwrap_err();
+        assert!(e.to_string().contains("exceeds cap"));
     }
 
     #[test]

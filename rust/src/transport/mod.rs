@@ -10,7 +10,8 @@
 //!   [`LoopbackTransport`](loopback::LoopbackTransport) (in-process
 //!   channels, deterministic, for tests and single-host drills),
 //!   [`TcpTransport`](tcp::TcpTransport) (`std::net` only: full mesh over
-//!   real sockets with a rank-0 rendezvous, one reader thread per peer,
+//!   real sockets with a rank-0 rendezvous, multiplexed over the
+//!   thread-per-core epoll event loop in [`crate::util::poller`],
 //!   graceful shutdown), and the token-bucket
 //!   [`ShapedTransport`](shaped::ShapedTransport) wrapper that rate-limits
 //!   any inner transport (rate + burst + optional step schedule, mirroring
@@ -44,8 +45,9 @@ use std::time::Duration;
 
 pub use collective::{ring_allgather_frames, ring_allreduce_f32, RoundTiming};
 pub use frame::{
-    decode_frame, decode_frame_into, encode_frame, encode_frame_into, frame_payload,
-    read_frame, read_frame_into, write_frame, FRAME_OVERHEAD,
+    decode_frame, decode_frame_into, encode_frame, encode_frame_into, frame_header,
+    frame_payload, parse_frame_header, read_frame, read_frame_into, write_frame,
+    FRAME_OVERHEAD,
 };
 pub use loopback::LoopbackTransport;
 pub use shaped::{ShapedTransport, ShapingConfig};
@@ -110,6 +112,16 @@ pub trait Transport: Send {
     /// Drain the `(bytes, elapsed)` observations recorded since the last
     /// call — the sensing estimator's feed.
     fn take_observations(&mut self) -> Vec<TransferObs>;
+
+    /// Drain the nanoseconds this endpoint spent *blocked on the wire*
+    /// since the last call: receive waits, send backpressure stalls, and
+    /// (for shaped/fault layers) pacing or injected delays. Feeds the
+    /// `evloop` span the live loop nests under each `round` in the
+    /// Perfetto trace. The default reports 0 — transports without a
+    /// blocking wire (loopback, the simulator) need no bookkeeping.
+    fn take_wire_wait_ns(&mut self) -> u64 {
+        0
+    }
 
     /// Graceful teardown: close peer connections and join any helper
     /// threads. Idempotent.

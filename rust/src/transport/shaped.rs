@@ -5,10 +5,15 @@
 //!
 //! Every outgoing frame spends tokens equal to its wire size; tokens refill
 //! at the configured rate (integrated piecewise across schedule steps) up
-//! to `burst_bytes`. A send that finds the bucket short sleeps for exactly
-//! the deficit, which is what makes the *measured* transfer time — the only
-//! observable the sensing stack is allowed ([`TransferObs`]) — reflect the
-//! shaped rate.
+//! to `burst_bytes`. A send that finds the bucket short computes the exact
+//! *deadline* at which the deficit will have accrued
+//! ([`ShapingConfig::deadline_for`] integrates piecewise across schedule
+//! steps) and parks on an event-loop timer
+//! ([`crate::util::poller::sleep_until`]) until then — one deadline per
+//! send, no chunked sleep loop, so pacing error stays bounded by timer
+//! precision instead of sleep-clamp granularity. That is what makes the
+//! *measured* transfer time — the only observable the sensing stack is
+//! allowed ([`TransferObs`]) — reflect the shaped rate.
 
 use super::{Transport, TransferObs};
 use crate::util::error::Result;
@@ -80,6 +85,31 @@ impl ShapingConfig {
         rate
     }
 
+    /// The earliest time (seconds since creation) at which `deficit`
+    /// tokens will have accrued starting from `now` — the inverse of
+    /// [`ShapingConfig::tokens_earned`], walking the same schedule
+    /// segments. This is the single deadline a short bucket sleeps to;
+    /// rates are validated positive and finite, so the walk terminates.
+    fn deadline_for(&self, now: f64, deficit: f64) -> f64 {
+        let mut t = now;
+        let mut need = deficit;
+        loop {
+            let rate = self.rate_at(t);
+            let next_step = self
+                .schedule
+                .iter()
+                .map(|&(at, _)| at)
+                .find(|&at| at > t)
+                .unwrap_or(f64::INFINITY);
+            let earned = rate * (next_step - t);
+            if earned >= need {
+                return t + need / rate;
+            }
+            need -= earned;
+            t = next_step;
+        }
+    }
+
     /// Tokens accrued over `[t0, t1]` (seconds since creation), integrated
     /// piecewise across schedule steps.
     fn tokens_earned(&self, t0: f64, t1: f64) -> f64 {
@@ -110,6 +140,9 @@ pub struct ShapedTransport<T: Transport> {
     refilled_at: f64,
     t0: Instant,
     obs: Vec<TransferObs>,
+    /// Nanoseconds spent in pacing + propagation-delay waits since the
+    /// last [`Transport::take_wire_wait_ns`].
+    wire_wait_ns: u64,
 }
 
 impl<T: Transport> ShapedTransport<T> {
@@ -123,6 +156,7 @@ impl<T: Transport> ShapedTransport<T> {
             t0: Instant::now(),
             config,
             obs: Vec::new(),
+            wire_wait_ns: 0,
         }
     }
 
@@ -140,29 +174,25 @@ impl<T: Transport> ShapedTransport<T> {
         self.refilled_at = now;
     }
 
-    /// Spend `cost` tokens, sleeping off any deficit before returning.
+    /// Spend `cost` tokens, waiting out any deficit before returning.
     /// The bucket may go negative (cost > burst): an oversized frame
     /// borrows against future refill and pays the debt down inside this
     /// call, exactly like a big message serializing on a slow link.
+    ///
+    /// Deadline-based: the deficit maps to *one* schedule-aware deadline
+    /// ([`ShapingConfig::deadline_for`]) and the thread parks on an
+    /// event-loop timer until exactly then. (The loop re-checks only to
+    /// absorb float rounding; [`crate::util::poller::sleep_until`] never
+    /// wakes early, so one pass is the norm.)
     fn acquire(&mut self, cost: f64) {
         let now = self.t0.elapsed().as_secs_f64();
         self.refill(now);
         self.tokens -= cost;
         while self.tokens < 0.0 {
-            let now = self.t0.elapsed().as_secs_f64();
-            let deficit = -self.tokens;
-            let rate = self.config.rate_at(now);
-            // Sleep at most to the next schedule step, where the rate
-            // (and with it the remaining wait) changes.
-            let next_step = self
-                .config
-                .schedule
-                .iter()
-                .map(|&(at, _)| at)
-                .find(|&at| at > now)
-                .unwrap_or(f64::INFINITY);
-            let wait = (deficit / rate).min((next_step - now).max(1e-4));
-            std::thread::sleep(Duration::from_secs_f64(wait.clamp(1e-4, 1.0)));
+            // Accrual resumes from the last refill point, so the deadline
+            // credits every token earned since then.
+            let deadline_s = self.config.deadline_for(self.refilled_at, -self.tokens);
+            crate::util::poller::sleep_until(self.t0 + Duration::from_secs_f64(deadline_s));
             self.refill(self.t0.elapsed().as_secs_f64());
         }
     }
@@ -183,10 +213,13 @@ impl<T: Transport> Transport for ShapedTransport<T> {
         self.acquire(bytes as f64);
         // Propagation floor: pad the transfer up to the configured delay
         // (before the inner send, so the receiver is held back too).
-        let spent = t0.elapsed().as_secs_f64();
-        if spent < self.config.prop_delay_s {
-            std::thread::sleep(Duration::from_secs_f64(self.config.prop_delay_s - spent));
+        if t0.elapsed().as_secs_f64() < self.config.prop_delay_s {
+            crate::util::poller::sleep_until(
+                t0 + Duration::from_secs_f64(self.config.prop_delay_s),
+            );
         }
+        // Everything up to here was shaping-imposed wire wait.
+        self.wire_wait_ns += t0.elapsed().as_nanos() as u64;
         self.inner.send(to, payload)?;
         self.obs.push(TransferObs {
             bytes,
@@ -215,6 +248,12 @@ impl<T: Transport> Transport for ShapedTransport<T> {
 
     fn set_recv_timeout(&mut self, timeout: Duration) {
         self.inner.set_recv_timeout(timeout);
+    }
+
+    /// Shaping delays count as wire wait, on top of whatever the inner
+    /// transport was itself blocked on.
+    fn take_wire_wait_ns(&mut self) -> u64 {
+        std::mem::take(&mut self.wire_wait_ns) + self.inner.take_wire_wait_ns()
     }
 
     fn shutdown(&mut self) -> Result<()> {
@@ -367,6 +406,63 @@ mod tests {
         }
         .validate()
         .is_err());
+    }
+
+    /// ISSUE satellite: deadline-based token accounting pins pacing
+    /// error under 10%. The old loop slept in `clamp(1e-4, 1.0)` chunks
+    /// and re-derived the wait each lap, compounding overshoot; one
+    /// schedule-aware deadline per send keeps the error at timer
+    /// precision.
+    #[test]
+    fn pacing_error_stays_under_ten_percent() {
+        let rate = 5e5; // 500 kB/s
+        let cfg = ShapingConfig {
+            rate_bytes_per_sec: rate,
+            burst_bytes: 0.0, // every frame fully paced
+            schedule: vec![],
+            prop_delay_s: 0.0,
+        };
+        let (mut a, mut b) = shaped_pair(cfg);
+        let wire = 2000u64; // bytes per frame, header included
+        let payload = vec![0u8; wire as usize - super::super::FRAME_OVERHEAD as usize];
+        let n = 100u64;
+        let t0 = Instant::now();
+        for _ in 0..n {
+            a.send(1, &payload).unwrap();
+            b.recv(0).unwrap();
+        }
+        let elapsed = t0.elapsed().as_secs_f64();
+        let ideal = (n * wire) as f64 / rate; // 0.4 s
+        assert!(
+            elapsed >= 0.9 * ideal,
+            "paced run finished in {elapsed:.3}s — shaping is not applying (ideal {ideal:.3}s)"
+        );
+        let err = (elapsed - ideal) / ideal;
+        assert!(
+            err < 0.10,
+            "pacing error {:.1}% over ideal ({elapsed:.3}s vs {ideal:.3}s)",
+            err * 100.0
+        );
+        // The pacing waits are reported as wire wait for the trace span.
+        assert!(a.take_wire_wait_ns() > 0, "pacing waits not counted as wire wait");
+        assert_eq!(a.take_wire_wait_ns(), 0, "take_wire_wait_ns must drain");
+    }
+
+    #[test]
+    fn deadline_for_integrates_across_schedule_steps() {
+        let cfg = ShapingConfig {
+            rate_bytes_per_sec: 10.0,
+            burst_bytes: 0.0,
+            schedule: vec![(1.0, 20.0)],
+            prop_delay_s: 0.0,
+        };
+        // 25 tokens from t=0: 10 earned over [0,1) at 10 B/s, the
+        // remaining 15 at 20 B/s → 1.75 s.
+        assert!((cfg.deadline_for(0.0, 25.0) - 1.75).abs() < 1e-9);
+        // Entirely within one segment: plain deficit/rate.
+        assert!((cfg.deadline_for(2.0, 10.0) - 2.5).abs() < 1e-9);
+        // Zero deficit resolves to now.
+        assert!((cfg.deadline_for(0.3, 0.0) - 0.3).abs() < 1e-12);
     }
 
     #[test]

@@ -1,5 +1,6 @@
 //! Real-socket transport: a full TCP mesh between `world` ranks on
-//! `std::net` only.
+//! `std::net` only, multiplexed over the shared event-loop pool in
+//! [`crate::util::poller`].
 //!
 //! Bootstrap (rank-0 rendezvous, the usual distributed-training shape):
 //!
@@ -14,23 +15,28 @@
 //!    itself with a `peer <rank>` frame) and accepts connections from every
 //!    rank *k > i* — one duplex `TcpStream` per unordered pair.
 //!
-//! Each peer connection gets a reader thread that turns the byte stream
-//! back into frames and parks them in a per-peer inbox; `send` writes
-//! frames directly on the socket (with `TCP_NODELAY`, so small control
-//! frames don't sit in Nagle buffers). A read error — peer crash, reset,
-//! or graceful EOF — is pushed into the inbox as an `Err` observation
-//! before the reader exits, so a blocked `recv` surfaces the disconnect
+//! After bootstrap every connection is switched nonblocking and
+//! registered with the global [`Poller`]: a fixed pool of event-loop
+//! threads owns all reads (incremental frame parsing into pooled
+//! buffers), so an N-worker mesh costs the pool size in threads instead
+//! of the old reader-thread-per-peer O(N²). `send` stays on the caller's
+//! thread as a vectored write — header and payload as two iovecs, no
+//! concatenation copy — parking on the poller's write gate only when the
+//! kernel buffer is full (with `TCP_NODELAY`, so small control frames
+//! don't sit in Nagle buffers). A read error — peer crash, reset, or
+//! graceful EOF — marks the connection dead in the event loop and wakes
+//! every waiter at once, so a blocked `recv` surfaces the disconnect
 //! immediately instead of silently waiting out its full timeout (the
 //! failure detector in [`crate::fault`] feeds on exactly this signal).
-//! Shutdown closes the sockets, which lands reader threads on
-//! `UnexpectedEof`, and joins them.
+//! Shutdown closes the sockets; the loops observe EOF and drop the
+//! connections — there are no per-transport threads left to join.
 
-use super::frame::{read_frame, read_frame_into, write_frame, FRAME_OVERHEAD};
+use super::frame::{frame_header, read_frame, write_frame, FRAME_OVERHEAD};
 use super::{Transport, TransferObs};
 use crate::util::error::{anyhow, Context, Result};
+use crate::util::poller::{ConnHandle, Poller, RecvError};
+use std::io::{IoSlice, Write};
 use std::net::{Shutdown, TcpListener, TcpStream};
-use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
-use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
 /// How long to keep retrying a bootstrap connect (peers start in any
@@ -41,29 +47,21 @@ const CONNECT_RETRY_EVERY: Duration = Duration::from_millis(10);
 /// bootstrap errors out (a crashed worker must not hang the run).
 const ACCEPT_FOR: Duration = Duration::from_secs(30);
 
-/// What a reader thread parks in the inbox: a frame, or the read error
-/// that ended the connection (stringly — the reader can't share the
-/// non-`Send`-safe error machinery across the channel).
-type InboxItem = std::result::Result<Vec<u8>, String>;
-
 /// A rank's endpoint of the TCP mesh.
 pub struct TcpTransport {
     rank: usize,
     n: usize,
-    /// `peers[j]`: write side of the connection to rank `j`.
+    /// `peers[j]`: write side of the (nonblocking) connection to rank `j`.
     peers: Vec<Option<TcpStream>>,
-    /// `inbox[j]`: frames read off the connection to rank `j`.
-    inbox: Vec<Option<Receiver<InboxItem>>>,
-    /// `recycle[j]`: return path handing spent payload buffers back to
-    /// rank `j`'s reader thread, which refills them in place
-    /// ([`read_frame_into`]) instead of allocating a fresh `Vec` per
-    /// frame. Fed by [`Transport::recv_into`]; the owning
-    /// [`Transport::recv`] path hands the buffer to the caller and skips
-    /// the recycle.
-    recycle: Vec<Option<Sender<Vec<u8>>>>,
-    readers: Vec<JoinHandle<()>>,
+    /// `conns[j]`: the poller-side handle for rank `j`'s connection —
+    /// completed inbound frames and write-readiness signalling.
+    conns: Vec<Option<ConnHandle>>,
     obs: Vec<TransferObs>,
     timeout: Duration,
+    /// Nanoseconds this endpoint spent blocked on the wire since the last
+    /// [`Transport::take_wire_wait_ns`] — recv waits plus send
+    /// backpressure stalls (feeds the `evloop` trace span).
+    wire_wait_ns: u64,
     down: bool,
 }
 
@@ -157,7 +155,8 @@ impl TcpTransport {
         }
     }
 
-    /// Dial lower ranks, accept higher ranks, wire up reader threads.
+    /// Dial lower ranks, accept higher ranks, hand every connection to
+    /// the event-loop pool.
     fn mesh(
         rank: usize,
         world: usize,
@@ -187,27 +186,27 @@ impl TcpTransport {
             }
             peers[k] = Some(s);
         }
-        let mut inbox: Vec<Option<Receiver<InboxItem>>> = (0..world).map(|_| None).collect();
-        let mut recycle: Vec<Option<Sender<Vec<u8>>>> = (0..world).map(|_| None).collect();
-        let mut readers = Vec::new();
+        // Bootstrap done: go nonblocking and register the read side of
+        // every connection with the shared poller. The clone and the
+        // original refer to the same file description, so the
+        // nonblocking flag the poller sets covers the write side too.
+        let mut conns: Vec<Option<ConnHandle>> = (0..world).map(|_| None).collect();
         for (j, peer) in peers.iter().enumerate() {
             let Some(s) = peer else { continue };
-            let (tx, rx) = channel();
-            let (pool_tx, pool_rx) = channel();
-            inbox[j] = Some(rx);
-            recycle[j] = Some(pool_tx);
-            let reader = s.try_clone().context("cloning stream for reader")?;
-            readers.push(std::thread::spawn(move || reader_loop(reader, tx, pool_rx)));
+            let reader = s.try_clone().context("cloning stream for the poller")?;
+            let handle = Poller::global()
+                .register(reader)
+                .with_context(|| format!("registering peer {j} with the poller"))?;
+            conns[j] = Some(handle);
         }
         Ok(TcpTransport {
             rank,
             n: world,
             peers,
-            inbox,
-            recycle,
-            readers,
+            conns,
             obs: Vec::new(),
             timeout: Duration::from_secs(30),
+            wire_wait_ns: 0,
             down: false,
         })
     }
@@ -216,35 +215,6 @@ impl TcpTransport {
     pub fn with_timeout(mut self, timeout: Duration) -> Self {
         self.timeout = timeout;
         self
-    }
-}
-
-/// Reader half of one peer connection: frames → inbox until EOF/close.
-/// The terminating error is itself delivered as an observation — a
-/// receiver blocked on this peer learns of the disconnect immediately
-/// instead of parking until its timeout expires.
-///
-/// Buffers recycle: each frame is read into a spent payload `Vec` the
-/// endpoint handed back through `pool` (capacity intact), so a receiver
-/// that drains with [`Transport::recv_into`] keeps the reader thread
-/// allocation-free per frame in steady state.
-fn reader_loop(mut stream: TcpStream, tx: Sender<InboxItem>, pool: Receiver<Vec<u8>>) {
-    loop {
-        let mut buf = pool.try_recv().unwrap_or_default();
-        match read_frame_into(&mut stream, &mut buf) {
-            Ok(()) => {
-                if tx.send(Ok(buf)).is_err() {
-                    return; // endpoint dropped
-                }
-            }
-            Err(e) => {
-                // EOF (graceful close) or connection error: surface it,
-                // then exit. Failure to send means the endpoint is gone
-                // and nobody is listening anyway.
-                let _ = tx.send(Err(e.to_string()));
-                return;
-            }
-        }
     }
 }
 
@@ -265,7 +235,8 @@ fn accept_with_deadline(listener: &TcpListener, deadline: Duration) -> Result<Tc
         match listener.accept() {
             Ok((s, _)) => {
                 // Some platforms hand the accepted socket the listener's
-                // nonblocking flag; the frame reader needs blocking reads.
+                // nonblocking flag; the bootstrap frame reads need
+                // blocking mode (the poller flips it back later).
                 s.set_nonblocking(false)?;
                 break Ok(s);
             }
@@ -311,15 +282,55 @@ impl Transport for TcpTransport {
         self.n
     }
 
+    /// Vectored zero-copy send: the 8-byte header (stack array) and the
+    /// caller's payload go to the kernel as two iovecs — the payload is
+    /// never copied into a concatenated frame buffer. On `EAGAIN` the
+    /// sender arms `EPOLLOUT` through the poller and parks on the write
+    /// gate; the retry loop never depends on the wakeup arriving.
     fn send(&mut self, to: usize, payload: &[u8]) -> Result<()> {
         if to >= self.n || to == self.rank {
             return Err(anyhow!("bad destination rank {to} (self is {})", self.rank));
         }
-        let stream = self.peers[to]
-            .as_mut()
-            .with_context(|| format!("connection to rank {to} closed"))?;
+        if self.peers[to].is_none() || self.conns[to].is_none() {
+            return Err(anyhow!("connection to rank {to} closed"));
+        }
         let t0 = Instant::now();
-        write_frame(stream, payload).with_context(|| format!("sending to rank {to}"))?;
+        let header = frame_header(payload.len());
+        let total = 8 + payload.len();
+        let mut written = 0usize;
+        let mut blocked_ns: u64 = 0;
+        while written < total {
+            let stream = self.peers[to].as_mut().unwrap();
+            let result = if written < 8 {
+                let iov = [IoSlice::new(&header[written..]), IoSlice::new(payload)];
+                stream.write_vectored(&iov)
+            } else {
+                stream.write(&payload[written - 8..])
+            };
+            match result {
+                Ok(0) => {
+                    return Err(anyhow!("sending to rank {to}: socket accepted zero bytes"));
+                }
+                Ok(k) => written += k,
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    // Kernel buffer full: ask the loop for an EPOLLOUT
+                    // wakeup and wait (bounded — see the poller docs).
+                    let conn = self.conns[to].as_ref().unwrap();
+                    let parked = Instant::now();
+                    conn.request_writable();
+                    conn.wait_writable();
+                    blocked_ns += parked.elapsed().as_nanos() as u64;
+                    if conn.is_dead() {
+                        return Err(anyhow!(
+                            "sending to rank {to}: peer disconnected mid-frame"
+                        ));
+                    }
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+                Err(e) => return Err(anyhow!("sending to rank {to}: {e}")),
+            }
+        }
+        self.wire_wait_ns += blocked_ns;
         self.obs.push(TransferObs {
             bytes: payload.len() as u64 + FRAME_OVERHEAD,
             elapsed: t0.elapsed(),
@@ -328,9 +339,7 @@ impl Transport for TcpTransport {
     }
 
     fn recv(&mut self, from: usize) -> Result<Vec<u8>> {
-        // Delegate so the validation and error mapping live once; the
-        // fresh Vec swaps with the reader's filled buffer in recv_into
-        // (the empty spent buffer going back to the pool is harmless).
+        // Delegate so the validation and error mapping live once.
         let mut buf = Vec::new();
         self.recv_into(from, &mut buf)?;
         Ok(buf)
@@ -340,25 +349,16 @@ impl Transport for TcpTransport {
         if from >= self.n || from == self.rank {
             return Err(anyhow!("bad source rank {from} (self is {})", self.rank));
         }
-        let rx = self.inbox[from]
+        let conn = self.conns[from]
             .as_ref()
             .with_context(|| format!("connection to rank {from} closed"))?;
-        match rx.recv_timeout(self.timeout) {
-            Ok(Ok(mut payload)) => {
-                // Swap, don't copy: the caller gets the reader-filled
-                // buffer, and the caller's spent buffer (capacity intact)
-                // goes back to the reader thread for a later frame —
-                // steady state moves payloads with no copy and no
-                // allocation on either side of the inbox.
-                std::mem::swap(buf, &mut payload);
-                if let Some(pool) = self.recycle[from].as_ref() {
-                    let _ = pool.send(payload);
-                }
-                Ok(())
-            }
-            Ok(Err(e)) => Err(anyhow!("peer {from} disconnected: {e}")),
-            Err(RecvTimeoutError::Timeout) => Err(anyhow!("recv from rank {from} timed out")),
-            Err(RecvTimeoutError::Disconnected) => Err(anyhow!("peer {from} closed")),
+        let t0 = Instant::now();
+        let result = conn.recv_frame_into(buf, self.timeout);
+        self.wire_wait_ns += t0.elapsed().as_nanos() as u64;
+        match result {
+            Ok(()) => Ok(()),
+            Err(RecvError::TimedOut) => Err(anyhow!("recv from rank {from} timed out")),
+            Err(RecvError::Closed(e)) => Err(anyhow!("peer {from} disconnected: {e}")),
         }
     }
 
@@ -368,6 +368,10 @@ impl Transport for TcpTransport {
 
     fn set_recv_timeout(&mut self, timeout: Duration) {
         self.timeout = timeout;
+    }
+
+    fn take_wire_wait_ns(&mut self) -> u64 {
+        std::mem::take(&mut self.wire_wait_ns)
     }
 
     fn shutdown(&mut self) -> Result<()> {
@@ -380,11 +384,10 @@ impl Transport for TcpTransport {
                 s.shutdown(Shutdown::Both).ok();
             }
         }
-        self.inbox.iter_mut().for_each(|r| *r = None);
-        self.recycle.iter_mut().for_each(|r| *r = None);
-        for h in self.readers.drain(..) {
-            h.join().map_err(|_| anyhow!("reader thread panicked"))?;
-        }
+        // Dropping the handles deregisters the connections from their
+        // loops; the socket shutdown above lands each loop on EOF anyway.
+        // No per-transport threads exist to join.
+        self.conns.iter_mut().for_each(|c| *c = None);
         Ok(())
     }
 }
@@ -470,8 +473,8 @@ pub(crate) mod tests {
     }
 
     /// The recycled receive path: repeated `recv_into` over one
-    /// connection keeps frames intact while inbox buffers rotate back
-    /// through the reader thread's pool.
+    /// connection keeps frames intact while payload buffers rotate back
+    /// through the event loop's per-connection pool.
     #[test]
     fn recv_into_recycles_inbox_buffers_without_corruption() {
         let rounds = 16usize;
@@ -518,9 +521,9 @@ pub(crate) mod tests {
         assert!(out.iter().all(|&failed| failed));
     }
 
-    /// Satellite fix: a peer crash/close must surface as an `Err`
-    /// observation the moment the reader thread sees it — not as a
-    /// silent park until the receiver's full timeout expires.
+    /// Satellite: a peer crash/close must surface as a named `Err` the
+    /// moment the event loop sees it — not as a silent park until the
+    /// receiver's full timeout expires.
     #[test]
     fn peer_disconnect_surfaces_immediately_not_after_timeout() {
         let out = with_mesh(2, |mut t| {
@@ -586,5 +589,43 @@ pub(crate) mod tests {
             "retry window not honored: {:?}",
             t0.elapsed()
         );
+    }
+
+    /// ISSUE satellite: the zero-alloc steady state holds with the
+    /// poller on — warmed-up send + `recv_into` rounds perform zero
+    /// allocations on the *caller's* thread (the counting allocator is
+    /// per-thread, so the event loop's own buffers don't mask a caller
+    /// regression). The old mpsc inbox could never pass this: every
+    /// channel send boxed a node on the sending side.
+    #[test]
+    fn steady_state_send_recv_is_alloc_free_on_caller_thread() {
+        use crate::testing::alloc::thread_alloc_count;
+        let out = with_mesh(2, |mut t| {
+            let peer = 1 - t.rank();
+            let mut buf = Vec::with_capacity(8192);
+            let payload = vec![3u8; 2048];
+            // Warm every pool: the receive buffer, the poller's
+            // per-connection recycle pool, and the observations vector
+            // (never drained here, so reserve past the measured rounds).
+            t.obs.reserve(256);
+            for _ in 0..40 {
+                t.send(peer, &payload).unwrap();
+                t.recv_into(peer, &mut buf).unwrap();
+            }
+            let before = thread_alloc_count();
+            for _ in 0..10 {
+                t.send(peer, &payload).unwrap();
+                t.recv_into(peer, &mut buf).unwrap();
+            }
+            let allocs = thread_alloc_count() - before;
+            t.shutdown().unwrap();
+            allocs
+        });
+        for (rank, allocs) in out.iter().enumerate() {
+            assert_eq!(
+                *allocs, 0,
+                "rank {rank}: {allocs} caller-side allocations in warmed send+recv rounds"
+            );
+        }
     }
 }

@@ -3,13 +3,16 @@
 //! (`anyhow`, `rand`, `serde_json`, `toml`, `clap`, `criterion`, logging).
 //!
 //! Each submodule is a self-contained, tested implementation of exactly the
-//! surface the rest of the crate needs — see `DESIGN.md` §2.
+//! surface the rest of the crate needs — see `DESIGN.md` §2. [`poller`]
+//! is the same idea applied to async I/O: a thread-per-core epoll event
+//! loop built on a thin FFI shim instead of `mio`/`tokio`.
 
 pub mod bench;
 pub mod cli;
 pub mod error;
 pub mod json;
 pub mod log;
+pub mod poller;
 pub mod rng;
 pub mod stats;
 pub mod toml;

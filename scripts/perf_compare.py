@@ -32,7 +32,7 @@ import os
 import sys
 import tempfile
 
-BENCHES = ["compress", "pipeline", "obs"]
+BENCHES = ["compress", "pipeline", "obs", "transport"]
 BASELINE_DIR = os.path.join("baselines", "perf")
 DEFAULT_TOLERANCE = 0.35  # generous: shared runners are noisy
 
